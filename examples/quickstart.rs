@@ -1,0 +1,50 @@
+//! Quickstart: load a DeepCoT variant, stream tokens through it, read
+//! logits — the smallest end-to-end use of the public API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use deepcot::baselines::{ContinualModel, StreamModel, WindowModel};
+use deepcot::flops::{format_flops, per_tick, FlopsMode};
+use deepcot::runtime::{HostTensor, Runtime};
+use deepcot::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. open the artifacts produced by `make artifacts`
+    let rt = Runtime::new(&deepcot::artifacts_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. load the continual model and its non-continual baseline
+    //    (identical weights — the paper's equivalence protocol)
+    let mut deepcot = ContinualModel::load(&rt, "t1_deepcot")?;
+    let mut encoder = WindowModel::load(&rt, "t1_encoder")?;
+    let cfg = deepcot.config().clone();
+    println!(
+        "model: {} layers, window {}, d_model {} ({} classes)",
+        cfg.n_layers, cfg.window, cfg.d_model, cfg.n_classes
+    );
+
+    // 3. stream random tokens through both; compare cost + outputs
+    let mut rng = Rng::new(7);
+    let mut last = (Vec::new(), Vec::new());
+    for t in 0..2 * cfg.window {
+        let tok = rng.normal_vec(cfg.d_in, 1.0);
+        let a = deepcot.tick(&HostTensor::new(vec![1, 1, cfg.d_in], tok.clone())?)?;
+        let b = encoder.tick(&HostTensor::new(vec![1, 1, cfg.d_in], tok)?)?;
+        last = (a.logits.data, b.logits.data);
+        if t == 0 {
+            println!("tick 0 ok — logits dim {}", last.0.len());
+        }
+    }
+    println!("final deepcot logits[0..4] = {:?}", &last.0[..4]);
+    println!("final encoder logits[0..4] = {:?}", &last.1[..4]);
+    println!(
+        "per-tick attention FLOPs: deepcot {} vs encoder {} ({}x reduction)",
+        format_flops(per_tick("deepcot", &cfg, FlopsMode::AttentionOnly)),
+        format_flops(per_tick("encoder", &cfg, FlopsMode::AttentionOnly)),
+        per_tick("encoder", &cfg, FlopsMode::AttentionOnly)
+            / per_tick("deepcot", &cfg, FlopsMode::AttentionOnly).max(1)
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! End-to-end serving driver (the DESIGN.md §5 validation run): spin up
+//! the engine on a batched DeepCoT variant, subject it to an open-loop
+//! multi-client load with stream churn (opens/closes mid-run), and
+//! report latency percentiles + throughput. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!     cargo run --release --example serve -- --streams 8 --ticks 200
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use deepcot::config::EngineConfig;
+use deepcot::coordinator::engine::EngineThread;
+use deepcot::manifest::Manifest;
+use deepcot::util::cli::Cli;
+use deepcot::util::rng::Rng;
+use deepcot::util::timing::Summary;
+
+fn main() -> Result<()> {
+    let cli = EngineConfig::cli(Cli::new("serve: end-to-end engine load driver"))
+        .opt("streams", "8", "concurrent client streams (may exceed slots)")
+        .opt("ticks", "200", "tokens per stream")
+        .opt("churn", "0.1", "probability a client reopens its stream per tick")
+        .opt("seed", "0", "workload seed");
+    let args = cli.parse()?;
+    let cfg = EngineConfig::from_args(&args)?;
+    let n_streams = args.get_usize("streams")?;
+    let ticks = args.get_usize("ticks")?;
+    let churn = args.get_f64("churn")?;
+    let seed = args.get_u64("seed")?;
+
+    let (manifest, _) = Manifest::load(&cfg.artifacts_dir)?;
+    let mc = manifest.variant(&cfg.variant)?.config.clone();
+    let lane = mc.m_tokens * mc.d_in;
+    println!(
+        "serving {} (B={} slots), {} clients x {} ticks, churn={churn}",
+        cfg.variant, mc.batch, n_streams, ticks
+    );
+
+    let engine = EngineThread::spawn(cfg.clone())?;
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for s in 0..n_streams {
+        let h = engine.handle();
+        clients.push(std::thread::spawn(move || -> Result<(u64, u64, Vec<Duration>)> {
+            let mut rng = Rng::new(seed ^ ((s as u64 + 1) * 0x9E37));
+            let mut lats = Vec::with_capacity(ticks);
+            let mut ok = 0u64;
+            let mut rejected = 0u64;
+            let mut sess = None;
+            for _ in 0..ticks {
+                if sess.is_none() || rng.chance(churn) {
+                    if let Some((old, _)) = sess.take() {
+                        h.close(old);
+                    }
+                    match h.open() {
+                        Ok(pair) => sess = Some(pair),
+                        Err(_) => {
+                            rejected += 1;
+                            std::thread::sleep(Duration::from_millis(2));
+                            continue;
+                        }
+                    }
+                }
+                let (id, rx) = sess.as_ref().unwrap();
+                let sent = Instant::now();
+                if h.push(*id, rng.normal_vec(lane, 1.0)).is_err() {
+                    rejected += 1; // backpressure
+                    std::thread::sleep(Duration::from_micros(500));
+                    continue;
+                }
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(_) => {
+                        lats.push(sent.elapsed());
+                        ok += 1;
+                    }
+                    Err(_) => rejected += 1,
+                }
+            }
+            if let Some((id, _)) = sess {
+                h.close(id);
+            }
+            Ok((ok, rejected, lats))
+        }));
+    }
+
+    let mut all_lats = Vec::new();
+    let (mut total_ok, mut total_rej) = (0u64, 0u64);
+    for c in clients {
+        let (ok, rej, lats) = c.join().expect("client")?;
+        total_ok += ok;
+        total_rej += rej;
+        all_lats.extend(lats);
+    }
+    let wall = t0.elapsed();
+    let m = engine.handle().metrics()?;
+    let s = Summary::of(&all_lats);
+    println!("== serve results ==");
+    println!(
+        "completed={} rejected={} wall={:.2?} throughput={:.1} tokens/s",
+        total_ok,
+        total_rej,
+        wall,
+        total_ok as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "client latency: mean={:.3}ms p50={:.3}ms p95={:.3}ms max={:.3}ms",
+        s.mean_s * 1e3,
+        s.p50_s * 1e3,
+        s.p95_s * 1e3,
+        s.max_s * 1e3
+    );
+    println!("engine: {}", m.report());
+    engine.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,225 @@
+"""AOT lowering: every registered variant -> artifacts/.
+
+Outputs (all consumed by the Rust runtime, never Python at serve time):
+  artifacts/hlo/<name>.hlo.txt     — HLO *text*. Not .serialize():
+      xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+      ids); the text parser reassigns ids and round-trips cleanly.
+  artifacts/weights/<spec-key>.bin — f32 LE params, param_spec order,
+      deduplicated across variants sharing a spec (window size does not
+      change parameter shapes).
+  artifacts/golden/<name>.json     — input stream + expected outputs for
+      the tiny variants (Rust integration tests).
+  artifacts/manifest.json          — the contract: per-variant arg order,
+      shapes, state wiring, weight file, golden file.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only prefix]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, params as P, stream, variants
+from .config import ModelConfig
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def io_spec(cfg: ModelConfig, family: str):
+    """(inputs, outputs, state wiring) for a family.
+
+    state wiring maps output index -> input index for the feedback loop
+    the Rust coordinator runs (new memories become next tick's inputs).
+    """
+    b, m, n = cfg.batch, cfg.m_tokens, cfg.window
+    d_in, d, c = cfg.d_in, cfg.d_model, cfg.n_classes
+    lbhmd = [cfg.n_layers, b, cfg.n_heads, cfg.mem_len, cfg.d_head]
+    bhnd = [b, cfg.n_heads, n - 1, cfg.d_head]
+    if family in ("deepcot", "xl"):
+        inputs = [("tokens", [b, m, d_in], F32)]
+        if family == "deepcot":
+            inputs.append(("pos", [], I32))  # xl uses P, not RoPE: no pos
+        inputs += [("kmem", lbhmd, F32), ("vmem", lbhmd, F32)]
+        outputs = [
+            ("logits", [b, c], F32),
+            ("out", [b, m, d], F32),
+            ("kmem_next", lbhmd, F32),
+            ("vmem_next", lbhmd, F32),
+        ]
+        k0 = len(inputs) - 2
+        state = {"2": k0, "3": k0 + 1}
+    elif family == "cotransformer":
+        inputs = [
+            ("tokens", [b, 1, d_in], F32),
+            ("pos", [], I32),
+            ("qmem", bhnd, F32),
+            ("kmem", bhnd, F32),
+            ("vmem", bhnd, F32),
+        ]
+        outputs = [
+            ("logits", [b, c], F32),
+            ("out", [b, 1, d], F32),
+            ("qmem_next", bhnd, F32),
+            ("kmem_next", bhnd, F32),
+            ("vmem_next", bhnd, F32),
+        ]
+        state = {"2": 2, "3": 3, "4": 4}
+    else:  # window families
+        inputs = [("window", [b, n, d_in], F32)]
+        if family not in ("fnet", "xl_full"):  # posless baselines
+            inputs.append(("pos", [], I32))
+        outputs = [("logits", [b, c], F32), ("out", [b, n, d], F32)]
+        state = {}
+    return inputs, outputs, state
+
+
+def make_fn(cfg: ModelConfig, family: str):
+    """Wrap a family forward as fn(*arrays, *flat_params)."""
+    n_data = len(io_spec(cfg, family)[0])
+    fwd = model.FAMILIES[family]
+
+    def fn(*args):
+        data, flat = args[:n_data], args[n_data:]
+        p = P.unflatten(cfg, family, flat)
+        return fwd(cfg, p, *data)
+
+    return fn
+
+
+def input_specs(cfg: ModelConfig, family: str):
+    ins, _, _ = io_spec(cfg, family)
+    specs = []
+    for _, shape, dt in ins:
+        dtype = jnp.float32 if dt == F32 else jnp.int32
+        specs.append(jax.ShapeDtypeStruct(tuple(shape), dtype))
+    for _, shape in P.param_spec(cfg, family):
+        specs.append(jax.ShapeDtypeStruct(tuple(shape), jnp.float32))
+    return specs
+
+
+def spec_key(cfg: ModelConfig, family: str, seed: int) -> str:
+    """Weights are shared by variants with identical param specs."""
+    spec = P.param_spec(cfg, family)
+    blob = json.dumps([(n, list(s)) for n, s in spec]) + f"|seed={seed}"
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def dump_golden(cfg: ModelConfig, family: str, pd: dict, path: pathlib.Path):
+    """Run a short stream on the host and record expected outputs."""
+    rng = np.random.default_rng(42)
+    t = variants.GOLDEN_TICKS
+    if family in ("deepcot", "xl"):
+        toks = rng.standard_normal(
+            (t, cfg.batch, cfg.m_tokens, cfg.d_in)
+        ).astype(np.float32)
+        run = stream.run_deepcot_stream if family == "deepcot" else stream.run_xl_stream
+        logits, outs = run(cfg, pd, toks)
+    elif family == "cotransformer":
+        toks = rng.standard_normal((t, cfg.batch, 1, cfg.d_in)).astype(np.float32)
+        logits, outs = stream.run_cotransformer_stream(cfg, pd, toks)
+    else:
+        flat = rng.standard_normal((t, cfg.batch, cfg.d_in)).astype(np.float32)
+        fwd = model.FAMILIES[family]
+        with_pos = family not in ("fnet", "xl_full")
+        logits, outs = stream.run_window_stream(cfg, pd, fwd, flat, with_pos)
+        toks = flat[:, :, None, :]
+    payload = {
+        "ticks": t,
+        "stream": toks.reshape(t, -1).tolist(),
+        "expected_logits": np.asarray(logits).reshape(t, -1).tolist(),
+        "expected_out_last": np.asarray(outs)[:, :, -1, :].reshape(t, -1).tolist(),
+    }
+    path.write_text(json.dumps(payload))
+
+
+def build(out_dir: pathlib.Path, only: str | None, seed: int = 0) -> None:
+    hlo_dir = out_dir / "hlo"
+    w_dir = out_dir / "weights"
+    g_dir = out_dir / "golden"
+    for d in (hlo_dir, w_dir, g_dir):
+        d.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {"seed": seed, "variants": {}}
+    written_weights: set[str] = set()
+    todo = variants.all_variants()
+    for name, family, cfg in todo:
+        if only and not name.startswith(only):
+            continue
+        flat_np = P.init_params(cfg, family, seed)
+        key = spec_key(cfg, family, seed)
+        wfile = f"weights/{key}.bin"
+        if key not in written_weights:
+            with open(out_dir / wfile, "wb") as f:
+                for arr in flat_np:
+                    f.write(arr.astype("<f4").tobytes())
+            written_weights.add(key)
+
+        fn = make_fn(cfg, family)
+        lowered = jax.jit(fn).lower(*input_specs(cfg, family))
+        hlo = to_hlo_text(lowered)
+        (hlo_dir / f"{name}.hlo.txt").write_text(hlo)
+
+        ins, outs, state = io_spec(cfg, family)
+        entry = {
+            "family": family,
+            "config": cfg.to_json(),
+            "hlo": f"hlo/{name}.hlo.txt",
+            "weights": wfile,
+            "inputs": [
+                {"name": n_, "shape": s, "dtype": dt} for n_, s, dt in ins
+            ],
+            "outputs": [
+                {"name": n_, "shape": s, "dtype": dt} for n_, s, dt in outs
+            ],
+            "state": state,
+            "params": [
+                {"name": n_, "shape": list(s)}
+                for n_, s in P.param_spec(cfg, family)
+            ],
+        }
+        if name in variants.GOLDEN_VARIANTS:
+            pd = P.unflatten(cfg, family, tuple(jnp.asarray(a) for a in flat_np))
+            gfile = f"golden/{name}.json"
+            dump_golden(cfg, family, pd, out_dir / gfile)
+            entry["golden"] = gfile
+        manifest["variants"][name] = entry
+        print(f"lowered {name}  ({len(hlo)//1024} KiB hlo)")
+
+    mpath = out_dir / "manifest.json"
+    if only and mpath.exists():
+        old = json.loads(mpath.read_text())
+        old["variants"].update(manifest["variants"])
+        manifest = old
+    mpath.write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {mpath} ({len(manifest['variants'])} variants)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="variant name prefix filter")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build(pathlib.Path(args.out_dir), args.only, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Model configuration shared by L1/L2 and mirrored in the Rust manifest.
+
+One dataclass describes every member of the encoder family; the `family`
+string selects which forward function is AOT-lowered:
+
+  deepcot        — stack of Single-Output continual layers (the paper)
+  encoder        — regular sliding-window encoder (non-continual baseline)
+  cotransformer  — Continual Transformer (retroactive L0 + single-output
+                   rest; Hedegaard et al.) — 2-layer baseline
+  nystrom        — Nystromformer window baseline
+  fnet           — FNet (Fourier mixing) window baseline
+  xl / xl_full   — DeepCoT-XL continual step / full-window Transformer-XL
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # geometry
+    d_in: int  # input token feature size
+    d_model: int
+    n_heads: int
+    n_layers: int
+    window: int  # n — attention window / memory span
+    m_tokens: int = 1  # tokens per stream tick (supp. §III m-output)
+    ffn_mult: int = 4
+    n_classes: int = 10
+    batch: int = 1
+    # variant switches (paper §III-B / supp. §II)
+    activation: str = "softmax"  # softmax | soft
+    norm: str = "layernorm"  # layernorm | rezero
+    ffn_act: str = "gelu"  # gelu | linear
+    pos: str = "rope"  # rope | none
+    # baselines
+    n_landmarks: int = 0  # nystrom only
+    # implementation switch (perf pass may flip the default; see
+    # EXPERIMENTS.md §Perf)
+    use_pallas: bool = True
+
+    def __post_init__(self):
+        if self.d_model % self.n_heads:
+            raise ValueError("d_model must divide by n_heads")
+        if self.window <= self.m_tokens:
+            raise ValueError("window must exceed m_tokens")
+        if self.activation not in ("softmax", "soft"):
+            raise ValueError(f"bad activation {self.activation}")
+        if self.norm not in ("layernorm", "rezero"):
+            raise ValueError(f"bad norm {self.norm}")
+        if self.ffn_act not in ("gelu", "linear"):
+            raise ValueError(f"bad ffn_act {self.ffn_act}")
+        if self.pos not in ("rope", "none"):
+            raise ValueError(f"bad pos {self.pos}")
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        return self.ffn_mult * self.d_model
+
+    @property
+    def mem_len(self) -> int:
+        """Rows kept in each layer's K/V memory: n - m (paper: (n-1) x d)."""
+        return self.window - self.m_tokens
+
+    def soft_paper_variant(self) -> "ModelConfig":
+        """The mathematical-analysis configuration of §III-B: SOFT
+        activation, linear FFN, ReZero residuals."""
+        return dataclasses.replace(
+            self, activation="soft", norm="rezero", ffn_act="linear"
+        )
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "ModelConfig":
+        return ModelConfig(**d)

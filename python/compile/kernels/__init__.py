@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+Import surface used by the L2 model:
+  kernels.single_output.single_output_attention
+  kernels.window_attention.window_attention
+  kernels.fnet_mixing.fnet_mixing
+  kernels.ref.*  (oracles + shared helpers: DFT matrices, Nystrom pinv)
+"""
+
+from . import fnet_mixing, ref, single_output, window_attention  # noqa: F401

@@ -1,0 +1,51 @@
+"""Pallas kernel for FNet token mixing: Re(DFT_seq(DFT_hidden(x))).
+
+FNet's FFT is a butterfly network — a poor fit for a systolic array — so
+on TPU we express the transform as DFT-matrix matmuls, which are
+MXU-native. The op-count model in rust/src/flops keeps the paper's
+O(n log n) accounting so the asymptotic comparison is preserved
+analytically (DESIGN.md §Hardware-Adaptation).
+
+The DFT matrices are passed in (precomputed at trace time) so they lower
+into the HLO as constants shared across the grid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fnet_kernel(x_ref, cn_ref, sn_ref, cd_ref, sd_ref, o_ref):
+    x = x_ref[0]  # (n, d)
+    cn, sn = cn_ref[...], sn_ref[...]  # (n, n)
+    cd, sd = cd_ref[...], sd_ref[...]  # (d, d)
+    a = jnp.dot(x, cd.T)  # Re of hidden-dim DFT
+    b = jnp.dot(x, sd.T)  # Im of hidden-dim DFT
+    o_ref[0] = jnp.dot(cn, a) - jnp.dot(sn, b)
+
+
+@jax.jit
+def fnet_mixing(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (G, n, d) -> (G, n, d), G = batch grid."""
+    g, n, d = x.shape
+    cn, sn = ref.dft_matrices(n)
+    cd, sd = ref.dft_matrices(d)
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    return pl.pallas_call(
+        _fnet_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            full(n, n),
+            full(n, n),
+            full(d, d),
+            full(d, d),
+        ],
+        out_specs=pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, d), x.dtype),
+        interpret=True,
+    )(x, cn, sn, cd, sd)

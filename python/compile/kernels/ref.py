@@ -1,0 +1,148 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the single source of truth for kernel numerics: pytest sweeps
+the Pallas implementations (interpret=True) against these references with
+hypothesis-generated shapes and dtypes.
+
+Conventions (all functions are per-batch-free; callers vmap):
+  q        : (H, dh)        one query token, split by head
+  kmem/vmem: (H, n, dh)     key/value memory, *including* the newest row
+  x        : (n, d)         a full attention window
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax_rows(s: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable row softmax over the last axis."""
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def soft_activation(q: jnp.ndarray, k: jnp.ndarray, dh: int) -> jnp.ndarray:
+    """SOFT attention activation (paper Eq. 4).
+
+    rho(q, K) = exp(-(q (-) K) / (2 sqrt(d))) where (q (-) K) is the
+    squared Euclidean distance between each query/key pair. No row
+    normalization — that is the point: the map stays additive over K rows
+    (paper Eq. 3).
+
+    q: (..., m, dh), k: (..., n, dh) -> (..., m, n)
+    """
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)  # (..., m, 1)
+    k2 = jnp.sum(k * k, axis=-1)[..., None, :]  # (..., 1, n)
+    qk = jnp.einsum("...md,...nd->...mn", q, k)
+    d2 = q2 - 2.0 * qk + k2
+    return jnp.exp(-d2 / (2.0 * jnp.sqrt(jnp.float32(dh))))
+
+
+def single_output_attention(
+    q: jnp.ndarray,
+    kmem: jnp.ndarray,
+    vmem: jnp.ndarray,
+    activation: str = "softmax",
+) -> jnp.ndarray:
+    """Single-Output continual attention for one token (paper Eq. 1-2).
+
+    q: (H, dh); kmem/vmem: (H, n, dh) -> (H, dh)
+    """
+    h, dh = q.shape
+    if activation == "softmax":
+        s = jnp.einsum("hd,hnd->hn", q, kmem) / jnp.sqrt(jnp.float32(dh))
+        p = softmax_rows(s)
+    elif activation == "soft":
+        p = soft_activation(q[:, None, :], kmem, dh)[:, 0, :]  # (H, n)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return jnp.einsum("hn,hnd->hd", p, vmem)
+
+
+def window_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    activation: str = "softmax",
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Full window attention (the non-continual baseline).
+
+    q, k, v: (H, n, dh) -> (H, n, dh)
+    """
+    h, n, dh = q.shape
+    if activation == "softmax":
+        s = jnp.einsum("hmd,hnd->hmn", q, k) / jnp.sqrt(jnp.float32(dh))
+        if causal:
+            mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+            s = jnp.where(mask[None], s, -jnp.inf)
+        p = softmax_rows(s)
+    elif activation == "soft":
+        p = soft_activation(q, k, dh)  # (H, n, n)
+        if causal:
+            mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+            p = jnp.where(mask[None], p, 0.0)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return jnp.einsum("hmn,hnd->hmd", p, v)
+
+
+def dft_matrices(n: int):
+    """Real/imag parts of the unnormalized DFT matrix of size n."""
+    idx = jnp.arange(n, dtype=jnp.float32)
+    ang = -2.0 * jnp.pi * idx[:, None] * idx[None, :] / jnp.float32(n)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def fnet_mixing(x: jnp.ndarray) -> jnp.ndarray:
+    """FNet token mixing: Re(FFT_seq(FFT_hidden(x))) for real x.
+
+    Implemented via DFT matmuls (MXU-friendly; see DESIGN.md
+    §Hardware-Adaptation). x: (n, d) -> (n, d)
+    """
+    n, d = x.shape
+    cn, sn = dft_matrices(n)
+    cd, sd = dft_matrices(d)
+    # hidden-dim DFT of a real signal: A + iB
+    a = x @ cd.T
+    b = x @ sd.T
+    # seq-dim DFT of (A + iB): real part = Cn A - Sn B
+    return cn @ a - sn @ b
+
+
+def iterative_pinv(a: jnp.ndarray, iters: int = 6) -> jnp.ndarray:
+    """Newton-Schulz iterative Moore-Penrose pseudo-inverse (per-head)."""
+    # init per Nystromformer: Z0 = A^T / (max row-sum * max col-sum)
+    row = jnp.max(jnp.sum(jnp.abs(a), axis=-1), axis=-1)  # (H,)
+    col = jnp.max(jnp.sum(jnp.abs(a), axis=-2), axis=-1)  # (H,)
+    z = jnp.swapaxes(a, -1, -2) / (row * col)[:, None, None]
+    eye = jnp.eye(a.shape[-1], dtype=a.dtype)
+    for _ in range(iters):
+        az = a @ z
+        z = 0.25 * z @ (13.0 * eye - az @ (15.0 * eye - az @ (7.0 * eye - az)))
+    return z
+
+
+def nystrom_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    n_landmarks: int,
+    pinv_iters: int = 6,
+) -> jnp.ndarray:
+    """Nystromformer attention baseline (Xiong et al., AAAI'21).
+
+    Landmarks are segment means. q, k, v: (H, n, dh) -> (H, n, dh).
+    n must be divisible by n_landmarks.
+    """
+    h, n, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    seg = n // n_landmarks
+    ql = jnp.mean(q.reshape(h, n_landmarks, seg, dh), axis=2)
+    kl = jnp.mean(k.reshape(h, n_landmarks, seg, dh), axis=2)
+    f = softmax_rows(jnp.einsum("hmd,hld->hml", q, kl) * scale)  # (H,n,L)
+    a = softmax_rows(jnp.einsum("hld,hjd->hlj", ql, kl) * scale)  # (H,L,L)
+    b = softmax_rows(jnp.einsum("hld,hnd->hln", ql, k) * scale)  # (H,L,n)
+    z = iterative_pinv(a, pinv_iters)
+    return jnp.einsum("hml,hlj,hjn,hnd->hmd", f, z, b, v)

@@ -1,0 +1,72 @@
+"""Pallas kernel for Single-Output continual attention (paper Eq. 1-2).
+
+This is DeepCoT's compute hot spot: m new query tokens (m=1 in the
+common case; m>1 is the m-output variant of supp. §III) attend against
+the per-layer Key/Value memory concatenated with the new keys/values.
+The grid iterates over (batch * heads); each program keeps its whole
+(n, dh) K/V tile resident in VMEM — at the paper's largest geometry
+(n=1000, dh=64, f32) that is 2 * 250 KiB per program, far under the
+~16 MiB VMEM budget, so whole-memory residency is the right BlockSpec
+(DESIGN.md §Hardware-Adaptation).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel body is lowered to plain HLO. Structure (not
+interpreted wallclock) is what we optimize at this layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _so_kernel(q_ref, k_ref, v_ref, o_ref, *, activation: str, dh: int):
+    """One program: q (m, dh) vs K/V (n, dh) for a single (batch, head)."""
+    q = q_ref[0]  # (m, dh)
+    k = k_ref[0]  # (n, dh)
+    v = v_ref[0]  # (n, dh)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    if activation == "softmax":
+        s = jnp.dot(q, k.T) * scale  # (m, n)
+        s = s - jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+    else:  # soft — unnormalized Gaussian kernel, additive over K rows
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)  # (m, 1)
+        k2 = jnp.sum(k * k, axis=-1)[None, :]  # (1, n)
+        d2 = q2 - 2.0 * jnp.dot(q, k.T) + k2
+        p = jnp.exp(-d2 * (0.5 * scale))
+    o_ref[0] = jnp.dot(p, v)  # (m, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def single_output_attention(
+    q: jnp.ndarray,
+    kmem: jnp.ndarray,
+    vmem: jnp.ndarray,
+    activation: str = "softmax",
+) -> jnp.ndarray:
+    """q: (G, m, dh); kmem/vmem: (G, n, dh) -> (G, m, dh).
+
+    G is the flattened (batch * heads) grid dimension; the L2 model
+    reshapes (B, H, ...) into G before calling. kmem/vmem include the
+    newest m rows (the caller concatenates memory with new k/v).
+    """
+    g, m, dh = q.shape
+    _, n, _ = kmem.shape
+    kernel = functools.partial(_so_kernel, activation=activation, dh=dh)
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, m, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, m, dh), q.dtype),
+        interpret=True,
+    )(q, kmem, vmem)

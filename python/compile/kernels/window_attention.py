@@ -1,0 +1,68 @@
+"""Pallas kernel for full sliding-window attention (baseline encoders).
+
+The non-continual contrast case: an (n x n) score matrix per head,
+recomputed on every stream tick. Grid over (batch * heads); one program
+computes the whole (n, n) block. On a real TPU this is the MXU-friendly
+case the paper's baselines represent; here the BlockSpec documents the
+HBM<->VMEM schedule and interpret=True lowers it to plain HLO
+(DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wa_kernel(q_ref, k_ref, v_ref, o_ref, *, activation: str, dh: int, causal: bool):
+    q = q_ref[0]  # (n, dh)
+    k = k_ref[0]  # (n, dh)
+    v = v_ref[0]  # (n, dh)
+    n = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    if activation == "softmax":
+        s = jnp.dot(q, k.T) * scale  # (n, n)
+        if causal:
+            row = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+            col = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+            s = jnp.where(col <= row, s, -jnp.inf)
+        s = s - jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+    else:  # soft
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)  # (n, 1)
+        k2 = jnp.sum(k * k, axis=-1)[None, :]  # (1, n)
+        d2 = q2 - 2.0 * jnp.dot(q, k.T) + k2
+        p = jnp.exp(-d2 * (0.5 * scale))
+        if causal:
+            row = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+            col = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+            p = jnp.where(col <= row, p, 0.0)
+    o_ref[0] = jnp.dot(p, v)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "causal"))
+def window_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    activation: str = "softmax",
+    causal: bool = False,
+) -> jnp.ndarray:
+    """q/k/v: (G, n, dh) -> (G, n, dh), G = flattened batch*heads."""
+    g, n, dh = q.shape
+    kernel = functools.partial(
+        _wa_kernel, activation=activation, dh=dh, causal=causal
+    )
+    spec = pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((g, n, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

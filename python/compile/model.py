@@ -1,0 +1,372 @@
+"""Layer-2: the DeepCoT encoder family in JAX (build-time only).
+
+Every function here is pure; continual state (per-layer K/V memories) is
+threaded explicitly so the Rust coordinator owns it as device-resident
+PJRT buffers. All forwards call the L1 Pallas kernels (interpret=True)
+unless cfg.use_pallas is False, in which case the pure-jnp oracles are
+used (same numerics; the perf pass measures which lowering executes
+faster on CPU PJRT — see EXPERIMENTS.md §Perf).
+
+Step functions (continual tick):
+  deepcot_step        — the paper: L stacked Single-Output layers
+  cotransformer_step  — Hedegaard baseline: retroactive L0 + SO last
+  xl_step             — DeepCoT-XL continual tick (supp. §IV Eq. 4)
+
+Window functions (non-continual baselines, recomputed each tick):
+  encoder_full, nystrom_full, fnet_full, xl_full
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import fnet_mixing as _fnet
+from .kernels import ref
+from .kernels import single_output as _so
+from .kernels import window_attention as _wa
+from .rope import apply_rope
+
+# ---------------------------------------------------------------------------
+# shared sub-blocks
+
+
+def _split_heads(x: jnp.ndarray, h: int) -> jnp.ndarray:
+    """(B, T, d) -> (B, H, T, dh)"""
+    b, t, d = x.shape
+    return x.reshape(b, t, h, d // h).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, T, dh) -> (B, T, d)"""
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _ffn(cfg: ModelConfig, lp: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ lp["w1"] + lp["b1"]
+    if cfg.ffn_act == "gelu":
+        h = jax.nn.gelu(h)
+    return h @ lp["w2"] + lp["b2"]
+
+
+def _residual(cfg: ModelConfig, lp: dict, x, sub, idx: int):
+    """Post-norm residual: LayerNorm(x + sub) or ReZero x + a*sub
+    (supp. §II — ReZero keeps the layer map additive over tokens)."""
+    if cfg.norm == "layernorm":
+        g, b = (lp["g1"], lp["be1"]) if idx == 0 else (lp["g2"], lp["be2"])
+        return _layer_norm(x + sub, g, b)
+    a = lp["a1"] if idx == 0 else lp["a2"]
+    return x + a * sub
+
+
+def _qkv(cfg: ModelConfig, lp: dict, x: jnp.ndarray):
+    """(B, T, d) -> q, k, v each (B, H, T, dh)."""
+    q = _split_heads(x @ lp["wq"] + lp["bq"], cfg.n_heads)
+    k = _split_heads(x @ lp["wk"] + lp["bk"], cfg.n_heads)
+    v = _split_heads(x @ lp["wv"] + lp["bv"], cfg.n_heads)
+    return q, k, v
+
+
+def _embed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["w_in"] + params["b_in"]
+
+
+def _readout(params: dict, last_tok: jnp.ndarray) -> jnp.ndarray:
+    """Classification from the newest output token (no [CLS]; supp. §V)."""
+    return last_tok @ params["w_cls"] + params["b_cls"]
+
+
+# ---------------------------------------------------------------------------
+# continual single-output layer (the paper's contribution)
+
+
+def _so_attention(cfg: ModelConfig, q, kcat, vcat):
+    """q: (B,H,m,dh); kcat/vcat: (B,H,n,dh) -> (B,H,m,dh)."""
+    b, h, m, dh = q.shape
+    n = kcat.shape[2]
+    if cfg.use_pallas:
+        out = _so.single_output_attention(
+            q.reshape(b * h, m, dh),
+            kcat.reshape(b * h, n, dh),
+            vcat.reshape(b * h, n, dh),
+            cfg.activation,
+        )
+        return out.reshape(b, h, m, dh)
+    return _so_ref(cfg, q, kcat, vcat)
+
+
+def _so_ref(cfg: ModelConfig, q, kcat, vcat):
+    """Pure-jnp single-output attention (m query rows vs n K/V rows)."""
+    dh = q.shape[-1]
+    if cfg.activation == "softmax":
+        s = jnp.einsum("bhmd,bhnd->bhmn", q, kcat) / jnp.sqrt(jnp.float32(dh))
+        p = ref.softmax_rows(s)
+    else:
+        p = ref.soft_activation(q, kcat, dh)
+    return jnp.einsum("bhmn,bhnd->bhmd", p, vcat)
+
+
+def _deepcot_layer(cfg: ModelConfig, lp: dict, x, kmem, vmem, pos):
+    """One continual layer tick.
+
+    x: (B, m, d) new tokens; kmem/vmem: (B, H, M, dh), M = n - m.
+    Returns (y (B,m,d), kmem', vmem').
+    """
+    m = x.shape[1]
+    q, k, v = _qkv(cfg, lp, x)
+    if cfg.pos == "rope":
+        newpos = pos + jnp.arange(m, dtype=jnp.int32)
+        q = apply_rope(q, newpos)
+        k = apply_rope(k, newpos)
+    kcat = jnp.concatenate([kmem, k], axis=2)  # (B,H,n,dh)
+    vcat = jnp.concatenate([vmem, v], axis=2)
+    a = _so_attention(cfg, q, kcat, vcat)
+    a = _merge_heads(a) @ lp["wo"] + lp["bo"]
+    x = _residual(cfg, lp, x, a, 0)
+    x = _residual(cfg, lp, x, _ffn(cfg, lp, x), 1)
+    # roll: drop the oldest m rows, keep the newest M
+    return x, kcat[:, :, m:, :], vcat[:, :, m:, :]
+
+
+def deepcot_step(cfg: ModelConfig, params: dict, tokens, pos, kmem, vmem):
+    """The DeepCoT continual tick (paper §III-A).
+
+    tokens: (B, m, d_in); pos: () int32 — absolute stream position of the
+    first new token; kmem/vmem: (L, B, H, M, dh).
+    Returns (logits (B, C), out (B, m, d), kmem', vmem').
+    """
+    x = _embed(params, tokens)
+    new_k, new_v = [], []
+    for i, lp in enumerate(params["layers"]):
+        x, k_i, v_i = _deepcot_layer(cfg, lp, x, kmem[i], vmem[i], pos)
+        new_k.append(k_i)
+        new_v.append(v_i)
+    logits = _readout(params, x[:, -1, :])
+    return logits, x, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# non-continual window baselines
+
+
+def _window_attention(cfg: ModelConfig, q, k, v, causal=False):
+    b, h, n, dh = q.shape
+    if cfg.use_pallas:
+        out = _wa.window_attention(
+            q.reshape(b * h, n, dh),
+            k.reshape(b * h, n, dh),
+            v.reshape(b * h, n, dh),
+            cfg.activation,
+            causal,
+        )
+        return out.reshape(b, h, n, dh)
+    return jax.vmap(
+        lambda qq, kk, vv: ref.window_attention(qq, kk, vv, cfg.activation, causal)
+    )(q, k, v)
+
+
+def _encoder_layer(cfg: ModelConfig, lp: dict, x, pos, attn):
+    q, k, v = _qkv(cfg, lp, x)
+    if cfg.pos == "rope":
+        p = pos + jnp.arange(x.shape[1], dtype=jnp.int32)
+        q = apply_rope(q, p)
+        k = apply_rope(k, p)
+    a = attn(q, k, v)
+    a = _merge_heads(a) @ lp["wo"] + lp["bo"]
+    x = _residual(cfg, lp, x, a, 0)
+    return _residual(cfg, lp, x, _ffn(cfg, lp, x), 1)
+
+
+def encoder_full(cfg: ModelConfig, params: dict, window, pos):
+    """Regular sliding-window encoder (Transformer/Roformer baseline).
+
+    window: (B, n, d_in); pos: () int32 — absolute position of the first
+    window token (so last-token outputs are comparable to deepcot_step).
+    Returns (logits (B, C), out (B, n, d)).
+    """
+    x = _embed(params, window)
+    attn = lambda q, k, v: _window_attention(cfg, q, k, v)
+    for lp in params["layers"]:
+        x = _encoder_layer(cfg, lp, x, pos, attn)
+    return _readout(params, x[:, -1, :]), x
+
+
+def nystrom_full(cfg: ModelConfig, params: dict, window, pos):
+    """Nystromformer baseline — landmark-approximated window attention."""
+    assert cfg.n_landmarks > 0 and cfg.window % cfg.n_landmarks == 0
+    x = _embed(params, window)
+    attn = lambda q, k, v: jax.vmap(
+        lambda qq, kk, vv: ref.nystrom_attention(qq, kk, vv, cfg.n_landmarks)
+    )(q, k, v)
+    for lp in params["layers"]:
+        x = _encoder_layer(cfg, lp, x, pos, attn)
+    return _readout(params, x[:, -1, :]), x
+
+
+def fnet_full(cfg: ModelConfig, params: dict, window):
+    """FNet baseline: Fourier token mixing replaces attention (no
+    positional input — the mixing itself is index-aware)."""
+    x = _embed(params, window)
+    for lp in params["layers"]:
+        if cfg.use_pallas:
+            a = _fnet.fnet_mixing(x)
+        else:
+            a = jax.vmap(ref.fnet_mixing)(x)
+        x = _residual(cfg, lp, x, a, 0)
+        x = _residual(cfg, lp, x, _ffn(cfg, lp, x), 1)
+    return _readout(params, x[:, -1, :]), x
+
+
+# ---------------------------------------------------------------------------
+# Continual Transformer baseline (Hedegaard et al.) — 2-layer scheme:
+# retroactive attention in layer 0 (cached rotated projections, all n
+# outputs refreshed each tick), Single-Output in the last layer. Middle
+# layers, if any, are non-continual — exactly the limitation DeepCoT
+# lifts (supp. §I-C).
+
+
+def cotransformer_step(cfg: ModelConfig, params: dict, token, pos, qmem, kmem, vmem):
+    """token: (B, 1, d_in); qmem/kmem/vmem: (B, H, n-1, dh) — layer-0
+    rotated projections of the previous n-1 window tokens.
+    Returns (logits, out (B,1,d), qmem', kmem', vmem').
+
+    Layer 0 re-attends the full window from cached projections: the
+    projection work is saved, the attention product is recomputed. This
+    matches the paper's observation that retroactive runtime stays near
+    the non-continual baseline despite a lower FLOP count (the analytic
+    FLOPs model in rust/src/flops reports Hedegaard's continual counts).
+    The residual stream of cached positions is not cached (only their
+    projections are), so cached rows re-enter the FFN from the attended
+    value; the newest token's path — the one classification uses — is
+    exact.
+    """
+    x = _embed(params, token)  # (B, 1, d)
+    lp0 = params["layers"][0]
+    q, k, v = _qkv(cfg, lp0, x)  # each (B, H, 1, dh)
+    if cfg.pos == "rope":
+        p = pos + jnp.arange(1, dtype=jnp.int32)
+        q = apply_rope(q, p)
+        k = apply_rope(k, p)
+    qcat = jnp.concatenate([qmem, q], axis=2)  # (B,H,n,dh)
+    kcat = jnp.concatenate([kmem, k], axis=2)
+    vcat = jnp.concatenate([vmem, v], axis=2)
+    a = _window_attention(cfg, qcat, kcat, vcat)  # retroactive refresh
+    a = _merge_heads(a) @ lp0["wo"] + lp0["bo"]  # (B, n, d)
+    # newest token keeps its residual; cached rows use attended value only
+    resid = jnp.concatenate([a[:, :-1, :], x + a[:, -1:, :]], axis=1)
+    if cfg.norm == "layernorm":
+        xn = _layer_norm(resid, lp0["g1"], lp0["be1"])
+    else:
+        xn = resid
+    xn = _residual(cfg, lp0, xn, _ffn(cfg, lp0, xn), 1)
+    # middle layers: plain non-continual encoder layers over the window
+    wpos = pos - jnp.int32(cfg.window - 1)
+    for lp in params["layers"][1:-1]:
+        xn = _encoder_layer(
+            cfg, lp, xn, wpos, lambda q_, k_, v_: _window_attention(cfg, q_, k_, v_)
+        )
+    # last layer: single-output for the newest token
+    lpl = params["layers"][-1]
+    ql, kl, vl = _qkv(cfg, lpl, xn)
+    if cfg.pos == "rope":
+        pw = wpos + jnp.arange(cfg.window, dtype=jnp.int32)
+        ql = apply_rope(ql, pw)
+        kl = apply_rope(kl, pw)
+    al = _so_attention(cfg, ql[:, :, -1:, :], kl, vl)  # (B,H,1,dh)
+    al = _merge_heads(al) @ lpl["wo"] + lpl["bo"]
+    y = _residual(cfg, lpl, xn[:, -1:, :], al, 0)
+    y = _residual(cfg, lpl, y, _ffn(cfg, lpl, y), 1)
+    return (
+        _readout(params, y[:, -1, :]),
+        y,
+        qcat[:, :, 1:, :],
+        kcat[:, :, 1:, :],
+        vcat[:, :, 1:, :],
+    )
+
+
+# ---------------------------------------------------------------------------
+# DeepCoT-XL (supp. §IV Eq. 4): TransformerXL attention with continual
+# K/V memories. alpha_XL = softmax((q_u K^T + q_v P) * scale) V.
+
+
+def _xl_pos_matrix(n: int, dh: int) -> jnp.ndarray:
+    """Sinusoidal relative-position matrix P: (n, dh); row j embeds the
+    relative lag (n-1-j), so the newest K row has lag 0."""
+    lag = jnp.arange(n - 1, -1, -1, dtype=jnp.float32)  # (n,)
+    half = dh // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) * 2.0 / dh))
+    ang = lag[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (n, dh)
+
+
+def _xl_attention(cfg: ModelConfig, lp: dict, q, kcat, vcat):
+    """q: (B,H,m,dh); kcat/vcat: (B,H,n,dh)."""
+    dh = q.shape[-1]
+    n = kcat.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    p = _xl_pos_matrix(n, dh)  # (n, dh) trace-time constant
+    qu = q + lp["u"][None, :, None, :]
+    qv = q + lp["vb"][None, :, None, :]
+    s = jnp.einsum("bhmd,bhnd->bhmn", qu, kcat)
+    s = s + jnp.einsum("bhmd,nd->bhmn", qv, p)
+    pr = ref.softmax_rows(s * scale)
+    return jnp.einsum("bhmn,bhnd->bhmd", pr, vcat)
+
+
+def _xl_layer(cfg: ModelConfig, lp: dict, x, kmem, vmem):
+    m = x.shape[1]
+    q, k, v = _qkv(cfg, lp, x)  # XL uses P, not RoPE
+    kcat = jnp.concatenate([kmem, k], axis=2)
+    vcat = jnp.concatenate([vmem, v], axis=2)
+    a = _xl_attention(cfg, lp, q, kcat, vcat)
+    a = _merge_heads(a) @ lp["wo"] + lp["bo"]
+    x = _residual(cfg, lp, x, a, 0)
+    x = _residual(cfg, lp, x, _ffn(cfg, lp, x), 1)
+    return x, kcat[:, :, m:, :], vcat[:, :, m:, :]
+
+
+def xl_step(cfg: ModelConfig, params: dict, tokens, kmem, vmem):
+    """Continual DeepCoT-XL tick — deepcot_step contract minus `pos`
+    (XL uses the relative matrix P, not RoPE)."""
+    x = _embed(params, tokens)
+    new_k, new_v = [], []
+    for i, lp in enumerate(params["layers"]):
+        x, k_i, v_i = _xl_layer(cfg, lp, x, kmem[i], vmem[i])
+        new_k.append(k_i)
+        new_v.append(v_i)
+    return _readout(params, x[:, -1, :]), x, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def xl_full(cfg: ModelConfig, params: dict, window):
+    """Non-continual TransformerXL-style window baseline."""
+    x = _embed(params, window)
+    for lp in params["layers"]:
+        q, k, v = _qkv(cfg, lp, x)
+        a = _xl_attention(cfg, lp, q, k, v)
+        a = _merge_heads(a) @ lp["wo"] + lp["bo"]
+        x = _residual(cfg, lp, x, a, 0)
+        x = _residual(cfg, lp, x, _ffn(cfg, lp, x), 1)
+    return _readout(params, x[:, -1, :]), x
+
+
+FAMILIES = {
+    "deepcot": deepcot_step,
+    "encoder": encoder_full,
+    "cotransformer": cotransformer_step,
+    "nystrom": nystrom_full,
+    "fnet": fnet_full,
+    "xl": xl_step,
+    "xl_full": xl_full,
+}
+
+STEP_FAMILIES = ("deepcot", "cotransformer", "xl")
+WINDOW_FAMILIES = ("encoder", "nystrom", "fnet", "xl_full")

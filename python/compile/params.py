@@ -1,0 +1,119 @@
+"""Parameter specification, initialization, and flattening.
+
+The Rust runtime feeds parameters to the AOT executables as a flat list
+of f32 buffers; the order here is the contract. `param_spec` is the
+single source of truth — the manifest embeds it verbatim and the Rust
+loader asserts against it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .config import ModelConfig
+
+# Families whose layers carry attention projections.
+ATTN_FAMILIES = ("deepcot", "encoder", "cotransformer", "nystrom")
+XL_FAMILIES = ("xl", "xl_full")
+
+
+def layer_spec(cfg: ModelConfig, family: str, i: int) -> list[tuple[str, tuple[int, ...]]]:
+    d, f = cfg.d_model, cfg.d_ffn
+    h, dh = cfg.n_heads, cfg.d_head
+    spec: list[tuple[str, tuple[int, ...]]] = []
+    p = f"l{i}."
+    if family in ATTN_FAMILIES or family in XL_FAMILIES:
+        spec += [
+            (p + "wq", (d, d)),
+            (p + "bq", (d,)),
+            (p + "wk", (d, d)),
+            (p + "bk", (d,)),
+            (p + "wv", (d, d)),
+            (p + "bv", (d,)),
+        ]
+        if family in XL_FAMILIES:
+            # TransformerXL learned biases (supp. §IV Eq. 4): u is the
+            # global-content bias, vb the position bias.
+            spec += [(p + "u", (h, dh)), (p + "vb", (h, dh))]
+        spec += [(p + "wo", (d, d)), (p + "bo", (d,))]
+    # fnet has no attention params — mixing is parameter-free.
+    spec += [
+        (p + "w1", (d, f)),
+        (p + "b1", (f,)),
+        (p + "w2", (f, d)),
+        (p + "b2", (d,)),
+    ]
+    if cfg.norm == "layernorm":
+        spec += [
+            (p + "g1", (d,)),
+            (p + "be1", (d,)),
+            (p + "g2", (d,)),
+            (p + "be2", (d,)),
+        ]
+    else:  # rezero: scalar gates, init 1/L per paper §IV-D
+        spec += [(p + "a1", ()), (p + "a2", ())]
+    return spec
+
+
+def param_spec(cfg: ModelConfig, family: str) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the flattening contract."""
+    spec: list[tuple[str, tuple[int, ...]]] = [
+        ("w_in", (cfg.d_in, cfg.d_model)),
+        ("b_in", (cfg.d_model,)),
+    ]
+    for i in range(cfg.n_layers):
+        spec += layer_spec(cfg, family, i)
+    spec += [
+        ("w_cls", (cfg.d_model, cfg.n_classes)),
+        ("b_cls", (cfg.n_classes,)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, family: str, seed: int = 0) -> list[np.ndarray]:
+    """Deterministic init matching the paper's equivalence protocol:
+    both continual and non-continual variants are evaluated with
+    *identical* parameters, so the same (cfg-geometry, seed) always
+    yields byte-identical weights regardless of family extras."""
+    rng = np.random.default_rng(seed)
+    out: list[np.ndarray] = []
+    rezero_init = 1.0 / max(cfg.n_layers, 1)
+    for name, shape in param_spec(cfg, family):
+        base = name.split(".")[-1]
+        if base.startswith("b") and base not in ("be1", "be2"):
+            arr = np.zeros(shape, dtype=np.float32)
+        elif base in ("be1", "be2"):
+            arr = np.zeros(shape, dtype=np.float32)
+        elif base in ("g1", "g2"):
+            arr = np.ones(shape, dtype=np.float32)
+        elif base in ("a1", "a2"):
+            arr = np.full(shape, rezero_init, dtype=np.float32)
+        elif base in ("u", "vb"):
+            arr = (0.02 * rng.standard_normal(shape)).astype(np.float32)
+        else:  # weight matrices: scaled Gaussian (fan-in)
+            fan_in = shape[0] if len(shape) > 1 else 1
+            arr = (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(
+                np.float32
+            )
+        out.append(arr)
+    return out
+
+
+def unflatten(cfg: ModelConfig, family: str, flat: tuple) -> dict:
+    """flat tuple (trace-time) -> {"w_in":..., "layers":[{...}], ...}."""
+    spec = param_spec(cfg, family)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    by_name = {name: arr for (name, _), arr in zip(spec, flat)}
+    layers = []
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        layers.append(
+            {k[len(p) :]: v for k, v in by_name.items() if k.startswith(p)}
+        )
+    return {
+        "w_in": by_name["w_in"],
+        "b_in": by_name["b_in"],
+        "layers": layers,
+        "w_cls": by_name["w_cls"],
+        "b_cls": by_name["b_cls"],
+    }

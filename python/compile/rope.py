@@ -1,0 +1,36 @@
+"""Rotary Position Embedding (RoPE, Su et al.) — the circular positional
+embedding DeepCoT requires (supp. §III): rotations depend only on
+relative offsets in the attention product, so streams of unbounded
+length work without re-embedding the window.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BASE = 10000.0
+
+
+def rope_freqs(dh: int) -> jnp.ndarray:
+    """Inverse frequencies for a head dim dh (must be even): (dh/2,)."""
+    half = dh // 2
+    return 1.0 / (BASE ** (jnp.arange(half, dtype=jnp.float32) * 2.0 / dh))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """Rotate x by its absolute positions.
+
+    x: (..., T, dh) with dh even; positions: (T,) int32 -> same shape.
+    Pairs are (x[2i], x[2i+1]) — interleaved convention.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh)  # (dh/2,)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (T, dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x_even = x[..., 0::2]
+    x_odd = x[..., 1::2]
+    out_even = x_even * cos - x_odd * sin
+    out_odd = x_even * sin + x_odd * cos
+    # re-interleave
+    out = jnp.stack([out_even, out_odd], axis=-1)
+    return out.reshape(x.shape)

@@ -1,0 +1,92 @@
+"""Host-side streaming helpers (build/test-time only).
+
+Drives the step functions over a whole stream the way the Rust
+coordinator does at runtime: zero-initialized memories, one tick per m
+tokens. Used by pytest (equivalence / receptive-field properties) and by
+aot.py to dump golden sequences for the Rust integration tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .config import ModelConfig
+
+
+def zero_memories(cfg: ModelConfig, n_mem: int = 2):
+    """Fresh per-layer memories: n_mem tensors (L, B, H, M, dh)."""
+    shape = (cfg.n_layers, cfg.batch, cfg.n_heads, cfg.mem_len, cfg.d_head)
+    return tuple(jnp.zeros(shape, dtype=jnp.float32) for _ in range(n_mem))
+
+
+def zero_cot_memories(cfg: ModelConfig):
+    """Continual-Transformer layer-0 caches: q/k/v each (B, H, n-1, dh)."""
+    shape = (cfg.batch, cfg.n_heads, cfg.window - 1, cfg.d_head)
+    return tuple(jnp.zeros(shape, dtype=jnp.float32) for _ in range(3))
+
+
+def run_deepcot_stream(cfg: ModelConfig, params: dict, stream: np.ndarray):
+    """stream: (T, B, m, d_in). Returns (logits (T,B,C), outs (T,B,m,d))."""
+    kmem, vmem = zero_memories(cfg)
+    logits, outs = [], []
+    for t in range(stream.shape[0]):
+        pos = jnp.int32(t * cfg.m_tokens)
+        lg, out, kmem, vmem = model.deepcot_step(
+            cfg, params, jnp.asarray(stream[t]), pos, kmem, vmem
+        )
+        logits.append(np.asarray(lg))
+        outs.append(np.asarray(out))
+    return np.stack(logits), np.stack(outs)
+
+
+def run_xl_stream(cfg: ModelConfig, params: dict, stream: np.ndarray):
+    kmem, vmem = zero_memories(cfg)
+    logits, outs = [], []
+    for t in range(stream.shape[0]):
+        lg, out, kmem, vmem = model.xl_step(
+            cfg, params, jnp.asarray(stream[t]), kmem, vmem
+        )
+        logits.append(np.asarray(lg))
+        outs.append(np.asarray(out))
+    return np.stack(logits), np.stack(outs)
+
+
+def run_cotransformer_stream(cfg: ModelConfig, params: dict, stream: np.ndarray):
+    """stream: (T, B, 1, d_in)."""
+    qmem, kmem, vmem = zero_cot_memories(cfg)
+    logits, outs = [], []
+    for t in range(stream.shape[0]):
+        lg, out, qmem, kmem, vmem = model.cotransformer_step(
+            cfg, params, jnp.asarray(stream[t]), jnp.int32(t), qmem, kmem, vmem
+        )
+        logits.append(np.asarray(lg))
+        outs.append(np.asarray(out))
+    return np.stack(logits), np.stack(outs)
+
+
+def run_window_stream(cfg: ModelConfig, params: dict, fn, tokens: np.ndarray,
+                      with_pos: bool = True):
+    """Slide a window over tokens (T, B, d_in), re-running `fn` per tick —
+    the non-continual serving pattern. Ticks with fewer than n tokens seen
+    are left-padded with zeros (cold-start convention shared with the
+    zero-initialized continual memories)."""
+    t_total, b, d_in = tokens.shape
+    n = cfg.window
+    logits, outs = [], []
+    for t in range(t_total):
+        lo = t - n + 1
+        if lo < 0:
+            pad = np.zeros((-lo, b, d_in), dtype=tokens.dtype)
+            win = np.concatenate([pad, tokens[: t + 1]], axis=0)
+        else:
+            win = tokens[lo : t + 1]
+        win = jnp.asarray(win.transpose(1, 0, 2))  # (B, n, d_in)
+        if with_pos:
+            lg, out = fn(cfg, params, win, jnp.int32(lo))
+        else:
+            lg, out = fn(cfg, params, win)
+        logits.append(np.asarray(lg))
+        outs.append(np.asarray(out))
+    return np.stack(logits), np.stack(outs)

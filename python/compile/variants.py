@@ -1,0 +1,201 @@
+"""The registry of every AOT-compiled artifact — the per-experiment
+geometry table (DESIGN.md §5).
+
+Each variant = (family, ModelConfig, experiment tag). Window sizes for
+T4 are the paper's exact Table-IV sizes; weight files are deduplicated
+across variants that share a parameter spec (window size does not change
+parameter shapes).
+
+Pallas usage: T1/T2/T3 artifacts lower through the L1 Pallas kernels
+(interpret=True). T4 and the Fig.-1 sweep lower the pure-jnp path: the
+interpret-mode machinery adds lowering overhead at 12-layer x 16-window
+scale with no numerical difference (kernels are pytest-verified against
+the same oracles) — see EXPERIMENTS.md §Perf for the measured
+comparison on the serving path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from .config import ModelConfig
+
+Variant = tuple[str, str, ModelConfig]  # (name, family, cfg)
+
+
+def _v(name: str, family: str, **kw) -> Variant:
+    return (name, family, ModelConfig(**kw))
+
+
+def _t4_cfg(window: int, family: str, soft: bool, batch: int = 1) -> ModelConfig:
+    cfg = ModelConfig(
+        d_in=64,
+        d_model=256,
+        n_heads=8,
+        n_layers=12,
+        window=window,
+        n_classes=3,
+        batch=batch,
+        use_pallas=False,
+    )
+    return cfg.soft_paper_variant() if soft else cfg
+
+
+# Table IV window sizes (paper, parenthesized numbers): task -> (x0.5, x1, x2)
+T4_WINDOWS = {
+    "cola": (6, 12, 24),
+    "sst2": (12, 24, 48),
+    "mrpc": (26, 52, 104),
+    "stsb": (15, 30, 60),
+    "qqp": (15, 30, 60),
+    "mnli": (19, 38, 76),
+    "qnli": (25, 50, 100),
+}
+
+# Fig. 1 / supp. Fig. 2-3 sweep windows (batch 16 in the paper; batch 4
+# here — CPU-PJRT substrate, DESIGN.md §2).
+FIG1_WINDOWS = (16, 32, 64, 128, 256, 512)
+FIG1_BATCH = 4
+
+
+def tiny_variants() -> Iterator[Variant]:
+    """Small geometries with golden dumps — rust integration tests."""
+    base = dict(
+        d_in=8, d_model=16, n_heads=2, window=6, n_classes=3, batch=2
+    )
+    yield _v("tiny_deepcot", "deepcot", n_layers=2, **base)
+    yield _v("tiny_deepcot_l1", "deepcot", n_layers=1, **base)
+    yield _v("tiny_encoder", "encoder", n_layers=2, **base)
+    yield _v("tiny_encoder_l1", "encoder", n_layers=1, **base)
+    yield _v("tiny_cotransformer", "cotransformer", n_layers=2, **base)
+    yield _v("tiny_xl", "xl", n_layers=2, **base)
+    yield _v("tiny_xl_full", "xl_full", n_layers=2, **base)
+    yield _v("tiny_fnet", "fnet", n_layers=2, **base)
+    yield _v(
+        "tiny_nystrom", "nystrom", n_layers=2, n_landmarks=3,
+        d_in=8, d_model=16, n_heads=2, window=6, n_classes=3, batch=2,
+    )
+    soft = dict(base, activation="soft", norm="rezero", ffn_act="linear")
+    yield _v("tiny_deepcot_soft", "deepcot", n_layers=2, **soft)
+    yield _v("tiny_encoder_soft", "encoder", n_layers=2, **soft)
+    # m-token variant (supp. §III)
+    yield _v("tiny_deepcot_m3", "deepcot", n_layers=2, m_tokens=3, **base)
+
+
+def t1_variants() -> Iterator[Variant]:
+    """Table I — OAD, THUMOS14 geometry: 64-token windows, 2 layers,
+    20 classes, continual one token at a time."""
+    base = dict(
+        d_in=64, d_model=128, n_heads=8, n_layers=2, window=64,
+        n_classes=20, batch=1,
+    )
+    yield _v("t1_deepcot", "deepcot", **base)
+    yield _v("t1_encoder", "encoder", **base)  # OAD Transformer stand-in
+    yield _v("t1_cotransformer", "cotransformer", **base)
+    yield _v("t1_nystrom", "nystrom", n_landmarks=16, **base)
+
+
+def t2_variants() -> Iterator[Variant]:
+    """Table II — GTZAN audio: 120 VGGish tokens, 2 layers, 10 genres."""
+    base = dict(
+        d_in=128, d_model=128, n_heads=4, n_layers=2, window=120,
+        n_classes=10, batch=1,
+    )
+    yield _v("t2_deepcot", "deepcot", **base)
+    yield _v("t2_encoder", "encoder", **base)
+    yield _v("t2_cotransformer", "cotransformer", **base)
+    yield _v("t2_nystrom", "nystrom", n_landmarks=4, **base)
+
+
+def t3_variants() -> Iterator[Variant]:
+    """Table III — MAT-SED: 10-layer encoder (m=12 tokens/tick) chained
+    with a 3-layer TransformerXL context net (m=10 tokens/tick); the Rust
+    coordinator pipelines the two executables (DESIGN.md §5)."""
+    enc = dict(
+        d_in=128, d_model=256, n_heads=8, n_layers=10, window=60,
+        n_classes=10, batch=1,
+    )
+    # the context net consumes the encoder's m=12 attended tokens per
+    # tick; its window covers 48 encoder outputs (4 ticks of context)
+    ctx = dict(
+        d_in=256, d_model=256, n_heads=8, n_layers=3, window=48,
+        n_classes=10, batch=1,
+    )
+    yield _v("t3_deepcot_enc", "deepcot", m_tokens=12, **enc)
+    yield _v("t3_encoder_enc", "encoder", **enc)
+    yield _v("t3_deepcot_ctx", "xl", m_tokens=12, **ctx)
+    yield _v("t3_encoder_ctx", "xl_full", **ctx)
+
+
+def t4_variants() -> Iterator[Variant]:
+    """Table IV — GLUE: 12-layer Roformer-like family at the paper's
+    exact window sizes; softmax + SOFT(+ReZero+linear FFN) ablation."""
+    windows = sorted({w for ws in T4_WINDOWS.values() for w in ws})
+    for w in windows:
+        yield (f"t4_deepcot_n{w}", "deepcot", _t4_cfg(w, "deepcot", False))
+        yield (f"t4_encoder_n{w}", "encoder", _t4_cfg(w, "encoder", False))
+        yield (f"t4_fnet_n{w}", "fnet", _t4_cfg(w, "fnet", False))
+        yield (f"t4_deepcot_soft_n{w}", "deepcot", _t4_cfg(w, "deepcot", True))
+        yield (f"t4_encoder_soft_n{w}", "encoder", _t4_cfg(w, "encoder", True))
+
+
+def fig1_variants() -> Iterator[Variant]:
+    """Fig. 1 + supp. Figs. 2-3 — latency/throughput vs window size."""
+    for w in FIG1_WINDOWS:
+        base = dict(
+            d_in=64, d_model=256, n_heads=8, n_layers=6, window=w,
+            n_classes=3, batch=FIG1_BATCH, use_pallas=False,
+        )
+        yield _v(f"fig1_deepcot_n{w}", "deepcot", **base)
+        yield _v(f"fig1_encoder_n{w}", "encoder", **base)
+        yield _v(f"fig1_fnet_n{w}", "fnet", **base)
+        soft = dict(base, activation="soft", norm="rezero", ffn_act="linear")
+        yield _v(f"fig1_deepcot_soft_n{w}", "deepcot", **soft)
+        yield _v(f"fig1_encoder_soft_n{w}", "encoder", **soft)
+
+
+def serve_variants() -> Iterator[Variant]:
+    """Batched-slot executables for the serving engine: same model, batch
+    dim = slot count buckets (DESIGN.md §3, slot-based continual
+    batching).
+
+    Perf note (EXPERIMENTS.md §Perf iteration 2): serving variants lower
+    through the pure-jnp path — interpret-mode Pallas serializes its
+    B*H-program grid into an XLA while-loop, which at B=16 costs ~30x
+    wall clock on CPU PJRT. A Pallas twin of the b4 bucket is kept for
+    the ablation; kernel numerics stay pytest-verified against the same
+    oracles either way."""
+    geo = dict(
+        d_in=64, d_model=128, n_heads=8, n_layers=4, window=64, n_classes=10,
+    )
+    for b in (1, 4, 16):
+        yield _v(f"serve_deepcot_b{b}", "deepcot", batch=b, use_pallas=False, **geo)
+    yield _v("serve_deepcot_b4_pallas", "deepcot", batch=4, use_pallas=True, **geo)
+    # jnp twin of the (pallas) t1 model for the same ablation at B=1
+    yield _v(
+        "t1_deepcot_jnp", "deepcot",
+        d_in=64, d_model=128, n_heads=8, n_layers=2, window=64,
+        n_classes=20, batch=1, use_pallas=False,
+    )
+
+
+def all_variants() -> list[Variant]:
+    out: list[Variant] = []
+    for gen in (
+        tiny_variants,
+        t1_variants,
+        t2_variants,
+        t3_variants,
+        t4_variants,
+        fig1_variants,
+        serve_variants,
+    ):
+        out.extend(gen())
+    names = [n for n, _, _ in out]
+    assert len(names) == len(set(names)), "duplicate variant names"
+    return out
+
+
+GOLDEN_VARIANTS = [n for n, _, _ in tiny_variants()]
+GOLDEN_TICKS = 12

@@ -1,0 +1,108 @@
+"""AOT pipeline contracts: variant registry consistency, io_spec wiring,
+weight-file layout, HLO emission for a tiny variant, and manifest
+integrity — everything the Rust loader depends on.
+"""
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, params as P, variants
+from compile.config import ModelConfig
+
+
+def test_variant_names_unique_and_parseable():
+    vs = variants.all_variants()
+    names = [n for n, _, _ in vs]
+    assert len(names) == len(set(names))
+    for _, family, cfg in vs:
+        assert family in (
+            "deepcot", "encoder", "cotransformer", "nystrom", "fnet", "xl", "xl_full",
+        )
+        assert cfg.window > cfg.m_tokens
+
+
+def test_io_spec_state_wiring_points_at_f32_inputs():
+    for name, family, cfg in variants.all_variants():
+        ins, outs, state = aot.io_spec(cfg, family)
+        for out_idx, in_idx in state.items():
+            o = outs[int(out_idx)]
+            i = ins[in_idx]
+            assert o[1] == i[1], f"{name}: state shape mismatch {o} vs {i}"
+            assert o[2] == i[2] == "f32"
+
+
+def test_param_spec_matches_init():
+    cfg = ModelConfig(
+        d_in=8, d_model=16, n_heads=2, n_layers=2, window=6, n_classes=3, batch=1
+    )
+    for family in ("deepcot", "encoder", "fnet", "xl", "cotransformer"):
+        spec = P.param_spec(cfg, family)
+        init = P.init_params(cfg, family, seed=0)
+        assert len(spec) == len(init)
+        for (name, shape), arr in zip(spec, init):
+            assert tuple(shape) == arr.shape, name
+            assert arr.dtype == np.float32
+
+
+def test_unflatten_roundtrip():
+    cfg = ModelConfig(
+        d_in=8, d_model=16, n_heads=2, n_layers=3, window=6, n_classes=3, batch=1
+    )
+    flat = P.init_params(cfg, "deepcot", seed=1)
+    d = P.unflatten(cfg, "deepcot", tuple(jnp.asarray(a) for a in flat))
+    assert len(d["layers"]) == 3
+    np.testing.assert_array_equal(np.asarray(d["w_in"]), flat[0])
+    assert "wq" in d["layers"][0] and "a1" not in d["layers"][0]
+
+
+def test_rezero_spec_for_soft_variant():
+    cfg = ModelConfig(
+        d_in=8, d_model=16, n_heads=2, n_layers=2, window=6, n_classes=3,
+        batch=1,
+    ).soft_paper_variant()
+    names = [n for n, _ in P.param_spec(cfg, "deepcot")]
+    assert "l0.a1" in names and "l0.g1" not in names
+
+
+def test_spec_key_dedup_is_window_invariant():
+    mk = lambda w: ModelConfig(
+        d_in=8, d_model=16, n_heads=2, n_layers=2, window=w, n_classes=3, batch=1
+    )
+    assert aot.spec_key(mk(6), "deepcot", 0) == aot.spec_key(mk(12), "deepcot", 0)
+    assert aot.spec_key(mk(6), "deepcot", 0) != aot.spec_key(mk(6), "deepcot", 1)
+    # xl has extra params -> different key
+    assert aot.spec_key(mk(6), "deepcot", 0) != aot.spec_key(mk(6), "xl", 0)
+
+
+def test_build_tiny_end_to_end(tmp_path):
+    """Full aot.build for one prefix into a temp dir: manifest + hlo +
+    weights + golden must exist and be mutually consistent."""
+    aot.build(tmp_path, only="tiny_deepcot_l1")
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert "tiny_deepcot_l1" in man["variants"]
+    e = man["variants"]["tiny_deepcot_l1"]
+    hlo = (tmp_path / e["hlo"]).read_text()
+    assert "HloModule" in hlo
+    w = (tmp_path / e["weights"]).read_bytes()
+    total = sum(int(np.prod(p["shape"])) for p in e["params"])
+    assert len(w) == total * 4
+    g = json.loads((tmp_path / e["golden"]).read_text())
+    assert g["ticks"] == len(g["expected_logits"])
+    # input shapes recorded = executable arg order
+    assert [i["name"] for i in e["inputs"]] == ["tokens", "pos", "kmem", "vmem"]
+
+
+def test_manifest_on_disk_is_fresh():
+    """Guard against stale artifacts: every registered variant appears in
+    the committed manifest (run `make artifacts` when this fails)."""
+    path = pathlib.Path(__file__).resolve().parents[2] / "artifacts/manifest.json"
+    if not path.exists():
+        pytest.skip("artifacts not built")
+    man = json.loads(path.read_text())
+    registered = {n for n, _, _ in variants.all_variants()}
+    missing = registered - set(man["variants"])
+    assert not missing, f"stale manifest, missing {sorted(missing)[:5]}"

@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and activation variants — the CORE correctness
+signal for the compute layer (system prompt deliverable c).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fnet_mixing, ref, single_output, window_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.sampled_from([2, 4, 8, 16])
+rows = st.integers(min_value=1, max_value=24)
+acts = st.sampled_from(["softmax", "soft"])
+
+
+def rnd(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=st.integers(1, 6), n=rows, m=st.integers(1, 4), dh=dims, act=acts)
+def test_single_output_matches_ref(g, n, m, dh, act):
+    n = n + m  # memory must hold at least the new rows
+    q = rnd(1, g, m, dh)
+    k = rnd(2, g, n, dh)
+    v = rnd(3, g, n, dh)
+    got = single_output.single_output_attention(q, k, v, act)
+    want = []
+    for i in range(g):
+        if act == "softmax":
+            s = q[i] @ k[i].T / jnp.sqrt(jnp.float32(dh))
+            p = ref.softmax_rows(s)
+        else:
+            p = ref.soft_activation(q[i], k[i], dh)
+        want.append(p @ v[i])
+    np.testing.assert_allclose(got, jnp.stack(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=st.integers(1, 4), n=rows, dh=dims, act=acts, causal=st.booleans())
+def test_window_attention_matches_ref(g, n, dh, act, causal):
+    q = rnd(4, g, n, dh)
+    k = rnd(5, g, n, dh)
+    v = rnd(6, g, n, dh)
+    got = window_attention.window_attention(q, k, v, act, causal)
+    want = jax.vmap(
+        lambda qq, kk, vv: ref.window_attention(qq[None], kk[None], vv[None], act, causal)[0]
+    )(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=st.integers(1, 3), n=st.integers(2, 20), d=dims)
+def test_fnet_matches_ref(g, n, d):
+    x = rnd(7, g, n, d)
+    got = fnet_mixing.fnet_mixing(x)
+    want = jax.vmap(ref.fnet_mixing)(x)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_fnet_matches_numpy_fft():
+    """Our DFT-matmul formulation equals numpy's FFT real part."""
+    x = np.asarray(rnd(8, 10, 12))
+    want = np.fft.fft2(x).real
+    got = np.asarray(ref.fnet_mixing(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_soft_is_additive_over_rows():
+    """Paper Eq. 3: SOFT attention output decomposes over K/V row blocks
+    (softmax does not) — the property enabling the continual analysis."""
+    dh, n = 8, 12
+    q = rnd(9, 1, dh)  # (H=1, dh)
+    k = rnd(10, 1, n, dh)  # (H=1, n, dh)
+    v = rnd(11, 1, n, dh)
+    full = ref.single_output_attention(q, k, v, "soft")
+    left = ref.single_output_attention(q, k[:, :5], v[:, :5], "soft")
+    right = ref.single_output_attention(q, k[:, 5:], v[:, 5:], "soft")
+    np.testing.assert_allclose(full, left + right, rtol=1e-5, atol=1e-5)
+    # and the softmax activation must NOT decompose
+    full_sm = ref.single_output_attention(q, k, v, "softmax")
+    left_sm = ref.single_output_attention(q, k[:, :5], v[:, :5], "softmax")
+    right_sm = ref.single_output_attention(q, k[:, 5:], v[:, 5:], "softmax")
+    assert not np.allclose(full_sm, left_sm + right_sm, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 16), dh=dims)
+def test_softmax_rows_normalized(n, dh):
+    s = rnd(12, n, n)
+    p = np.asarray(ref.softmax_rows(s))
+    np.testing.assert_allclose(p.sum(axis=-1), 1.0, rtol=1e-5)
+    assert (p >= 0).all()
+
+
+def test_nystrom_approaches_full_attention():
+    """With landmarks == n the Nystrom approximation should be close to
+    full softmax attention."""
+    h, n, dh = 2, 16, 8
+    q = rnd(13, h, n, dh) * 0.3
+    k = rnd(14, h, n, dh) * 0.3
+    v = rnd(15, h, n, dh)
+    full = ref.window_attention(q, k, v, "softmax")
+    approx = ref.nystrom_attention(q, k, v, n_landmarks=n)
+    np.testing.assert_allclose(approx, full, rtol=0.15, atol=0.15)
+
+
+def test_iterative_pinv_inverts():
+    a = np.asarray(ref.softmax_rows(rnd(16, 2, 6, 6)))
+    z = np.asarray(ref.iterative_pinv(jnp.asarray(a), 10))
+    eye = np.eye(6)
+    for i in range(2):
+        np.testing.assert_allclose(a[i] @ z[i], eye, atol=0.05)

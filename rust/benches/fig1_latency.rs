@@ -1,0 +1,9 @@
+//! `cargo bench` target for Fig. 1 (quick mode, truncated sweep;
+//! full sweep: bench_fig1).
+use deepcot::bench_harness::tables::{run_fig1, BenchOpts};
+use deepcot::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new(&deepcot::artifacts_dir()).expect("artifacts");
+    run_fig1(&rt, &BenchOpts::quick(), &[16, 64, 256]).expect("fig1");
+}

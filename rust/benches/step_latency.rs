@@ -1,0 +1,48 @@
+//! Micro-benchmark of the L3 hot path: one continual tick, decomposed
+//! into upload / execute / feedback. The §Perf optimization loop's
+//! primary instrument.
+use std::time::Instant;
+
+use deepcot::baselines::{ContinualModel, StreamModel};
+use deepcot::runtime::{HostTensor, Runtime};
+use deepcot::util::rng::Rng;
+use deepcot::util::timing::Summary;
+
+fn main() {
+    let rt = Runtime::new(&deepcot::artifacts_dir()).expect("artifacts");
+    for variant in [
+        "t1_deepcot",
+        "t1_deepcot_jnp",
+        "t2_deepcot",
+        "serve_deepcot_b4",
+        "serve_deepcot_b4_pallas",
+        "serve_deepcot_b16",
+        "t4_deepcot_n24",
+    ] {
+        let mut m = match ContinualModel::load(&rt, variant) {
+            Ok(m) => m,
+            Err(_) => continue,
+        };
+        let cfg = m.config().clone();
+        let lane = cfg.batch * cfg.m_tokens * cfg.d_in;
+        let mut rng = Rng::new(1);
+        let mut durs = Vec::new();
+        for _ in 0..8 {
+            let t = HostTensor::new(vec![cfg.batch, cfg.m_tokens, cfg.d_in], rng.normal_vec(lane, 1.0)).unwrap();
+            m.tick(&t).unwrap();
+        }
+        for _ in 0..200 {
+            let t = HostTensor::new(vec![cfg.batch, cfg.m_tokens, cfg.d_in], rng.normal_vec(lane, 1.0)).unwrap();
+            let t0 = Instant::now();
+            m.tick(&t).unwrap();
+            durs.push(t0.elapsed());
+        }
+        let s = Summary::of(&durs);
+        println!(
+            "{variant:<22} mean={:>9.1}µs p50={:>9.1}µs p95={:>9.1}µs",
+            s.mean_s * 1e6,
+            s.p50_s * 1e6,
+            s.p95_s * 1e6
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! `cargo bench` target for Table I (quick mode; full run: bench_table1).
+use deepcot::bench_harness::tables::{run_table1, BenchOpts};
+use deepcot::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new(&deepcot::artifacts_dir()).expect("artifacts");
+    run_table1(&rt, &BenchOpts::quick()).expect("table1");
+}

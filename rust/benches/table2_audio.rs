@@ -1,0 +1,8 @@
+//! `cargo bench` target for Table II (quick mode; full run: bench_table2).
+use deepcot::bench_harness::tables::{run_table2, BenchOpts};
+use deepcot::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new(&deepcot::artifacts_dir()).expect("artifacts");
+    run_table2(&rt, &BenchOpts::quick()).expect("table2");
+}

@@ -1,0 +1,8 @@
+//! `cargo bench` target for Table III (quick mode; full run: bench_table3).
+use deepcot::bench_harness::tables::{run_table3, BenchOpts};
+use deepcot::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new(&deepcot::artifacts_dir()).expect("artifacts");
+    run_table3(&rt, &BenchOpts::quick()).expect("table3");
+}

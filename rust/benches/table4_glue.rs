@@ -1,0 +1,9 @@
+//! `cargo bench` target for Table IV (quick mode, x1 scale, 3 tasks;
+//! full grid: bench_table4).
+use deepcot::bench_harness::tables::{run_table4, BenchOpts};
+use deepcot::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::new(&deepcot::artifacts_dir()).expect("artifacts");
+    run_table4(&rt, &BenchOpts::quick(), &[1], &["CoLA", "SST-2", "MNLI"]).expect("table4");
+}

@@ -1,0 +1,268 @@
+//! Every model the paper compares, behind one [`StreamModel`] trait:
+//! per tick the serving layer feeds the newest token(s) and gets logits
+//! + attended outputs, regardless of whether the implementation is
+//! continual (Stepper), window-recompute (WindowRunner), a chained
+//! MAT-SED pipeline, or the scalar CPU engine.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ModelConfig;
+use crate::nn::encoder::ScalarDeepCoT;
+use crate::nn::params::ModelParams;
+use crate::nn::tensor::Mat;
+use crate::runtime::{HostTensor, LoadedVariant, Runtime, Stepper, TickOut, WindowRunner};
+
+/// A model being served over a stream.
+pub trait StreamModel {
+    fn name(&self) -> &str;
+    fn family(&self) -> &str;
+    fn config(&self) -> &ModelConfig;
+    /// Feed the newest m tokens: `tokens` is (B, m, d_in) flattened.
+    fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut>;
+    /// Advance the stream WITHOUT needing outputs. Continual models must
+    /// still execute (their state advances through the executable);
+    /// window models only shift their ring — the probe pipelines use
+    /// this to skip redundant O(n²·d) recomputes during warmup.
+    fn warm(&mut self, tokens: &HostTensor) -> Result<()> {
+        self.tick(tokens).map(|_| ())
+    }
+    fn reset(&mut self) -> Result<()>;
+}
+
+/// Continual PJRT model (deepcot / cotransformer / xl step variants).
+pub struct ContinualModel {
+    name: String,
+    stepper: Stepper,
+}
+
+impl ContinualModel {
+    pub fn load(rt: &Runtime, variant: &str) -> Result<Self> {
+        let v = rt.load(variant)?;
+        Ok(Self { name: variant.to_string(), stepper: Stepper::new(v)? })
+    }
+}
+
+impl StreamModel for ContinualModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn family(&self) -> &str {
+        &self.stepper.variant().entry.family
+    }
+    fn config(&self) -> &ModelConfig {
+        &self.stepper.variant().entry.config
+    }
+    fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        self.stepper.tick(tokens)
+    }
+    fn reset(&mut self) -> Result<()> {
+        self.stepper.reset()
+    }
+}
+
+/// Non-continual PJRT model: window recompute every tick.
+pub struct WindowModel {
+    name: String,
+    runner: WindowRunner,
+}
+
+impl WindowModel {
+    pub fn load(rt: &Runtime, variant: &str) -> Result<Self> {
+        let v = rt.load(variant)?;
+        Ok(Self { name: variant.to_string(), runner: WindowRunner::new(v)? })
+    }
+}
+
+impl StreamModel for WindowModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn family(&self) -> &str {
+        &self.runner.variant().entry.family
+    }
+    fn config(&self) -> &ModelConfig {
+        &self.runner.variant().entry.config
+    }
+    fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        // window models take one token per tick: (B, 1, d_in) -> (B, d_in)
+        let cfg = self.runner.variant().entry.config.clone();
+        let t = HostTensor::new(vec![cfg.batch, cfg.d_in], tokens.data.clone())?;
+        self.runner.tick(&t)
+    }
+    fn warm(&mut self, tokens: &HostTensor) -> Result<()> {
+        let cfg = self.runner.variant().entry.config.clone();
+        let t = HostTensor::new(vec![cfg.batch, cfg.d_in], tokens.data.clone())?;
+        self.runner.push_only(&t)
+    }
+    fn reset(&mut self) -> Result<()> {
+        self.runner.reset();
+        Ok(())
+    }
+}
+
+/// MAT-SED pipeline (Table III): a deep continual encoder whose
+/// attended outputs feed a continual TransformerXL context net; the
+/// coordinator chains the two executables per tick (DESIGN.md §5).
+pub struct ChainedStepModel {
+    name: String,
+    enc: Stepper,
+    ctx: Stepper,
+}
+
+impl ChainedStepModel {
+    pub fn load(rt: &Runtime, enc_variant: &str, ctx_variant: &str) -> Result<Self> {
+        let enc = Stepper::new(rt.load(enc_variant)?)?;
+        let ctx = Stepper::new(rt.load(ctx_variant)?)?;
+        let ec = &enc.variant().entry.config;
+        let cc = &ctx.variant().entry.config;
+        if ec.d_model != cc.d_in || ec.m_tokens != cc.m_tokens || ec.batch != cc.batch {
+            bail!(
+                "pipeline mismatch: enc (d={}, m={}, B={}) vs ctx (d_in={}, m={}, B={})",
+                ec.d_model, ec.m_tokens, ec.batch, cc.d_in, cc.m_tokens, cc.batch
+            );
+        }
+        Ok(Self { name: format!("{enc_variant}+{ctx_variant}"), enc, ctx })
+    }
+}
+
+impl StreamModel for ChainedStepModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn family(&self) -> &str {
+        "deepcot" // the continual pipeline's accounting family
+    }
+    fn config(&self) -> &ModelConfig {
+        &self.enc.variant().entry.config
+    }
+    fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        let mid = self.enc.tick(tokens)?;
+        self.ctx.tick(&mid.out)
+    }
+    fn reset(&mut self) -> Result<()> {
+        self.enc.reset()?;
+        self.ctx.reset()
+    }
+}
+
+/// Non-continual MAT-SED baseline: full encoder window recompute, then
+/// the XL context window recomputed over the encoder's fresh outputs.
+pub struct ChainedWindowModel {
+    name: String,
+    enc: WindowRunner,
+    ctx: Rc<LoadedVariant>,
+}
+
+impl ChainedWindowModel {
+    pub fn load(rt: &Runtime, enc_variant: &str, ctx_variant: &str) -> Result<Self> {
+        let enc = WindowRunner::new(rt.load(enc_variant)?)?;
+        let ctx = rt.load(ctx_variant)?;
+        if ctx.entry.is_step() {
+            bail!("{ctx_variant} must be a window variant");
+        }
+        let ec = &enc.variant().entry.config;
+        let cc = &ctx.entry.config;
+        if ec.d_model != cc.d_in || cc.window > ec.window || ec.batch != cc.batch {
+            bail!("pipeline mismatch enc->ctx");
+        }
+        Ok(Self { name: format!("{enc_variant}+{ctx_variant}"), enc, ctx })
+    }
+}
+
+impl StreamModel for ChainedWindowModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn family(&self) -> &str {
+        "encoder"
+    }
+    fn config(&self) -> &ModelConfig {
+        &self.enc.variant().entry.config
+    }
+    fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        let ec = self.enc.variant().entry.config.clone();
+        let t = HostTensor::new(vec![ec.batch, ec.d_in], tokens.data.clone())?;
+        let mid = self.enc.tick(&t)?; // out: (B, n_enc, d)
+        let cc = self.ctx.entry.config.clone();
+        // feed the newest n_ctx encoder outputs into the context window
+        let (b, n_enc, d) = (ec.batch, ec.window, ec.d_model);
+        let n_ctx = cc.window;
+        let mut win = vec![0.0f32; b * n_ctx * d];
+        for lane in 0..b {
+            let src = lane * n_enc * d + (n_enc - n_ctx) * d;
+            let dst = lane * n_ctx * d;
+            win[dst..dst + n_ctx * d]
+                .copy_from_slice(&mid.out.data[src..src + n_ctx * d]);
+        }
+        let mut data = Vec::new();
+        for spec in &self.ctx.entry.inputs {
+            data.push(match spec.dtype.as_str() {
+                "i32" => crate::runtime::DataInput::I32Scalar(0),
+                _ => crate::runtime::DataInput::F32(HostTensor::new(
+                    vec![b, n_ctx, d],
+                    win.clone(),
+                )?),
+            });
+        }
+        let outs = self.ctx.execute(&data)?;
+        let mut tensors = outs.tensors;
+        let out = tensors.swap_remove(1);
+        let logits = tensors.swap_remove(0);
+        Ok(TickOut { logits, out })
+    }
+    fn reset(&mut self) -> Result<()> {
+        self.enc.reset();
+        Ok(())
+    }
+}
+
+/// Pure-Rust scalar engine (the "standard implementation" CPU baseline)
+/// — single-lane (B=1) continual DeepCoT.
+pub struct ScalarModel {
+    name: String,
+    cfg: ModelConfig,
+    inner: ScalarDeepCoT,
+}
+
+impl ScalarModel {
+    pub fn load(rt: &Runtime, variant: &str) -> Result<Self> {
+        let entry = rt.manifest().variant(variant)?.clone();
+        if entry.family != "deepcot" {
+            bail!("scalar engine implements the deepcot family only");
+        }
+        let params = ModelParams::load(rt.artifacts_dir(), &entry)?;
+        Ok(Self {
+            name: format!("scalar:{variant}"),
+            cfg: entry.config.clone(),
+            inner: ScalarDeepCoT::new(entry.config, params),
+        })
+    }
+}
+
+impl StreamModel for ScalarModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn family(&self) -> &str {
+        "deepcot"
+    }
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+    fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        anyhow::ensure!(self.cfg.batch == 1, "scalar engine is single-lane");
+        let m = self.cfg.m_tokens;
+        let t = Mat::from_vec(m, self.cfg.d_in, tokens.data.clone());
+        let (logits, out) = self.inner.tick(&t)?;
+        Ok(TickOut {
+            logits: HostTensor::new(vec![1, self.cfg.n_classes], logits)?,
+            out: HostTensor::new(vec![1, m, self.cfg.d_model], out.data)?,
+        })
+    }
+    fn reset(&mut self) -> Result<()> {
+        self.inner.reset();
+        Ok(())
+    }
+}

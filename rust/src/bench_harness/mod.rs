@@ -1,0 +1,82 @@
+//! Table/figure regeneration harness (criterion replacement, offline):
+//! runtime measurement over StreamModels, feature extraction + probe
+//! pipelines, and paper-style table printing.
+
+pub mod pipeline;
+pub mod tables;
+pub mod table;
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::baselines::StreamModel;
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+use crate::util::timing::Summary;
+
+/// Measure per-tick latency of a model over a random stream.
+/// Returns (summary, tokens-per-second) where a "token" is one time
+/// step per batch lane x m_tokens (the paper's tps convention).
+pub fn measure_ticks(
+    model: &mut dyn StreamModel,
+    warmup: usize,
+    ticks: usize,
+    seed: u64,
+) -> Result<(Summary, f64)> {
+    let cfg = model.config().clone();
+    let mut rng = Rng::new(seed);
+    let lane = cfg.batch * cfg.m_tokens * cfg.d_in;
+    model.reset()?;
+    for _ in 0..warmup {
+        let t = HostTensor::new(
+            vec![cfg.batch, cfg.m_tokens, cfg.d_in],
+            rng.normal_vec(lane, 1.0),
+        )?;
+        model.tick(&t)?;
+    }
+    let mut durs = Vec::with_capacity(ticks);
+    for _ in 0..ticks {
+        let t = HostTensor::new(
+            vec![cfg.batch, cfg.m_tokens, cfg.d_in],
+            rng.normal_vec(lane, 1.0),
+        )?;
+        let t0 = Instant::now();
+        model.tick(&t)?;
+        durs.push(t0.elapsed());
+    }
+    let s = Summary::of(&durs);
+    let tokens_per_tick = (cfg.batch * cfg.m_tokens) as f64;
+    Ok((s, tokens_per_tick / s.mean_s))
+}
+
+/// Adaptive tick count: spend ~`budget` wall time per measurement, with
+/// at least `min_ticks`, so fast models get tight statistics and slow
+/// ones stay affordable.
+pub fn adaptive_ticks(probe_tick: Duration, budget: Duration, min_ticks: usize) -> usize {
+    if probe_tick.is_zero() {
+        return min_ticks.max(32);
+    }
+    ((budget.as_secs_f64() / probe_tick.as_secs_f64()) as usize).clamp(min_ticks, 2000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_ticks_clamped() {
+        assert_eq!(
+            adaptive_ticks(Duration::from_millis(100), Duration::from_secs(1), 5),
+            10
+        );
+        assert_eq!(
+            adaptive_ticks(Duration::from_secs(10), Duration::from_secs(1), 5),
+            5
+        );
+        assert_eq!(
+            adaptive_ticks(Duration::from_nanos(1), Duration::from_secs(1), 5),
+            2000
+        );
+    }
+}

@@ -1,0 +1,255 @@
+//! Feature-extraction + probe pipelines shared by the accuracy columns
+//! of Tables I-IV: stream a corpus through a model, collect attended
+//! output features, train a ridge readout on the train split, evaluate
+//! on the eval split with the table's metric.
+
+use anyhow::Result;
+
+use crate::baselines::StreamModel;
+use crate::nn::tensor::Mat;
+use crate::probe::{metrics, RidgeProbe};
+use crate::runtime::HostTensor;
+use crate::workload::{Corpus, StreamSample};
+
+/// Stream one sample through the model; return the last-token feature
+/// at every tick (t_len x d_model rows).
+pub fn stream_features(
+    model: &mut dyn StreamModel,
+    sample: &StreamSample,
+) -> Result<Vec<Vec<f32>>> {
+    stream_features_pooled(model, sample, false)
+}
+
+/// Like [`stream_features`], optionally mean-pooling the m output
+/// tokens of each tick (multi-token SED ticks carry events anywhere in
+/// the tick, not only at its newest frame).
+pub fn stream_features_pooled(
+    model: &mut dyn StreamModel,
+    sample: &StreamSample,
+    pool_tick: bool,
+) -> Result<Vec<Vec<f32>>> {
+    let cfg = model.config().clone();
+    anyhow::ensure!(cfg.batch == 1, "feature pipelines run single-lane");
+    anyhow::ensure!(cfg.d_in == sample.d_in, "d_in mismatch");
+    let m = cfg.m_tokens;
+    model.reset()?;
+    let mut feats = Vec::with_capacity(sample.t_len / m);
+    let d = cfg.d_model;
+    let mut t = 0;
+    while t + m <= sample.t_len {
+        let mut chunk = Vec::with_capacity(m * cfg.d_in);
+        for j in 0..m {
+            chunk.extend_from_slice(sample.token(t + j));
+        }
+        let tokens = HostTensor::new(vec![1, m, cfg.d_in], chunk)?;
+        let out = model.tick(&tokens)?;
+        let od = out.out.data.len();
+        if pool_tick {
+            // mean over the tick's m attended tokens
+            let mut pooled = vec![0.0f32; d];
+            let mm = od / d;
+            for j in 0..mm {
+                for (pv, &v) in pooled.iter_mut().zip(&out.out.data[j * d..(j + 1) * d]) {
+                    *pv += v;
+                }
+            }
+            pooled.iter_mut().for_each(|v| *v /= mm as f32);
+            feats.push(pooled);
+        } else {
+            // newest attended token of the tick
+            feats.push(out.out.data[od - d..].to_vec());
+        }
+        t += m;
+    }
+    Ok(feats)
+}
+
+/// Result of a probe evaluation.
+#[derive(Debug, Clone)]
+pub struct ProbeEval {
+    pub accuracy: f64,
+    pub macro_f1: f64,
+    pub frame_map: f64,
+}
+
+/// Clip-level pipeline (Tables II, IV): feature = last tick's output.
+pub fn clip_probe_eval(
+    model: &mut dyn StreamModel,
+    corpus: &Corpus,
+    train_frac: f64,
+    lambda: f32,
+) -> Result<ProbeEval> {
+    let (train, eval) = corpus.split(train_frac);
+    let d = model.config().d_model;
+    let m = model.config().m_tokens;
+    let collect = |model: &mut dyn StreamModel, set: &[&StreamSample]| -> Result<(Mat, Vec<usize>)> {
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for s in set {
+            // mean-pool the last half of ticks — a steadier clip feature
+            // than the single final token, identical across families.
+            // Early ticks only need `warm` (window models skip their
+            // O(n²·d) recompute there).
+            let n_ticks = s.t_len / m;
+            let tail_start = n_ticks / 2;
+            let cfg = model.config().clone();
+            model.reset()?;
+            let mut pooled = vec![0.0f32; d];
+            let mut pooled_n = 0usize;
+            for i in 0..n_ticks {
+                let mut chunk = Vec::with_capacity(m * cfg.d_in);
+                for j in 0..m {
+                    chunk.extend_from_slice(s.token(i * m + j));
+                }
+                let tokens = HostTensor::new(vec![1, m, cfg.d_in], chunk)?;
+                if i < tail_start {
+                    model.warm(&tokens)?;
+                } else {
+                    let out = model.tick(&tokens)?;
+                    let od = out.out.data.len();
+                    for (p, &v) in pooled.iter_mut().zip(&out.out.data[od - d..]) {
+                        *p += v;
+                    }
+                    pooled_n += 1;
+                }
+            }
+            pooled.iter_mut().for_each(|p| *p /= pooled_n.max(1) as f32);
+            rows.extend_from_slice(&pooled);
+            labels.push(s.clip_label);
+        }
+        Ok((Mat::from_vec(labels.len(), d, rows), labels))
+    };
+    let (xtr, ytr) = collect(model, &train)?;
+    let probe = RidgeProbe::train(&xtr, &ytr, corpus.n_classes, lambda)?;
+    let (xev, yev) = collect(model, &eval)?;
+    let pred: Vec<usize> = (0..xev.rows).map(|r| probe.predict(xev.row(r))).collect();
+    Ok(ProbeEval {
+        accuracy: metrics::accuracy(&pred, &yev),
+        macro_f1: metrics::macro_f1(&pred, &yev, corpus.n_classes),
+        frame_map: 0.0,
+    })
+}
+
+/// Frame-level pipeline (Table I OAD): per-tick features + frame labels,
+/// evaluated with frame-level mAP over action classes.
+pub fn frame_probe_eval(
+    model: &mut dyn StreamModel,
+    corpus: &Corpus,
+    train_frac: f64,
+    lambda: f32,
+) -> Result<ProbeEval> {
+    let (train, eval) = corpus.split(train_frac);
+    let d = model.config().d_model;
+    let m = model.config().m_tokens;
+    let collect = |model: &mut dyn StreamModel, set: &[&StreamSample]| -> Result<(Mat, Vec<usize>)> {
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for s in set {
+            for (i, f) in stream_features(model, s)?.into_iter().enumerate() {
+                rows.extend_from_slice(&f);
+                labels.push(s.frame_labels[(i + 1) * m - 1]);
+            }
+        }
+        Ok((Mat::from_vec(labels.len(), d, rows), labels))
+    };
+    let (xtr, ytr) = collect(model, &train)?;
+    let probe = RidgeProbe::train(&xtr, &ytr, corpus.n_classes, lambda)?;
+    let (xev, yev) = collect(model, &eval)?;
+    let mut pred = Vec::with_capacity(xev.rows);
+    let mut scores = Vec::with_capacity(xev.rows);
+    for r in 0..xev.rows {
+        let s = probe.scores(xev.row(r));
+        pred.push(crate::probe::argmax(&s));
+        scores.push(s);
+    }
+    Ok(ProbeEval {
+        accuracy: metrics::accuracy(&pred, &yev),
+        macro_f1: metrics::macro_f1(&pred, &yev, corpus.n_classes),
+        frame_map: metrics::frame_map(&scores, &yev, corpus.n_classes),
+    })
+}
+
+/// SED pipeline (Table III): multi-hot frame events, segment + tagging F1.
+pub struct SedEval {
+    pub segment_f1: f64,
+    pub tagging_f1: f64,
+}
+
+pub fn sed_probe_eval(
+    model: &mut dyn StreamModel,
+    corpus: &Corpus,
+    train_frac: f64,
+    lambda: f32,
+    seg_len: usize,
+) -> Result<SedEval> {
+    let (train, eval) = corpus.split(train_frac);
+    let d = model.config().d_model;
+    let m = model.config().m_tokens;
+    let n_ev = corpus.n_classes;
+    // train multi-hot probe on tick features
+    let tick_events = |s: &StreamSample, i: usize| -> u32 {
+        // all events active anywhere within the tick's m frames
+        (i * m..(i + 1) * m).fold(0u32, |a, t| a | s.frame_events[t])
+    };
+    let mut rows = Vec::new();
+    let mut targets = Vec::new();
+    for s in &train {
+        for (i, f) in stream_features_pooled(model, s, true)?.into_iter().enumerate() {
+            rows.extend_from_slice(&f);
+            let ev = tick_events(s, i);
+            for c in 0..n_ev {
+                targets.push(if ev & (1 << c) != 0 { 1.0 } else { 0.0 });
+            }
+        }
+    }
+    let n_rows = rows.len() / d;
+    let xtr = Mat::from_vec(n_rows, d, rows);
+    let ytr = Mat::from_vec(n_rows, n_ev, targets);
+    let probe = RidgeProbe::train_multihot(&xtr, &ytr, lambda)?;
+    // calibrate a per-class decision threshold on the train scores:
+    // midpoint of positive / negative class-score means (ridge scores
+    // compress toward the class prior, so a fixed 0.5 is useless for
+    // sparse events)
+    let mut thr = vec![0.0f32; n_ev];
+    {
+        let mut pos = vec![(0.0f64, 0u32); n_ev];
+        let mut neg = vec![(0.0f64, 0u32); n_ev];
+        for r in 0..n_rows {
+            let sc = probe.scores(xtr.row(r));
+            for c in 0..n_ev {
+                if ytr.at(r, c) > 0.5 {
+                    pos[c].0 += sc[c] as f64;
+                    pos[c].1 += 1;
+                } else {
+                    neg[c].0 += sc[c] as f64;
+                    neg[c].1 += 1;
+                }
+            }
+        }
+        for c in 0..n_ev {
+            let p = if pos[c].1 > 0 { pos[c].0 / pos[c].1 as f64 } else { 1.0 };
+            let n_ = if neg[c].1 > 0 { neg[c].0 / neg[c].1 as f64 } else { 0.0 };
+            thr[c] = (0.5 * (p + n_)) as f32;
+        }
+    }
+    let (mut sseg, mut stag, mut cnt) = (0.0, 0.0, 0);
+    for s in &eval {
+        let mut pred_ev = Vec::with_capacity(s.t_len / m);
+        let mut true_ev = Vec::with_capacity(s.t_len / m);
+        for (i, f) in stream_features_pooled(model, s, true)?.into_iter().enumerate() {
+            let sc = probe.scores(&f);
+            let mut mask = 0u32;
+            for (c, &v) in sc.iter().enumerate() {
+                if v > thr[c] {
+                    mask |= 1 << c;
+                }
+            }
+            pred_ev.push(mask);
+            true_ev.push(tick_events(s, i));
+        }
+        sseg += metrics::segment_f1(&pred_ev, &true_ev, n_ev, seg_len);
+        stag += metrics::tagging_f1(&pred_ev, &true_ev, n_ev);
+        cnt += 1;
+    }
+    Ok(SedEval { segment_f1: sseg / cnt.max(1) as f64, tagging_f1: stag / cnt.max(1) as f64 })
+}

@@ -1,0 +1,136 @@
+//! Paper-style table rendering (stdout + markdown file under
+//! `bench_out/`), with a paper-reference column so EXPERIMENTS.md can
+//! record measured-vs-paper side by side.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, cell) in r.iter().enumerate() {
+                w[i] = w[i].max(cell.len());
+            }
+        }
+        w
+    }
+
+    /// Fixed-width text rendering for stdout.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut s = format!("== {} ==\n", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut l = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                l.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            l.trim_end().to_string() + "\n"
+        };
+        s.push_str(&line(&self.columns, &w));
+        s.push_str(&format!("{}\n", "-".repeat(w.iter().sum::<usize>() + 2 * w.len())));
+        for r in &self.rows {
+            s.push_str(&line(r, &w));
+        }
+        s
+    }
+
+    /// GitHub-markdown rendering for bench_out/ + EXPERIMENTS.md.
+    pub fn render_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str(&format!("| {} |\n", self.columns.join(" | ")));
+        s.push_str(&format!("|{}|\n", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+
+    /// Print to stdout and append to `bench_out/<file>.md`.
+    pub fn emit(&self, out_dir: &Path, file: &str) -> Result<()> {
+        print!("{}", self.render());
+        std::fs::create_dir_all(out_dir)?;
+        let path = out_dir.join(format!("{file}.md"));
+        let mut existing = std::fs::read_to_string(&path).unwrap_or_default();
+        existing.push_str(&self.render_markdown());
+        existing.push('\n');
+        std::fs::write(&path, existing)?;
+        Ok(())
+    }
+}
+
+/// Format a speedup column like the paper ("x23.65").
+pub fn speedup(base_s: f64, this_s: f64) -> String {
+    format!("x{:.2}", base_s / this_s)
+}
+
+/// Format seconds as an adaptive human unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["model", "x"]);
+        t.row(vec!["deepcot".into(), "1".into()]);
+        t.row(vec!["enc".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("deepcot"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(speedup(10.0, 1.0), "x10.00");
+        assert!(fmt_secs(5e-7).contains("µs"));
+        assert!(fmt_secs(5e-2).contains("ms"));
+        assert!(fmt_secs(2.0).contains(" s"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Ablations from §IV-F: window-size dependence of the speedup, SOFT
+//! activation overhead, PJRT-vs-scalar engine, and slot-batch scaling.
+use anyhow::Result;
+use deepcot::baselines::{ContinualModel, ScalarModel};
+use deepcot::bench_harness::table::{fmt_secs, Table};
+use deepcot::bench_harness::tables::BenchOpts;
+use deepcot::bench_harness::{adaptive_ticks, measure_ticks};
+use deepcot::coordinator::batcher::TickPlan;
+use deepcot::coordinator::slot_stepper::SlotStepper;
+use deepcot::coordinator::slots::StreamId;
+use deepcot::runtime::Runtime;
+use deepcot::util::cli::Cli;
+use deepcot::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let args = Cli::new("bench_ablations: design-choice ablations (DESIGN.md A1)")
+        .opt("seed", "0", "seed")
+        .flag("quick", "reduced time budget")
+        .parse()?;
+    let opts = if args.has("quick") { BenchOpts::quick() } else { BenchOpts::default() };
+    let seed = args.get_u64("seed")?;
+    let rt = Runtime::new(&deepcot::artifacts_dir())?;
+
+    // A1a: SOFT vs softmax activation latency (fig1 geometry, n=64)
+    let mut t = Table::new("Ablation — SOFT activation overhead (n=64)", &["Model", "per-tick"]);
+    for v in ["fig1_deepcot_n64", "fig1_deepcot_soft_n64"] {
+        let mut m = ContinualModel::load(&rt, v)?;
+        let (s, _) = measure_ticks(&mut m, 3, 32, seed)?;
+        t.row(vec![v.into(), fmt_secs(s.mean_s)]);
+    }
+    t.emit(&opts.out_dir, "ablations")?;
+
+    // A1b: PJRT executable vs pure-Rust scalar engine (same weights)
+    let mut t = Table::new("Ablation — PJRT vs scalar engine (t1_deepcot)", &["Engine", "per-tick"]);
+    let mut pjrt = ContinualModel::load(&rt, "t1_deepcot")?;
+    let (s, _) = measure_ticks(&mut pjrt, 3, 48, seed)?;
+    t.row(vec!["PJRT (XLA AOT)".into(), fmt_secs(s.mean_s)]);
+    let mut scalar = ScalarModel::load(&rt, "t1_deepcot")?;
+    let (s2, _) = measure_ticks(&mut scalar, 1, 16, seed)?;
+    t.row(vec!["scalar Rust".into(), fmt_secs(s2.mean_s)]);
+    t.emit(&opts.out_dir, "ablations")?;
+
+    // A1c: slot-batch scaling — tokens/s at B in {1,4,16}
+    let mut t = Table::new(
+        "Ablation — slot-batch scaling (serve_deepcot_bB, full lanes)",
+        &["B", "tick latency", "tokens/s"],
+    );
+    for b in [1usize, 4, 16] {
+        let variant = rt.load(&format!("serve_deepcot_b{b}"))?;
+        let cfg = variant.entry.config.clone();
+        let mut stepper = SlotStepper::new(variant)?;
+        let mut rng = Rng::new(seed);
+        let lane = cfg.m_tokens * cfg.d_in;
+        let mk_plan = |rng: &mut Rng| TickPlan {
+            lanes: (0..b)
+                .map(|s| (s, StreamId(s as u64), rng.normal_vec(lane, 1.0), Instant::now()))
+                .collect(),
+        };
+        for _ in 0..3 {
+            let p = mk_plan(&mut rng);
+            stepper.tick(&p)?;
+        }
+        let probe = {
+            let p = mk_plan(&mut rng);
+            let t0 = Instant::now();
+            stepper.tick(&p)?;
+            t0.elapsed()
+        };
+        let iters = adaptive_ticks(probe, opts.time_budget, 8);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let p = mk_plan(&mut rng);
+            stepper.tick(&p)?;
+        }
+        let per = t0.elapsed() / iters as u32;
+        t.row(vec![
+            b.to_string(),
+            format!("{per:.2?}"),
+            format!("{:.1}", b as f64 / per.as_secs_f64()),
+        ]);
+        let _ = Duration::ZERO;
+    }
+    t.emit(&opts.out_dir, "ablations")?;
+    Ok(())
+}

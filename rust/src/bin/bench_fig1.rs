@@ -1,0 +1,20 @@
+//! Regenerates Fig. 1 + supp. Figs. 2-3 (latency/throughput vs window).
+use anyhow::Result;
+use deepcot::bench_harness::tables::{run_fig1, BenchOpts};
+use deepcot::runtime::Runtime;
+use deepcot::util::cli::Cli;
+
+fn main() -> Result<()> {
+    let args = Cli::new("bench_fig1: runtime sweep (paper Fig. 1, supp. Figs. 2-3)")
+        .opt("seed", "0", "workload seed")
+        .opt("windows", "16,32,64,128,256,512", "window sizes to sweep")
+        .flag("quick", "reduced time budget")
+        .parse()?;
+    let mut opts = if args.has("quick") { BenchOpts::quick() } else { BenchOpts::default() };
+    opts.seed = args.get_u64("seed")?;
+    let windows: Vec<usize> =
+        args.get("windows").split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    let rt = Runtime::new(&deepcot::artifacts_dir())?;
+    run_fig1(&rt, &opts, &windows)?;
+    Ok(())
+}

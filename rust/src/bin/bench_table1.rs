@@ -1,0 +1,21 @@
+//! Regenerates Table I (OAD on synthetic THUMOS14) — DESIGN.md exp T1.
+use anyhow::Result;
+use deepcot::bench_harness::tables::{run_table1, BenchOpts};
+use deepcot::runtime::Runtime;
+use deepcot::util::cli::Cli;
+
+fn main() -> Result<()> {
+    let args = Cli::new("bench_table1: OAD table (paper Table I)")
+        .opt("seed", "0", "workload seed")
+        .opt("scale", "1.0", "corpus-size multiplier")
+        .flag("quick", "reduced corpus + time budget")
+        .parse()?;
+    let mut opts = if args.has("quick") { BenchOpts::quick() } else { BenchOpts::default() };
+    opts.seed = args.get_u64("seed")?;
+    if !args.has("quick") {
+        opts.scale = args.get_f64("scale")?;
+    }
+    let rt = Runtime::new(&deepcot::artifacts_dir())?;
+    run_table1(&rt, &opts)?;
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Regenerates Table II (audio classification on synthetic GTZAN) — exp T2.
+use anyhow::Result;
+use deepcot::bench_harness::tables::{run_table2, BenchOpts};
+use deepcot::runtime::Runtime;
+use deepcot::util::cli::Cli;
+
+fn main() -> Result<()> {
+    let args = Cli::new("bench_table2: audio table (paper Table II)")
+        .opt("seed", "0", "workload seed")
+        .opt("scale", "1.0", "corpus-size multiplier")
+        .flag("quick", "reduced corpus + time budget")
+        .parse()?;
+    let mut opts = if args.has("quick") { BenchOpts::quick() } else { BenchOpts::default() };
+    opts.seed = args.get_u64("seed")?;
+    if !args.has("quick") {
+        opts.scale = args.get_f64("scale")?;
+    }
+    let rt = Runtime::new(&deepcot::artifacts_dir())?;
+    run_table2(&rt, &opts)?;
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Regenerates Table III (SED with the MAT-SED pipeline) — exp T3.
+use anyhow::Result;
+use deepcot::bench_harness::tables::{run_table3, BenchOpts};
+use deepcot::runtime::Runtime;
+use deepcot::util::cli::Cli;
+
+fn main() -> Result<()> {
+    let args = Cli::new("bench_table3: SED table (paper Table III)")
+        .opt("seed", "0", "workload seed")
+        .opt("scale", "1.0", "corpus-size multiplier")
+        .flag("quick", "reduced corpus + time budget")
+        .parse()?;
+    let mut opts = if args.has("quick") { BenchOpts::quick() } else { BenchOpts::default() };
+    opts.seed = args.get_u64("seed")?;
+    if !args.has("quick") {
+        opts.scale = args.get_f64("scale")?;
+    }
+    let rt = Runtime::new(&deepcot::artifacts_dir())?;
+    run_table3(&rt, &opts)?;
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Regenerates Table IV (GLUE-style text grid, 7 tasks x 3 scales) — exp T4.
+use anyhow::Result;
+use deepcot::bench_harness::tables::{run_table4, BenchOpts, T4_TASKS};
+use deepcot::runtime::Runtime;
+use deepcot::util::cli::Cli;
+
+fn main() -> Result<()> {
+    let args = Cli::new("bench_table4: GLUE grid (paper Table IV)")
+        .opt("seed", "0", "workload seed")
+        .opt("scale", "1.0", "corpus-size multiplier")
+        .opt("scales", "0,1,2", "window scales to run (0=x0.5,1=x1,2=x2)")
+        .opt("tasks", "all", "comma-separated task subset (e.g. CoLA,MNLI)")
+        .flag("quick", "reduced corpus + time budget")
+        .parse()?;
+    let mut opts = if args.has("quick") { BenchOpts::quick() } else { BenchOpts::default() };
+    opts.seed = args.get_u64("seed")?;
+    if !args.has("quick") {
+        opts.scale = args.get_f64("scale")?;
+    }
+    let scales: Vec<usize> =
+        args.get("scales").split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    let all: Vec<&str> = T4_TASKS.iter().map(|(t, _)| *t).collect();
+    let tasks: Vec<&str> = if args.get("tasks") == "all" {
+        all
+    } else {
+        all.into_iter()
+            .filter(|t| args.get("tasks").split(',').any(|x| x.trim() == *t))
+            .collect()
+    };
+    let rt = Runtime::new(&deepcot::artifacts_dir())?;
+    run_table4(&rt, &opts, &scales, &tasks)?;
+    Ok(())
+}

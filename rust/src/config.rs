@@ -1,0 +1,88 @@
+//! Serving configuration: defaults + CLI wiring for the engine and the
+//! bench/exp binaries.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::cli::{Args, Cli};
+
+/// Engine (coordinator) configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    /// Batched step variant to serve (e.g. "serve_deepcot_b4").
+    pub variant: String,
+    /// Flush a partial batch after this long (tail-latency bound).
+    pub batch_deadline: Duration,
+    /// Per-stream pending-token bound (backpressure).
+    pub max_queue_per_stream: usize,
+    /// Idle eviction horizon.
+    pub idle_timeout: Duration,
+    /// Engine request channel depth.
+    pub request_queue: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: crate::artifacts_dir(),
+            variant: "serve_deepcot_b4".to_string(),
+            batch_deadline: Duration::from_millis(2),
+            max_queue_per_stream: 8,
+            idle_timeout: Duration::from_secs(30),
+            request_queue: 1024,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Register the engine's options on a CLI.
+    pub fn cli(cli: Cli) -> Cli {
+        cli.opt("variant", "serve_deepcot_b4", "batched step variant to serve")
+            .opt("artifacts", "", "artifacts dir (default: $DEEPCOT_ARTIFACTS or ./artifacts)")
+            .opt("deadline-us", "2000", "partial-batch flush deadline (µs)")
+            .opt("max-queue", "8", "per-stream pending token bound")
+            .opt("idle-timeout-ms", "30000", "idle stream eviction (ms)")
+    }
+
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut cfg = EngineConfig::default();
+        if !args.get("artifacts").is_empty() {
+            cfg.artifacts_dir = args.get("artifacts").into();
+        }
+        cfg.variant = args.get("variant").to_string();
+        cfg.batch_deadline = Duration::from_micros(args.get_u64("deadline-us")?);
+        cfg.max_queue_per_stream = args.get_usize("max-queue")?;
+        cfg.idle_timeout = Duration::from_millis(args.get_u64("idle-timeout-ms")?);
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = EngineConfig::default();
+        assert!(c.batch_deadline > Duration::ZERO);
+        assert!(c.max_queue_per_stream >= 1);
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli
+            .parse_from(
+                ["--variant", "serve_deepcot_b1", "--deadline-us", "500"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        let c = EngineConfig::from_args(&args).unwrap();
+        assert_eq!(c.variant, "serve_deepcot_b1");
+        assert_eq!(c.batch_deadline, Duration::from_micros(500));
+    }
+}

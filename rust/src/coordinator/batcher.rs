@@ -1,0 +1,219 @@
+//! Tick assembly: decides *when* to run a batched step and gathers the
+//! pending token of each bound stream into its slot lane.
+//!
+//! Policy (vLLM-router-flavoured, adapted to fixed slots): flush when
+//! every occupied slot has a pending token, or when the oldest pending
+//! token has waited past the deadline. Slots without a pending token at
+//! flush time are masked (zero tokens; outputs dropped) — a stream
+//! skipping a tick does not advance its position.
+//!
+//! Pure logic with an injected clock: fully unit/property-testable
+//! without the engine thread.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::slots::StreamId;
+
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub tokens: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pending: BTreeMap<StreamId, Pending>,
+    pub deadline: Duration,
+    /// max tokens a stream may queue ahead (backpressure bound)
+    pub max_queue_per_stream: usize,
+    queued: BTreeMap<StreamId, Vec<Pending>>,
+}
+
+/// One assembled tick: lane-indexed tokens + which lanes are live.
+#[derive(Debug, Clone)]
+pub struct TickPlan {
+    /// per live lane: (slot, stream, tokens, enqueue time)
+    pub lanes: Vec<(usize, StreamId, Vec<f32>, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(deadline: Duration, max_queue_per_stream: usize) -> Self {
+        Self {
+            pending: BTreeMap::new(),
+            deadline,
+            max_queue_per_stream: max_queue_per_stream.max(1),
+            queued: BTreeMap::new(),
+        }
+    }
+
+    /// Enqueue a token vector for a stream. Returns false (rejected)
+    /// when the stream's queue is full — the backpressure signal.
+    pub fn push(&mut self, id: StreamId, tokens: Vec<f32>, now: Instant) -> bool {
+        let p = Pending { tokens, enqueued: now };
+        if self.pending.contains_key(&id) {
+            let q = self.queued.entry(id).or_default();
+            if q.len() >= self.max_queue_per_stream {
+                return false;
+            }
+            q.push(p);
+        } else {
+            self.pending.insert(id, p);
+        }
+        true
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn queued_len(&self, id: StreamId) -> usize {
+        self.pending.contains_key(&id) as usize
+            + self.queued.get(&id).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// Drop all state for a closed stream.
+    pub fn forget(&mut self, id: StreamId) {
+        self.pending.remove(&id);
+        self.queued.remove(&id);
+    }
+
+    /// Should we flush now, given the set of occupied streams?
+    pub fn ready(&self, occupied: usize, now: Instant) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        if self.pending.len() >= occupied.max(1) {
+            return true; // every bound stream has a token
+        }
+        self.pending
+            .values()
+            .any(|p| now.duration_since(p.enqueued) >= self.deadline)
+    }
+
+    /// Assemble the tick for the given slot binding and refill pending
+    /// slots from per-stream queues.
+    pub fn take_tick<F: Fn(StreamId) -> Option<usize>>(&mut self, slot_of: F) -> TickPlan {
+        let ids: Vec<StreamId> = self.pending.keys().copied().collect();
+        let mut lanes = Vec::with_capacity(ids.len());
+        for id in ids {
+            let Some(slot) = slot_of(id) else { continue };
+            let p = self.pending.remove(&id).expect("pending");
+            lanes.push((slot, id, p.tokens, p.enqueued));
+            if let Some(q) = self.queued.get_mut(&id) {
+                if !q.is_empty() {
+                    let next = q.remove(0);
+                    self.pending.insert(id, next);
+                }
+            }
+        }
+        TickPlan { lanes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn flush_when_all_streams_pending() {
+        let mut b = Batcher::new(Duration::from_millis(5), 4);
+        let now = t0();
+        assert!(!b.ready(2, now));
+        b.push(StreamId(1), vec![1.0], now);
+        assert!(!b.ready(2, now));
+        b.push(StreamId(2), vec![2.0], now);
+        assert!(b.ready(2, now));
+        let plan = b.take_tick(|id| Some(id.0 as usize - 1));
+        assert_eq!(plan.lanes.len(), 2);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn deadline_forces_partial_tick() {
+        let mut b = Batcher::new(Duration::from_millis(1), 4);
+        let now = t0();
+        b.push(StreamId(1), vec![1.0], now);
+        assert!(!b.ready(2, now));
+        assert!(b.ready(2, now + Duration::from_millis(2)));
+    }
+
+    #[test]
+    fn backpressure_bounds_queue() {
+        let mut b = Batcher::new(Duration::from_millis(1), 2);
+        let now = t0();
+        assert!(b.push(StreamId(1), vec![0.0], now)); // pending
+        assert!(b.push(StreamId(1), vec![1.0], now)); // queue 1
+        assert!(b.push(StreamId(1), vec![2.0], now)); // queue 2
+        assert!(!b.push(StreamId(1), vec![3.0], now)); // rejected
+        assert_eq!(b.queued_len(StreamId(1)), 3);
+    }
+
+    #[test]
+    fn queue_refills_pending_in_order() {
+        let mut b = Batcher::new(Duration::from_millis(1), 4);
+        let now = t0();
+        b.push(StreamId(1), vec![1.0], now);
+        b.push(StreamId(1), vec![2.0], now);
+        let p1 = b.take_tick(|_| Some(0));
+        assert_eq!(p1.lanes[0].2, vec![1.0]);
+        let p2 = b.take_tick(|_| Some(0));
+        assert_eq!(p2.lanes[0].2, vec![2.0]);
+    }
+
+    #[test]
+    fn unbound_streams_are_skipped() {
+        let mut b = Batcher::new(Duration::from_millis(1), 4);
+        b.push(StreamId(7), vec![1.0], t0());
+        let plan = b.take_tick(|_| None);
+        assert!(plan.lanes.is_empty());
+    }
+
+    /// Property: tokens per stream are delivered in FIFO order and
+    /// nothing is lost or duplicated while queues stay within bounds.
+    #[test]
+    fn prop_fifo_no_loss() {
+        prop::check("batcher-fifo", 150, |rng| {
+            let mut b = Batcher::new(Duration::from_millis(1), 8);
+            let now = t0();
+            let n_streams = rng.range(1, 4);
+            let mut sent: Vec<Vec<f32>> = vec![Vec::new(); n_streams];
+            let mut got: Vec<Vec<f32>> = vec![Vec::new(); n_streams];
+            let mut counter = 0.0f32;
+            for _ in 0..rng.range(1, 40) {
+                if rng.chance(0.6) {
+                    let s = rng.below(n_streams);
+                    if b.push(StreamId(s as u64), vec![counter], now) {
+                        sent[s].push(counter);
+                    }
+                    counter += 1.0;
+                } else {
+                    let plan = b.take_tick(|id| Some(id.0 as usize));
+                    for (_, id, toks, _) in plan.lanes {
+                        got[id.0 as usize].push(toks[0]);
+                    }
+                }
+            }
+            loop {
+                let plan = b.take_tick(|id| Some(id.0 as usize));
+                if plan.lanes.is_empty() {
+                    break;
+                }
+                for (_, id, toks, _) in plan.lanes {
+                    got[id.0 as usize].push(toks[0]);
+                }
+            }
+            for s in 0..n_streams {
+                if got[s] != sent[s] {
+                    return Err(format!("stream {s}: sent {:?} got {:?}", sent[s], got[s]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Serving metrics: lock-free-ish counters and a log-bucketed latency
+//! histogram (hand-rolled; no external metrics crates offline).
+
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram from 1µs to ~68s.
+#[derive(Debug, Clone)]
+pub struct LatencyHisto {
+    /// bucket i counts samples in [2^i, 2^(i+1)) microseconds.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 27], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Upper bound of the bucket containing quantile q (conservative).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(self.max_us)
+    }
+
+    pub fn merge(&mut self, other: &LatencyHisto) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Aggregate serving counters, owned by the engine thread.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    pub ticks: u64,
+    pub tokens_in: u64,
+    pub outputs: u64,
+    pub streams_opened: u64,
+    pub streams_closed: u64,
+    pub admission_rejects: u64,
+    pub tick_latency: LatencyHisto,
+    /// time a token waits in the batcher before its tick starts
+    pub queue_latency: LatencyHisto,
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self { tick_latency: LatencyHisto::new(), queue_latency: LatencyHisto::new(), ..Default::default() }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "ticks={} tokens={} outputs={} streams={}/{} rejects={} \
+             tick(mean={:?} p50={:?} p95={:?} max={:?}) queue(p95={:?})",
+            self.ticks,
+            self.tokens_in,
+            self.outputs,
+            self.streams_opened,
+            self.streams_closed,
+            self.admission_rejects,
+            self.tick_latency.mean(),
+            self.tick_latency.quantile(0.5),
+            self.tick_latency.quantile(0.95),
+            self.tick_latency.max(),
+            self.queue_latency.quantile(0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_order() {
+        let mut h = LatencyHisto::new();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile(0.1) <= h.quantile(0.5));
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.mean() >= Duration::from_micros(20_000));
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = LatencyHisto::new();
+        let mut b = LatencyHisto::new();
+        a.record(Duration::from_micros(5));
+        b.record(Duration::from_micros(500));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHisto::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+}

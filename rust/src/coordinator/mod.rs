@@ -1,0 +1,19 @@
+//! Layer-3 coordinator — the serving system around the AOT executables.
+//!
+//! Pieces (DESIGN.md §3):
+//! - [`slots`]   — slot-based continual batching (fixed-size DeepCoT
+//!   state ⇒ fixed batch lanes; the encoder-side KV-cache analogue of a
+//!   vLLM-style router).
+//! - [`batcher`] — tick assembly: all-slots-ready or deadline flush,
+//!   per-stream FIFO queues with backpressure.
+//! - [`router`]  — admission, placement, idle eviction.
+//! - [`slot_stepper`] — batched PJRT step with per-lane state masking.
+//! - [`engine`]  — the engine thread + `Send` client handle.
+//! - [`metrics`] — latency histograms and serving counters.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod slot_stepper;
+pub mod slots;

@@ -1,0 +1,208 @@
+//! Admission + placement: binds new streams to slots, evicts idle ones,
+//! and answers the backpressure question at the front door.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::slots::{SlotMap, StreamId};
+
+#[derive(Debug, Clone)]
+pub struct SessionInfo {
+    pub slot: usize,
+    pub opened: Instant,
+    pub last_activity: Instant,
+    pub ticks: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accepted(usize),
+    /// All slots busy and nothing evictable.
+    Rejected,
+}
+
+#[derive(Debug)]
+pub struct Router {
+    slots: SlotMap,
+    sessions: BTreeMap<StreamId, SessionInfo>,
+    next_id: u64,
+    pub idle_timeout: Duration,
+}
+
+impl Router {
+    pub fn new(capacity: usize, idle_timeout: Duration) -> Self {
+        Self {
+            slots: SlotMap::new(capacity),
+            sessions: BTreeMap::new(),
+            next_id: 1,
+            idle_timeout,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.capacity()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.occupied()
+    }
+
+    pub fn slot_of(&self, id: StreamId) -> Option<usize> {
+        self.slots.slot_of(id)
+    }
+
+    pub fn session(&self, id: StreamId) -> Option<&SessionInfo> {
+        self.sessions.get(&id)
+    }
+
+    /// Admit a new stream: use a free slot, else evict the longest-idle
+    /// session past the timeout, else reject. Returns (id, admission).
+    pub fn open(&mut self, now: Instant) -> (StreamId, Admission) {
+        let id = StreamId(self.next_id);
+        self.next_id += 1;
+        if self.slots.is_full() {
+            let evict = self
+                .sessions
+                .iter()
+                .filter(|(_, s)| now.duration_since(s.last_activity) >= self.idle_timeout)
+                .min_by_key(|(_, s)| s.last_activity)
+                .map(|(&eid, _)| eid);
+            match evict {
+                Some(eid) => {
+                    self.close(eid);
+                }
+                None => return (id, Admission::Rejected),
+            }
+        }
+        let slot = self.slots.bind(id).expect("slot free after eviction");
+        self.sessions.insert(
+            id,
+            SessionInfo { slot, opened: now, last_activity: now, ticks: 0 },
+        );
+        (id, Admission::Accepted(slot))
+    }
+
+    /// Record a completed tick for a stream.
+    pub fn touch(&mut self, id: StreamId, now: Instant) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.last_activity = now;
+            s.ticks += 1;
+        }
+    }
+
+    /// Close a stream; returns its freed slot (to be cleared).
+    pub fn close(&mut self, id: StreamId) -> Option<usize> {
+        self.sessions.remove(&id);
+        self.slots.release(id)
+    }
+
+    pub fn active_streams(&self) -> Vec<StreamId> {
+        self.sessions.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn admit_until_full_then_reject() {
+        let now = Instant::now();
+        let mut r = Router::new(2, Duration::from_secs(3600));
+        let (_, a) = r.open(now);
+        let (_, b) = r.open(now);
+        assert!(matches!(a, Admission::Accepted(_)));
+        assert!(matches!(b, Admission::Accepted(_)));
+        let (_, c) = r.open(now);
+        assert_eq!(c, Admission::Rejected);
+    }
+
+    #[test]
+    fn eviction_frees_idle_sessions() {
+        let now = Instant::now();
+        let mut r = Router::new(1, Duration::from_millis(10));
+        let (id1, _) = r.open(now);
+        // id1 idle past timeout -> evicted on next open
+        let later = now + Duration::from_millis(20);
+        let (_, adm) = r.open(later);
+        assert!(matches!(adm, Admission::Accepted(_)));
+        assert!(r.session(id1).is_none());
+    }
+
+    #[test]
+    fn touch_prevents_eviction() {
+        let now = Instant::now();
+        let mut r = Router::new(1, Duration::from_millis(10));
+        let (id1, _) = r.open(now);
+        let later = now + Duration::from_millis(20);
+        r.touch(id1, later);
+        let (_, adm) = r.open(later + Duration::from_millis(5));
+        assert_eq!(adm, Admission::Rejected);
+        assert!(r.session(id1).is_some());
+    }
+
+    #[test]
+    fn close_frees_slot() {
+        let now = Instant::now();
+        let mut r = Router::new(1, Duration::from_secs(1));
+        let (id, _) = r.open(now);
+        let slot = r.close(id);
+        assert!(slot.is_some());
+        assert_eq!(r.occupied(), 0);
+        let (_, adm) = r.open(now);
+        assert!(matches!(adm, Admission::Accepted(_)));
+    }
+
+    /// Property: ids are never reused; occupied never exceeds capacity;
+    /// every admitted stream has a consistent slot.
+    #[test]
+    fn prop_router_invariants() {
+        prop::check("router-invariants", 150, |rng| {
+            let cap = rng.range(1, 5);
+            let mut r = Router::new(cap, Duration::from_millis(rng.range(1, 30) as u64));
+            let mut t = Instant::now();
+            let mut seen_ids = std::collections::BTreeSet::new();
+            let mut live: Vec<StreamId> = Vec::new();
+            for _ in 0..rng.range(1, 60) {
+                t += Duration::from_millis(rng.range(0, 20) as u64);
+                match rng.below(3) {
+                    0 => {
+                        let (id, adm) = r.open(t);
+                        if !seen_ids.insert(id.0) {
+                            return Err(format!("id {} reused", id.0));
+                        }
+                        if let Admission::Accepted(slot) = adm {
+                            if slot >= cap {
+                                return Err("slot out of range".into());
+                            }
+                            live.push(id);
+                        }
+                    }
+                    1 => {
+                        if let Some(&id) = live.first() {
+                            r.close(id);
+                            live.retain(|&x| x != id);
+                        }
+                    }
+                    _ => {
+                        if let Some(&id) = live.last() {
+                            r.touch(id, t);
+                        }
+                    }
+                }
+                live.retain(|&id| r.session(id).is_some()); // evictions
+                if r.occupied() > cap {
+                    return Err("over capacity".into());
+                }
+                for &id in &live {
+                    let s = r.session(id).unwrap();
+                    if r.slot_of(id) != Some(s.slot) {
+                        return Err("slot bookkeeping diverged".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

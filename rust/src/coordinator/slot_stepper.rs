@@ -1,0 +1,177 @@
+//! Batched continual stepper with per-lane stream state.
+//!
+//! Executes a batch-B step variant where each batch lane is one bound
+//! stream. State is mirrored host-side (the CPU PJRT feedback path
+//! round-trips through the host anyway), which buys two serving
+//! features for free:
+//!   * masked lanes — a stream that skipped this tick keeps its previous
+//!     K/V memory (the executable's rolled output for that lane is
+//!     discarded);
+//!   * lane recycling — releasing a slot zeroes its lane, giving the
+//!     next stream a cold memory.
+//!
+//! Positions: all lanes share the engine's global tick counter. RoPE's
+//! relative-offset property makes attention invariant to a common
+//! shift, and a lane that skips ticks sees its past at the true elapsed
+//! distance — wall-clock-consistent semantics for real-time streams.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::batcher::TickPlan;
+use crate::coordinator::slots::StreamId;
+use crate::runtime::{HostTensor, LoadedVariant};
+
+pub struct SlotStepper {
+    variant: Rc<LoadedVariant>,
+    /// host mirror of each state input (index-aligned with wiring order)
+    state: Vec<HostTensor>,
+    wiring: Vec<(usize, usize)>,
+    /// batch axis of each state tensor (family-dependent)
+    batch_axis: usize,
+    pub pos: i32,
+}
+
+/// Per-lane tick results.
+pub struct LaneOut {
+    pub slot: usize,
+    pub stream: StreamId,
+    pub logits: Vec<f32>,
+    pub out: Vec<f32>,
+}
+
+impl SlotStepper {
+    pub fn new(variant: Rc<LoadedVariant>) -> Result<Self> {
+        if !variant.entry.is_step() {
+            bail!("{} is not a step variant", variant.name);
+        }
+        let wiring = variant.entry.state_wiring();
+        let batch_axis = match variant.entry.family.as_str() {
+            "deepcot" | "xl" => 1, // (L, B, H, M, dh)
+            _ => 0,                // (B, H, n-1, dh)
+        };
+        let state = wiring
+            .iter()
+            .map(|&(_, inp)| HostTensor::zeros(variant.entry.inputs[inp].shape.clone()))
+            .collect();
+        Ok(Self { variant, state, wiring, batch_axis, pos: 0 })
+    }
+
+    pub fn variant(&self) -> &Rc<LoadedVariant> {
+        &self.variant
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.variant.entry.config.batch
+    }
+
+    /// Element range(s) of one lane within a state tensor of `shape`.
+    fn lane_ranges(&self, shape: &[usize], lane: usize) -> Vec<std::ops::Range<usize>> {
+        let b = shape[self.batch_axis];
+        debug_assert!(lane < b);
+        let inner: usize = shape[self.batch_axis + 1..].iter().product();
+        let outer: usize = shape[..self.batch_axis].iter().product();
+        (0..outer)
+            .map(|o| {
+                let start = (o * b + lane) * inner;
+                start..start + inner
+            })
+            .collect()
+    }
+
+    /// Zero a lane's state (stream released / new stream admitted).
+    pub fn clear_lane(&mut self, lane: usize) {
+        for si in 0..self.state.len() {
+            let shape = self.state[si].shape.clone();
+            for r in self.lane_ranges(&shape, lane) {
+                self.state[si].data[r].iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+    }
+
+    /// Run one batched tick for the planned lanes.
+    pub fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
+        let variant = self.variant.clone(); // Rc bump
+        let entry = &variant.entry;
+        let cfg = &entry.config;
+        let (b, m, d_in) = (cfg.batch, cfg.m_tokens, cfg.d_in);
+        let lane_elems = m * d_in;
+        let mut tokens = HostTensor::zeros(vec![b, m, d_in]);
+        let mut live = vec![false; b];
+        for (slot, _, toks, _) in &plan.lanes {
+            anyhow::ensure!(*slot < b, "slot {slot} out of range (B={b})");
+            anyhow::ensure!(
+                toks.len() == lane_elems,
+                "lane tokens {} != m*d_in {}",
+                toks.len(),
+                lane_elems
+            );
+            tokens.data[slot * lane_elems..(slot + 1) * lane_elems].copy_from_slice(toks);
+            live[*slot] = true;
+        }
+        // upload inputs in manifest order — by reference, no clones
+        // (§Perf iteration 3: the old clone-per-state-tensor path copied
+        // the full batched K/V memory twice per tick)
+        let mut bufs = Vec::with_capacity(entry.inputs.len());
+        let mut state_iter = self.state.iter();
+        // non-token f32 inputs are exactly the state tensors, in wiring
+        // order (kmem then vmem ...) — the manifest contract
+        for spec in &entry.inputs {
+            bufs.push(match spec.dtype.as_str() {
+                "i32" => variant.upload_pos(self.pos)?,
+                _ => {
+                    if spec.name == "tokens" {
+                        variant.upload_f32_ref(&tokens)?
+                    } else {
+                        let st = state_iter.next().expect("state tensor order");
+                        variant.upload_f32_ref(st)?
+                    }
+                }
+            });
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let parts = variant.execute_raw_literals(&refs)?;
+        drop(refs);
+        drop(bufs);
+        // state feedback with masked-lane restore: copy the literal into
+        // the existing host mirror, then restore dead lanes from a lane
+        // backup taken beforehand (small: only dead lanes are saved)
+        for (si, &(out_idx, _)) in self.wiring.iter().enumerate() {
+            // save dead-lane slices before overwriting
+            let mut saved: Vec<(std::ops::Range<usize>, Vec<f32>)> = Vec::new();
+            let shape = self.state[si].shape.clone();
+            for lane in 0..b {
+                if !live[lane] {
+                    for r in self.lane_ranges(&shape, lane) {
+                        saved.push((r.clone(), self.state[si].data[r].to_vec()));
+                    }
+                }
+            }
+            parts[out_idx]
+                .copy_raw_to::<f32>(&mut self.state[si].data)
+                .map_err(|e| anyhow::anyhow!("state fetch: {e}"))?;
+            for (r, vals) in saved {
+                self.state[si].data[r].copy_from_slice(&vals);
+            }
+        }
+        self.pos += m as i32;
+        // scatter outputs back to lanes
+        let logits = variant.literal_to_host(0, &parts[0])?;
+        let out = variant.literal_to_host(1, &parts[1])?;
+        let logits = &logits;
+        let out = &out;
+        let c = *logits.shape.last().unwrap();
+        let od: usize = out.shape[1..].iter().product();
+        let mut res = Vec::with_capacity(plan.lanes.len());
+        for (slot, stream, _, _) in &plan.lanes {
+            res.push(LaneOut {
+                slot: *slot,
+                stream: *stream,
+                logits: logits.data[slot * c..(slot + 1) * c].to_vec(),
+                out: out.data[slot * od..(slot + 1) * od].to_vec(),
+            });
+        }
+        Ok(res)
+    }
+}

@@ -1,0 +1,153 @@
+//! Slot-based continual batching (DESIGN.md §3).
+//!
+//! DeepCoT state per stream is *fixed-size* O(n·d·l) — unlike growing
+//! decoder KV caches — so streams bind to fixed slots of a batched
+//! executable: batch dim = slot count, inactive slots run masked (their
+//! lanes carry zero tokens; their outputs are dropped). This is the
+//! encoder-side analogue of vLLM's paged batching, radically simplified
+//! by the fixed state footprint.
+
+use std::collections::BTreeMap;
+
+/// Stable stream identifier handed to clients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StreamId(pub u64);
+
+/// Assignment of streams to batch lanes.
+#[derive(Debug, Clone)]
+pub struct SlotMap {
+    capacity: usize,
+    free: Vec<usize>,
+    by_stream: BTreeMap<StreamId, usize>,
+    by_slot: Vec<Option<StreamId>>,
+}
+
+impl SlotMap {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            free: (0..capacity).rev().collect(),
+            by_stream: BTreeMap::new(),
+            by_slot: vec![None; capacity],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    /// Bind a stream to a free slot; None when full (admission reject /
+    /// backpressure upstream).
+    pub fn bind(&mut self, id: StreamId) -> Option<usize> {
+        if self.by_stream.contains_key(&id) {
+            return self.by_stream.get(&id).copied();
+        }
+        let slot = self.free.pop()?;
+        self.by_stream.insert(id, slot);
+        self.by_slot[slot] = Some(id);
+        Some(slot)
+    }
+
+    /// Release a stream's slot; returns the freed slot index.
+    pub fn release(&mut self, id: StreamId) -> Option<usize> {
+        let slot = self.by_stream.remove(&id)?;
+        self.by_slot[slot] = None;
+        self.free.push(slot);
+        Some(slot)
+    }
+
+    pub fn slot_of(&self, id: StreamId) -> Option<usize> {
+        self.by_stream.get(&id).copied()
+    }
+
+    pub fn stream_at(&self, slot: usize) -> Option<StreamId> {
+        self.by_slot.get(slot).copied().flatten()
+    }
+
+    pub fn streams(&self) -> impl Iterator<Item = (StreamId, usize)> + '_ {
+        self.by_stream.iter().map(|(&id, &s)| (id, s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn bind_release_roundtrip() {
+        let mut m = SlotMap::new(2);
+        let a = m.bind(StreamId(1)).unwrap();
+        let b = m.bind(StreamId(2)).unwrap();
+        assert_ne!(a, b);
+        assert!(m.is_full());
+        assert!(m.bind(StreamId(3)).is_none());
+        assert_eq!(m.release(StreamId(1)), Some(a));
+        assert_eq!(m.bind(StreamId(3)), Some(a));
+    }
+
+    #[test]
+    fn bind_is_idempotent() {
+        let mut m = SlotMap::new(2);
+        let a = m.bind(StreamId(9)).unwrap();
+        assert_eq!(m.bind(StreamId(9)), Some(a));
+        assert_eq!(m.occupied(), 1);
+    }
+
+    #[test]
+    fn release_unknown_is_none() {
+        let mut m = SlotMap::new(1);
+        assert!(m.release(StreamId(5)).is_none());
+    }
+
+    /// Property: under any operation sequence, (1) no two streams share
+    /// a slot, (2) occupied + free == capacity, (3) by_slot and
+    /// by_stream stay mutually consistent.
+    #[test]
+    fn prop_slotmap_invariants() {
+        prop::check("slotmap-invariants", 200, |rng| {
+            let cap = rng.range(1, 9);
+            let mut m = SlotMap::new(cap);
+            for step in 0..rng.range(1, 60) {
+                let id = StreamId(rng.below(12) as u64);
+                if rng.chance(0.55) {
+                    m.bind(id);
+                } else {
+                    m.release(id);
+                }
+                // invariant checks
+                let mut seen = std::collections::BTreeSet::new();
+                for (id, slot) in m.streams() {
+                    if slot >= cap {
+                        return Err(format!("step {step}: slot {slot} >= cap {cap}"));
+                    }
+                    if !seen.insert(slot) {
+                        return Err(format!("step {step}: slot {slot} double-booked"));
+                    }
+                    if m.stream_at(slot) != Some(id) {
+                        return Err(format!("step {step}: by_slot/by_stream diverge"));
+                    }
+                }
+                if m.occupied() + (cap - m.occupied()) != cap {
+                    return Err("capacity accounting broke".into());
+                }
+                if m.occupied() != seen.len() {
+                    return Err(format!(
+                        "step {step}: occupied {} != distinct slots {}",
+                        m.occupied(),
+                        seen.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

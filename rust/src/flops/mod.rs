@@ -1,0 +1,223 @@
+//! Analytic FLOPs accounting, reproducing the paper's efficiency columns.
+//!
+//! Conventions (matching the Continual-Transformer / Continual-Nystrom
+//! papers the tables cite, verified against Table I's published numbers:
+//! 16.92M for the 2-layer full encoder at n=64, d=1024): one
+//! multiply-accumulate = one FLOP; activation entries ~2 ops each.
+//! Tables I and II count **attention-block** operations only ("FLOPs
+//! refer to the number of operations corresponding to the attention
+//! blocks"); Table III counts the whole model. Both accountings are
+//! exposed via [`FlopsMode`].
+//!
+//! All counts are *per stream tick* (one new token arriving, m tokens
+//! for m-output variants), the paper's continual-inference unit.
+
+use crate::manifest::ModelConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlopsMode {
+    /// Attention blocks only (Tables I, II, IV).
+    AttentionOnly,
+    /// Attention + projections + FFN + norms (Table III).
+    FullModel,
+}
+
+/// Per-tick FLOPs of the *attention product* of one full window layer:
+/// scores QK^T (n²·d MACs) + apply PV (n²·d) + softmax (~2·n²·h).
+fn window_attention_flops(n: u64, d: u64, h: u64) -> u64 {
+    n * n * d + n * n * d + 2 * n * n * h
+}
+
+/// Single-Output attention for m new tokens against an n-row memory:
+/// scores (m·n·d) + apply (m·n·d) + memory roll/update (m·n·d, counted
+/// by the Continual-Transformers accounting) + activation (~2·m·n·h).
+/// Reproduces Table I's 0.40M for 2 layers at n=64, d=1024.
+fn single_output_attention_flops(n: u64, m: u64, d: u64, h: u64) -> u64 {
+    3 * m * n * d + 2 * m * n * h
+}
+
+/// QKV + output projections for t tokens: 4 matmuls (t x d x d).
+fn projection_flops(t: u64, d: u64) -> u64 {
+    4 * t * d * d
+}
+
+/// FFN for t tokens: two matmuls (d x f) + activation.
+fn ffn_flops(t: u64, d: u64, f: u64) -> u64 {
+    2 * t * d * f + 8 * t * f
+}
+
+/// LayerNorm / ReZero per t tokens (cheap; counted in full-model mode).
+fn norm_flops(t: u64, d: u64) -> u64 {
+    2 * 5 * t * d
+}
+
+/// Nystrom attention with L landmarks over an n window (full recompute):
+/// F (2·n·L·d), A (2·L²·d), B (2·L·n·d), pinv (6 iters x ~3 L³·h mults),
+/// apply (2·n·L·d + 2·L·n·d), softmaxes.
+fn nystrom_attention_flops(n: u64, d: u64, h: u64, l: u64) -> u64 {
+    let pinv = 6 * 3 * l * l * l * h;
+    n * l * d + l * l * d + l * n * d + pinv + n * l * d + l * n * d
+        + 2 * h * (n * l + l * l + l * n)
+}
+
+/// FNet mixing per layer per tick, using the paper's O(n log n + n d log d)
+/// FFT op count (the TPU lowering uses DFT matmuls, but the paper's
+/// asymptotic comparison is what the tables report — DESIGN.md §4).
+fn fnet_mixing_flops(n: u64, d: u64) -> u64 {
+    let log_n = 64 - (n.max(2) - 1).leading_zeros() as u64;
+    let log_d = 64 - (d.max(2) - 1).leading_zeros() as u64;
+    // complex butterfly ~ 5 MACs per point per stage, both dims
+    5 * n * d * log_n + 5 * n * d * log_d
+}
+
+/// Per-tick FLOPs for a model family at a given geometry.
+pub fn per_tick(family: &str, cfg: &ModelConfig, mode: FlopsMode) -> u64 {
+    let n = cfg.window as u64;
+    let m = cfg.m_tokens as u64;
+    let d = cfg.d_model as u64;
+    let h = cfg.n_heads as u64;
+    let l = cfg.n_layers as u64;
+    let f = cfg.d_ffn() as u64;
+    let lm = cfg.n_landmarks.max(1) as u64;
+    let b = cfg.batch as u64;
+
+    let attn: u64 = match family {
+        // the paper's model: every layer is Single-Output
+        "deepcot" | "xl" => l * single_output_attention_flops(n, m, d, h),
+        // regular encoder: full window attention every tick, every layer
+        "encoder" | "xl_full" => l * window_attention_flops(n, d, h),
+        // Hedegaard: retroactive layer-0 (the continual accounting:
+        // one new score row + n retroactive output updates ~ O(n·d))
+        // then full window layers in between, Single-Output last.
+        "cotransformer" => {
+            // retroactive refresh: one new score row (n·d), n output
+            // updates (n·d), rolling updates (2·n·d), activations
+            let retro = 4 * n * d + 4 * n * h;
+            let middle = l.saturating_sub(2) * window_attention_flops(n, d, h);
+            retro + middle + single_output_attention_flops(n, 1, d, h)
+        }
+        "nystrom" => l * nystrom_attention_flops(n, d, h, lm),
+        // Continual Nystromformer: fixed/delayed landmarks remove the
+        // pinv and most of the B recompute per tick.
+        "conystrom" => {
+            l * (n * lm * d / (n / lm).max(1) + lm * d + n * lm * d / 4
+                + 2 * h * (lm + n))
+        }
+        "fnet" => l * fnet_mixing_flops(n, d),
+        other => panic!("unknown family {other}"),
+    };
+    let per_lane = match mode {
+        FlopsMode::AttentionOnly => attn,
+        FlopsMode::FullModel => {
+            // tokens entering projections/FFN per tick: m for continual
+            // families, the whole window for recompute families
+            let t = match family {
+                "deepcot" | "xl" => m,
+                "cotransformer" => 1 + n, // newest proj + last-layer reproj
+                _ => n,
+            };
+            let proj = if family == "fnet" { 0 } else { projection_flops(t, d) };
+            attn + l * (proj + ffn_flops(t, d, f) + 2 * norm_flops(t, d))
+                + 2 * t * cfg.d_in as u64 * d // input embed
+                + 2 * cfg.n_classes as u64 * d // readout
+        }
+    };
+    b * per_lane
+}
+
+/// Pretty-print with the unit the paper's table uses.
+pub fn format_flops(f: u64) -> String {
+    if f >= 1_000_000_000 {
+        format!("{:.3} G", f as f64 / 1e9)
+    } else if f >= 1_000_000 {
+        format!("{:.2} M", f as f64 / 1e6)
+    } else {
+        format!("{:.1} K", f as f64 / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: usize, d: usize, h: usize, l: usize, m: usize) -> ModelConfig {
+        ModelConfig {
+            d_in: d,
+            d_model: d,
+            n_heads: h,
+            n_layers: l,
+            window: n,
+            m_tokens: m,
+            ffn_mult: 4,
+            n_classes: 10,
+            batch: 1,
+            activation: "softmax".into(),
+            norm: "layernorm".into(),
+            ffn_act: "gelu".into(),
+            pos: "rope".into(),
+            n_landmarks: 16,
+            use_pallas: true,
+        }
+    }
+
+    #[test]
+    fn deepcot_linear_in_window() {
+        let base = per_tick("deepcot", &cfg(64, 128, 8, 2, 1), FlopsMode::AttentionOnly);
+        let twice = per_tick("deepcot", &cfg(128, 128, 8, 2, 1), FlopsMode::AttentionOnly);
+        let ratio = twice as f64 / base as f64;
+        assert!((ratio - 2.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn encoder_quadratic_in_window() {
+        let base = per_tick("encoder", &cfg(64, 128, 8, 2, 1), FlopsMode::AttentionOnly);
+        let twice = per_tick("encoder", &cfg(128, 128, 8, 2, 1), FlopsMode::AttentionOnly);
+        let ratio = twice as f64 / base as f64;
+        assert!((ratio - 4.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    /// Table I at the paper's own geometry (n=64, d=1024, 2 layers,
+    /// 16 landmarks): our accounting should land on the paper's numbers
+    /// — encoder 16.92M, Nystromformer 9.42M, DeepCoT 0.40M.
+    #[test]
+    fn table1_matches_paper_numbers() {
+        let c = cfg(64, 1024, 8, 2, 1);
+        let enc = per_tick("encoder", &c, FlopsMode::AttentionOnly) as f64;
+        let cot = per_tick("cotransformer", &c, FlopsMode::AttentionOnly) as f64;
+        let dc = per_tick("deepcot", &c, FlopsMode::AttentionOnly) as f64;
+        let nys = per_tick("nystrom", &c, FlopsMode::AttentionOnly) as f64;
+        assert!(dc < cot && cot < enc, "dc {dc} cot {cot} enc {enc}");
+        // paper: 16.92M full attention
+        assert!((enc / 16.92e6 - 1.0).abs() < 0.05, "enc {enc}");
+        // paper: 9.42M Nystromformer (ours counts the pinv slightly differently)
+        assert!((nys / 9.42e6 - 1.0).abs() < 0.15, "nys {nys}");
+        // paper: 0.40M DeepCoT -> ratio enc/dc = 42x
+        assert!((enc / dc - 42.0).abs() < 8.0, "enc/dc = {}", enc / dc);
+    }
+
+    #[test]
+    fn full_model_exceeds_attention_only() {
+        let c = cfg(64, 128, 8, 2, 1);
+        for fam in ["deepcot", "encoder", "cotransformer", "nystrom", "fnet"] {
+            assert!(
+                per_tick(fam, &c, FlopsMode::FullModel)
+                    > per_tick(fam, &c, FlopsMode::AttentionOnly),
+                "{fam}"
+            );
+        }
+    }
+
+    #[test]
+    fn m_tokens_scale_deepcot() {
+        let one = per_tick("deepcot", &cfg(60, 256, 8, 10, 1), FlopsMode::AttentionOnly);
+        let twelve = per_tick("deepcot", &cfg(60, 256, 8, 10, 12), FlopsMode::AttentionOnly);
+        assert!(twelve > 10 * one && twelve < 14 * one);
+    }
+
+    #[test]
+    fn format_units() {
+        assert_eq!(format_flops(1_500), "1.5 K");
+        assert_eq!(format_flops(2_500_000), "2.50 M");
+        assert_eq!(format_flops(41_000_000_000), "41.000 G");
+    }
+}

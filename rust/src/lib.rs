@@ -1,0 +1,46 @@
+//! DeepCoT — Deep Continual Transformers for real-time inference on data
+//! streams (Carreto Picón et al., 2025), reproduced as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! Layer 3 (this crate) owns the request path: stream sessions, slot-based
+//! continual batching, the tick scheduler, and per-stream Key/Value
+//! memories held as PJRT buffers. Layers 2/1 (JAX model + Pallas kernels)
+//! run only at build time (`make artifacts`) and ship as AOT-compiled HLO
+//! text loaded by [`runtime`].
+//!
+//! Quick tour:
+//! - [`runtime`] — PJRT client, manifest-driven executable loading,
+//!   continual [`runtime::Stepper`]s with device-resident state.
+//! - [`coordinator`] — the serving engine: router, slot batcher, tick
+//!   scheduler, metrics.
+//! - [`baselines`] — the paper's comparison systems behind one
+//!   [`baselines::StreamModel`] trait (regular encoder, Continual
+//!   Transformer, Nyströmformer, FNet, DeepCoT, DeepCoT-XL, MAT-SED
+//!   pipeline).
+//! - [`nn`] — pure-Rust scalar reference engine (oracle + CPU baseline).
+//! - [`flops`] — the paper's analytic FLOPs accounting.
+//! - [`workload`] — synthetic stream corpora standing in for THUMOS14 /
+//!   GTZAN / URBAN-SED / GLUE (DESIGN.md §2).
+//! - [`probe`] — ridge/logistic readouts + metrics (accuracy, mAP, F1).
+//! - [`bench_harness`] — regenerates every paper table and figure.
+
+pub mod baselines;
+pub mod util;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod flops;
+pub mod manifest;
+pub mod nn;
+pub mod probe;
+pub mod runtime;
+pub mod workload;
+
+/// Locate the artifacts directory: `$DEEPCOT_ARTIFACTS` or
+/// `<crate root>/artifacts` (the `make artifacts` output).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("DEEPCOT_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,98 @@
+//! `deepcot-serve` — the leader entrypoint: starts the serving engine on
+//! a batched DeepCoT variant and drives a demonstration load (or, with
+//! `--list`, shows the available AOT variants).
+//!
+//! Python never runs here: the binary consumes `artifacts/` produced by
+//! `make artifacts` and serves entirely from Rust + PJRT.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use deepcot::config::EngineConfig;
+use deepcot::coordinator::engine::EngineThread;
+use deepcot::manifest::Manifest;
+use deepcot::util::cli::Cli;
+use deepcot::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let cli = EngineConfig::cli(Cli::new(
+        "deepcot-serve: stream-inference coordinator for DeepCoT AOT artifacts",
+    ))
+    .opt("streams", "4", "number of synthetic client streams")
+    .opt("ticks", "64", "tokens each client sends")
+    .opt("seed", "0", "workload seed")
+    .flag("list", "list manifest variants and exit");
+    let args = cli.parse()?;
+    let cfg = EngineConfig::from_args(&args)?;
+
+    if args.has("list") {
+        let (m, _) = Manifest::load(&cfg.artifacts_dir)?;
+        println!(
+            "{:<28} {:>14} {:>6} {:>4} {:>6} {:>3} {:>6}",
+            "variant", "family", "layers", "B", "window", "m", "d"
+        );
+        for (name, e) in &m.variants {
+            let c = &e.config;
+            println!(
+                "{:<28} {:>14} {:>6} {:>4} {:>6} {:>3} {:>6}",
+                name, e.family, c.n_layers, c.batch, c.window, c.m_tokens, c.d_model
+            );
+        }
+        return Ok(());
+    }
+
+    let n_streams = args.get_usize("streams")?;
+    let ticks = args.get_usize("ticks")?;
+    let seed = args.get_u64("seed")?;
+
+    let (manifest, _) = Manifest::load(&cfg.artifacts_dir)?;
+    let mc = manifest.variant(&cfg.variant)?.config.clone();
+    let lane = mc.m_tokens * mc.d_in;
+
+    eprintln!("starting engine on {} ...", cfg.variant);
+    let engine = EngineThread::spawn(cfg.clone())?;
+    let handle = engine.handle();
+    eprintln!("engine ready; driving {n_streams} streams x {ticks} ticks");
+
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for s in 0..n_streams {
+        let h = engine.handle();
+        clients.push(std::thread::spawn(move || -> Result<(u64, Duration)> {
+            let mut rng = Rng::new(seed ^ ((s as u64) << 17));
+            let (id, rx) = h.open()?;
+            let mut got = 0u64;
+            let mut lat = Duration::ZERO;
+            for _ in 0..ticks {
+                let sent = Instant::now();
+                h.push(id, rng.normal_vec(lane, 1.0))?;
+                let _out = rx.recv_timeout(Duration::from_secs(30))?;
+                lat += sent.elapsed();
+                got += 1;
+            }
+            h.close(id);
+            Ok((got, lat))
+        }));
+    }
+    let mut total = 0u64;
+    let mut lat_sum = Duration::ZERO;
+    for c in clients {
+        let (got, lat) = c.join().expect("client thread")?;
+        total += got;
+        lat_sum += lat;
+    }
+    let wall = t0.elapsed();
+    let metrics = handle.metrics()?;
+    println!("== deepcot-serve summary ==");
+    println!("streams={n_streams} ticks/stream={ticks} outputs={total}");
+    println!(
+        "wall={:.2?}  throughput={:.1} tokens/s  mean client latency={:.2?}",
+        wall,
+        total as f64 / wall.as_secs_f64(),
+        lat_sum / total.max(1) as u32
+    );
+    println!("engine: {}", metrics.report());
+    engine.shutdown()?;
+    Ok(())
+}

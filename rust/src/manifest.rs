@@ -1,0 +1,264 @@
+//! Typed view of `artifacts/manifest.json` — the contract emitted by
+//! `python/compile/aot.py`. Field order of `params` and `inputs` is the
+//! exact argument order of the AOT executables.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Mirror of `python/compile/config.py::ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub d_in: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub window: usize,
+    pub m_tokens: usize,
+    pub ffn_mult: usize,
+    pub n_classes: usize,
+    pub batch: usize,
+    pub activation: String,
+    pub norm: String,
+    pub ffn_act: String,
+    pub pos: String,
+    pub n_landmarks: usize,
+    pub use_pallas: bool,
+}
+
+impl ModelConfig {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            d_in: v.req("d_in")?.as_usize()?,
+            d_model: v.req("d_model")?.as_usize()?,
+            n_heads: v.req("n_heads")?.as_usize()?,
+            n_layers: v.req("n_layers")?.as_usize()?,
+            window: v.req("window")?.as_usize()?,
+            m_tokens: v.req("m_tokens")?.as_usize()?,
+            ffn_mult: v.req("ffn_mult")?.as_usize()?,
+            n_classes: v.req("n_classes")?.as_usize()?,
+            batch: v.req("batch")?.as_usize()?,
+            activation: v.req("activation")?.as_str()?.to_string(),
+            norm: v.req("norm")?.as_str()?.to_string(),
+            ffn_act: v.req("ffn_act")?.as_str()?.to_string(),
+            pos: v.req("pos")?.as_str()?.to_string(),
+            n_landmarks: v.req("n_landmarks")?.as_usize()?,
+            use_pallas: v.req("use_pallas")?.as_bool()?,
+        })
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn d_ffn(&self) -> usize {
+        self.ffn_mult * self.d_model
+    }
+
+    /// Rows kept in each layer's K/V memory (`n - m`).
+    pub fn mem_len(&self) -> usize {
+        self.window - self.m_tokens
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub family: String,
+    pub config: ModelConfig,
+    pub hlo: String,
+    pub weights: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Output index -> input index feedback wiring for continual state.
+    pub state: BTreeMap<usize, usize>,
+    pub params: Vec<ParamSpec>,
+    pub golden: Option<String>,
+}
+
+impl VariantEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let mut state = BTreeMap::new();
+        for (k, idx) in v.req("state")?.as_obj()? {
+            state.insert(
+                k.parse::<usize>().context("state output index")?,
+                idx.as_usize()?,
+            );
+        }
+        let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        let params = v
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p.req("shape")?.as_usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            family: v.req("family")?.as_str()?.to_string(),
+            config: ModelConfig::from_json(v.req("config")?)?,
+            hlo: v.req("hlo")?.as_str()?.to_string(),
+            weights: v.req("weights")?.as_str()?.to_string(),
+            inputs: parse_specs("inputs")?,
+            outputs: parse_specs("outputs")?,
+            state,
+            params,
+            golden: v.get("golden").and_then(|g| g.as_str().ok().map(String::from)),
+        })
+    }
+
+    /// (output index, input index) feedback pairs, sorted by output.
+    pub fn state_wiring(&self) -> Vec<(usize, usize)> {
+        self.state.iter().map(|(&o, &i)| (o, i)).collect()
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+
+    /// True for continual-step families (state feedback present).
+    pub fn is_step(&self) -> bool {
+        !self.state.is_empty()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seed: u64,
+    pub variants: BTreeMap<String, VariantEntry>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<(Self, PathBuf)> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let m = Self::parse(&text).context("parsing manifest.json")?;
+        Ok((m, artifacts_dir.to_path_buf()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut variants = BTreeMap::new();
+        for (name, entry) in v.req("variants")?.as_obj()? {
+            variants.insert(
+                name.clone(),
+                VariantEntry::from_json(entry)
+                    .with_context(|| format!("variant {name}"))?,
+            );
+        }
+        Ok(Self { seed: v.req("seed")?.as_i64()? as u64, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantEntry> {
+        match self.variants.get(name) {
+            Some(v) => Ok(v),
+            None => bail!(
+                "variant {name:?} not in manifest (have: {:?} ...)",
+                self.variants.keys().take(8).collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    /// All variant names with a given prefix (experiment groups).
+    pub fn with_prefix(&self, prefix: &str) -> Vec<String> {
+        self.variants
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "seed": 0,
+      "variants": {
+        "x": {
+          "family": "deepcot",
+          "config": {"d_in":8,"d_model":16,"n_heads":2,"n_layers":2,
+            "window":6,"m_tokens":1,"ffn_mult":4,"n_classes":3,"batch":2,
+            "activation":"softmax","norm":"layernorm","ffn_act":"gelu",
+            "pos":"rope","n_landmarks":0,"use_pallas":true},
+          "hlo": "hlo/x.hlo.txt",
+          "weights": "weights/k.bin",
+          "inputs": [
+            {"name":"tokens","shape":[2,1,8],"dtype":"f32"},
+            {"name":"pos","shape":[],"dtype":"i32"},
+            {"name":"kmem","shape":[2,2,2,5,8],"dtype":"f32"},
+            {"name":"vmem","shape":[2,2,2,5,8],"dtype":"f32"}],
+          "outputs": [
+            {"name":"logits","shape":[2,3],"dtype":"f32"},
+            {"name":"out","shape":[2,1,16],"dtype":"f32"},
+            {"name":"kmem_next","shape":[2,2,2,5,8],"dtype":"f32"},
+            {"name":"vmem_next","shape":[2,2,2,5,8],"dtype":"f32"}],
+          "state": {"2": 2, "3": 3},
+          "params": [{"name":"w_in","shape":[8,16]},{"name":"b_in","shape":[16]}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.variant("x").unwrap();
+        assert_eq!(e.state_wiring(), vec![(2, 2), (3, 3)]);
+        assert!(e.is_step());
+        assert_eq!(e.config.mem_len(), 5);
+        assert_eq!(e.config.d_head(), 8);
+        assert_eq!(e.inputs[2].elems(), 2 * 2 * 2 * 5 * 8);
+        assert_eq!(e.total_param_elems(), 8 * 16 + 16);
+        assert_eq!(e.inputs[1].elems(), 1);
+        assert!(e.golden.is_none());
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.variant("nope").is_err());
+        assert_eq!(m.with_prefix("x"), vec!["x".to_string()]);
+    }
+}

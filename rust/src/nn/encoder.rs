@@ -1,0 +1,228 @@
+//! Scalar (pure-Rust) encoder forward passes — an oracle independent of
+//! both JAX and PJRT, plus the "standard implementation" CPU baseline
+//! used in EXPERIMENTS.md runtime comparisons.
+//!
+//! Mirrors `python/compile/model.py` numerics exactly: post-norm
+//! residuals (LayerNorm or ReZero), tanh-GELU or linear FFN, softmax or
+//! SOFT attention, interleaved RoPE.
+
+use anyhow::Result;
+
+use crate::manifest::ModelConfig;
+use crate::nn::params::{LayerParams, ModelParams, Norm};
+use crate::nn::rope::apply_rope_inplace;
+use crate::nn::tensor::{dot, gelu, layer_norm_inplace, softmax_inplace, sqdist, Mat};
+
+/// x (T x d) -> q/k/v (T x d) with bias.
+fn project(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
+    let mut out = x.matmul(w);
+    out.add_row(b);
+    out
+}
+
+/// Split row-major (T x d) into per-head (T x dh) slices on the fly.
+#[inline]
+fn head_slice(m: &Mat, t: usize, h: usize, dh: usize) -> &[f32] {
+    &m.row(t)[h * dh..(h + 1) * dh]
+}
+
+fn residual(cfg: &ModelConfig, lp: &LayerParams, x: &mut Mat, sub: &Mat, idx: usize) {
+    match (&lp.norm, idx) {
+        (Norm::LayerNorm { g1, be1, .. }, 0) => {
+            for t in 0..x.rows {
+                for c in 0..x.cols {
+                    *x.at_mut(t, c) += sub.at(t, c);
+                }
+                layer_norm_inplace(x.row_mut(t), g1, be1);
+            }
+        }
+        (Norm::LayerNorm { g2, be2, .. }, _) => {
+            for t in 0..x.rows {
+                for c in 0..x.cols {
+                    *x.at_mut(t, c) += sub.at(t, c);
+                }
+                layer_norm_inplace(x.row_mut(t), g2, be2);
+            }
+        }
+        (Norm::ReZero { a1, a2 }, _) => {
+            let a = if idx == 0 { *a1 } else { *a2 };
+            for t in 0..x.rows {
+                for c in 0..x.cols {
+                    *x.at_mut(t, c) += a * sub.at(t, c);
+                }
+            }
+        }
+    }
+    let _ = cfg;
+}
+
+fn ffn(cfg: &ModelConfig, lp: &LayerParams, x: &Mat) -> Mat {
+    let mut h = project(x, &lp.w1, &lp.b1);
+    if cfg.ffn_act == "gelu" {
+        for v in h.data.iter_mut() {
+            *v = gelu(*v);
+        }
+    }
+    project(&h, &lp.w2, &lp.b2)
+}
+
+/// Attention weights of one query row against a K matrix (rows x dh).
+fn attn_weights(cfg: &ModelConfig, q: &[f32], keys: &Mat) -> Vec<f32> {
+    let dh = q.len() as f32;
+    let scale = 1.0 / dh.sqrt();
+    let mut s: Vec<f32> = (0..keys.rows).map(|j| dot(q, keys.row(j)) * scale).collect();
+    if cfg.activation == "softmax" {
+        softmax_inplace(&mut s);
+    } else {
+        // SOFT (paper Eq. 4): unnormalized Gaussian kernel
+        for (j, v) in s.iter_mut().enumerate() {
+            *v = (-sqdist(q, keys.row(j)) * 0.5 * scale).exp();
+        }
+    }
+    s
+}
+
+/// One lane of a full-window encoder forward. `window`: (n x d_in),
+/// `pos0`: absolute position of the first window slot.
+/// Returns (logits, out (n x d)).
+pub fn encoder_forward(
+    cfg: &ModelConfig,
+    p: &ModelParams,
+    window: &Mat,
+    pos0: i32,
+) -> Result<(Vec<f32>, Mat)> {
+    let (n, dh, h) = (cfg.window, cfg.d_head(), cfg.n_heads);
+    let mut x = project(window, &p.w_in, &p.b_in);
+    for lp in &p.layers {
+        let mut q = project(&x, &lp.wq, &lp.bq);
+        let mut k = project(&x, &lp.wk, &lp.bk);
+        let v = project(&x, &lp.wv, &lp.bv);
+        if cfg.pos == "rope" {
+            for t in 0..n {
+                for hh in 0..h {
+                    apply_rope_inplace(&mut q.row_mut(t)[hh * dh..(hh + 1) * dh], pos0 + t as i32);
+                    apply_rope_inplace(&mut k.row_mut(t)[hh * dh..(hh + 1) * dh], pos0 + t as i32);
+                }
+            }
+        }
+        // attention per head; keys gathered into a (n x dh) temp per head
+        let mut attn_out = Mat::zeros(n, cfg.d_model);
+        let mut keys = Mat::zeros(n, dh);
+        let mut vals = Mat::zeros(n, dh);
+        for hh in 0..h {
+            for t in 0..n {
+                keys.row_mut(t).copy_from_slice(head_slice(&k, t, hh, dh));
+                vals.row_mut(t).copy_from_slice(head_slice(&v, t, hh, dh));
+            }
+            for t in 0..n {
+                let w = attn_weights(cfg, head_slice(&q, t, hh, dh), &keys);
+                let orow = &mut attn_out.row_mut(t)[hh * dh..(hh + 1) * dh];
+                for (j, &wj) in w.iter().enumerate() {
+                    for (o, &vv) in orow.iter_mut().zip(vals.row(j)) {
+                        *o += wj * vv;
+                    }
+                }
+            }
+        }
+        let a = project(&attn_out, &lp.wo, &lp.bo);
+        residual(cfg, lp, &mut x, &a, 0);
+        let f = ffn(cfg, lp, &x);
+        residual(cfg, lp, &mut x, &f, 1);
+    }
+    let last = Mat::from_vec(1, cfg.d_model, x.row(n - 1).to_vec());
+    let mut logits = last.matmul(&p.w_cls);
+    logits.add_row(&p.b_cls);
+    Ok((logits.data, x))
+}
+
+/// Continual DeepCoT stepper, one lane (B handled by the caller).
+/// Per-layer K/V memories are (mem_len x dh) per head.
+pub struct ScalarDeepCoT {
+    pub cfg: ModelConfig,
+    p: ModelParams,
+    /// kmem[layer][head]: (mem_len x dh)
+    kmem: Vec<Vec<Mat>>,
+    vmem: Vec<Vec<Mat>>,
+    pub pos: i32,
+}
+
+impl ScalarDeepCoT {
+    pub fn new(cfg: ModelConfig, p: ModelParams) -> Self {
+        let (l, h, mlen, dh) = (cfg.n_layers, cfg.n_heads, cfg.mem_len(), cfg.d_head());
+        let zmem = || vec![vec![Mat::zeros(mlen, dh); h]; l];
+        Self { cfg, p, kmem: zmem(), vmem: zmem(), pos: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        for lm in self.kmem.iter_mut().chain(self.vmem.iter_mut()) {
+            for m in lm {
+                m.data.iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+        self.pos = 0;
+    }
+
+    /// One tick: `tokens` (m x d_in) -> (logits, out (m x d)).
+    pub fn tick(&mut self, tokens: &Mat) -> Result<(Vec<f32>, Mat)> {
+        let cfg = self.cfg.clone();
+        let (m, h, dh, mlen) = (cfg.m_tokens, cfg.n_heads, cfg.d_head(), cfg.mem_len());
+        anyhow::ensure!(tokens.rows == m && tokens.cols == cfg.d_in);
+        let mut x = project(tokens, &self.p.w_in, &self.p.b_in);
+        for (li, lp) in self.p.layers.iter().enumerate() {
+            let mut q = project(&x, &lp.wq, &lp.bq);
+            let mut k = project(&x, &lp.wk, &lp.bk);
+            let v = project(&x, &lp.wv, &lp.bv);
+            if cfg.pos == "rope" {
+                for t in 0..m {
+                    for hh in 0..h {
+                        let pp = self.pos + t as i32;
+                        apply_rope_inplace(&mut q.row_mut(t)[hh * dh..(hh + 1) * dh], pp);
+                        apply_rope_inplace(&mut k.row_mut(t)[hh * dh..(hh + 1) * dh], pp);
+                    }
+                }
+            }
+            let mut attn_out = Mat::zeros(m, cfg.d_model);
+            for hh in 0..h {
+                // kcat = [memory; new keys]  (n x dh)
+                let mut kcat = Mat::zeros(mlen + m, dh);
+                let mut vcat = Mat::zeros(mlen + m, dh);
+                for j in 0..mlen {
+                    kcat.row_mut(j).copy_from_slice(self.kmem[li][hh].row(j));
+                    vcat.row_mut(j).copy_from_slice(self.vmem[li][hh].row(j));
+                }
+                for t in 0..m {
+                    kcat.row_mut(mlen + t).copy_from_slice(head_slice(&k, t, hh, dh));
+                    vcat.row_mut(mlen + t).copy_from_slice(head_slice(&v, t, hh, dh));
+                }
+                for t in 0..m {
+                    let w = attn_weights(&cfg, head_slice(&q, t, hh, dh), &kcat);
+                    let orow = &mut attn_out.row_mut(t)[hh * dh..(hh + 1) * dh];
+                    for (j, &wj) in w.iter().enumerate() {
+                        for (o, &vv) in orow.iter_mut().zip(vcat.row(j)) {
+                            *o += wj * vv;
+                        }
+                    }
+                }
+                // roll memory: drop oldest m rows, append the new ones
+                let km = &mut self.kmem[li][hh];
+                let vm = &mut self.vmem[li][hh];
+                km.data.copy_within(m * dh.., 0);
+                vm.data.copy_within(m * dh.., 0);
+                for t in 0..m {
+                    let dst = (mlen - m + t) * dh;
+                    km.data[dst..dst + dh].copy_from_slice(head_slice(&k, t, hh, dh));
+                    vm.data[dst..dst + dh].copy_from_slice(head_slice(&v, t, hh, dh));
+                }
+            }
+            let a = project(&attn_out, &lp.wo, &lp.bo);
+            residual(&cfg, lp, &mut x, &a, 0);
+            let f = ffn(&cfg, lp, &x);
+            residual(&cfg, lp, &mut x, &f, 1);
+        }
+        self.pos += m as i32;
+        let last = Mat::from_vec(1, cfg.d_model, x.row(m - 1).to_vec());
+        let mut logits = last.matmul(&self.p.w_cls);
+        logits.add_row(&self.p.b_cls);
+        Ok((logits.data, x))
+    }
+}

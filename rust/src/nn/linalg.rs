@@ -1,0 +1,126 @@
+//! Dense linear algebra for the probe trainer: Cholesky factorization
+//! and SPD solves (ridge regression normal equations).
+
+use anyhow::{bail, Result};
+
+use crate::nn::tensor::Mat;
+
+/// In-place lower Cholesky of an SPD matrix. Returns L (rows x rows).
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        bail!("cholesky needs a square matrix");
+    }
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite (pivot {s} at {i})");
+                }
+                *l.at_mut(i, j) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L L^T x = b for multiple right-hand sides (columns of B).
+pub fn cholesky_solve(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    let mut x = b.clone();
+    // forward: L y = b
+    for col in 0..b.cols {
+        for i in 0..n {
+            let mut s = x.at(i, col);
+            for k in 0..i {
+                s -= l.at(i, k) * x.at(k, col);
+            }
+            *x.at_mut(i, col) = s / l.at(i, i);
+        }
+        // backward: L^T x = y
+        for i in (0..n).rev() {
+            let mut s = x.at(i, col);
+            for k in i + 1..n {
+                s -= l.at(k, i) * x.at(k, col);
+            }
+            *x.at_mut(i, col) = s / l.at(i, i);
+        }
+    }
+    x
+}
+
+/// Ridge regression: W = (X^T X + lambda I)^-1 X^T Y.
+/// X: (n x d), Y: (n x c) -> W: (d x c).
+pub fn ridge(x: &Mat, y: &Mat, lambda: f32) -> Result<Mat> {
+    let xt = x.transpose();
+    let mut gram = xt.matmul(x);
+    for i in 0..gram.rows {
+        *gram.at_mut(i, i) += lambda;
+    }
+    let l = cholesky(&gram)?;
+    let xty = xt.matmul(y);
+    Ok(cholesky_solve(&l, &xty))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_identity() {
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            *a.at_mut(i, i) = 4.0;
+        }
+        let l = cholesky(&a).unwrap();
+        for i in 0..3 {
+            assert!((l.at(i, i) - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::zeros(2, 2);
+        *a.at_mut(0, 0) = 1.0;
+        *a.at_mut(1, 1) = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn ridge_recovers_planted_weights() {
+        let mut rng = Rng::new(11);
+        let (n, d, c) = (400, 8, 3);
+        let w_true = Mat::from_vec(d, c, rng.normal_vec(d * c, 1.0));
+        let x = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+        let mut y = x.matmul(&w_true);
+        for v in y.data.iter_mut() {
+            *v += rng.normal_f32() * 0.01;
+        }
+        let w = ridge(&x, &y, 1e-3).unwrap();
+        for (a, b) in w.data.iter().zip(&w_true.data) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        // A = L L^T with known L
+        let l0 = Mat::from_vec(2, 2, vec![2.0, 0.0, 1.0, 1.5]);
+        let a = l0.matmul(&l0.transpose());
+        let b = Mat::from_vec(2, 1, vec![3.0, 5.0]);
+        let l = cholesky(&a).unwrap();
+        let x = cholesky_solve(&l, &b);
+        let back = a.matmul(&x);
+        for (g, w) in back.data.iter().zip(&b.data) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Pure-Rust scalar reference engine.
+//!
+//! Three roles (DESIGN.md §3):
+//! 1. an oracle independent of JAX *and* PJRT — golden tests triangulate
+//!    all three implementations;
+//! 2. the "standard implementation" CPU baseline for runtime tables;
+//! 3. the numeric core for the probe trainer (ridge solve).
+
+pub mod encoder;
+pub mod linalg;
+pub mod params;
+pub mod rope;
+pub mod tensor;

@@ -1,0 +1,126 @@
+//! Named parameter store for the scalar engine, built from the same
+//! `weights/*.bin` + manifest spec the PJRT runtime consumes — so both
+//! paths share byte-identical weights (the paper's equivalence protocol).
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::VariantEntry;
+use crate::nn::tensor::Mat;
+use crate::runtime::weights::load_weights;
+
+/// Per-layer residual-norm parameters.
+#[derive(Debug, Clone)]
+pub enum Norm {
+    LayerNorm { g1: Vec<f32>, be1: Vec<f32>, g2: Vec<f32>, be2: Vec<f32> },
+    ReZero { a1: f32, a2: f32 },
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub wq: Mat,
+    pub bq: Vec<f32>,
+    pub wk: Mat,
+    pub bk: Vec<f32>,
+    pub wv: Mat,
+    pub bv: Vec<f32>,
+    pub wo: Mat,
+    pub bo: Vec<f32>,
+    pub w1: Mat,
+    pub b1: Vec<f32>,
+    pub w2: Mat,
+    pub b2: Vec<f32>,
+    pub norm: Norm,
+    /// TransformerXL biases (H x dh), present only for xl families.
+    pub u: Option<Mat>,
+    pub vb: Option<Mat>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub w_in: Mat,
+    pub b_in: Vec<f32>,
+    pub layers: Vec<LayerParams>,
+    pub w_cls: Mat,
+    pub b_cls: Vec<f32>,
+}
+
+impl ModelParams {
+    /// Load from the variant's weight file (artifacts dir relative).
+    pub fn load(artifacts_dir: &std::path::Path, entry: &VariantEntry) -> Result<Self> {
+        let tensors = load_weights(&artifacts_dir.join(&entry.weights), &entry.params)?;
+        let cfg = &entry.config;
+        let mut by_name: std::collections::HashMap<&str, crate::runtime::HostTensor> =
+            std::collections::HashMap::new();
+        for (spec, t) in entry.params.iter().zip(tensors) {
+            by_name.insert(spec.name.as_str(), t);
+        }
+        let mat = |name: &str| -> Result<Mat> {
+            let t = by_name.get(name).with_context(|| format!("missing param {name}"))?;
+            if t.shape.len() != 2 {
+                bail!("param {name} is not rank-2");
+            }
+            Ok(Mat::from_vec(t.shape[0], t.shape[1], t.data.clone()))
+        };
+        let vec = |name: &str| -> Result<Vec<f32>> {
+            Ok(by_name
+                .get(name)
+                .with_context(|| format!("missing param {name}"))?
+                .data
+                .clone())
+        };
+        let scalar = |name: &str| -> Result<f32> {
+            let v = vec(name)?;
+            if v.len() != 1 {
+                bail!("param {name} is not scalar");
+            }
+            Ok(v[0])
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |s: &str| format!("l{i}.{s}");
+            let norm = if cfg.norm == "layernorm" {
+                Norm::LayerNorm {
+                    g1: vec(&p("g1"))?,
+                    be1: vec(&p("be1"))?,
+                    g2: vec(&p("g2"))?,
+                    be2: vec(&p("be2"))?,
+                }
+            } else {
+                Norm::ReZero { a1: scalar(&p("a1"))?, a2: scalar(&p("a2"))? }
+            };
+            let (u, vb) = if by_name.contains_key(p("u").as_str()) {
+                let g = |nm: &str| -> Result<Mat> {
+                    let t = &by_name[p(nm).as_str()];
+                    Ok(Mat::from_vec(t.shape[0], t.shape[1], t.data.clone()))
+                };
+                (Some(g("u")?), Some(g("vb")?))
+            } else {
+                (None, None)
+            };
+            layers.push(LayerParams {
+                wq: mat(&p("wq"))?,
+                bq: vec(&p("bq"))?,
+                wk: mat(&p("wk"))?,
+                bk: vec(&p("bk"))?,
+                wv: mat(&p("wv"))?,
+                bv: vec(&p("bv"))?,
+                wo: mat(&p("wo"))?,
+                bo: vec(&p("bo"))?,
+                w1: mat(&p("w1"))?,
+                b1: vec(&p("b1"))?,
+                w2: mat(&p("w2"))?,
+                b2: vec(&p("b2"))?,
+                norm,
+                u,
+                vb,
+            });
+        }
+        Ok(ModelParams {
+            w_in: mat("w_in")?,
+            b_in: vec("b_in")?,
+            layers,
+            w_cls: mat("w_cls")?,
+            b_cls: vec("b_cls")?,
+        })
+    }
+}

@@ -1,0 +1,58 @@
+//! Rotary Position Embedding — scalar mirror of `python/compile/rope.py`
+//! (interleaved-pair convention, base 10000).
+
+pub const BASE: f32 = 10000.0;
+
+/// Rotate one head vector (len dh, even) in place by absolute `pos`.
+pub fn apply_rope_inplace(x: &mut [f32], pos: i32) {
+    let dh = x.len();
+    debug_assert_eq!(dh % 2, 0);
+    let half = dh / 2;
+    for i in 0..half {
+        let freq = 1.0 / BASE.powf((2 * i) as f32 / dh as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let e = x[2 * i];
+        let o = x[2 * i + 1];
+        x[2 * i] = e * cos - o * sin;
+        x[2 * i + 1] = e * sin + o * cos;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pos_zero_is_identity() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        apply_rope_inplace(&mut x, 0);
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rotation_preserves_pair_norms() {
+        let mut x = vec![3.0, 4.0, 1.0, 2.0];
+        apply_rope_inplace(&mut x, 17);
+        assert!((x[0] * x[0] + x[1] * x[1] - 25.0).abs() < 1e-4);
+        assert!((x[2] * x[2] + x[3] * x[3] - 5.0).abs() < 1e-4);
+    }
+
+    /// RoPE's defining property: <rot(q,p1), rot(k,p2)> depends only on
+    /// p1 - p2 (this is what makes it circular / stream-safe, supp. §III).
+    #[test]
+    fn relative_property() {
+        let q0 = vec![0.3, -1.2, 0.7, 0.5];
+        let k0 = vec![1.0, 0.2, -0.4, 0.9];
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let mut q1 = q0.clone();
+        let mut k1 = k0.clone();
+        apply_rope_inplace(&mut q1, 5);
+        apply_rope_inplace(&mut k1, 2);
+        let mut q2 = q0.clone();
+        let mut k2 = k0.clone();
+        apply_rope_inplace(&mut q2, 105);
+        apply_rope_inplace(&mut k2, 102);
+        assert!((dot(&q1, &k1) - dot(&q2, &k2)).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,168 @@
+//! Evaluation metrics matching each paper table.
+
+/// Top-1 accuracy.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let ok = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    ok as f64 / pred.len() as f64
+}
+
+/// Macro-averaged F1 over classes present in the truth.
+pub fn macro_f1(pred: &[usize], truth: &[usize], n_classes: usize) -> f64 {
+    let mut f1s = Vec::new();
+    for c in 0..n_classes {
+        let tp = pred.iter().zip(truth).filter(|(&p, &t)| p == c && t == c).count() as f64;
+        let fp = pred.iter().zip(truth).filter(|(&p, &t)| p == c && t != c).count() as f64;
+        let fnn = pred.iter().zip(truth).filter(|(&p, &t)| p != c && t == c).count() as f64;
+        if tp + fnn == 0.0 {
+            continue; // class absent from truth
+        }
+        let prec = if tp + fp > 0.0 { tp / (tp + fp) } else { 0.0 };
+        let rec = tp / (tp + fnn);
+        f1s.push(if prec + rec > 0.0 { 2.0 * prec * rec / (prec + rec) } else { 0.0 });
+    }
+    if f1s.is_empty() {
+        0.0
+    } else {
+        f1s.iter().sum::<f64>() / f1s.len() as f64
+    }
+}
+
+/// Average precision for one class from (score, is_positive) pairs.
+pub fn average_precision(scored: &mut Vec<(f32, bool)>) -> f64 {
+    let n_pos = scored.iter().filter(|(_, p)| *p).count();
+    if n_pos == 0 {
+        return 0.0;
+    }
+    scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+    let (mut tp, mut ap) = (0usize, 0.0f64);
+    for (rank, (_, pos)) in scored.iter().enumerate() {
+        if *pos {
+            tp += 1;
+            ap += tp as f64 / (rank + 1) as f64;
+        }
+    }
+    ap / n_pos as f64
+}
+
+/// Frame-level mean Average Precision over action classes (Table I,
+/// THUMOS protocol: background class 0 excluded).
+pub fn frame_map(scores: &[Vec<f32>], truth: &[usize], n_classes: usize) -> f64 {
+    assert_eq!(scores.len(), truth.len());
+    let mut aps = Vec::new();
+    for c in 1..n_classes {
+        let mut scored: Vec<(f32, bool)> = scores
+            .iter()
+            .zip(truth)
+            .map(|(s, &t)| (s[c], t == c))
+            .collect();
+        if scored.iter().any(|(_, p)| *p) {
+            aps.push(average_precision(&mut scored));
+        }
+    }
+    if aps.is_empty() {
+        0.0
+    } else {
+        aps.iter().sum::<f64>() / aps.len() as f64
+    }
+}
+
+/// Segment-based F1 for SED (Table III SbF1): frame-level multi-hot
+/// decisions pooled into fixed-length segments; a segment counts an
+/// event active if any frame inside does.
+pub fn segment_f1(
+    pred_events: &[u32],
+    true_events: &[u32],
+    n_events: usize,
+    seg_len: usize,
+) -> f64 {
+    assert_eq!(pred_events.len(), true_events.len());
+    let pool = |ev: &[u32]| -> Vec<u32> {
+        ev.chunks(seg_len.max(1)).map(|c| c.iter().fold(0u32, |a, &b| a | b)).collect()
+    };
+    let ps = pool(pred_events);
+    let ts = pool(true_events);
+    let (mut tp, mut fp, mut fnn) = (0.0f64, 0.0f64, 0.0f64);
+    for c in 0..n_events {
+        let bit = 1u32 << c;
+        for (p, t) in ps.iter().zip(&ts) {
+            match (p & bit != 0, t & bit != 0) {
+                (true, true) => tp += 1.0,
+                (true, false) => fp += 1.0,
+                (false, true) => fnn += 1.0,
+                _ => {}
+            }
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fnn);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Audio-tagging F1 (Table III AtF1): clip-level event presence.
+pub fn tagging_f1(pred_events: &[u32], true_events: &[u32], n_events: usize) -> f64 {
+    let clip_or = |ev: &[u32]| ev.iter().fold(0u32, |a, &b| a | b);
+    segment_f1(&[clip_or(pred_events)], &[clip_or(true_events)], n_events, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn perfect_f1() {
+        let p = vec![0, 1, 2, 0, 1, 2];
+        assert!((macro_f1(&p, &p, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_ranks_matter() {
+        // positive ranked first -> AP 1.0
+        let mut s = vec![(0.9, true), (0.5, false), (0.1, false)];
+        assert!((average_precision(&mut s) - 1.0).abs() < 1e-12);
+        // positive ranked last -> AP 1/3
+        let mut s = vec![(0.9, false), (0.5, false), (0.1, true)];
+        assert!((average_precision(&mut s) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frame_map_excludes_background() {
+        let scores = vec![vec![0.0, 1.0], vec![0.0, 0.2], vec![0.0, 0.9]];
+        let truth = vec![1, 0, 1];
+        let m = frame_map(&scores, &truth, 2);
+        assert!(m > 0.99);
+    }
+
+    #[test]
+    fn segment_f1_pools_frames() {
+        // event active frames 0..2, prediction shifted by one frame:
+        // seg_len 2 -> seg truth [1,0], seg pred [1,1]: tp=1, fp=1
+        // -> F1 = 2/3; seg_len 1 -> tp=1, fp=1, fn=1 -> F1 = 1/2.
+        let truth = vec![1, 1, 0, 0];
+        let pred = vec![0, 1, 1, 0];
+        let f2 = segment_f1(&pred, &truth, 1, 2);
+        let f1 = segment_f1(&pred, &truth, 1, 1);
+        assert!((f2 - 2.0 / 3.0).abs() < 1e-9, "{f2}");
+        assert!((f1 - 0.5).abs() < 1e-9, "{f1}");
+        assert!(f2 > f1, "coarser segments are more tolerant to shifts");
+    }
+
+    #[test]
+    fn tagging_f1_clip_level() {
+        let truth = vec![0b01, 0b01, 0, 0];
+        let pred = vec![0, 0, 0b01, 0];
+        assert!((tagging_f1(&pred, &truth, 2) - 1.0).abs() < 1e-12);
+    }
+}

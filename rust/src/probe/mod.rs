@@ -1,0 +1,96 @@
+//! Linear probes + evaluation metrics.
+//!
+//! The paper fine-tunes full models; with identical weights across
+//! continual and non-continual variants (its own equivalence protocol),
+//! the *relative* quality of the features each attention mechanism
+//! exposes is what varies. We measure that with a closed-form ridge
+//! readout on the encoder outputs — cheap, deterministic, and identical
+//! across model families. Metrics mirror each table: accuracy (II),
+//! mAP (I), macro F1 (IV), segment-based F1 + audio-tagging F1 (III).
+
+pub mod metrics;
+
+use anyhow::Result;
+
+use crate::nn::linalg::ridge;
+use crate::nn::tensor::Mat;
+
+/// One-vs-all ridge classifier trained on feature rows.
+#[derive(Debug, Clone)]
+pub struct RidgeProbe {
+    pub w: Mat, // (d x c)
+    pub n_classes: usize,
+}
+
+impl RidgeProbe {
+    /// features: rows of d-dim features; labels: class per row.
+    pub fn train(features: &Mat, labels: &[usize], n_classes: usize, lambda: f32) -> Result<Self> {
+        assert_eq!(features.rows, labels.len());
+        let mut y = Mat::zeros(features.rows, n_classes);
+        for (r, &l) in labels.iter().enumerate() {
+            *y.at_mut(r, l) = 1.0;
+        }
+        Ok(Self { w: ridge(features, &y, lambda)?, n_classes })
+    }
+
+    /// Train on multi-hot targets (SED): `targets` is (rows x c) in {0,1}.
+    pub fn train_multihot(features: &Mat, targets: &Mat, lambda: f32) -> Result<Self> {
+        Ok(Self { w: ridge(features, targets, lambda)?, n_classes: targets.cols })
+    }
+
+    /// Per-class scores for one feature row.
+    pub fn scores(&self, feat: &[f32]) -> Vec<f32> {
+        let x = Mat::from_vec(1, feat.len(), feat.to_vec());
+        x.matmul(&self.w).data
+    }
+
+    pub fn predict(&self, feat: &[f32]) -> usize {
+        let s = self.scores(feat);
+        argmax(&s)
+    }
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn probe_learns_linear_classes() {
+        let mut rng = Rng::new(21);
+        let (n, d, c) = (300, 10, 3);
+        let mut feats = Mat::zeros(n, d);
+        let mut labels = vec![0usize; n];
+        for r in 0..n {
+            let cls = r % c;
+            labels[r] = cls;
+            for i in 0..d {
+                *feats.at_mut(r, i) =
+                    rng.normal_f32() * 0.3 + if i == cls { 2.0 } else { 0.0 };
+            }
+        }
+        let probe = RidgeProbe::train(&feats, &labels, c, 1e-2).unwrap();
+        let mut correct = 0;
+        for r in 0..n {
+            if probe.predict(feats.row(r)) == labels[r] {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / n as f64 > 0.95);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[0.1, 3.0, 3.0, -1.0]), 1);
+    }
+}

@@ -1,0 +1,67 @@
+//! Host-side tensors: the boundary type between the coordinator and PJRT.
+
+use anyhow::{bail, Result};
+
+/// A dense f32 tensor on the host (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            bail!("shape {shape:?} needs {want} elems, got {}", data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row-major strides for the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Borrow the contiguous slice for row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let cols = *self.shape.last().expect("rank >= 1");
+        &self.data[i * cols..(i + 1) * cols]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = HostTensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn row_slices() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,432 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and runs them on the hot
+//! path with device-resident parameters.
+//!
+//! Wiring (see /opt/xla-example/load_hlo and DESIGN.md §3):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute_b`. HLO *text* is the interchange format —
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit ids).
+//!
+//! PJRT handles are `Rc`-based (not `Send`): the whole runtime lives on
+//! one engine thread; the async front-end talks to it over channels
+//! (`coordinator::engine`).
+
+pub mod host;
+pub mod weights;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{Manifest, TensorSpec, VariantEntry};
+pub use host::HostTensor;
+
+/// Owns the PJRT client, the manifest, and a compile-once executable
+/// cache keyed by variant name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<LoadedVariant>>>,
+}
+
+/// One AOT-compiled model variant: executable + device-resident params.
+pub struct LoadedVariant {
+    pub name: String,
+    pub entry: VariantEntry,
+    exe: xla::PjRtLoadedExecutable,
+    param_bufs: Vec<xla::PjRtBuffer>,
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let (manifest, dir) = Manifest::load(artifacts_dir)?;
+        Ok(Self { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifacts_dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) a compiled variant with its weights
+    /// uploaded once as device buffers.
+    pub fn load(&self, name: &str) -> Result<Rc<LoadedVariant>> {
+        if let Some(v) = self.cache.borrow().get(name) {
+            return Ok(v.clone());
+        }
+        let entry = self.manifest.variant(name)?.clone();
+        let hlo_path = self.dir.join(&entry.hlo);
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        let w = weights::load_weights(&self.dir.join(&entry.weights), &entry.params)?;
+        let mut param_bufs = Vec::with_capacity(w.len());
+        for t in &w {
+            param_bufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow::anyhow!("uploading params for {name}: {e}"))?,
+            );
+        }
+        let v = Rc::new(LoadedVariant {
+            name: name.to_string(),
+            entry,
+            exe,
+            param_bufs,
+            client: self.client.clone(),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), v.clone());
+        Ok(v)
+    }
+}
+
+/// Outputs of one executable invocation, decomposed from the root tuple.
+pub struct ExecOutputs {
+    pub tensors: Vec<HostTensor>,
+}
+
+impl LoadedVariant {
+    pub fn config(&self) -> &crate::manifest::ModelConfig {
+        &self.entry.config
+    }
+
+    /// Upload an f32 host tensor (no ownership transfer, no clone).
+    pub fn upload_f32_ref(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(t)
+    }
+
+    /// Upload an i32 scalar (pos inputs).
+    pub fn upload_pos(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.upload_i32_scalar(v)
+    }
+
+    fn upload_f32(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("uploading input: {e}"))
+    }
+
+    fn upload_i32_scalar(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(&[v], &[], None)
+            .map_err(|e| anyhow::anyhow!("uploading scalar: {e}"))
+    }
+
+    /// Execute with data inputs as host tensors (`pos` inputs as i32
+    /// scalars), params from the device-resident cache. Returns every
+    /// output as a host tensor (the root tuple is decomposed).
+    pub fn execute(&self, data: &[DataInput]) -> Result<ExecOutputs> {
+        if data.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: got {} data inputs, manifest wants {}",
+                self.name,
+                data.len(),
+                self.entry.inputs.len()
+            );
+        }
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(data.len());
+        for (d, spec) in data.iter().zip(&self.entry.inputs) {
+            bufs.push(self.upload_input(d, spec)?);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.execute_raw(&refs)
+    }
+
+    fn upload_input(&self, d: &DataInput, spec: &TensorSpec) -> Result<xla::PjRtBuffer> {
+        match d {
+            DataInput::F32(t) => {
+                if t.shape != spec.shape {
+                    bail!(
+                        "{}: input {} shape {:?} != manifest {:?}",
+                        self.name,
+                        spec.name,
+                        t.shape,
+                        spec.shape
+                    );
+                }
+                self.upload_f32(t)
+            }
+            DataInput::I32Scalar(v) => {
+                if spec.dtype != "i32" {
+                    bail!("{}: input {} is not i32", self.name, spec.name);
+                }
+                self.upload_i32_scalar(*v)
+            }
+        }
+    }
+
+    /// Execute with pre-uploaded input buffers (hot path; params appended
+    /// from the device-resident cache). Returns the decomposed output
+    /// literals WITHOUT host-vector conversion — callers copy only what
+    /// they need (state feedback re-uploads literals directly; §Perf).
+    pub fn execute_raw_literals(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(inputs.len() + self.param_bufs.len());
+        args.extend(inputs.iter().copied());
+        args.extend(self.param_bufs.iter());
+        let res = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.name))?;
+        let lit = res[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing result of {}: {e}", self.name))?;
+        if parts.len() != self.entry.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest wants {}",
+                self.name,
+                parts.len(),
+                self.entry.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Re-upload a result literal as a device buffer (state feedback)
+    /// through a caller-provided scratch slice (reused across ticks —
+    /// no allocation on the hot path). `shape` is the manifest shape of
+    /// the corresponding input.
+    pub fn buffer_from_literal_via(
+        &self,
+        lit: &xla::Literal,
+        scratch: &mut [f32],
+        shape: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        lit.copy_raw_to::<f32>(scratch)
+            .map_err(|e| anyhow::anyhow!("copying state literal: {e}"))?;
+        self.client
+            .buffer_from_host_buffer::<f32>(scratch, shape, None)
+            .map_err(|e| anyhow::anyhow!("re-uploading state: {e}"))
+    }
+
+    /// Convert one output literal to a host tensor by output index.
+    pub fn literal_to_host(&self, idx: usize, lit: &xla::Literal) -> Result<HostTensor> {
+        let spec = &self.entry.outputs[idx];
+        let v = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("reading output {}: {e}", spec.name))?;
+        HostTensor::new(spec.shape.clone(), v)
+    }
+
+    /// Execute with pre-uploaded input buffers; all outputs converted to
+    /// host tensors (cold paths / window runners).
+    pub fn execute_raw(&self, inputs: &[&xla::PjRtBuffer]) -> Result<ExecOutputs> {
+        let parts = self.execute_raw_literals(inputs)?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (i, p) in parts.iter().enumerate() {
+            tensors.push(self.literal_to_host(i, p)?);
+        }
+        Ok(ExecOutputs { tensors })
+    }
+
+    /// Upload one data input by manifest index (used by steppers to
+    /// prepare token buffers without re-uploading state).
+    pub fn upload_for(&self, idx: usize, d: &DataInput) -> Result<xla::PjRtBuffer> {
+        self.upload_input(d, &self.entry.inputs[idx])
+    }
+}
+
+/// A data input on its way to the device.
+pub enum DataInput {
+    F32(HostTensor),
+    I32Scalar(i32),
+}
+
+/// Drives a continual-step variant over a stream: owns the state
+/// feedback loop (new memories → next tick's inputs) with state kept as
+/// device buffers between ticks.
+pub struct Stepper {
+    variant: Rc<LoadedVariant>,
+    /// Device-resident state, indexed like `entry.inputs`.
+    state: HashMap<usize, xla::PjRtBuffer>,
+    pub pos: i32,
+    wiring: Vec<(usize, usize)>,
+    /// reusable host staging for state feedback (one per state tensor)
+    scratch: Vec<Vec<f32>>,
+}
+
+/// Host-visible per-tick results (state stays on device).
+pub struct TickOut {
+    pub logits: HostTensor,
+    pub out: HostTensor,
+}
+
+impl Stepper {
+    pub fn new(variant: Rc<LoadedVariant>) -> Result<Self> {
+        if !variant.entry.is_step() {
+            bail!("{} is not a step variant", variant.name);
+        }
+        let wiring = variant.entry.state_wiring();
+        let mut state = HashMap::new();
+        let mut scratch = Vec::with_capacity(wiring.len());
+        for &(_, inp) in &wiring {
+            let spec = &variant.entry.inputs[inp];
+            let z = HostTensor::zeros(spec.shape.clone());
+            state.insert(inp, variant.upload_f32(&z)?);
+            scratch.push(vec![0.0f32; spec.elems()]);
+        }
+        Ok(Self { variant, state, pos: 0, wiring, scratch })
+    }
+
+    pub fn variant(&self) -> &Rc<LoadedVariant> {
+        &self.variant
+    }
+
+    /// Reset to a cold stream (zero memories, position 0).
+    pub fn reset(&mut self) -> Result<()> {
+        for (&inp, buf) in self.state.iter_mut() {
+            let spec = &self.variant.entry.inputs[inp];
+            let z = HostTensor::zeros(spec.shape.clone());
+            *buf = self.variant.upload_f32(&z)?;
+        }
+        self.pos = 0;
+        Ok(())
+    }
+
+    /// One continual tick: feed `tokens` (shape = manifest input 0),
+    /// advance state, return logits + attended tokens.
+    ///
+    /// Hot path (§Perf): state outputs stay as literals and are
+    /// re-uploaded directly — only logits and attended tokens cross into
+    /// host vectors.
+    pub fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        let variant = self.variant.clone(); // Rc bump, not a deep clone
+        let entry = &variant.entry;
+        let m = entry.config.m_tokens.max(1);
+        // upload the non-state inputs for this tick
+        let mut uploads: HashMap<usize, xla::PjRtBuffer> = HashMap::new();
+        for (idx, spec) in entry.inputs.iter().enumerate() {
+            if self.state.contains_key(&idx) {
+                continue;
+            }
+            let buf = match spec.dtype.as_str() {
+                "i32" => variant.upload_i32_scalar(self.pos)?,
+                _ => {
+                    anyhow::ensure!(
+                        tokens.shape == spec.shape,
+                        "{}: tick tokens shape {:?} != manifest {:?}",
+                        variant.name,
+                        tokens.shape,
+                        spec.shape
+                    );
+                    variant.upload_f32(tokens)?
+                }
+            };
+            uploads.insert(idx, buf);
+        }
+        let inputs: Vec<&xla::PjRtBuffer> = (0..entry.inputs.len())
+            .map(|i| self.state.get(&i).or_else(|| uploads.get(&i)).unwrap())
+            .collect();
+        let parts = variant.execute_raw_literals(&inputs)?;
+        drop(inputs);
+        // feedback: state literal -> reused scratch -> device buffer
+        for (si, &(out_idx, in_idx)) in self.wiring.iter().enumerate() {
+            let shape = &entry.inputs[in_idx].shape;
+            let buf = variant.buffer_from_literal_via(
+                &parts[out_idx],
+                &mut self.scratch[si],
+                shape,
+            )?;
+            self.state.insert(in_idx, buf);
+        }
+        self.pos += m as i32;
+        let logits = variant.literal_to_host(0, &parts[0])?;
+        let out = variant.literal_to_host(1, &parts[1])?;
+        Ok(TickOut { logits, out })
+    }
+}
+
+/// Drives a window (non-continual) variant: keeps the token ring buffer
+/// host-side and re-executes the full window each tick — the redundant
+/// serving pattern the paper eliminates.
+pub struct WindowRunner {
+    variant: Rc<LoadedVariant>,
+    ring: Vec<f32>,
+    filled: usize,
+    pub pos: i32,
+}
+
+impl WindowRunner {
+    pub fn new(variant: Rc<LoadedVariant>) -> Result<Self> {
+        if variant.entry.is_step() {
+            bail!("{} is a step variant, not a window variant", variant.name);
+        }
+        let cfg = &variant.entry.config;
+        let len = cfg.batch * cfg.window * cfg.d_in;
+        Ok(Self { variant, ring: vec![0.0; len], filled: 0, pos: 0 })
+    }
+
+    pub fn variant(&self) -> &Rc<LoadedVariant> {
+        &self.variant
+    }
+
+    pub fn reset(&mut self) {
+        self.ring.iter_mut().for_each(|v| *v = 0.0);
+        self.filled = 0;
+        self.pos = 0;
+    }
+
+    /// Shift a token into the ring without executing (probe warmup for
+    /// state-free models: only the final windows matter for clip
+    /// features, so early ticks can skip the O(n²·d) recompute).
+    pub fn push_only(&mut self, tokens: &HostTensor) -> Result<()> {
+        let cfg = self.variant.entry.config.clone();
+        let (b, n, d) = (cfg.batch, cfg.window, cfg.d_in);
+        anyhow::ensure!(tokens.data.len() == b * d, "push_only wants (B, d) tokens");
+        for lane in 0..b {
+            let base = lane * n * d;
+            self.ring.copy_within(base + d..base + n * d, base);
+            let newest = base + (n - 1) * d;
+            self.ring[newest..newest + d]
+                .copy_from_slice(&tokens.data[lane * d..(lane + 1) * d]);
+        }
+        self.filled = (self.filled + 1).min(n);
+        self.pos += 1;
+        Ok(())
+    }
+
+    /// Push one token per batch lane (`tokens`: (B, d_in) flattened) and
+    /// re-run the window. Shifting is O(n·d) host-side — negligible next
+    /// to the O(n²·d) recompute this baseline performs.
+    pub fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        let cfg = self.variant.entry.config.clone();
+        let (b, n, d) = (cfg.batch, cfg.window, cfg.d_in);
+        self.push_only(tokens)?;
+        self.pos -= 1; // push_only advanced it; tick owns the increment
+        let win = HostTensor::new(vec![b, n, d], self.ring.clone())?;
+        let first_pos = self.pos - (n as i32 - 1);
+        // build inputs per manifest spec — some baselines are posless
+        let mut data = Vec::with_capacity(self.variant.entry.inputs.len());
+        for spec in &self.variant.entry.inputs {
+            data.push(match spec.dtype.as_str() {
+                "i32" => DataInput::I32Scalar(first_pos),
+                _ => DataInput::F32(win.clone()),
+            });
+        }
+        let outs = self.variant.execute(&data)?;
+        self.pos += 1;
+        let mut tensors = outs.tensors;
+        let out = tensors.swap_remove(1);
+        let logits = tensors.swap_remove(0);
+        Ok(TickOut { logits, out })
+    }
+}

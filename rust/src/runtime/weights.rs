@@ -1,0 +1,75 @@
+//! Weight loading: `artifacts/weights/<key>.bin` is a concatenation of
+//! f32 little-endian arrays in `param_spec` order (the manifest's
+//! `params` field is the contract).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::ParamSpec;
+use crate::runtime::host::HostTensor;
+
+/// Read a weights blob and split it per the param spec.
+pub fn load_weights(path: &Path, spec: &[ParamSpec]) -> Result<Vec<HostTensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let total: usize = spec.iter().map(|p| p.elems()).sum();
+    if bytes.len() != total * 4 {
+        bail!(
+            "weights {} has {} bytes, spec wants {} f32 ({} bytes)",
+            path.display(),
+            bytes.len(),
+            total,
+            total * 4
+        );
+    }
+    let mut out = Vec::with_capacity(spec.len());
+    let mut off = 0usize;
+    for p in spec {
+        let n = p.elems();
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+            data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        off += n;
+        out.push(HostTensor::new(p.shape.clone(), data)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(vals: &[f32]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "deepcot_wtest_{}_{}.bin",
+            std::process::id(),
+            vals.len()
+        ));
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn splits_in_order() {
+        let p = write_tmp(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let spec = vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 2] },
+            ParamSpec { name: "b".into(), shape: vec![2] },
+        ];
+        let w = load_weights(&p, &spec).unwrap();
+        assert_eq!(w[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w[1].data, vec![5.0, 6.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn size_mismatch_errors() {
+        let p = write_tmp(&[1.0, 2.0, 3.0]);
+        let spec = vec![ParamSpec { name: "a".into(), shape: vec![2, 2] }];
+        assert!(load_weights(&p, &spec).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,177 @@
+//! Tiny CLI argument parser — substrate replacing `clap`.
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help` from registered options.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative CLI: register options, then parse.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Self { about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{}\n\nUSAGE: {prog} [OPTIONS]\n\nOPTIONS:\n", self.about);
+        for o in &self.opts {
+            let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s.push_str("  --help               print this message\n");
+        s
+    }
+
+    /// Parse argv (without the program name). Exits on `--help`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage("<prog>"));
+                std::process::exit(0);
+            }
+            if let Some(raw) = a.strip_prefix("--") {
+                let (name, inline) = match raw.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (raw.to_string(), None),
+                };
+                let Some(spec) = self.opts.iter().find(|o| o.name == name) else {
+                    bail!("unknown option --{name}");
+                };
+                if spec.is_flag {
+                    if inline.is_some() {
+                        bail!("--{name} is a flag and takes no value");
+                    }
+                    flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => match it.next() {
+                            Some(v) => v,
+                            None => bail!("--{name} needs a value"),
+                        },
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    pub fn parse(&self) -> Result<Args> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name);
+        match v.parse() {
+            Ok(x) => Ok(x),
+            Err(_) => bail!("--{name} expects an integer, got {v:?}"),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get(name);
+        match v.parse() {
+            Ok(x) => Ok(x),
+            Err(_) => bail!("--{name} expects a number, got {v:?}"),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        let v = self.get(name);
+        match v.parse() {
+            Ok(x) => Ok(x),
+            Err(_) => bail!("--{name} expects an integer, got {v:?}"),
+        }
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test").opt("n", "8", "count").flag("fast", "go fast")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        cli().parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 8);
+        let a = parse(&["--n", "32"]).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 32);
+        let a = parse(&["--n=64"]).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 64);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["--fast", "pos1"]).unwrap();
+        assert!(a.has("fast"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&["--bogus"]).is_err());
+        assert!(parse(&["--n"]).is_err());
+        assert!(parse(&["--fast=1"]).is_err());
+        assert!(parse(&["--n", "abc"]).unwrap().get_usize("n").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! In-repo substrates replacing crates unavailable in this offline image
+//! (DESIGN.md §2): JSON (`serde_json`), PRNG (`rand`), CLI (`clap`),
+//! property testing (`proptest`), plus shared timing helpers.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timing;

@@ -1,0 +1,90 @@
+//! Measurement helpers shared by the bench harness and the metrics
+//! module: steady-clock stopwatch, robust summary statistics.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` `iters` times after `warmup` runs; return per-iteration
+/// durations.
+pub fn time_iters<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<Duration> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed());
+    }
+    out
+}
+
+/// Summary statistics over a sample of durations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Summary {
+    pub fn of(durs: &[Duration]) -> Summary {
+        assert!(!durs.is_empty());
+        let mut secs: Vec<f64> = durs.iter().map(|d| d.as_secs_f64()).collect();
+        secs.sort_by(|a, b| a.total_cmp(b));
+        let n = secs.len();
+        Summary {
+            n,
+            mean_s: secs.iter().sum::<f64>() / n as f64,
+            p50_s: percentile(&secs, 0.50),
+            p95_s: percentile(&secs, 0.95),
+            min_s: secs[0],
+            max_s: secs[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted sample.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert!((percentile(&v, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_counts() {
+        let durs: Vec<Duration> = (1..=10).map(Duration::from_millis).collect();
+        let s = Summary::of(&durs);
+        assert_eq!(s.n, 10);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s && s.p95_s <= s.max_s);
+        assert!((s.mean_s - 0.0055).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_iters_runs() {
+        let mut count = 0;
+        let d = time_iters(2, 5, || count += 1);
+        assert_eq!(d.len(), 5);
+        assert_eq!(count, 7);
+    }
+}

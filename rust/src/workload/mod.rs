@@ -1,0 +1,85 @@
+//! Synthetic stream corpora — the stand-ins for THUMOS14 / GTZAN /
+//! URBAN-SED / GLUE (substitution table, DESIGN.md §2).
+//!
+//! Every generator plants class-dependent *temporal* structure so the
+//! downstream encoder + linear probe pipeline has signal to recover:
+//! accuracy columns then order model variants the same way a real
+//! dataset would (who wins / loses with a limited attention window),
+//! while token counts and dimensions match the paper's geometry.
+
+pub mod audio;
+pub mod sed;
+pub mod text;
+pub mod trace;
+pub mod video;
+
+use crate::util::rng::Rng;
+
+/// One labeled stream (a "clip" in the paper's datasets).
+#[derive(Debug, Clone)]
+pub struct StreamSample {
+    /// Row-major (t_len x d_in) token features.
+    pub tokens: Vec<f32>,
+    pub t_len: usize,
+    pub d_in: usize,
+    /// Per-frame single label (class index; 0 = background for OAD/SED).
+    pub frame_labels: Vec<usize>,
+    /// Clip-level label.
+    pub clip_label: usize,
+    /// Per-frame multi-hot event mask (SED only; bit c = event c active).
+    pub frame_events: Vec<u32>,
+}
+
+impl StreamSample {
+    pub fn token(&self, t: usize) -> &[f32] {
+        &self.tokens[t * self.d_in..(t + 1) * self.d_in]
+    }
+}
+
+/// A corpus of labeled streams plus its label-space metadata.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub samples: Vec<StreamSample>,
+    pub n_classes: usize,
+    pub d_in: usize,
+    pub name: String,
+}
+
+impl Corpus {
+    /// Deterministic train/eval split (by index parity buckets).
+    pub fn split(&self, train_frac: f64) -> (Vec<&StreamSample>, Vec<&StreamSample>) {
+        let n_train = (self.samples.len() as f64 * train_frac).round() as usize;
+        let train = self.samples.iter().take(n_train).collect();
+        let eval = self.samples.iter().skip(n_train).collect();
+        (train, eval)
+    }
+}
+
+/// Shared helper: unit-norm random direction.
+pub(crate) fn unit_direction(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let mut v = rng.normal_vec(d, 1.0);
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+    v.iter_mut().for_each(|x| *x /= norm);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_partitions() {
+        let c = video::generate(&mut Rng::new(1), 10, 40, 8, 4);
+        let (tr, ev) = c.split(0.7);
+        assert_eq!(tr.len() + ev.len(), 10);
+        assert_eq!(tr.len(), 7);
+    }
+
+    #[test]
+    fn unit_direction_normed() {
+        let mut rng = Rng::new(2);
+        let v = unit_direction(&mut rng, 32);
+        let n: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,93 @@
+//! URBAN-SED-like sound-event-detection streams (Table III workload):
+//! spectrogram-frame tokens with overlapping multi-hot event labels and
+//! onset/offset structure, so segment-based F1 and audio-tagging F1 are
+//! both meaningful.
+
+use crate::util::rng::Rng;
+use crate::workload::{unit_direction, Corpus, StreamSample};
+
+pub fn generate(
+    rng: &mut Rng,
+    n_clips: usize,
+    t_len: usize,
+    d_in: usize,
+    n_events: usize,
+) -> Corpus {
+    assert!(n_events <= 32, "events encoded as u32 bitmask");
+    let dirs: Vec<Vec<f32>> = (0..n_events).map(|_| unit_direction(rng, d_in)).collect();
+    let rates: Vec<f32> = (0..n_events).map(|c| 0.15 + 0.5 * c as f32 / n_events as f32).collect();
+    let mut samples = Vec::with_capacity(n_clips);
+    for _ in 0..n_clips {
+        let mut tokens = vec![0.0f32; t_len * d_in];
+        let mut frame_events = vec![0u32; t_len];
+        for v in tokens.iter_mut() {
+            *v = rng.normal_f32() * 0.45; // urban background
+        }
+        let n_ev = rng.range(1, 5);
+        for _ in 0..n_ev {
+            let c = rng.below(n_events);
+            let len = rng.range(t_len / 12 + 2, t_len / 3 + 3).min(t_len);
+            let start = rng.below(t_len - len + 1);
+            for t in start..start + len {
+                let phase = (t - start) as f32 / len as f32;
+                let env = (6.0 * phase.min(1.0 - phase)).min(1.0); // sharp on/offset
+                let tex = (t as f32 * rates[c]).sin().abs();
+                let row = &mut tokens[t * d_in..(t + 1) * d_in];
+                for i in 0..d_in {
+                    row[i] += (2.4 * env + 0.9 * env * tex) * dirs[c][i];
+                }
+                frame_events[t] |= 1 << c;
+            }
+        }
+        // densest event as the single-label fallback
+        let clip_label = (0..n_events)
+            .max_by_key(|&c| frame_events.iter().filter(|&&m| m & (1 << c) != 0).count())
+            .unwrap_or(0);
+        let frame_labels = frame_events
+            .iter()
+            .map(|&m| if m == 0 { 0 } else { (m.trailing_zeros() + 1) as usize })
+            .collect();
+        samples.push(StreamSample {
+            tokens,
+            t_len,
+            d_in,
+            frame_labels,
+            clip_label,
+            frame_events,
+        });
+    }
+    Corpus { samples, n_classes: n_events, d_in, name: "sed-urban".into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_multi_hot() {
+        let c = generate(&mut Rng::new(6), 10, 120, 16, 10);
+        let any_overlap = c
+            .samples
+            .iter()
+            .flat_map(|s| s.frame_events.iter())
+            .any(|&m| m.count_ones() > 1);
+        assert!(any_overlap, "expected at least one overlapping event frame");
+        for s in &c.samples {
+            assert_eq!(s.frame_events.len(), s.t_len);
+        }
+    }
+
+    #[test]
+    fn event_mask_matches_frame_label() {
+        let c = generate(&mut Rng::new(7), 5, 60, 8, 6);
+        for s in &c.samples {
+            for t in 0..s.t_len {
+                if s.frame_events[t] == 0 {
+                    assert_eq!(s.frame_labels[t], 0);
+                } else {
+                    assert!(s.frame_labels[t] >= 1);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! GLUE-like token-stream classification (Table IV workload) and the
+//! MNLI-stitched long streams of the Fig. 1 runtime sweep.
+//!
+//! Vocabulary = random embedding table. Each sample plants a 3-token
+//! class motif at a controlled lag from the final (classification)
+//! position. With lag beyond the attention window, only models with an
+//! *extended effective receptive field* — DeepCoT's l(n-1) property —
+//! can see the motif: this is the mechanism behind the paper's x0.5
+//! window results, reproduced synthetically.
+
+use crate::util::rng::Rng;
+use crate::workload::{Corpus, StreamSample};
+
+pub struct TextTask {
+    pub vocab: Vec<Vec<f32>>,
+    /// motif token ids per class (3 tokens each).
+    pub motifs: Vec<[usize; 3]>,
+    pub d_in: usize,
+}
+
+pub fn make_task(rng: &mut Rng, vocab_size: usize, d_in: usize, n_classes: usize) -> TextTask {
+    let vocab: Vec<Vec<f32>> =
+        (0..vocab_size).map(|_| rng.normal_vec(d_in, 1.0 / (d_in as f32).sqrt() * 4.0)).collect();
+    let motifs = (0..n_classes)
+        .map(|_| {
+            [rng.below(vocab_size), rng.below(vocab_size), rng.below(vocab_size)]
+        })
+        .collect();
+    TextTask { vocab, motifs, d_in }
+}
+
+/// Generate samples whose motif sits `lag` tokens before the end
+/// (lag sampled in [lag_min, lag_max)).
+pub fn generate(
+    rng: &mut Rng,
+    task: &TextTask,
+    n_samples: usize,
+    t_len: usize,
+    lag_min: usize,
+    lag_max: usize,
+) -> Corpus {
+    let n_classes = task.motifs.len();
+    let d_in = task.d_in;
+    let mut samples = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        let label = i % n_classes;
+        let mut ids: Vec<usize> = (0..t_len).map(|_| rng.below(task.vocab.len())).collect();
+        let lag = rng.range(lag_min, lag_max.max(lag_min + 1)).min(t_len - 3);
+        let at = t_len - 3 - lag;
+        ids[at..at + 3].copy_from_slice(&task.motifs[label]);
+        let mut tokens = vec![0.0f32; t_len * d_in];
+        for (t, &id) in ids.iter().enumerate() {
+            tokens[t * d_in..(t + 1) * d_in].copy_from_slice(&task.vocab[id]);
+            // small noise so embeddings are not bit-identical
+            for v in tokens[t * d_in..(t + 1) * d_in].iter_mut() {
+                *v += rng.normal_f32() * 0.05;
+            }
+        }
+        samples.push(StreamSample {
+            tokens,
+            t_len,
+            d_in,
+            frame_labels: vec![label; t_len],
+            clip_label: label,
+            frame_events: Vec::new(),
+        });
+    }
+    Corpus { samples, n_classes, d_in, name: "text-glue".into() }
+}
+
+/// Fig. 1 long-stream generator: stitch many segments into one stream
+/// per batch lane (the paper stitches MNLI eval inputs into b groups
+/// with separator tokens). Returns (T x d_in) rows per lane.
+pub fn stitched_stream(rng: &mut Rng, task: &TextTask, t_len: usize) -> Vec<f32> {
+    let d_in = task.d_in;
+    let sep: Vec<f32> = vec![2.5; d_in]; // distinguished separator embedding
+    let mut tokens = Vec::with_capacity(t_len * d_in);
+    let mut until_sep = rng.range(8, 40);
+    for _ in 0..t_len {
+        if until_sep == 0 {
+            tokens.extend_from_slice(&sep);
+            until_sep = rng.range(8, 40);
+        } else {
+            let id = rng.below(task.vocab.len());
+            tokens.extend_from_slice(&task.vocab[id]);
+            until_sep -= 1;
+        }
+    }
+    tokens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn motif_planted_at_lag() {
+        let mut rng = Rng::new(4);
+        let task = make_task(&mut rng, 50, 8, 4);
+        let c = generate(&mut rng, &task, 8, 64, 5, 6);
+        for s in &c.samples {
+            // motif should be at position t_len - 3 - 5
+            let at = 64 - 3 - 5;
+            let motif = &task.motifs[s.clip_label];
+            for j in 0..3 {
+                let emb = &task.vocab[motif[j]];
+                let tok = s.token(at + j);
+                let d: f32 = emb.iter().zip(tok).map(|(a, b)| (a - b) * (a - b)).sum();
+                assert!(d < 0.5, "motif token {j} too far: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn stitched_length() {
+        let mut rng = Rng::new(5);
+        let task = make_task(&mut rng, 20, 4, 2);
+        let s = stitched_stream(&mut rng, &task, 100);
+        assert_eq!(s.len(), 400);
+    }
+}

@@ -1,0 +1,182 @@
+//! Arrival-process traces for serving experiments: open-loop load with
+//! Poisson or bursty (two-state Markov-modulated) inter-arrival times,
+//! plus deterministic replay — the stand-in for production request
+//! traces (DESIGN.md §2).
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrivals at `rate` tokens/s.
+    Poisson { rate: f64 },
+    /// Markov-modulated Poisson: switches between a calm and a burst
+    /// rate; `p_switch` per arrival.
+    Bursty { calm_rate: f64, burst_rate: f64, p_switch: f64 },
+    /// Fixed-interval arrivals (sensor-like streams).
+    Periodic { interval: Duration },
+}
+
+/// One generated trace event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Offset from trace start.
+    pub at: Duration,
+    /// Which stream the token belongs to.
+    pub stream: usize,
+}
+
+/// Generate a merged arrival trace for `n_streams` independent sources.
+pub fn generate(
+    rng: &mut Rng,
+    process: ArrivalProcess,
+    n_streams: usize,
+    per_stream: usize,
+) -> Vec<Arrival> {
+    let mut events = Vec::with_capacity(n_streams * per_stream);
+    for s in 0..n_streams {
+        let mut t = 0.0f64;
+        let mut bursting = false;
+        let mut r = rng.fork();
+        for _ in 0..per_stream {
+            let dt = match process {
+                ArrivalProcess::Poisson { rate } => exp_sample(&mut r, rate),
+                ArrivalProcess::Bursty { calm_rate, burst_rate, p_switch } => {
+                    if r.chance(p_switch) {
+                        bursting = !bursting;
+                    }
+                    exp_sample(&mut r, if bursting { burst_rate } else { calm_rate })
+                }
+                ArrivalProcess::Periodic { interval } => interval.as_secs_f64(),
+            };
+            t += dt;
+            events.push(Arrival { at: Duration::from_secs_f64(t), stream: s });
+        }
+    }
+    events.sort_by_key(|e| e.at);
+    events
+}
+
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    debug_assert!(rate > 0.0);
+    let u = rng.uniform().max(f64::MIN_POSITIVE);
+    -u.ln() / rate
+}
+
+/// Summary statistics of a trace (for EXPERIMENTS.md reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceStats {
+    pub events: usize,
+    pub span: Duration,
+    pub mean_rate: f64,
+    /// peak rate over 100ms buckets
+    pub peak_rate: f64,
+}
+
+pub fn stats(trace: &[Arrival]) -> TraceStats {
+    if trace.is_empty() {
+        return TraceStats {
+            events: 0,
+            span: Duration::ZERO,
+            mean_rate: 0.0,
+            peak_rate: 0.0,
+        };
+    }
+    let span = trace.last().unwrap().at;
+    let bucket = 0.1f64;
+    let n_buckets = (span.as_secs_f64() / bucket).ceil().max(1.0) as usize;
+    let mut counts = vec![0usize; n_buckets];
+    for e in trace {
+        let b = ((e.at.as_secs_f64() / bucket) as usize).min(n_buckets - 1);
+        counts[b] += 1;
+    }
+    TraceStats {
+        events: trace.len(),
+        span,
+        mean_rate: trace.len() as f64 / span.as_secs_f64().max(1e-9),
+        peak_rate: counts.iter().copied().max().unwrap_or(0) as f64 / bucket,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn poisson_rate_approximates_target() {
+        let mut rng = Rng::new(8);
+        let trace = generate(&mut rng, ArrivalProcess::Poisson { rate: 100.0 }, 1, 5000);
+        let s = stats(&trace);
+        assert!((s.mean_rate - 100.0).abs() < 8.0, "rate {}", s.mean_rate);
+    }
+
+    #[test]
+    fn merged_trace_is_sorted_and_complete() {
+        let mut rng = Rng::new(9);
+        let trace = generate(&mut rng, ArrivalProcess::Poisson { rate: 50.0 }, 4, 100);
+        assert_eq!(trace.len(), 400);
+        assert!(trace.windows(2).all(|w| w[0].at <= w[1].at));
+        for s in 0..4 {
+            assert_eq!(trace.iter().filter(|e| e.stream == s).count(), 100);
+        }
+    }
+
+    #[test]
+    fn periodic_is_exact() {
+        let mut rng = Rng::new(10);
+        let trace = generate(
+            &mut rng,
+            ArrivalProcess::Periodic { interval: Duration::from_millis(10) },
+            1,
+            10,
+        );
+        assert_eq!(trace[9].at, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn bursty_has_higher_peak_than_poisson_at_same_mean() {
+        let mut rng = Rng::new(11);
+        let bursty = generate(
+            &mut rng,
+            ArrivalProcess::Bursty { calm_rate: 20.0, burst_rate: 500.0, p_switch: 0.02 },
+            1,
+            4000,
+        );
+        let sb = stats(&bursty);
+        let poisson = generate(
+            &mut rng,
+            ArrivalProcess::Poisson { rate: sb.mean_rate },
+            1,
+            4000,
+        );
+        let sp = stats(&poisson);
+        assert!(
+            sb.peak_rate / sb.mean_rate > sp.peak_rate / sp.mean_rate,
+            "bursty peak/mean {} vs poisson {}",
+            sb.peak_rate / sb.mean_rate,
+            sp.peak_rate / sp.mean_rate
+        );
+    }
+
+    /// Property: traces are deterministic per seed and event counts are
+    /// always exactly n_streams * per_stream.
+    #[test]
+    fn prop_trace_determinism() {
+        prop::check("trace-determinism", 50, |rng| {
+            let seed = rng.next_u64();
+            let n = rng.range(1, 5);
+            let k = rng.range(1, 50);
+            let a = generate(&mut Rng::new(seed), ArrivalProcess::Poisson { rate: 30.0 }, n, k);
+            let b = generate(&mut Rng::new(seed), ArrivalProcess::Poisson { rate: 30.0 }, n, k);
+            if a != b {
+                return Err("trace not deterministic".into());
+            }
+            if a.len() != n * k {
+                return Err(format!("expected {} events, got {}", n * k, a.len()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,114 @@
+//! THUMOS14-like online-action-detection streams (Table I workload).
+//!
+//! Long feature streams (TSN-feature stand-ins) alternating background
+//! noise with action segments. Each action class c has a signature
+//! direction u_c and a characteristic temporal envelope (ramp up, hold,
+//! ramp down) — so detecting an action *early* (the OAD objective)
+//! benefits from temporal context, which is exactly what the attention
+//! window provides.
+
+use crate::util::rng::Rng;
+use crate::workload::{unit_direction, Corpus, StreamSample};
+
+/// `n_classes` are action classes 1..=n_classes; frame label 0 means
+/// background. Clip label = most frequent action in the stream.
+pub fn generate(
+    rng: &mut Rng,
+    n_streams: usize,
+    t_len: usize,
+    d_in: usize,
+    n_classes: usize,
+) -> Corpus {
+    let dirs: Vec<Vec<f32>> = (0..n_classes).map(|_| unit_direction(rng, d_in)).collect();
+    // secondary direction per class: the "motion" axis modulated in time
+    let dirs2: Vec<Vec<f32>> = (0..n_classes).map(|_| unit_direction(rng, d_in)).collect();
+    let mut samples = Vec::with_capacity(n_streams);
+    for _ in 0..n_streams {
+        let mut tokens = vec![0.0f32; t_len * d_in];
+        let mut frame_labels = vec![0usize; t_len];
+        // background texture
+        for v in tokens.iter_mut() {
+            *v = rng.normal_f32() * 0.6;
+        }
+        // plant 1..4 action segments
+        let mut counts = vec![0usize; n_classes + 1];
+        let n_seg = rng.range(1, 5);
+        for _ in 0..n_seg {
+            let c = rng.below(n_classes);
+            let len = rng.range(t_len / 10 + 2, t_len / 3 + 3).min(t_len);
+            let start = rng.below(t_len - len + 1);
+            for t in start..start + len {
+                let phase = (t - start) as f32 / len as f32;
+                // envelope: ramp-hold-ramp
+                let env = (4.0 * phase.min(1.0 - phase)).min(1.0);
+                let wob = (phase * std::f32::consts::PI * 3.0).sin();
+                let row = &mut tokens[t * d_in..(t + 1) * d_in];
+                for i in 0..d_in {
+                    row[i] += 2.8 * env * dirs[c][i] + 1.4 * env * wob * dirs2[c][i];
+                }
+                frame_labels[t] = c + 1;
+                counts[c + 1] += 1;
+            }
+        }
+        let clip_label = counts
+            .iter()
+            .enumerate()
+            .skip(1)
+            .max_by_key(|(_, &n)| n)
+            .map(|(c, _)| c)
+            .unwrap_or(0);
+        samples.push(StreamSample {
+            tokens,
+            t_len,
+            d_in,
+            frame_labels,
+            clip_label,
+            frame_events: Vec::new(),
+        });
+    }
+    Corpus { samples, n_classes: n_classes + 1, d_in, name: "video-oad".into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_and_labels() {
+        let c = generate(&mut Rng::new(3), 5, 80, 16, 20);
+        assert_eq!(c.samples.len(), 5);
+        for s in &c.samples {
+            assert_eq!(s.tokens.len(), 80 * 16);
+            assert_eq!(s.frame_labels.len(), 80);
+            assert!(s.clip_label <= 20);
+            assert!(s.frame_labels.iter().any(|&l| l > 0), "some action planted");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&mut Rng::new(7), 2, 40, 8, 4);
+        let b = generate(&mut Rng::new(7), 2, 40, 8, 4);
+        assert_eq!(a.samples[0].tokens, b.samples[0].tokens);
+    }
+
+    #[test]
+    fn action_frames_have_signal() {
+        let c = generate(&mut Rng::new(5), 20, 100, 32, 6);
+        // mean norm of action frames should exceed background frames
+        let (mut act, mut bg, mut na, mut nb) = (0.0f64, 0.0f64, 0, 0);
+        for s in &c.samples {
+            for t in 0..s.t_len {
+                let e: f32 = s.token(t).iter().map(|x| x * x).sum();
+                if s.frame_labels[t] > 0 {
+                    act += e as f64;
+                    na += 1;
+                } else {
+                    bg += e as f64;
+                    nb += 1;
+                }
+            }
+        }
+        assert!(act / na as f64 > bg / nb as f64);
+    }
+}

@@ -1,0 +1,156 @@
+//! Integration: the Rust PJRT path must reproduce the JAX host
+//! reference bit-for-bit (well, f32-tolerance-for-tolerance).
+//!
+//! `python/compile/aot.py` dumps, for every `tiny_*` variant, a short
+//! input stream plus the logits / last-token outputs computed by the L2
+//! model on the host. Here we drive the same stream through
+//! `runtime::Stepper` / `runtime::WindowRunner` (zero-state cold start,
+//! the shared convention) and compare.
+
+use anyhow::{Context, Result};
+
+use deepcot::runtime::{HostTensor, Runtime, Stepper, WindowRunner};
+use deepcot::util::json::Json;
+
+const RTOL: f32 = 2e-3;
+const ATOL: f32 = 2e-3;
+
+struct Golden {
+    ticks: usize,
+    stream: Vec<Vec<f32>>,
+    logits: Vec<Vec<f32>>,
+    out_last: Vec<Vec<f32>>,
+}
+
+fn load_golden(rt: &Runtime, name: &str) -> Result<Golden> {
+    let entry = rt.manifest().variant(name)?;
+    let gfile = entry.golden.clone().context("variant has no golden")?;
+    let text = std::fs::read_to_string(rt.artifacts_dir().join(gfile))?;
+    let v = Json::parse(&text)?;
+    let ticks = v.req("ticks")?.as_usize()?;
+    let rows = |key: &str| -> Result<Vec<Vec<f32>>> {
+        v.req(key)?.as_arr()?.iter().map(|r| r.as_f32_vec()).collect()
+    };
+    Ok(Golden {
+        ticks,
+        stream: rows("stream")?,
+        logits: rows("expected_logits")?,
+        out_last: rows("expected_out_last")?,
+    })
+}
+
+fn assert_close(name: &str, tick: usize, what: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{name} tick {tick} {what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = ATOL + RTOL * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "{name} tick {tick} {what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+fn last_token(out: &HostTensor) -> Vec<f32> {
+    // out: (B, m, d) -> (B, d) newest token per lane
+    let d = *out.shape.last().unwrap();
+    let m = out.shape[1];
+    let b = out.shape[0];
+    let mut v = Vec::with_capacity(b * d);
+    for lane in 0..b {
+        let base = lane * m * d + (m - 1) * d;
+        v.extend_from_slice(&out.data[base..base + d]);
+    }
+    v
+}
+
+fn check_step_variant(rt: &Runtime, name: &str) -> Result<()> {
+    let variant = rt.load(name)?;
+    let g = load_golden(rt, name)?;
+    let cfg = variant.config().clone();
+    let mut stepper = Stepper::new(variant)?;
+    for t in 0..g.ticks {
+        let tokens = HostTensor::new(
+            vec![cfg.batch, cfg.m_tokens, cfg.d_in],
+            g.stream[t].clone(),
+        )?;
+        let out = stepper.tick(&tokens)?;
+        assert_close(name, t, "logits", &out.logits.data, &g.logits[t]);
+        assert_close(name, t, "out_last", &last_token(&out.out), &g.out_last[t]);
+    }
+    Ok(())
+}
+
+fn check_window_variant(rt: &Runtime, name: &str) -> Result<()> {
+    let variant = rt.load(name)?;
+    let g = load_golden(rt, name)?;
+    let cfg = variant.config().clone();
+    let mut runner = WindowRunner::new(variant)?;
+    for t in 0..g.ticks {
+        let tokens = HostTensor::new(vec![cfg.batch, cfg.d_in], g.stream[t].clone())?;
+        let out = runner.tick(&tokens)?;
+        assert_close(name, t, "logits", &out.logits.data, &g.logits[t]);
+        assert_close(name, t, "out_last", &last_token(&out.out), &g.out_last[t]);
+    }
+    Ok(())
+}
+
+fn rt() -> Runtime {
+    Runtime::new(&deepcot::artifacts_dir()).expect("runtime (run `make artifacts` first)")
+}
+
+macro_rules! golden_step_test {
+    ($fn_name:ident, $variant:expr) => {
+        #[test]
+        fn $fn_name() {
+            check_step_variant(&rt(), $variant).unwrap();
+        }
+    };
+}
+
+macro_rules! golden_window_test {
+    ($fn_name:ident, $variant:expr) => {
+        #[test]
+        fn $fn_name() {
+            check_window_variant(&rt(), $variant).unwrap();
+        }
+    };
+}
+
+golden_step_test!(golden_tiny_deepcot, "tiny_deepcot");
+golden_step_test!(golden_tiny_deepcot_l1, "tiny_deepcot_l1");
+golden_step_test!(golden_tiny_deepcot_soft, "tiny_deepcot_soft");
+golden_step_test!(golden_tiny_deepcot_m3, "tiny_deepcot_m3");
+golden_step_test!(golden_tiny_cotransformer, "tiny_cotransformer");
+golden_step_test!(golden_tiny_xl, "tiny_xl");
+golden_window_test!(golden_tiny_encoder, "tiny_encoder");
+golden_window_test!(golden_tiny_encoder_l1, "tiny_encoder_l1");
+golden_window_test!(golden_tiny_encoder_soft, "tiny_encoder_soft");
+golden_window_test!(golden_tiny_xl_full, "tiny_xl_full");
+golden_window_test!(golden_tiny_fnet, "tiny_fnet");
+golden_window_test!(golden_tiny_nystrom, "tiny_nystrom");
+
+/// The paper's §III-B.1 property at the system level: a 1-layer DeepCoT
+/// stepper and a 1-layer regular encoder (same weights) produce
+/// identical last-token outputs once the window has filled.
+#[test]
+fn one_layer_equivalence_via_pjrt() {
+    let rt = rt();
+    let dc = rt.load("tiny_deepcot_l1").unwrap();
+    let enc = rt.load("tiny_encoder_l1").unwrap();
+    let cfg = dc.config().clone();
+    let mut stepper = Stepper::new(dc).unwrap();
+    let mut runner = WindowRunner::new(enc).unwrap();
+    let mut rng = deepcot::util::rng::Rng::new(99);
+    for t in 0..(cfg.window * 2) {
+        let tok = rng.normal_vec(cfg.batch * cfg.d_in, 1.0);
+        let a = stepper
+            .tick(&HostTensor::new(vec![cfg.batch, 1, cfg.d_in], tok.clone()).unwrap())
+            .unwrap();
+        let b = runner
+            .tick(&HostTensor::new(vec![cfg.batch, cfg.d_in], tok).unwrap())
+            .unwrap();
+        if t >= cfg.window - 1 {
+            assert_close("equiv", t, "logits", &a.logits.data, &b.logits.data);
+        }
+    }
+}

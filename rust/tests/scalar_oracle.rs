@@ -1,0 +1,135 @@
+//! Triangulation: the pure-Rust scalar engine must match the JAX host
+//! reference (golden dumps) with no PJRT in the loop — an independent
+//! implementation of the same numerics (DESIGN.md §3, nn module).
+
+use anyhow::{Context, Result};
+
+use deepcot::manifest::Manifest;
+use deepcot::nn::encoder::{encoder_forward, ScalarDeepCoT};
+use deepcot::nn::params::ModelParams;
+use deepcot::nn::tensor::Mat;
+use deepcot::util::json::Json;
+
+const RTOL: f32 = 3e-3;
+const ATOL: f32 = 3e-3;
+
+struct Golden {
+    ticks: usize,
+    stream: Vec<Vec<f32>>,
+    logits: Vec<Vec<f32>>,
+    out_last: Vec<Vec<f32>>,
+}
+
+fn load(name: &str) -> Result<(deepcot::manifest::VariantEntry, ModelParams, Golden)> {
+    let dir = deepcot::artifacts_dir();
+    let (m, _) = Manifest::load(&dir)?;
+    let entry = m.variant(name)?.clone();
+    let params = ModelParams::load(&dir, &entry)?;
+    let text = std::fs::read_to_string(
+        dir.join(entry.golden.clone().context("no golden")?),
+    )?;
+    let v = Json::parse(&text)?;
+    let rows = |key: &str| -> Result<Vec<Vec<f32>>> {
+        v.req(key)?.as_arr()?.iter().map(|r| r.as_f32_vec()).collect()
+    };
+    let g = Golden {
+        ticks: v.req("ticks")?.as_usize()?,
+        stream: rows("stream")?,
+        logits: rows("expected_logits")?,
+        out_last: rows("expected_out_last")?,
+    };
+    Ok((entry, params, g))
+}
+
+fn assert_close(what: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{what} length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = ATOL + RTOL * w.abs();
+        assert!((g - w).abs() <= tol, "{what}[{i}]: got {g}, want {w}");
+    }
+}
+
+fn check_deepcot(name: &str) -> Result<()> {
+    let (entry, params, g) = load(name)?;
+    let cfg = entry.config.clone();
+    // scalar engine is single-lane; run each batch lane separately
+    for lane in 0..cfg.batch {
+        let mut eng = ScalarDeepCoT::new(cfg.clone(), params.clone());
+        for t in 0..g.ticks {
+            let row = &g.stream[t];
+            let lane_elems = cfg.m_tokens * cfg.d_in;
+            let chunk = &row[lane * lane_elems..(lane + 1) * lane_elems];
+            let tokens = Mat::from_vec(cfg.m_tokens, cfg.d_in, chunk.to_vec());
+            let (logits, out) = eng.tick(&tokens)?;
+            let c = cfg.n_classes;
+            assert_close(
+                &format!("{name} lane {lane} tick {t} logits"),
+                &logits,
+                &g.logits[t][lane * c..(lane + 1) * c],
+            );
+            let d = cfg.d_model;
+            assert_close(
+                &format!("{name} lane {lane} tick {t} out"),
+                &out.data[(cfg.m_tokens - 1) * d..],
+                &g.out_last[t][lane * d..(lane + 1) * d],
+            );
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn scalar_deepcot_matches_jax_golden() {
+    check_deepcot("tiny_deepcot").unwrap();
+}
+
+#[test]
+fn scalar_deepcot_l1_matches_jax_golden() {
+    check_deepcot("tiny_deepcot_l1").unwrap();
+}
+
+#[test]
+fn scalar_deepcot_soft_matches_jax_golden() {
+    check_deepcot("tiny_deepcot_soft").unwrap();
+}
+
+#[test]
+fn scalar_deepcot_m3_matches_jax_golden() {
+    check_deepcot("tiny_deepcot_m3").unwrap();
+}
+
+#[test]
+fn scalar_encoder_matches_jax_golden() {
+    let (entry, params, g) = load("tiny_encoder").unwrap();
+    let cfg = entry.config.clone();
+    let n = cfg.window;
+    // replay the sliding window with zero left-padding (the shared
+    // cold-start convention) per batch lane
+    for lane in 0..cfg.batch {
+        let mut history: Vec<Vec<f32>> = Vec::new();
+        for t in 0..g.ticks {
+            let row = &g.stream[t];
+            history.push(row[lane * cfg.d_in..(lane + 1) * cfg.d_in].to_vec());
+            let mut win = Mat::zeros(n, cfg.d_in);
+            let have = history.len().min(n);
+            for j in 0..have {
+                let src = &history[history.len() - have + j];
+                win.row_mut(n - have + j).copy_from_slice(src);
+            }
+            let pos0 = t as i32 - (n as i32 - 1);
+            let (logits, out) = encoder_forward(&cfg, &params, &win, pos0).unwrap();
+            let c = cfg.n_classes;
+            assert_close(
+                &format!("encoder lane {lane} tick {t} logits"),
+                &logits,
+                &g.logits[t][lane * c..(lane + 1) * c],
+            );
+            let d = cfg.d_model;
+            assert_close(
+                &format!("encoder lane {lane} tick {t} out"),
+                out.row(n - 1),
+                &g.out_last[t][lane * d..(lane + 1) * d],
+            );
+        }
+    }
+}
