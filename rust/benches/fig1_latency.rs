@@ -1,9 +1,16 @@
 //! `cargo bench` target for Fig. 1 (quick mode, truncated sweep;
-//! full sweep: bench_fig1).
-use deepcot::bench_harness::tables::{run_fig1, BenchOpts};
+//! full sweep: bench_fig1). Runs the scalar-engine comparison always
+//! and the PJRT sweep only when the XLA runtime + artifacts exist.
+use deepcot::bench_harness::tables::{run_fig1, run_fig1_scalar, BenchOpts};
 use deepcot::runtime::Runtime;
 
 fn main() {
-    let rt = Runtime::new(&deepcot::artifacts_dir()).expect("artifacts");
-    run_fig1(&rt, &BenchOpts::quick(), &[16, 64, 256]).expect("fig1");
+    let windows = [16, 64, 256];
+    run_fig1_scalar(&BenchOpts::quick(), &windows, 4).expect("fig1 scalar");
+    match Runtime::new(&deepcot::artifacts_dir()) {
+        Ok(rt) => {
+            run_fig1(&rt, &BenchOpts::quick(), &windows).expect("fig1");
+        }
+        Err(e) => eprintln!("skipping PJRT sweep: {e}"),
+    }
 }

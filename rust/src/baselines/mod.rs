@@ -2,14 +2,18 @@
 //! per tick the serving layer feeds the newest token(s) and gets logits
 //! + attended outputs, regardless of whether the implementation is
 //! continual (Stepper), window-recompute (WindowRunner), a chained
-//! MAT-SED pipeline, or the scalar CPU engine.
+//! MAT-SED pipeline, or a scalar CPU engine ([`ScalarModel`] /
+//! [`BatchedScalarModel`] on ring-buffer memories, plus the frozen
+//! pre-refactor [`NaiveScalarModel`] benchmark baseline).
 
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
 use crate::manifest::ModelConfig;
+use crate::nn::batched::BatchedScalarDeepCoT;
 use crate::nn::encoder::ScalarDeepCoT;
+use crate::nn::naive::NaiveScalarDeepCoT;
 use crate::nn::params::ModelParams;
 use crate::nn::tensor::Mat;
 use crate::runtime::{HostTensor, LoadedVariant, Runtime, Stepper, TickOut, WindowRunner};
@@ -219,7 +223,7 @@ impl StreamModel for ChainedWindowModel {
 }
 
 /// Pure-Rust scalar engine (the "standard implementation" CPU baseline)
-/// — single-lane (B=1) continual DeepCoT.
+/// — single-lane (B=1) continual DeepCoT over ring-buffer K/V memories.
 pub struct ScalarModel {
     name: String,
     cfg: ModelConfig,
@@ -233,11 +237,13 @@ impl ScalarModel {
             bail!("scalar engine implements the deepcot family only");
         }
         let params = ModelParams::load(rt.artifacts_dir(), &entry)?;
-        Ok(Self {
-            name: format!("scalar:{variant}"),
-            cfg: entry.config.clone(),
-            inner: ScalarDeepCoT::new(entry.config, params),
-        })
+        Ok(Self::from_parts(format!("scalar:{variant}"), entry.config, params))
+    }
+
+    /// Build directly from config + params (synthetic benchmarks/tests
+    /// that run without artifacts).
+    pub fn from_parts(name: String, cfg: ModelConfig, params: ModelParams) -> Self {
+        Self { name, cfg: cfg.clone(), inner: ScalarDeepCoT::new(cfg, params) }
     }
 }
 
@@ -253,6 +259,104 @@ impl StreamModel for ScalarModel {
     }
     fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
         anyhow::ensure!(self.cfg.batch == 1, "scalar engine is single-lane");
+        let m = self.cfg.m_tokens;
+        let t = Mat::from_vec(m, self.cfg.d_in, tokens.data.clone());
+        let (logits, out) = self.inner.tick(&t)?;
+        Ok(TickOut {
+            logits: HostTensor::new(vec![1, self.cfg.n_classes], logits.to_vec())?,
+            out: HostTensor::new(vec![1, m, self.cfg.d_model], out.data.clone())?,
+        })
+    }
+    fn reset(&mut self) -> Result<()> {
+        self.inner.reset();
+        Ok(())
+    }
+}
+
+/// Multi-lane scalar engine: B streams stepped through single stacked
+/// shared-weight matmuls (`nn::batched`). The CPU twin of the batched
+/// PJRT step variants, and the engine behind the coordinator's scalar
+/// slot backend.
+pub struct BatchedScalarModel {
+    name: String,
+    cfg: ModelConfig,
+    inner: BatchedScalarDeepCoT,
+}
+
+impl BatchedScalarModel {
+    pub fn load(rt: &Runtime, variant: &str) -> Result<Self> {
+        let entry = rt.manifest().variant(variant)?.clone();
+        if entry.family != "deepcot" {
+            bail!("scalar engine implements the deepcot family only");
+        }
+        let params = ModelParams::load(rt.artifacts_dir(), &entry)?;
+        Ok(Self::from_parts(format!("scalar-batched:{variant}"), entry.config, params))
+    }
+
+    pub fn from_parts(name: String, cfg: ModelConfig, params: ModelParams) -> Self {
+        Self { name, cfg: cfg.clone(), inner: BatchedScalarDeepCoT::new(cfg, params) }
+    }
+}
+
+impl StreamModel for BatchedScalarModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn family(&self) -> &str {
+        "deepcot"
+    }
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+    fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        let (b, m, d_in) = (self.inner.lanes(), self.cfg.m_tokens, self.cfg.d_in);
+        anyhow::ensure!(
+            tokens.data.len() == b * m * d_in,
+            "batched scalar tick wants {} f32, got {}",
+            b * m * d_in,
+            tokens.data.len()
+        );
+        // (B, m, d_in) flattened is already lane-major stacked rows
+        let t = Mat::from_vec(b * m, d_in, tokens.data.clone());
+        let out = self.inner.tick_all(&t)?;
+        Ok(TickOut {
+            logits: HostTensor::new(vec![b, self.cfg.n_classes], out.logits.data.clone())?,
+            out: HostTensor::new(vec![b, m, self.cfg.d_model], out.out.data.clone())?,
+        })
+    }
+    fn reset(&mut self) -> Result<()> {
+        self.inner.reset();
+        Ok(())
+    }
+}
+
+/// Pre-refactor scalar engine (flat memories rolled with `copy_within`,
+/// fresh concatenations per tick) — kept only so benchmarks can report
+/// the refactor's effect honestly. See `nn::naive`.
+pub struct NaiveScalarModel {
+    name: String,
+    cfg: ModelConfig,
+    inner: NaiveScalarDeepCoT,
+}
+
+impl NaiveScalarModel {
+    pub fn from_parts(name: String, cfg: ModelConfig, params: ModelParams) -> Self {
+        Self { name, cfg: cfg.clone(), inner: NaiveScalarDeepCoT::new(cfg, params) }
+    }
+}
+
+impl StreamModel for NaiveScalarModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn family(&self) -> &str {
+        "deepcot"
+    }
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+    fn tick(&mut self, tokens: &HostTensor) -> Result<TickOut> {
+        anyhow::ensure!(self.cfg.batch == 1, "naive scalar engine is single-lane");
         let m = self.cfg.m_tokens;
         let t = Mat::from_vec(m, self.cfg.d_in, tokens.data.clone());
         let (logits, out) = self.inner.tick(&t)?;

@@ -14,12 +14,15 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::baselines::{
-    ChainedStepModel, ChainedWindowModel, ContinualModel, StreamModel, WindowModel,
+    BatchedScalarModel, ChainedStepModel, ChainedWindowModel, ContinualModel, NaiveScalarModel,
+    ScalarModel, StreamModel, WindowModel,
 };
 use crate::bench_harness::pipeline::{clip_probe_eval, frame_probe_eval, sed_probe_eval};
 use crate::bench_harness::table::{fmt_secs, speedup, Table};
 use crate::bench_harness::{adaptive_ticks, measure_ticks};
 use crate::flops::{format_flops, per_tick, FlopsMode};
+use crate::manifest::ModelConfig;
+use crate::nn::params::ModelParams;
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
 use crate::workload::{audio, sed, text, video};
@@ -383,5 +386,73 @@ pub fn run_fig1(rt: &Runtime, opts: &BenchOpts, windows: &[usize]) -> Result<Tab
         }
     }
     table.emit(&opts.out_dir, "fig1")?;
+    Ok(table)
+}
+
+/// Geometry for the scalar-engine Fig. 1 companion sweep: Fig. 1's
+/// "deep encoder" regime scaled to the CPU engines (d=64, 4 heads).
+pub fn fig1_scalar_config(window: usize, depth: usize, batch: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::synthetic(64, 4, depth, window);
+    cfg.batch = batch;
+    cfg
+}
+
+/// Fig. 1 companion on the pure-Rust scalar engines — no PJRT, no
+/// artifacts (synthetic weights): per-tick latency of the pre-refactor
+/// naive stepper vs the ring-buffer stepper vs the 4-lane batched
+/// stepper (per-lane normalized), across window sizes at `depth`
+/// layers. This is the "standard implementation" baseline the paper's
+/// runtime comparisons lean on; the speedup column isolates what the
+/// zero-allocation ring refactor buys over allocator/memmove noise.
+pub fn run_fig1_scalar(opts: &BenchOpts, windows: &[usize], depth: usize) -> Result<Table> {
+    let mut table = Table::new(
+        &format!(
+            "Fig. 1 (scalar CPU engines, {depth} layers) — per-tick latency vs window size"
+        ),
+        &["Engine", "n", "latency/tick", "tps", "speedup vs naive"],
+    );
+    for &w in windows {
+        let cfg = fig1_scalar_config(w, depth, 1);
+        let params = ModelParams::synthetic(&cfg, &mut Rng::new(opts.seed ^ ((w as u64) << 8)));
+        let mut naive = NaiveScalarModel::from_parts(
+            format!("scalar-naive-n{w}"),
+            cfg.clone(),
+            params.clone(),
+        );
+        let naive_s = runtime_of(&mut naive, opts, opts.seed)?;
+        table.row(vec![
+            "scalar naive (pre-refactor)".into(),
+            w.to_string(),
+            fmt_secs(naive_s),
+            format!("{:.1}", 1.0 / naive_s),
+            "x1.00".into(),
+        ]);
+        let mut ring =
+            ScalarModel::from_parts(format!("scalar-ring-n{w}"), cfg.clone(), params.clone());
+        let ring_s = runtime_of(&mut ring, opts, opts.seed)?;
+        table.row(vec![
+            "scalar ring (KvRing)".into(),
+            w.to_string(),
+            fmt_secs(ring_s),
+            format!("{:.1}", 1.0 / ring_s),
+            speedup(naive_s, ring_s),
+        ]);
+        let bcfg = fig1_scalar_config(w, depth, 4);
+        let mut batched = BatchedScalarModel::from_parts(
+            format!("scalar-batched-b4-n{w}"),
+            bcfg,
+            params.clone(),
+        );
+        let batched_s = runtime_of(&mut batched, opts, opts.seed)?;
+        let per_lane = batched_s / 4.0;
+        table.row(vec![
+            "scalar batched B=4 (per lane)".into(),
+            w.to_string(),
+            fmt_secs(per_lane),
+            format!("{:.1}", 1.0 / per_lane),
+            speedup(naive_s, per_lane),
+        ]);
+    }
+    table.emit(&opts.out_dir, "fig1_scalar")?;
     Ok(table)
 }

@@ -1,6 +1,10 @@
 //! Regenerates Fig. 1 + supp. Figs. 2-3 (latency/throughput vs window).
+//!
+//! Two sweeps: the scalar CPU engines (always available — synthetic
+//! weights, no PJRT), then the PJRT variants when the XLA runtime and
+//! `make artifacts` output are present.
 use anyhow::Result;
-use deepcot::bench_harness::tables::{run_fig1, BenchOpts};
+use deepcot::bench_harness::tables::{run_fig1, run_fig1_scalar, BenchOpts};
 use deepcot::runtime::Runtime;
 use deepcot::util::cli::Cli;
 
@@ -8,13 +12,24 @@ fn main() -> Result<()> {
     let args = Cli::new("bench_fig1: runtime sweep (paper Fig. 1, supp. Figs. 2-3)")
         .opt("seed", "0", "workload seed")
         .opt("windows", "16,32,64,128,256,512", "window sizes to sweep")
+        .opt("depth", "4", "encoder depth for the scalar-engine sweep")
         .flag("quick", "reduced time budget")
+        .flag("no-scalar", "skip the scalar-engine sweep")
         .parse()?;
     let mut opts = if args.has("quick") { BenchOpts::quick() } else { BenchOpts::default() };
     opts.seed = args.get_u64("seed")?;
     let windows: Vec<usize> =
         args.get("windows").split(',').filter_map(|s| s.trim().parse().ok()).collect();
-    let rt = Runtime::new(&deepcot::artifacts_dir())?;
-    run_fig1(&rt, &opts, &windows)?;
+    if !args.has("no-scalar") {
+        run_fig1_scalar(&opts, &windows, args.get_usize("depth")?)?;
+    }
+    match Runtime::new(&deepcot::artifacts_dir()) {
+        Ok(rt) => {
+            run_fig1(&rt, &opts, &windows)?;
+        }
+        Err(e) => {
+            eprintln!("skipping PJRT sweep: {e}");
+        }
+    }
     Ok(())
 }

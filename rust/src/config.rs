@@ -8,12 +8,40 @@ use anyhow::Result;
 
 use crate::util::cli::{Args, Cli};
 
+/// Which execution backend the engine thread drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineBackend {
+    /// PJRT if it initializes, otherwise fall back to the batched
+    /// scalar engine (same manifest + weights).
+    #[default]
+    Auto,
+    /// Require the PJRT (XLA AOT) runtime.
+    Pjrt,
+    /// Require the pure-Rust batched scalar engine.
+    Scalar,
+}
+
+impl std::str::FromStr for EngineBackend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "pjrt" => Ok(Self::Pjrt),
+            "scalar" => Ok(Self::Scalar),
+            other => anyhow::bail!("unknown backend {other:?} (want auto|pjrt|scalar)"),
+        }
+    }
+}
+
 /// Engine (coordinator) configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub artifacts_dir: PathBuf,
     /// Batched step variant to serve (e.g. "serve_deepcot_b4").
     pub variant: String,
+    /// Execution backend (PJRT, scalar, or auto-fallback).
+    pub backend: EngineBackend,
     /// Flush a partial batch after this long (tail-latency bound).
     pub batch_deadline: Duration,
     /// Per-stream pending-token bound (backpressure).
@@ -29,6 +57,7 @@ impl Default for EngineConfig {
         Self {
             artifacts_dir: crate::artifacts_dir(),
             variant: "serve_deepcot_b4".to_string(),
+            backend: EngineBackend::Auto,
             batch_deadline: Duration::from_millis(2),
             max_queue_per_stream: 8,
             idle_timeout: Duration::from_secs(30),
@@ -42,6 +71,7 @@ impl EngineConfig {
     pub fn cli(cli: Cli) -> Cli {
         cli.opt("variant", "serve_deepcot_b4", "batched step variant to serve")
             .opt("artifacts", "", "artifacts dir (default: $DEEPCOT_ARTIFACTS or ./artifacts)")
+            .opt("backend", "auto", "execution backend: auto|pjrt|scalar")
             .opt("deadline-us", "2000", "partial-batch flush deadline (µs)")
             .opt("max-queue", "8", "per-stream pending token bound")
             .opt("idle-timeout-ms", "30000", "idle stream eviction (ms)")
@@ -53,6 +83,7 @@ impl EngineConfig {
             cfg.artifacts_dir = args.get("artifacts").into();
         }
         cfg.variant = args.get("variant").to_string();
+        cfg.backend = args.get("backend").parse()?;
         cfg.batch_deadline = Duration::from_micros(args.get_u64("deadline-us")?);
         cfg.max_queue_per_stream = args.get_usize("max-queue")?;
         cfg.idle_timeout = Duration::from_millis(args.get_u64("idle-timeout-ms")?);
@@ -76,7 +107,7 @@ mod tests {
         let cli = EngineConfig::cli(Cli::new("t"));
         let args = cli
             .parse_from(
-                ["--variant", "serve_deepcot_b1", "--deadline-us", "500"]
+                ["--variant", "serve_deepcot_b1", "--deadline-us", "500", "--backend", "scalar"]
                     .iter()
                     .map(|s| s.to_string()),
             )
@@ -84,5 +115,15 @@ mod tests {
         let c = EngineConfig::from_args(&args).unwrap();
         assert_eq!(c.variant, "serve_deepcot_b1");
         assert_eq!(c.batch_deadline, Duration::from_micros(500));
+        assert_eq!(c.backend, EngineBackend::Scalar);
+    }
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!("auto".parse::<EngineBackend>().unwrap(), EngineBackend::Auto);
+        assert_eq!("pjrt".parse::<EngineBackend>().unwrap(), EngineBackend::Pjrt);
+        assert_eq!("scalar".parse::<EngineBackend>().unwrap(), EngineBackend::Scalar);
+        assert!("gpu".parse::<EngineBackend>().is_err());
+        assert_eq!(EngineBackend::default(), EngineBackend::Auto);
     }
 }

@@ -1,7 +1,8 @@
-//! The serving engine: a dedicated thread owning the PJRT runtime (its
-//! handles are `Rc`-based, so everything device-touching lives here),
-//! fronted by bounded std::sync::mpsc channels — the offline stand-in
-//! for a tokio-based front-end, with identical backpressure semantics.
+//! The serving engine: a dedicated thread owning the execution backend
+//! (PJRT handles are `Rc`-based, so everything device-touching lives
+//! here; the scalar fallback backend is plain host memory), fronted by
+//! bounded std::sync::mpsc channels — the offline stand-in for a
+//! tokio-based front-end, with identical backpressure semantics.
 //!
 //! Data flow per tick:
 //!   clients → Push ─┐
@@ -17,12 +18,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineBackend, EngineConfig};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::router::{Admission, Router};
 use crate::coordinator::slot_stepper::SlotStepper;
 use crate::coordinator::slots::StreamId;
+use crate::manifest::Manifest;
+use crate::nn::params::ModelParams;
 use crate::runtime::Runtime;
 
 /// One tick's result delivered to a stream's owner.
@@ -131,12 +134,29 @@ fn engine_main(
     rx: Receiver<Request>,
     ready: Sender<Result<()>>,
 ) -> Result<()> {
-    let init = (|| -> Result<(Runtime, SlotStepper)> {
+    // Backend selection: PJRT when the XLA runtime is available, the
+    // pure-Rust batched scalar engine otherwise (or on request) — same
+    // manifest, same weights, same lane semantics.
+    let pjrt = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper)> {
         let rt = Runtime::new(&cfg.artifacts_dir)?;
         let variant = rt.load(&cfg.variant)?;
         let stepper = SlotStepper::new(variant)?;
-        Ok((rt, stepper))
-    })();
+        Ok((Some(rt), stepper))
+    };
+    let scalar = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper)> {
+        let (manifest, dir) = Manifest::load(&cfg.artifacts_dir)?;
+        let entry = manifest.variant(&cfg.variant)?;
+        let params = ModelParams::load(&dir, entry)?;
+        Ok((None, SlotStepper::new_scalar(entry, params)?))
+    };
+    let init = match cfg.backend {
+        EngineBackend::Pjrt => pjrt(&cfg),
+        EngineBackend::Scalar => scalar(&cfg),
+        EngineBackend::Auto => pjrt(&cfg).or_else(|pe| {
+            scalar(&cfg)
+                .map_err(|se| anyhow!("pjrt backend: {pe}; scalar fallback: {se}"))
+        }),
+    };
     let (_rt, mut stepper) = match init {
         Ok(v) => {
             let _ = ready.send(Ok(()));
@@ -147,8 +167,16 @@ fn engine_main(
             bail!("engine init failed");
         }
     };
+    // auto-fallback silently changes the latency class — always say
+    // which backend actually came up
+    eprintln!(
+        "deepcot engine: serving {} on the {} backend (B={})",
+        cfg.variant,
+        stepper.backend_name(),
+        stepper.capacity()
+    );
     let lane_elems = {
-        let c = &stepper.variant().entry.config;
+        let c = stepper.config();
         c.m_tokens * c.d_in
     };
     let mut router = Router::new(stepper.capacity(), cfg.idle_timeout);

@@ -1,12 +1,20 @@
-//! Batched continual stepper with per-lane stream state.
+//! Batched continual stepper with per-lane stream state, over either of
+//! two backends behind one [`SlotStepper`] front:
 //!
-//! Executes a batch-B step variant where each batch lane is one bound
-//! stream. State is mirrored host-side (the CPU PJRT feedback path
-//! round-trips through the host anyway), which buys two serving
-//! features for free:
+//! * **PJRT** — the batched AOT executable; state is mirrored host-side
+//!   (the CPU PJRT feedback path round-trips through the host anyway),
+//!   which buys masked lanes and lane recycling for free.
+//! * **Scalar** — [`BatchedScalarDeepCoT`]: the pure-Rust multi-lane
+//!   engine stepping all slots through single stacked shared-weight
+//!   matmuls over ring-buffer K/V memories. Used when the XLA shared
+//!   library is unavailable (engine backend `auto`/`scalar`), so the
+//!   whole coordinator — admission, batching, masking, churn — serves
+//!   real traffic with no device runtime at all.
+//!
+//! Lane semantics are identical across backends:
 //!   * masked lanes — a stream that skipped this tick keeps its previous
-//!     K/V memory (the executable's rolled output for that lane is
-//!     discarded);
+//!     K/V memory (the rolled output / ring push for that lane is
+//!     discarded or skipped);
 //!   * lane recycling — releasing a slot zeroes its lane, giving the
 //!     next stream a cold memory.
 //!
@@ -21,17 +29,11 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::TickPlan;
 use crate::coordinator::slots::StreamId;
+use crate::manifest::{ModelConfig, VariantEntry};
+use crate::nn::batched::BatchedScalarDeepCoT;
+use crate::nn::params::ModelParams;
+use crate::nn::tensor::Mat;
 use crate::runtime::{HostTensor, LoadedVariant};
-
-pub struct SlotStepper {
-    variant: Rc<LoadedVariant>,
-    /// host mirror of each state input (index-aligned with wiring order)
-    state: Vec<HostTensor>,
-    wiring: Vec<(usize, usize)>,
-    /// batch axis of each state tensor (family-dependent)
-    batch_axis: usize,
-    pub pos: i32,
-}
 
 /// Per-lane tick results.
 pub struct LaneOut {
@@ -41,8 +43,140 @@ pub struct LaneOut {
     pub out: Vec<f32>,
 }
 
+/// Backend-dispatching batched stepper.
+pub struct SlotStepper {
+    backend: Backend,
+}
+
+enum Backend {
+    Pjrt(PjrtSlotStepper),
+    Scalar(ScalarSlotStepper),
+}
+
 impl SlotStepper {
+    /// Batched PJRT backend over a loaded step variant.
     pub fn new(variant: Rc<LoadedVariant>) -> Result<Self> {
+        Ok(Self { backend: Backend::Pjrt(PjrtSlotStepper::new(variant)?) })
+    }
+
+    /// Pure-Rust scalar backend from a manifest entry + host weights
+    /// (no PJRT client, no XLA shared library).
+    pub fn new_scalar(entry: &VariantEntry, params: ModelParams) -> Result<Self> {
+        Ok(Self { backend: Backend::Scalar(ScalarSlotStepper::new(entry, params)?) })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Scalar(_) => "scalar",
+        }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        match &self.backend {
+            Backend::Pjrt(s) => &s.variant.entry.config,
+            Backend::Scalar(s) => &s.cfg,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.config().batch
+    }
+
+    /// Zero a lane's state (stream released / new stream admitted).
+    pub fn clear_lane(&mut self, lane: usize) {
+        match &mut self.backend {
+            Backend::Pjrt(s) => s.clear_lane(lane),
+            Backend::Scalar(s) => s.model.reset_lane(lane),
+        }
+    }
+
+    /// Run one batched tick for the planned lanes.
+    pub fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
+        match &mut self.backend {
+            Backend::Pjrt(s) => s.tick(plan),
+            Backend::Scalar(s) => s.tick(plan),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar backend
+
+struct ScalarSlotStepper {
+    cfg: ModelConfig,
+    model: BatchedScalarDeepCoT,
+    /// Reused per-tick staging (stacked lane tokens + live mask).
+    tokens: Mat,
+    live: Vec<bool>,
+}
+
+impl ScalarSlotStepper {
+    fn new(entry: &VariantEntry, params: ModelParams) -> Result<Self> {
+        if entry.family != "deepcot" {
+            bail!(
+                "scalar slot backend implements the deepcot family only (got {})",
+                entry.family
+            );
+        }
+        // same contract as the PJRT backend: only continual-step
+        // variants have per-lane state to slot
+        if !entry.is_step() {
+            bail!("scalar slot backend needs a continual step variant (entry has no state wiring)");
+        }
+        let cfg = entry.config.clone();
+        let b = cfg.batch;
+        anyhow::ensure!(b >= 1, "batched variant must have batch >= 1");
+        let model = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, b);
+        let tokens = Mat::zeros(b * cfg.m_tokens, cfg.d_in);
+        Ok(Self { cfg, model, tokens, live: vec![false; b] })
+    }
+
+    fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
+        let (b, m, d_in) = (self.cfg.batch, self.cfg.m_tokens, self.cfg.d_in);
+        let lane_elems = m * d_in;
+        self.live.iter_mut().for_each(|v| *v = false);
+        self.tokens.fill(0.0);
+        for (slot, _, toks, _) in &plan.lanes {
+            anyhow::ensure!(*slot < b, "slot {slot} out of range (B={b})");
+            anyhow::ensure!(
+                toks.len() == lane_elems,
+                "lane tokens {} != m*d_in {}",
+                toks.len(),
+                lane_elems
+            );
+            self.tokens.data[slot * lane_elems..(slot + 1) * lane_elems].copy_from_slice(toks);
+            self.live[*slot] = true;
+        }
+        let step = self.model.tick_lanes(&self.tokens, &self.live)?;
+        let mut res = Vec::with_capacity(plan.lanes.len());
+        for (slot, stream, _, _) in &plan.lanes {
+            res.push(LaneOut {
+                slot: *slot,
+                stream: *stream,
+                logits: step.logits.row(*slot).to_vec(),
+                out: step.out.rows_view(slot * m, m).as_slice().to_vec(),
+            });
+        }
+        Ok(res)
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT backend
+
+struct PjrtSlotStepper {
+    variant: Rc<LoadedVariant>,
+    /// host mirror of each state input (index-aligned with wiring order)
+    state: Vec<HostTensor>,
+    wiring: Vec<(usize, usize)>,
+    /// batch axis of each state tensor (family-dependent)
+    batch_axis: usize,
+    pos: i32,
+}
+
+impl PjrtSlotStepper {
+    fn new(variant: Rc<LoadedVariant>) -> Result<Self> {
         if !variant.entry.is_step() {
             bail!("{} is not a step variant", variant.name);
         }
@@ -56,14 +190,6 @@ impl SlotStepper {
             .map(|&(_, inp)| HostTensor::zeros(variant.entry.inputs[inp].shape.clone()))
             .collect();
         Ok(Self { variant, state, wiring, batch_axis, pos: 0 })
-    }
-
-    pub fn variant(&self) -> &Rc<LoadedVariant> {
-        &self.variant
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.variant.entry.config.batch
     }
 
     /// Element range(s) of one lane within a state tensor of `shape`.
@@ -80,8 +206,7 @@ impl SlotStepper {
             .collect()
     }
 
-    /// Zero a lane's state (stream released / new stream admitted).
-    pub fn clear_lane(&mut self, lane: usize) {
+    fn clear_lane(&mut self, lane: usize) {
         for si in 0..self.state.len() {
             let shape = self.state[si].shape.clone();
             for r in self.lane_ranges(&shape, lane) {
@@ -90,8 +215,7 @@ impl SlotStepper {
         }
     }
 
-    /// Run one batched tick for the planned lanes.
-    pub fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
+    fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
         let variant = self.variant.clone(); // Rc bump
         let entry = &variant.entry;
         let cfg = &entry.config;

@@ -17,12 +17,19 @@
 //!   [`baselines::StreamModel`] trait (regular encoder, Continual
 //!   Transformer, Nyströmformer, FNet, DeepCoT, DeepCoT-XL, MAT-SED
 //!   pipeline).
-//! - [`nn`] — pure-Rust scalar reference engine (oracle + CPU baseline).
+//! - [`nn`] — pure-Rust scalar reference engine (oracle + CPU baseline):
+//!   ring-buffer K/V memories and batched multi-lane stepping with zero
+//!   steady-state allocation; also the coordinator's fallback backend
+//!   when the XLA shared library is absent.
 //! - [`flops`] — the paper's analytic FLOPs accounting.
 //! - [`workload`] — synthetic stream corpora standing in for THUMOS14 /
 //!   GTZAN / URBAN-SED / GLUE (DESIGN.md §2).
 //! - [`probe`] — ridge/logistic readouts + metrics (accuracy, mAP, F1).
 //! - [`bench_harness`] — regenerates every paper table and figure.
+
+// Numeric kernels index with explicit offsets on purpose (mirrors the
+// papers' loop nests and keeps summation order auditable).
+#![allow(clippy::needless_range_loop)]
 
 pub mod baselines;
 pub mod util;

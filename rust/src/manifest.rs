@@ -62,6 +62,30 @@ impl ModelConfig {
     pub fn mem_len(&self) -> usize {
         self.window - self.m_tokens
     }
+
+    /// Synthetic geometry for hermetic tests and scalar benchmarks:
+    /// softmax / layernorm / gelu / rope, `d_in = d_model / 2`,
+    /// `ffn_mult = 2`, 10 classes, single token per tick, batch 1.
+    /// Callers override individual fields for other regimes.
+    pub fn synthetic(d_model: usize, n_heads: usize, n_layers: usize, window: usize) -> Self {
+        Self {
+            d_in: d_model / 2,
+            d_model,
+            n_heads,
+            n_layers,
+            window,
+            m_tokens: 1,
+            ffn_mult: 2,
+            n_classes: 10,
+            batch: 1,
+            activation: "softmax".to_string(),
+            norm: "layernorm".to_string(),
+            ffn_act: "gelu".to_string(),
+            pos: "rope".to_string(),
+            n_landmarks: 0,
+            use_pallas: false,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]

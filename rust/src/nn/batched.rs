@@ -1,0 +1,288 @@
+//! Batched multi-lane continual stepping with zero steady-state
+//! allocation — the scalar engine's answer to the coordinator's slot
+//! batching.
+//!
+//! [`BatchedScalarDeepCoT`] steps `lanes` independent streams at once:
+//! lane token rows are stacked into one `(lanes·m x d)` matrix so every
+//! Q/K/V/FFN projection is a single shared-weight matmul, while
+//! attention and the per-lane [`KvRing`] memories stay lane-local.
+//! All intermediates live in a [`Scratch`] workspace allocated once at
+//! construction; a steady-state tick performs no heap allocation and no
+//! memory roll (see `tests/zero_alloc.rs`).
+//!
+//! Lane semantics mirror `coordinator::slot_stepper`: all lanes share
+//! one position clock (RoPE's relative-offset property makes attention
+//! invariant to the common shift), and a lane masked out of a tick
+//! keeps its K/V memory untouched — its stacked rows are still computed
+//! (fixed batch shape, like the batched PJRT executable) but discarded.
+
+use anyhow::Result;
+
+use crate::manifest::ModelConfig;
+use crate::nn::encoder::residual;
+use crate::nn::kv_ring::KvRing;
+use crate::nn::params::ModelParams;
+use crate::nn::rope::apply_rope_inplace;
+use crate::nn::tensor::{dot, gelu, softmax_inplace, sqdist, Mat};
+
+/// Preallocated per-tick workspace, sized once from the model geometry.
+#[derive(Debug, Clone)]
+struct Scratch {
+    /// Activations (lanes·m x d_model); holds the final layer output
+    /// after a tick.
+    x: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// Per-head attention outputs gathered back to (lanes·m x d_model).
+    attn: Mat,
+    /// Sub-layer output (attention projection, then FFN output).
+    proj: Mat,
+    /// FFN hidden activations (lanes·m x d_ffn).
+    hid: Mat,
+    /// Attention scores over [memory; new tokens] (mem_len + m).
+    scores: Vec<f32>,
+    /// Per-lane logits (lanes x n_classes).
+    logits: Mat,
+    /// Which lanes advance this tick.
+    live: Vec<bool>,
+}
+
+impl Scratch {
+    fn new(cfg: &ModelConfig, lanes: usize) -> Self {
+        let rows = lanes * cfg.m_tokens;
+        let d = cfg.d_model;
+        Self {
+            x: Mat::zeros(rows, d),
+            q: Mat::zeros(rows, d),
+            k: Mat::zeros(rows, d),
+            v: Mat::zeros(rows, d),
+            attn: Mat::zeros(rows, d),
+            proj: Mat::zeros(rows, d),
+            hid: Mat::zeros(rows, cfg.d_ffn()),
+            scores: vec![0.0; cfg.mem_len() + cfg.m_tokens],
+            logits: Mat::zeros(lanes, cfg.n_classes),
+            live: vec![true; lanes],
+        }
+    }
+}
+
+/// Borrowed per-tick outputs (valid until the next mutation).
+pub struct StepOut<'a> {
+    /// (lanes x n_classes)
+    pub logits: &'a Mat,
+    /// (lanes·m x d_model) final-layer activations, lane-major.
+    pub out: &'a Mat,
+}
+
+/// Multi-lane continual DeepCoT stepper over ring-buffer K/V memories.
+pub struct BatchedScalarDeepCoT {
+    cfg: ModelConfig,
+    p: ModelParams,
+    lanes: usize,
+    /// Ring per (lane, layer, head): index `(lane·L + layer)·H + head`.
+    kmem: Vec<KvRing>,
+    vmem: Vec<KvRing>,
+    scratch: Scratch,
+    /// Shared position clock (advances by m_tokens every tick).
+    pub pos: i32,
+}
+
+impl BatchedScalarDeepCoT {
+    /// One lane per configured batch slot.
+    pub fn new(cfg: ModelConfig, p: ModelParams) -> Self {
+        let lanes = cfg.batch.max(1);
+        Self::with_lanes(cfg, p, lanes)
+    }
+
+    pub fn with_lanes(cfg: ModelConfig, p: ModelParams, lanes: usize) -> Self {
+        assert!(lanes > 0, "need at least one lane");
+        let (l, h, mlen, dh) = (cfg.n_layers, cfg.n_heads, cfg.mem_len(), cfg.d_head());
+        let n = lanes * l * h;
+        let kmem = (0..n).map(|_| KvRing::new(mlen, dh)).collect();
+        let vmem = (0..n).map(|_| KvRing::new(mlen, dh)).collect();
+        let scratch = Scratch::new(&cfg, lanes);
+        Self { cfg, p, lanes, kmem, vmem, scratch, pos: 0 }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Cold-start every lane and rewind the clock.
+    pub fn reset(&mut self) {
+        for r in self.kmem.iter_mut().chain(self.vmem.iter_mut()) {
+            r.reset();
+        }
+        self.pos = 0;
+    }
+
+    /// Cold-start one lane (slot released / new stream admitted); the
+    /// shared clock is untouched, matching the slot stepper.
+    pub fn reset_lane(&mut self, lane: usize) {
+        assert!(lane < self.lanes);
+        let per_lane = self.cfg.n_layers * self.cfg.n_heads;
+        for i in lane * per_lane..(lane + 1) * per_lane {
+            self.kmem[i].reset();
+            self.vmem[i].reset();
+        }
+    }
+
+    /// Step every lane. `tokens` is (lanes·m x d_in), lane-major.
+    pub fn tick_all(&mut self, tokens: &Mat) -> Result<StepOut<'_>> {
+        self.scratch.live.fill(true);
+        self.step(tokens)
+    }
+
+    /// Step with a lane mask: masked lanes keep their K/V memory and
+    /// their outputs are garbage (callers drop them) — the scalar twin
+    /// of the slot stepper's masked-lane semantics.
+    pub fn tick_lanes(&mut self, tokens: &Mat, live: &[bool]) -> Result<StepOut<'_>> {
+        anyhow::ensure!(
+            live.len() == self.lanes,
+            "live mask {} != lanes {}",
+            live.len(),
+            self.lanes
+        );
+        self.scratch.live.copy_from_slice(live);
+        self.step(tokens)
+    }
+
+    fn step(&mut self, tokens: &Mat) -> Result<StepOut<'_>> {
+        let lanes = self.lanes;
+        let (m, h, dh, mlen) =
+            (self.cfg.m_tokens, self.cfg.n_heads, self.cfg.d_head(), self.cfg.mem_len());
+        let rope = self.cfg.pos == "rope";
+        let softmax = self.cfg.activation == "softmax";
+        let gelu_act = self.cfg.ffn_act == "gelu";
+        anyhow::ensure!(
+            tokens.rows == lanes * m && tokens.cols == self.cfg.d_in,
+            "tokens ({} x {}) != (lanes*m = {} x d_in = {})",
+            tokens.rows,
+            tokens.cols,
+            lanes * m,
+            self.cfg.d_in
+        );
+        let n_layers = self.p.layers.len();
+        let p = &self.p;
+        let Scratch { x, q, k, v, attn, proj, hid, scores, logits, live } = &mut self.scratch;
+
+        tokens.matmul_into(&p.w_in, x);
+        x.add_row(&p.b_in);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let n_ctx = mlen + m;
+        for (li, lp) in p.layers.iter().enumerate() {
+            x.matmul_into(&lp.wq, q);
+            q.add_row(&lp.bq);
+            x.matmul_into(&lp.wk, k);
+            k.add_row(&lp.bk);
+            x.matmul_into(&lp.wv, v);
+            v.add_row(&lp.bv);
+            if rope {
+                for row in 0..lanes * m {
+                    let pp = self.pos + (row % m) as i32;
+                    for hh in 0..h {
+                        apply_rope_inplace(&mut q.row_mut(row)[hh * dh..(hh + 1) * dh], pp);
+                        apply_rope_inplace(&mut k.row_mut(row)[hh * dh..(hh + 1) * dh], pp);
+                    }
+                }
+            }
+            attn.fill(0.0);
+            for lane in 0..lanes {
+                if !live[lane] {
+                    continue;
+                }
+                for hh in 0..h {
+                    let ridx = (lane * n_layers + li) * h + hh;
+                    let kring = &self.kmem[ridx];
+                    let vring = &self.vmem[ridx];
+                    for t in 0..m {
+                        let row = lane * m + t;
+                        let s = &mut scores[..n_ctx];
+                        let qh = &q.row(row)[hh * dh..(hh + 1) * dh];
+                        // scores over [memory oldest..newest; new rows],
+                        // the exact logical order (and thus summation
+                        // order) of the old [memory; new] concatenation
+                        if softmax {
+                            for (j, krow) in kring.iter_rows().enumerate() {
+                                s[j] = dot(qh, krow) * scale;
+                            }
+                            for j in 0..m {
+                                let kh = &k.row(lane * m + j)[hh * dh..(hh + 1) * dh];
+                                s[mlen + j] = dot(qh, kh) * scale;
+                            }
+                            softmax_inplace(s);
+                        } else {
+                            // SOFT (paper Eq. 4): unnormalized Gaussian kernel
+                            for (j, krow) in kring.iter_rows().enumerate() {
+                                s[j] = (-sqdist(qh, krow) * 0.5 * scale).exp();
+                            }
+                            for j in 0..m {
+                                let kh = &k.row(lane * m + j)[hh * dh..(hh + 1) * dh];
+                                s[mlen + j] = (-sqdist(qh, kh) * 0.5 * scale).exp();
+                            }
+                        }
+                        let orow = &mut attn.row_mut(row)[hh * dh..(hh + 1) * dh];
+                        for (j, vrow) in vring.iter_rows().enumerate() {
+                            let w = s[j];
+                            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                                *o += w * vv;
+                            }
+                        }
+                        for j in 0..m {
+                            let w = s[mlen + j];
+                            let vrow = &v.row(lane * m + j)[hh * dh..(hh + 1) * dh];
+                            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                                *o += w * vv;
+                            }
+                        }
+                    }
+                    // advance the ring: the m new rows overwrite the m
+                    // oldest — no copy_within, no reallocation
+                    let kring = &mut self.kmem[ridx];
+                    for t in 0..m {
+                        kring.push(&k.row(lane * m + t)[hh * dh..(hh + 1) * dh]);
+                    }
+                    let vring = &mut self.vmem[ridx];
+                    for t in 0..m {
+                        vring.push(&v.row(lane * m + t)[hh * dh..(hh + 1) * dh]);
+                    }
+                }
+            }
+            attn.matmul_into(&lp.wo, proj);
+            proj.add_row(&lp.bo);
+            residual(lp, x, proj, 0);
+            x.matmul_into(&lp.w1, hid);
+            hid.add_row(&lp.b1);
+            if gelu_act {
+                for vv in hid.data.iter_mut() {
+                    *vv = gelu(*vv);
+                }
+            }
+            hid.matmul_into(&lp.w2, proj);
+            proj.add_row(&lp.b2);
+            residual(lp, x, proj, 1);
+        }
+        self.pos += m as i32;
+        // classifier head on each lane's newest token (bias added after
+        // the product sum, matching Mat::matmul + add_row order)
+        for lane in 0..lanes {
+            let xr = x.row(lane * m + m - 1);
+            let lrow = logits.row_mut(lane);
+            lrow.fill(0.0);
+            for (kk, &xv) in xr.iter().enumerate() {
+                for (o, &wv) in lrow.iter_mut().zip(p.w_cls.row(kk)) {
+                    *o += xv * wv;
+                }
+            }
+            for (o, &b) in lrow.iter_mut().zip(&p.b_cls) {
+                *o += b;
+            }
+        }
+        Ok(StepOut { logits, out: x })
+    }
+}

@@ -5,16 +5,27 @@
 //! Mirrors `python/compile/model.py` numerics exactly: post-norm
 //! residuals (LayerNorm or ReZero), tanh-GELU or linear FFN, softmax or
 //! SOFT attention, interleaved RoPE.
+//!
+//! [`ScalarDeepCoT`] is the single-lane continual stepper. Since the
+//! ring-buffer refactor it is a thin wrapper over
+//! [`BatchedScalarDeepCoT`](crate::nn::batched::BatchedScalarDeepCoT)
+//! with one lane: K/V memories live in [`crate::nn::kv_ring::KvRing`]s
+//! (no per-tick memory roll) and all intermediates in a preallocated
+//! scratch workspace, so a steady-state [`ScalarDeepCoT::tick`]
+//! performs zero heap allocations. The pre-refactor implementation is
+//! preserved as [`crate::nn::naive::NaiveScalarDeepCoT`] for
+//! benchmarking and refactor-equivalence tests.
 
 use anyhow::Result;
 
 use crate::manifest::ModelConfig;
+use crate::nn::batched::BatchedScalarDeepCoT;
 use crate::nn::params::{LayerParams, ModelParams, Norm};
 use crate::nn::rope::apply_rope_inplace;
 use crate::nn::tensor::{dot, gelu, layer_norm_inplace, softmax_inplace, sqdist, Mat};
 
 /// x (T x d) -> q/k/v (T x d) with bias.
-fn project(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
+pub(crate) fn project(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
     let mut out = x.matmul(w);
     out.add_row(b);
     out
@@ -22,11 +33,14 @@ fn project(x: &Mat, w: &Mat, b: &[f32]) -> Mat {
 
 /// Split row-major (T x d) into per-head (T x dh) slices on the fly.
 #[inline]
-fn head_slice(m: &Mat, t: usize, h: usize, dh: usize) -> &[f32] {
+pub(crate) fn head_slice(m: &Mat, t: usize, h: usize, dh: usize) -> &[f32] {
     &m.row(t)[h * dh..(h + 1) * dh]
 }
 
-fn residual(cfg: &ModelConfig, lp: &LayerParams, x: &mut Mat, sub: &Mat, idx: usize) {
+/// Post-norm residual over every row of `x`: `x += sub` (scaled for
+/// ReZero), then the sub-layer's norm. `idx` selects the attention (0)
+/// or FFN (1) parameter set.
+pub(crate) fn residual(lp: &LayerParams, x: &mut Mat, sub: &Mat, idx: usize) {
     match (&lp.norm, idx) {
         (Norm::LayerNorm { g1, be1, .. }, 0) => {
             for t in 0..x.rows {
@@ -53,10 +67,9 @@ fn residual(cfg: &ModelConfig, lp: &LayerParams, x: &mut Mat, sub: &Mat, idx: us
             }
         }
     }
-    let _ = cfg;
 }
 
-fn ffn(cfg: &ModelConfig, lp: &LayerParams, x: &Mat) -> Mat {
+pub(crate) fn ffn(cfg: &ModelConfig, lp: &LayerParams, x: &Mat) -> Mat {
     let mut h = project(x, &lp.w1, &lp.b1);
     if cfg.ffn_act == "gelu" {
         for v in h.data.iter_mut() {
@@ -67,7 +80,7 @@ fn ffn(cfg: &ModelConfig, lp: &LayerParams, x: &Mat) -> Mat {
 }
 
 /// Attention weights of one query row against a K matrix (rows x dh).
-fn attn_weights(cfg: &ModelConfig, q: &[f32], keys: &Mat) -> Vec<f32> {
+pub(crate) fn attn_weights(cfg: &ModelConfig, q: &[f32], keys: &Mat) -> Vec<f32> {
     let dh = q.len() as f32;
     let scale = 1.0 / dh.sqrt();
     let mut s: Vec<f32> = (0..keys.rows).map(|j| dot(q, keys.row(j)) * scale).collect();
@@ -125,9 +138,9 @@ pub fn encoder_forward(
             }
         }
         let a = project(&attn_out, &lp.wo, &lp.bo);
-        residual(cfg, lp, &mut x, &a, 0);
+        residual(lp, &mut x, &a, 0);
         let f = ffn(cfg, lp, &x);
-        residual(cfg, lp, &mut x, &f, 1);
+        residual(lp, &mut x, &f, 1);
     }
     let last = Mat::from_vec(1, cfg.d_model, x.row(n - 1).to_vec());
     let mut logits = last.matmul(&p.w_cls);
@@ -135,94 +148,40 @@ pub fn encoder_forward(
     Ok((logits.data, x))
 }
 
-/// Continual DeepCoT stepper, one lane (B handled by the caller).
-/// Per-layer K/V memories are (mem_len x dh) per head.
+/// Continual DeepCoT stepper, one lane (B handled by the caller or by
+/// [`BatchedScalarDeepCoT`] directly).
+///
+/// Steady-state guarantee: after construction, [`ScalarDeepCoT::tick`]
+/// performs zero heap allocations — K/V memories are fixed-storage
+/// rings and every intermediate lives in the preallocated scratch
+/// workspace. The returned slices borrow that workspace and are valid
+/// until the next tick.
 pub struct ScalarDeepCoT {
-    pub cfg: ModelConfig,
-    p: ModelParams,
-    /// kmem[layer][head]: (mem_len x dh)
-    kmem: Vec<Vec<Mat>>,
-    vmem: Vec<Vec<Mat>>,
-    pub pos: i32,
+    inner: BatchedScalarDeepCoT,
 }
 
 impl ScalarDeepCoT {
     pub fn new(cfg: ModelConfig, p: ModelParams) -> Self {
-        let (l, h, mlen, dh) = (cfg.n_layers, cfg.n_heads, cfg.mem_len(), cfg.d_head());
-        let zmem = || vec![vec![Mat::zeros(mlen, dh); h]; l];
-        Self { cfg, p, kmem: zmem(), vmem: zmem(), pos: 0 }
+        Self { inner: BatchedScalarDeepCoT::with_lanes(cfg, p, 1) }
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        self.inner.cfg()
+    }
+
+    /// Absolute position of the next incoming token.
+    pub fn pos(&self) -> i32 {
+        self.inner.pos
     }
 
     pub fn reset(&mut self) {
-        for lm in self.kmem.iter_mut().chain(self.vmem.iter_mut()) {
-            for m in lm {
-                m.data.iter_mut().for_each(|v| *v = 0.0);
-            }
-        }
-        self.pos = 0;
+        self.inner.reset();
     }
 
-    /// One tick: `tokens` (m x d_in) -> (logits, out (m x d)).
-    pub fn tick(&mut self, tokens: &Mat) -> Result<(Vec<f32>, Mat)> {
-        let cfg = self.cfg.clone();
-        let (m, h, dh, mlen) = (cfg.m_tokens, cfg.n_heads, cfg.d_head(), cfg.mem_len());
-        anyhow::ensure!(tokens.rows == m && tokens.cols == cfg.d_in);
-        let mut x = project(tokens, &self.p.w_in, &self.p.b_in);
-        for (li, lp) in self.p.layers.iter().enumerate() {
-            let mut q = project(&x, &lp.wq, &lp.bq);
-            let mut k = project(&x, &lp.wk, &lp.bk);
-            let v = project(&x, &lp.wv, &lp.bv);
-            if cfg.pos == "rope" {
-                for t in 0..m {
-                    for hh in 0..h {
-                        let pp = self.pos + t as i32;
-                        apply_rope_inplace(&mut q.row_mut(t)[hh * dh..(hh + 1) * dh], pp);
-                        apply_rope_inplace(&mut k.row_mut(t)[hh * dh..(hh + 1) * dh], pp);
-                    }
-                }
-            }
-            let mut attn_out = Mat::zeros(m, cfg.d_model);
-            for hh in 0..h {
-                // kcat = [memory; new keys]  (n x dh)
-                let mut kcat = Mat::zeros(mlen + m, dh);
-                let mut vcat = Mat::zeros(mlen + m, dh);
-                for j in 0..mlen {
-                    kcat.row_mut(j).copy_from_slice(self.kmem[li][hh].row(j));
-                    vcat.row_mut(j).copy_from_slice(self.vmem[li][hh].row(j));
-                }
-                for t in 0..m {
-                    kcat.row_mut(mlen + t).copy_from_slice(head_slice(&k, t, hh, dh));
-                    vcat.row_mut(mlen + t).copy_from_slice(head_slice(&v, t, hh, dh));
-                }
-                for t in 0..m {
-                    let w = attn_weights(&cfg, head_slice(&q, t, hh, dh), &kcat);
-                    let orow = &mut attn_out.row_mut(t)[hh * dh..(hh + 1) * dh];
-                    for (j, &wj) in w.iter().enumerate() {
-                        for (o, &vv) in orow.iter_mut().zip(vcat.row(j)) {
-                            *o += wj * vv;
-                        }
-                    }
-                }
-                // roll memory: drop oldest m rows, append the new ones
-                let km = &mut self.kmem[li][hh];
-                let vm = &mut self.vmem[li][hh];
-                km.data.copy_within(m * dh.., 0);
-                vm.data.copy_within(m * dh.., 0);
-                for t in 0..m {
-                    let dst = (mlen - m + t) * dh;
-                    km.data[dst..dst + dh].copy_from_slice(head_slice(&k, t, hh, dh));
-                    vm.data[dst..dst + dh].copy_from_slice(head_slice(&v, t, hh, dh));
-                }
-            }
-            let a = project(&attn_out, &lp.wo, &lp.bo);
-            residual(&cfg, lp, &mut x, &a, 0);
-            let f = ffn(&cfg, lp, &x);
-            residual(&cfg, lp, &mut x, &f, 1);
-        }
-        self.pos += m as i32;
-        let last = Mat::from_vec(1, cfg.d_model, x.row(m - 1).to_vec());
-        let mut logits = last.matmul(&self.p.w_cls);
-        logits.add_row(&self.p.b_cls);
-        Ok((logits.data, x))
+    /// One tick: `tokens` (m x d_in) -> (logits, out (m x d)), both
+    /// borrowed from the internal workspace.
+    pub fn tick(&mut self, tokens: &Mat) -> Result<(&[f32], &Mat)> {
+        let out = self.inner.tick_all(tokens)?;
+        Ok((out.logits.row(0), out.out))
     }
 }

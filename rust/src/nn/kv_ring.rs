@@ -1,0 +1,161 @@
+//! Circular Key/Value memory with fixed backing storage.
+//!
+//! The continual stepper keeps, per layer per head (per lane), the last
+//! `mem_len` K and V rows. The pre-refactor implementation stored them
+//! flat and advanced time with `copy_within` (an O(mem_len · d_head)
+//! shuffle per head per layer per tick) plus a fresh `[memory; new]`
+//! concatenation for attention. [`KvRing`] replaces both: storage never
+//! moves, a head index advances instead, and attention iterates the
+//! ring in logical (oldest → newest) order via [`KvRing::iter_rows`] —
+//! the same circular-buffer design the Continual Transformers line of
+//! work uses for stateful KV caches.
+//!
+//! Semantics match the engine's cold-start convention: the ring is born
+//! logically *full of zero rows* (a cold memory attends over zeros,
+//! exactly like the zero-initialized flat memory it replaces), and each
+//! [`KvRing::push`] overwrites the oldest row with the newest.
+
+/// Fixed-capacity circular buffer of `rows` vectors of width `dh`.
+#[derive(Debug, Clone)]
+pub struct KvRing {
+    rows: usize,
+    dh: usize,
+    /// Physical index of the oldest logical row (== next write slot).
+    head: usize,
+    data: Vec<f32>,
+}
+
+impl KvRing {
+    pub fn new(rows: usize, dh: usize) -> Self {
+        Self { rows, dh, head: 0, data: vec![0.0; rows * dh] }
+    }
+
+    /// Logical capacity in rows (always full; zeros stand in for
+    /// not-yet-written history).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dh(&self) -> usize {
+        self.dh
+    }
+
+    /// Back to a cold memory: all-zero rows, head reset.
+    pub fn reset(&mut self) {
+        self.data.fill(0.0);
+        self.head = 0;
+    }
+
+    /// Logical row `i` (0 = oldest, `rows - 1` = newest). Panics on an
+    /// out-of-range index — including ANY index at zero capacity, where
+    /// the bare `%` would otherwise abort with a divide-by-zero.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert!(i < self.rows, "KvRing::row: index {i} >= capacity {}", self.rows);
+        let p = (self.head + i) % self.rows;
+        &self.data[p * self.dh..(p + 1) * self.dh]
+    }
+
+    /// Append the newest row, dropping the oldest. No memory moves
+    /// beyond the single `dh`-wide write. No-op at zero capacity
+    /// (window == m_tokens: no carried memory).
+    pub fn push(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.dh);
+        if self.rows == 0 {
+            return;
+        }
+        let p = self.head;
+        self.data[p * self.dh..(p + 1) * self.dh].copy_from_slice(row);
+        self.head = (self.head + 1) % self.rows;
+    }
+
+    /// The ring contents as (older, newer) contiguous slices, logical
+    /// order preserved across the pair.
+    pub fn as_slices(&self) -> (&[f32], &[f32]) {
+        let split = self.head * self.dh;
+        (&self.data[split..], &self.data[..split])
+    }
+
+    /// Iterate logical rows oldest → newest without materializing a
+    /// concatenated copy.
+    #[inline]
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> + '_ {
+        let (a, b) = self.as_slices();
+        a.chunks_exact(self.dh).chain(b.chunks_exact(self.dh))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rowv(ring: &KvRing) -> Vec<f32> {
+        ring.iter_rows().map(|r| r[0]).collect()
+    }
+
+    #[test]
+    fn born_full_of_zeros() {
+        let r = KvRing::new(3, 2);
+        assert_eq!(r.rows(), 3);
+        assert_eq!(rowv(&r), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn push_drops_oldest_in_logical_order() {
+        let mut r = KvRing::new(3, 1);
+        r.push(&[1.0]);
+        assert_eq!(rowv(&r), vec![0.0, 0.0, 1.0]);
+        r.push(&[2.0]);
+        r.push(&[3.0]);
+        assert_eq!(rowv(&r), vec![1.0, 2.0, 3.0]);
+        r.push(&[4.0]);
+        assert_eq!(rowv(&r), vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn wraparound_many_times_preserves_order() {
+        // fill far beyond capacity: 13 pushes through a 5-row ring wraps
+        // twice and lands mid-buffer; logical order must stay exact
+        let mut r = KvRing::new(5, 2);
+        for i in 0..13 {
+            r.push(&[i as f32, -(i as f32)]);
+        }
+        for (j, row) in r.iter_rows().enumerate() {
+            let want = (8 + j) as f32;
+            assert_eq!(row, &[want, -want]);
+            assert_eq!(r.row(j), &[want, -want]);
+        }
+        let (a, b) = r.as_slices();
+        assert_eq!(a.len() + b.len(), 5 * 2);
+    }
+
+    #[test]
+    fn row_and_iter_agree_after_partial_wrap() {
+        let mut r = KvRing::new(4, 1);
+        for i in 0..6 {
+            r.push(&[i as f32]);
+        }
+        let via_iter = rowv(&r);
+        let via_rows: Vec<f32> = (0..4).map(|i| r.row(i)[0]).collect();
+        assert_eq!(via_iter, via_rows);
+        assert_eq!(via_iter, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn reset_restores_cold_zero_memory() {
+        let mut r = KvRing::new(3, 1);
+        r.push(&[7.0]);
+        r.push(&[8.0]);
+        r.reset();
+        assert_eq!(rowv(&r), vec![0.0, 0.0, 0.0]);
+        r.push(&[1.0]);
+        assert_eq!(rowv(&r), vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_capacity_is_a_noop() {
+        let mut r = KvRing::new(0, 4);
+        r.push(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.iter_rows().count(), 0);
+    }
+}

@@ -5,9 +5,30 @@
 //!    all three implementations;
 //! 2. the "standard implementation" CPU baseline for runtime tables;
 //! 3. the numeric core for the probe trainer (ridge solve).
+//!
+//! Layout after the ring-buffer refactor:
+//! - [`tensor`]  — dense `Mat` math with in-place `_into` primitives and
+//!   row-range views; branch-free inner loops so timings track FLOPs.
+//! - [`kv_ring`] — fixed-storage circular K/V memory ([`kv_ring::KvRing`]):
+//!   no `copy_within` roll, no `[memory; new]` concatenation.
+//! - [`batched`] — [`batched::BatchedScalarDeepCoT`], the multi-lane
+//!   stepper: lane rows stacked into single shared-weight matmuls, all
+//!   intermediates in a preallocated scratch workspace (steady-state
+//!   ticks allocate nothing). Backs both the single-lane CPU baseline
+//!   and the coordinator's scalar slot backend.
+//! - [`encoder`] — the full-window oracle (`encoder_forward`) and the
+//!   single-lane [`encoder::ScalarDeepCoT`] wrapper.
+//! - [`naive`]   — the pre-refactor stepper, frozen as the benchmark
+//!   baseline and refactor-equivalence oracle.
+//! - [`params`]  — weight loading from artifacts, plus synthetic
+//!   parameters for hermetic tests/benches.
+//! - [`rope`], [`linalg`] — RoPE and the probe trainer's Cholesky/ridge.
 
+pub mod batched;
 pub mod encoder;
+pub mod kv_ring;
 pub mod linalg;
+pub mod naive;
 pub mod params;
 pub mod rope;
 pub mod tensor;

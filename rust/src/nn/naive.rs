@@ -1,0 +1,114 @@
+//! The pre-refactor continual stepper, preserved verbatim as a
+//! benchmark baseline and refactor oracle.
+//!
+//! [`NaiveScalarDeepCoT`] is what `ScalarDeepCoT` looked like before
+//! the ring-buffer refactor: per tick per layer per head it (a)
+//! materializes a fresh `[memory; new]` concatenation for attention,
+//! (b) rolls the flat K/V memory with `copy_within`, and (c) clones the
+//! model config — allocator traffic and O(mem_len·d_head) shuffles that
+//! polluted the step-latency numbers the paper's runtime comparisons
+//! rest on. `bench_fig1`'s scalar sweep reports it side by side with
+//! the ring-buffer engine, and `tests/scalar_continual.rs` pins the two
+//! to identical numerics.
+
+use anyhow::Result;
+
+use crate::manifest::ModelConfig;
+use crate::nn::encoder::{attn_weights, ffn, head_slice, project, residual};
+use crate::nn::params::ModelParams;
+use crate::nn::rope::apply_rope_inplace;
+use crate::nn::tensor::Mat;
+
+/// Pre-refactor continual stepper, one lane. Do not optimize: its
+/// allocation and memory-roll behavior IS the baseline being measured.
+pub struct NaiveScalarDeepCoT {
+    pub cfg: ModelConfig,
+    p: ModelParams,
+    /// kmem[layer][head]: (mem_len x dh), rolled flat every tick.
+    kmem: Vec<Vec<Mat>>,
+    vmem: Vec<Vec<Mat>>,
+    pub pos: i32,
+}
+
+impl NaiveScalarDeepCoT {
+    pub fn new(cfg: ModelConfig, p: ModelParams) -> Self {
+        let (l, h, mlen, dh) = (cfg.n_layers, cfg.n_heads, cfg.mem_len(), cfg.d_head());
+        let zmem = || vec![vec![Mat::zeros(mlen, dh); h]; l];
+        Self { cfg, p, kmem: zmem(), vmem: zmem(), pos: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        for lm in self.kmem.iter_mut().chain(self.vmem.iter_mut()) {
+            for m in lm {
+                m.data.iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+        self.pos = 0;
+    }
+
+    /// One tick: `tokens` (m x d_in) -> (logits, out (m x d)).
+    pub fn tick(&mut self, tokens: &Mat) -> Result<(Vec<f32>, Mat)> {
+        // per-tick config clone: part of the preserved pre-refactor
+        // allocator behavior (the refactored engine borrows instead)
+        let cfg = self.cfg.clone();
+        let (m, h, dh, mlen) = (cfg.m_tokens, cfg.n_heads, cfg.d_head(), cfg.mem_len());
+        anyhow::ensure!(tokens.rows == m && tokens.cols == cfg.d_in);
+        let mut x = project(tokens, &self.p.w_in, &self.p.b_in);
+        for (li, lp) in self.p.layers.iter().enumerate() {
+            let mut q = project(&x, &lp.wq, &lp.bq);
+            let mut k = project(&x, &lp.wk, &lp.bk);
+            let v = project(&x, &lp.wv, &lp.bv);
+            if cfg.pos == "rope" {
+                for t in 0..m {
+                    for hh in 0..h {
+                        let pp = self.pos + t as i32;
+                        apply_rope_inplace(&mut q.row_mut(t)[hh * dh..(hh + 1) * dh], pp);
+                        apply_rope_inplace(&mut k.row_mut(t)[hh * dh..(hh + 1) * dh], pp);
+                    }
+                }
+            }
+            let mut attn_out = Mat::zeros(m, cfg.d_model);
+            for hh in 0..h {
+                // kcat = [memory; new keys]  (n x dh)
+                let mut kcat = Mat::zeros(mlen + m, dh);
+                let mut vcat = Mat::zeros(mlen + m, dh);
+                for j in 0..mlen {
+                    kcat.row_mut(j).copy_from_slice(self.kmem[li][hh].row(j));
+                    vcat.row_mut(j).copy_from_slice(self.vmem[li][hh].row(j));
+                }
+                for t in 0..m {
+                    kcat.row_mut(mlen + t).copy_from_slice(head_slice(&k, t, hh, dh));
+                    vcat.row_mut(mlen + t).copy_from_slice(head_slice(&v, t, hh, dh));
+                }
+                for t in 0..m {
+                    let w = attn_weights(&cfg, head_slice(&q, t, hh, dh), &kcat);
+                    let orow = &mut attn_out.row_mut(t)[hh * dh..(hh + 1) * dh];
+                    for (j, &wj) in w.iter().enumerate() {
+                        for (o, &vv) in orow.iter_mut().zip(vcat.row(j)) {
+                            *o += wj * vv;
+                        }
+                    }
+                }
+                // roll memory: drop oldest m rows, append the new ones
+                let km = &mut self.kmem[li][hh];
+                let vm = &mut self.vmem[li][hh];
+                km.data.copy_within(m * dh.., 0);
+                vm.data.copy_within(m * dh.., 0);
+                for t in 0..m {
+                    let dst = (mlen - m + t) * dh;
+                    km.data[dst..dst + dh].copy_from_slice(head_slice(&k, t, hh, dh));
+                    vm.data[dst..dst + dh].copy_from_slice(head_slice(&v, t, hh, dh));
+                }
+            }
+            let a = project(&attn_out, &lp.wo, &lp.bo);
+            residual(lp, &mut x, &a, 0);
+            let f = ffn(&cfg, lp, &x);
+            residual(lp, &mut x, &f, 1);
+        }
+        self.pos += m as i32;
+        let last = Mat::from_vec(1, cfg.d_model, x.row(m - 1).to_vec());
+        let mut logits = last.matmul(&self.p.w_cls);
+        logits.add_row(&self.p.b_cls);
+        Ok((logits.data, x))
+    }
+}

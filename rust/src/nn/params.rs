@@ -4,9 +4,10 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::manifest::VariantEntry;
+use crate::manifest::{ModelConfig, VariantEntry};
 use crate::nn::tensor::Mat;
 use crate::runtime::weights::load_weights;
+use crate::util::rng::Rng;
 
 /// Per-layer residual-norm parameters.
 #[derive(Debug, Clone)]
@@ -122,5 +123,55 @@ impl ModelParams {
             w_cls: mat("w_cls")?,
             b_cls: vec("b_cls")?,
         })
+    }
+
+    /// Random small-scale parameters for the given geometry — hermetic
+    /// substitute for `weights/*.bin` in tests and scalar benchmarks
+    /// that must run without `make artifacts`. Fan-in scaling keeps
+    /// activations O(1) through deep stacks; biases are small but
+    /// nonzero so bias-handling bugs can't hide.
+    pub fn synthetic(cfg: &ModelConfig, rng: &mut Rng) -> ModelParams {
+        let (d, f, din, c) = (cfg.d_model, cfg.d_ffn(), cfg.d_in, cfg.n_classes);
+        let mat = |r: usize, cc: usize, rng: &mut Rng| {
+            let s = 1.0 / (r as f32).sqrt();
+            Mat::from_vec(r, cc, rng.normal_vec(r * cc, s))
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let norm = if cfg.norm == "layernorm" {
+                Norm::LayerNorm {
+                    g1: (0..d).map(|_| 1.0 + 0.05 * rng.normal_f32()).collect(),
+                    be1: rng.normal_vec(d, 0.02),
+                    g2: (0..d).map(|_| 1.0 + 0.05 * rng.normal_f32()).collect(),
+                    be2: rng.normal_vec(d, 0.02),
+                }
+            } else {
+                Norm::ReZero { a1: 0.5, a2: 0.5 }
+            };
+            layers.push(LayerParams {
+                wq: mat(d, d, &mut *rng),
+                bq: rng.normal_vec(d, 0.02),
+                wk: mat(d, d, &mut *rng),
+                bk: rng.normal_vec(d, 0.02),
+                wv: mat(d, d, &mut *rng),
+                bv: rng.normal_vec(d, 0.02),
+                wo: mat(d, d, &mut *rng),
+                bo: rng.normal_vec(d, 0.02),
+                w1: mat(d, f, &mut *rng),
+                b1: rng.normal_vec(f, 0.02),
+                w2: mat(f, d, &mut *rng),
+                b2: rng.normal_vec(d, 0.02),
+                norm,
+                u: None,
+                vb: None,
+            });
+        }
+        ModelParams {
+            w_in: mat(din, d, &mut *rng),
+            b_in: rng.normal_vec(d, 0.02),
+            layers,
+            w_cls: mat(d, c, &mut *rng),
+            b_cls: rng.normal_vec(c, 0.02),
+        }
     }
 }

@@ -2,6 +2,9 @@
 //!
 //! Row-major `Mat` (2-D) is all the engine needs; higher-rank shapes are
 //! handled as explicit loops at call sites for clarity over generality.
+//! The hot path (continual stepping) uses the `_into` variants plus
+//! [`RowsRef`]/[`RowsMut`] row-range views so a steady-state tick
+//! performs no heap allocation.
 
 /// Row-major matrix of f32.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,26 +42,56 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Overwrite every element.
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Borrow rows `[r0, r0 + n)` as an immutable sub-matrix view.
+    pub fn rows_view(&self, r0: usize, n: usize) -> RowsRef<'_> {
+        assert!(r0 + n <= self.rows, "rows_view out of range");
+        RowsRef { rows: n, cols: self.cols, data: &self.data[r0 * self.cols..(r0 + n) * self.cols] }
+    }
+
+    /// Borrow rows `[r0, r0 + n)` as a mutable sub-matrix view.
+    pub fn rows_view_mut(&mut self, r0: usize, n: usize) -> RowsMut<'_> {
+        assert!(r0 + n <= self.rows, "rows_view_mut out of range");
+        let cols = self.cols;
+        RowsMut { rows: n, cols, data: &mut self.data[r0 * cols..(r0 + n) * cols] }
+    }
+
     /// self (r x k) @ other (k x c) -> (r x c). Naive triple loop with
     /// the k-loop innermost over contiguous rows — the scalar baseline
     /// the paper's "standard implementation" framing implies.
+    ///
+    /// Deliberately branch-free in the inner loops: a data-dependent
+    /// zero-skip would make benchmark timings input-dependent
+    /// (zero-heavy windows looking artificially fast) and skew
+    /// FLOP-vs-time comparisons.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul inner dim");
         let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// In-place matmul: overwrite `out` (r x c) with self @ other.
+    /// Same loop order and summation order as [`Mat::matmul`], zero
+    /// allocation.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        assert_eq!(out.rows, self.rows, "matmul_into out rows");
+        assert_eq!(out.cols, other.cols, "matmul_into out cols");
+        out.data.fill(0.0);
         for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self.at(i, k);
-                if a == 0.0 {
-                    continue;
-                }
+            let arow = self.row(i);
+            let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &a) in arow.iter().enumerate() {
                 let orow = other.row(k);
-                let out_row = out.row_mut(i);
                 for (o, &b) in out_row.iter_mut().zip(orow) {
                     *o += a * b;
                 }
             }
         }
-        out
     }
 
     /// Add a broadcast row vector.
@@ -79,6 +112,51 @@ impl Mat {
             }
         }
         out
+    }
+}
+
+/// Immutable view of a contiguous row range of a [`Mat`].
+#[derive(Debug, Clone, Copy)]
+pub struct RowsRef<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    data: &'a [f32],
+}
+
+impl<'a> RowsRef<'a> {
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// The backing contiguous slice (rows * cols).
+    pub fn as_slice(&self) -> &'a [f32] {
+        self.data
+    }
+}
+
+/// Mutable view of a contiguous row range of a [`Mat`].
+#[derive(Debug)]
+pub struct RowsMut<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    data: &'a mut [f32],
+}
+
+impl RowsMut<'_> {
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// The backing contiguous slice (rows * cols).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut *self.data
     }
 }
 
@@ -136,6 +214,39 @@ mod tests {
     }
 
     #[test]
+    fn matmul_into_matches_matmul_and_overwrites() {
+        let a = Mat::from_vec(2, 3, (0..6).map(|x| x as f32 - 2.0).collect());
+        let b = Mat::from_vec(3, 2, (0..6).map(|x| 0.5 * x as f32).collect());
+        let mut out = Mat::from_vec(2, 2, vec![9.0; 4]); // stale contents
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+    }
+
+    #[test]
+    fn matmul_handles_zero_rows_exactly() {
+        // the old zero-skip fast path is gone; zeros must still multiply
+        // out to exact zeros through the branch-free loop
+        let a = Mat::from_vec(2, 2, vec![0.0, 0.0, 1.0, 0.0]);
+        let b = Mat::from_vec(2, 2, vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a.matmul(&b).data, vec![0.0, 0.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn rows_views_window_correctly() {
+        let mut m = Mat::from_vec(4, 2, (0..8).map(|x| x as f32).collect());
+        let v = m.rows_view(1, 2);
+        assert_eq!(v.rows, 2);
+        assert_eq!(v.row(0), &[2.0, 3.0]);
+        assert_eq!(v.at(1, 1), 5.0);
+        assert_eq!(v.as_slice(), &[2.0, 3.0, 4.0, 5.0]);
+        let mut w = m.rows_view_mut(2, 2);
+        w.row_mut(0)[0] = -1.0;
+        w.as_mut_slice()[3] = -2.0;
+        assert_eq!(m.at(2, 0), -1.0);
+        assert_eq!(m.at(3, 1), -2.0);
+    }
+
+    #[test]
     fn transpose_roundtrip() {
         let a = Mat::from_vec(2, 3, (0..6).map(|x| x as f32).collect());
         assert_eq!(a.transpose().transpose(), a);
@@ -171,5 +282,12 @@ mod tests {
         let mut a = Mat::zeros(2, 3);
         a.add_row(&[1.0, 2.0, 3.0]);
         assert_eq!(a.row(1), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn fill_overwrites() {
+        let mut a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        a.fill(0.0);
+        assert_eq!(a.data, vec![0.0; 4]);
     }
 }

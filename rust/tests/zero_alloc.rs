@@ -1,0 +1,100 @@
+//! Steady-state allocation audit for the continual hot path.
+//!
+//! A counting global allocator wraps the system allocator; after warmup
+//! the scalar and batched steppers must tick with ZERO heap allocations
+//! (the ring-buffer + scratch-workspace design's core guarantee, and
+//! what keeps the "standard implementation" CPU baseline's latency a
+//! measurement of the algorithm rather than of the allocator).
+//!
+//! This file holds a single #[test] so no sibling test thread can
+//! pollute the counter mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use deepcot::manifest::ModelConfig;
+use deepcot::nn::batched::BatchedScalarDeepCoT;
+use deepcot::nn::encoder::ScalarDeepCoT;
+use deepcot::nn::params::ModelParams;
+use deepcot::nn::tensor::Mat;
+use deepcot::util::rng::Rng;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn bench_cfg() -> ModelConfig {
+    // d=32 / 4 heads / depth 4 / window 32 (d_in 16, m=1 defaults)
+    ModelConfig::synthetic(32, 4, 4, 32)
+}
+
+#[test]
+fn steady_state_ticks_allocate_nothing() {
+    let cfg = bench_cfg();
+    let params = ModelParams::synthetic(&cfg, &mut Rng::new(13));
+
+    // single-lane ring stepper (depth 4, window 32)
+    let mut eng = ScalarDeepCoT::new(cfg.clone(), params.clone());
+    let tokens = Mat::from_vec(1, cfg.d_in, Rng::new(19).normal_vec(cfg.d_in, 1.0));
+    for _ in 0..3 {
+        eng.tick(&tokens).unwrap();
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    let mut sink = 0.0f32;
+    for _ in 0..5 {
+        let (logits, out) = eng.tick(&tokens).unwrap();
+        sink += logits[0] + out.at(0, 0);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "ScalarDeepCoT::tick allocated {} times across 5 steady-state ticks",
+        after - before
+    );
+
+    // batched 4-lane stepper with a masked lane (slot-stepper regime)
+    let mut batched = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, 4);
+    let stacked = Mat::from_vec(4, cfg.d_in, Rng::new(23).normal_vec(4 * cfg.d_in, 1.0));
+    let live = [true, false, true, true];
+    for _ in 0..3 {
+        batched.tick_lanes(&stacked, &live).unwrap();
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        let step = batched.tick_lanes(&stacked, &live).unwrap();
+        sink += step.logits.at(0, 0) + step.out.at(0, 0);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "BatchedScalarDeepCoT::tick_lanes allocated {} times across 5 steady-state ticks",
+        after - before
+    );
+    assert!(sink.is_finite());
+}

@@ -1,0 +1,173 @@
+//! Minimal, offline shim of the `anyhow` API surface this workspace
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait and the
+//! `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Errors are flattened to a single human-readable string ("context:
+//! cause: cause" chain), which is all the serving stack ever does with
+//! them. Replace the path dependency with the crates.io `anyhow` for
+//! downcasting/backtrace support — every call site is source-compatible.
+
+use std::fmt;
+
+/// A string-backed error value. Like `anyhow::Error`, it deliberately
+/// does NOT implement `std::error::Error` so the blanket
+/// `From<E: std::error::Error>` conversion stays coherent.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error(m.to_string())
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error(format!("{c}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut s = e.to_string();
+        let mut src = e.source();
+        while let Some(c) = src {
+            s.push_str(": ");
+            s.push_str(&c.to_string());
+            src = c.source();
+        }
+        Error(s)
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a failure, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::other("inner")
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(io_err()).context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("missing");
+        assert_eq!(r.unwrap_err().to_string(), "missing");
+        let r: Result<i32> = Some(3).with_context(|| "unused");
+        assert_eq!(r.unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 7");
+        let e = anyhow!("bad value {}", x);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+        fn g(ok: bool) -> Result<()> {
+            ensure!(ok);
+            ensure!(ok, "never");
+            Ok(())
+        }
+        assert!(g(true).is_ok());
+        assert!(g(false).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "inner");
+    }
+}

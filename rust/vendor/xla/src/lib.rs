@@ -1,0 +1,160 @@
+//! Stub of the `xla` crate (xla-rs bindings over xla_extension 0.5.1)
+//! covering exactly the API surface `deepcot::runtime` uses.
+//!
+//! Purpose: let the whole workspace build, test and serve (scalar
+//! backend) without the XLA shared library. Every PJRT entry point
+//! returns an "unavailable" error, so `Runtime::new` fails cleanly and
+//! callers fall back to the pure-Rust scalar engine.
+//!
+//! To run the real PJRT path, replace this crate with the actual
+//! xla-rs bindings (github.com/LaurentMazare/xla-rs pinned to the
+//! xla_extension 0.5.1 ABI) and build with `--features pjrt`.
+
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the real xla-rs bindings: replace \
+     rust/vendor/xla with xla-rs (xla_extension 0.5.1) and point it at \
+     the XLA shared library, then re-enable this feature"
+);
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs's displayable error.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "XLA/PJRT backend unavailable ({what}): built against the stub `xla` \
+         crate; vendor xla-rs + libxla_extension and enable `--features pjrt` \
+         for the device path, or use the scalar engine backend"
+    )))
+}
+
+/// Element types uploadable to / readable from device buffers.
+pub trait ElementType: Copy {}
+impl ElementType for f32 {}
+impl ElementType for f64 {}
+impl ElementType for i32 {}
+impl ElementType for i64 {}
+impl ElementType for u8 {}
+
+/// PJRT client handle (unconstructible in the stub).
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: ElementType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Host-side literal (tuple-decomposable executable output).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn copy_raw_to<T: ElementType>(&self, _dst: &mut [T]) -> Result<()> {
+        unavailable("Literal::copy_raw_to")
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation wrapper accepted by `PjRtClient::compile`.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("/nope.hlo").is_err());
+    }
+}
