@@ -1,0 +1,173 @@
+//! Shard-sweep serving throughput bench: the cluster's reason to exist,
+//! measured. Spins the engine up at each shard count in `--shards-list`
+//! on a hermetic synthetic model (scalar backend — no XLA library, no
+//! `make artifacts`), drives it with closed-loop client threads (push →
+//! recv → push), and reports aggregate throughput plus engine-side tick
+//! latency quantiles. Slots are split across shards as
+//! `ceil(streams / shards)` per shard, so every configuration admits
+//! all streams with (near-)equal headroom — exactly equal when the
+//! shard count divides the stream count (the printed `slots` column
+//! shows each config's per-shard budget; prefer divisible sweeps for
+//! strict apples-to-apples).
+//!
+//!     cargo run --release --bin bench_throughput -- \
+//!         --shards-list 1,2,4 --streams 8 --ticks 200
+//!
+//! The CI smoke run uses a tiny model, 2 shards and a bounded tick
+//! count — see .github/workflows/ci.yml.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use deepcot::config::{EngineBackend, EngineConfig};
+use deepcot::coordinator::engine::EngineThread;
+use deepcot::synthetic::SyntheticServeSpec;
+use deepcot::util::cli::Cli;
+use deepcot::util::rng::Rng;
+
+struct RunResult {
+    shards: usize,
+    slots_per_shard: usize,
+    wall: Duration,
+    ticks_per_sec: f64,
+    streams_per_sec: f64,
+    p50: Duration,
+    p99: Duration,
+}
+
+fn run_one(cfg: EngineConfig, streams: usize, ticks: usize, d_in: usize) -> Result<RunResult> {
+    let shards = cfg.effective_shards();
+    let slots_per_shard = cfg.slots_per_shard;
+    let engine = EngineThread::spawn(cfg)?;
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for s in 0..streams {
+        let h = engine.handle();
+        clients.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(0xBE9C4 ^ ((s as u64 + 1) * 0x9E37));
+            // total slots == streams, but an open can race a neighbor's
+            // placement; retry briefly instead of failing the bench
+            let (id, rx) = {
+                let mut attempt = 0;
+                loop {
+                    match h.open() {
+                        Ok(pair) => break pair,
+                        Err(_) if attempt < 50 => {
+                            attempt += 1;
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => return Err(e).context("open"),
+                    }
+                }
+            };
+            for t in 0..ticks {
+                h.push(id, rng.normal_vec(d_in, 1.0))
+                    .with_context(|| format!("push tick {t}"))?;
+                rx.recv_timeout(Duration::from_secs(60))
+                    .map_err(|e| anyhow::anyhow!("tick {t} result: {e:?}"))?;
+            }
+            h.close(id);
+            Ok(())
+        }));
+    }
+    for c in clients {
+        c.join().expect("client thread")?;
+    }
+    let wall = t0.elapsed();
+    let m = engine.handle().metrics()?;
+    engine.shutdown()?;
+    let total_ticks = (streams * ticks) as f64;
+    Ok(RunResult {
+        shards,
+        slots_per_shard,
+        wall,
+        ticks_per_sec: total_ticks / wall.as_secs_f64(),
+        streams_per_sec: streams as f64 / wall.as_secs_f64(),
+        p50: m.tick_latency.quantile(0.5),
+        p99: m.tick_latency.quantile(0.99),
+    })
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::new("bench_throughput: aggregate serving throughput vs shard count")
+        .opt("shards-list", "1,2,4", "comma-separated shard counts to sweep")
+        .opt("streams", "8", "concurrent closed-loop client streams")
+        .opt("ticks", "200", "ticks per stream")
+        .opt("d-model", "32", "synthetic model width")
+        .opt("n-layers", "2", "synthetic model depth")
+        .opt("n-heads", "4", "synthetic attention heads")
+        .opt("window", "16", "synthetic continual window")
+        .opt("deadline-us", "200", "partial-batch flush deadline (µs)")
+        .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin");
+    let args = cli.parse()?;
+    let shard_counts: Vec<usize> = args
+        .get("shards-list")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("--shards-list entries must be integers"))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!shard_counts.is_empty(), "--shards-list must name at least one count");
+    let streams = args.get_usize("streams")?.max(1);
+    let ticks = args.get_usize("ticks")?.max(1);
+    let d_model = args.get_usize("d-model")?;
+    let spec = SyntheticServeSpec {
+        d_in: (d_model / 2).max(1),
+        d_model,
+        n_heads: args.get_usize("n-heads")?,
+        n_layers: args.get_usize("n-layers")?,
+        window: args.get_usize("window")?,
+        n_classes: 4,
+        seed: 0xBE9C4,
+        batches: vec![1],
+    };
+    let dir = spec.write()?;
+    println!(
+        "bench_throughput: {} streams x {} ticks, model d={} L={} H={} n={}, deadline={}µs",
+        streams,
+        ticks,
+        spec.d_model,
+        spec.n_layers,
+        spec.n_heads,
+        spec.window,
+        args.get_u64("deadline-us")?,
+    );
+    let mut results = Vec::with_capacity(shard_counts.len());
+    for &shards in &shard_counts {
+        let cfg = EngineConfig {
+            artifacts_dir: dir.clone(),
+            variant: SyntheticServeSpec::variant_name(1),
+            backend: EngineBackend::Scalar,
+            batch_deadline: Duration::from_micros(args.get_u64("deadline-us")?),
+            shards: shards.max(1),
+            slots_per_shard: streams.div_ceil(shards.max(1)),
+            placement: args.get("placement").parse()?,
+            ..EngineConfig::default()
+        };
+        results.push(run_one(cfg, streams, ticks, spec.d_in)?);
+    }
+    // speedups are anchored to the 1-shard entry when the sweep has one
+    // (the headline sharded-vs-single number); otherwise to the first
+    let baseline = results
+        .iter()
+        .find(|r| r.shards == 1)
+        .unwrap_or(&results[0])
+        .ticks_per_sec;
+    println!(
+        "{:>6} {:>6} {:>10} {:>12} {:>12} {:>10} {:>10} {:>8}",
+        "shards", "slots", "wall", "ticks/s", "streams/s", "tick p50", "tick p99", "speedup"
+    );
+    for r in &results {
+        println!(
+            "{:>6} {:>6} {:>10.2?} {:>12.1} {:>12.2} {:>10.2?} {:>10.2?} {:>7.2}x",
+            r.shards,
+            r.slots_per_shard,
+            r.wall,
+            r.ticks_per_sec,
+            r.streams_per_sec,
+            r.p50,
+            r.p99,
+            r.ticks_per_sec / baseline
+        );
+    }
+    Ok(())
+}

@@ -34,6 +34,36 @@ impl std::str::FromStr for EngineBackend {
     }
 }
 
+/// How the cluster front door picks a shard for a new stream. Whatever
+/// the policy, a full primary falls back to the remaining shards in
+/// least-loaded order before the open is rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Deterministic hash of the stream id — stable placement with no
+    /// shared state beyond the id.
+    #[default]
+    Hash,
+    /// Pick the shard with the fewest front-door-tracked streams.
+    LeastLoaded,
+    /// Cycle shards in order.
+    RoundRobin,
+}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "hash" => Ok(Self::Hash),
+            "least-loaded" => Ok(Self::LeastLoaded),
+            "round-robin" => Ok(Self::RoundRobin),
+            other => {
+                anyhow::bail!("unknown placement {other:?} (want hash|least-loaded|round-robin)")
+            }
+        }
+    }
+}
+
 /// Engine (coordinator) configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -48,8 +78,16 @@ pub struct EngineConfig {
     pub max_queue_per_stream: usize,
     /// Idle eviction horizon.
     pub idle_timeout: Duration,
-    /// Engine request channel depth.
+    /// Engine request channel depth (per shard).
     pub request_queue: usize,
+    /// Worker shards, each owning its own backend + batcher (0 = one
+    /// per available core). 1 reproduces the old single-thread engine.
+    pub shards: usize,
+    /// Stream → shard placement policy at the cluster front door.
+    pub placement: PlacementPolicy,
+    /// Per-shard slot capacity override (scalar backend only; 0 = the
+    /// variant's compiled batch size).
+    pub slots_per_shard: usize,
 }
 
 impl Default for EngineConfig {
@@ -62,6 +100,9 @@ impl Default for EngineConfig {
             max_queue_per_stream: 8,
             idle_timeout: Duration::from_secs(30),
             request_queue: 1024,
+            shards: 1,
+            placement: PlacementPolicy::Hash,
+            slots_per_shard: 0,
         }
     }
 }
@@ -75,6 +116,9 @@ impl EngineConfig {
             .opt("deadline-us", "2000", "partial-batch flush deadline (µs)")
             .opt("max-queue", "8", "per-stream pending token bound")
             .opt("idle-timeout-ms", "30000", "idle stream eviction (ms)")
+            .opt("shards", "1", "engine worker shards (0 = one per core)")
+            .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin")
+            .opt("slots-per-shard", "0", "per-shard slot capacity (scalar; 0 = variant batch)")
     }
 
     pub fn from_args(args: &Args) -> Result<Self> {
@@ -87,7 +131,19 @@ impl EngineConfig {
         cfg.batch_deadline = Duration::from_micros(args.get_u64("deadline-us")?);
         cfg.max_queue_per_stream = args.get_usize("max-queue")?;
         cfg.idle_timeout = Duration::from_millis(args.get_u64("idle-timeout-ms")?);
+        cfg.shards = args.get_usize("shards")?;
+        cfg.placement = args.get("placement").parse()?;
+        cfg.slots_per_shard = args.get_usize("slots-per-shard")?;
         Ok(cfg)
+    }
+
+    /// Shard count with `0 = one per available core` resolved.
+    pub fn effective_shards(&self) -> usize {
+        if self.shards == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.shards
+        }
     }
 }
 
@@ -116,6 +172,46 @@ mod tests {
         assert_eq!(c.variant, "serve_deepcot_b1");
         assert_eq!(c.batch_deadline, Duration::from_micros(500));
         assert_eq!(c.backend, EngineBackend::Scalar);
+    }
+
+    #[test]
+    fn cluster_options_parse() {
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli
+            .parse_from(
+                ["--shards", "4", "--placement", "round-robin", "--slots-per-shard", "2"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        let c = EngineConfig::from_args(&args).unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.effective_shards(), 4);
+        assert_eq!(c.placement, PlacementPolicy::RoundRobin);
+        assert_eq!(c.slots_per_shard, 2);
+        // defaults reproduce the single-engine layout
+        let d = EngineConfig::default();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.placement, PlacementPolicy::Hash);
+        assert_eq!(d.slots_per_shard, 0);
+        // 0 = auto: at least one shard, whatever the host
+        let auto = EngineConfig { shards: 0, ..EngineConfig::default() };
+        assert!(auto.effective_shards() >= 1);
+    }
+
+    #[test]
+    fn placement_parses() {
+        assert_eq!("hash".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::Hash);
+        assert_eq!(
+            "least-loaded".parse::<PlacementPolicy>().unwrap(),
+            PlacementPolicy::LeastLoaded
+        );
+        assert_eq!(
+            "round-robin".parse::<PlacementPolicy>().unwrap(),
+            PlacementPolicy::RoundRobin
+        );
+        assert!("random".parse::<PlacementPolicy>().is_err());
+        assert_eq!(PlacementPolicy::default(), PlacementPolicy::Hash);
     }
 
     #[test]

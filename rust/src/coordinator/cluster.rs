@@ -1,0 +1,415 @@
+//! Sharded multi-core serving: the cluster front door over N shard
+//! workers.
+//!
+//! DeepCoT's per-stream state is fixed-size, so scaling the engine is a
+//! placement problem, not a memory problem: [`ShardedEngine`] spawns
+//! `cfg.effective_shards()` copies of the single-engine serving cell
+//! (`coordinator::shard`), each on its own thread with its own
+//! [`SlotStepper`] backend, and [`ShardRouter`] pins every stream to
+//! one shard for its whole life. Within a shard nothing changed — same
+//! router, batcher, masked-lane tick — which is why a stream's outputs
+//! are bitwise-identical whether it serves on a 1-shard or an N-shard
+//! cluster (per-lane position clocks make them depend on nothing but
+//! the stream's own history).
+//!
+//! Data flow:
+//!
+//! ```text
+//!   clients ──► EngineHandle (cluster front door, Clone + Send)
+//!                 │ ShardRouter: hash placement, least-loaded
+//!                 │ fallback, stream → shard pinning
+//!        ┌────────┼──────────┐
+//!        ▼        ▼          ▼
+//!     shard 0   shard 1 …  shard N-1      one worker thread each
+//!     Router    Router     Router         admission + idle eviction
+//!     Batcher   Batcher    Batcher        deadline / all-slots ticks
+//!     Stepper   Stepper    Stepper        batched scalar | PJRT
+//!        │        │          │
+//!        └────────┴──────────┴── per-stream channels ──► TickResult
+//! ```
+//!
+//! The front door serializes only `open`/`close` bookkeeping (brief
+//! write locks on the shard map, never held across a shard round-trip);
+//! `push` takes a read lock for one map lookup and then talks straight
+//! to the owning shard, so concurrent pushes to different shards never
+//! serialize and the tick hot path never crosses shard boundaries.
+//!
+//! [`SlotStepper`]: crate::coordinator::slot_stepper::SlotStepper
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{EngineConfig, PlacementPolicy};
+use crate::coordinator::metrics::ClusterMetrics;
+use crate::coordinator::shard::{ShardHandle, ShardThread, TickResult};
+use crate::coordinator::slots::StreamId;
+
+/// Cluster-level placement: pins streams to shards and tracks the load
+/// the front door believes each shard carries (opens minus closes). A
+/// shard-side idle eviction is reconciled structurally: evictions only
+/// happen while admitting a new stream, and the admitting shard's reply
+/// names the victim, which `EngineHandle::open` unbinds — so abandoned
+/// streams cannot leak bindings or inflate load counts. Pure
+/// bookkeeping with no I/O — property-testable without threads.
+#[derive(Debug)]
+pub struct ShardRouter {
+    policy: PlacementPolicy,
+    /// Front-door-tracked stream count per shard.
+    load: Vec<usize>,
+    assigned: BTreeMap<StreamId, usize>,
+    rr_cursor: usize,
+}
+
+impl ShardRouter {
+    pub fn new(n_shards: usize, policy: PlacementPolicy) -> Self {
+        assert!(n_shards >= 1, "cluster needs at least one shard");
+        Self { policy, load: vec![0; n_shards], assigned: BTreeMap::new(), rr_cursor: 0 }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.load.len()
+    }
+
+    /// Fibonacci-hash the id onto a shard (deterministic, well-mixed
+    /// for sequential ids).
+    fn hash_shard(&self, id: StreamId) -> usize {
+        ((id.0.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize) % self.load.len()
+    }
+
+    /// Shard candidates for a new stream, in preference order: the
+    /// policy's primary first, then every other shard by ascending
+    /// tracked load (ties to the lower index) — the least-loaded
+    /// fallback chain a full primary hands the open to.
+    pub fn plan(&mut self, id: StreamId) -> Vec<usize> {
+        let n = self.load.len();
+        let primary = match self.policy {
+            PlacementPolicy::Hash => self.hash_shard(id),
+            PlacementPolicy::LeastLoaded => {
+                (0..n).min_by_key(|&s| (self.load[s], s)).unwrap_or(0)
+            }
+            PlacementPolicy::RoundRobin => {
+                let s = self.rr_cursor % n;
+                self.rr_cursor = (self.rr_cursor + 1) % n;
+                s
+            }
+        };
+        let mut order = Vec::with_capacity(n);
+        order.push(primary);
+        let mut rest: Vec<usize> = (0..n).filter(|&s| s != primary).collect();
+        rest.sort_by_key(|&s| (self.load[s], s));
+        order.extend(rest);
+        order
+    }
+
+    pub fn bind(&mut self, id: StreamId, shard: usize) {
+        self.assigned.insert(id, shard);
+        self.load[shard] += 1;
+    }
+
+    pub fn shard_of(&self, id: StreamId) -> Option<usize> {
+        self.assigned.get(&id).copied()
+    }
+
+    pub fn unbind(&mut self, id: StreamId) -> Option<usize> {
+        let shard = self.assigned.remove(&id)?;
+        self.load[shard] = self.load[shard].saturating_sub(1);
+        Some(shard)
+    }
+
+    pub fn load(&self) -> &[usize] {
+        &self.load
+    }
+}
+
+struct FrontDoor {
+    router: ShardRouter,
+    next_id: u64,
+    placed_primary: u64,
+    placed_fallback: u64,
+    cluster_rejects: u64,
+}
+
+// the front door is read-mostly on the hot path (push only needs the
+// stream → shard lookup), so an RwLock keeps pushes to different shards
+// from serializing on placement bookkeeping
+fn read(door: &RwLock<FrontDoor>) -> RwLockReadGuard<'_, FrontDoor> {
+    door.read().unwrap_or_else(|p| p.into_inner())
+}
+
+fn write(door: &RwLock<FrontDoor>) -> RwLockWriteGuard<'_, FrontDoor> {
+    door.write().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Cloneable, `Send` front-door handle to the shard cluster — the same
+/// `open`/`push`/`close`/`metrics` surface the single-threaded engine
+/// exposed, so callers are unchanged by sharding.
+#[derive(Clone)]
+pub struct EngineHandle {
+    shards: Arc<[ShardHandle]>,
+    door: Arc<RwLock<FrontDoor>>,
+}
+
+impl EngineHandle {
+    /// Open a stream: assign a cluster-unique id, walk the placement
+    /// plan (primary, then least-loaded fallbacks) until a shard admits
+    /// it, and pin the stream there. Returns the id and output channel.
+    ///
+    /// The door lock is held only for id/plan assignment and for the
+    /// final bind — never across the blocking shard round-trips — so an
+    /// open walking a slow fallback chain cannot stall pushes to other
+    /// shards.
+    pub fn open(&self) -> Result<(StreamId, Receiver<TickResult>)> {
+        let (id, order) = {
+            let mut door = write(&self.door);
+            let id = StreamId(door.next_id);
+            door.next_id += 1;
+            (id, door.router.plan(id))
+        };
+        let mut last_err = None;
+        for (rank, &shard) in order.iter().enumerate() {
+            match self.shards[shard].open(id) {
+                Ok((rx, evicted)) => {
+                    let mut door = write(&self.door);
+                    if let Some(eid) = evicted {
+                        // the shard reclaimed an idle session to admit
+                        // us; drop the victim's front-door binding too
+                        // (a no-op if its owner already closed it)
+                        door.router.unbind(eid);
+                    }
+                    door.router.bind(id, shard);
+                    if rank == 0 {
+                        door.placed_primary += 1;
+                    } else {
+                        door.placed_fallback += 1;
+                    }
+                    return Ok((id, rx));
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        write(&self.door).cluster_rejects += 1;
+        Err(last_err.unwrap_or_else(|| anyhow!("cluster has no shards")))
+    }
+
+    /// Submit the next token(s) for a stream (m*d_in f32s); routed to
+    /// the stream's pinned shard.
+    pub fn push(&self, id: StreamId, tokens: Vec<f32>) -> Result<()> {
+        let shard = read(&self.door)
+            .router
+            .shard_of(id)
+            .ok_or_else(|| anyhow!("unknown stream {id:?}"))?;
+        self.shards[shard].push(id, tokens)
+    }
+
+    pub fn close(&self, id: StreamId) {
+        let shard = write(&self.door).router.unbind(id);
+        if let Some(s) = shard {
+            self.shards[s].close(id);
+        }
+    }
+
+    /// Cluster metrics: per-shard snapshots, their aggregate, and the
+    /// front door's placement counters.
+    pub fn metrics(&self) -> Result<ClusterMetrics> {
+        let per_shard = self
+            .shards
+            .iter()
+            .map(|s| s.metrics())
+            .collect::<Result<Vec<_>>>()?;
+        let mut m = ClusterMetrics::from_shards(per_shard);
+        let door = read(&self.door);
+        m.placed_primary = door.placed_primary;
+        m.placed_fallback = door.placed_fallback;
+        m.cluster_rejects = door.cluster_rejects;
+        Ok(m)
+    }
+}
+
+/// The sharded serving engine: N shard worker threads behind one
+/// [`EngineHandle`] front door. With `cfg.shards == 1` this is exactly
+/// the old single-threaded `EngineThread`.
+pub struct ShardedEngine {
+    shards: Vec<ShardThread>,
+    handle: EngineHandle,
+}
+
+impl ShardedEngine {
+    /// Spawn `cfg.effective_shards()` worker shards; blocks until every
+    /// shard's model is loaded and ready (the first Push never pays
+    /// compile latency). All shards are started before any is awaited,
+    /// so their backends initialize in parallel.
+    pub fn spawn(cfg: EngineConfig) -> Result<Self> {
+        let n = cfg.effective_shards().max(1);
+        let mut shards = Vec::with_capacity(n);
+        for s in 0..n {
+            shards.push(ShardThread::start(s, cfg.clone())?);
+        }
+        for t in shards.iter_mut() {
+            t.wait_ready()?;
+        }
+        let handles: Arc<[ShardHandle]> =
+            shards.iter().map(|t| t.handle()).collect::<Vec<_>>().into();
+        let door = FrontDoor {
+            router: ShardRouter::new(n, cfg.placement),
+            next_id: 1,
+            placed_primary: 0,
+            placed_fallback: 0,
+            cluster_rejects: 0,
+        };
+        let handle = EngineHandle { shards: handles, door: Arc::new(RwLock::new(door)) };
+        Ok(Self { shards, handle })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Signal every shard, then join them all: each shard drains its
+    /// queued requests with terminal errors before exiting, so no
+    /// in-flight caller is left blocked.
+    pub fn shutdown(mut self) -> Result<()> {
+        for t in &self.shards {
+            t.signal_shutdown();
+        }
+        let mut res = Ok(());
+        for t in self.shards.iter_mut() {
+            if let Err(e) = t.join() {
+                res = Err(e);
+            }
+        }
+        res
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        // broadcast first so shards drain in parallel; ShardThread's own
+        // Drop joins each one
+        for t in &self.shards {
+            t.signal_shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn hash_placement_is_deterministic_and_covers_all_shards() {
+        let mut r = ShardRouter::new(4, PlacementPolicy::Hash);
+        for raw in 1..40u64 {
+            let id = StreamId(raw);
+            let a = r.plan(id);
+            let b = r.plan(id);
+            assert_eq!(a, b, "same id must plan identically");
+            assert_eq!(a.len(), 4);
+            let mut seen = a.clone();
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 3], "plan must cover every shard once");
+        }
+        // sequential ids must not all clump onto one shard
+        let primaries: std::collections::BTreeSet<usize> =
+            (1..40u64).map(|raw| r.plan(StreamId(raw))[0]).collect();
+        assert!(primaries.len() > 1, "hash collapsed all ids to one shard");
+    }
+
+    #[test]
+    fn fallbacks_are_least_loaded_first() {
+        let mut r = ShardRouter::new(3, PlacementPolicy::Hash);
+        let id = StreamId(7);
+        let primary = r.plan(id)[0];
+        // load the shards unevenly (skip the primary to keep it first)
+        let others: Vec<usize> = (0..3).filter(|&s| s != primary).collect();
+        r.bind(StreamId(100), others[0]);
+        r.bind(StreamId(101), others[0]);
+        r.bind(StreamId(102), others[1]);
+        let plan = r.plan(id);
+        assert_eq!(plan[0], primary);
+        assert_eq!(plan[1], others[1], "lighter shard first in the fallback chain");
+        assert_eq!(plan[2], others[0]);
+    }
+
+    #[test]
+    fn least_loaded_policy_picks_min() {
+        let mut r = ShardRouter::new(3, PlacementPolicy::LeastLoaded);
+        r.bind(StreamId(1), 0);
+        r.bind(StreamId(2), 1);
+        assert_eq!(r.plan(StreamId(3))[0], 2);
+        r.bind(StreamId(3), 2);
+        r.bind(StreamId(4), 2);
+        assert_eq!(r.plan(StreamId(5))[0], 0, "ties break to the lower index");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = ShardRouter::new(3, PlacementPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|i| r.plan(StreamId(i))[0]).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn bind_unbind_track_load() {
+        let mut r = ShardRouter::new(2, PlacementPolicy::Hash);
+        r.bind(StreamId(1), 0);
+        r.bind(StreamId(2), 0);
+        r.bind(StreamId(3), 1);
+        assert_eq!(r.load(), &[2, 1]);
+        assert_eq!(r.shard_of(StreamId(2)), Some(0));
+        assert_eq!(r.unbind(StreamId(2)), Some(0));
+        assert_eq!(r.unbind(StreamId(2)), None, "double unbind is inert");
+        assert_eq!(r.load(), &[1, 1]);
+        assert_eq!(r.shard_of(StreamId(2)), None);
+    }
+
+    /// Property: under random bind/unbind churn the tracked load always
+    /// equals the number of assigned streams per shard, and every plan
+    /// is a permutation of the shard set.
+    #[test]
+    fn prop_router_load_accounting() {
+        prop::check("shard-router-load", 150, |rng| {
+            let n = rng.range(1, 5);
+            let policy = match rng.below(3) {
+                0 => PlacementPolicy::Hash,
+                1 => PlacementPolicy::LeastLoaded,
+                _ => PlacementPolicy::RoundRobin,
+            };
+            let mut r = ShardRouter::new(n, policy);
+            let mut live: Vec<StreamId> = Vec::new();
+            let mut next = 1u64;
+            for _ in 0..rng.range(1, 60) {
+                if rng.chance(0.6) {
+                    let id = StreamId(next);
+                    next += 1;
+                    let plan = r.plan(id);
+                    let mut sorted = plan.clone();
+                    sorted.sort_unstable();
+                    if sorted != (0..n).collect::<Vec<_>>() {
+                        return Err(format!("plan {plan:?} is not a permutation of 0..{n}"));
+                    }
+                    r.bind(id, plan[0]);
+                    live.push(id);
+                } else if let Some(&id) = live.first() {
+                    r.unbind(id);
+                    live.retain(|&x| x != id);
+                }
+                let mut want = vec![0usize; n];
+                for &id in &live {
+                    want[r.shard_of(id).ok_or("live stream lost its shard")?] += 1;
+                }
+                if r.load() != want.as_slice() {
+                    return Err(format!("load {:?} != assigned {:?}", r.load(), want));
+                }
+            }
+            Ok(())
+        });
+    }
+}

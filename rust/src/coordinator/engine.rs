@@ -1,278 +1,33 @@
-//! The serving engine: a dedicated thread owning the execution backend
-//! (PJRT handles are `Rc`-based, so everything device-touching lives
-//! here; the scalar fallback backend is plain host memory), fronted by
-//! bounded std::sync::mpsc channels — the offline stand-in for a
-//! tokio-based front-end, with identical backpressure semantics.
+//! The serving engine's public front: [`EngineThread`] + [`EngineHandle`].
 //!
-//! Data flow per tick:
-//!   clients → Push ─┐
-//!                   ├→ Batcher (deadline / all-slots policy)
-//!   Router (slots) ─┘        │
-//!                            ▼
-//!                     SlotStepper.tick (one batched PJRT execute)
-//!                            │
-//!        per-stream output channels ← scatter lanes + metrics
+//! Since the cluster refactor the engine *is* a shard cluster
+//! ([`ShardedEngine`], `coordinator::cluster`): `spawn` starts
+//! `cfg.effective_shards()` worker threads (each a complete serving
+//! cell — backend, router, batcher; see `coordinator::shard`) and the
+//! handle is the cluster front door that pins streams to shards. The
+//! default `shards = 1` reproduces the old single-threaded engine
+//! exactly, so existing callers are unchanged in behavior *and* in API:
+//!
+//! ```text
+//!   clients ──► EngineHandle::open / push / close / metrics
+//!                 │  ShardRouter (hash placement, least-loaded
+//!                 │  fallback, stream → shard pinning)
+//!        ┌────────┼──────────┐
+//!        ▼        ▼          ▼
+//!     shard 0   shard 1 …  shard N-1   Router + Batcher + SlotStepper
+//!        │        │          │         per worker thread
+//!        └────────┴──────────┴── per-stream channels ──► TickResult
+//! ```
+//!
+//! `metrics()` now returns [`ClusterMetrics`]: the aggregate fields
+//! carry the same names the single-engine metrics had, plus a
+//! per-shard breakdown and the front door's placement counters.
+//!
+//! [`ClusterMetrics`]: crate::coordinator::metrics::ClusterMetrics
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::time::{Duration, Instant};
+pub use crate::coordinator::cluster::{EngineHandle, ShardedEngine};
+pub use crate::coordinator::shard::TickResult;
 
-use anyhow::{anyhow, bail, Result};
-
-use crate::config::{EngineBackend, EngineConfig};
-use crate::coordinator::batcher::Batcher;
-use crate::coordinator::metrics::EngineMetrics;
-use crate::coordinator::router::{Admission, Router};
-use crate::coordinator::slot_stepper::SlotStepper;
-use crate::coordinator::slots::StreamId;
-use crate::manifest::Manifest;
-use crate::nn::params::ModelParams;
-use crate::runtime::Runtime;
-
-/// One tick's result delivered to a stream's owner.
-#[derive(Debug, Clone)]
-pub struct TickResult {
-    pub logits: Vec<f32>,
-    pub out: Vec<f32>,
-    pub tick: u64,
-}
-
-enum Request {
-    Open { reply: Sender<Result<(StreamId, Receiver<TickResult>)>> },
-    Push { id: StreamId, tokens: Vec<f32>, reply: Sender<Result<()>> },
-    Close { id: StreamId },
-    Metrics { reply: Sender<EngineMetrics> },
-    Shutdown,
-}
-
-/// Cloneable, `Send` handle to the engine thread.
-#[derive(Clone)]
-pub struct EngineHandle {
-    tx: SyncSender<Request>,
-}
-
-pub struct EngineThread {
-    handle: EngineHandle,
-    join: Option<std::thread::JoinHandle<Result<()>>>,
-}
-
-impl EngineThread {
-    /// Spawn the engine thread; blocks until the model is compiled and
-    /// ready (so the first Push never pays compile latency).
-    pub fn spawn(cfg: EngineConfig) -> Result<Self> {
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.request_queue);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("deepcot-engine".into())
-            .spawn(move || engine_main(cfg, rx, ready_tx))?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Self { handle: EngineHandle { tx }, join: Some(join) })
-    }
-
-    pub fn handle(&self) -> EngineHandle {
-        self.handle.clone()
-    }
-
-    pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.handle.tx.send(Request::Shutdown);
-        if let Some(j) = self.join.take() {
-            j.join().map_err(|_| anyhow!("engine thread panicked"))??;
-        }
-        Ok(())
-    }
-}
-
-impl Drop for EngineThread {
-    fn drop(&mut self) {
-        let _ = self.handle.tx.send(Request::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-impl EngineHandle {
-    /// Open a stream; returns its id and the output channel.
-    pub fn open(&self) -> Result<(StreamId, Receiver<TickResult>)> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Open { reply })
-            .map_err(|_| anyhow!("engine is gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
-    }
-
-    /// Submit the next token(s) for a stream (m*d_in f32s).
-    pub fn push(&self, id: StreamId, tokens: Vec<f32>) -> Result<()> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Push { id, tokens, reply })
-            .map_err(|_| anyhow!("engine is gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
-    }
-
-    pub fn close(&self, id: StreamId) {
-        let _ = self.tx.send(Request::Close { id });
-    }
-
-    pub fn metrics(&self) -> Result<EngineMetrics> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Metrics { reply })
-            .map_err(|_| anyhow!("engine is gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped reply"))
-    }
-}
-
-struct StreamPort {
-    out: Sender<TickResult>,
-    ticks: u64,
-}
-
-fn engine_main(
-    cfg: EngineConfig,
-    rx: Receiver<Request>,
-    ready: Sender<Result<()>>,
-) -> Result<()> {
-    // Backend selection: PJRT when the XLA runtime is available, the
-    // pure-Rust batched scalar engine otherwise (or on request) — same
-    // manifest, same weights, same lane semantics.
-    let pjrt = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper)> {
-        let rt = Runtime::new(&cfg.artifacts_dir)?;
-        let variant = rt.load(&cfg.variant)?;
-        let stepper = SlotStepper::new(variant)?;
-        Ok((Some(rt), stepper))
-    };
-    let scalar = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper)> {
-        let (manifest, dir) = Manifest::load(&cfg.artifacts_dir)?;
-        let entry = manifest.variant(&cfg.variant)?;
-        let params = ModelParams::load(&dir, entry)?;
-        Ok((None, SlotStepper::new_scalar(entry, params)?))
-    };
-    let init = match cfg.backend {
-        EngineBackend::Pjrt => pjrt(&cfg),
-        EngineBackend::Scalar => scalar(&cfg),
-        EngineBackend::Auto => pjrt(&cfg).or_else(|pe| {
-            scalar(&cfg)
-                .map_err(|se| anyhow!("pjrt backend: {pe}; scalar fallback: {se}"))
-        }),
-    };
-    let (_rt, mut stepper) = match init {
-        Ok(v) => {
-            let _ = ready.send(Ok(()));
-            v
-        }
-        Err(e) => {
-            let _ = ready.send(Err(anyhow!("{e}")));
-            bail!("engine init failed");
-        }
-    };
-    // auto-fallback silently changes the latency class — always say
-    // which backend actually came up
-    eprintln!(
-        "deepcot engine: serving {} on the {} backend (B={})",
-        cfg.variant,
-        stepper.backend_name(),
-        stepper.capacity()
-    );
-    let lane_elems = {
-        let c = stepper.config();
-        c.m_tokens * c.d_in
-    };
-    let mut router = Router::new(stepper.capacity(), cfg.idle_timeout);
-    let mut batcher = Batcher::new(cfg.batch_deadline, cfg.max_queue_per_stream);
-    let mut ports: std::collections::BTreeMap<StreamId, StreamPort> = Default::default();
-    let mut metrics = EngineMetrics::new();
-
-    loop {
-        // 1. drain / wait for requests up to the batching deadline
-        let wait = if batcher.pending_len() > 0 {
-            cfg.batch_deadline / 4
-        } else {
-            Duration::from_millis(50)
-        };
-        match rx.recv_timeout(wait) {
-            Ok(req) => {
-                let now = Instant::now();
-                match req {
-                    Request::Open { reply } => {
-                        let (id, adm) = router.open(now);
-                        let res = match adm {
-                            Admission::Accepted(slot) => {
-                                stepper.clear_lane(slot);
-                                let (out_tx, out_rx) = mpsc::channel();
-                                ports.insert(id, StreamPort { out: out_tx, ticks: 0 });
-                                metrics.streams_opened += 1;
-                                Ok((id, out_rx))
-                            }
-                            Admission::Rejected => {
-                                metrics.admission_rejects += 1;
-                                Err(anyhow!("no free slots (capacity {})", router.capacity()))
-                            }
-                        };
-                        let _ = reply.send(res);
-                    }
-                    Request::Push { id, tokens, reply } => {
-                        let res = if router.slot_of(id).is_none() {
-                            Err(anyhow!("unknown stream {id:?}"))
-                        } else if tokens.len() != lane_elems {
-                            Err(anyhow!(
-                                "expected {lane_elems} f32 tokens, got {}",
-                                tokens.len()
-                            ))
-                        } else if batcher.push(id, tokens, now) {
-                            metrics.tokens_in += 1;
-                            Ok(())
-                        } else {
-                            Err(anyhow!("stream {id:?} queue full (backpressure)"))
-                        };
-                        let _ = reply.send(res);
-                    }
-                    Request::Close { id } => {
-                        if let Some(slot) = router.close(id) {
-                            stepper.clear_lane(slot);
-                        }
-                        batcher.forget(id);
-                        ports.remove(&id);
-                        metrics.streams_closed += 1;
-                    }
-                    Request::Metrics { reply } => {
-                        let _ = reply.send(metrics.clone());
-                    }
-                    Request::Shutdown => return Ok(()),
-                }
-            }
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => return Ok(()),
-        }
-
-        // 2. tick when the policy says so
-        let now = Instant::now();
-        if batcher.ready(router.occupied(), now) {
-            let plan = batcher.take_tick(|id| router.slot_of(id));
-            if plan.lanes.is_empty() {
-                continue;
-            }
-            for (_, _, _, enq) in &plan.lanes {
-                metrics.queue_latency.record(now.duration_since(*enq));
-            }
-            let t0 = Instant::now();
-            let lanes = stepper.tick(&plan)?;
-            metrics.tick_latency.record(t0.elapsed());
-            metrics.ticks += 1;
-            let done = Instant::now();
-            for lane in lanes {
-                router.touch(lane.stream, done);
-                if let Some(port) = ports.get_mut(&lane.stream) {
-                    port.ticks += 1;
-                    metrics.outputs += 1;
-                    let _ = port.out.send(TickResult {
-                        logits: lane.logits,
-                        out: lane.out,
-                        tick: port.ticks,
-                    });
-                }
-            }
-        }
-    }
-}
+/// The spawned serving engine (compat name: a 1-shard cluster is the
+/// old engine thread; N shards scale it across cores).
+pub type EngineThread = ShardedEngine;

@@ -74,7 +74,7 @@ impl LatencyHisto {
     }
 }
 
-/// Aggregate serving counters, owned by the engine thread.
+/// Per-shard serving counters, owned by one shard worker thread.
 #[derive(Debug, Clone, Default)]
 pub struct EngineMetrics {
     pub ticks: u64,
@@ -82,6 +82,8 @@ pub struct EngineMetrics {
     pub outputs: u64,
     pub streams_opened: u64,
     pub streams_closed: u64,
+    /// idle sessions reclaimed by admission (distinct from explicit closes)
+    pub streams_evicted: u64,
     pub admission_rejects: u64,
     pub tick_latency: LatencyHisto,
     /// time a token waits in the batcher before its tick starts
@@ -93,15 +95,30 @@ impl EngineMetrics {
         Self { tick_latency: LatencyHisto::new(), queue_latency: LatencyHisto::new(), ..Default::default() }
     }
 
+    /// Fold another shard's counters into this one (histograms merge
+    /// bucket-wise) — the cluster aggregate is a plain sum of shards.
+    pub fn merge(&mut self, other: &EngineMetrics) {
+        self.ticks += other.ticks;
+        self.tokens_in += other.tokens_in;
+        self.outputs += other.outputs;
+        self.streams_opened += other.streams_opened;
+        self.streams_closed += other.streams_closed;
+        self.streams_evicted += other.streams_evicted;
+        self.admission_rejects += other.admission_rejects;
+        self.tick_latency.merge(&other.tick_latency);
+        self.queue_latency.merge(&other.queue_latency);
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "ticks={} tokens={} outputs={} streams={}/{} rejects={} \
+            "ticks={} tokens={} outputs={} streams={}/{} evicted={} rejects={} \
              tick(mean={:?} p50={:?} p95={:?} max={:?}) queue(p95={:?})",
             self.ticks,
             self.tokens_in,
             self.outputs,
             self.streams_opened,
             self.streams_closed,
+            self.streams_evicted,
             self.admission_rejects,
             self.tick_latency.mean(),
             self.tick_latency.quantile(0.5),
@@ -109,6 +126,93 @@ impl EngineMetrics {
             self.tick_latency.max(),
             self.queue_latency.quantile(0.95),
         )
+    }
+}
+
+/// Cluster-wide serving metrics: the per-shard [`EngineMetrics`] plus
+/// their sum and the front door's placement counters. The aggregate
+/// fields mirror `EngineMetrics` name-for-name, so code written against
+/// the single-engine metrics keeps reading the same fields and now sees
+/// cluster totals.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterMetrics {
+    pub ticks: u64,
+    pub tokens_in: u64,
+    pub outputs: u64,
+    pub streams_opened: u64,
+    pub streams_closed: u64,
+    pub streams_evicted: u64,
+    pub admission_rejects: u64,
+    pub tick_latency: LatencyHisto,
+    pub queue_latency: LatencyHisto,
+    /// Per-shard breakdown (index = shard id).
+    pub per_shard: Vec<EngineMetrics>,
+    /// Streams placed on their policy-preferred shard.
+    pub placed_primary: u64,
+    /// Streams placed on a fallback shard (primary was full).
+    pub placed_fallback: u64,
+    /// Opens rejected by every shard (cluster saturated).
+    pub cluster_rejects: u64,
+}
+
+impl ClusterMetrics {
+    /// Build the aggregate view from per-shard snapshots; the front
+    /// door fills the placement counters afterwards.
+    pub fn from_shards(per_shard: Vec<EngineMetrics>) -> Self {
+        let mut agg = EngineMetrics::new();
+        for m in &per_shard {
+            agg.merge(m);
+        }
+        Self {
+            ticks: agg.ticks,
+            tokens_in: agg.tokens_in,
+            outputs: agg.outputs,
+            streams_opened: agg.streams_opened,
+            streams_closed: agg.streams_closed,
+            streams_evicted: agg.streams_evicted,
+            admission_rejects: agg.admission_rejects,
+            tick_latency: agg.tick_latency,
+            queue_latency: agg.queue_latency,
+            per_shard,
+            placed_primary: 0,
+            placed_fallback: 0,
+            cluster_rejects: 0,
+        }
+    }
+
+    /// The aggregate counters as one `EngineMetrics` view, built from
+    /// the stored totals (the single source of truth after
+    /// `from_shards`) — not re-derived from `per_shard`, so the two can
+    /// never silently diverge.
+    pub fn aggregate(&self) -> EngineMetrics {
+        EngineMetrics {
+            ticks: self.ticks,
+            tokens_in: self.tokens_in,
+            outputs: self.outputs,
+            streams_opened: self.streams_opened,
+            streams_closed: self.streams_closed,
+            streams_evicted: self.streams_evicted,
+            admission_rejects: self.admission_rejects,
+            tick_latency: self.tick_latency.clone(),
+            queue_latency: self.queue_latency.clone(),
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "cluster: shards={} placed(primary={} fallback={}) rejects={}\n  total: {}",
+            self.per_shard.len(),
+            self.placed_primary,
+            self.placed_fallback,
+            self.cluster_rejects,
+            self.aggregate().report(),
+        );
+        if self.per_shard.len() > 1 {
+            for (i, m) in self.per_shard.iter().enumerate() {
+                s.push_str(&format!("\n  shard {i}: {}", m.report()));
+            }
+        }
+        s
     }
 }
 
@@ -143,5 +247,28 @@ mod tests {
         let h = LatencyHisto::new();
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+
+    #[test]
+    fn cluster_metrics_sum_shards() {
+        let mut a = EngineMetrics::new();
+        a.ticks = 3;
+        a.outputs = 5;
+        a.streams_opened = 2;
+        a.tick_latency.record(Duration::from_micros(100));
+        let mut b = EngineMetrics::new();
+        b.ticks = 4;
+        b.outputs = 7;
+        b.streams_evicted = 1;
+        b.tick_latency.record(Duration::from_micros(400));
+        let c = ClusterMetrics::from_shards(vec![a, b]);
+        assert_eq!(c.ticks, 7);
+        assert_eq!(c.outputs, 12);
+        assert_eq!(c.streams_opened, 2);
+        assert_eq!(c.streams_evicted, 1);
+        assert_eq!(c.tick_latency.count(), 2);
+        assert_eq!(c.per_shard.len(), 2);
+        assert_eq!(c.aggregate().outputs, 12);
+        assert!(c.report().contains("shard 1"));
     }
 }

@@ -1,19 +1,46 @@
 //! Layer-3 coordinator — the serving system around the AOT executables.
 //!
+//! Cluster data flow (front door → shard router → per-shard
+//! batcher/stepper):
+//!
+//! ```text
+//!   clients ──► EngineHandle (cluster front door, Clone + Send)
+//!                 │  ShardRouter: hash placement, least-loaded
+//!                 │  fallback, stream → shard pinning
+//!        ┌────────┼──────────┐
+//!        ▼        ▼          ▼
+//!     shard 0   shard 1 …  shard N-1      one worker thread each
+//!     Router    Router     Router         admission + idle eviction
+//!     Batcher   Batcher    Batcher        deadline / all-slots ticks
+//!     Stepper   Stepper    Stepper        batched scalar | PJRT
+//!        │        │          │
+//!        └────────┴──────────┴── per-stream channels ──► TickResult
+//! ```
+//!
 //! Pieces (DESIGN.md §3):
 //! - [`slots`]   — slot-based continual batching (fixed-size DeepCoT
 //!   state ⇒ fixed batch lanes; the encoder-side KV-cache analogue of a
 //!   vLLM-style router).
 //! - [`batcher`] — tick assembly: all-slots-ready or deadline flush,
 //!   per-stream FIFO queues with backpressure.
-//! - [`router`]  — admission, placement, idle eviction.
-//! - [`slot_stepper`] — batched PJRT step with per-lane state masking.
-//! - [`engine`]  — the engine thread + `Send` client handle.
-//! - [`metrics`] — latency histograms and serving counters.
+//! - [`router`]  — per-shard admission, slot placement, idle eviction.
+//! - [`slot_stepper`] — batched PJRT/scalar step with per-lane state
+//!   masking and (scalar) per-lane position clocks.
+//! - [`shard`]   — one shard worker: the per-tick serving loop around
+//!   a backend, with drain-on-shutdown semantics.
+//! - [`cluster`] — the multi-shard subsystem: [`cluster::ShardRouter`]
+//!   placement (hash / least-loaded / round-robin with least-loaded
+//!   fallback) and the [`cluster::ShardedEngine`] front door.
+//! - [`engine`]  — the public compat facade (`EngineThread`,
+//!   `EngineHandle`).
+//! - [`metrics`] — latency histograms, per-shard counters, and the
+//!   merged [`metrics::ClusterMetrics`] view.
 
 pub mod batcher;
+pub mod cluster;
 pub mod engine;
 pub mod metrics;
 pub mod router;
+pub mod shard;
 pub mod slot_stepper;
 pub mod slots;

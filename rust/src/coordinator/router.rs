@@ -25,7 +25,6 @@ pub enum Admission {
 pub struct Router {
     slots: SlotMap,
     sessions: BTreeMap<StreamId, SessionInfo>,
-    next_id: u64,
     pub idle_timeout: Duration,
 }
 
@@ -34,7 +33,6 @@ impl Router {
         Self {
             slots: SlotMap::new(capacity),
             sessions: BTreeMap::new(),
-            next_id: 1,
             idle_timeout,
         }
     }
@@ -55,11 +53,13 @@ impl Router {
         self.sessions.get(&id)
     }
 
-    /// Admit a new stream: use a free slot, else evict the longest-idle
-    /// session past the timeout, else reject. Returns (id, admission).
-    pub fn open(&mut self, now: Instant) -> (StreamId, Admission) {
-        let id = StreamId(self.next_id);
-        self.next_id += 1;
+    /// Admit a stream under an externally assigned id (the cluster
+    /// front door owns the id namespace): use a free slot, else evict
+    /// the longest-idle session past the timeout, else reject. The
+    /// evicted victim (if any) is reported so the caller can drop that
+    /// stream's port and queued tokens — never swallow it.
+    pub fn admit(&mut self, id: StreamId, now: Instant) -> (Admission, Option<StreamId>) {
+        let mut evicted = None;
         if self.slots.is_full() {
             let evict = self
                 .sessions
@@ -70,8 +70,9 @@ impl Router {
             match evict {
                 Some(eid) => {
                     self.close(eid);
+                    evicted = Some(eid);
                 }
-                None => return (id, Admission::Rejected),
+                None => return (Admission::Rejected, None),
             }
         }
         let slot = self.slots.bind(id).expect("slot free after eviction");
@@ -79,7 +80,7 @@ impl Router {
             id,
             SessionInfo { slot, opened: now, last_activity: now, ticks: 0 },
         );
-        (id, Admission::Accepted(slot))
+        (Admission::Accepted(slot), evicted)
     }
 
     /// Record a completed tick for a stream.
@@ -110,11 +111,11 @@ mod tests {
     fn admit_until_full_then_reject() {
         let now = Instant::now();
         let mut r = Router::new(2, Duration::from_secs(3600));
-        let (_, a) = r.open(now);
-        let (_, b) = r.open(now);
+        let (a, _) = r.admit(StreamId(1), now);
+        let (b, _) = r.admit(StreamId(2), now);
         assert!(matches!(a, Admission::Accepted(_)));
         assert!(matches!(b, Admission::Accepted(_)));
-        let (_, c) = r.open(now);
+        let (c, _) = r.admit(StreamId(3), now);
         assert_eq!(c, Admission::Rejected);
     }
 
@@ -122,10 +123,11 @@ mod tests {
     fn eviction_frees_idle_sessions() {
         let now = Instant::now();
         let mut r = Router::new(1, Duration::from_millis(10));
-        let (id1, _) = r.open(now);
-        // id1 idle past timeout -> evicted on next open
+        let id1 = StreamId(1);
+        r.admit(id1, now);
+        // id1 idle past timeout -> evicted on next admission
         let later = now + Duration::from_millis(20);
-        let (_, adm) = r.open(later);
+        let (adm, _) = r.admit(StreamId(2), later);
         assert!(matches!(adm, Admission::Accepted(_)));
         assert!(r.session(id1).is_none());
     }
@@ -134,11 +136,13 @@ mod tests {
     fn touch_prevents_eviction() {
         let now = Instant::now();
         let mut r = Router::new(1, Duration::from_millis(10));
-        let (id1, _) = r.open(now);
+        let id1 = StreamId(1);
+        r.admit(id1, now);
         let later = now + Duration::from_millis(20);
         r.touch(id1, later);
-        let (_, adm) = r.open(later + Duration::from_millis(5));
+        let (adm, ev) = r.admit(StreamId(2), later + Duration::from_millis(5));
         assert_eq!(adm, Admission::Rejected);
+        assert_eq!(ev, None);
         assert!(r.session(id1).is_some());
     }
 
@@ -146,31 +150,55 @@ mod tests {
     fn close_frees_slot() {
         let now = Instant::now();
         let mut r = Router::new(1, Duration::from_secs(1));
-        let (id, _) = r.open(now);
+        let id = StreamId(1);
+        r.admit(id, now);
         let slot = r.close(id);
         assert!(slot.is_some());
         assert_eq!(r.occupied(), 0);
-        let (_, adm) = r.open(now);
+        let (adm, _) = r.admit(StreamId(2), now);
         assert!(matches!(adm, Admission::Accepted(_)));
     }
 
-    /// Property: ids are never reused; occupied never exceeds capacity;
-    /// every admitted stream has a consistent slot.
+    #[test]
+    fn admit_reports_the_evicted_session() {
+        let now = Instant::now();
+        let mut r = Router::new(1, Duration::from_millis(10));
+        let (adm, ev) = r.admit(StreamId(100), now);
+        assert!(matches!(adm, Admission::Accepted(_)));
+        assert_eq!(ev, None);
+        // idle past the timeout: the next admit evicts and names the victim
+        let later = now + Duration::from_millis(20);
+        let (adm, ev) = r.admit(StreamId(101), later);
+        assert!(matches!(adm, Admission::Accepted(_)));
+        assert_eq!(ev, Some(StreamId(100)));
+        assert!(r.session(StreamId(100)).is_none());
+        // nothing evictable: reject, no victim
+        let (adm, ev) = r.admit(StreamId(102), later);
+        assert_eq!(adm, Admission::Rejected);
+        assert_eq!(ev, None);
+    }
+
+    /// Property: occupied never exceeds capacity; every admitted stream
+    /// has a consistent slot; evictions are always reported.
     #[test]
     fn prop_router_invariants() {
         prop::check("router-invariants", 150, |rng| {
             let cap = rng.range(1, 5);
             let mut r = Router::new(cap, Duration::from_millis(rng.range(1, 30) as u64));
             let mut t = Instant::now();
-            let mut seen_ids = std::collections::BTreeSet::new();
+            let mut next_id = 1u64;
             let mut live: Vec<StreamId> = Vec::new();
             for _ in 0..rng.range(1, 60) {
                 t += Duration::from_millis(rng.range(0, 20) as u64);
                 match rng.below(3) {
                     0 => {
-                        let (id, adm) = r.open(t);
-                        if !seen_ids.insert(id.0) {
-                            return Err(format!("id {} reused", id.0));
+                        let id = StreamId(next_id);
+                        next_id += 1;
+                        let (adm, evicted) = r.admit(id, t);
+                        if let Some(eid) = evicted {
+                            if r.session(eid).is_some() {
+                                return Err(format!("evicted id {} still live", eid.0));
+                            }
                         }
                         if let Admission::Accepted(slot) = adm {
                             if slot >= cap {

@@ -1,0 +1,378 @@
+//! One engine shard: a worker thread owning a complete serving cell —
+//! its own execution backend ([`SlotStepper`]: PJRT handles are
+//! `Rc`-based and the scalar backend is plain host memory, so
+//! everything state-touching lives on this thread), its own [`Router`]
+//! (admission, idle eviction), [`Batcher`] (deadline / all-slots tick
+//! policy) and [`EngineMetrics`]. The cluster front door
+//! (`coordinator::cluster`) spawns N of these and pins each stream to
+//! one shard; a 1-shard cluster is exactly the old single-threaded
+//! engine.
+//!
+//! Data flow per tick (within one shard):
+//!   front door → Open/Push ─┐
+//!                           ├→ Batcher (deadline / all-slots policy)
+//!   Router (slots) ─────────┘        │
+//!                                    ▼
+//!                  SlotStepper.tick (one batched step, all live lanes)
+//!                                    │
+//!          per-stream output channels ← scatter lanes + metrics
+//!
+//! Stream ids are assigned by the front door (a cluster-global
+//! namespace), so a stream keeps its id no matter which shard it lands
+//! on; the shard's router only binds ids to batch lanes.
+//!
+//! Shutdown discipline: on [`ShardRequest::Shutdown`] the worker drains
+//! every request still queued in its channel and answers each with a
+//! terminal error (final metrics are still served) — a caller blocked
+//! on a reply is never left hanging, and queued pushes fail loudly
+//! instead of silently dropping their ticks.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{EngineBackend, EngineConfig};
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::EngineMetrics;
+use crate::coordinator::router::{Admission, Router};
+use crate::coordinator::slot_stepper::SlotStepper;
+use crate::coordinator::slots::StreamId;
+use crate::manifest::Manifest;
+use crate::nn::params::ModelParams;
+use crate::runtime::Runtime;
+
+/// One tick's result delivered to a stream's owner.
+#[derive(Debug, Clone)]
+pub struct TickResult {
+    pub logits: Vec<f32>,
+    pub out: Vec<f32>,
+    /// Per-stream tick ordinal (1-based; counts only this stream's ticks).
+    pub tick: u64,
+}
+
+/// A successful admission: the stream's output channel, plus the idle
+/// session this shard evicted to make room (the front door must drop
+/// the victim's binding too — its owner may never close it).
+pub(crate) type Admitted = (Receiver<TickResult>, Option<StreamId>);
+
+pub(crate) enum ShardRequest {
+    Open { id: StreamId, reply: Sender<Result<Admitted>> },
+    Push { id: StreamId, tokens: Vec<f32>, reply: Sender<Result<()>> },
+    Close { id: StreamId },
+    Metrics { reply: Sender<EngineMetrics> },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to one shard's worker thread.
+#[derive(Clone)]
+pub(crate) struct ShardHandle {
+    shard: usize,
+    tx: SyncSender<ShardRequest>,
+}
+
+impl ShardHandle {
+    /// Bind a front-door-assigned stream id; returns its output channel
+    /// and the idle stream evicted to make room, if any.
+    pub(crate) fn open(&self, id: StreamId) -> Result<Admitted> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(ShardRequest::Open { id, reply })
+            .map_err(|_| anyhow!("shard {} is gone", self.shard))?;
+        rx.recv().map_err(|_| anyhow!("shard {} dropped reply", self.shard))?
+    }
+
+    /// Submit the next token(s) for a stream bound to this shard.
+    pub(crate) fn push(&self, id: StreamId, tokens: Vec<f32>) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(ShardRequest::Push { id, tokens, reply })
+            .map_err(|_| anyhow!("shard {} is gone", self.shard))?;
+        rx.recv().map_err(|_| anyhow!("shard {} dropped reply", self.shard))?
+    }
+
+    pub(crate) fn close(&self, id: StreamId) {
+        let _ = self.tx.send(ShardRequest::Close { id });
+    }
+
+    pub(crate) fn metrics(&self) -> Result<EngineMetrics> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(ShardRequest::Metrics { reply })
+            .map_err(|_| anyhow!("shard {} is gone", self.shard))?;
+        rx.recv().map_err(|_| anyhow!("shard {} dropped reply", self.shard))
+    }
+
+    pub(crate) fn signal_shutdown(&self) {
+        let _ = self.tx.send(ShardRequest::Shutdown);
+    }
+}
+
+pub(crate) struct ShardThread {
+    handle: ShardHandle,
+    /// Startup signal, consumed by [`Self::wait_ready`].
+    ready: Option<Receiver<Result<()>>>,
+    join: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ShardThread {
+    /// Start one shard worker WITHOUT waiting for its backend: the
+    /// cluster starts every shard first and then waits on all of them,
+    /// so N shards load their models in parallel instead of serially.
+    pub(crate) fn start(shard: usize, cfg: EngineConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::sync_channel::<ShardRequest>(cfg.request_queue);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name(format!("deepcot-shard-{shard}"))
+            .spawn(move || shard_main(shard, cfg, rx, ready_tx))?;
+        Ok(Self {
+            handle: ShardHandle { shard, tx },
+            ready: Some(ready_rx),
+            join: Some(join),
+        })
+    }
+
+    /// Block until the shard's model is loaded and the backend is up
+    /// (so the first Push never pays compile latency). Idempotent.
+    pub(crate) fn wait_ready(&mut self) -> Result<()> {
+        match self.ready.take() {
+            Some(rx) => rx
+                .recv()
+                .map_err(|_| anyhow!("shard {} died during startup", self.handle.shard))?,
+            None => Ok(()),
+        }
+    }
+
+    pub(crate) fn handle(&self) -> ShardHandle {
+        self.handle.clone()
+    }
+
+    pub(crate) fn signal_shutdown(&self) {
+        self.handle.signal_shutdown();
+    }
+
+    pub(crate) fn join(&mut self) -> Result<()> {
+        if let Some(j) = self.join.take() {
+            j.join()
+                .map_err(|_| anyhow!("shard {} panicked", self.handle.shard))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ShardThread {
+    fn drop(&mut self) {
+        self.signal_shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Backend selection: PJRT when the XLA runtime is available, the
+/// pure-Rust batched scalar engine otherwise (or on request) — same
+/// manifest, same weights, same lane semantics. The scalar backend
+/// honors `cfg.slots_per_shard`; PJRT capacity is AOT-compiled, so an
+/// override there is an error (under `auto` it simply falls through to
+/// the scalar backend).
+fn init_stepper(cfg: &EngineConfig) -> Result<(Option<Runtime>, SlotStepper)> {
+    let pjrt = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper)> {
+        if cfg.slots_per_shard != 0 {
+            bail!(
+                "per-shard slot capacity override requires the scalar backend \
+                 (PJRT batch is AOT-compiled)"
+            );
+        }
+        let rt = Runtime::new(&cfg.artifacts_dir)?;
+        let variant = rt.load(&cfg.variant)?;
+        let stepper = SlotStepper::new(variant)?;
+        Ok((Some(rt), stepper))
+    };
+    let scalar = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper)> {
+        let (manifest, dir) = Manifest::load(&cfg.artifacts_dir)?;
+        let entry = manifest.variant(&cfg.variant)?;
+        let params = ModelParams::load(&dir, entry)?;
+        let capacity = if cfg.slots_per_shard != 0 {
+            cfg.slots_per_shard
+        } else {
+            entry.config.batch
+        };
+        Ok((None, SlotStepper::new_scalar_with_capacity(entry, params, capacity)?))
+    };
+    match cfg.backend {
+        EngineBackend::Pjrt => pjrt(cfg),
+        EngineBackend::Scalar => scalar(cfg),
+        EngineBackend::Auto => pjrt(cfg).or_else(|pe| {
+            scalar(cfg).map_err(|se| anyhow!("pjrt backend: {pe}; scalar fallback: {se}"))
+        }),
+    }
+}
+
+struct StreamPort {
+    out: Sender<TickResult>,
+    ticks: u64,
+}
+
+fn shard_main(
+    shard: usize,
+    cfg: EngineConfig,
+    rx: Receiver<ShardRequest>,
+    ready: Sender<Result<()>>,
+) -> Result<()> {
+    let (_rt, mut stepper) = match init_stepper(&cfg) {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("{e}")));
+            bail!("shard {shard} init failed");
+        }
+    };
+    // auto-fallback silently changes the latency class — always say
+    // which backend actually came up
+    eprintln!(
+        "deepcot engine: shard {shard} serving {} on the {} backend (slots={})",
+        cfg.variant,
+        stepper.backend_name(),
+        stepper.capacity()
+    );
+    let lane_elems = {
+        let c = stepper.config();
+        c.m_tokens * c.d_in
+    };
+    let mut router = Router::new(stepper.capacity(), cfg.idle_timeout);
+    let mut batcher = Batcher::new(cfg.batch_deadline, cfg.max_queue_per_stream);
+    let mut ports: std::collections::BTreeMap<StreamId, StreamPort> = Default::default();
+    let mut metrics = EngineMetrics::new();
+
+    loop {
+        // 1. drain / wait for requests up to the batching deadline
+        let wait = if batcher.pending_len() > 0 {
+            cfg.batch_deadline / 4
+        } else {
+            Duration::from_millis(50)
+        };
+        match rx.recv_timeout(wait) {
+            Ok(req) => {
+                let now = Instant::now();
+                match req {
+                    ShardRequest::Open { id, reply } => {
+                        let (adm, evicted) = router.admit(id, now);
+                        if let Some(eid) = evicted {
+                            // the victim's port and queued tokens go with
+                            // it: its owner sees a disconnected channel
+                            batcher.forget(eid);
+                            ports.remove(&eid);
+                            metrics.streams_evicted += 1;
+                        }
+                        let res = match adm {
+                            Admission::Accepted(slot) => {
+                                stepper.clear_lane(slot);
+                                let (out_tx, out_rx) = mpsc::channel();
+                                ports.insert(id, StreamPort { out: out_tx, ticks: 0 });
+                                metrics.streams_opened += 1;
+                                Ok((out_rx, evicted))
+                            }
+                            Admission::Rejected => {
+                                metrics.admission_rejects += 1;
+                                Err(anyhow!(
+                                    "shard {shard}: no free slots (capacity {})",
+                                    router.capacity()
+                                ))
+                            }
+                        };
+                        let _ = reply.send(res);
+                    }
+                    ShardRequest::Push { id, tokens, reply } => {
+                        let res = if router.slot_of(id).is_none() {
+                            Err(anyhow!("unknown stream {id:?}"))
+                        } else if tokens.len() != lane_elems {
+                            Err(anyhow!(
+                                "expected {lane_elems} f32 tokens, got {}",
+                                tokens.len()
+                            ))
+                        } else if batcher.push(id, tokens, now) {
+                            metrics.tokens_in += 1;
+                            Ok(())
+                        } else {
+                            Err(anyhow!("stream {id:?} queue full (backpressure)"))
+                        };
+                        let _ = reply.send(res);
+                    }
+                    ShardRequest::Close { id } => {
+                        // count only streams that were actually bound: a
+                        // late close of an already-evicted stream must
+                        // not double-count as both evicted and closed
+                        if let Some(slot) = router.close(id) {
+                            stepper.clear_lane(slot);
+                            metrics.streams_closed += 1;
+                        }
+                        batcher.forget(id);
+                        ports.remove(&id);
+                    }
+                    ShardRequest::Metrics { reply } => {
+                        let _ = reply.send(metrics.clone());
+                    }
+                    ShardRequest::Shutdown => return drain(shard, &rx, &metrics),
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return Ok(()),
+        }
+
+        // 2. tick when the policy says so
+        let now = Instant::now();
+        if batcher.ready(router.occupied(), now) {
+            let plan = batcher.take_tick(|id| router.slot_of(id));
+            if plan.lanes.is_empty() {
+                continue;
+            }
+            for (_, _, _, enq) in &plan.lanes {
+                metrics.queue_latency.record(now.duration_since(*enq));
+            }
+            let t0 = Instant::now();
+            let lanes = stepper.tick(&plan)?;
+            metrics.tick_latency.record(t0.elapsed());
+            metrics.ticks += 1;
+            let done = Instant::now();
+            for lane in lanes {
+                router.touch(lane.stream, done);
+                if let Some(port) = ports.get_mut(&lane.stream) {
+                    port.ticks += 1;
+                    metrics.outputs += 1;
+                    let _ = port.out.send(TickResult {
+                        logits: lane.logits,
+                        out: lane.out,
+                        tick: port.ticks,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Post-shutdown drain: answer every request still queued with a
+/// terminal error so no caller is left blocked on a reply channel
+/// (metrics requests are still served the final snapshot). Requests
+/// arriving after the drain observes an empty queue get the generic
+/// disconnected-channel error when the receiver drops.
+fn drain(shard: usize, rx: &Receiver<ShardRequest>, metrics: &EngineMetrics) -> Result<()> {
+    loop {
+        match rx.try_recv() {
+            Ok(ShardRequest::Open { reply, .. }) => {
+                let _ = reply.send(Err(anyhow!("shard {shard} is shutting down")));
+            }
+            Ok(ShardRequest::Push { reply, .. }) => {
+                let _ = reply.send(Err(anyhow!(
+                    "shard {shard} shut down before this push was served"
+                )));
+            }
+            Ok(ShardRequest::Metrics { reply }) => {
+                let _ = reply.send(metrics.clone());
+            }
+            Ok(ShardRequest::Close { .. }) | Ok(ShardRequest::Shutdown) => {}
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return Ok(()),
+        }
+    }
+}

@@ -18,10 +18,19 @@
 //!   * lane recycling — releasing a slot zeroes its lane, giving the
 //!     next stream a cold memory.
 //!
-//! Positions: all lanes share the engine's global tick counter. RoPE's
-//! relative-offset property makes attention invariant to a common
-//! shift, and a lane that skips ticks sees its past at the true elapsed
-//! distance — wall-clock-consistent semantics for real-time streams.
+//! Positions: the scalar backend keeps a per-lane position clock — a
+//! stream's clock starts at 0 when its slot is bound and advances only
+//! on the ticks it participates in, so its RoPE phases depend on
+//! nothing but its own history (the property the cluster's cross-shard
+//! bitwise-equivalence tests pin down). The PJRT backend still runs on
+//! the shared engine clock (RoPE's relative-offset property makes
+//! attention invariant to the common shift) until the AOT step variants
+//! accept a vector `pos` input — see ROADMAP.
+//!
+//! Capacity: the scalar backend's lane count is a constructor argument
+//! (`new_scalar_with_capacity`), letting a shard size its slot budget
+//! independently of the manifest's compiled batch; PJRT capacity is
+//! baked into the executable's batch dimension.
 
 use std::rc::Rc;
 
@@ -60,9 +69,20 @@ impl SlotStepper {
     }
 
     /// Pure-Rust scalar backend from a manifest entry + host weights
-    /// (no PJRT client, no XLA shared library).
+    /// (no PJRT client, no XLA shared library), at the variant's
+    /// compiled batch size.
     pub fn new_scalar(entry: &VariantEntry, params: ModelParams) -> Result<Self> {
-        Ok(Self { backend: Backend::Scalar(ScalarSlotStepper::new(entry, params)?) })
+        Self::new_scalar_with_capacity(entry, params, entry.config.batch)
+    }
+
+    /// Scalar backend with an explicit slot capacity (shard-sized lane
+    /// count, independent of the manifest's compiled batch).
+    pub fn new_scalar_with_capacity(
+        entry: &VariantEntry,
+        params: ModelParams,
+        capacity: usize,
+    ) -> Result<Self> {
+        Ok(Self { backend: Backend::Scalar(ScalarSlotStepper::new(entry, params, capacity)?) })
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -80,14 +100,17 @@ impl SlotStepper {
     }
 
     pub fn capacity(&self) -> usize {
-        self.config().batch
+        match &self.backend {
+            Backend::Pjrt(s) => s.variant.entry.config.batch,
+            Backend::Scalar(s) => s.capacity,
+        }
     }
 
     /// Zero a lane's state (stream released / new stream admitted).
     pub fn clear_lane(&mut self, lane: usize) {
         match &mut self.backend {
             Backend::Pjrt(s) => s.clear_lane(lane),
-            Backend::Scalar(s) => s.model.reset_lane(lane),
+            Backend::Scalar(s) => s.clear_lane(lane),
         }
     }
 
@@ -106,13 +129,18 @@ impl SlotStepper {
 struct ScalarSlotStepper {
     cfg: ModelConfig,
     model: BatchedScalarDeepCoT,
+    /// Lane count (shard slot budget; independent of `cfg.batch`).
+    capacity: usize,
     /// Reused per-tick staging (stacked lane tokens + live mask).
     tokens: Mat,
     live: Vec<bool>,
+    /// Per-lane stream position clocks: rewound when a slot is cleared,
+    /// advanced by m_tokens for every tick the lane participates in.
+    lane_pos: Vec<i32>,
 }
 
 impl ScalarSlotStepper {
-    fn new(entry: &VariantEntry, params: ModelParams) -> Result<Self> {
+    fn new(entry: &VariantEntry, params: ModelParams, capacity: usize) -> Result<Self> {
         if entry.family != "deepcot" {
             bail!(
                 "scalar slot backend implements the deepcot family only (got {})",
@@ -125,15 +153,26 @@ impl ScalarSlotStepper {
             bail!("scalar slot backend needs a continual step variant (entry has no state wiring)");
         }
         let cfg = entry.config.clone();
-        let b = cfg.batch;
-        anyhow::ensure!(b >= 1, "batched variant must have batch >= 1");
-        let model = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, b);
-        let tokens = Mat::zeros(b * cfg.m_tokens, cfg.d_in);
-        Ok(Self { cfg, model, tokens, live: vec![false; b] })
+        anyhow::ensure!(capacity >= 1, "scalar slot backend needs capacity >= 1");
+        let model = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, capacity);
+        let tokens = Mat::zeros(capacity * cfg.m_tokens, cfg.d_in);
+        Ok(Self {
+            cfg,
+            model,
+            capacity,
+            tokens,
+            live: vec![false; capacity],
+            lane_pos: vec![0; capacity],
+        })
+    }
+
+    fn clear_lane(&mut self, lane: usize) {
+        self.model.reset_lane(lane);
+        self.lane_pos[lane] = 0;
     }
 
     fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
-        let (b, m, d_in) = (self.cfg.batch, self.cfg.m_tokens, self.cfg.d_in);
+        let (b, m, d_in) = (self.capacity, self.cfg.m_tokens, self.cfg.d_in);
         let lane_elems = m * d_in;
         self.live.iter_mut().for_each(|v| *v = false);
         self.tokens.fill(0.0);
@@ -148,7 +187,7 @@ impl ScalarSlotStepper {
             self.tokens.data[slot * lane_elems..(slot + 1) * lane_elems].copy_from_slice(toks);
             self.live[*slot] = true;
         }
-        let step = self.model.tick_lanes(&self.tokens, &self.live)?;
+        let step = self.model.tick_lanes(&self.tokens, &self.live, &self.lane_pos)?;
         let mut res = Vec::with_capacity(plan.lanes.len());
         for (slot, stream, _, _) in &plan.lanes {
             res.push(LaneOut {
@@ -157,6 +196,10 @@ impl ScalarSlotStepper {
                 logits: step.logits.row(*slot).to_vec(),
                 out: step.out.rows_view(slot * m, m).as_slice().to_vec(),
             });
+        }
+        // advance the clocks of exactly the lanes that ticked
+        for (slot, _, _, _) in &plan.lanes {
+            self.lane_pos[*slot] += m as i32;
         }
         Ok(res)
     }

@@ -26,6 +26,8 @@
 //!   GTZAN / URBAN-SED / GLUE (DESIGN.md §2).
 //! - [`probe`] — ridge/logistic readouts + metrics (accuracy, mAP, F1).
 //! - [`bench_harness`] — regenerates every paper table and figure.
+//! - [`synthetic`] — hermetic synthetic serve artifacts (manifest +
+//!   weights blob) for engine/cluster tests and `bench_throughput`.
 
 // Numeric kernels index with explicit offsets on purpose (mirrors the
 // papers' loop nests and keeps summation order auditable).
@@ -41,6 +43,7 @@ pub mod manifest;
 pub mod nn;
 pub mod probe;
 pub mod runtime;
+pub mod synthetic;
 pub mod workload;
 
 /// Locate the artifacts directory: `$DEEPCOT_ARTIFACTS` or

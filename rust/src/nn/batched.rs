@@ -10,11 +10,23 @@
 //! construction; a steady-state tick performs no heap allocation and no
 //! memory roll (see `tests/zero_alloc.rs`).
 //!
-//! Lane semantics mirror `coordinator::slot_stepper`: all lanes share
-//! one position clock (RoPE's relative-offset property makes attention
-//! invariant to the common shift), and a lane masked out of a tick
-//! keeps its K/V memory untouched — its stacked rows are still computed
-//! (fixed batch shape, like the batched PJRT executable) but discarded.
+//! Lane semantics mirror `coordinator::slot_stepper`: a lane masked out
+//! of a tick keeps its K/V memory untouched — its stacked rows are
+//! still computed (fixed batch shape, like the batched PJRT executable)
+//! but discarded.
+//!
+//! Positions: every lane carries its own position clock. [`tick_all`]
+//! uses (and advances) the internal per-lane clocks; [`tick_lanes`]
+//! takes the caller's per-lane `pos` slice instead — the coordinator
+//! owns stream clocks — so a stream admitted mid-run starts at position
+//! 0 and sees exactly the RoPE phases it would have seen serving alone.
+//! That per-stream determinism is what makes sharded serving
+//! bitwise-reproducible across cluster layouts. A masked lane's clock
+//! does not advance: a paused stream resumes where it left off
+//! (session-consistent positions rather than wall-clock-consistent).
+//!
+//! [`tick_all`]: BatchedScalarDeepCoT::tick_all
+//! [`tick_lanes`]: BatchedScalarDeepCoT::tick_lanes
 
 use anyhow::Result;
 
@@ -46,6 +58,8 @@ struct Scratch {
     logits: Mat,
     /// Which lanes advance this tick.
     live: Vec<bool>,
+    /// Per-lane position of the first new token this tick.
+    pos: Vec<i32>,
 }
 
 impl Scratch {
@@ -63,6 +77,7 @@ impl Scratch {
             scores: vec![0.0; cfg.mem_len() + cfg.m_tokens],
             logits: Mat::zeros(lanes, cfg.n_classes),
             live: vec![true; lanes],
+            pos: vec![0; lanes],
         }
     }
 }
@@ -84,8 +99,9 @@ pub struct BatchedScalarDeepCoT {
     kmem: Vec<KvRing>,
     vmem: Vec<KvRing>,
     scratch: Scratch,
-    /// Shared position clock (advances by m_tokens every tick).
-    pub pos: i32,
+    /// Internal per-lane position clocks, used and advanced by
+    /// [`Self::tick_all`] only; `tick_lanes` callers own their clocks.
+    lane_pos: Vec<i32>,
 }
 
 impl BatchedScalarDeepCoT {
@@ -102,7 +118,7 @@ impl BatchedScalarDeepCoT {
         let kmem = (0..n).map(|_| KvRing::new(mlen, dh)).collect();
         let vmem = (0..n).map(|_| KvRing::new(mlen, dh)).collect();
         let scratch = Scratch::new(&cfg, lanes);
-        Self { cfg, p, lanes, kmem, vmem, scratch, pos: 0 }
+        Self { cfg, p, lanes, kmem, vmem, scratch, lane_pos: vec![0; lanes] }
     }
 
     pub fn lanes(&self) -> usize {
@@ -113,16 +129,17 @@ impl BatchedScalarDeepCoT {
         &self.cfg
     }
 
-    /// Cold-start every lane and rewind the clock.
+    /// Cold-start every lane and rewind every clock.
     pub fn reset(&mut self) {
         for r in self.kmem.iter_mut().chain(self.vmem.iter_mut()) {
             r.reset();
         }
-        self.pos = 0;
+        self.lane_pos.fill(0);
     }
 
-    /// Cold-start one lane (slot released / new stream admitted); the
-    /// shared clock is untouched, matching the slot stepper.
+    /// Cold-start one lane (slot released / new stream admitted): its
+    /// K/V memory and its position clock restart from zero; other lanes
+    /// are untouched.
     pub fn reset_lane(&mut self, lane: usize) {
         assert!(lane < self.lanes);
         let per_lane = self.cfg.n_layers * self.cfg.n_heads;
@@ -130,25 +147,63 @@ impl BatchedScalarDeepCoT {
             self.kmem[i].reset();
             self.vmem[i].reset();
         }
+        self.lane_pos[lane] = 0;
     }
 
-    /// Step every lane. `tokens` is (lanes·m x d_in), lane-major.
+    /// Position clock of one lane (the RoPE phase its next token gets
+    /// under [`Self::tick_all`]).
+    pub fn lane_pos(&self, lane: usize) -> i32 {
+        self.lane_pos[lane]
+    }
+
+    fn check_tokens(&self, tokens: &Mat) -> Result<()> {
+        anyhow::ensure!(
+            tokens.rows == self.lanes * self.cfg.m_tokens && tokens.cols == self.cfg.d_in,
+            "tokens ({} x {}) != (lanes*m = {} x d_in = {})",
+            tokens.rows,
+            tokens.cols,
+            self.lanes * self.cfg.m_tokens,
+            self.cfg.d_in
+        );
+        Ok(())
+    }
+
+    /// Step every lane on the internal per-lane clocks (each advances
+    /// by m_tokens). `tokens` is (lanes·m x d_in), lane-major.
     pub fn tick_all(&mut self, tokens: &Mat) -> Result<StepOut<'_>> {
+        self.check_tokens(tokens)?;
         self.scratch.live.fill(true);
+        self.scratch.pos.copy_from_slice(&self.lane_pos);
+        let m = self.cfg.m_tokens as i32;
+        for p in self.lane_pos.iter_mut() {
+            *p += m;
+        }
         self.step(tokens)
     }
 
-    /// Step with a lane mask: masked lanes keep their K/V memory and
-    /// their outputs are garbage (callers drop them) — the scalar twin
-    /// of the slot stepper's masked-lane semantics.
-    pub fn tick_lanes(&mut self, tokens: &Mat, live: &[bool]) -> Result<StepOut<'_>> {
+    /// Step with a lane mask and caller-owned per-lane position clocks:
+    /// `pos[lane]` is the position of that lane's first new token this
+    /// tick. Masked lanes keep their K/V memory and their outputs are
+    /// garbage (callers drop them) — the scalar twin of the slot
+    /// stepper's masked-lane semantics. The internal clocks are not
+    /// consulted or advanced; the caller advances `pos[lane]` by
+    /// m_tokens for each lane it ticked live.
+    pub fn tick_lanes(&mut self, tokens: &Mat, live: &[bool], pos: &[i32]) -> Result<StepOut<'_>> {
+        self.check_tokens(tokens)?;
         anyhow::ensure!(
             live.len() == self.lanes,
             "live mask {} != lanes {}",
             live.len(),
             self.lanes
         );
+        anyhow::ensure!(
+            pos.len() == self.lanes,
+            "pos clocks {} != lanes {}",
+            pos.len(),
+            self.lanes
+        );
         self.scratch.live.copy_from_slice(live);
+        self.scratch.pos.copy_from_slice(pos);
         self.step(tokens)
     }
 
@@ -159,17 +214,9 @@ impl BatchedScalarDeepCoT {
         let rope = self.cfg.pos == "rope";
         let softmax = self.cfg.activation == "softmax";
         let gelu_act = self.cfg.ffn_act == "gelu";
-        anyhow::ensure!(
-            tokens.rows == lanes * m && tokens.cols == self.cfg.d_in,
-            "tokens ({} x {}) != (lanes*m = {} x d_in = {})",
-            tokens.rows,
-            tokens.cols,
-            lanes * m,
-            self.cfg.d_in
-        );
         let n_layers = self.p.layers.len();
         let p = &self.p;
-        let Scratch { x, q, k, v, attn, proj, hid, scores, logits, live } = &mut self.scratch;
+        let Scratch { x, q, k, v, attn, proj, hid, scores, logits, live, pos } = &mut self.scratch;
 
         tokens.matmul_into(&p.w_in, x);
         x.add_row(&p.b_in);
@@ -184,7 +231,7 @@ impl BatchedScalarDeepCoT {
             v.add_row(&lp.bv);
             if rope {
                 for row in 0..lanes * m {
-                    let pp = self.pos + (row % m) as i32;
+                    let pp = pos[row / m] + (row % m) as i32;
                     for hh in 0..h {
                         apply_rope_inplace(&mut q.row_mut(row)[hh * dh..(hh + 1) * dh], pp);
                         apply_rope_inplace(&mut k.row_mut(row)[hh * dh..(hh + 1) * dh], pp);
@@ -267,7 +314,6 @@ impl BatchedScalarDeepCoT {
             proj.add_row(&lp.b2);
             residual(lp, x, proj, 1);
         }
-        self.pos += m as i32;
         // classifier head on each lane's newest token (bias added after
         // the product sum, matching Mat::matmul + add_row order)
         for lane in 0..lanes {

@@ -171,7 +171,7 @@ impl ScalarDeepCoT {
 
     /// Absolute position of the next incoming token.
     pub fn pos(&self) -> i32 {
-        self.inner.pos
+        self.inner.lane_pos(0)
     }
 
     pub fn reset(&mut self) {

@@ -1,0 +1,252 @@
+//! Hermetic synthetic serve artifacts: writes an artifacts directory
+//! (manifest.json + a little-endian weights blob) for a tiny DeepCoT
+//! geometry, so the full serving stack — manifest loading, weight
+//! parsing, the scalar slot backend, the shard cluster — runs without
+//! `make artifacts`, JAX, or the XLA shared library.
+//!
+//! Shared by the engine/cluster integration tests and the
+//! `bench_throughput` binary; the single source of truth for the
+//! synthetic weight-blob byte layout (it must stay in `param_specs`
+//! order, which is also the manifest's `params` array order).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::manifest::ModelConfig;
+use crate::nn::params::{ModelParams, Norm};
+use crate::util::rng::Rng;
+
+/// Geometry + seed of a synthetic serve artifacts directory. One
+/// `serve_deepcot_b{N}` continual-step variant is emitted per entry of
+/// `batches`, all sharing a single weights blob.
+#[derive(Debug, Clone)]
+pub struct SyntheticServeSpec {
+    pub d_in: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub window: usize,
+    pub n_classes: usize,
+    pub seed: u64,
+    pub batches: Vec<usize>,
+}
+
+impl Default for SyntheticServeSpec {
+    /// The integration-test geometry: small enough that a scalar tick
+    /// is ~µs, batched variants at B=1 and B=4.
+    fn default() -> Self {
+        Self {
+            d_in: 8,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            window: 6,
+            n_classes: 4,
+            seed: 0xD44C07,
+            batches: vec![1, 4],
+        }
+    }
+}
+
+impl SyntheticServeSpec {
+    /// The `ModelConfig` a manifest entry of this spec carries.
+    pub fn model_config(&self, batch: usize) -> ModelConfig {
+        let mut c = ModelConfig::synthetic(self.d_model, self.n_heads, self.n_layers, self.window);
+        c.d_in = self.d_in;
+        c.n_classes = self.n_classes;
+        c.batch = batch;
+        c
+    }
+
+    pub fn variant_name(batch: usize) -> String {
+        format!("serve_deepcot_b{batch}")
+    }
+
+    /// Deterministic per-spec directory under the system temp dir: the
+    /// same spec always maps to the same path (and identical contents),
+    /// so concurrent test binaries can share it safely.
+    pub fn default_dir(&self) -> PathBuf {
+        let batches: Vec<String> = self.batches.iter().map(|b| b.to_string()).collect();
+        std::env::temp_dir().join(format!(
+            "deepcot-synth-d{}l{}h{}w{}c{}in{}-s{:x}-b{}",
+            self.d_model,
+            self.n_layers,
+            self.n_heads,
+            self.window,
+            self.n_classes,
+            self.d_in,
+            self.seed,
+            batches.join("_")
+        ))
+    }
+
+    /// Write the artifacts into [`Self::default_dir`] and return it.
+    pub fn write(&self) -> Result<PathBuf> {
+        let dir = self.default_dir();
+        self.write_to(&dir)?;
+        Ok(dir)
+    }
+
+    /// Write manifest.json + weights/tiny.bin into `dir`. Contents are
+    /// deterministic in the spec, and every file lands via
+    /// tmp-then-rename, so a concurrently running process never
+    /// observes a truncated file (and re-writes are idempotent).
+    pub fn write_to(&self, dir: &Path) -> Result<()> {
+        anyhow::ensure!(self.d_model % self.n_heads == 0, "d_model must split across heads");
+        anyhow::ensure!(self.window >= 2, "window must cover memory + the new token");
+        anyhow::ensure!(!self.batches.is_empty(), "need at least one batch variant");
+        std::fs::create_dir_all(dir.join("weights"))
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let write_atomic = |rel: &str, bytes: &[u8]| -> Result<()> {
+            let tmp = dir.join(format!("{}.tmp.{}", rel.replace('/', "_"), std::process::id()));
+            std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+            std::fs::rename(&tmp, dir.join(rel))
+                .with_context(|| format!("publishing {rel} in {}", dir.display()))?;
+            Ok(())
+        };
+        write_atomic("weights/tiny.bin", &self.weights_blob())?;
+        let variants: Vec<String> = self
+            .batches
+            .iter()
+            .map(|&b| format!("\"{}\":{}", Self::variant_name(b), self.variant_json(b)))
+            .collect();
+        let manifest = format!("{{\"seed\":0,\"variants\":{{{}}}}}", variants.join(","));
+        write_atomic("manifest.json", manifest.as_bytes())
+    }
+
+    /// Parameter spec in blob order — the single source of truth for
+    /// both the manifest's `params` array and the weights byte layout.
+    fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let d = self.d_model;
+        let d_ffn = self.model_config(1).d_ffn();
+        let mut v =
+            vec![("w_in".to_string(), vec![self.d_in, d]), ("b_in".to_string(), vec![d])];
+        for i in 0..self.n_layers {
+            for nm in ["q", "k", "v", "o"] {
+                v.push((format!("l{i}.w{nm}"), vec![d, d]));
+                v.push((format!("l{i}.b{nm}"), vec![d]));
+            }
+            v.push((format!("l{i}.w1"), vec![d, d_ffn]));
+            v.push((format!("l{i}.b1"), vec![d_ffn]));
+            v.push((format!("l{i}.w2"), vec![d_ffn, d]));
+            v.push((format!("l{i}.b2"), vec![d]));
+            for nm in ["g1", "be1", "g2", "be2"] {
+                v.push((format!("l{i}.{nm}"), vec![d]));
+            }
+        }
+        v.push(("w_cls".to_string(), vec![d, self.n_classes]));
+        v.push(("b_cls".to_string(), vec![self.n_classes]));
+        v
+    }
+
+    /// Serialize a `ModelParams::synthetic` (the single weight-init
+    /// policy) into the little-endian blob, in exactly `param_specs`
+    /// order.
+    fn weights_blob(&self) -> Vec<u8> {
+        let p = ModelParams::synthetic(&self.model_config(1), &mut Rng::new(self.seed));
+        let mut parts: Vec<&Vec<f32>> = vec![&p.w_in.data, &p.b_in];
+        for lp in &p.layers {
+            parts.extend([
+                &lp.wq.data, &lp.bq, &lp.wk.data, &lp.bk, &lp.wv.data, &lp.bv, &lp.wo.data,
+                &lp.bo, &lp.w1.data, &lp.b1, &lp.w2.data, &lp.b2,
+            ]);
+            match &lp.norm {
+                Norm::LayerNorm { g1, be1, g2, be2 } => parts.extend([g1, be1, g2, be2]),
+                Norm::ReZero { .. } => unreachable!("synthetic spec is layernorm"),
+            }
+        }
+        parts.push(&p.w_cls.data);
+        parts.push(&p.b_cls);
+        let mut bytes = Vec::new();
+        for slice in parts {
+            for v in slice {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        bytes
+    }
+
+    fn variant_json(&self, batch: usize) -> String {
+        let shape_json = |shape: &[usize]| -> String {
+            let inner: Vec<String> = shape.iter().map(|s| s.to_string()).collect();
+            format!("[{}]", inner.join(","))
+        };
+        let params: Vec<String> = self
+            .param_specs()
+            .iter()
+            .map(|(n, s)| format!("{{\"name\":\"{n}\",\"shape\":{}}}", shape_json(s)))
+            .collect();
+        let mlen = self.window - 1;
+        let mem_shape = shape_json(&[
+            self.n_layers,
+            batch,
+            self.n_heads,
+            mlen,
+            self.d_model / self.n_heads,
+        ]);
+        format!(
+            "{{\"family\":\"deepcot\",\
+             \"config\":{{\"d_in\":{d_in},\"d_model\":{d_model},\"n_heads\":{n_heads},\
+             \"n_layers\":{n_layers},\"window\":{window},\"m_tokens\":1,\"ffn_mult\":2,\
+             \"n_classes\":{n_classes},\"batch\":{batch},\"activation\":\"softmax\",\
+             \"norm\":\"layernorm\",\"ffn_act\":\"gelu\",\"pos\":\"rope\",\
+             \"n_landmarks\":0,\"use_pallas\":false}},\
+             \"hlo\":\"hlo/none.hlo.txt\",\
+             \"weights\":\"weights/tiny.bin\",\
+             \"inputs\":[\
+               {{\"name\":\"tokens\",\"shape\":{tok},\"dtype\":\"f32\"}},\
+               {{\"name\":\"pos\",\"shape\":[],\"dtype\":\"i32\"}},\
+               {{\"name\":\"kmem\",\"shape\":{mem},\"dtype\":\"f32\"}},\
+               {{\"name\":\"vmem\",\"shape\":{mem},\"dtype\":\"f32\"}}],\
+             \"outputs\":[\
+               {{\"name\":\"logits\",\"shape\":{log},\"dtype\":\"f32\"}},\
+               {{\"name\":\"out\",\"shape\":{out},\"dtype\":\"f32\"}},\
+               {{\"name\":\"kmem_next\",\"shape\":{mem},\"dtype\":\"f32\"}},\
+               {{\"name\":\"vmem_next\",\"shape\":{mem},\"dtype\":\"f32\"}}],\
+             \"state\":{{\"2\":2,\"3\":3}},\
+             \"params\":[{params}]}}",
+            d_in = self.d_in,
+            d_model = self.d_model,
+            n_heads = self.n_heads,
+            n_layers = self.n_layers,
+            window = self.window,
+            n_classes = self.n_classes,
+            tok = shape_json(&[batch, 1, self.d_in]),
+            log = shape_json(&[batch, self.n_classes]),
+            out = shape_json(&[batch, 1, self.d_model]),
+            mem = mem_shape,
+            params = params.join(","),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+
+    #[test]
+    fn written_artifacts_load_and_typecheck() {
+        let spec = SyntheticServeSpec {
+            seed: 0x5EED1,
+            batches: vec![1, 3],
+            ..SyntheticServeSpec::default()
+        };
+        let dir = spec.write().unwrap();
+        let (manifest, dir) = Manifest::load(&dir).unwrap();
+        for &b in &spec.batches {
+            let entry = manifest.variant(&SyntheticServeSpec::variant_name(b)).unwrap();
+            assert!(entry.is_step());
+            assert_eq!(entry.config.batch, b);
+            assert_eq!(entry.config.d_in, spec.d_in);
+            // the blob must parse into params of exactly the spec'd shapes
+            let p = ModelParams::load(&dir, entry).unwrap();
+            assert_eq!(p.layers.len(), spec.n_layers);
+            assert_eq!(p.w_in.rows, spec.d_in);
+            assert_eq!(p.w_cls.cols, spec.n_classes);
+        }
+        // rewrite is idempotent (same spec → same bytes, atomic swap)
+        spec.write_to(&dir).unwrap();
+    }
+}

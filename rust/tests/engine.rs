@@ -15,142 +15,22 @@ use std::time::Duration;
 
 use deepcot::config::{EngineBackend, EngineConfig};
 use deepcot::coordinator::engine::EngineThread;
-use deepcot::manifest::ModelConfig;
-use deepcot::nn::params::{ModelParams, Norm};
+use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::rng::Rng;
 
-// Synthetic serving geometry (small enough that a scalar tick is ~µs).
+// The default synthetic serving geometry (small enough that a scalar
+// tick is ~µs); must match `SyntheticServeSpec::default()`.
 const D_IN: usize = 8;
 const D_MODEL: usize = 16;
 const N_CLASSES: usize = 4;
-const N_LAYERS: usize = 2;
-const N_HEADS: usize = 2;
-const WINDOW: usize = 6;
-const D_FFN: usize = 2 * D_MODEL;
 
-/// Parameter spec in blob order — the single source of truth for both
-/// the manifest's `params` array and the weights byte layout.
-fn param_specs() -> Vec<(String, Vec<usize>)> {
-    let d = D_MODEL;
-    let mut v = vec![("w_in".to_string(), vec![D_IN, d]), ("b_in".to_string(), vec![d])];
-    for i in 0..N_LAYERS {
-        for nm in ["q", "k", "v", "o"] {
-            v.push((format!("l{i}.w{nm}"), vec![d, d]));
-            v.push((format!("l{i}.b{nm}"), vec![d]));
-        }
-        v.push((format!("l{i}.w1"), vec![d, D_FFN]));
-        v.push((format!("l{i}.b1"), vec![D_FFN]));
-        v.push((format!("l{i}.w2"), vec![D_FFN, d]));
-        v.push((format!("l{i}.b2"), vec![d]));
-        for nm in ["g1", "be1", "g2", "be2"] {
-            v.push((format!("l{i}.{nm}"), vec![d]));
-        }
-    }
-    v.push(("w_cls".to_string(), vec![d, N_CLASSES]));
-    v.push(("b_cls".to_string(), vec![N_CLASSES]));
-    v
-}
-
-fn synth_model_cfg(batch: usize) -> ModelConfig {
-    let mut c = ModelConfig::synthetic(D_MODEL, N_HEADS, N_LAYERS, WINDOW);
-    c.n_classes = N_CLASSES;
-    c.batch = batch;
-    c
-}
-
-/// Serialize a `ModelParams::synthetic` (the single weight-init policy)
-/// into the little-endian blob, in exactly `param_specs` order.
-fn synth_blob() -> Vec<u8> {
-    let p = ModelParams::synthetic(&synth_model_cfg(1), &mut Rng::new(0xD44C07));
-    let mut parts: Vec<&Vec<f32>> = vec![&p.w_in.data, &p.b_in];
-    for lp in &p.layers {
-        parts.extend([
-            &lp.wq.data, &lp.bq, &lp.wk.data, &lp.bk, &lp.wv.data, &lp.bv, &lp.wo.data,
-            &lp.bo, &lp.w1.data, &lp.b1, &lp.w2.data, &lp.b2,
-        ]);
-        match &lp.norm {
-            Norm::LayerNorm { g1, be1, g2, be2 } => parts.extend([g1, be1, g2, be2]),
-            Norm::ReZero { .. } => unreachable!("layernorm config"),
-        }
-    }
-    parts.push(&p.w_cls.data);
-    parts.push(&p.b_cls);
-    let mut bytes = Vec::new();
-    for slice in parts {
-        for v in slice {
-            bytes.extend_from_slice(&v.to_le_bytes());
-        }
-    }
-    bytes
-}
-
-fn shape_json(shape: &[usize]) -> String {
-    let inner: Vec<String> = shape.iter().map(|s| s.to_string()).collect();
-    format!("[{}]", inner.join(","))
-}
-
-fn variant_json(batch: usize) -> String {
-    let params: Vec<String> = param_specs()
-        .iter()
-        .map(|(n, s)| format!("{{\"name\":\"{n}\",\"shape\":{}}}", shape_json(s)))
-        .collect();
-    let mlen = WINDOW - 1;
-    let mem_shape = shape_json(&[N_LAYERS, batch, N_HEADS, mlen, D_MODEL / N_HEADS]);
-    format!(
-        "{{\"family\":\"deepcot\",\
-         \"config\":{{\"d_in\":{D_IN},\"d_model\":{D_MODEL},\"n_heads\":{N_HEADS},\
-         \"n_layers\":{N_LAYERS},\"window\":{WINDOW},\"m_tokens\":1,\"ffn_mult\":2,\
-         \"n_classes\":{N_CLASSES},\"batch\":{batch},\"activation\":\"softmax\",\
-         \"norm\":\"layernorm\",\"ffn_act\":\"gelu\",\"pos\":\"rope\",\
-         \"n_landmarks\":0,\"use_pallas\":false}},\
-         \"hlo\":\"hlo/none.hlo.txt\",\
-         \"weights\":\"weights/tiny.bin\",\
-         \"inputs\":[\
-           {{\"name\":\"tokens\",\"shape\":{tok},\"dtype\":\"f32\"}},\
-           {{\"name\":\"pos\",\"shape\":[],\"dtype\":\"i32\"}},\
-           {{\"name\":\"kmem\",\"shape\":{mem},\"dtype\":\"f32\"}},\
-           {{\"name\":\"vmem\",\"shape\":{mem},\"dtype\":\"f32\"}}],\
-         \"outputs\":[\
-           {{\"name\":\"logits\",\"shape\":{log},\"dtype\":\"f32\"}},\
-           {{\"name\":\"out\",\"shape\":{out},\"dtype\":\"f32\"}},\
-           {{\"name\":\"kmem_next\",\"shape\":{mem},\"dtype\":\"f32\"}},\
-           {{\"name\":\"vmem_next\",\"shape\":{mem},\"dtype\":\"f32\"}}],\
-         \"state\":{{\"2\":2,\"3\":3}},\
-         \"params\":[{params}]}}",
-        tok = shape_json(&[batch, 1, D_IN]),
-        log = shape_json(&[batch, N_CLASSES]),
-        out = shape_json(&[batch, 1, D_MODEL]),
-        mem = mem_shape,
-        params = params.join(","),
-    )
-}
-
-/// Write (once per process) a synthetic artifacts dir the scalar
-/// backend can serve from: manifest.json + weights/tiny.bin.
+/// Write (once per process) the synthetic artifacts dir the scalar
+/// backend serves from: manifest.json + weights/tiny.bin, at a fixed
+/// spec-derived path (deterministic contents, tmp-then-rename writes —
+/// safe under concurrent test binaries).
 fn synth_artifacts() -> PathBuf {
     static DIR: OnceLock<PathBuf> = OnceLock::new();
-    DIR.get_or_init(|| {
-        // fixed path (no per-PID orphans): contents are deterministic,
-        // and tmp-then-rename keeps a concurrently running test process
-        // from ever observing a truncated file
-        let dir = std::env::temp_dir().join("deepcot_engine_synth_artifacts");
-        std::fs::create_dir_all(dir.join("weights")).unwrap();
-        let write_atomic = |rel: &str, bytes: &[u8]| {
-            let tmp =
-                dir.join(format!("{}.tmp.{}", rel.replace('/', "_"), std::process::id()));
-            std::fs::write(&tmp, bytes).unwrap();
-            std::fs::rename(&tmp, dir.join(rel)).unwrap();
-        };
-        write_atomic("weights/tiny.bin", &synth_blob());
-        let manifest = format!(
-            "{{\"seed\":0,\"variants\":{{\"serve_deepcot_b4\":{},\"serve_deepcot_b1\":{}}}}}",
-            variant_json(4),
-            variant_json(1),
-        );
-        write_atomic("manifest.json", manifest.as_bytes());
-        dir
-    })
-    .clone()
+    DIR.get_or_init(|| SyntheticServeSpec::default().write().unwrap()).clone()
 }
 
 fn engine_cfg(variant: &str) -> EngineConfig {

@@ -162,6 +162,10 @@ fn masked_lane_is_isolated_from_other_lanes() {
     let mut r_model = BatchedScalarDeepCoT::with_lanes(c.clone(), params, 2);
     let mut rng0 = Rng::new(61);
     let mut rng1 = Rng::new(62);
+    // caller-owned per-lane clocks: each lane advances only on its own
+    // live ticks (lane 1's clock is identical in both models)
+    let mut pos_m = [0i32; 2];
+    let mut pos_r = [0i32; 2];
     for t in 0..16 {
         let lane1_live = !(3..7).contains(&t);
         let mut toks = Mat::zeros(2, c.d_in);
@@ -170,13 +174,13 @@ fn masked_lane_is_isolated_from_other_lanes() {
         if lane1_live {
             toks.row_mut(1).copy_from_slice(&tok1);
         }
-        let m_out = m_model.tick_lanes(&toks, &[true, lane1_live]).unwrap();
+        let m_out = m_model.tick_lanes(&toks, &[true, lane1_live], &pos_m).unwrap();
         let m_logits1 = m_out.logits.row(1).to_vec();
         let mut r_toks = Mat::zeros(2, c.d_in);
         if lane1_live {
             r_toks.row_mut(1).copy_from_slice(&tok1);
         }
-        let r_out = r_model.tick_lanes(&r_toks, &[false, lane1_live]).unwrap();
+        let r_out = r_model.tick_lanes(&r_toks, &[false, lane1_live], &pos_r).unwrap();
         if lane1_live {
             assert_close(
                 &format!("tick {t} lane 1 logits (busy vs idle neighbor)"),
@@ -184,6 +188,11 @@ fn masked_lane_is_isolated_from_other_lanes() {
                 r_out.logits.row(1),
                 1e-6,
             );
+        }
+        pos_m[0] += 1;
+        if lane1_live {
+            pos_m[1] += 1;
+            pos_r[1] += 1;
         }
     }
 }
@@ -201,9 +210,11 @@ fn reset_lane_recycles_to_cold_state() {
         warm.tick_all(&toks).unwrap();
     }
     warm.reset_lane(1);
-    // fresh model at the same shared clock: its cold lane 1 must agree
+    assert_eq!(warm.lane_pos(1), 0, "reset_lane must rewind the lane clock");
+    assert_eq!(warm.lane_pos(0), 5, "other lanes keep their clocks");
+    // fresh model: its cold lane 1 (clock at 0, empty memory) must agree
+    // with the recycled lane 1 — per-lane clocks make this exact
     let mut fresh = BatchedScalarDeepCoT::with_lanes(c.clone(), params, 2);
-    fresh.pos = warm.pos;
     let toks = Mat::from_vec(2, c.d_in, rng.normal_vec(2 * c.d_in, 1.0));
     let w = warm.tick_all(&toks).unwrap();
     let w_logits: Vec<Vec<f32>> = (0..2).map(|l| w.logits.row(l).to_vec()).collect();
@@ -225,7 +236,8 @@ fn tick_rejects_bad_shapes() {
     let params = ModelParams::synthetic(&c, &mut Rng::new(1));
     let mut b = BatchedScalarDeepCoT::with_lanes(c.clone(), params, 2);
     let good = Mat::zeros(2, c.d_in);
-    assert!(b.tick_lanes(&good, &[true]).is_err(), "short live mask must fail");
+    assert!(b.tick_lanes(&good, &[true], &[0, 0]).is_err(), "short live mask must fail");
+    assert!(b.tick_lanes(&good, &[true, true], &[0]).is_err(), "short pos slice must fail");
     let bad = Mat::zeros(3, c.d_in);
     assert!(b.tick_all(&bad).is_err(), "wrong row count must fail");
     assert!(b.tick_all(&good).is_ok());

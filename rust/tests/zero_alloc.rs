@@ -77,17 +77,27 @@ fn steady_state_ticks_allocate_nothing() {
         after - before
     );
 
-    // batched 4-lane stepper with a masked lane (slot-stepper regime)
+    // batched 4-lane stepper with a masked lane (slot-stepper regime);
+    // the caller owns the per-lane position clocks, advancing only the
+    // lanes it ticked live — all in preallocated storage
     let mut batched = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, 4);
     let stacked = Mat::from_vec(4, cfg.d_in, Rng::new(23).normal_vec(4 * cfg.d_in, 1.0));
     let live = [true, false, true, true];
+    let mut pos = [0i32; 4];
+    let advance = |pos: &mut [i32; 4]| {
+        for (p, l) in pos.iter_mut().zip(&live) {
+            *p += *l as i32;
+        }
+    };
     for _ in 0..3 {
-        batched.tick_lanes(&stacked, &live).unwrap();
+        batched.tick_lanes(&stacked, &live, &pos).unwrap();
+        advance(&mut pos);
     }
     let before = ALLOC_CALLS.load(Ordering::SeqCst);
     for _ in 0..5 {
-        let step = batched.tick_lanes(&stacked, &live).unwrap();
+        let step = batched.tick_lanes(&stacked, &live, &pos).unwrap();
         sink += step.logits.at(0, 0) + step.out.at(0, 0);
+        advance(&mut pos);
     }
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
     assert_eq!(
