@@ -7,8 +7,8 @@
 use anyhow::Result;
 
 use deepcot::baselines::{ContinualModel, StreamModel, WindowModel};
-use deepcot::bench_harness::{measure_ticks, pipeline::clip_probe_eval};
 use deepcot::bench_harness::table::fmt_secs;
+use deepcot::bench_harness::{measure_ticks, pipeline::clip_probe_eval};
 use deepcot::runtime::Runtime;
 use deepcot::util::cli::Cli;
 use deepcot::util::rng::Rng;
@@ -49,9 +49,6 @@ fn main() -> Result<()> {
         e2.accuracy,
         fmt_secs(s2.mean_s)
     );
-    println!(
-        "\nspeedup: x{:.2} per tick at equal weights",
-        s2.mean_s / s.mean_s
-    );
+    println!("\nspeedup: x{:.2} per tick at equal weights", s2.mean_s / s.mean_s);
     Ok(())
 }

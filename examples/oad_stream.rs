@@ -9,8 +9,8 @@ use anyhow::Result;
 
 use deepcot::baselines::{ContinualModel, StreamModel};
 use deepcot::bench_harness::pipeline::{frame_probe_eval, stream_features};
-use deepcot::probe::RidgeProbe;
 use deepcot::nn::tensor::Mat;
+use deepcot::probe::RidgeProbe;
 use deepcot::runtime::Runtime;
 use deepcot::util::cli::Cli;
 use deepcot::util::rng::Rng;
@@ -68,11 +68,7 @@ fn main() -> Result<()> {
         let pred = probe.predict(f);
         let truth = demo.frame_labels[t];
         if truth != current {
-            println!(
-                "  t={t:>4}  truth: {} -> {}",
-                label(current),
-                label(truth)
-            );
+            println!("  t={t:>4}  truth: {} -> {}", label(current), label(truth));
             current = truth;
         }
         if pred != 0 && t > 0 && probe.predict(&feats[t - 1]) == 0 {

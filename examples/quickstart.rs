@@ -1,50 +1,71 @@
-//! Quickstart: load a DeepCoT variant, stream tokens through it, read
-//! logits — the smallest end-to-end use of the public API.
+//! Quickstart: the smallest end-to-end use of the serving API — spawn
+//! the engine, open an RAII `Session`, stream tokens, read logits, and
+//! watch a live migration happen underneath an unbroken stream.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//! Hermetic by default: serves a tiny synthetic DeepCoT on the
+//! pure-Rust scalar backend (no XLA library, no `make artifacts`).
+//! Point `--artifacts` / `DEEPCOT_ARTIFACTS` at real artifacts and
+//! swap the variant name to serve those instead.
+//!
+//!     cargo run --release --example quickstart
+
+use std::time::Duration;
 
 use anyhow::Result;
 
-use deepcot::baselines::{ContinualModel, StreamModel, WindowModel};
-use deepcot::flops::{format_flops, per_tick, FlopsMode};
-use deepcot::runtime::{HostTensor, Runtime};
+use deepcot::config::{EngineBackend, EngineConfig};
+use deepcot::coordinator::engine::EngineThread;
+use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::rng::Rng;
 
 fn main() -> Result<()> {
-    // 1. open the artifacts produced by `make artifacts`
-    let rt = Runtime::new(&deepcot::artifacts_dir())?;
-    println!("PJRT platform: {}", rt.platform());
+    // 1. write a hermetic synthetic artifacts dir (manifest + weights)
+    let spec = SyntheticServeSpec::default();
+    let dir = spec.write()?;
 
-    // 2. load the continual model and its non-continual baseline
-    //    (identical weights — the paper's equivalence protocol)
-    let mut deepcot = ContinualModel::load(&rt, "t1_deepcot")?;
-    let mut encoder = WindowModel::load(&rt, "t1_encoder")?;
-    let cfg = deepcot.config().clone();
-    println!(
-        "model: {} layers, window {}, d_model {} ({} classes)",
-        cfg.n_layers, cfg.window, cfg.d_model, cfg.n_classes
-    );
+    // 2. configure + spawn the engine: builder-style config, two shards
+    let cfg = EngineConfig::builder()
+        .artifacts_dir(dir)
+        .variant(SyntheticServeSpec::variant_name(1))
+        .backend(EngineBackend::Scalar)
+        .shards(2)
+        .slots_per_shard(2)
+        .batch_deadline(Duration::from_millis(1))
+        .build();
+    let engine = EngineThread::spawn(cfg)?;
+    let handle = engine.handle();
 
-    // 3. stream random tokens through both; compare cost + outputs
+    // 3. open a stream: `open` returns an RAII Session (close-on-drop)
+    let session = handle.open()?;
+    println!("opened stream {:?} on shard {:?}", session.id(), handle.shard_of(session.id()));
+
+    // 4. stream tokens through it; recv returns per-tick logits
     let mut rng = Rng::new(7);
-    let mut last = (Vec::new(), Vec::new());
-    for t in 0..2 * cfg.window {
-        let tok = rng.normal_vec(cfg.d_in, 1.0);
-        let a = deepcot.tick(&HostTensor::new(vec![1, 1, cfg.d_in], tok.clone())?)?;
-        let b = encoder.tick(&HostTensor::new(vec![1, 1, cfg.d_in], tok)?)?;
-        last = (a.logits.data, b.logits.data);
+    let mut last = Vec::new();
+    for t in 0..2 * spec.window {
+        session.push(rng.normal_vec(spec.d_in, 1.0))?;
+        let out = session.recv_timeout(Duration::from_secs(10))?;
+        last = out.logits;
         if t == 0 {
-            println!("tick 0 ok — logits dim {}", last.0.len());
+            println!("tick 1 ok — {} logits, {} activations", last.len(), out.out.len());
+        }
+        // 5. halfway through, live-migrate the stream to the other
+        //    shard — state (K/V rings + position clock) moves with it
+        //    and the session never notices
+        if t == spec.window {
+            let from = handle.shard_of(session.id()).unwrap_or(0);
+            let to = (from + 1) % handle.n_shards();
+            handle.migrate(session.id(), to)?;
+            println!("migrated stream {:?}: shard {from} -> shard {to}", session.id());
         }
     }
-    println!("final deepcot logits[0..4] = {:?}", &last.0[..4]);
-    println!("final encoder logits[0..4] = {:?}", &last.1[..4]);
-    println!(
-        "per-tick attention FLOPs: deepcot {} vs encoder {} ({}x reduction)",
-        format_flops(per_tick("deepcot", &cfg, FlopsMode::AttentionOnly)),
-        format_flops(per_tick("encoder", &cfg, FlopsMode::AttentionOnly)),
-        per_tick("encoder", &cfg, FlopsMode::AttentionOnly)
-            / per_tick("deepcot", &cfg, FlopsMode::AttentionOnly).max(1)
-    );
+    println!("final logits[0..4] = {:?}", &last[..4.min(last.len())]);
+
+    // 6. observability: cluster metrics incl. migration counters
+    let m = handle.metrics()?;
+    println!("{}", m.report());
+
+    session.close(); // explicit; dropping the session would do the same
+    engine.shutdown()?;
     Ok(())
 }

@@ -1,17 +1,20 @@
 //! End-to-end serving driver (the DESIGN.md §5 validation run): spin up
 //! the engine on a batched DeepCoT variant, subject it to an open-loop
-//! multi-client load with stream churn (opens/closes mid-run), and
-//! report latency percentiles + throughput. Results are recorded in
-//! EXPERIMENTS.md.
+//! multi-client load with stream churn (opens/closes mid-run) over the
+//! RAII `Session` API, and report latency percentiles + throughput.
+//! Results are recorded in EXPERIMENTS.md.
 //!
 //!     cargo run --release --example serve -- --streams 8 --ticks 200
+//!
+//! Requires `make artifacts` (or a synthetic artifacts dir via
+//! `--artifacts`); see `quickstart.rs` for a hermetic engine demo.
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use deepcot::config::EngineConfig;
-use deepcot::coordinator::engine::EngineThread;
+use deepcot::coordinator::engine::{EngineError, EngineThread, Session};
 use deepcot::manifest::Manifest;
 use deepcot::util::cli::Cli;
 use deepcot::util::rng::Rng;
@@ -48,14 +51,14 @@ fn main() -> Result<()> {
             let mut lats = Vec::with_capacity(ticks);
             let mut ok = 0u64;
             let mut rejected = 0u64;
-            let mut sess = None;
+            let mut sess: Option<Session> = None;
             for _ in 0..ticks {
                 if sess.is_none() || rng.chance(churn) {
-                    if let Some((old, _)) = sess.take() {
-                        h.close(old);
-                    }
+                    // dropping the old session closes its stream
+                    sess = None;
                     match h.open() {
-                        Ok(pair) => sess = Some(pair),
+                        Ok(s) => sess = Some(s),
+                        // typically Saturated under oversubscription
                         Err(_) => {
                             rejected += 1;
                             std::thread::sleep(Duration::from_millis(2));
@@ -63,14 +66,29 @@ fn main() -> Result<()> {
                         }
                     }
                 }
-                let (id, rx) = sess.as_ref().unwrap();
                 let sent = Instant::now();
-                if h.push(*id, rng.normal_vec(lane, 1.0)).is_err() {
-                    rejected += 1; // backpressure
-                    std::thread::sleep(Duration::from_micros(500));
-                    continue;
+                let push_err = match sess.as_ref() {
+                    Some(session) => session.push(rng.normal_vec(lane, 1.0)).err(),
+                    None => continue,
+                };
+                match push_err {
+                    None => {}
+                    Some(EngineError::Backpressure(_)) => {
+                        rejected += 1;
+                        std::thread::sleep(Duration::from_micros(500));
+                        continue;
+                    }
+                    Some(_) => {
+                        rejected += 1;
+                        sess = None; // stream torn down; reopen next tick
+                        continue;
+                    }
                 }
-                match rx.recv_timeout(Duration::from_secs(30)) {
+                let recv = match sess.as_ref() {
+                    Some(session) => session.recv_timeout(Duration::from_secs(30)),
+                    None => continue,
+                };
+                match recv {
                     Ok(_) => {
                         lats.push(sent.elapsed());
                         ok += 1;
@@ -78,9 +96,7 @@ fn main() -> Result<()> {
                     Err(_) => rejected += 1,
                 }
             }
-            if let Some((id, _)) = sess {
-                h.close(id);
-            }
+            // the last session closes on drop
             Ok((ok, rejected, lats))
         }));
     }

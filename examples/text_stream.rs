@@ -41,7 +41,11 @@ fn main() -> Result<()> {
     let far_hi = (2 * (w - 1)).min(len - 4); // within layer-2's reach
     let far = text::generate(&mut rng, &task, n, len, far_lo, far_hi.max(far_lo + 1));
 
-    println!("window n={w}, {} layers -> effective receptive field {}", cfg.n_layers, cfg.n_layers * (w - 1));
+    println!(
+        "window n={w}, {} layers -> effective receptive field {}",
+        cfg.n_layers,
+        cfg.n_layers * (w - 1)
+    );
     println!("\nmotif lag        deepcot acc   encoder acc");
     let dn = clip_probe_eval(&mut deepcot, &near, 0.7, 1e-1)?;
     let en = clip_probe_eval(&mut encoder, &near, 0.7, 1e-1)?;

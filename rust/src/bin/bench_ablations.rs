@@ -59,19 +59,19 @@ fn main() -> Result<()> {
         };
         for _ in 0..3 {
             let p = mk_plan(&mut rng);
-            stepper.tick(&p)?;
+            stepper.tick_lanes(&p)?;
         }
         let probe = {
             let p = mk_plan(&mut rng);
             let t0 = Instant::now();
-            stepper.tick(&p)?;
+            stepper.tick_lanes(&p)?;
             t0.elapsed()
         };
         let iters = adaptive_ticks(probe, opts.time_budget, 8);
         let t0 = Instant::now();
         for _ in 0..iters {
             let p = mk_plan(&mut rng);
-            stepper.tick(&p)?;
+            stepper.tick_lanes(&p)?;
         }
         let per = t0.elapsed() / iters as u32;
         t.row(vec![

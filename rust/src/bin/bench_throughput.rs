@@ -2,18 +2,24 @@
 //! measured. Spins the engine up at each shard count in `--shards-list`
 //! on a hermetic synthetic model (scalar backend — no XLA library, no
 //! `make artifacts`), drives it with closed-loop client threads (push →
-//! recv → push), and reports aggregate throughput plus engine-side tick
-//! latency quantiles. Slots are split across shards as
-//! `ceil(streams / shards)` per shard, so every configuration admits
-//! all streams with (near-)equal headroom — exactly equal when the
-//! shard count divides the stream count (the printed `slots` column
-//! shows each config's per-shard budget; prefer divisible sweeps for
-//! strict apples-to-apples).
+//! recv → push) over the RAII `Session` API, and reports aggregate
+//! throughput plus engine-side tick latency quantiles. Slots are split
+//! across shards as `ceil(streams / shards)` per shard, so every
+//! configuration admits all streams with (near-)equal headroom —
+//! exactly equal when the shard count divides the stream count (the
+//! printed `slots` column shows each config's per-shard budget; prefer
+//! divisible sweeps for strict apples-to-apples).
 //!
 //!     cargo run --release --bin bench_throughput -- \
 //!         --shards-list 1,2,4 --streams 8 --ticks 200
 //!
-//! The CI smoke run uses a tiny model, 2 shards and a bounded tick
+//! With `--migrate-every N` each client live-migrates its stream to the
+//! next shard (round-robin) every N ticks mid-run — the migration smoke
+//! (an extra slot per shard is budgeted so targets have headroom), with
+//! the attempted/completed/aborted counters and quiesce quantiles
+//! printed from `ClusterMetrics`.
+//!
+//! The CI smoke runs use a tiny model, 2 shards and a bounded tick
 //! count — see .github/workflows/ci.yml.
 
 use std::time::{Duration, Instant};
@@ -34,9 +40,18 @@ struct RunResult {
     streams_per_sec: f64,
     p50: Duration,
     p99: Duration,
+    migrations: (u64, u64, u64),
+    quiesce_p50: Duration,
+    quiesce_p99: Duration,
 }
 
-fn run_one(cfg: EngineConfig, streams: usize, ticks: usize, d_in: usize) -> Result<RunResult> {
+fn run_one(
+    cfg: EngineConfig,
+    streams: usize,
+    ticks: usize,
+    d_in: usize,
+    migrate_every: usize,
+) -> Result<RunResult> {
     let shards = cfg.effective_shards();
     let slots_per_shard = cfg.slots_per_shard;
     let engine = EngineThread::spawn(cfg)?;
@@ -46,13 +61,13 @@ fn run_one(cfg: EngineConfig, streams: usize, ticks: usize, d_in: usize) -> Resu
         let h = engine.handle();
         clients.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::new(0xBE9C4 ^ ((s as u64 + 1) * 0x9E37));
-            // total slots == streams, but an open can race a neighbor's
+            // total slots >= streams, but an open can race a neighbor's
             // placement; retry briefly instead of failing the bench
-            let (id, rx) = {
+            let sess = {
                 let mut attempt = 0;
                 loop {
                     match h.open() {
-                        Ok(pair) => break pair,
+                        Ok(sess) => break sess,
                         Err(_) if attempt < 50 => {
                             attempt += 1;
                             std::thread::sleep(Duration::from_millis(2));
@@ -62,12 +77,19 @@ fn run_one(cfg: EngineConfig, streams: usize, ticks: usize, d_in: usize) -> Resu
                 }
             };
             for t in 0..ticks {
-                h.push(id, rng.normal_vec(d_in, 1.0))
+                sess.push(rng.normal_vec(d_in, 1.0))
                     .with_context(|| format!("push tick {t}"))?;
-                rx.recv_timeout(Duration::from_secs(60))
-                    .map_err(|e| anyhow::anyhow!("tick {t} result: {e:?}"))?;
+                sess.recv_timeout(Duration::from_secs(60))
+                    .with_context(|| format!("tick {t} result"))?;
+                if migrate_every > 0 && (t + 1) % migrate_every == 0 {
+                    // hop to the next shard round-robin; a saturated
+                    // target aborts the hop with the stream intact, so
+                    // the bench keeps running either way
+                    let cur = h.shard_of(sess.id()).unwrap_or(0);
+                    let _ = h.migrate(sess.id(), (cur + 1) % shards.max(1));
+                }
             }
-            h.close(id);
+            sess.close();
             Ok(())
         }));
     }
@@ -86,6 +108,9 @@ fn run_one(cfg: EngineConfig, streams: usize, ticks: usize, d_in: usize) -> Resu
         streams_per_sec: streams as f64 / wall.as_secs_f64(),
         p50: m.tick_latency.quantile(0.5),
         p99: m.tick_latency.quantile(0.99),
+        migrations: (m.migrations_attempted, m.migrations_completed, m.migrations_aborted),
+        quiesce_p50: m.quiesce_latency.quantile(0.5),
+        quiesce_p99: m.quiesce_latency.quantile(0.99),
     })
 }
 
@@ -99,7 +124,8 @@ fn main() -> Result<()> {
         .opt("n-heads", "4", "synthetic attention heads")
         .opt("window", "16", "synthetic continual window")
         .opt("deadline-us", "200", "partial-batch flush deadline (µs)")
-        .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin");
+        .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin")
+        .opt("migrate-every", "0", "live-migrate each stream every N ticks (0 = off)");
     let args = cli.parse()?;
     let shard_counts: Vec<usize> = args
         .get("shards-list")
@@ -109,6 +135,7 @@ fn main() -> Result<()> {
     anyhow::ensure!(!shard_counts.is_empty(), "--shards-list must name at least one count");
     let streams = args.get_usize("streams")?.max(1);
     let ticks = args.get_usize("ticks")?.max(1);
+    let migrate_every = args.get_usize("migrate-every")?;
     let d_model = args.get_usize("d-model")?;
     let spec = SyntheticServeSpec {
         d_in: (d_model / 2).max(1),
@@ -122,7 +149,7 @@ fn main() -> Result<()> {
     };
     let dir = spec.write()?;
     println!(
-        "bench_throughput: {} streams x {} ticks, model d={} L={} H={} n={}, deadline={}µs",
+        "bench_throughput: {} streams x {} ticks, model d={} L={} H={} n={}, deadline={}µs{}",
         streams,
         ticks,
         spec.d_model,
@@ -130,20 +157,28 @@ fn main() -> Result<()> {
         spec.n_heads,
         spec.window,
         args.get_u64("deadline-us")?,
+        if migrate_every > 0 {
+            format!(", migrate every {migrate_every} ticks")
+        } else {
+            String::new()
+        },
     );
     let mut results = Vec::with_capacity(shard_counts.len());
     for &shards in &shard_counts {
-        let cfg = EngineConfig {
-            artifacts_dir: dir.clone(),
-            variant: SyntheticServeSpec::variant_name(1),
-            backend: EngineBackend::Scalar,
-            batch_deadline: Duration::from_micros(args.get_u64("deadline-us")?),
-            shards: shards.max(1),
-            slots_per_shard: streams.div_ceil(shards.max(1)),
-            placement: args.get("placement").parse()?,
-            ..EngineConfig::default()
-        };
-        results.push(run_one(cfg, streams, ticks, spec.d_in)?);
+        let shards = shards.max(1);
+        // with live migration in the mix, give every shard one slot of
+        // headroom so a hop always has somewhere to land
+        let slots = streams.div_ceil(shards) + usize::from(migrate_every > 0);
+        let cfg = EngineConfig::builder()
+            .artifacts_dir(dir.clone())
+            .variant(SyntheticServeSpec::variant_name(1))
+            .backend(EngineBackend::Scalar)
+            .batch_deadline(Duration::from_micros(args.get_u64("deadline-us")?))
+            .shards(shards)
+            .slots_per_shard(slots)
+            .placement(args.get("placement").parse()?)
+            .build();
+        results.push(run_one(cfg, streams, ticks, spec.d_in, migrate_every)?);
     }
     // speedups are anchored to the 1-shard entry when the sweep has one
     // (the headline sharded-vs-single number); otherwise to the first
@@ -168,6 +203,21 @@ fn main() -> Result<()> {
             r.p99,
             r.ticks_per_sec / baseline
         );
+    }
+    if migrate_every > 0 {
+        for r in &results {
+            let (att, done, aborted) = r.migrations;
+            println!(
+                "migrations @{} shards: attempted={} completed={} aborted={} \
+                 quiesce(p50={:.2?} p99={:.2?})",
+                r.shards, att, done, aborted, r.quiesce_p50, r.quiesce_p99
+            );
+            anyhow::ensure!(
+                r.shards == 1 || done > 0,
+                "migration smoke expected at least one completed migration on {} shards",
+                r.shards
+            );
+        }
     }
     Ok(())
 }

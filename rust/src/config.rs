@@ -107,7 +107,99 @@ impl Default for EngineConfig {
     }
 }
 
+/// Builder-style construction of an [`EngineConfig`]: start from the
+/// defaults, override what the call site cares about, `build()`. The
+/// idiomatic way for examples/benches/tests to configure an engine
+/// without hand-rolling struct literals or CLI plumbing.
+///
+/// ```no_run
+/// use deepcot::config::{EngineBackend, EngineConfig};
+///
+/// let cfg = EngineConfig::builder()
+///     .variant("serve_deepcot_b4")
+///     .backend(EngineBackend::Scalar)
+///     .shards(2)
+///     .build();
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    /// Artifacts directory (manifest + weights).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Batched step variant to serve.
+    pub fn variant(mut self, v: impl Into<String>) -> Self {
+        self.cfg.variant = v.into();
+        self
+    }
+
+    /// Execution backend (PJRT, scalar, or auto-fallback).
+    pub fn backend(mut self, b: EngineBackend) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    /// Partial-batch flush deadline (tail-latency bound).
+    pub fn batch_deadline(mut self, d: Duration) -> Self {
+        self.cfg.batch_deadline = d;
+        self
+    }
+
+    /// Per-stream pending-token bound (backpressure).
+    pub fn max_queue_per_stream(mut self, n: usize) -> Self {
+        self.cfg.max_queue_per_stream = n;
+        self
+    }
+
+    /// Idle eviction horizon.
+    pub fn idle_timeout(mut self, d: Duration) -> Self {
+        self.cfg.idle_timeout = d;
+        self
+    }
+
+    /// Engine request channel depth (per shard).
+    pub fn request_queue(mut self, n: usize) -> Self {
+        self.cfg.request_queue = n;
+        self
+    }
+
+    /// Worker shard count (0 = one per available core).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
+    /// Stream → shard placement policy at the cluster front door.
+    pub fn placement(mut self, p: PlacementPolicy) -> Self {
+        self.cfg.placement = p;
+        self
+    }
+
+    /// Per-shard slot capacity override (scalar backend only; 0 = the
+    /// variant's compiled batch size).
+    pub fn slots_per_shard(mut self, n: usize) -> Self {
+        self.cfg.slots_per_shard = n;
+        self
+    }
+
+    /// Finish the build.
+    pub fn build(self) -> EngineConfig {
+        self.cfg
+    }
+}
+
 impl EngineConfig {
+    /// Start a builder at the default configuration.
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder::default()
+    }
+
     /// Register the engine's options on a CLI.
     pub fn cli(cli: Cli) -> Cli {
         cli.opt("variant", "serve_deepcot_b4", "batched step variant to serve")
@@ -197,6 +289,35 @@ mod tests {
         // 0 = auto: at least one shard, whatever the host
         let auto = EngineConfig { shards: 0, ..EngineConfig::default() };
         assert!(auto.effective_shards() >= 1);
+    }
+
+    #[test]
+    fn builder_overrides_defaults() {
+        let c = EngineConfig::builder()
+            .variant("serve_deepcot_b1")
+            .backend(EngineBackend::Scalar)
+            .batch_deadline(Duration::from_micros(500))
+            .shards(4)
+            .placement(PlacementPolicy::LeastLoaded)
+            .slots_per_shard(2)
+            .idle_timeout(Duration::from_secs(5))
+            .max_queue_per_stream(3)
+            .request_queue(64)
+            .artifacts_dir("/tmp/x")
+            .build();
+        assert_eq!(c.variant, "serve_deepcot_b1");
+        assert_eq!(c.backend, EngineBackend::Scalar);
+        assert_eq!(c.batch_deadline, Duration::from_micros(500));
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.placement, PlacementPolicy::LeastLoaded);
+        assert_eq!(c.slots_per_shard, 2);
+        assert_eq!(c.idle_timeout, Duration::from_secs(5));
+        assert_eq!(c.max_queue_per_stream, 3);
+        assert_eq!(c.request_queue, 64);
+        assert_eq!(c.artifacts_dir, PathBuf::from("/tmp/x"));
+        // untouched fields keep their defaults
+        let d = EngineConfig::default();
+        assert_eq!(EngineConfig::builder().build().variant, d.variant);
     }
 
     #[test]

@@ -78,6 +78,38 @@ impl Batcher {
         self.queued.remove(&id);
     }
 
+    /// Remove and return everything a stream has queued, FIFO order
+    /// (pending head first) — the quiesce step of a live migration:
+    /// the tokens travel with the stream to its new shard.
+    pub fn extract(&mut self, id: StreamId) -> Vec<Pending> {
+        let mut v = Vec::new();
+        if let Some(p) = self.pending.remove(&id) {
+            v.push(p);
+        }
+        if let Some(q) = self.queued.remove(&id) {
+            v.extend(q);
+        }
+        v
+    }
+
+    /// Reinstate an [`Self::extract`]ed queue on this batcher (the
+    /// import step of a live migration), preserving FIFO order and the
+    /// original enqueue timestamps. The stream must have no pending
+    /// state here yet (it was just admitted).
+    pub fn restore(&mut self, id: StreamId, mut items: Vec<Pending>) {
+        debug_assert!(!self.pending.contains_key(&id), "restore over live pending state");
+        if items.is_empty() {
+            return;
+        }
+        let rest = items.split_off(1);
+        if let Some(first) = items.pop() {
+            self.pending.insert(id, first);
+        }
+        if !rest.is_empty() {
+            self.queued.insert(id, rest);
+        }
+    }
+
     /// Should we flush now, given the set of occupied streams?
     pub fn ready(&self, occupied: usize, now: Instant) -> bool {
         if self.pending.is_empty() {
@@ -98,7 +130,9 @@ impl Batcher {
         let mut lanes = Vec::with_capacity(ids.len());
         for id in ids {
             let Some(slot) = slot_of(id) else { continue };
-            let p = self.pending.remove(&id).expect("pending");
+            let Some(p) = self.pending.remove(&id) else {
+                continue;
+            };
             lanes.push((slot, id, p.tokens, p.enqueued));
             if let Some(q) = self.queued.get_mut(&id) {
                 if !q.is_empty() {
@@ -164,6 +198,32 @@ mod tests {
         assert_eq!(p1.lanes[0].2, vec![1.0]);
         let p2 = b.take_tick(|_| Some(0));
         assert_eq!(p2.lanes[0].2, vec![2.0]);
+    }
+
+    #[test]
+    fn extract_restore_preserves_fifo() {
+        let mut a = Batcher::new(Duration::from_millis(1), 8);
+        let now = t0();
+        for v in 0..4 {
+            a.push(StreamId(1), vec![v as f32], now);
+        }
+        a.push(StreamId(2), vec![9.0], now);
+        let moved = a.extract(StreamId(1));
+        assert_eq!(moved.len(), 4);
+        assert_eq!(a.queued_len(StreamId(1)), 0, "extract must clear the source");
+        assert_eq!(a.queued_len(StreamId(2)), 1, "other streams untouched");
+        // restore on a different batcher (the target shard's)
+        let mut b = Batcher::new(Duration::from_millis(1), 8);
+        b.restore(StreamId(1), moved);
+        assert_eq!(b.queued_len(StreamId(1)), 4);
+        for want in 0..4 {
+            let plan = b.take_tick(|_| Some(0));
+            assert_eq!(plan.lanes[0].2, vec![want as f32]);
+        }
+        assert!(b.take_tick(|_| Some(0)).lanes.is_empty());
+        // restoring an empty queue is inert
+        b.restore(StreamId(3), Vec::new());
+        assert_eq!(b.queued_len(StreamId(3)), 0);
     }
 
     #[test]

@@ -1,50 +1,66 @@
 //! Sharded multi-core serving: the cluster front door over N shard
-//! workers.
+//! workers, with live stream migration between them.
 //!
 //! DeepCoT's per-stream state is fixed-size, so scaling the engine is a
 //! placement problem, not a memory problem: [`ShardedEngine`] spawns
 //! `cfg.effective_shards()` copies of the single-engine serving cell
 //! (`coordinator::shard`), each on its own thread with its own
 //! [`SlotStepper`] backend, and [`ShardRouter`] pins every stream to
-//! one shard for its whole life. Within a shard nothing changed — same
-//! router, batcher, masked-lane tick — which is why a stream's outputs
-//! are bitwise-identical whether it serves on a 1-shard or an N-shard
-//! cluster (per-lane position clocks make them depend on nothing but
-//! the stream's own history).
+//! one shard — until a [`EngineHandle::migrate`] moves it. Within a
+//! shard nothing changed — same router, batcher, masked-lane tick —
+//! which is why a stream's outputs are bitwise-identical whether it
+//! serves on a 1-shard or an N-shard cluster, and across a mid-run
+//! migration (per-lane position clocks + portable `StreamState`
+//! snapshots make them depend on nothing but the stream's own history).
 //!
 //! Data flow:
 //!
 //! ```text
-//!   clients ──► EngineHandle (cluster front door, Clone + Send)
+//!   clients ──► Session (RAII stream handle: push / recv / drop-closes)
+//!                 │
+//!                 ▼
+//!              EngineHandle (cluster front door, Clone + Send)
 //!                 │ ShardRouter: hash placement, least-loaded
 //!                 │ fallback, stream → shard pinning
+//!                 │ migrate/rebalance: export → import → rebind
 //!        ┌────────┼──────────┐
 //!        ▼        ▼          ▼
 //!     shard 0   shard 1 …  shard N-1      one worker thread each
 //!     Router    Router     Router         admission + idle eviction
 //!     Batcher   Batcher    Batcher        deadline / all-slots ticks
-//!     Stepper   Stepper    Stepper        batched scalar | PJRT
+//!     Stepper   Stepper    Stepper        StreamBackend (scalar | PJRT)
 //!        │        │          │
 //!        └────────┴──────────┴── per-stream channels ──► TickResult
 //! ```
 //!
-//! The front door serializes only `open`/`close` bookkeeping (brief
-//! write locks on the shard map, never held across a shard round-trip);
-//! `push` takes a read lock for one map lookup and then talks straight
-//! to the owning shard, so concurrent pushes to different shards never
-//! serialize and the tick hot path never crosses shard boundaries.
+//! The front door serializes only `open`/`close`/`migrate` bookkeeping
+//! (write locks on the shard map); `push` takes a read lock for one map
+//! lookup and then talks straight to the owning shard, so concurrent
+//! pushes to different shards never serialize and the tick hot path
+//! never crosses shard boundaries. A migration holds the write lock
+//! across its export → import round-trip: that *is* the quiesce — no
+//! push can route while the stream's state is in flight. Note the
+//! blast radius: because the quiesce is the one front-door lock, a
+//! migration briefly blocks routing to EVERY shard (and `rebalance`
+//! repeats that once per move), bounded by one export + import
+//! round-trip against otherwise-responsive shard loops; the window is
+//! recorded in the quiesce histogram. A per-stream tombstone in the
+//! routing map would narrow the stall to the migrating stream — see
+//! ROADMAP if migration ever becomes hot-path. A push already in
+//! flight to the source shard when migration starts is handed back by
+//! the shard with its tokens and transparently re-routed to the
+//! stream's new home.
 //!
 //! [`SlotStepper`]: crate::coordinator::slot_stepper::SlotStepper
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::Receiver;
 use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
-
-use anyhow::{anyhow, Result};
+use std::time::Instant;
 
 use crate::config::{EngineConfig, PlacementPolicy};
-use crate::coordinator::metrics::ClusterMetrics;
-use crate::coordinator::shard::{ShardHandle, ShardThread, TickResult};
+use crate::coordinator::metrics::{ClusterMetrics, LatencyHisto};
+use crate::coordinator::session::{EngineError, Session};
+use crate::coordinator::shard::{ShardHandle, ShardThread};
 use crate::coordinator::slots::StreamId;
 
 /// Cluster-level placement: pins streams to shards and tracks the load
@@ -64,11 +80,13 @@ pub struct ShardRouter {
 }
 
 impl ShardRouter {
+    /// A router over `n_shards` shards with the given placement policy.
     pub fn new(n_shards: usize, policy: PlacementPolicy) -> Self {
         assert!(n_shards >= 1, "cluster needs at least one shard");
         Self { policy, load: vec![0; n_shards], assigned: BTreeMap::new(), rr_cursor: 0 }
     }
 
+    /// Number of shards this router places over.
     pub fn n_shards(&self) -> usize {
         self.load.len()
     }
@@ -104,23 +122,36 @@ impl ShardRouter {
         order
     }
 
+    /// Pin a stream to a shard (counted toward that shard's load).
     pub fn bind(&mut self, id: StreamId, shard: usize) {
         self.assigned.insert(id, shard);
         self.load[shard] += 1;
     }
 
+    /// The shard a stream is pinned to, if any.
     pub fn shard_of(&self, id: StreamId) -> Option<usize> {
         self.assigned.get(&id).copied()
     }
 
+    /// Drop a stream's pinning; returns the shard it was on.
     pub fn unbind(&mut self, id: StreamId) -> Option<usize> {
         let shard = self.assigned.remove(&id)?;
         self.load[shard] = self.load[shard].saturating_sub(1);
         Some(shard)
     }
 
+    /// Front-door-tracked stream count per shard.
     pub fn load(&self) -> &[usize] {
         &self.load
+    }
+
+    /// The streams currently pinned to one shard.
+    pub fn streams_on(&self, shard: usize) -> Vec<StreamId> {
+        self.assigned
+            .iter()
+            .filter(|&(_, &s)| s == shard)
+            .map(|(&id, _)| id)
+            .collect()
     }
 }
 
@@ -130,6 +161,10 @@ struct FrontDoor {
     placed_primary: u64,
     placed_fallback: u64,
     cluster_rejects: u64,
+    migrations_attempted: u64,
+    migrations_completed: u64,
+    migrations_aborted: u64,
+    quiesce_latency: LatencyHisto,
 }
 
 // the front door is read-mostly on the hot path (push only needs the
@@ -143,9 +178,22 @@ fn write(door: &RwLock<FrontDoor>) -> RwLockWriteGuard<'_, FrontDoor> {
     door.write().unwrap_or_else(|p| p.into_inner())
 }
 
-/// Cloneable, `Send` front-door handle to the shard cluster — the same
-/// `open`/`push`/`close`/`metrics` surface the single-threaded engine
-/// exposed, so callers are unchanged by sharding.
+/// What a [`EngineHandle::rebalance`] sweep did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RebalanceReport {
+    /// Migrations the sweep planned from the load snapshot.
+    pub planned: usize,
+    /// Migrations that completed.
+    pub moved: usize,
+    /// Migrations that failed (stream stayed on, or returned to, its
+    /// source shard when possible).
+    pub failed: usize,
+}
+
+/// Cloneable, `Send` front-door handle to the shard cluster. `open`
+/// hands out RAII [`Session`]s — the only public path for pushing
+/// tokens — while `metrics`, `migrate` and `rebalance` expose the
+/// cluster's observability and placement controls.
 #[derive(Clone)]
 pub struct EngineHandle {
     shards: Arc<[ShardHandle]>,
@@ -155,13 +203,14 @@ pub struct EngineHandle {
 impl EngineHandle {
     /// Open a stream: assign a cluster-unique id, walk the placement
     /// plan (primary, then least-loaded fallbacks) until a shard admits
-    /// it, and pin the stream there. Returns the id and output channel.
+    /// it, and pin the stream there. Returns the RAII [`Session`] that
+    /// owns the stream (closed on drop).
     ///
     /// The door lock is held only for id/plan assignment and for the
     /// final bind — never across the blocking shard round-trips — so an
     /// open walking a slow fallback chain cannot stall pushes to other
     /// shards.
-    pub fn open(&self) -> Result<(StreamId, Receiver<TickResult>)> {
+    pub fn open(&self) -> Result<Session, EngineError> {
         let (id, order) = {
             let mut door = write(&self.door);
             let id = StreamId(door.next_id);
@@ -185,45 +234,224 @@ impl EngineHandle {
                     } else {
                         door.placed_fallback += 1;
                     }
-                    return Ok((id, rx));
+                    drop(door);
+                    return Ok(Session::attach(id, rx, self.clone()));
                 }
                 Err(e) => last_err = Some(e),
             }
         }
         write(&self.door).cluster_rejects += 1;
-        Err(last_err.unwrap_or_else(|| anyhow!("cluster has no shards")))
+        Err(last_err.unwrap_or(EngineError::ShuttingDown))
     }
 
     /// Submit the next token(s) for a stream (m*d_in f32s); routed to
-    /// the stream's pinned shard.
-    pub fn push(&self, id: StreamId, tokens: Vec<f32>) -> Result<()> {
-        let shard = read(&self.door)
-            .router
-            .shard_of(id)
-            .ok_or_else(|| anyhow!("unknown stream {id:?}"))?;
-        self.shards[shard].push(id, tokens)
+    /// the stream's pinned shard. If the binding raced a live migration
+    /// (the shard hands the unaccepted tokens back), the push re-routes
+    /// to the stream's new shard transparently.
+    pub(crate) fn push_raw(&self, id: StreamId, mut tokens: Vec<f32>) -> Result<(), EngineError> {
+        // bounded retries: a shard disowns a push (handing the tokens
+        // back) when the stream just migrated away — the re-read of the
+        // binding blocks behind the in-flight migration's write lock
+        // and then routes to the stream's current home. That home can
+        // legitimately be the SAME shard again (the migration aborted
+        // and restored the stream), so retry on the binding, not on
+        // shard inequality; a genuinely-gone stream exits via the
+        // unbound binding or the retry bound.
+        for _ in 0..4 {
+            let Some(shard) = read(&self.door).router.shard_of(id) else {
+                return Err(EngineError::StreamClosed(id));
+            };
+            match self.shards[shard].push(id, tokens) {
+                Ok(()) => return Ok(()),
+                Err((EngineError::StreamClosed(_), Some(rejected))) => tokens = rejected,
+                Err((e, _)) => return Err(e),
+            }
+        }
+        Err(EngineError::StreamClosed(id))
     }
 
-    pub fn close(&self, id: StreamId) {
+    /// Close a stream by id (sessions call this on drop).
+    pub(crate) fn close_raw(&self, id: StreamId) {
         let shard = write(&self.door).router.unbind(id);
         if let Some(s) = shard {
             self.shards[s].close(id);
         }
     }
 
+    /// Number of shards behind this front door.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a stream currently serves on (observability; may be
+    /// stale by the time the caller acts on it).
+    pub fn shard_of(&self, id: StreamId) -> Option<usize> {
+        read(&self.door).router.shard_of(id)
+    }
+
+    /// Snapshot of the front-door-tracked stream count per shard.
+    pub fn shard_loads(&self) -> Vec<usize> {
+        read(&self.door).router.load().to_vec()
+    }
+
+    /// Live-migrate a stream to another shard: quiesce it (no push can
+    /// route while the write lock is held), export its portable
+    /// [`StreamState`] snapshot — K/V rings, position clock, queued
+    /// tokens, output port — from the source shard, import on the
+    /// target, and rebind the front door. The stream's owner notices
+    /// nothing: its `Session` keeps pushing and receiving, and outputs
+    /// stay bitwise-identical to an unmigrated run.
+    ///
+    /// On failure the stream is left (or put back) on its source shard
+    /// whenever possible; the attempt is counted in the migration
+    /// metrics either way. A migrate to the stream's current shard is
+    /// an uncounted no-op.
+    ///
+    /// [`StreamState`]: crate::coordinator::slot_stepper::StreamState
+    pub fn migrate(&self, id: StreamId, to_shard: usize) -> Result<(), EngineError> {
+        if to_shard >= self.shards.len() {
+            return Err(EngineError::InvalidRequest(format!(
+                "shard {to_shard} out of range ({} shards)",
+                self.shards.len()
+            )));
+        }
+        let t0 = Instant::now();
+        let mut door = write(&self.door);
+        let Some(from) = door.router.shard_of(id) else {
+            door.migrations_attempted += 1;
+            door.migrations_aborted += 1;
+            return Err(EngineError::StreamClosed(id));
+        };
+        if from == to_shard {
+            // already home: an uncounted no-op, so degenerate requests
+            // (e.g. a 1-shard round-robin hop) don't skew the counters
+            // or drag the quiesce histogram toward zero
+            return Ok(());
+        }
+        door.migrations_attempted += 1;
+        // export atomically detaches the stream from its source shard
+        // (or fails with the stream still serving there, untouched)
+        let payload = match self.shards[from].export(id) {
+            Ok(p) => p,
+            Err(e) => {
+                door.migrations_aborted += 1;
+                return Err(e);
+            }
+        };
+        door.router.unbind(id);
+        match self.shards[to_shard].import(id, payload, false) {
+            Ok(evicted) => {
+                if let Some(eid) = evicted {
+                    door.router.unbind(eid);
+                }
+                door.router.bind(id, to_shard);
+                door.migrations_completed += 1;
+                door.quiesce_latency.record(t0.elapsed());
+                Ok(())
+            }
+            Err((e, mut payload, evicted)) => {
+                if let Some(eid) = evicted {
+                    // a failed import may still have evicted an idle
+                    // victim during admission — its binding must go
+                    door.router.unbind(eid);
+                }
+                door.migrations_aborted += 1;
+                // abort: put the stream back on its source shard. The
+                // slot the export freed is USUALLY still free, but an
+                // open racing its lock-free shard round-trip can have
+                // taken it — so if the source rejects, rescue the
+                // stream onto any other shard with room rather than
+                // dropping a live stream; only when every shard is
+                // full does the owner see a disconnected channel.
+                // `rollback` (source only) un-counts the export so an
+                // aborted migration leaves its counters untouched.
+                let rescue: Vec<usize> = std::iter::once(from)
+                    .chain((0..self.shards.len()).filter(|&s| s != from && s != to_shard))
+                    .collect();
+                for shard in rescue {
+                    let Some(p) = payload.take() else { break };
+                    match self.shards[shard].import(id, p, shard == from) {
+                        Ok(evicted) => {
+                            if let Some(eid) = evicted {
+                                door.router.unbind(eid);
+                            }
+                            door.router.bind(id, shard);
+                            break;
+                        }
+                        Err((_, p, evicted)) => {
+                            if let Some(eid) = evicted {
+                                door.router.unbind(eid);
+                            }
+                            payload = p;
+                        }
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// One placement sweep against load skew: plan migrations from the
+    /// current load snapshot until no shard holds ≥2 more streams than
+    /// the lightest one, then execute them via [`Self::migrate`]. Safe
+    /// to call on a live cluster (long-lived sessions keep serving
+    /// through their moves); a no-op on balanced clusters.
+    pub fn rebalance(&self) -> Result<RebalanceReport, EngineError> {
+        let moves: Vec<(StreamId, usize)> = {
+            let door = read(&self.door);
+            let n = door.router.n_shards();
+            let mut load = door.router.load().to_vec();
+            let mut movable: Vec<Vec<StreamId>> =
+                (0..n).map(|s| door.router.streams_on(s)).collect();
+            let mut moves = Vec::new();
+            loop {
+                let Some(max_s) = (0..n).max_by_key(|&s| load[s]) else {
+                    break;
+                };
+                let Some(min_s) = (0..n).min_by_key(|&s| load[s]) else {
+                    break;
+                };
+                if load[max_s] <= load[min_s] + 1 {
+                    break;
+                }
+                let Some(id) = movable[max_s].pop() else {
+                    break;
+                };
+                moves.push((id, min_s));
+                load[max_s] -= 1;
+                load[min_s] += 1;
+            }
+            moves
+        };
+        let mut report = RebalanceReport { planned: moves.len(), ..Default::default() };
+        for (id, to) in moves {
+            // a stream may have closed since planning; count that as a
+            // failed move rather than erroring the whole sweep
+            match self.migrate(id, to) {
+                Ok(()) => report.moved += 1,
+                Err(_) => report.failed += 1,
+            }
+        }
+        Ok(report)
+    }
+
     /// Cluster metrics: per-shard snapshots, their aggregate, and the
-    /// front door's placement counters.
-    pub fn metrics(&self) -> Result<ClusterMetrics> {
+    /// front door's placement + migration counters.
+    pub fn metrics(&self) -> Result<ClusterMetrics, EngineError> {
         let per_shard = self
             .shards
             .iter()
             .map(|s| s.metrics())
-            .collect::<Result<Vec<_>>>()?;
+            .collect::<Result<Vec<_>, _>>()?;
         let mut m = ClusterMetrics::from_shards(per_shard);
         let door = read(&self.door);
         m.placed_primary = door.placed_primary;
         m.placed_fallback = door.placed_fallback;
         m.cluster_rejects = door.cluster_rejects;
+        m.migrations_attempted = door.migrations_attempted;
+        m.migrations_completed = door.migrations_completed;
+        m.migrations_aborted = door.migrations_aborted;
+        m.quiesce_latency = door.quiesce_latency.clone();
         Ok(m)
     }
 }
@@ -241,7 +469,7 @@ impl ShardedEngine {
     /// shard's model is loaded and ready (the first Push never pays
     /// compile latency). All shards are started before any is awaited,
     /// so their backends initialize in parallel.
-    pub fn spawn(cfg: EngineConfig) -> Result<Self> {
+    pub fn spawn(cfg: EngineConfig) -> Result<Self, EngineError> {
         let n = cfg.effective_shards().max(1);
         let mut shards = Vec::with_capacity(n);
         for s in 0..n {
@@ -258,23 +486,41 @@ impl ShardedEngine {
             placed_primary: 0,
             placed_fallback: 0,
             cluster_rejects: 0,
+            migrations_attempted: 0,
+            migrations_completed: 0,
+            migrations_aborted: 0,
+            quiesce_latency: LatencyHisto::new(),
         };
         let handle = EngineHandle { shards: handles, door: Arc::new(RwLock::new(door)) };
         Ok(Self { shards, handle })
     }
 
+    /// A cloneable front-door handle.
     pub fn handle(&self) -> EngineHandle {
         self.handle.clone()
     }
 
+    /// Number of worker shards.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Live-migrate a stream to another shard (see
+    /// [`EngineHandle::migrate`]).
+    pub fn migrate(&self, id: StreamId, to_shard: usize) -> Result<(), EngineError> {
+        self.handle.migrate(id, to_shard)
+    }
+
+    /// Run one load-skew rebalancing sweep (see
+    /// [`EngineHandle::rebalance`]).
+    pub fn rebalance(&self) -> Result<RebalanceReport, EngineError> {
+        self.handle.rebalance()
     }
 
     /// Signal every shard, then join them all: each shard drains its
     /// queued requests with terminal errors before exiting, so no
     /// in-flight caller is left blocked.
-    pub fn shutdown(mut self) -> Result<()> {
+    pub fn shutdown(mut self) -> Result<(), EngineError> {
         for t in &self.shards {
             t.signal_shutdown();
         }
@@ -364,10 +610,23 @@ mod tests {
         r.bind(StreamId(3), 1);
         assert_eq!(r.load(), &[2, 1]);
         assert_eq!(r.shard_of(StreamId(2)), Some(0));
+        assert_eq!(r.streams_on(0), vec![StreamId(1), StreamId(2)]);
+        assert_eq!(r.streams_on(1), vec![StreamId(3)]);
         assert_eq!(r.unbind(StreamId(2)), Some(0));
         assert_eq!(r.unbind(StreamId(2)), None, "double unbind is inert");
         assert_eq!(r.load(), &[1, 1]);
         assert_eq!(r.shard_of(StreamId(2)), None);
+        assert_eq!(r.streams_on(0), vec![StreamId(1)]);
+    }
+
+    #[test]
+    fn rebind_models_migration() {
+        let mut r = ShardRouter::new(2, PlacementPolicy::Hash);
+        r.bind(StreamId(1), 0);
+        assert_eq!(r.unbind(StreamId(1)), Some(0));
+        r.bind(StreamId(1), 1);
+        assert_eq!(r.shard_of(StreamId(1)), Some(1));
+        assert_eq!(r.load(), &[0, 1]);
     }
 
     /// Property: under random bind/unbind churn the tracked load always
@@ -407,6 +666,11 @@ mod tests {
                 }
                 if r.load() != want.as_slice() {
                     return Err(format!("load {:?} != assigned {:?}", r.load(), want));
+                }
+                for s in 0..n {
+                    if r.streams_on(s).len() != want[s] {
+                        return Err(format!("streams_on({s}) disagrees with load"));
+                    }
                 }
             }
             Ok(())

@@ -1,32 +1,49 @@
-//! The serving engine's public front: [`EngineThread`] + [`EngineHandle`].
+//! The serving engine's public front: [`EngineThread`] +
+//! [`EngineHandle`] + the RAII [`Session`] client handle.
 //!
 //! Since the cluster refactor the engine *is* a shard cluster
 //! ([`ShardedEngine`], `coordinator::cluster`): `spawn` starts
 //! `cfg.effective_shards()` worker threads (each a complete serving
 //! cell — backend, router, batcher; see `coordinator::shard`) and the
-//! handle is the cluster front door that pins streams to shards. The
+//! handle is the cluster front door. Clients hold [`Session`]s —
+//! `open` returns one, `push`/`recv` flow through it, and dropping it
+//! closes the stream — over the typed [`EngineError`] enum. The
 //! default `shards = 1` reproduces the old single-threaded engine
-//! exactly, so existing callers are unchanged in behavior *and* in API:
+//! exactly:
 //!
 //! ```text
-//!   clients ──► EngineHandle::open / push / close / metrics
+//!   clients ──► Session::push / recv / try_recv   (close-on-drop)
+//!                 │
+//!                 ▼
+//!              EngineHandle::open / metrics / migrate / rebalance
 //!                 │  ShardRouter (hash placement, least-loaded
 //!                 │  fallback, stream → shard pinning)
+//!                 │  migrate: quiesce → export StreamState →
+//!                 │           import on target → rebind
 //!        ┌────────┼──────────┐
 //!        ▼        ▼          ▼
-//!     shard 0   shard 1 …  shard N-1   Router + Batcher + SlotStepper
+//!     shard 0   shard 1 …  shard N-1   Router + Batcher + StreamBackend
 //!        │        │          │         per worker thread
 //!        └────────┴──────────┴── per-stream channels ──► TickResult
 //! ```
 //!
-//! `metrics()` now returns [`ClusterMetrics`]: the aggregate fields
-//! carry the same names the single-engine metrics had, plus a
-//! per-shard breakdown and the front door's placement counters.
+//! Execution backends implement the [`StreamBackend`] trait (scalar and
+//! PJRT ship built-in); a stream's whole serving identity exports as a
+//! portable [`StreamState`] snapshot, which is what `migrate` /
+//! `rebalance` move between shards — bitwise-transparently to the
+//! stream's owner.
+//!
+//! `metrics()` returns [`ClusterMetrics`]: the aggregate fields carry
+//! the same names the single-engine metrics had, plus a per-shard
+//! breakdown, the front door's placement counters, and the migration
+//! counters (attempted/completed/aborted, quiesce-time quantiles).
 //!
 //! [`ClusterMetrics`]: crate::coordinator::metrics::ClusterMetrics
 
-pub use crate::coordinator::cluster::{EngineHandle, ShardedEngine};
+pub use crate::coordinator::cluster::{EngineHandle, RebalanceReport, ShardedEngine};
+pub use crate::coordinator::session::{EngineError, Session};
 pub use crate::coordinator::shard::TickResult;
+pub use crate::coordinator::slot_stepper::{StreamBackend, StreamState};
 
 /// The spawned serving engine (compat name: a 1-shard cluster is the
 /// old engine thread; N shards scale it across cores).

@@ -20,10 +20,12 @@ impl Default for LatencyHisto {
 }
 
 impl LatencyHisto {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self { buckets: vec![0; 27], count: 0, sum_us: 0, max_us: 0 }
     }
 
+    /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros().max(1) as u64;
         let b = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
@@ -33,10 +35,12 @@ impl LatencyHisto {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean of the recorded samples (zero when empty).
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -44,6 +48,7 @@ impl LatencyHisto {
         Duration::from_micros(self.sum_us / self.count)
     }
 
+    /// Largest recorded sample.
     pub fn max(&self) -> Duration {
         Duration::from_micros(self.max_us)
     }
@@ -64,6 +69,7 @@ impl LatencyHisto {
         Duration::from_micros(self.max_us)
     }
 
+    /// Fold another histogram's samples into this one (bucket-wise).
     pub fn merge(&mut self, other: &LatencyHisto) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
@@ -77,22 +83,35 @@ impl LatencyHisto {
 /// Per-shard serving counters, owned by one shard worker thread.
 #[derive(Debug, Clone, Default)]
 pub struct EngineMetrics {
+    /// Batched ticks executed.
     pub ticks: u64,
+    /// Token vectors accepted by the batcher.
     pub tokens_in: u64,
+    /// Tick results delivered to stream owners.
     pub outputs: u64,
+    /// Streams admitted (fresh opens; migrations arrive separately).
     pub streams_opened: u64,
+    /// Streams explicitly closed while bound here.
     pub streams_closed: u64,
     /// idle sessions reclaimed by admission (distinct from explicit closes)
     pub streams_evicted: u64,
+    /// Admissions rejected at capacity (opens and migration imports).
     pub admission_rejects: u64,
+    /// Streams that migrated onto this shard (aborted migrations that
+    /// return home are rolled back, not counted).
+    pub migrations_in: u64,
+    /// Streams that migrated off this shard (net of aborted exports).
+    pub migrations_out: u64,
+    /// Per-tick backend step latency.
     pub tick_latency: LatencyHisto,
     /// time a token waits in the batcher before its tick starts
     pub queue_latency: LatencyHisto,
 }
 
 impl EngineMetrics {
+    /// Fresh all-zero counters.
     pub fn new() -> Self {
-        Self { tick_latency: LatencyHisto::new(), queue_latency: LatencyHisto::new(), ..Default::default() }
+        Self::default()
     }
 
     /// Fold another shard's counters into this one (histograms merge
@@ -105,14 +124,17 @@ impl EngineMetrics {
         self.streams_closed += other.streams_closed;
         self.streams_evicted += other.streams_evicted;
         self.admission_rejects += other.admission_rejects;
+        self.migrations_in += other.migrations_in;
+        self.migrations_out += other.migrations_out;
         self.tick_latency.merge(&other.tick_latency);
         self.queue_latency.merge(&other.queue_latency);
     }
 
+    /// One-line operator summary of the counters.
     pub fn report(&self) -> String {
         format!(
             "ticks={} tokens={} outputs={} streams={}/{} evicted={} rejects={} \
-             tick(mean={:?} p50={:?} p95={:?} max={:?}) queue(p95={:?})",
+             migr={}in/{}out tick(mean={:?} p50={:?} p95={:?} max={:?}) queue(p95={:?})",
             self.ticks,
             self.tokens_in,
             self.outputs,
@@ -120,6 +142,8 @@ impl EngineMetrics {
             self.streams_closed,
             self.streams_evicted,
             self.admission_rejects,
+            self.migrations_in,
+            self.migrations_out,
             self.tick_latency.mean(),
             self.tick_latency.quantile(0.5),
             self.tick_latency.quantile(0.95),
@@ -130,20 +154,31 @@ impl EngineMetrics {
 }
 
 /// Cluster-wide serving metrics: the per-shard [`EngineMetrics`] plus
-/// their sum and the front door's placement counters. The aggregate
+/// their sum, the front door's placement counters, and the migration
+/// counters (attempted/completed/aborted with quiesce-time quantiles)
+/// that make rebalancing observable from the front door. The aggregate
 /// fields mirror `EngineMetrics` name-for-name, so code written against
 /// the single-engine metrics keeps reading the same fields and now sees
 /// cluster totals.
 #[derive(Debug, Clone, Default)]
 pub struct ClusterMetrics {
+    /// Batched ticks executed, cluster-wide.
     pub ticks: u64,
+    /// Token vectors accepted, cluster-wide.
     pub tokens_in: u64,
+    /// Tick results delivered, cluster-wide.
     pub outputs: u64,
+    /// Streams admitted, cluster-wide.
     pub streams_opened: u64,
+    /// Streams explicitly closed, cluster-wide.
     pub streams_closed: u64,
+    /// Idle sessions reclaimed by admission, cluster-wide.
     pub streams_evicted: u64,
+    /// Shard-level admission rejects, cluster-wide.
     pub admission_rejects: u64,
+    /// Per-tick backend step latency, merged across shards.
     pub tick_latency: LatencyHisto,
+    /// Batcher queue-wait latency, merged across shards.
     pub queue_latency: LatencyHisto,
     /// Per-shard breakdown (index = shard id).
     pub per_shard: Vec<EngineMetrics>,
@@ -153,11 +188,22 @@ pub struct ClusterMetrics {
     pub placed_fallback: u64,
     /// Opens rejected by every shard (cluster saturated).
     pub cluster_rejects: u64,
+    /// Live migrations requested (`migrate` / `rebalance`); a migrate
+    /// to the stream's current shard is an uncounted no-op.
+    pub migrations_attempted: u64,
+    /// Live migrations that landed on their target shard.
+    pub migrations_completed: u64,
+    /// Live migrations that failed (stream left on — or returned to —
+    /// its source shard when possible).
+    pub migrations_aborted: u64,
+    /// Stream-unavailability window per completed migration: export
+    /// request to import acknowledgment (read p50/p99 off this).
+    pub quiesce_latency: LatencyHisto,
 }
 
 impl ClusterMetrics {
     /// Build the aggregate view from per-shard snapshots; the front
-    /// door fills the placement counters afterwards.
+    /// door fills the placement and migration counters afterwards.
     pub fn from_shards(per_shard: Vec<EngineMetrics>) -> Self {
         let mut agg = EngineMetrics::new();
         for m in &per_shard {
@@ -174,9 +220,7 @@ impl ClusterMetrics {
             tick_latency: agg.tick_latency,
             queue_latency: agg.queue_latency,
             per_shard,
-            placed_primary: 0,
-            placed_fallback: 0,
-            cluster_rejects: 0,
+            ..Self::default()
         }
     }
 
@@ -185,6 +229,10 @@ impl ClusterMetrics {
     /// `from_shards`) — not re-derived from `per_shard`, so the two can
     /// never silently diverge.
     pub fn aggregate(&self) -> EngineMetrics {
+        let (migrations_in, migrations_out) = self
+            .per_shard
+            .iter()
+            .fold((0, 0), |(i, o), m| (i + m.migrations_in, o + m.migrations_out));
         EngineMetrics {
             ticks: self.ticks,
             tokens_in: self.tokens_in,
@@ -193,18 +241,29 @@ impl ClusterMetrics {
             streams_closed: self.streams_closed,
             streams_evicted: self.streams_evicted,
             admission_rejects: self.admission_rejects,
+            migrations_in,
+            migrations_out,
             tick_latency: self.tick_latency.clone(),
             queue_latency: self.queue_latency.clone(),
         }
     }
 
+    /// Multi-line operator summary: placement + migration counters, the
+    /// aggregate, and (on multi-shard clusters) per-shard breakdowns.
     pub fn report(&self) -> String {
         let mut s = format!(
-            "cluster: shards={} placed(primary={} fallback={}) rejects={}\n  total: {}",
+            "cluster: shards={} placed(primary={} fallback={}) rejects={} \
+             migrations(attempted={} completed={} aborted={} quiesce p50={:?} p99={:?})\n  \
+             total: {}",
             self.per_shard.len(),
             self.placed_primary,
             self.placed_fallback,
             self.cluster_rejects,
+            self.migrations_attempted,
+            self.migrations_completed,
+            self.migrations_aborted,
+            self.quiesce_latency.quantile(0.5),
+            self.quiesce_latency.quantile(0.99),
             self.aggregate().report(),
         );
         if self.per_shard.len() > 1 {
@@ -255,11 +314,13 @@ mod tests {
         a.ticks = 3;
         a.outputs = 5;
         a.streams_opened = 2;
+        a.migrations_out = 1;
         a.tick_latency.record(Duration::from_micros(100));
         let mut b = EngineMetrics::new();
         b.ticks = 4;
         b.outputs = 7;
         b.streams_evicted = 1;
+        b.migrations_in = 1;
         b.tick_latency.record(Duration::from_micros(400));
         let c = ClusterMetrics::from_shards(vec![a, b]);
         assert_eq!(c.ticks, 7);
@@ -269,6 +330,9 @@ mod tests {
         assert_eq!(c.tick_latency.count(), 2);
         assert_eq!(c.per_shard.len(), 2);
         assert_eq!(c.aggregate().outputs, 12);
+        assert_eq!(c.aggregate().migrations_in, 1);
+        assert_eq!(c.aggregate().migrations_out, 1);
         assert!(c.report().contains("shard 1"));
+        assert!(c.report().contains("migrations(attempted=0"));
     }
 }

@@ -1,18 +1,22 @@
 //! Layer-3 coordinator — the serving system around the AOT executables.
 //!
-//! Cluster data flow (front door → shard router → per-shard
+//! Cluster data flow (sessions → front door → shard router → per-shard
 //! batcher/stepper):
 //!
 //! ```text
-//!   clients ──► EngineHandle (cluster front door, Clone + Send)
+//!   clients ──► Session (RAII: push / recv / close-on-drop)
+//!                 │
+//!                 ▼
+//!              EngineHandle (cluster front door, Clone + Send)
 //!                 │  ShardRouter: hash placement, least-loaded
 //!                 │  fallback, stream → shard pinning
+//!                 │  migrate/rebalance: StreamState export → import
 //!        ┌────────┼──────────┐
 //!        ▼        ▼          ▼
 //!     shard 0   shard 1 …  shard N-1      one worker thread each
 //!     Router    Router     Router         admission + idle eviction
 //!     Batcher   Batcher    Batcher        deadline / all-slots ticks
-//!     Stepper   Stepper    Stepper        batched scalar | PJRT
+//!     Stepper   Stepper    Stepper        StreamBackend (scalar | PJRT)
 //!        │        │          │
 //!        └────────┴──────────┴── per-stream channels ──► TickResult
 //! ```
@@ -22,25 +26,40 @@
 //!   state ⇒ fixed batch lanes; the encoder-side KV-cache analogue of a
 //!   vLLM-style router).
 //! - [`batcher`] — tick assembly: all-slots-ready or deadline flush,
-//!   per-stream FIFO queues with backpressure.
+//!   per-stream FIFO queues with backpressure (plus extract/restore,
+//!   the migration quiesce path).
 //! - [`router`]  — per-shard admission, slot placement, idle eviction.
-//! - [`slot_stepper`] — batched PJRT/scalar step with per-lane state
-//!   masking and (scalar) per-lane position clocks.
+//! - [`slot_stepper`] — the [`slot_stepper::StreamBackend`] trait
+//!   (batched stepping with per-lane state masking and portable
+//!   [`slot_stepper::StreamState`] snapshots) and its built-in scalar /
+//!   PJRT implementations.
 //! - [`shard`]   — one shard worker: the per-tick serving loop around
-//!   a backend, with drain-on-shutdown semantics.
+//!   a backend, with stream export/import for live migration and
+//!   drain-on-shutdown semantics.
 //! - [`cluster`] — the multi-shard subsystem: [`cluster::ShardRouter`]
 //!   placement (hash / least-loaded / round-robin with least-loaded
-//!   fallback) and the [`cluster::ShardedEngine`] front door.
-//! - [`engine`]  — the public compat facade (`EngineThread`,
-//!   `EngineHandle`).
+//!   fallback), the [`cluster::ShardedEngine`] front door, and live
+//!   stream migration ([`cluster::EngineHandle::migrate`] /
+//!   [`cluster::EngineHandle::rebalance`]).
+//! - [`session`] — the client layer: RAII [`session::Session`] stream
+//!   handles over the typed [`session::EngineError`] enum.
+//! - [`engine`]  — the public facade (`EngineThread`, `EngineHandle`,
+//!   `Session`, `EngineError` re-exports).
 //! - [`metrics`] — latency histograms, per-shard counters, and the
-//!   merged [`metrics::ClusterMetrics`] view.
+//!   merged [`metrics::ClusterMetrics`] view with migration
+//!   observability.
 
 pub mod batcher;
+#[deny(missing_docs)]
 pub mod cluster;
+#[deny(missing_docs)]
 pub mod engine;
+#[deny(missing_docs)]
 pub mod metrics;
 pub mod router;
+#[deny(missing_docs)]
+pub mod session;
 pub mod shard;
+#[deny(missing_docs)]
 pub mod slot_stepper;
 pub mod slots;

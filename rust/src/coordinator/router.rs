@@ -75,7 +75,12 @@ impl Router {
                 None => return (Admission::Rejected, None),
             }
         }
-        let slot = self.slots.bind(id).expect("slot free after eviction");
+        // a slot is free here by construction (either the map wasn't
+        // full or the eviction above released one); stay panic-free on
+        // that invariant and degrade to a reject if it ever breaks
+        let Some(slot) = self.slots.bind(id) else {
+            return (Admission::Rejected, evicted);
+        };
         self.sessions.insert(
             id,
             SessionInfo { slot, opened: now, last_activity: now, ticks: 0 },

@@ -1,0 +1,183 @@
+//! The client layer: typed [`EngineError`]s and the RAII [`Session`]
+//! stream handle — the only public client path into the serving
+//! cluster.
+//!
+//! `EngineHandle::open` hands back a [`Session`] that owns the stream
+//! for its lifetime: `push` submits tokens, `recv`/`try_recv` read
+//! [`TickResult`]s, and dropping the session closes the stream at the
+//! front door (no leaked slots when a client unwinds). Every fallible
+//! operation returns an [`EngineError`] variant instead of a stringly
+//! error, so callers can branch on backpressure vs saturation vs
+//! shutdown without parsing messages.
+
+use std::fmt;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::Duration;
+
+use crate::coordinator::cluster::EngineHandle;
+use crate::coordinator::shard::TickResult;
+use crate::coordinator::slots::StreamId;
+
+/// Typed serving-path errors. Clients branch on the variant; `Display`
+/// renders an operator-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// Admission failed everywhere it was tried: every candidate shard
+    /// is at capacity with nothing evictable.
+    Saturated {
+        /// Slot capacity of the scope that rejected the request.
+        capacity: usize,
+    },
+    /// The stream is closed, evicted, or was never opened.
+    StreamClosed(StreamId),
+    /// The stream's pending-token queue is full; retry after consuming
+    /// results (the backpressure signal).
+    Backpressure(StreamId),
+    /// The engine (or the owning shard) is shutting down or gone —
+    /// also how a poisoned/panicked shard surfaces to clients.
+    ShuttingDown,
+    /// No tick result arrived within the caller's deadline.
+    Timeout,
+    /// The request was malformed (e.g. a wrong token-vector length).
+    InvalidRequest(String),
+    /// The active backend cannot perform the operation (e.g. stream
+    /// snapshot export on the PJRT backend).
+    Unsupported(&'static str),
+    /// An internal engine failure (model/backend/runtime error).
+    Internal(String),
+}
+
+impl EngineError {
+    /// Wrap any displayable internal failure as [`EngineError::Internal`].
+    pub fn internal<E: fmt::Display>(e: E) -> Self {
+        EngineError::Internal(e.to_string())
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Saturated { capacity } => {
+                write!(f, "no free slots (capacity {capacity})")
+            }
+            EngineError::StreamClosed(id) => write!(f, "stream {} is closed or unknown", id.0),
+            EngineError::Backpressure(id) => {
+                write!(f, "stream {} queue full (backpressure)", id.0)
+            }
+            EngineError::ShuttingDown => write!(f, "engine is shutting down"),
+            EngineError::Timeout => write!(f, "timed out waiting for a tick result"),
+            EngineError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            EngineError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            EngineError::Internal(m) => write!(f, "engine internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// RAII handle to one open stream: push tokens, receive tick results,
+/// and close on drop. Obtained from `EngineHandle::open`; the session
+/// owns the stream's front-door binding for its whole lifetime, so a
+/// client that unwinds (panic, early return) cannot leak its slot.
+pub struct Session {
+    id: StreamId,
+    rx: Receiver<TickResult>,
+    handle: EngineHandle,
+    closed: bool,
+}
+
+impl Session {
+    pub(crate) fn attach(id: StreamId, rx: Receiver<TickResult>, handle: EngineHandle) -> Self {
+        Self { id, rx, handle, closed: false }
+    }
+
+    /// The cluster-unique stream id (for logs, metrics correlation, and
+    /// migration requests).
+    pub fn id(&self) -> StreamId {
+        self.id
+    }
+
+    /// Submit the next token vector (`m_tokens * d_in` f32s). Routed to
+    /// the stream's current shard — transparently follows a live
+    /// migration.
+    pub fn push(&self, tokens: Vec<f32>) -> Result<(), EngineError> {
+        self.handle.push_raw(self.id, tokens)
+    }
+
+    /// Block for the next tick result. Errors with
+    /// [`EngineError::StreamClosed`] once the stream is torn down
+    /// (evicted, or the engine shut down).
+    pub fn recv(&self) -> Result<TickResult, EngineError> {
+        self.rx.recv().map_err(|_| EngineError::StreamClosed(self.id))
+    }
+
+    /// Block for the next tick result up to `timeout`.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<TickResult, EngineError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Timeout) => Err(EngineError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(EngineError::StreamClosed(self.id)),
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` when no result is ready yet.
+    pub fn try_recv(&self) -> Result<Option<TickResult>, EngineError> {
+        match self.rx.try_recv() {
+            Ok(r) => Ok(Some(r)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(EngineError::StreamClosed(self.id)),
+        }
+    }
+
+    /// Close the stream now (equivalent to dropping the session, but
+    /// explicit at call sites that care about ordering).
+    pub fn close(mut self) {
+        self.closed = true;
+        self.handle.close_raw(self.id);
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if !self.closed {
+            self.handle.close_raw(self.id);
+        }
+    }
+}
+
+impl fmt::Debug for Session {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Session({})", self.id.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_render_operator_messages() {
+        assert_eq!(
+            EngineError::Saturated { capacity: 4 }.to_string(),
+            "no free slots (capacity 4)"
+        );
+        assert_eq!(
+            EngineError::StreamClosed(StreamId(7)).to_string(),
+            "stream 7 is closed or unknown"
+        );
+        assert_eq!(
+            EngineError::Backpressure(StreamId(3)).to_string(),
+            "stream 3 queue full (backpressure)"
+        );
+        assert_eq!(EngineError::ShuttingDown.to_string(), "engine is shutting down");
+        assert!(EngineError::internal("boom").to_string().contains("boom"));
+    }
+
+    #[test]
+    fn errors_convert_into_anyhow() {
+        fn fallible() -> anyhow::Result<u32> {
+            Err(EngineError::ShuttingDown)?
+        }
+        assert!(fallible().unwrap_err().to_string().contains("shutting down"));
+    }
+}

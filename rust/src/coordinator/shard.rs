@@ -13,7 +13,7 @@
 //!                           ├→ Batcher (deadline / all-slots policy)
 //!   Router (slots) ─────────┘        │
 //!                                    ▼
-//!                  SlotStepper.tick (one batched step, all live lanes)
+//!                  SlotStepper.tick_lanes (one batched step, all live lanes)
 //!                                    │
 //!          per-stream output channels ← scatter lanes + metrics
 //!
@@ -21,22 +21,34 @@
 //! namespace), so a stream keeps its id no matter which shard it lands
 //! on; the shard's router only binds ids to batch lanes.
 //!
+//! **Live migration** rides on two extra requests. `Export` quiesces a
+//! stream in one atomic step of the shard loop: snapshot its lane
+//! ([`StreamState`]), pull its queued tokens out of the batcher, detach
+//! its output port, release the slot — and hand the whole
+//! [`ExportedStream`] to the front door. `Import` is the mirror image
+//! on the target shard: admit into a free slot, restore the lane,
+//! reattach the port (the client's receiver never notices), requeue the
+//! tokens. Because both run between ticks of their single-threaded
+//! shard loops, a snapshot can never be torn or go stale.
+//!
 //! Shutdown discipline: on [`ShardRequest::Shutdown`] the worker drains
 //! every request still queued in its channel and answers each with a
-//! terminal error (final metrics are still served) — a caller blocked
-//! on a reply is never left hanging, and queued pushes fail loudly
-//! instead of silently dropping their ticks.
+//! terminal [`EngineError::ShuttingDown`] (final metrics are still
+//! served) — a caller blocked on a reply is never left hanging, and
+//! queued pushes fail loudly instead of silently dropping their ticks.
+//!
+//! [`EngineError::ShuttingDown`]: crate::coordinator::session::EngineError::ShuttingDown
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
-
 use crate::config::{EngineBackend, EngineConfig};
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batcher, Pending};
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::router::{Admission, Router};
-use crate::coordinator::slot_stepper::SlotStepper;
+use crate::coordinator::session::EngineError;
+use crate::coordinator::slot_stepper::{SlotStepper, StreamState};
 use crate::coordinator::slots::StreamId;
 use crate::manifest::Manifest;
 use crate::nn::params::ModelParams;
@@ -45,9 +57,12 @@ use crate::runtime::Runtime;
 /// One tick's result delivered to a stream's owner.
 #[derive(Debug, Clone)]
 pub struct TickResult {
+    /// Classifier logits for the stream's newest token.
     pub logits: Vec<f32>,
+    /// Final-layer activations for the stream's new tokens.
     pub out: Vec<f32>,
-    /// Per-stream tick ordinal (1-based; counts only this stream's ticks).
+    /// Per-stream tick ordinal (1-based; counts only this stream's
+    /// ticks, and survives a live migration).
     pub tick: u64,
 }
 
@@ -56,15 +71,50 @@ pub struct TickResult {
 /// the victim's binding too — its owner may never close it).
 pub(crate) type Admitted = (Receiver<TickResult>, Option<StreamId>);
 
+/// Everything that travels with a stream when it migrates between
+/// shards: its lane snapshot, its output port (the client keeps the
+/// receiving end), its tick ordinal, and its still-queued tokens.
+pub(crate) struct ExportedStream {
+    pub(crate) state: StreamState,
+    pub(crate) port: Sender<TickResult>,
+    pub(crate) ticks: u64,
+    pub(crate) queued: Vec<Pending>,
+}
+
+/// A push failure, with the token vector handed back when the shard
+/// never accepted it (so the front door can retry after a migration
+/// rebind without cloning every push).
+pub(crate) type PushRejected = (EngineError, Option<Vec<f32>>);
+
+/// An import failure: the payload handed back when possible (so the
+/// front door can abort the migration by re-importing on the source),
+/// plus any idle victim admission evicted before the failure — the
+/// front door must still unbind the victim or its binding leaks.
+pub(crate) type ImportRejected = (EngineError, Option<Box<ExportedStream>>, Option<StreamId>);
+
 pub(crate) enum ShardRequest {
-    Open { id: StreamId, reply: Sender<Result<Admitted>> },
-    Push { id: StreamId, tokens: Vec<f32>, reply: Sender<Result<()>> },
+    Open { id: StreamId, reply: Sender<Result<Admitted, EngineError>> },
+    Push { id: StreamId, tokens: Vec<f32>, reply: Sender<Result<(), PushRejected>> },
     Close { id: StreamId },
+    Export { id: StreamId, reply: Sender<Result<Box<ExportedStream>, EngineError>> },
+    Import {
+        id: StreamId,
+        payload: Box<ExportedStream>,
+        /// True when this import undoes this shard's own failed export
+        /// (migration abort): the stream's return must not count as a
+        /// migration, so the export's `migrations_out` is un-counted
+        /// instead of `migrations_in` incremented.
+        rollback: bool,
+        reply: Sender<Result<Option<StreamId>, ImportRejected>>,
+    },
     Metrics { reply: Sender<EngineMetrics> },
     Shutdown,
 }
 
-/// Cloneable, `Send` handle to one shard's worker thread.
+/// Cloneable, `Send` handle to one shard's worker thread. Every
+/// channel failure (worker gone, reply dropped) surfaces as
+/// [`EngineError::ShuttingDown`] — a dead or panicked shard never
+/// panics its clients.
 #[derive(Clone)]
 pub(crate) struct ShardHandle {
     shard: usize,
@@ -74,33 +124,73 @@ pub(crate) struct ShardHandle {
 impl ShardHandle {
     /// Bind a front-door-assigned stream id; returns its output channel
     /// and the idle stream evicted to make room, if any.
-    pub(crate) fn open(&self, id: StreamId) -> Result<Admitted> {
+    pub(crate) fn open(&self, id: StreamId) -> Result<Admitted, EngineError> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(ShardRequest::Open { id, reply })
-            .map_err(|_| anyhow!("shard {} is gone", self.shard))?;
-        rx.recv().map_err(|_| anyhow!("shard {} dropped reply", self.shard))?
+            .map_err(|_| EngineError::ShuttingDown)?;
+        rx.recv().map_err(|_| EngineError::ShuttingDown)?
     }
 
     /// Submit the next token(s) for a stream bound to this shard.
-    pub(crate) fn push(&self, id: StreamId, tokens: Vec<f32>) -> Result<()> {
+    pub(crate) fn push(&self, id: StreamId, tokens: Vec<f32>) -> Result<(), PushRejected> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(ShardRequest::Push { id, tokens, reply })
-            .map_err(|_| anyhow!("shard {} is gone", self.shard))?;
-        rx.recv().map_err(|_| anyhow!("shard {} dropped reply", self.shard))?
+        if let Err(mpsc::SendError(req)) = self.tx.send(ShardRequest::Push { id, tokens, reply }) {
+            let tokens = match req {
+                ShardRequest::Push { tokens, .. } => Some(tokens),
+                _ => None,
+            };
+            return Err((EngineError::ShuttingDown, tokens));
+        }
+        rx.recv().map_err(|_| (EngineError::ShuttingDown, None))?
     }
 
     pub(crate) fn close(&self, id: StreamId) {
         let _ = self.tx.send(ShardRequest::Close { id });
     }
 
-    pub(crate) fn metrics(&self) -> Result<EngineMetrics> {
+    /// Quiesce + snapshot a stream for migration (removes it from this
+    /// shard on success).
+    pub(crate) fn export(&self, id: StreamId) -> Result<Box<ExportedStream>, EngineError> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(ShardRequest::Export { id, reply })
+            .map_err(|_| EngineError::ShuttingDown)?;
+        rx.recv().map_err(|_| EngineError::ShuttingDown)?
+    }
+
+    /// Land an exported stream on this shard (`rollback` = this is the
+    /// abort path undoing this shard's own export). On failure the
+    /// payload is returned (when recoverable) so the caller can
+    /// re-import it on the source shard.
+    pub(crate) fn import(
+        &self,
+        id: StreamId,
+        payload: Box<ExportedStream>,
+        rollback: bool,
+    ) -> Result<Option<StreamId>, ImportRejected> {
+        let (reply, rx) = mpsc::channel();
+        if let Err(mpsc::SendError(req)) =
+            self.tx.send(ShardRequest::Import { id, payload, rollback, reply })
+        {
+            let payload = match req {
+                ShardRequest::Import { payload, .. } => Some(payload),
+                _ => None,
+            };
+            return Err((EngineError::ShuttingDown, payload, None));
+        }
+        match rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err((EngineError::ShuttingDown, None, None)),
+        }
+    }
+
+    pub(crate) fn metrics(&self) -> Result<EngineMetrics, EngineError> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(ShardRequest::Metrics { reply })
-            .map_err(|_| anyhow!("shard {} is gone", self.shard))?;
-        rx.recv().map_err(|_| anyhow!("shard {} dropped reply", self.shard))
+            .map_err(|_| EngineError::ShuttingDown)?;
+        rx.recv().map_err(|_| EngineError::ShuttingDown)
     }
 
     pub(crate) fn signal_shutdown(&self) {
@@ -111,20 +201,21 @@ impl ShardHandle {
 pub(crate) struct ShardThread {
     handle: ShardHandle,
     /// Startup signal, consumed by [`Self::wait_ready`].
-    ready: Option<Receiver<Result<()>>>,
-    join: Option<std::thread::JoinHandle<Result<()>>>,
+    ready: Option<Receiver<Result<(), EngineError>>>,
+    join: Option<std::thread::JoinHandle<Result<(), EngineError>>>,
 }
 
 impl ShardThread {
     /// Start one shard worker WITHOUT waiting for its backend: the
     /// cluster starts every shard first and then waits on all of them,
     /// so N shards load their models in parallel instead of serially.
-    pub(crate) fn start(shard: usize, cfg: EngineConfig) -> Result<Self> {
+    pub(crate) fn start(shard: usize, cfg: EngineConfig) -> Result<Self, EngineError> {
         let (tx, rx) = mpsc::sync_channel::<ShardRequest>(cfg.request_queue);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), EngineError>>();
         let join = std::thread::Builder::new()
             .name(format!("deepcot-shard-{shard}"))
-            .spawn(move || shard_main(shard, cfg, rx, ready_tx))?;
+            .spawn(move || shard_main(shard, cfg, rx, ready_tx))
+            .map_err(EngineError::internal)?;
         Ok(Self {
             handle: ShardHandle { shard, tx },
             ready: Some(ready_rx),
@@ -134,11 +225,9 @@ impl ShardThread {
 
     /// Block until the shard's model is loaded and the backend is up
     /// (so the first Push never pays compile latency). Idempotent.
-    pub(crate) fn wait_ready(&mut self) -> Result<()> {
+    pub(crate) fn wait_ready(&mut self) -> Result<(), EngineError> {
         match self.ready.take() {
-            Some(rx) => rx
-                .recv()
-                .map_err(|_| anyhow!("shard {} died during startup", self.handle.shard))?,
+            Some(rx) => rx.recv().map_err(|_| EngineError::ShuttingDown)?,
             None => Ok(()),
         }
     }
@@ -151,12 +240,17 @@ impl ShardThread {
         self.handle.signal_shutdown();
     }
 
-    pub(crate) fn join(&mut self) -> Result<()> {
-        if let Some(j) = self.join.take() {
-            j.join()
-                .map_err(|_| anyhow!("shard {} panicked", self.handle.shard))??;
+    pub(crate) fn join(&mut self) -> Result<(), EngineError> {
+        match self.join.take() {
+            None => Ok(()),
+            Some(j) => match j.join() {
+                Ok(res) => res,
+                Err(_) => Err(EngineError::Internal(format!(
+                    "shard {} panicked",
+                    self.handle.shard
+                ))),
+            },
         }
-        Ok(())
     }
 }
 
@@ -175,23 +269,24 @@ impl Drop for ShardThread {
 /// honors `cfg.slots_per_shard`; PJRT capacity is AOT-compiled, so an
 /// override there is an error (under `auto` it simply falls through to
 /// the scalar backend).
-fn init_stepper(cfg: &EngineConfig) -> Result<(Option<Runtime>, SlotStepper)> {
-    let pjrt = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper)> {
+fn init_stepper(cfg: &EngineConfig) -> Result<(Option<Runtime>, SlotStepper), EngineError> {
+    let pjrt = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper), EngineError> {
         if cfg.slots_per_shard != 0 {
-            bail!(
+            return Err(EngineError::InvalidRequest(
                 "per-shard slot capacity override requires the scalar backend \
                  (PJRT batch is AOT-compiled)"
-            );
+                    .to_string(),
+            ));
         }
-        let rt = Runtime::new(&cfg.artifacts_dir)?;
-        let variant = rt.load(&cfg.variant)?;
+        let rt = Runtime::new(&cfg.artifacts_dir).map_err(EngineError::internal)?;
+        let variant = rt.load(&cfg.variant).map_err(EngineError::internal)?;
         let stepper = SlotStepper::new(variant)?;
         Ok((Some(rt), stepper))
     };
-    let scalar = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper)> {
-        let (manifest, dir) = Manifest::load(&cfg.artifacts_dir)?;
-        let entry = manifest.variant(&cfg.variant)?;
-        let params = ModelParams::load(&dir, entry)?;
+    let scalar = |cfg: &EngineConfig| -> Result<(Option<Runtime>, SlotStepper), EngineError> {
+        let (manifest, dir) = Manifest::load(&cfg.artifacts_dir).map_err(EngineError::internal)?;
+        let entry = manifest.variant(&cfg.variant).map_err(EngineError::internal)?;
+        let params = ModelParams::load(&dir, entry).map_err(EngineError::internal)?;
         let capacity = if cfg.slots_per_shard != 0 {
             cfg.slots_per_shard
         } else {
@@ -203,7 +298,9 @@ fn init_stepper(cfg: &EngineConfig) -> Result<(Option<Runtime>, SlotStepper)> {
         EngineBackend::Pjrt => pjrt(cfg),
         EngineBackend::Scalar => scalar(cfg),
         EngineBackend::Auto => pjrt(cfg).or_else(|pe| {
-            scalar(cfg).map_err(|se| anyhow!("pjrt backend: {pe}; scalar fallback: {se}"))
+            scalar(cfg).map_err(|se| {
+                EngineError::Internal(format!("pjrt backend: {pe}; scalar fallback: {se}"))
+            })
         }),
     }
 }
@@ -213,20 +310,78 @@ struct StreamPort {
     ticks: u64,
 }
 
+/// The `Import` request body: validate → admit → restore lane → attach
+/// port → requeue tokens. Validation runs before admission so a bad
+/// snapshot cannot strand a half-admitted stream; on any failure the
+/// payload is handed back for the caller's abort path.
+#[allow(clippy::too_many_arguments)]
+fn import_stream(
+    id: StreamId,
+    payload: Box<ExportedStream>,
+    rollback: bool,
+    now: Instant,
+    stepper: &mut SlotStepper,
+    router: &mut Router,
+    batcher: &mut Batcher,
+    ports: &mut BTreeMap<StreamId, StreamPort>,
+    metrics: &mut EngineMetrics,
+) -> Result<Option<StreamId>, ImportRejected> {
+    if let Err(e) = stepper.validate_state(&payload.state) {
+        return Err((e, Some(payload), None));
+    }
+    let (adm, evicted) = router.admit(id, now);
+    if let Some(eid) = evicted {
+        // same teardown as an admission eviction on Open
+        batcher.forget(eid);
+        ports.remove(&eid);
+        metrics.streams_evicted += 1;
+    }
+    let slot = match adm {
+        Admission::Accepted(slot) => slot,
+        Admission::Rejected => {
+            metrics.admission_rejects += 1;
+            return Err((
+                EngineError::Saturated { capacity: router.capacity() },
+                Some(payload),
+                evicted,
+            ));
+        }
+    };
+    if let Err(e) = stepper.import_lane(slot, &payload.state) {
+        // validate_state keeps this path rare (third-party backends or
+        // geometry-total collisions); release the slot and let the
+        // caller abort, still reporting the victim admission evicted
+        router.close(id);
+        stepper.clear_lane(slot);
+        return Err((e, Some(payload), evicted));
+    }
+    let ExportedStream { port, ticks, queued, .. } = *payload;
+    ports.insert(id, StreamPort { out: port, ticks });
+    batcher.restore(id, queued);
+    if rollback {
+        // the stream never left: un-count the aborted export so failed
+        // migrations don't inflate this shard's in/out counters
+        metrics.migrations_out = metrics.migrations_out.saturating_sub(1);
+    } else {
+        metrics.migrations_in += 1;
+    }
+    Ok(evicted)
+}
+
 fn shard_main(
     shard: usize,
     cfg: EngineConfig,
     rx: Receiver<ShardRequest>,
-    ready: Sender<Result<()>>,
-) -> Result<()> {
+    ready: Sender<Result<(), EngineError>>,
+) -> Result<(), EngineError> {
     let (_rt, mut stepper) = match init_stepper(&cfg) {
         Ok(v) => {
             let _ = ready.send(Ok(()));
             v
         }
         Err(e) => {
-            let _ = ready.send(Err(anyhow!("{e}")));
-            bail!("shard {shard} init failed");
+            let _ = ready.send(Err(e.clone()));
+            return Err(e);
         }
     };
     // auto-fallback silently changes the latency class — always say
@@ -243,7 +398,7 @@ fn shard_main(
     };
     let mut router = Router::new(stepper.capacity(), cfg.idle_timeout);
     let mut batcher = Batcher::new(cfg.batch_deadline, cfg.max_queue_per_stream);
-    let mut ports: std::collections::BTreeMap<StreamId, StreamPort> = Default::default();
+    let mut ports: BTreeMap<StreamId, StreamPort> = Default::default();
     let mut metrics = EngineMetrics::new();
 
     loop {
@@ -276,27 +431,29 @@ fn shard_main(
                             }
                             Admission::Rejected => {
                                 metrics.admission_rejects += 1;
-                                Err(anyhow!(
-                                    "shard {shard}: no free slots (capacity {})",
-                                    router.capacity()
-                                ))
+                                Err(EngineError::Saturated { capacity: router.capacity() })
                             }
                         };
                         let _ = reply.send(res);
                     }
                     ShardRequest::Push { id, tokens, reply } => {
                         let res = if router.slot_of(id).is_none() {
-                            Err(anyhow!("unknown stream {id:?}"))
+                            // hand the tokens back: the stream may have
+                            // migrated and the front door will re-route
+                            Err((EngineError::StreamClosed(id), Some(tokens)))
                         } else if tokens.len() != lane_elems {
-                            Err(anyhow!(
-                                "expected {lane_elems} f32 tokens, got {}",
-                                tokens.len()
+                            Err((
+                                EngineError::InvalidRequest(format!(
+                                    "expected {lane_elems} f32 tokens, got {}",
+                                    tokens.len()
+                                )),
+                                None,
                             ))
                         } else if batcher.push(id, tokens, now) {
                             metrics.tokens_in += 1;
                             Ok(())
                         } else {
-                            Err(anyhow!("stream {id:?} queue full (backpressure)"))
+                            Err((EngineError::Backpressure(id), None))
                         };
                         let _ = reply.send(res);
                     }
@@ -310,6 +467,54 @@ fn shard_main(
                         }
                         batcher.forget(id);
                         ports.remove(&id);
+                    }
+                    ShardRequest::Export { id, reply } => {
+                        let res = match router.slot_of(id) {
+                            None => Err(EngineError::StreamClosed(id)),
+                            Some(slot) => {
+                                let mut state = StreamState::default();
+                                match (stepper.export_lane(slot, &mut state), ports.remove(&id)) {
+                                    (Ok(()), Some(port)) => {
+                                        router.close(id);
+                                        stepper.clear_lane(slot);
+                                        let queued = batcher.extract(id);
+                                        metrics.migrations_out += 1;
+                                        Ok(Box::new(ExportedStream {
+                                            state,
+                                            port: port.out,
+                                            ticks: port.ticks,
+                                            queued,
+                                        }))
+                                    }
+                                    (Ok(()), None) => Err(EngineError::Internal(format!(
+                                        "stream {} bound without an output port",
+                                        id.0
+                                    ))),
+                                    (Err(e), port) => {
+                                        // e.g. PJRT: stream stays serving
+                                        if let Some(p) = port {
+                                            ports.insert(id, p);
+                                        }
+                                        Err(e)
+                                    }
+                                }
+                            }
+                        };
+                        let _ = reply.send(res);
+                    }
+                    ShardRequest::Import { id, payload, rollback, reply } => {
+                        let res = import_stream(
+                            id,
+                            payload,
+                            rollback,
+                            now,
+                            &mut stepper,
+                            &mut router,
+                            &mut batcher,
+                            &mut ports,
+                            &mut metrics,
+                        );
+                        let _ = reply.send(res);
                     }
                     ShardRequest::Metrics { reply } => {
                         let _ = reply.send(metrics.clone());
@@ -332,7 +537,7 @@ fn shard_main(
                 metrics.queue_latency.record(now.duration_since(*enq));
             }
             let t0 = Instant::now();
-            let lanes = stepper.tick(&plan)?;
+            let lanes = stepper.tick_lanes(&plan)?;
             metrics.tick_latency.record(t0.elapsed());
             metrics.ticks += 1;
             let done = Instant::now();
@@ -353,20 +558,29 @@ fn shard_main(
 }
 
 /// Post-shutdown drain: answer every request still queued with a
-/// terminal error so no caller is left blocked on a reply channel
-/// (metrics requests are still served the final snapshot). Requests
-/// arriving after the drain observes an empty queue get the generic
-/// disconnected-channel error when the receiver drops.
-fn drain(shard: usize, rx: &Receiver<ShardRequest>, metrics: &EngineMetrics) -> Result<()> {
+/// terminal [`EngineError::ShuttingDown`] so no caller is left blocked
+/// on a reply channel (metrics requests are still served the final
+/// snapshot). Requests arriving after the drain observes an empty
+/// queue get the generic disconnected-channel error when the receiver
+/// drops.
+fn drain(
+    _shard: usize,
+    rx: &Receiver<ShardRequest>,
+    metrics: &EngineMetrics,
+) -> Result<(), EngineError> {
     loop {
         match rx.try_recv() {
             Ok(ShardRequest::Open { reply, .. }) => {
-                let _ = reply.send(Err(anyhow!("shard {shard} is shutting down")));
+                let _ = reply.send(Err(EngineError::ShuttingDown));
             }
             Ok(ShardRequest::Push { reply, .. }) => {
-                let _ = reply.send(Err(anyhow!(
-                    "shard {shard} shut down before this push was served"
-                )));
+                let _ = reply.send(Err((EngineError::ShuttingDown, None)));
+            }
+            Ok(ShardRequest::Export { reply, .. }) => {
+                let _ = reply.send(Err(EngineError::ShuttingDown));
+            }
+            Ok(ShardRequest::Import { payload, reply, .. }) => {
+                let _ = reply.send(Err((EngineError::ShuttingDown, Some(payload), None)));
             }
             Ok(ShardRequest::Metrics { reply }) => {
                 let _ = reply.send(metrics.clone());

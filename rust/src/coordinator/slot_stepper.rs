@@ -1,5 +1,6 @@
-//! Batched continual stepper with per-lane stream state, over either of
-//! two backends behind one [`SlotStepper`] front:
+//! The backend layer: the [`StreamBackend`] trait — batched continual
+//! stepping with per-lane stream state — and the two built-in
+//! implementations behind the [`SlotStepper`] front:
 //!
 //! * **PJRT** — the batched AOT executable; state is mirrored host-side
 //!   (the CPU PJRT feedback path round-trips through the host anyway),
@@ -11,6 +12,10 @@
 //!   whole coordinator — admission, batching, masking, churn — serves
 //!   real traffic with no device runtime at all.
 //!
+//! Third-party backends implement [`StreamBackend`] and plug in via
+//! [`SlotStepper::from_backend`] — the shard loop and the cluster never
+//! name a concrete backend.
+//!
 //! Lane semantics are identical across backends:
 //!   * masked lanes — a stream that skipped this tick keeps its previous
 //!     K/V memory (the rolled output / ring push for that lane is
@@ -18,14 +23,23 @@
 //!   * lane recycling — releasing a slot zeroes its lane, giving the
 //!     next stream a cold memory.
 //!
+//! **Stream state is a value.** A lane's entire serving identity — its
+//! K/V ring contents, ring write heads, and position clock — exports
+//! into a portable [`StreamState`] snapshot and imports into any free
+//! lane of any backend instance with the same geometry, producing
+//! bitwise-identical subsequent ticks. On the scalar backend this is a
+//! memcpy of the ring storage; it is what live stream migration between
+//! shards is built on. The PJRT backend reports
+//! [`EngineError::Unsupported`] until the AOT step variants accept
+//! per-lane position inputs (see ROADMAP).
+//!
 //! Positions: the scalar backend keeps a per-lane position clock — a
 //! stream's clock starts at 0 when its slot is bound and advances only
 //! on the ticks it participates in, so its RoPE phases depend on
 //! nothing but its own history (the property the cluster's cross-shard
-//! bitwise-equivalence tests pin down). The PJRT backend still runs on
-//! the shared engine clock (RoPE's relative-offset property makes
-//! attention invariant to the common shift) until the AOT step variants
-//! accept a vector `pos` input — see ROADMAP.
+//! bitwise-equivalence and migration tests pin down). The PJRT backend
+//! still runs on the shared engine clock (RoPE's relative-offset
+//! property makes attention invariant to the common shift).
 //!
 //! Capacity: the scalar backend's lane count is a constructor argument
 //! (`new_scalar_with_capacity`), letting a shard size its slot budget
@@ -37,6 +51,7 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::TickPlan;
+use crate::coordinator::session::EngineError;
 use crate::coordinator::slots::StreamId;
 use crate::manifest::{ModelConfig, VariantEntry};
 use crate::nn::batched::BatchedScalarDeepCoT;
@@ -46,32 +61,89 @@ use crate::runtime::{HostTensor, LoadedVariant};
 
 /// Per-lane tick results.
 pub struct LaneOut {
+    /// Batch lane the stream ticked on.
     pub slot: usize,
+    /// The stream that owns the lane this tick.
     pub stream: StreamId,
+    /// Classifier logits for the lane's newest token.
     pub logits: Vec<f32>,
+    /// Final-layer activations for the lane's new tokens.
     pub out: Vec<f32>,
 }
 
-/// Backend-dispatching batched stepper.
-pub struct SlotStepper {
-    backend: Backend,
+/// A portable snapshot of one stream's serving state — the stream's
+/// whole identity as a value. Exporting a lane and importing the
+/// snapshot into any same-geometry lane (same or different backend
+/// instance, same or different shard) resumes the stream with
+/// bitwise-identical outputs.
+///
+/// Buffers are reused across exports: `export_lane` clears and refills
+/// them, so a caller that keeps one `StreamState` scratch performs no
+/// steady-state heap allocation after the first export.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamState {
+    /// Raw K/V ring storage: all K rings in `(layer, head)` order, then
+    /// all V rings, each `mem_len * d_head` f32s of physical (not
+    /// logically rotated) storage.
+    pub kv_rings: Vec<f32>,
+    /// Per-ring physical write-head index, aligned with `kv_rings`.
+    pub write_heads: Vec<usize>,
+    /// The stream's position clock (RoPE phase of its next token).
+    pub pos: i32,
 }
 
-enum Backend {
-    Pjrt(PjrtSlotStepper),
-    Scalar(ScalarSlotStepper),
+/// A pluggable execution backend: steps all lanes of one batched
+/// continual model and exposes per-lane state as portable snapshots.
+/// Implementations live on the shard worker thread that created them
+/// (no `Send` bound — the PJRT backend holds `Rc` runtime handles).
+pub trait StreamBackend {
+    /// Short backend name for logs ("scalar", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// The served model geometry.
+    fn config(&self) -> &ModelConfig;
+
+    /// Number of batch lanes (the shard's slot budget).
+    fn capacity(&self) -> usize;
+
+    /// Zero a lane's state (stream released / new stream admitted).
+    fn clear_lane(&mut self, lane: usize);
+
+    /// Run one batched tick for the planned lanes.
+    fn tick_lanes(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>, EngineError>;
+
+    /// Check that a snapshot matches this backend's geometry without
+    /// touching any lane (run before admission on the import path, so
+    /// a bad snapshot cannot strand a half-admitted stream).
+    fn validate_state(&self, state: &StreamState) -> Result<(), EngineError>;
+
+    /// Snapshot a lane's full stream state into `into` (buffers are
+    /// cleared and refilled — reuse one scratch `StreamState` to keep
+    /// the path allocation-free).
+    fn export_lane(&self, lane: usize, into: &mut StreamState) -> Result<(), EngineError>;
+
+    /// Restore a lane from a snapshot; the lane then ticks
+    /// bitwise-identically to the exported stream.
+    fn import_lane(&mut self, lane: usize, state: &StreamState) -> Result<(), EngineError>;
+}
+
+/// Backend-dispatching batched stepper: a thin owner of a boxed
+/// [`StreamBackend`] with constructors for the two built-in backends.
+pub struct SlotStepper {
+    backend: Box<dyn StreamBackend>,
 }
 
 impl SlotStepper {
     /// Batched PJRT backend over a loaded step variant.
-    pub fn new(variant: Rc<LoadedVariant>) -> Result<Self> {
-        Ok(Self { backend: Backend::Pjrt(PjrtSlotStepper::new(variant)?) })
+    pub fn new(variant: Rc<LoadedVariant>) -> Result<Self, EngineError> {
+        let b = PjrtSlotStepper::new(variant).map_err(EngineError::internal)?;
+        Ok(Self { backend: Box::new(b) })
     }
 
     /// Pure-Rust scalar backend from a manifest entry + host weights
     /// (no PJRT client, no XLA shared library), at the variant's
     /// compiled batch size.
-    pub fn new_scalar(entry: &VariantEntry, params: ModelParams) -> Result<Self> {
+    pub fn new_scalar(entry: &VariantEntry, params: ModelParams) -> Result<Self, EngineError> {
         Self::new_scalar_with_capacity(entry, params, entry.config.batch)
     }
 
@@ -81,45 +153,56 @@ impl SlotStepper {
         entry: &VariantEntry,
         params: ModelParams,
         capacity: usize,
-    ) -> Result<Self> {
-        Ok(Self { backend: Backend::Scalar(ScalarSlotStepper::new(entry, params, capacity)?) })
+    ) -> Result<Self, EngineError> {
+        let b = ScalarSlotStepper::new(entry, params, capacity).map_err(EngineError::internal)?;
+        Ok(Self { backend: Box::new(b) })
     }
 
+    /// Wrap a custom [`StreamBackend`] implementation — the extension
+    /// point for third-party backends; the coordinator needs nothing
+    /// else from them.
+    pub fn from_backend(backend: Box<dyn StreamBackend>) -> Self {
+        Self { backend }
+    }
+
+    /// Short backend name for logs.
     pub fn backend_name(&self) -> &'static str {
-        match &self.backend {
-            Backend::Pjrt(_) => "pjrt",
-            Backend::Scalar(_) => "scalar",
-        }
+        self.backend.name()
     }
 
+    /// The served model geometry.
     pub fn config(&self) -> &ModelConfig {
-        match &self.backend {
-            Backend::Pjrt(s) => &s.variant.entry.config,
-            Backend::Scalar(s) => &s.cfg,
-        }
+        self.backend.config()
     }
 
+    /// Number of batch lanes (the shard's slot budget).
     pub fn capacity(&self) -> usize {
-        match &self.backend {
-            Backend::Pjrt(s) => s.variant.entry.config.batch,
-            Backend::Scalar(s) => s.capacity,
-        }
+        self.backend.capacity()
     }
 
     /// Zero a lane's state (stream released / new stream admitted).
     pub fn clear_lane(&mut self, lane: usize) {
-        match &mut self.backend {
-            Backend::Pjrt(s) => s.clear_lane(lane),
-            Backend::Scalar(s) => s.clear_lane(lane),
-        }
+        self.backend.clear_lane(lane);
     }
 
     /// Run one batched tick for the planned lanes.
-    pub fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
-        match &mut self.backend {
-            Backend::Pjrt(s) => s.tick(plan),
-            Backend::Scalar(s) => s.tick(plan),
-        }
+    pub fn tick_lanes(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>, EngineError> {
+        self.backend.tick_lanes(plan)
+    }
+
+    /// Check a snapshot against this backend's geometry.
+    pub fn validate_state(&self, state: &StreamState) -> Result<(), EngineError> {
+        self.backend.validate_state(state)
+    }
+
+    /// Snapshot a lane's stream state into `into` (buffer-reusing).
+    pub fn export_lane(&self, lane: usize, into: &mut StreamState) -> Result<(), EngineError> {
+        self.backend.export_lane(lane, into)
+    }
+
+    /// Restore a lane from a snapshot.
+    pub fn import_lane(&mut self, lane: usize, state: &StreamState) -> Result<(), EngineError> {
+        self.backend.import_lane(lane, state)
     }
 }
 
@@ -135,7 +218,8 @@ struct ScalarSlotStepper {
     tokens: Mat,
     live: Vec<bool>,
     /// Per-lane stream position clocks: rewound when a slot is cleared,
-    /// advanced by m_tokens for every tick the lane participates in.
+    /// advanced by m_tokens for every tick the lane participates in,
+    /// overwritten by an imported snapshot's clock.
     lane_pos: Vec<i32>,
 }
 
@@ -166,12 +250,7 @@ impl ScalarSlotStepper {
         })
     }
 
-    fn clear_lane(&mut self, lane: usize) {
-        self.model.reset_lane(lane);
-        self.lane_pos[lane] = 0;
-    }
-
-    fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
+    fn tick_impl(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
         let (b, m, d_in) = (self.capacity, self.cfg.m_tokens, self.cfg.d_in);
         let lane_elems = m * d_in;
         self.live.iter_mut().for_each(|v| *v = false);
@@ -202,6 +281,70 @@ impl ScalarSlotStepper {
             self.lane_pos[*slot] += m as i32;
         }
         Ok(res)
+    }
+}
+
+impl StreamBackend for ScalarSlotStepper {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn clear_lane(&mut self, lane: usize) {
+        self.model.reset_lane(lane);
+        self.lane_pos[lane] = 0;
+    }
+
+    fn tick_lanes(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>, EngineError> {
+        self.tick_impl(plan).map_err(EngineError::internal)
+    }
+
+    fn validate_state(&self, state: &StreamState) -> Result<(), EngineError> {
+        if state.write_heads.len() != self.model.rings_per_lane()
+            || state.kv_rings.len() != self.model.floats_per_lane()
+        {
+            return Err(EngineError::InvalidRequest(format!(
+                "snapshot geometry mismatch: {} rings / {} floats, backend expects {} / {}",
+                state.write_heads.len(),
+                state.kv_rings.len(),
+                self.model.rings_per_lane(),
+                self.model.floats_per_lane()
+            )));
+        }
+        Ok(())
+    }
+
+    fn export_lane(&self, lane: usize, into: &mut StreamState) -> Result<(), EngineError> {
+        if lane >= self.capacity {
+            return Err(EngineError::InvalidRequest(format!(
+                "lane {lane} out of range (capacity {})",
+                self.capacity
+            )));
+        }
+        self.model.export_lane(lane, &mut into.kv_rings, &mut into.write_heads);
+        into.pos = self.lane_pos[lane];
+        Ok(())
+    }
+
+    fn import_lane(&mut self, lane: usize, state: &StreamState) -> Result<(), EngineError> {
+        if lane >= self.capacity {
+            return Err(EngineError::InvalidRequest(format!(
+                "lane {lane} out of range (capacity {})",
+                self.capacity
+            )));
+        }
+        self.model
+            .import_lane(lane, &state.kv_rings, &state.write_heads)
+            .map_err(|e| EngineError::InvalidRequest(e.to_string()))?;
+        self.lane_pos[lane] = state.pos;
+        Ok(())
     }
 }
 
@@ -249,16 +392,7 @@ impl PjrtSlotStepper {
             .collect()
     }
 
-    fn clear_lane(&mut self, lane: usize) {
-        for si in 0..self.state.len() {
-            let shape = self.state[si].shape.clone();
-            for r in self.lane_ranges(&shape, lane) {
-                self.state[si].data[r].iter_mut().for_each(|v| *v = 0.0);
-            }
-        }
-    }
-
-    fn tick(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
+    fn tick_impl(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>> {
         let variant = self.variant.clone(); // Rc bump
         let entry = &variant.entry;
         let cfg = &entry.config;
@@ -291,7 +425,10 @@ impl PjrtSlotStepper {
                     if spec.name == "tokens" {
                         variant.upload_f32_ref(&tokens)?
                     } else {
-                        let st = state_iter.next().expect("state tensor order");
+                        let st = match state_iter.next() {
+                            Some(st) => st,
+                            None => bail!("manifest state inputs exceed the wiring order"),
+                        };
                         variant.upload_f32_ref(st)?
                     }
                 }
@@ -328,7 +465,10 @@ impl PjrtSlotStepper {
         let out = variant.literal_to_host(1, &parts[1])?;
         let logits = &logits;
         let out = &out;
-        let c = *logits.shape.last().unwrap();
+        let c = match logits.shape.last() {
+            Some(&c) => c,
+            None => bail!("logits output has no shape"),
+        };
         let od: usize = out.shape[1..].iter().product();
         let mut res = Vec::with_capacity(plan.lanes.len());
         for (slot, stream, _, _) in &plan.lanes {
@@ -340,5 +480,52 @@ impl PjrtSlotStepper {
             });
         }
         Ok(res)
+    }
+}
+
+/// Snapshot export/import needs per-lane position clocks, which the
+/// PJRT AOT step variants don't take yet (shared scalar `pos` input) —
+/// a lane moved between engines with different shared clocks would
+/// replay wrong RoPE phases. Surfaced as a typed error so migration
+/// aborts cleanly with the stream intact on its source shard.
+const PJRT_SNAPSHOT_UNSUPPORTED: &str =
+    "PJRT backend cannot snapshot streams until AOT step variants take per-lane positions";
+
+impl StreamBackend for PjrtSlotStepper {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.variant.entry.config
+    }
+
+    fn capacity(&self) -> usize {
+        self.variant.entry.config.batch
+    }
+
+    fn clear_lane(&mut self, lane: usize) {
+        for si in 0..self.state.len() {
+            let shape = self.state[si].shape.clone();
+            for r in self.lane_ranges(&shape, lane) {
+                self.state[si].data[r].iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+    }
+
+    fn tick_lanes(&mut self, plan: &TickPlan) -> Result<Vec<LaneOut>, EngineError> {
+        self.tick_impl(plan).map_err(EngineError::internal)
+    }
+
+    fn validate_state(&self, _state: &StreamState) -> Result<(), EngineError> {
+        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED))
+    }
+
+    fn export_lane(&self, _lane: usize, _into: &mut StreamState) -> Result<(), EngineError> {
+        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED))
+    }
+
+    fn import_lane(&mut self, _lane: usize, _state: &StreamState) -> Result<(), EngineError> {
+        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED))
     }
 }

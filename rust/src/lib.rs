@@ -11,8 +11,10 @@
 //! Quick tour:
 //! - [`runtime`] — PJRT client, manifest-driven executable loading,
 //!   continual [`runtime::Stepper`]s with device-resident state.
-//! - [`coordinator`] — the serving engine: router, slot batcher, tick
-//!   scheduler, metrics.
+//! - [`coordinator`] — the serving engine: RAII stream sessions over
+//!   typed errors, router, slot batcher, tick scheduler, pluggable
+//!   `StreamBackend`s with portable stream-state snapshots, live
+//!   cross-shard migration, metrics.
 //! - [`baselines`] — the paper's comparison systems behind one
 //!   [`baselines::StreamModel`] trait (regular encoder, Continual
 //!   Transformer, Nyströmformer, FNet, DeepCoT, DeepCoT-XL, MAT-SED

@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use deepcot::config::EngineConfig;
-use deepcot::coordinator::engine::EngineThread;
+use deepcot::coordinator::engine::{EngineThread, Session};
 use deepcot::manifest::Manifest;
 use deepcot::util::cli::Cli;
 use deepcot::util::rng::Rng;
@@ -61,17 +61,17 @@ fn main() -> Result<()> {
         let h = engine.handle();
         clients.push(std::thread::spawn(move || -> Result<(u64, Duration)> {
             let mut rng = Rng::new(seed ^ ((s as u64) << 17));
-            let (id, rx) = h.open()?;
+            let sess: Session = h.open()?;
             let mut got = 0u64;
             let mut lat = Duration::ZERO;
             for _ in 0..ticks {
                 let sent = Instant::now();
-                h.push(id, rng.normal_vec(lane, 1.0))?;
-                let _out = rx.recv_timeout(Duration::from_secs(30))?;
+                sess.push(rng.normal_vec(lane, 1.0))?;
+                let _out = sess.recv_timeout(Duration::from_secs(30))?;
                 lat += sent.elapsed();
                 got += 1;
             }
-            h.close(id);
+            sess.close();
             Ok((got, lat))
         }));
     }

@@ -156,6 +156,74 @@ impl BatchedScalarDeepCoT {
         self.lane_pos[lane]
     }
 
+    /// Rings per lane snapshot (K rings + V rings, one per layer/head).
+    pub fn rings_per_lane(&self) -> usize {
+        2 * self.cfg.n_layers * self.cfg.n_heads
+    }
+
+    /// f32 elements in one lane's full K/V snapshot.
+    pub fn floats_per_lane(&self) -> usize {
+        self.rings_per_lane() * self.cfg.mem_len() * self.cfg.d_head()
+    }
+
+    /// Copy one lane's K/V memory into flat snapshot buffers: `data`
+    /// receives the raw ring storage (all K rings in layer-major
+    /// `(layer, head)` order, then all V rings) and `heads` the
+    /// per-ring write-head indices. Both buffers are cleared and
+    /// refilled — reusing them across exports performs no heap
+    /// allocation once their capacity is established, so a migration
+    /// path can snapshot lanes without perturbing the zero-alloc
+    /// steady state.
+    pub fn export_lane(&self, lane: usize, data: &mut Vec<f32>, heads: &mut Vec<usize>) {
+        assert!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
+        data.clear();
+        heads.clear();
+        let per_lane = self.cfg.n_layers * self.cfg.n_heads;
+        let lo = lane * per_lane;
+        for ring in self.kmem[lo..lo + per_lane].iter().chain(&self.vmem[lo..lo + per_lane]) {
+            data.extend_from_slice(ring.raw());
+            heads.push(ring.head());
+        }
+    }
+
+    /// Restore one lane's K/V memory from an [`Self::export_lane`]
+    /// snapshot (possibly taken on a different instance with the same
+    /// geometry). The restored lane ticks bit-for-bit identically to
+    /// the exported one. Errors on a geometry mismatch; the lane is
+    /// untouched in that case.
+    pub fn import_lane(&mut self, lane: usize, data: &[f32], heads: &[usize]) -> Result<()> {
+        anyhow::ensure!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
+        anyhow::ensure!(
+            heads.len() == self.rings_per_lane(),
+            "snapshot has {} rings, lane expects {}",
+            heads.len(),
+            self.rings_per_lane()
+        );
+        anyhow::ensure!(
+            data.len() == self.floats_per_lane(),
+            "snapshot has {} floats, lane expects {}",
+            data.len(),
+            self.floats_per_lane()
+        );
+        let rows = self.cfg.mem_len();
+        for (i, &head) in heads.iter().enumerate() {
+            anyhow::ensure!(
+                head < rows || (rows == 0 && head == 0),
+                "snapshot ring {i} head {head} out of range ({rows} rows)"
+            );
+        }
+        let ring_elems = rows * self.cfg.d_head();
+        let per_lane = self.cfg.n_layers * self.cfg.n_heads;
+        let lo = lane * per_lane;
+        let rings = self.kmem[lo..lo + per_lane]
+            .iter_mut()
+            .chain(&mut self.vmem[lo..lo + per_lane]);
+        for (i, ring) in rings.enumerate() {
+            ring.restore(&data[i * ring_elems..(i + 1) * ring_elems], heads[i]);
+        }
+        Ok(())
+    }
+
     fn check_tokens(&self, tokens: &Mat) -> Result<()> {
         anyhow::ensure!(
             tokens.rows == self.lanes * self.cfg.m_tokens && tokens.cols == self.cfg.d_in,
@@ -330,5 +398,66 @@ impl BatchedScalarDeepCoT {
             }
         }
         Ok(StepOut { logits, out: x })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A lane exported mid-history and imported into a different lane
+    /// of a fresh instance must keep producing bitwise-identical
+    /// outputs — the property live migration is built on.
+    #[test]
+    fn lane_snapshot_roundtrips_bitwise() {
+        let cfg = ModelConfig::synthetic(16, 2, 2, 6);
+        let p = ModelParams::synthetic(&cfg, &mut Rng::new(7));
+        let d_in = cfg.d_in;
+        let mut a = BatchedScalarDeepCoT::with_lanes(cfg.clone(), p.clone(), 2);
+        let mut rng = Rng::new(99);
+        for _ in 0..5 {
+            let toks = Mat::from_vec(2, d_in, rng.normal_vec(2 * d_in, 1.0));
+            a.tick_all(&toks).unwrap();
+        }
+        let (mut data, mut heads) = (Vec::new(), Vec::new());
+        a.export_lane(1, &mut data, &mut heads);
+        assert_eq!(heads.len(), a.rings_per_lane());
+        assert_eq!(data.len(), a.floats_per_lane());
+        let pos = a.lane_pos(1);
+        let mut b = BatchedScalarDeepCoT::with_lanes(cfg.clone(), p, 2);
+        b.import_lane(0, &data, &heads).unwrap();
+        // the same next token on A lane 1 and B lane 0 must agree bitwise
+        let tok = rng.normal_vec(d_in, 1.0);
+        let mut atoks = Mat::zeros(2, d_in);
+        atoks.row_mut(1).copy_from_slice(&tok);
+        let mut btoks = Mat::zeros(2, d_in);
+        btoks.row_mut(0).copy_from_slice(&tok);
+        let (la, oa) = {
+            let s = a.tick_lanes(&atoks, &[false, true], &[0, pos]).unwrap();
+            (s.logits.row(1).to_vec(), s.out.row(1).to_vec())
+        };
+        let (lb, ob) = {
+            let s = b.tick_lanes(&btoks, &[true, false], &[pos, 0]).unwrap();
+            (s.logits.row(0).to_vec(), s.out.row(0).to_vec())
+        };
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&la), bits(&lb), "logits diverged after snapshot import");
+        assert_eq!(bits(&oa), bits(&ob), "activations diverged after snapshot import");
+    }
+
+    #[test]
+    fn import_rejects_geometry_mismatch() {
+        let cfg = ModelConfig::synthetic(16, 2, 2, 6);
+        let p = ModelParams::synthetic(&cfg, &mut Rng::new(7));
+        let mut m = BatchedScalarDeepCoT::with_lanes(cfg, p, 1);
+        let (mut data, mut heads) = (Vec::new(), Vec::new());
+        m.export_lane(0, &mut data, &mut heads);
+        assert!(m.import_lane(0, &data[1..], &heads).is_err(), "short data must fail");
+        assert!(m.import_lane(0, &data, &heads[1..]).is_err(), "short heads must fail");
+        let mut bad = heads.clone();
+        bad[0] = 999;
+        assert!(m.import_lane(0, &data, &bad).is_err(), "head out of range must fail");
+        m.import_lane(0, &data, &heads).unwrap();
     }
 }

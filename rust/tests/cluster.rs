@@ -1,10 +1,13 @@
-//! Cluster integration: sharding must be invisible to streams.
+//! Cluster integration: sharding AND live migration must be invisible
+//! to streams.
 //!
 //! The load-bearing property: a stream's `TickResult`s are
 //! **bitwise-identical** whether it serves on a 1-shard or an N-shard
-//! cluster, under steady traffic and under open/close churn. Per-lane
-//! position clocks (a stream's RoPE phases depend only on its own
-//! history) plus lane-local attention make this exact, not approximate.
+//! cluster, under steady traffic, under open/close churn, and across
+//! mid-run `migrate()` calls that move its state between shards.
+//! Per-lane position clocks (a stream's RoPE phases depend only on its
+//! own history) plus lane-local attention plus memcpy'd `StreamState`
+//! snapshots make this exact, not approximate.
 //!
 //! Hermetic: serves the `SyntheticServeSpec::default()` artifacts on
 //! the batched scalar backend — no XLA shared library, no
@@ -17,8 +20,7 @@ use std::sync::OnceLock;
 use std::time::Duration;
 
 use deepcot::config::{EngineBackend, EngineConfig};
-use deepcot::coordinator::engine::{EngineThread, TickResult};
-use deepcot::coordinator::slots::StreamId;
+use deepcot::coordinator::engine::{EngineError, EngineThread, Session, TickResult};
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::rng::Rng;
 
@@ -30,23 +32,22 @@ fn synth_artifacts() -> PathBuf {
 }
 
 fn cluster_cfg(shards: usize, slots_per_shard: usize) -> EngineConfig {
-    EngineConfig {
-        variant: SyntheticServeSpec::variant_name(1),
-        artifacts_dir: synth_artifacts(),
-        backend: EngineBackend::Scalar,
-        batch_deadline: Duration::from_millis(1),
-        shards,
-        slots_per_shard,
-        ..EngineConfig::default()
-    }
+    EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(shards)
+        .slots_per_shard(slots_per_shard)
+        .build()
 }
 
-fn recv_tick(rx: &std::sync::mpsc::Receiver<TickResult>) -> TickResult {
-    rx.recv_timeout(Duration::from_secs(30)).expect("tick result")
+fn recv_tick(sess: &Session) -> TickResult {
+    sess.recv_timeout(Duration::from_secs(30)).expect("tick result")
 }
 
 /// Compare two per-stream traces bit-for-bit (f32 equality is exact:
-/// sharding must not change a single ULP).
+/// neither sharding nor migration may change a single ULP).
 fn assert_bitwise(label: &str, a: &[Vec<TickResult>], b: &[Vec<TickResult>]) {
     assert_eq!(a.len(), b.len(), "{label}: stream count");
     for (s, (ta, tb)) in a.iter().zip(b).enumerate() {
@@ -69,25 +70,38 @@ fn assert_bitwise(label: &str, a: &[Vec<TickResult>], b: &[Vec<TickResult>]) {
 }
 
 /// Steady traffic: every stream ticks every round, driven serially.
-fn run_steady_trace(shards: usize, slots_per_shard: usize) -> Vec<Vec<TickResult>> {
+/// `migrate_at` entries `(round, stream_index)` hop that stream to the
+/// next shard (round-robin) before the given round.
+fn run_steady_trace(
+    shards: usize,
+    slots_per_shard: usize,
+    migrate_at: &[(usize, usize)],
+) -> Vec<Vec<TickResult>> {
     const STREAMS: usize = 6;
     const TICKS: usize = 8;
     let engine = EngineThread::spawn(cluster_cfg(shards, slots_per_shard)).unwrap();
     let h = engine.handle();
     let mut sessions = Vec::new();
     for s in 0..STREAMS {
-        let (id, rx) = h.open().unwrap();
-        sessions.push((id, rx, Rng::new(1000 + s as u64)));
+        let sess = h.open().unwrap();
+        sessions.push((sess, Rng::new(1000 + s as u64)));
     }
     let mut traces: Vec<Vec<TickResult>> = vec![Vec::new(); STREAMS];
-    for _round in 0..TICKS {
-        for (s, (id, rx, rng)) in sessions.iter_mut().enumerate() {
-            h.push(*id, rng.normal_vec(D_IN, 1.0)).unwrap();
-            traces[s].push(recv_tick(rx));
+    for round in 0..TICKS {
+        for &(r, s) in migrate_at {
+            if r == round {
+                let id = sessions[s].0.id();
+                let from = h.shard_of(id).expect("stream bound");
+                h.migrate(id, (from + 1) % shards).unwrap();
+            }
+        }
+        for (s, (sess, rng)) in sessions.iter_mut().enumerate() {
+            sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+            traces[s].push(recv_tick(sess));
         }
     }
-    for (id, _, _) in &sessions {
-        h.close(*id);
+    for (sess, _) in sessions {
+        sess.close();
     }
     engine.shutdown().unwrap();
     traces
@@ -95,20 +109,35 @@ fn run_steady_trace(shards: usize, slots_per_shard: usize) -> Vec<Vec<TickResult
 
 #[test]
 fn sharded_cluster_is_bitwise_identical_to_single_shard() {
-    let single = run_steady_trace(1, 6);
-    let quad = run_steady_trace(4, 2);
+    let single = run_steady_trace(1, 6, &[]);
+    let quad = run_steady_trace(4, 2, &[]);
     assert_bitwise("1 shard vs 4 shards", &single, &quad);
 }
 
+/// The acceptance property for live migration: a stream migrated
+/// between shards mid-run produces bitwise-identical `TickResult`s to
+/// an unmigrated run — under steady traffic here, under churn below.
+#[test]
+fn migrated_streams_are_bitwise_identical_steady() {
+    let reference = run_steady_trace(2, 6, &[]);
+    // stream 0 hops away and back; stream 3 hops once; stream 5 hops
+    // twice in consecutive rounds
+    let migrated = run_steady_trace(2, 6, &[(2, 0), (5, 0), (3, 3), (4, 5), (5, 5)]);
+    assert_bitwise("steady: migrated vs unmigrated", &reference, &migrated);
+    // and the whole cluster layout stays irrelevant
+    let single = run_steady_trace(1, 6, &[]);
+    assert_bitwise("steady: migrated vs 1 shard", &single, &migrated);
+}
+
 /// Open/close churn: streams open mid-run (on whichever shard placement
-/// picks), close, and hand their slots to successors. Each logical
-/// stream's trace must still be bitwise-independent of the layout.
-fn run_churn_trace(shards: usize, slots_per_shard: usize) -> Vec<Vec<TickResult>> {
+/// picks), close, and hand their slots to successors; optionally some
+/// survivors migrate mid-run. Each logical stream's trace must still be
+/// bitwise-independent of the layout and of any migrations.
+fn run_churn_trace(shards: usize, slots_per_shard: usize, migrate: bool) -> Vec<Vec<TickResult>> {
     const LOGICAL: usize = 6;
     let engine = EngineThread::spawn(cluster_cfg(shards, slots_per_shard)).unwrap();
     let h = engine.handle();
-    let mut sessions: Vec<Option<(StreamId, std::sync::mpsc::Receiver<TickResult>)>> =
-        (0..LOGICAL).map(|_| None).collect();
+    let mut sessions: Vec<Option<Session>> = (0..LOGICAL).map(|_| None).collect();
     let mut rngs: Vec<Rng> = (0..LOGICAL).map(|s| Rng::new(2000 + s as u64)).collect();
     let mut traces: Vec<Vec<TickResult>> = vec![Vec::new(); LOGICAL];
     for sess in sessions.iter_mut().take(4) {
@@ -118,25 +147,30 @@ fn run_churn_trace(shards: usize, slots_per_shard: usize) -> Vec<Vec<TickResult>
         if round == 4 {
             // L1/L3 leave; L4 takes a recycled slot mid-run
             for s in [1, 3] {
-                let (id, _rx) = sessions[s].take().unwrap();
-                h.close(id);
+                sessions[s].take().unwrap().close();
             }
             sessions[4] = Some(h.open().unwrap());
         }
         if round == 8 {
-            let (id, _rx) = sessions[0].take().unwrap();
-            h.close(id);
+            sessions[0].take().unwrap().close();
             sessions[5] = Some(h.open().unwrap());
         }
+        if migrate && (round == 3 || round == 9) {
+            // hop every live stream to its neighbor shard
+            for sess in sessions.iter().flatten() {
+                let from = h.shard_of(sess.id()).expect("stream bound");
+                h.migrate(sess.id(), (from + 1) % shards).unwrap();
+            }
+        }
         for ((sess, rng), trace) in sessions.iter().zip(rngs.iter_mut()).zip(traces.iter_mut()) {
-            if let Some((id, rx)) = sess {
-                h.push(*id, rng.normal_vec(D_IN, 1.0)).unwrap();
-                trace.push(recv_tick(rx));
+            if let Some(sess) = sess {
+                sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+                trace.push(recv_tick(sess));
             }
         }
     }
-    for sess in sessions.iter().flatten() {
-        h.close(sess.0);
+    for sess in sessions.into_iter().flatten() {
+        sess.close();
     }
     engine.shutdown().unwrap();
     traces
@@ -144,9 +178,9 @@ fn run_churn_trace(shards: usize, slots_per_shard: usize) -> Vec<Vec<TickResult>
 
 #[test]
 fn churned_streams_are_bitwise_identical_across_layouts() {
-    let single = run_churn_trace(1, 4);
-    let quad = run_churn_trace(4, 1);
-    let dual = run_churn_trace(2, 2);
+    let single = run_churn_trace(1, 4, false);
+    let quad = run_churn_trace(4, 1, false);
+    let dual = run_churn_trace(2, 2, false);
     // sanity: the schedule produced the intended tick counts
     assert_eq!(single[0].len(), 8);
     assert_eq!(single[1].len(), 4);
@@ -154,6 +188,135 @@ fn churned_streams_are_bitwise_identical_across_layouts() {
     assert_eq!(single[5].len(), 4);
     assert_bitwise("churn: 1 shard vs 4 shards", &single, &quad);
     assert_bitwise("churn: 1 shard vs 2 shards", &single, &dual);
+}
+
+#[test]
+fn migrated_streams_are_bitwise_identical_under_churn() {
+    let reference = run_churn_trace(1, 4, false);
+    // migration needs somewhere to hop: 2 shards with headroom
+    let migrated = run_churn_trace(2, 4, true);
+    assert_bitwise("churn: migrated vs unmigrated", &reference, &migrated);
+}
+
+/// Dropping a `Session` must close its stream and free the slot — the
+/// RAII contract.
+#[test]
+fn session_drop_closes_stream() {
+    let engine = EngineThread::spawn(cluster_cfg(1, 1)).unwrap();
+    let h = engine.handle();
+    let sess = h.open().unwrap();
+    let first_id = sess.id();
+    drop(sess);
+    // close is async; retry briefly until the slot frees
+    let mut reopened = None;
+    for _ in 0..50 {
+        match h.open() {
+            Ok(s) => {
+                reopened = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    let sess2 = reopened.expect("dropping the session must free its slot");
+    assert_ne!(sess2.id(), first_id, "ids are cluster-unique, never recycled");
+    let mut rng = Rng::new(3);
+    sess2.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+    recv_tick(&sess2);
+    let m = h.metrics().unwrap();
+    assert_eq!(m.streams_opened, 2);
+    assert_eq!(m.streams_closed, 1, "drop must register as a close");
+    sess2.close();
+    engine.shutdown().unwrap();
+}
+
+/// Migration bookkeeping: counters, per-shard in/out, loads, and the
+/// typed errors for bad requests.
+#[test]
+fn migration_metrics_and_errors() {
+    let engine = EngineThread::spawn(cluster_cfg(2, 2)).unwrap();
+    let h = engine.handle();
+    let a = h.open().unwrap();
+    let b = h.open().unwrap();
+    let mut rng = Rng::new(11);
+    for sess in [&a, &b] {
+        sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+        recv_tick(sess);
+    }
+    // put both streams on the same shard (at most one real move)
+    let target = h.shard_of(a.id()).unwrap();
+    let real_move = u64::from(h.shard_of(b.id()) != Some(target));
+    h.migrate(b.id(), target).unwrap();
+    assert_eq!(h.shard_of(b.id()), Some(target));
+    let loads = h.shard_loads();
+    assert_eq!(loads[target], 2, "both streams tracked on the target shard");
+    assert_eq!(loads[1 - target], 0);
+    // the migrated stream keeps serving
+    b.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+    let out = recv_tick(&b);
+    assert_eq!(out.tick, 2, "tick ordinal survives migration");
+    // typed errors: unknown stream / out-of-range target
+    let unknown = deepcot::coordinator::slots::StreamId(9999);
+    assert!(matches!(h.migrate(unknown, 0), Err(EngineError::StreamClosed(_))));
+    assert!(matches!(h.migrate(a.id(), 7), Err(EngineError::InvalidRequest(_))));
+    let m = h.metrics().unwrap();
+    // a same-shard migrate is an uncounted no-op, so every counter
+    // scales with whether b actually moved; the unknown-stream attempt
+    // counts as aborted; the out-of-range target is rejected before it
+    // becomes an attempt
+    assert_eq!(m.migrations_completed, real_move);
+    assert_eq!(m.migrations_attempted, real_move + 1);
+    assert_eq!(m.migrations_aborted, 1);
+    assert_eq!(
+        m.quiesce_latency.count(),
+        real_move,
+        "one quiesce window per completed migration"
+    );
+    let (ins, outs): (u64, u64) = m
+        .per_shard
+        .iter()
+        .fold((0, 0), |(i, o), s| (i + s.migrations_in, o + s.migrations_out));
+    assert_eq!((ins, outs), (real_move, real_move), "per-shard in/out must balance");
+    a.close();
+    b.close();
+    engine.shutdown().unwrap();
+}
+
+/// `rebalance` must walk streams off an overloaded shard until no shard
+/// holds ≥2 more than the lightest.
+#[test]
+fn rebalance_clears_load_skew() {
+    let engine = EngineThread::spawn(cluster_cfg(2, 4)).unwrap();
+    let h = engine.handle();
+    let sessions: Vec<Session> = (0..4).map(|_| h.open().unwrap()).collect();
+    let mut rng = Rng::new(21);
+    for sess in &sessions {
+        sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+        recv_tick(sess);
+    }
+    // skew everything onto shard 0
+    for sess in &sessions {
+        h.migrate(sess.id(), 0).unwrap();
+    }
+    assert_eq!(h.shard_loads(), vec![4, 0]);
+    let report = h.rebalance().unwrap();
+    assert_eq!(report.planned, 2, "4-0 balances with two moves");
+    assert_eq!(report.moved, 2);
+    assert_eq!(report.failed, 0);
+    assert_eq!(h.shard_loads(), vec![2, 2]);
+    // balanced cluster: rebalance is a no-op
+    let report = h.rebalance().unwrap();
+    assert_eq!(report, deepcot::coordinator::engine::RebalanceReport::default());
+    // every stream still serves, bitwise-correct ordinals included
+    for (i, sess) in sessions.iter().enumerate() {
+        sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+        let out = recv_tick(sess);
+        assert_eq!(out.tick, 2, "stream {i} lost ticks across rebalance");
+    }
+    for sess in sessions {
+        sess.close();
+    }
+    engine.shutdown().unwrap();
 }
 
 /// Concurrent smoke: a 4-shard cluster must serve parallel closed-loop
@@ -165,20 +328,19 @@ fn four_shard_cluster_serves_concurrent_clients() {
     // open all sessions up front so the per-shard placement assertions
     // below are deterministic (8 streams over 4x2 slots: exactly 2 per
     // shard by pigeonhole, regardless of client scheduling)
-    let sessions: Vec<_> = (0..8).map(|_| h.open().unwrap()).collect();
+    let sessions: Vec<Session> = (0..8).map(|_| h.open().unwrap()).collect();
     let mut clients = Vec::new();
-    for (s, (id, rx)) in sessions.into_iter().enumerate() {
-        let h = h.clone();
+    for (s, sess) in sessions.into_iter().enumerate() {
         clients.push(std::thread::spawn(move || {
             let mut rng = Rng::new(s as u64);
             for t in 0..20 {
-                h.push(id, rng.normal_vec(D_IN, 1.0)).unwrap();
-                let out = recv_tick(&rx);
+                sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+                let out = recv_tick(&sess);
                 assert_eq!(out.tick, t + 1);
                 assert!(out.logits.iter().all(|v| v.is_finite()));
                 assert!(out.out.iter().all(|v| v.is_finite()));
             }
-            h.close(id);
+            sess.close();
         }));
     }
     for c in clients {
@@ -198,73 +360,86 @@ fn four_shard_cluster_serves_concurrent_clients() {
 }
 
 /// A full primary shard hands the stream to a fallback; a fully
-/// saturated cluster rejects and says so in the metrics.
+/// saturated cluster rejects with the typed error and says so in the
+/// metrics.
 #[test]
 fn placement_falls_back_then_rejects_when_full() {
     let engine = EngineThread::spawn(cluster_cfg(2, 1)).unwrap();
     let h = engine.handle();
-    let (a, _rx_a) = h.open().unwrap();
-    let (b, _rx_b) = h.open().unwrap();
+    let a = h.open().unwrap();
+    let b = h.open().unwrap();
     let err = h.open().expect_err("third open must be rejected at 2x1 capacity");
-    assert!(err.to_string().contains("no free slots"), "unexpected error: {err}");
+    assert!(
+        matches!(err, EngineError::Saturated { capacity: 1 }),
+        "want Saturated, got: {err:?}"
+    );
+    // a saturated cluster also rejects migrations into it
+    let err = h
+        .migrate(a.id(), (h.shard_of(a.id()).unwrap() + 1) % 2)
+        .expect_err("migration into a full shard must abort");
+    assert!(matches!(err, EngineError::Saturated { .. }), "want Saturated, got: {err:?}");
     let m = h.metrics().unwrap();
     assert_eq!(m.placed_primary + m.placed_fallback, 2);
     assert_eq!(m.cluster_rejects, 1);
+    assert_eq!(m.migrations_aborted, 1);
     // the rejected open consulted every shard
     assert!(m.admission_rejects >= 2, "got {} shard-level rejects", m.admission_rejects);
-    h.close(a);
-    h.close(b);
+    // the aborted migration put the stream back: it must still serve
+    let mut rng = Rng::new(3);
+    a.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+    recv_tick(&a);
+    a.close();
+    b.close();
     // capacity returns after close (close is async; retry briefly)
     let mut reopened = None;
     for _ in 0..50 {
         match h.open() {
-            Ok(p) => {
-                reopened = Some(p);
+            Ok(s) => {
+                reopened = Some(s);
                 break;
             }
             Err(_) => std::thread::sleep(Duration::from_millis(10)),
         }
     }
-    let (c, rx_c) = reopened.expect("slot should free after close");
-    let mut rng = Rng::new(3);
-    h.push(c, rng.normal_vec(D_IN, 1.0)).unwrap();
-    recv_tick(&rx_c);
-    h.close(c);
+    let c = reopened.expect("slot should free after close");
+    c.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+    recv_tick(&c);
+    c.close();
     engine.shutdown().unwrap();
 }
 
 /// Idle eviction must tear the stream down everywhere: the victim's
 /// output channel disconnects, its front-door binding is reclaimed (a
-/// push to it fails at the front door), and a late close by its owner
-/// does not double-count it as closed on top of evicted.
+/// push on its session fails with the typed error), and a late close by
+/// its owner does not double-count it as closed on top of evicted.
 #[test]
 fn idle_eviction_reconciles_front_door_and_counts_once() {
     let mut cfg = cluster_cfg(1, 1);
     cfg.idle_timeout = Duration::from_millis(10);
     let engine = EngineThread::spawn(cfg).unwrap();
     let h = engine.handle();
-    let (a, rx_a) = h.open().unwrap();
+    let a = h.open().unwrap();
     std::thread::sleep(Duration::from_millis(30));
     // single slot, A idle past the timeout: this open evicts A
-    let (b, _rx_b) = h.open().unwrap();
+    let b = h.open().unwrap();
     assert!(
-        rx_a.recv_timeout(Duration::from_millis(200)).is_err(),
+        matches!(a.recv_timeout(Duration::from_millis(200)), Err(EngineError::StreamClosed(_))),
         "evicted stream's output channel must disconnect"
     );
-    let err = h.push(a, vec![0.0; D_IN]).expect_err("push to an evicted stream must fail");
-    assert!(err.to_string().contains("unknown stream"), "unexpected error: {err}");
-    h.close(a); // late close of the evicted stream: harmless no-op
+    let err = a.push(vec![0.0; D_IN]).expect_err("push on an evicted stream must fail");
+    assert!(matches!(err, EngineError::StreamClosed(_)), "want StreamClosed, got {err:?}");
+    a.close(); // late close of the evicted stream: harmless no-op
     let m = h.metrics().unwrap();
     assert_eq!(m.streams_opened, 2);
     assert_eq!(m.streams_evicted, 1);
     assert_eq!(m.streams_closed, 0, "evicted stream must not also count as closed");
-    h.close(b);
+    b.close();
     engine.shutdown().unwrap();
 }
 
-/// Shutdown must answer every in-flight push with a terminal error —
-/// never leave a producer blocked on a reply, never silently drop a
-/// queued tick without telling its owner.
+/// Shutdown must answer every in-flight push with a terminal typed
+/// error — never leave a producer blocked on a reply, never silently
+/// drop a queued tick without telling its owner.
 #[test]
 fn shutdown_drains_inflight_pushes_with_terminal_errors() {
     let engine = EngineThread::spawn(cluster_cfg(2, 2)).unwrap();
@@ -272,13 +447,13 @@ fn shutdown_drains_inflight_pushes_with_terminal_errors() {
     let mut producers = Vec::new();
     for s in 0..4u64 {
         let h = h.clone();
-        producers.push(std::thread::spawn(move || -> String {
+        producers.push(std::thread::spawn(move || -> EngineError {
             let mut rng = Rng::new(s);
-            let (id, _rx) = match h.open() {
-                Ok(pair) => pair,
+            let sess = match h.open() {
+                Ok(sess) => sess,
                 // a producer scheduled after shutdown sees the shard's
                 // terminal open error — a valid outcome for this test
-                Err(e) => return e.to_string(),
+                Err(e) => return e,
             };
             // fire-and-forget producer: never consumes results, so the
             // queue oscillates around the backpressure bound while the
@@ -286,28 +461,24 @@ fn shutdown_drains_inflight_pushes_with_terminal_errors() {
             // iteration bound only exists to end the test if shutdown
             // somehow never turns pushes terminal)
             for _ in 0..5_000_000u64 {
-                match h.push(id, rng.normal_vec(D_IN, 1.0)) {
+                match sess.push(rng.normal_vec(D_IN, 1.0)) {
                     Ok(()) => {}
-                    Err(e) => {
-                        let msg = e.to_string();
-                        if msg.contains("queue full") {
-                            std::thread::sleep(Duration::from_micros(50));
-                            continue;
-                        }
-                        return msg; // terminal: engine went away
+                    Err(EngineError::Backpressure(_)) => {
+                        std::thread::sleep(Duration::from_micros(50));
                     }
+                    Err(e) => return e, // terminal: engine went away
                 }
             }
-            "producer outlived the engine".to_string()
+            EngineError::Internal("producer outlived the engine".into())
         }));
     }
     std::thread::sleep(Duration::from_millis(50));
     engine.shutdown().unwrap();
     for p in producers {
-        let msg = p.join().expect("producer must not hang or panic");
+        let err = p.join().expect("producer must not hang or panic");
         assert!(
-            msg.contains("shut") || msg.contains("gone") || msg.contains("reply"),
-            "producer ended without a terminal shutdown error: {msg:?}"
+            matches!(err, EngineError::ShuttingDown | EngineError::StreamClosed(_)),
+            "producer ended without a terminal shutdown error: {err:?}"
         );
     }
 }

@@ -1,6 +1,7 @@
 //! Coordinator integration: the engine thread end-to-end — admission,
 //! batched ticks, masked lanes, churn, backpressure, and equivalence of
-//! batched vs single-stream serving.
+//! batched vs single-stream serving — all through the public `Session`
+//! API over typed `EngineError`s.
 //!
 //! Hermetic: a synthetic manifest + weights blob is written to a temp
 //! artifacts dir, and the engine runs on the batched **scalar** slot
@@ -14,7 +15,7 @@ use std::sync::OnceLock;
 use std::time::Duration;
 
 use deepcot::config::{EngineBackend, EngineConfig};
-use deepcot::coordinator::engine::EngineThread;
+use deepcot::coordinator::engine::{EngineError, EngineThread};
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::rng::Rng;
 
@@ -34,13 +35,12 @@ fn synth_artifacts() -> PathBuf {
 }
 
 fn engine_cfg(variant: &str) -> EngineConfig {
-    EngineConfig {
-        variant: variant.to_string(),
-        artifacts_dir: synth_artifacts(),
-        backend: EngineBackend::Scalar,
-        batch_deadline: Duration::from_millis(1),
-        ..EngineConfig::default()
-    }
+    EngineConfig::builder()
+        .variant(variant)
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .build()
 }
 
 #[test]
@@ -56,17 +56,17 @@ fn serves_multiple_streams_to_completion() {
         let h = h.clone();
         clients.push(std::thread::spawn(move || {
             let mut rng = Rng::new(s as u64);
-            let (id, rx) = h.open().unwrap();
+            let sess = h.open().unwrap();
             for t in 0..12 {
-                h.push(id, rng.normal_vec(D_IN, 1.0)).unwrap();
-                let out = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+                sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+                let out = sess.recv_timeout(Duration::from_secs(20)).unwrap();
                 assert_eq!(out.tick, t + 1);
                 assert_eq!(out.logits.len(), N_CLASSES);
                 assert!(out.logits.iter().all(|v| v.is_finite()));
                 assert_eq!(out.out.len(), D_MODEL);
                 assert!(out.out.iter().all(|v| v.is_finite()));
             }
-            h.close(id);
+            sess.close();
         }));
     }
     for c in clients {
@@ -84,8 +84,12 @@ fn serves_multiple_streams_to_completion() {
 fn admission_rejects_beyond_capacity() {
     let engine = EngineThread::spawn(engine_cfg("serve_deepcot_b1")).unwrap();
     let h = engine.handle();
-    let (_id, _rx) = h.open().unwrap();
-    assert!(h.open().is_err(), "second stream must be rejected on B=1");
+    let _sess = h.open().unwrap();
+    let err = h.open().expect_err("second stream must be rejected on B=1");
+    assert!(
+        matches!(err, EngineError::Saturated { capacity: 1 }),
+        "want Saturated, got {err:?}"
+    );
     let m = h.metrics().unwrap();
     assert_eq!(m.admission_rejects, 1);
     engine.shutdown().unwrap();
@@ -95,25 +99,25 @@ fn admission_rejects_beyond_capacity() {
 fn close_frees_slot_for_new_stream() {
     let engine = EngineThread::spawn(engine_cfg("serve_deepcot_b1")).unwrap();
     let h = engine.handle();
-    let (id, rx) = h.open().unwrap();
+    let sess = h.open().unwrap();
     let mut rng = Rng::new(9);
-    h.push(id, rng.normal_vec(D_IN, 1.0)).unwrap();
-    rx.recv_timeout(Duration::from_secs(20)).unwrap();
-    h.close(id);
+    sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+    sess.recv_timeout(Duration::from_secs(20)).unwrap();
+    sess.close();
     // slot must become available (close is async; retry briefly)
     let mut opened = None;
     for _ in 0..50 {
         match h.open() {
-            Ok(p) => {
-                opened = Some(p);
+            Ok(s) => {
+                opened = Some(s);
                 break;
             }
             Err(_) => std::thread::sleep(Duration::from_millis(10)),
         }
     }
-    let (id2, rx2) = opened.expect("slot should free after close");
-    h.push(id2, rng.normal_vec(D_IN, 1.0)).unwrap();
-    rx2.recv_timeout(Duration::from_secs(20)).unwrap();
+    let sess2 = opened.expect("slot should free after close");
+    sess2.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+    sess2.recv_timeout(Duration::from_secs(20)).unwrap();
     engine.shutdown().unwrap();
 }
 
@@ -137,24 +141,24 @@ fn paused_stream_matches_solo_serving() {
         cfg.batch_deadline = Duration::from_millis(250);
         let engine = EngineThread::spawn(cfg).unwrap();
         let h = engine.handle();
-        let (id_a, rx_a) = h.open().unwrap();
+        let sess_a = h.open().unwrap();
         let neighbor = with_neighbor.then(|| h.open().unwrap());
         let mut rng_b = Rng::new(77);
         let mut got = Vec::new();
         for (i, t) in toks.iter().enumerate() {
-            h.push(id_a, t.clone()).unwrap();
-            if let Some((id_b, rx_b)) = &neighbor {
+            sess_a.push(t.clone()).unwrap();
+            if let Some(sess_b) = &neighbor {
                 if i % 2 == 0 {
-                    h.push(*id_b, rng_b.normal_vec(D_IN, 1.0)).unwrap();
-                    let _ = rx_b.recv_timeout(Duration::from_secs(20)).unwrap();
+                    sess_b.push(rng_b.normal_vec(D_IN, 1.0)).unwrap();
+                    let _ = sess_b.recv_timeout(Duration::from_secs(20)).unwrap();
                 }
             }
-            got.push(rx_a.recv_timeout(Duration::from_secs(20)).unwrap().logits);
+            got.push(sess_a.recv_timeout(Duration::from_secs(20)).unwrap().logits);
         }
         let ticks = h.metrics().unwrap().ticks;
-        h.close(id_a);
-        if let Some((id_b, _)) = neighbor {
-            h.close(id_b);
+        sess_a.close();
+        if let Some(sess_b) = neighbor {
+            sess_b.close();
         }
         engine.shutdown().unwrap();
         (got, ticks)
@@ -184,7 +188,7 @@ fn paused_stream_matches_solo_serving() {
 }
 
 /// Backpressure: pushing far ahead of consumption must eventually
-/// reject rather than buffer unboundedly.
+/// reject with the typed error rather than buffer unboundedly.
 #[test]
 fn backpressure_rejects_runaway_producer() {
     let mut cfg = engine_cfg("serve_deepcot_b4");
@@ -193,17 +197,18 @@ fn backpressure_rejects_runaway_producer() {
     cfg.batch_deadline = Duration::from_secs(5);
     let engine = EngineThread::spawn(cfg).unwrap();
     let h = engine.handle();
-    let (a, _rx_a) = h.open().unwrap();
-    let (_b, _rx_b) = h.open().unwrap(); // second slot, never pushes
+    let a = h.open().unwrap();
+    let _b = h.open().unwrap(); // second slot, never pushes
     let mut rng = Rng::new(5);
-    let mut rejected = false;
+    let mut rejected = None;
     for _ in 0..10 {
-        if h.push(a, rng.normal_vec(D_IN, 1.0)).is_err() {
-            rejected = true;
+        if let Err(e) = a.push(rng.normal_vec(D_IN, 1.0)) {
+            rejected = Some(e);
             break;
         }
     }
-    assert!(rejected, "queue should hit the backpressure bound");
+    let err = rejected.expect("queue should hit the backpressure bound");
+    assert!(matches!(err, EngineError::Backpressure(_)), "want Backpressure, got {err:?}");
     engine.shutdown().unwrap();
 }
 
@@ -245,28 +250,27 @@ mod pjrt_only {
 
         // engine on B=4 (real artifacts dir, PJRT backend) with an
         // intermittent second stream
-        let mut ecfg = EngineConfig {
-            variant: "serve_deepcot_b4".to_string(),
-            batch_deadline: Duration::from_millis(1),
-            ..EngineConfig::default()
-        };
-        ecfg.backend = EngineBackend::Pjrt;
+        let ecfg = EngineConfig::builder()
+            .variant("serve_deepcot_b4")
+            .batch_deadline(Duration::from_millis(1))
+            .backend(EngineBackend::Pjrt)
+            .build();
         let engine = EngineThread::spawn(ecfg).unwrap();
         let h = engine.handle();
-        let (id_a, rx_a) = h.open().unwrap();
-        let (id_b, rx_b) = h.open().unwrap();
+        let sess_a = h.open().unwrap();
+        let sess_b = h.open().unwrap();
         let mut rng_b = Rng::new(77);
         let mut got = Vec::new();
         for (i, t) in toks.iter().enumerate() {
-            h.push(id_a, t.clone()).unwrap();
+            sess_a.push(t.clone()).unwrap();
             if i % 2 == 0 {
-                h.push(id_b, rng_b.normal_vec(cfg.d_in, 1.0)).unwrap();
-                let _ = rx_b.recv_timeout(Duration::from_secs(20)).unwrap();
+                sess_b.push(rng_b.normal_vec(cfg.d_in, 1.0)).unwrap();
+                let _ = sess_b.recv_timeout(Duration::from_secs(20)).unwrap();
             }
-            got.push(rx_a.recv_timeout(Duration::from_secs(20)).unwrap().logits);
+            got.push(sess_a.recv_timeout(Duration::from_secs(20)).unwrap().logits);
         }
-        h.close(id_a);
-        h.close(id_b);
+        sess_a.close();
+        sess_b.close();
         for (t, (g, w)) in got.iter().zip(&want).enumerate() {
             for (i, (a, b)) in g.iter().zip(w).enumerate() {
                 assert!(

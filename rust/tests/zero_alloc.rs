@@ -107,4 +107,26 @@ fn steady_state_ticks_allocate_nothing() {
         after - before
     );
     assert!(sink.is_finite());
+
+    // stream-state snapshots reuse their buffers: after the first
+    // export establishes capacity, export → import → tick cycles stay
+    // allocation-free (a migration can't perturb the steady state)
+    let (mut data, mut heads) = (Vec::new(), Vec::new());
+    batched.export_lane(0, &mut data, &mut heads);
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        batched.export_lane(0, &mut data, &mut heads);
+        batched.import_lane(2, &data, &heads).unwrap();
+        let step = batched.tick_lanes(&stacked, &live, &pos).unwrap();
+        sink += step.logits.at(0, 0);
+        advance(&mut pos);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "snapshot export/import allocated {} times across 5 reused-buffer cycles",
+        after - before
+    );
+    assert!(sink.is_finite());
 }
