@@ -1,0 +1,339 @@
+//! Kernel-suite microbenchmark: the `nn::kernels` SIMD-friendly path
+//! versus the frozen naive baseline, per-op and end-to-end.
+//!
+//! Per-op rows time the old primitive against its kernel-suite
+//! replacement on the bench geometry: sequential-sum `tensor::dot` vs
+//! the 8-wide `kernels::dot`, naive `matmul_into` + `add_row` vs the
+//! packed fused [`PackedLinear`], per-call `apply_rope_inplace` vs
+//! [`RopeTable`] rows, and per-row `iter_rows` attention vs the
+//! two-segment kernels on a mid-wrap ring. The end-to-end rows tick
+//! the frozen [`NaiveScalarDeepCoT`] against the kernel-suite
+//! [`ScalarDeepCoT`] (plus the 4-lane batched stepper, per-lane
+//! normalized) on the same synthetic model and weights.
+//!
+//!     cargo run --release --bin bench_kernels -- \
+//!         --d-model 64 --n-heads 4 --n-layers 4 --window 128
+//!
+//! `--json <path>` writes the numbers for the perf trajectory
+//! (`BENCH_KERNELS.json` at the repo root holds the committed
+//! baseline); `--quick` bounds iteration counts for CI smokes; and
+//! `--assert-speedup X` fails the run if the end-to-end kernel tick is
+//! not at least `X` times faster than the naive tick — CI guards at a
+//! generous 1.0x (not-slower), real numbers live in the JSON.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use deepcot::manifest::ModelConfig;
+use deepcot::nn::batched::BatchedScalarDeepCoT;
+use deepcot::nn::encoder::ScalarDeepCoT;
+use deepcot::nn::kernels::{self, PackedLinear};
+use deepcot::nn::kv_ring::KvRing;
+use deepcot::nn::naive::NaiveScalarDeepCoT;
+use deepcot::nn::params::ModelParams;
+use deepcot::nn::rope::{apply_rope_inplace, apply_rope_row, RopeTable};
+use deepcot::nn::tensor::{self, Mat};
+use deepcot::util::cli::Cli;
+use deepcot::util::json::{num, obj, Json};
+use deepcot::util::rng::Rng;
+
+/// Best-of-3 nanoseconds per call of `f` (each sample times `iters`
+/// calls after a warmup); min is the standard microbench estimator
+/// under scheduler noise.
+fn time_ns<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let iters = iters.max(1);
+    let mut best = f64::INFINITY;
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() * 1e9 / iters as f64);
+    }
+    best
+}
+
+struct OpRow {
+    name: &'static str,
+    naive_ns: f64,
+    kernel_ns: f64,
+}
+
+impl OpRow {
+    fn speedup(&self) -> f64 {
+        self.naive_ns / self.kernel_ns
+    }
+}
+
+fn bench_ops(cfg: &ModelConfig, iters: usize) -> Vec<OpRow> {
+    let mut rng = Rng::new(0xBE9C5);
+    let d = cfg.d_model;
+    let (h, dh, mlen) = (cfg.n_heads, cfg.d_head(), cfg.mem_len());
+    let mut rows = Vec::new();
+
+    // dot: one d_model-wide reduction
+    {
+        let a = rng.normal_vec(d, 1.0);
+        let b = rng.normal_vec(d, 1.0);
+        let naive_ns = time_ns(iters * 64, || {
+            black_box(tensor::dot(black_box(&a), black_box(&b)));
+        });
+        let kernel_ns = time_ns(iters * 64, || {
+            black_box(kernels::dot(black_box(&a), black_box(&b)));
+        });
+        rows.push(OpRow { name: "dot_d_model", naive_ns, kernel_ns });
+    }
+
+    // fused matmul+bias: one 4-row projection (d x d)
+    {
+        let w = Mat::from_vec(d, d, rng.normal_vec(d * d, 1.0 / (d as f32).sqrt()));
+        let bias = rng.normal_vec(d, 0.02);
+        let x = Mat::from_vec(4, d, rng.normal_vec(4 * d, 1.0));
+        let mut out = Mat::zeros(4, d);
+        let naive_ns = time_ns(iters, || {
+            black_box(&x).matmul_into(black_box(&w), &mut out);
+            out.add_row(black_box(&bias));
+            black_box(out.at(0, 0));
+        });
+        let packed = PackedLinear::pack(&w, &bias);
+        let kernel_ns = time_ns(iters, || {
+            packed.forward_into(black_box(&x), &mut out);
+            black_box(out.at(0, 0));
+        });
+        rows.push(OpRow { name: "matmul_bias_4xd", naive_ns, kernel_ns });
+    }
+
+    // rope: all heads of one token row, fresh position every call
+    // (the engine additionally reuses each row across Q/K and layers)
+    {
+        let row0 = rng.normal_vec(h * dh, 1.0);
+        let mut row = row0.clone();
+        let mut tab = RopeTable::new(dh, 1);
+        let mut pos = 0i32;
+        let naive_ns = time_ns(iters, || {
+            row.copy_from_slice(&row0);
+            pos += 1;
+            for hh in 0..h {
+                apply_rope_inplace(&mut row[hh * dh..(hh + 1) * dh], pos);
+            }
+            black_box(row[0]);
+        });
+        let kernel_ns = time_ns(iters, || {
+            row.copy_from_slice(&row0);
+            pos += 1;
+            let (sin, cos) = tab.row(0, pos);
+            apply_rope_row(&mut row, dh, sin, cos);
+            black_box(row[0]);
+        });
+        rows.push(OpRow { name: "rope_token_row", naive_ns, kernel_ns });
+    }
+
+    // attention inner loop: scores + V accumulation of one query head
+    // over a mid-wrap ring (both segments non-empty)
+    {
+        let mut kring = KvRing::new(mlen, dh);
+        let mut vring = KvRing::new(mlen, dh);
+        for _ in 0..mlen + mlen / 2 + 1 {
+            kring.push(&rng.normal_vec(dh, 1.0));
+            vring.push(&rng.normal_vec(dh, 1.0));
+        }
+        let q = rng.normal_vec(dh, 1.0);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut s = vec![0.0f32; mlen];
+        let mut acc = vec![0.0f32; dh];
+        let naive_ns = time_ns(iters, || {
+            for (j, krow) in kring.iter_rows().enumerate() {
+                s[j] = tensor::dot(black_box(&q), krow) * scale;
+            }
+            acc.fill(0.0);
+            for (j, vrow) in vring.iter_rows().enumerate() {
+                let w = s[j];
+                for (o, &vv) in acc.iter_mut().zip(vrow) {
+                    *o += w * vv;
+                }
+            }
+            black_box(acc[0]);
+        });
+        let kernel_ns = time_ns(iters, || {
+            let (ka, kb) = kring.as_segments();
+            let (va, vb) = vring.as_segments();
+            kernels::dot_scores_segments(black_box(&q), ka, kb, scale, &mut s);
+            acc.fill(0.0);
+            kernels::weighted_sum_segments(&s, va, vb, &mut acc);
+            black_box(acc[0]);
+        });
+        rows.push(OpRow { name: "attention_head_ring", naive_ns, kernel_ns });
+    }
+
+    rows
+}
+
+struct EndToEnd {
+    naive_ns: f64,
+    kernel_ns: f64,
+    batched4_ns_per_lane: f64,
+}
+
+impl EndToEnd {
+    fn speedup(&self) -> f64 {
+        self.naive_ns / self.kernel_ns
+    }
+}
+
+fn bench_end_to_end(cfg: &ModelConfig, ticks: usize) -> Result<EndToEnd> {
+    let params = ModelParams::synthetic(cfg, &mut Rng::new(0xBE9C6));
+    let mut rng = Rng::new(0xBE9C7);
+    let tok_elems = cfg.m_tokens * cfg.d_in;
+    let tokens = Mat::from_vec(cfg.m_tokens, cfg.d_in, rng.normal_vec(tok_elems, 1.0));
+
+    let mut naive = NaiveScalarDeepCoT::new(cfg.clone(), params.clone());
+    let naive_ns = time_ns(ticks, || {
+        let (logits, _) = naive.tick(black_box(&tokens)).expect("naive tick");
+        black_box(logits[0]);
+    });
+
+    let mut ring = ScalarDeepCoT::new(cfg.clone(), params.clone());
+    let kernel_ns = time_ns(ticks, || {
+        let (logits, _) = ring.tick(black_box(&tokens)).expect("kernel tick");
+        black_box(logits[0]);
+    });
+
+    let lanes = 4;
+    let mut batched = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, lanes);
+    let stacked = Mat::from_vec(
+        lanes * cfg.m_tokens,
+        cfg.d_in,
+        rng.normal_vec(lanes * cfg.m_tokens * cfg.d_in, 1.0),
+    );
+    let batched_ns = time_ns(ticks, || {
+        let step = batched.tick_all(black_box(&stacked)).expect("batched tick");
+        black_box(step.logits.at(0, 0));
+    });
+
+    Ok(EndToEnd { naive_ns, kernel_ns, batched4_ns_per_lane: batched_ns / lanes as f64 })
+}
+
+fn main() -> Result<()> {
+    let args = Cli::new("bench_kernels: nn::kernels suite vs the frozen naive baseline")
+        .opt("d-model", "64", "model width")
+        .opt("n-heads", "4", "attention heads")
+        .opt("n-layers", "4", "encoder depth")
+        .opt("window", "128", "continual window (mem_len = window - m)")
+        .opt("ticks", "500", "end-to-end ticks per timing sample")
+        .opt("iters", "2000", "per-op iterations per timing sample")
+        .opt("json", "", "write results JSON to this path")
+        .opt(
+            "assert-speedup",
+            "0",
+            "fail unless end-to-end kernel speedup vs naive >= this (0 = off)",
+        )
+        .flag("quick", "reduced iteration counts (CI smoke)")
+        .parse()?;
+    let cfg = ModelConfig::synthetic(
+        args.get_usize("d-model")?,
+        args.get_usize("n-heads")?,
+        args.get_usize("n-layers")?,
+        args.get_usize("window")?,
+    );
+    anyhow::ensure!(cfg.d_model % cfg.n_heads == 0, "d_model must split across heads");
+    anyhow::ensure!(cfg.d_head() % 2 == 0, "RoPE needs an even d_head");
+    let quick = args.has("quick");
+    let ticks = if quick { 120 } else { args.get_usize("ticks")?.max(10) };
+    let iters = if quick { 300 } else { args.get_usize("iters")?.max(10) };
+    println!(
+        "bench_kernels: d={} H={} L={} n={} (mem_len {}), {} ticks, {} per-op iters{}",
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_layers,
+        cfg.window,
+        cfg.mem_len(),
+        ticks,
+        iters,
+        if quick { " [quick]" } else { "" },
+    );
+
+    let ops = bench_ops(&cfg, iters);
+    println!("{:>22} {:>12} {:>12} {:>9}", "op", "naive ns", "kernel ns", "speedup");
+    for r in &ops {
+        println!(
+            "{:>22} {:>12.1} {:>12.1} {:>8.2}x",
+            r.name,
+            r.naive_ns,
+            r.kernel_ns,
+            r.speedup()
+        );
+    }
+
+    let e2e = bench_end_to_end(&cfg, ticks)?;
+    println!(
+        "end-to-end tick: naive {:.1}µs, kernel {:.1}µs, batched-4 {:.1}µs/lane — {:.2}x",
+        e2e.naive_ns / 1e3,
+        e2e.kernel_ns / 1e3,
+        e2e.batched4_ns_per_lane / 1e3,
+        e2e.speedup()
+    );
+
+    if !args.get("json").is_empty() {
+        let doc = obj(vec![
+            ("bench", Json::Str("kernels".into())),
+            ("quick", Json::Bool(quick)),
+            (
+                "geometry",
+                obj(vec![
+                    ("d_model", num(cfg.d_model as f64)),
+                    ("n_heads", num(cfg.n_heads as f64)),
+                    ("n_layers", num(cfg.n_layers as f64)),
+                    ("window", num(cfg.window as f64)),
+                    ("m_tokens", num(cfg.m_tokens as f64)),
+                ]),
+            ),
+            (
+                "ops",
+                Json::Arr(
+                    ops.iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("name", Json::Str(r.name.into())),
+                                ("naive_ns", num(r.naive_ns)),
+                                ("kernel_ns", num(r.kernel_ns)),
+                                ("speedup", num(r.speedup())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "end_to_end",
+                obj(vec![
+                    ("naive_us_per_tick", num(e2e.naive_ns / 1e3)),
+                    ("kernel_us_per_tick", num(e2e.kernel_ns / 1e3)),
+                    ("batched4_us_per_lane", num(e2e.batched4_ns_per_lane / 1e3)),
+                    ("speedup", num(e2e.speedup())),
+                ]),
+            ),
+        ]);
+        let path = args.get("json").to_string();
+        std::fs::write(&path, doc.to_string() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+
+    let threshold = args.get_f64("assert-speedup")?;
+    if threshold > 0.0 {
+        anyhow::ensure!(
+            e2e.speedup() >= threshold,
+            "end-to-end kernel tick speedup {:.2}x below the {threshold}x guard \
+             (naive {:.1}µs vs kernel {:.1}µs)",
+            e2e.speedup(),
+            e2e.naive_ns / 1e3,
+            e2e.kernel_ns / 1e3,
+        );
+        println!("speedup guard passed: {:.2}x >= {threshold}x", e2e.speedup());
+    }
+    Ok(())
+}

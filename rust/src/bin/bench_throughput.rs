@@ -30,6 +30,7 @@ use deepcot::config::{EngineBackend, EngineConfig};
 use deepcot::coordinator::engine::EngineThread;
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::cli::Cli;
+use deepcot::util::json::{num, obj, Json};
 use deepcot::util::rng::Rng;
 
 struct RunResult {
@@ -125,7 +126,8 @@ fn main() -> Result<()> {
         .opt("window", "16", "synthetic continual window")
         .opt("deadline-us", "200", "partial-batch flush deadline (µs)")
         .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin")
-        .opt("migrate-every", "0", "live-migrate each stream every N ticks (0 = off)");
+        .opt("migrate-every", "0", "live-migrate each stream every N ticks (0 = off)")
+        .opt("json", "", "write sweep results JSON to this path (perf trajectory)");
     let args = cli.parse()?;
     let shard_counts: Vec<usize> = args
         .get("shards-list")
@@ -203,6 +205,48 @@ fn main() -> Result<()> {
             r.p99,
             r.ticks_per_sec / baseline
         );
+    }
+    if !args.get("json").is_empty() {
+        let doc = obj(vec![
+            ("bench", Json::Str("throughput".into())),
+            ("streams", num(streams as f64)),
+            ("ticks", num(ticks as f64)),
+            ("migrate_every", num(migrate_every as f64)),
+            (
+                "model",
+                obj(vec![
+                    ("d_in", num(spec.d_in as f64)),
+                    ("d_model", num(spec.d_model as f64)),
+                    ("n_heads", num(spec.n_heads as f64)),
+                    ("n_layers", num(spec.n_layers as f64)),
+                    ("window", num(spec.window as f64)),
+                ]),
+            ),
+            (
+                "results",
+                Json::Arr(
+                    results
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("shards", num(r.shards as f64)),
+                                ("slots_per_shard", num(r.slots_per_shard as f64)),
+                                ("wall_s", num(r.wall.as_secs_f64())),
+                                ("ticks_per_sec", num(r.ticks_per_sec)),
+                                ("streams_per_sec", num(r.streams_per_sec)),
+                                ("tick_p50_us", num(r.p50.as_secs_f64() * 1e6)),
+                                ("tick_p99_us", num(r.p99.as_secs_f64() * 1e6)),
+                                ("speedup_vs_baseline", num(r.ticks_per_sec / baseline)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = args.get("json").to_string();
+        std::fs::write(&path, doc.to_string() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
     }
     if migrate_every > 0 {
         for r in &results {

@@ -7,10 +7,15 @@
 //!   which buys masked lanes and lane recycling for free.
 //! * **Scalar** — [`BatchedScalarDeepCoT`]: the pure-Rust multi-lane
 //!   engine stepping all slots through single stacked shared-weight
-//!   matmuls over ring-buffer K/V memories. Used when the XLA shared
-//!   library is unavailable (engine backend `auto`/`scalar`), so the
-//!   whole coordinator — admission, batching, masking, churn — serves
-//!   real traffic with no device runtime at all.
+//!   matmuls over ring-buffer K/V memories, running on the
+//!   `nn::kernels` SIMD-friendly suite (packed fused matmul+bias,
+//!   two-segment ring attention, memoized RoPE tables — all with a
+//!   fixed summation order independent of lane count, which is what
+//!   keeps a stream's outputs bitwise-identical across shard layouts
+//!   and slot budgets). Used when the XLA shared library is
+//!   unavailable (engine backend `auto`/`scalar`), so the whole
+//!   coordinator — admission, batching, masking, churn — serves real
+//!   traffic with no device runtime at all.
 //!
 //! Third-party backends implement [`StreamBackend`] and plug in via
 //! [`SlotStepper::from_backend`] — the shard loop and the cluster never

@@ -31,11 +31,14 @@
 use anyhow::Result;
 
 use crate::manifest::ModelConfig;
-use crate::nn::encoder::residual;
+use crate::nn::kernels::{
+    self, dot_scores_segments, residual_fused, soft_scores_segments, weighted_sum_segments,
+    PackedParams,
+};
 use crate::nn::kv_ring::KvRing;
-use crate::nn::params::ModelParams;
-use crate::nn::rope::apply_rope_inplace;
-use crate::nn::tensor::{dot, gelu, softmax_inplace, sqdist, Mat};
+use crate::nn::params::{ModelParams, Norm};
+use crate::nn::rope::{apply_rope_row, RopeTable};
+use crate::nn::tensor::{softmax_inplace, Mat};
 
 /// Preallocated per-tick workspace, sized once from the model geometry.
 #[derive(Debug, Clone)]
@@ -91,9 +94,28 @@ pub struct StepOut<'a> {
 }
 
 /// Multi-lane continual DeepCoT stepper over ring-buffer K/V memories.
+///
+/// The tick runs on the `nn::kernels` suite: all projections go through
+/// packed fused matmul+bias ([`PackedParams`], packed once at
+/// construction), attention iterates the rings' two-segment contiguous
+/// views with 8-wide unrolled kernels, RoPE rows come from a memoized
+/// [`RopeTable`], and the residual/norm epilogues are fused row sweeps.
+/// Every kernel uses a fixed summation order independent of lane count
+/// and ring alignment (see `nn::kernels` docs), so a lane's outputs
+/// stay a pure bitwise function of its own stream history — the
+/// invariant the sharded cluster and migration tests pin.
 pub struct BatchedScalarDeepCoT {
     cfg: ModelConfig,
-    p: ModelParams,
+    /// Per-layer residual-norm parameters — the only piece of the
+    /// source [`ModelParams`] the tick still reads. The naive-layout
+    /// weight matrices are dropped after packing so a stepper holds
+    /// each weight exactly once.
+    norms: Vec<Norm>,
+    /// Transposed, bias-fused projections (the load-time packing pass).
+    packed: PackedParams,
+    /// Memoized per-position RoPE sin/cos rows, one slot per stacked
+    /// token row.
+    rope: RopeTable,
     lanes: usize,
     /// Ring per (lane, layer, head): index `(lane·L + layer)·H + head`.
     kmem: Vec<KvRing>,
@@ -118,7 +140,14 @@ impl BatchedScalarDeepCoT {
         let kmem = (0..n).map(|_| KvRing::new(mlen, dh)).collect();
         let vmem = (0..n).map(|_| KvRing::new(mlen, dh)).collect();
         let scratch = Scratch::new(&cfg, lanes);
-        Self { cfg, p, lanes, kmem, vmem, scratch, lane_pos: vec![0; lanes] }
+        // load-time packing + rope-row memo storage: both sized once
+        // here so steady-state ticks never allocate. Only the norm
+        // parameters survive from the naive layout — the packed copy
+        // is the single resident set of projection weights.
+        let packed = p.pack();
+        let norms = p.layers.iter().map(|lp| lp.norm.clone()).collect();
+        let rope = RopeTable::new(dh, lanes * cfg.m_tokens);
+        Self { cfg, norms, packed, rope, lanes, kmem, vmem, scratch, lane_pos: vec![0; lanes] }
     }
 
     pub fn lanes(&self) -> usize {
@@ -279,31 +308,31 @@ impl BatchedScalarDeepCoT {
         let lanes = self.lanes;
         let (m, h, dh, mlen) =
             (self.cfg.m_tokens, self.cfg.n_heads, self.cfg.d_head(), self.cfg.mem_len());
-        let rope = self.cfg.pos == "rope";
+        let use_rope = self.cfg.pos == "rope";
         let softmax = self.cfg.activation == "softmax";
         let gelu_act = self.cfg.ffn_act == "gelu";
-        let n_layers = self.p.layers.len();
-        let p = &self.p;
+        let n_layers = self.norms.len();
+        let norms = &self.norms;
+        let pk = &self.packed;
         let Scratch { x, q, k, v, attn, proj, hid, scores, logits, live, pos } = &mut self.scratch;
 
-        tokens.matmul_into(&p.w_in, x);
-        x.add_row(&p.b_in);
+        pk.w_in.forward_into(tokens, x);
         let scale = 1.0 / (dh as f32).sqrt();
         let n_ctx = mlen + m;
-        for (li, lp) in p.layers.iter().enumerate() {
-            x.matmul_into(&lp.wq, q);
-            q.add_row(&lp.bq);
-            x.matmul_into(&lp.wk, k);
-            k.add_row(&lp.bk);
-            x.matmul_into(&lp.wv, v);
-            v.add_row(&lp.bv);
-            if rope {
+        for (li, (norm, pl)) in norms.iter().zip(&pk.layers).enumerate() {
+            pl.wq.forward_into(x, q);
+            pl.wk.forward_into(x, k);
+            pl.wv.forward_into(x, v);
+            if use_rope {
                 for row in 0..lanes * m {
                     let pp = pos[row / m] + (row % m) as i32;
-                    for hh in 0..h {
-                        apply_rope_inplace(&mut q.row_mut(row)[hh * dh..(hh + 1) * dh], pp);
-                        apply_rope_inplace(&mut k.row_mut(row)[hh * dh..(hh + 1) * dh], pp);
-                    }
+                    // one memoized sin/cos row per token, shared by Q
+                    // and K across every head; layers 1.. hit the memo
+                    // (position unchanged within a tick), as do masked
+                    // lanes across ticks (their clocks don't advance)
+                    let (sin, cos) = self.rope.row(row, pp);
+                    apply_rope_row(q.row_mut(row), dh, sin, cos);
+                    apply_rope_row(k.row_mut(row), dh, sin, cos);
                 }
             }
             attn.fill(0.0);
@@ -313,47 +342,38 @@ impl BatchedScalarDeepCoT {
                 }
                 for hh in 0..h {
                     let ridx = (lane * n_layers + li) * h + hh;
-                    let kring = &self.kmem[ridx];
-                    let vring = &self.vmem[ridx];
+                    // two-segment contiguous views: attention becomes
+                    // tight loops over at most two flat slices instead
+                    // of per-row iterator dispatch
+                    let (ka, kb) = self.kmem[ridx].as_segments();
+                    let (va, vb) = self.vmem[ridx].as_segments();
                     for t in 0..m {
                         let row = lane * m + t;
                         let s = &mut scores[..n_ctx];
                         let qh = &q.row(row)[hh * dh..(hh + 1) * dh];
                         // scores over [memory oldest..newest; new rows],
-                        // the exact logical order (and thus summation
-                        // order) of the old [memory; new] concatenation
+                        // the exact logical order of the old
+                        // [memory; new] concatenation
                         if softmax {
-                            for (j, krow) in kring.iter_rows().enumerate() {
-                                s[j] = dot(qh, krow) * scale;
-                            }
+                            dot_scores_segments(qh, ka, kb, scale, &mut s[..mlen]);
                             for j in 0..m {
                                 let kh = &k.row(lane * m + j)[hh * dh..(hh + 1) * dh];
-                                s[mlen + j] = dot(qh, kh) * scale;
+                                s[mlen + j] = kernels::dot(qh, kh) * scale;
                             }
                             softmax_inplace(s);
                         } else {
-                            // SOFT (paper Eq. 4): unnormalized Gaussian kernel
-                            for (j, krow) in kring.iter_rows().enumerate() {
-                                s[j] = (-sqdist(qh, krow) * 0.5 * scale).exp();
-                            }
+                            // SOFT (paper Eq. 4): unnormalized Gaussian
+                            soft_scores_segments(qh, ka, kb, scale, &mut s[..mlen]);
                             for j in 0..m {
                                 let kh = &k.row(lane * m + j)[hh * dh..(hh + 1) * dh];
-                                s[mlen + j] = (-sqdist(qh, kh) * 0.5 * scale).exp();
+                                s[mlen + j] = (-kernels::sqdist(qh, kh) * 0.5 * scale).exp();
                             }
                         }
                         let orow = &mut attn.row_mut(row)[hh * dh..(hh + 1) * dh];
-                        for (j, vrow) in vring.iter_rows().enumerate() {
-                            let w = s[j];
-                            for (o, &vv) in orow.iter_mut().zip(vrow) {
-                                *o += w * vv;
-                            }
-                        }
+                        weighted_sum_segments(&s[..mlen], va, vb, orow);
                         for j in 0..m {
-                            let w = s[mlen + j];
                             let vrow = &v.row(lane * m + j)[hh * dh..(hh + 1) * dh];
-                            for (o, &vv) in orow.iter_mut().zip(vrow) {
-                                *o += w * vv;
-                            }
+                            kernels::axpy(s[mlen + j], vrow, orow);
                         }
                     }
                     // advance the ring: the m new rows overwrite the m
@@ -368,34 +388,21 @@ impl BatchedScalarDeepCoT {
                     }
                 }
             }
-            attn.matmul_into(&lp.wo, proj);
-            proj.add_row(&lp.bo);
-            residual(lp, x, proj, 0);
-            x.matmul_into(&lp.w1, hid);
-            hid.add_row(&lp.b1);
+            pl.wo.forward_into(attn, proj);
+            residual_fused(norm, x, proj, 0);
+            // FFN up-projection with the GELU fused at store time
             if gelu_act {
-                for vv in hid.data.iter_mut() {
-                    *vv = gelu(*vv);
-                }
+                pl.w1.forward_gelu_into(x, hid);
+            } else {
+                pl.w1.forward_into(x, hid);
             }
-            hid.matmul_into(&lp.w2, proj);
-            proj.add_row(&lp.b2);
-            residual(lp, x, proj, 1);
+            pl.w2.forward_into(hid, proj);
+            residual_fused(norm, x, proj, 1);
         }
         // classifier head on each lane's newest token (bias added after
-        // the product sum, matching Mat::matmul + add_row order)
+        // the completed product sum, like the naive matmul + add_row)
         for lane in 0..lanes {
-            let xr = x.row(lane * m + m - 1);
-            let lrow = logits.row_mut(lane);
-            lrow.fill(0.0);
-            for (kk, &xv) in xr.iter().enumerate() {
-                for (o, &wv) in lrow.iter_mut().zip(p.w_cls.row(kk)) {
-                    *o += xv * wv;
-                }
-            }
-            for (o, &b) in lrow.iter_mut().zip(&p.b_cls) {
-                *o += b;
-            }
+            pk.w_cls.forward_row_into(x.row(lane * m + m - 1), logits.row_mut(lane));
         }
         Ok(StepOut { logits, out: x })
     }

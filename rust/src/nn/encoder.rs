@@ -155,7 +155,11 @@ pub fn encoder_forward(
 /// performs zero heap allocations — K/V memories are fixed-storage
 /// rings and every intermediate lives in the preallocated scratch
 /// workspace. The returned slices borrow that workspace and are valid
-/// until the next tick.
+/// until the next tick. Since the kernel-suite refactor the tick runs
+/// on `nn::kernels` (packed fused matmul+bias, two-segment ring
+/// attention, memoized RoPE rows); the full-window
+/// [`encoder_forward`] above intentionally stays on the naive
+/// `tensor` primitives as the independent oracle.
 pub struct ScalarDeepCoT {
     inner: BatchedScalarDeepCoT,
 }

@@ -1,0 +1,498 @@
+//! SIMD-friendly kernel suite for the hot continual-stepping path.
+//!
+//! The scalar engine's tick used to spend its time in naive triple-loop
+//! matmuls, sequential-sum `dot`s (which LLVM cannot vectorize without
+//! reassociating f32 math), and a RoPE that recomputed `powf`/`sin_cos`
+//! per pair per row per layer per tick. This module provides the
+//! replacements the batched stepper runs on:
+//!
+//! * [`dot`] / [`sqdist`] / [`axpy`] — fixed-width 8-wide unrolled
+//!   primitives with split accumulators, written so the autovectorizer
+//!   can emit packed FMAs without `-ffast-math`;
+//! * [`PackedLinear`] — fused matmul+bias over a weight layout packed
+//!   (transposed) once at load time, so every output element is one
+//!   contiguous 8-wide dot and the bias add costs nothing extra;
+//! * [`PackedParams`] — the whole-model packing pass
+//!   (`ModelParams` → packed layout, done once at construction so the
+//!   steady state stays zero-alloc);
+//! * [`dot_scores_segments`] / [`soft_scores_segments`] /
+//!   [`weighted_sum_segments`] — attention over the ring memory's
+//!   two-segment contiguous view
+//!   ([`KvRing::as_segments`](crate::nn::kv_ring::KvRing::as_segments)),
+//!   replacing per-row iterator dispatch with tight loops over at most
+//!   two contiguous slices;
+//! * [`residual_fused`] — the bias/residual/norm epilogue as single
+//!   row sweeps over contiguous slices instead of per-element indexed
+//!   walks.
+//!
+//! # Determinism policy
+//!
+//! Every kernel uses a **fixed summation order that depends only on the
+//! operand lengths** — never on memory alignment, ring wraparound
+//! state, or how many lanes are stacked in a batch:
+//!
+//! * [`dot`] / [`sqdist`] accumulate into 8 split accumulators
+//!   (`chunks_exact(8)`, remainder elements folded into accumulators
+//!   `0..len % 8`) and reduce them in one fixed pairwise tree;
+//! * [`axpy`] and the fused epilogues are elementwise (no reduction),
+//!   so their results are independent of processing order by
+//!   construction;
+//! * the two-segment attention kernels visit rows in logical
+//!   (oldest → newest) order, and each row is a single contiguous
+//!   `d_head`-wide slice regardless of where the ring's write head
+//!   sits, so per-score numerics are invariant to wraparound state.
+//!
+//! Because every per-stream quantity is therefore a pure function of
+//! that stream's own history, the bitwise cluster invariants pinned in
+//! `tests/cluster.rs` (1-shard ≡ 4-shard shard-layout equivalence,
+//! migration transparency) and the lane-snapshot roundtrip in
+//! `nn::batched` survive vectorization unchanged. Versus `nn::naive`
+//! (sequential summation), results legitimately differ by float
+//! reassociation; equivalence is asserted within 1e-4 relative
+//! tolerance in `tests/kernels_equiv.rs`.
+
+use crate::nn::params::{ModelParams, Norm};
+use crate::nn::tensor::{gelu, layer_norm_inplace, Mat};
+
+/// Unroll width of the split-accumulator kernels. Eight f32 lanes: one
+/// AVX/NEON-friendly register's worth, and wide enough that LLVM emits
+/// packed FMAs for the accumulator updates.
+pub const UNROLL: usize = 8;
+
+/// Reduce the split accumulators in a fixed pairwise tree. The order is
+/// a function of nothing at all — every `dot`/`sqdist` of a given
+/// length sums in exactly this shape.
+#[inline]
+fn reduce(acc: [f32; UNROLL]) -> f32 {
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+}
+
+/// Dot product with 8 split accumulators and a fixed reduction tree.
+/// Summation order depends only on `a.len()`.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; UNROLL];
+    let mut ca = a.chunks_exact(UNROLL);
+    let mut cb = b.chunks_exact(UNROLL);
+    for (xs, ys) in (&mut ca).zip(&mut cb) {
+        for j in 0..UNROLL {
+            acc[j] += xs[j] * ys[j];
+        }
+    }
+    for (j, (x, y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        acc[j] += x * y;
+    }
+    reduce(acc)
+}
+
+/// Squared Euclidean distance, same accumulator discipline as [`dot`].
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; UNROLL];
+    let mut ca = a.chunks_exact(UNROLL);
+    let mut cb = b.chunks_exact(UNROLL);
+    for (xs, ys) in (&mut ca).zip(&mut cb) {
+        for j in 0..UNROLL {
+            let d = xs[j] - ys[j];
+            acc[j] += d * d;
+        }
+    }
+    for (j, (x, y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        let d = x - y;
+        acc[j] += d * d;
+    }
+    reduce(acc)
+}
+
+/// `y += a * x`, unrolled. Elementwise (no reduction), so the result is
+/// bitwise independent of the chunking.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut cx = x.chunks_exact(UNROLL);
+    let mut cy = y.chunks_exact_mut(UNROLL);
+    for (xs, ys) in (&mut cx).zip(&mut cy) {
+        for j in 0..UNROLL {
+            ys[j] += a * xs[j];
+        }
+    }
+    for (x, y) in cx.remainder().iter().zip(cy.into_remainder()) {
+        *y += a * x;
+    }
+}
+
+/// `y += x`, unrolled. Elementwise.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut cx = x.chunks_exact(UNROLL);
+    let mut cy = y.chunks_exact_mut(UNROLL);
+    for (xs, ys) in (&mut cx).zip(&mut cy) {
+        for j in 0..UNROLL {
+            ys[j] += xs[j];
+        }
+    }
+    for (x, y) in cx.remainder().iter().zip(cy.into_remainder()) {
+        *y += x;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Two-segment ring attention
+
+/// Scaled dot scores of one query head against a two-segment K view
+/// (`KvRing::as_segments`): `out[j] = dot(q, k_j) * scale` for the
+/// `dh`-wide rows of `seg_a` then `seg_b` in logical order. Each row is
+/// contiguous within its segment (segment splits land on row
+/// boundaries), so every score is computed by the identical [`dot`] op
+/// sequence regardless of where the ring's head sits.
+pub fn dot_scores_segments(q: &[f32], seg_a: &[f32], seg_b: &[f32], scale: f32, out: &mut [f32]) {
+    let dh = q.len().max(1);
+    debug_assert_eq!((seg_a.len() + seg_b.len()) % dh, 0);
+    debug_assert_eq!(out.len() * dh, seg_a.len() + seg_b.len());
+    let mut idx = 0;
+    for seg in [seg_a, seg_b] {
+        for krow in seg.chunks_exact(dh) {
+            out[idx] = dot(q, krow) * scale;
+            idx += 1;
+        }
+    }
+}
+
+/// SOFT-attention scores (paper Eq. 4, unnormalized Gaussian kernel)
+/// over a two-segment K view: `out[j] = exp(-sqdist(q, k_j) * 0.5 *
+/// scale)`, rows in logical order. Same invariances as
+/// [`dot_scores_segments`].
+pub fn soft_scores_segments(q: &[f32], seg_a: &[f32], seg_b: &[f32], scale: f32, out: &mut [f32]) {
+    let dh = q.len().max(1);
+    debug_assert_eq!((seg_a.len() + seg_b.len()) % dh, 0);
+    debug_assert_eq!(out.len() * dh, seg_a.len() + seg_b.len());
+    let mut idx = 0;
+    for seg in [seg_a, seg_b] {
+        for krow in seg.chunks_exact(dh) {
+            out[idx] = (-sqdist(q, krow) * 0.5 * scale).exp();
+            idx += 1;
+        }
+    }
+}
+
+/// `out += Σ_j weights[j] * v_j` over a two-segment V view, rows in
+/// logical order (the exact summation order of the old per-row
+/// iterator walk). Elementwise accumulation via [`axpy`].
+pub fn weighted_sum_segments(weights: &[f32], seg_a: &[f32], seg_b: &[f32], out: &mut [f32]) {
+    let dh = out.len().max(1);
+    debug_assert_eq!((seg_a.len() + seg_b.len()) % dh, 0);
+    debug_assert_eq!(weights.len() * dh, seg_a.len() + seg_b.len());
+    let mut idx = 0;
+    for seg in [seg_a, seg_b] {
+        for vrow in seg.chunks_exact(dh) {
+            axpy(weights[idx], vrow, out);
+            idx += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Packed fused matmul + bias
+
+/// A linear layer packed for the dot kernel: the weight matrix stored
+/// transposed (`out_dim x in_dim`, each output's weights contiguous)
+/// with its bias fused alongside. Packing happens once at load /
+/// construction time; `forward_*` then computes each output element as
+/// one contiguous 8-wide [`dot`] plus the bias — no separate bias
+/// sweep, no strided column walks.
+///
+/// Every output row is a pure function of the matching input row, so
+/// stacking more lanes into `x` never changes an existing row's bits
+/// (the lane-count invariance the sharded cluster's bitwise tests rely
+/// on).
+#[derive(Debug, Clone)]
+pub struct PackedLinear {
+    in_dim: usize,
+    out_dim: usize,
+    /// (out_dim x in_dim): row `j` is column `j` of the source matrix.
+    wt: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+impl PackedLinear {
+    /// Pack `w` (`in_dim x out_dim`, the `x @ w` convention of
+    /// [`Mat::matmul`]) and its bias. One transposition pass; the
+    /// source matrix can be dropped afterwards.
+    pub fn pack(w: &Mat, bias: &[f32]) -> Self {
+        assert_eq!(w.cols, bias.len(), "PackedLinear::pack bias length");
+        assert!(w.rows > 0 && w.cols > 0, "PackedLinear::pack empty weight");
+        let (k, c) = (w.rows, w.cols);
+        let mut wt = vec![0.0f32; k * c];
+        for r in 0..k {
+            for j in 0..c {
+                wt[j * k + r] = w.at(r, j);
+            }
+        }
+        Self { in_dim: k, out_dim: c, wt, bias: bias.to_vec() }
+    }
+
+    /// Input width (`k`).
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Output width (`c`).
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    #[inline]
+    fn forward_row_map<F: Fn(f32) -> f32>(&self, x: &[f32], out: &mut [f32], f: &F) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(out.len(), self.out_dim);
+        for ((o, wrow), b) in
+            out.iter_mut().zip(self.wt.chunks_exact(self.in_dim)).zip(&self.bias)
+        {
+            *o = f(dot(x, wrow) + b);
+        }
+    }
+
+    /// One row: `out = x @ W + b` (bias added after the completed
+    /// product sum, matching the naive matmul-then-`add_row` order).
+    pub fn forward_row_into(&self, x: &[f32], out: &mut [f32]) {
+        self.forward_row_map(x, out, &|v| v);
+    }
+
+    /// `out = x @ W + b` over all rows. `out` must not alias `x`.
+    pub fn forward_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.in_dim, "PackedLinear::forward_into in_dim");
+        assert_eq!(out.cols, self.out_dim, "PackedLinear::forward_into out_dim");
+        assert_eq!(x.rows, out.rows, "PackedLinear::forward_into rows");
+        for r in 0..x.rows {
+            self.forward_row_map(x.row(r), out.row_mut(r), &|v| v);
+        }
+    }
+
+    /// `out = gelu(x @ W + b)` — the FFN up-projection with the
+    /// activation fused at store time (one sweep instead of
+    /// matmul + bias sweep + activation sweep).
+    pub fn forward_gelu_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.in_dim, "PackedLinear::forward_gelu_into in_dim");
+        assert_eq!(out.cols, self.out_dim, "PackedLinear::forward_gelu_into out_dim");
+        assert_eq!(x.rows, out.rows, "PackedLinear::forward_gelu_into rows");
+        for r in 0..x.rows {
+            self.forward_row_map(x.row(r), out.row_mut(r), &gelu);
+        }
+    }
+}
+
+/// One encoder layer's projections in packed layout.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    /// Query projection.
+    pub wq: PackedLinear,
+    /// Key projection.
+    pub wk: PackedLinear,
+    /// Value projection.
+    pub wv: PackedLinear,
+    /// Attention output projection.
+    pub wo: PackedLinear,
+    /// FFN up-projection.
+    pub w1: PackedLinear,
+    /// FFN down-projection.
+    pub w2: PackedLinear,
+}
+
+/// The whole-model weight-packing pass: every matmul the continual tick
+/// performs, in packed (transposed, bias-fused) layout. Built once at
+/// stepper construction — steady-state ticks touch only these buffers,
+/// so the zero-allocation guarantee of the scratch-workspace design is
+/// preserved. Norm parameters are not packed (the fused residual
+/// sweeps read [`Norm`] values directly); the batched stepper keeps a
+/// clone of those and drops the naive-layout [`ModelParams`], so each
+/// weight is resident exactly once.
+#[derive(Debug, Clone)]
+pub struct PackedParams {
+    /// Input projection.
+    pub w_in: PackedLinear,
+    /// Per-layer packed projections.
+    pub layers: Vec<PackedLayer>,
+    /// Classifier head.
+    pub w_cls: PackedLinear,
+}
+
+impl PackedParams {
+    /// Pack every projection of `p`. `p` itself is untouched (the
+    /// stepper keeps it for norm parameters and snapshots).
+    pub fn pack(p: &ModelParams) -> Self {
+        let layers = p
+            .layers
+            .iter()
+            .map(|lp| PackedLayer {
+                wq: PackedLinear::pack(&lp.wq, &lp.bq),
+                wk: PackedLinear::pack(&lp.wk, &lp.bk),
+                wv: PackedLinear::pack(&lp.wv, &lp.bv),
+                wo: PackedLinear::pack(&lp.wo, &lp.bo),
+                w1: PackedLinear::pack(&lp.w1, &lp.b1),
+                w2: PackedLinear::pack(&lp.w2, &lp.b2),
+            })
+            .collect();
+        Self {
+            w_in: PackedLinear::pack(&p.w_in, &p.b_in),
+            layers,
+            w_cls: PackedLinear::pack(&p.w_cls, &p.b_cls),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused residual epilogues
+
+/// Post-norm residual as single row sweeps: `x += sub` (scaled for
+/// ReZero) then the sub-layer norm, over contiguous row slices instead
+/// of per-element `at_mut` walks. `idx` selects the attention (0) or
+/// FFN (1) parameter set — the same contract as
+/// `nn::encoder::residual` (which takes the layer's [`Norm`] via its
+/// `LayerParams`), and elementwise-identical numerics (the add is
+/// elementwise and the norm is the shared [`layer_norm_inplace`]).
+pub fn residual_fused(norm: &Norm, x: &mut Mat, sub: &Mat, idx: usize) {
+    debug_assert_eq!(x.rows, sub.rows);
+    debug_assert_eq!(x.cols, sub.cols);
+    match (norm, idx) {
+        (Norm::LayerNorm { g1, be1, .. }, 0) => {
+            for t in 0..x.rows {
+                let row = x.row_mut(t);
+                add_assign(row, sub.row(t));
+                layer_norm_inplace(row, g1, be1);
+            }
+        }
+        (Norm::LayerNorm { g2, be2, .. }, _) => {
+            for t in 0..x.rows {
+                let row = x.row_mut(t);
+                add_assign(row, sub.row(t));
+                layer_norm_inplace(row, g2, be2);
+            }
+        }
+        (Norm::ReZero { a1, a2 }, _) => {
+            let a = if idx == 0 { *a1 } else { *a2 };
+            for t in 0..x.rows {
+                axpy(a, sub.row(t), x.row_mut(t));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot_zero_len_and_small() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn dot_matches_sequential_within_tolerance() {
+        let mut rng = Rng::new(5);
+        for len in [7, 8, 9, 15, 16, 17, 64, 100] {
+            let a = rng.normal_vec(len, 1.0);
+            let b = rng.normal_vec(len, 1.0);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!((got - want).abs() <= 1e-4 + 1e-4 * want.abs(), "len {len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sqdist_nonnegative_and_zero_on_self() {
+        let mut rng = Rng::new(6);
+        let a = rng.normal_vec(19, 1.0);
+        let b = rng.normal_vec(19, 1.0);
+        assert_eq!(sqdist(&a, &a), 0.0);
+        assert!(sqdist(&a, &b) > 0.0);
+    }
+
+    #[test]
+    fn axpy_and_add_assign_are_elementwise_exact() {
+        let mut rng = Rng::new(7);
+        let x = rng.normal_vec(21, 1.0);
+        let y0 = rng.normal_vec(21, 1.0);
+        let mut y = y0.clone();
+        axpy(0.5, &x, &mut y);
+        for i in 0..21 {
+            assert_eq!(y[i].to_bits(), (y0[i] + 0.5 * x[i]).to_bits(), "axpy[{i}]");
+        }
+        let mut z = y0.clone();
+        add_assign(&mut z, &x);
+        for i in 0..21 {
+            assert_eq!(z[i].to_bits(), (y0[i] + x[i]).to_bits(), "add_assign[{i}]");
+        }
+    }
+
+    #[test]
+    fn packed_linear_matches_matmul_add_row() {
+        let mut rng = Rng::new(8);
+        for (k, c) in [(5usize, 3usize), (8, 8), (12, 20), (33, 7)] {
+            let w = Mat::from_vec(k, c, rng.normal_vec(k * c, 1.0));
+            let bias = rng.normal_vec(c, 0.5);
+            let x = Mat::from_vec(3, k, rng.normal_vec(3 * k, 1.0));
+            let mut want = x.matmul(&w);
+            want.add_row(&bias);
+            let packed = PackedLinear::pack(&w, &bias);
+            assert_eq!(packed.in_dim(), k);
+            assert_eq!(packed.out_dim(), c);
+            let mut got = Mat::zeros(3, c);
+            packed.forward_into(&x, &mut got);
+            for (g, wv) in got.data.iter().zip(&want.data) {
+                assert!((g - wv).abs() <= 1e-4 + 1e-4 * wv.abs(), "{k}x{c}: {g} vs {wv}");
+            }
+            // fused GELU epilogue
+            let mut got_g = Mat::zeros(3, c);
+            packed.forward_gelu_into(&x, &mut got_g);
+            for (g, wv) in got_g.data.iter().zip(&got.data) {
+                assert_eq!(g.to_bits(), gelu(*wv).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn segment_kernels_match_single_segment_layout() {
+        // the same logical rows split at every possible boundary must
+        // produce bitwise-identical scores and weighted sums
+        let mut rng = Rng::new(9);
+        let (rows, dh) = (6usize, 10usize);
+        let flat = rng.normal_vec(rows * dh, 1.0);
+        let q = rng.normal_vec(dh, 1.0);
+        let mut want = vec![0.0f32; rows];
+        dot_scores_segments(&q, &flat, &[], 0.25, &mut want);
+        let mut want_soft = vec![0.0f32; rows];
+        soft_scores_segments(&q, &flat, &[], 0.25, &mut want_soft);
+        let mut want_sum = vec![0.0f32; dh];
+        weighted_sum_segments(&want, &flat, &[], &mut want_sum);
+        for split in 0..=rows {
+            let (a, b) = flat.split_at(split * dh);
+            let mut got = vec![0.0f32; rows];
+            dot_scores_segments(&q, a, b, 0.25, &mut got);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "dot scores at split {split}"
+            );
+            let mut got_soft = vec![0.0f32; rows];
+            soft_scores_segments(&q, a, b, 0.25, &mut got_soft);
+            assert_eq!(
+                got_soft.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want_soft.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "soft scores at split {split}"
+            );
+            let mut got_sum = vec![0.0f32; dh];
+            weighted_sum_segments(&got, a, b, &mut got_sum);
+            assert_eq!(
+                got_sum.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want_sum.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "weighted sum at split {split}"
+            );
+        }
+    }
+}

@@ -98,9 +98,15 @@ impl KvRing {
         self.head = head;
     }
 
-    /// The ring contents as (older, newer) contiguous slices, logical
-    /// order preserved across the pair.
-    pub fn as_slices(&self) -> (&[f32], &[f32]) {
+    /// The ring contents as (older, newer) contiguous segments, logical
+    /// order preserved across the pair. The split always lands on a row
+    /// boundary (`head * dh`), so every logical row is contiguous
+    /// within exactly one segment — the two-segment view the
+    /// `nn::kernels` attention primitives iterate as tight loops over
+    /// (at most) two flat slices. Either segment may be empty (a cold
+    /// or exactly-wrapped ring yields one full segment plus an empty
+    /// one).
+    pub fn as_segments(&self) -> (&[f32], &[f32]) {
         let split = self.head * self.dh;
         (&self.data[split..], &self.data[..split])
     }
@@ -109,7 +115,7 @@ impl KvRing {
     /// concatenated copy.
     #[inline]
     pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> + '_ {
-        let (a, b) = self.as_slices();
+        let (a, b) = self.as_segments();
         a.chunks_exact(self.dh).chain(b.chunks_exact(self.dh))
     }
 }
@@ -154,8 +160,14 @@ mod tests {
             assert_eq!(row, &[want, -want]);
             assert_eq!(r.row(j), &[want, -want]);
         }
-        let (a, b) = r.as_slices();
+        let (a, b) = r.as_segments();
         assert_eq!(a.len() + b.len(), 5 * 2);
+        // mid-wrap: both segments non-empty, split on a row boundary
+        assert!(!a.is_empty() && !b.is_empty());
+        assert_eq!(a.len() % 2, 0);
+        let concat: Vec<f32> = a.iter().chain(b).copied().collect();
+        let logical: Vec<f32> = r.iter_rows().flatten().copied().collect();
+        assert_eq!(concat, logical);
     }
 
     #[test]

@@ -1,8 +1,17 @@
 //! Dense linear algebra for the probe trainer: Cholesky factorization
 //! and SPD solves (ridge regression normal equations).
+//!
+//! The solves sweep **rows** with stride-1 inner loops over the
+//! `nn::kernels` primitives: the old `cholesky_solve` walked
+//! `x.at(k, col)` column-major (stride `cols` per inner-loop step), and
+//! `ridge` materialized `X^T` to feed two naive matmuls. Both rewrites
+//! preserve the per-element summation order bitwise (elementwise
+//! `axpy` updates applied in the same `k`/row sequence), pinned in
+//! `tests/kernels_equiv.rs` against the old column-walk.
 
 use anyhow::{bail, Result};
 
+use crate::nn::kernels::axpy;
 use crate::nn::tensor::Mat;
 
 /// In-place lower Cholesky of an SPD matrix. Returns L (rows x rows).
@@ -32,25 +41,40 @@ pub fn cholesky(a: &Mat) -> Result<Mat> {
 }
 
 /// Solve L L^T x = b for multiple right-hand sides (columns of B).
+///
+/// Row-sweep substitution: all right-hand sides advance together, and
+/// every inner update is a contiguous unrolled `axpy` over a full row
+/// (the old implementation walked `x.at(k, col)` at stride `cols`, one
+/// cache line per element once `cols` grew). Per element the update
+/// sequence — subtract `l[i][k]·x[k]` for ascending `k`, then divide —
+/// is unchanged, so results are bitwise identical to the column walk.
 pub fn cholesky_solve(l: &Mat, b: &Mat) -> Mat {
     let n = l.rows;
+    let cols = b.cols;
     let mut x = b.clone();
     // forward: L y = b
-    for col in 0..b.cols {
-        for i in 0..n {
-            let mut s = x.at(i, col);
-            for k in 0..i {
-                s -= l.at(i, k) * x.at(k, col);
-            }
-            *x.at_mut(i, col) = s / l.at(i, i);
+    for i in 0..n {
+        let (done, rest) = x.data.split_at_mut(i * cols);
+        let xi = &mut rest[..cols];
+        for k in 0..i {
+            axpy(-l.at(i, k), &done[k * cols..(k + 1) * cols], xi);
         }
-        // backward: L^T x = y
-        for i in (0..n).rev() {
-            let mut s = x.at(i, col);
-            for k in i + 1..n {
-                s -= l.at(k, i) * x.at(k, col);
-            }
-            *x.at_mut(i, col) = s / l.at(i, i);
+        let d = l.at(i, i);
+        for v in xi.iter_mut() {
+            *v /= d;
+        }
+    }
+    // backward: L^T x = y
+    for i in (0..n).rev() {
+        let (head, tail) = x.data.split_at_mut((i + 1) * cols);
+        let xi = &mut head[i * cols..];
+        for k in i + 1..n {
+            let off = (k - i - 1) * cols;
+            axpy(-l.at(k, i), &tail[off..off + cols], xi);
+        }
+        let d = l.at(i, i);
+        for v in xi.iter_mut() {
+            *v /= d;
         }
     }
     x
@@ -58,14 +82,30 @@ pub fn cholesky_solve(l: &Mat, b: &Mat) -> Mat {
 
 /// Ridge regression: W = (X^T X + lambda I)^-1 X^T Y.
 /// X: (n x d), Y: (n x c) -> W: (d x c).
+///
+/// The gram matrix and X^T Y are accumulated as sums of row outer
+/// products — each row of X/Y is read once, contiguously, and every
+/// update is an unrolled `axpy` — instead of materializing `X^T` and
+/// running two naive matmuls. The row-ascending accumulation matches
+/// the old matmul's inner-dimension order, so results are bitwise
+/// identical.
 pub fn ridge(x: &Mat, y: &Mat, lambda: f32) -> Result<Mat> {
-    let xt = x.transpose();
-    let mut gram = xt.matmul(x);
-    for i in 0..gram.rows {
+    anyhow::ensure!(x.rows == y.rows, "ridge: X has {} rows, Y has {}", x.rows, y.rows);
+    let (d, c) = (x.cols, y.cols);
+    let mut gram = Mat::zeros(d, d);
+    let mut xty = Mat::zeros(d, c);
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let yr = y.row(r);
+        for (i, &xv) in xr.iter().enumerate() {
+            axpy(xv, xr, gram.row_mut(i));
+            axpy(xv, yr, xty.row_mut(i));
+        }
+    }
+    for i in 0..d {
         *gram.at_mut(i, i) += lambda;
     }
     let l = cholesky(&gram)?;
-    let xty = xt.matmul(y);
     Ok(cholesky_solve(&l, &xty))
 }
 

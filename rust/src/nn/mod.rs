@@ -6,26 +6,40 @@
 //! 2. the "standard implementation" CPU baseline for runtime tables;
 //! 3. the numeric core for the probe trainer (ridge solve).
 //!
-//! Layout after the ring-buffer refactor:
+//! Layout after the ring-buffer + kernel-suite refactors:
 //! - [`tensor`]  — dense `Mat` math with in-place `_into` primitives and
-//!   row-range views; branch-free inner loops so timings track FLOPs.
+//!   row-range views; deliberately sequential/naive inner loops (the
+//!   oracle + baseline substrate — the hot path runs on [`kernels`]).
+//! - [`kernels`] — the SIMD-friendly kernel suite: 8-wide unrolled
+//!   `dot`/`sqdist`/`axpy`, packed fused matmul+bias
+//!   ([`kernels::PackedLinear`], weights transposed once at load time),
+//!   two-segment ring attention, and fused residual/norm sweeps — all
+//!   under a fixed-summation-order determinism policy (module docs).
 //! - [`kv_ring`] — fixed-storage circular K/V memory ([`kv_ring::KvRing`]):
-//!   no `copy_within` roll, no `[memory; new]` concatenation.
+//!   no `copy_within` roll, no `[memory; new]` concatenation; exposes
+//!   the two-segment contiguous view ([`kv_ring::KvRing::as_segments`])
+//!   the attention kernels iterate.
 //! - [`batched`] — [`batched::BatchedScalarDeepCoT`], the multi-lane
-//!   stepper: lane rows stacked into single shared-weight matmuls, all
-//!   intermediates in a preallocated scratch workspace (steady-state
-//!   ticks allocate nothing). Backs both the single-lane CPU baseline
-//!   and the coordinator's scalar slot backend.
+//!   stepper: lane rows stacked into single shared-weight packed
+//!   matmuls, all intermediates in a preallocated scratch workspace
+//!   (steady-state ticks allocate nothing). Backs both the single-lane
+//!   CPU baseline and the coordinator's scalar slot backend.
 //! - [`encoder`] — the full-window oracle (`encoder_forward`) and the
 //!   single-lane [`encoder::ScalarDeepCoT`] wrapper.
 //! - [`naive`]   — the pre-refactor stepper, frozen as the benchmark
-//!   baseline and refactor-equivalence oracle.
-//! - [`params`]  — weight loading from artifacts, plus synthetic
-//!   parameters for hermetic tests/benches.
-//! - [`rope`], [`linalg`] — RoPE and the probe trainer's Cholesky/ridge.
+//!   baseline and refactor-equivalence oracle (`bench_kernels` measures
+//!   the kernel suite against it).
+//! - [`params`]  — weight loading from artifacts, synthetic parameters
+//!   for hermetic tests/benches, and the load-time packing pass
+//!   (`ModelParams::pack`).
+//! - [`rope`]    — RoPE: the per-call reference path and the memoized
+//!   [`rope::RopeTable`] (bitwise-transparent precomputation).
+//! - [`linalg`]  — the probe trainer's Cholesky/ridge, row-sweep
+//!   (cache-friendly) solves built on the [`kernels`] primitives.
 
 pub mod batched;
 pub mod encoder;
+pub mod kernels;
 pub mod kv_ring;
 pub mod linalg;
 pub mod naive;

@@ -8,8 +8,11 @@
 //! model config — allocator traffic and O(mem_len·d_head) shuffles that
 //! polluted the step-latency numbers the paper's runtime comparisons
 //! rest on. `bench_fig1`'s scalar sweep reports it side by side with
-//! the ring-buffer engine, and `tests/scalar_continual.rs` pins the two
-//! to identical numerics.
+//! the ring-buffer engine, `bench_kernels` measures the `nn::kernels`
+//! suite's per-op and end-to-end speedups against it, and
+//! `tests/scalar_continual.rs` / `tests/kernels_equiv.rs` pin the two
+//! to equivalent numerics (1e-4 relative — the kernel suite's split
+//! accumulators legitimately reassociate f32 sums).
 
 use anyhow::Result;
 

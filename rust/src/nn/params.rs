@@ -46,6 +46,17 @@ pub struct ModelParams {
 }
 
 impl ModelParams {
+    /// One-time weight-packing pass for the kernel-suite hot path:
+    /// every projection transposed + bias-fused into
+    /// [`crate::nn::kernels::PackedParams`]. Done at stepper
+    /// construction so steady-state ticks stay zero-alloc; the batched
+    /// stepper then clones the per-layer [`Norm`]s out and drops the
+    /// naive-layout `self`, so each weight is resident exactly once
+    /// (the naive/oracle paths keep their own `ModelParams`).
+    pub fn pack(&self) -> crate::nn::kernels::PackedParams {
+        crate::nn::kernels::PackedParams::pack(self)
+    }
+
     /// Load from the variant's weight file (artifacts dir relative).
     pub fn load(artifacts_dir: &std::path::Path, entry: &VariantEntry) -> Result<Self> {
         let tensors = load_weights(&artifacts_dir.join(&entry.weights), &entry.params)?;

@@ -1,7 +1,31 @@
 //! Rotary Position Embedding — scalar mirror of `python/compile/rope.py`
 //! (interleaved-pair convention, base 10000).
+//!
+//! Two paths share one op sequence:
+//!
+//! * [`apply_rope_inplace`] — the reference per-call path: recomputes
+//!   `powf` + `sin_cos` for every pair on every call. Used by the
+//!   frozen `nn::naive` baseline and the full-window oracle.
+//! * [`RopeTable`] — the kernel-suite path: inverse frequencies are
+//!   precomputed once at construction and per-position sin/cos rows are
+//!   memoized in preallocated storage. Both paths compute each angle as
+//!   `pos as f32 * inv_freq(dh, i)` with the identical [`inv_freq`]
+//!   expression, so the table is **bitwise-transparent**: rotating with
+//!   a cached row equals rotating with [`apply_rope_inplace`] bit for
+//!   bit (pinned in `tests/kernels_equiv.rs`). That is what lets the
+//!   batched stepper reuse one row across Q/K, all heads, and all
+//!   layers of a tick without perturbing the cluster's bitwise
+//!   invariants.
 
 pub const BASE: f32 = 10000.0;
+
+/// Inverse frequency of pair `i` in a `dh`-wide head: the single op
+/// sequence shared by the per-call path and [`RopeTable`] (any
+/// divergence here would break the table's bitwise transparency).
+#[inline]
+pub fn inv_freq(dh: usize, i: usize) -> f32 {
+    1.0 / BASE.powf((2 * i) as f32 / dh as f32)
+}
 
 /// Rotate one head vector (len dh, even) in place by absolute `pos`.
 pub fn apply_rope_inplace(x: &mut [f32], pos: i32) {
@@ -9,13 +33,111 @@ pub fn apply_rope_inplace(x: &mut [f32], pos: i32) {
     debug_assert_eq!(dh % 2, 0);
     let half = dh / 2;
     for i in 0..half {
-        let freq = 1.0 / BASE.powf((2 * i) as f32 / dh as f32);
+        let freq = inv_freq(dh, i);
         let ang = pos as f32 * freq;
         let (sin, cos) = ang.sin_cos();
         let e = x[2 * i];
         let o = x[2 * i + 1];
         x[2 * i] = e * cos - o * sin;
         x[2 * i + 1] = e * sin + o * cos;
+    }
+}
+
+/// Rotate one head vector in place with a precomputed sin/cos row
+/// (`sin.len() == cos.len() == x.len() / 2`). Identical arithmetic to
+/// [`apply_rope_inplace`] given identical sin/cos values.
+#[inline]
+pub fn apply_rope_cached(x: &mut [f32], sin: &[f32], cos: &[f32]) {
+    let half = x.len() / 2;
+    debug_assert_eq!(half * 2, x.len());
+    debug_assert_eq!(sin.len(), half);
+    debug_assert_eq!(cos.len(), half);
+    for i in 0..half {
+        let e = x[2 * i];
+        let o = x[2 * i + 1];
+        x[2 * i] = e * cos[i] - o * sin[i];
+        x[2 * i + 1] = e * sin[i] + o * cos[i];
+    }
+}
+
+/// Rotate every `dh`-wide head chunk of a stacked `(n_heads * dh)` row
+/// with one shared sin/cos row — all heads of a token share the same
+/// position and head width, so the row is computed once per token
+/// instead of once per head per Q/K.
+#[inline]
+pub fn apply_rope_row(row: &mut [f32], dh: usize, sin: &[f32], cos: &[f32]) {
+    for chunk in row.chunks_exact_mut(dh) {
+        apply_rope_cached(chunk, sin, cos);
+    }
+}
+
+/// Precomputed inverse-frequency table plus memoized per-position
+/// sin/cos rows, in storage sized once at construction (steady-state
+/// use performs no heap allocation).
+///
+/// Memoization is keyed per `slot` (the caller's stacked-row index):
+/// [`RopeTable::row`] recomputes the row only when that slot's position
+/// changed since its last call. In the batched stepper this turns
+/// `2 · n_heads · n_layers` trig evaluations per token per tick into
+/// one (the first layer computes, every later layer and the K/Q twin
+/// hit the memo), and masked lanes — whose clocks don't advance — hit
+/// the memo across ticks entirely. Because a row's contents are a pure
+/// function of `pos` alone, memoization never changes results: stale
+/// slots are simply recomputed on their next use, and resets /
+/// snapshot imports need no cache invalidation.
+#[derive(Debug, Clone)]
+pub struct RopeTable {
+    half: usize,
+    inv_freq: Vec<f32>,
+    /// Position currently cached in each slot (`None` = never filled).
+    memo: Vec<Option<i32>>,
+    sin: Vec<f32>,
+    cos: Vec<f32>,
+}
+
+impl RopeTable {
+    /// Table for `dh`-wide heads (`dh / 2` rotation pairs) with `slots`
+    /// memo rows. `dh` may be odd only if the table is never used (a
+    /// non-RoPE model constructing its stepper); rotation itself
+    /// requires even `dh` like [`apply_rope_inplace`].
+    pub fn new(dh: usize, slots: usize) -> Self {
+        let half = dh / 2;
+        Self {
+            half,
+            inv_freq: (0..half).map(|i| inv_freq(dh, i)).collect(),
+            memo: vec![None; slots],
+            sin: vec![0.0; slots * half],
+            cos: vec![0.0; slots * half],
+        }
+    }
+
+    /// Rotation pairs per head (`dh / 2`).
+    pub fn half(&self) -> usize {
+        self.half
+    }
+
+    /// Memo capacity in rows.
+    pub fn slots(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// The sin/cos row for absolute position `pos`, memoized on `slot`.
+    /// Computes (in place, allocation-free) only if the slot's cached
+    /// position differs.
+    pub fn row(&mut self, slot: usize, pos: i32) -> (&[f32], &[f32]) {
+        let h = self.half;
+        if self.memo[slot] != Some(pos) {
+            let sin = &mut self.sin[slot * h..(slot + 1) * h];
+            let cos = &mut self.cos[slot * h..(slot + 1) * h];
+            for (i, f) in self.inv_freq.iter().enumerate() {
+                let ang = pos as f32 * f;
+                let (sv, cv) = ang.sin_cos();
+                sin[i] = sv;
+                cos[i] = cv;
+            }
+            self.memo[slot] = Some(pos);
+        }
+        (&self.sin[slot * h..(slot + 1) * h], &self.cos[slot * h..(slot + 1) * h])
     }
 }
 
@@ -54,5 +176,63 @@ mod tests {
         apply_rope_inplace(&mut q2, 105);
         apply_rope_inplace(&mut k2, 102);
         assert!((dot(&q1, &k1) - dot(&q2, &k2)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn table_rows_are_bitwise_transparent() {
+        for dh in [2usize, 4, 6, 10, 16] {
+            let mut tab = RopeTable::new(dh, 3);
+            for &pos in &[0i32, 1, 7, 129, 100_000] {
+                let mut want: Vec<f32> = (0..dh).map(|i| (i as f32 * 0.3) - 1.0).collect();
+                let mut got = want.clone();
+                apply_rope_inplace(&mut want, pos);
+                let (sin, cos) = tab.row(1, pos);
+                apply_rope_cached(&mut got, sin, cos);
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "dh {dh} pos {pos}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_memo_hits_and_refills() {
+        let mut tab = RopeTable::new(4, 2);
+        let first: Vec<f32> = {
+            let (s, c) = tab.row(0, 42);
+            s.iter().chain(c).copied().collect()
+        };
+        // same slot, same pos: memo hit returns identical bits
+        let again: Vec<f32> = {
+            let (s, c) = tab.row(0, 42);
+            s.iter().chain(c).copied().collect()
+        };
+        assert_eq!(first, again);
+        // same slot, new pos: refilled; returning to the old pos
+        // recomputes the exact original row
+        tab.row(0, 43);
+        let back: Vec<f32> = {
+            let (s, c) = tab.row(0, 42);
+            s.iter().chain(c).copied().collect()
+        };
+        assert_eq!(first, back);
+        assert_eq!(tab.half(), 2);
+        assert_eq!(tab.slots(), 2);
+    }
+
+    #[test]
+    fn apply_rope_row_rotates_every_head_chunk() {
+        let dh = 4;
+        let mut tab = RopeTable::new(dh, 1);
+        let row0: Vec<f32> = (0..8).map(|i| i as f32 * 0.25).collect();
+        let mut per_head = row0.clone();
+        apply_rope_inplace(&mut per_head[0..4], 9);
+        apply_rope_inplace(&mut per_head[4..8], 9);
+        let mut whole = row0;
+        let (sin, cos) = tab.row(0, 9);
+        apply_rope_row(&mut whole, dh, sin, cos);
+        for (g, w) in whole.iter().zip(&per_head) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
     }
 }

@@ -2,9 +2,15 @@
 //!
 //! Row-major `Mat` (2-D) is all the engine needs; higher-rank shapes are
 //! handled as explicit loops at call sites for clarity over generality.
-//! The hot path (continual stepping) uses the `_into` variants plus
-//! [`RowsRef`]/[`RowsMut`] row-range views so a steady-state tick
-//! performs no heap allocation.
+//! The `_into` variants plus [`RowsRef`]/[`RowsMut`] row-range views let
+//! callers work without steady-state heap allocation.
+//!
+//! The free functions here ([`dot`], [`sqdist`], …) are deliberately
+//! **sequential-summation naive**: they are the oracle/baseline
+//! numerics that `nn::naive`, `nn::encoder` and the golden tests pin
+//! down, and what `bench_kernels` measures the 8-wide unrolled
+//! `nn::kernels` suite against. The batched hot path does not call
+//! them.
 
 /// Row-major matrix of f32.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,0 +1,281 @@
+//! Kernel-suite equivalence: the `nn::kernels` hot path pinned against
+//! the frozen `nn::naive` baseline and the old column-major linalg
+//! walks, swept across the geometries where the vectorized kernels take
+//! their remainder and wraparound paths:
+//!
+//! * `d_head` not a multiple of the 8-wide unroll (6, 10) — the split
+//!   accumulators' remainder lanes;
+//! * `mem_len` mid-wraparound — `KvRing::as_segments` returns two
+//!   non-empty slices;
+//! * single-lane and remainder lane counts (1, 3, 5) — lane-count
+//!   invariance of the packed projections;
+//! * multi-token ticks (`m_tokens` > 1) and both attention/norm modes.
+//!
+//! Tolerance policy (see `nn::kernels` docs): the kernel suite uses a
+//! fixed summation order that legitimately reassociates f32 sums, so
+//! engine-level equivalence vs `nn::naive` is asserted within 1e-4
+//! relative tolerance; purely elementwise rewrites (axpy sweeps, the
+//! row-sweep Cholesky solve, ridge's outer-product gram build) are
+//! asserted **bitwise**.
+
+use deepcot::manifest::ModelConfig;
+use deepcot::nn::batched::BatchedScalarDeepCoT;
+use deepcot::nn::kernels;
+use deepcot::nn::linalg::{cholesky, cholesky_solve, ridge};
+use deepcot::nn::naive::NaiveScalarDeepCoT;
+use deepcot::nn::params::ModelParams;
+use deepcot::nn::tensor::{self, Mat};
+use deepcot::util::rng::Rng;
+
+fn assert_rel_close(what: &str, got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol + tol * w.abs(),
+            "{what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The unrolled reductions match sequential summation for every length
+/// through several unroll multiples (full-chunk + remainder paths).
+#[test]
+fn unrolled_primitives_match_sequential_all_lengths() {
+    let mut rng = Rng::new(101);
+    for len in 0..=40 {
+        let a = rng.normal_vec(len, 1.0);
+        let b = rng.normal_vec(len, 1.0);
+        let want_dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let got_dot = kernels::dot(&a, &b);
+        assert!(
+            (got_dot - want_dot).abs() <= 1e-4 + 1e-4 * want_dot.abs(),
+            "dot len {len}: {got_dot} vs {want_dot}"
+        );
+        let want_sq = tensor::sqdist(&a, &b);
+        let got_sq = kernels::sqdist(&a, &b);
+        assert!(
+            (got_sq - want_sq).abs() <= 1e-4 + 1e-4 * want_sq.abs(),
+            "sqdist len {len}: {got_sq} vs {want_sq}"
+        );
+    }
+}
+
+/// Fixed summation order: the same values produce the same bits no
+/// matter where the operands sit in their backing buffers (the order
+/// depends on length alone, never on alignment).
+#[test]
+fn kernel_dot_is_offset_independent() {
+    let mut rng = Rng::new(102);
+    let len = 37;
+    let a = rng.normal_vec(len, 1.0);
+    let b = rng.normal_vec(len, 1.0);
+    let want = kernels::dot(&a, &b).to_bits();
+    for pad in 1..=4 {
+        let mut pa = rng.normal_vec(pad, 1.0);
+        pa.extend_from_slice(&a);
+        let mut pb = rng.normal_vec(pad + 2, 1.0);
+        pb.extend_from_slice(&b);
+        let got = kernels::dot(&pa[pad..], &pb[pad + 2..]).to_bits();
+        assert_eq!(got, want, "dot bits changed at offset {pad}");
+    }
+}
+
+/// Packed fused matmul+bias vs the naive matmul-then-add_row pipeline,
+/// across shapes that exercise full-chunk and remainder dot paths.
+#[test]
+fn packed_linear_matches_naive_pipeline() {
+    let mut rng = Rng::new(103);
+    for (k, c) in [(3usize, 5usize), (6, 9), (8, 8), (10, 4), (20, 20), (64, 10)] {
+        for rows in [1usize, 2, 5] {
+            let w = Mat::from_vec(k, c, rng.normal_vec(k * c, 1.0 / (k as f32).sqrt()));
+            let bias = rng.normal_vec(c, 0.1);
+            let x = Mat::from_vec(rows, k, rng.normal_vec(rows * k, 1.0));
+            let mut want = x.matmul(&w);
+            want.add_row(&bias);
+            let packed = kernels::PackedLinear::pack(&w, &bias);
+            let mut got = Mat::zeros(rows, c);
+            packed.forward_into(&x, &mut got);
+            assert_rel_close(&format!("packed {rows}x{k}x{c}"), &got.data, &want.data, 1e-4);
+            // gelu-fused epilogue vs naive matmul + bias + gelu sweep
+            let mut want_g = want.clone();
+            for v in want_g.data.iter_mut() {
+                *v = tensor::gelu(*v);
+            }
+            let mut got_g = Mat::zeros(rows, c);
+            packed.forward_gelu_into(&x, &mut got_g);
+            assert_rel_close(
+                &format!("packed gelu {rows}x{k}x{c}"),
+                &got_g.data,
+                &want_g.data,
+                1e-4,
+            );
+        }
+    }
+}
+
+/// The engine-level pin: batched kernel-path lanes vs independent
+/// frozen-naive steppers, swept over odd geometries, lane counts, both
+/// attention modes, both norms, and enough ticks that every ring wraps
+/// several times (so `as_segments` serves two non-empty slices at
+/// varied splits).
+#[test]
+fn batched_kernel_path_matches_naive_on_odd_geometries() {
+    // (d_model, heads, layers, window, m, activation, norm):
+    // dh = 6 and 10 exercise the unroll remainder; m = 2/3 exercise
+    // multi-token ticks and mid-window ring offsets
+    let cases: [(usize, usize, usize, usize, usize, &str, &str); 3] = [
+        (12, 2, 2, 7, 1, "softmax", "layernorm"),
+        (20, 2, 3, 9, 2, "soft", "rezero"),
+        (16, 2, 2, 8, 3, "softmax", "rezero"),
+    ];
+    for &(d, h, l, window, m, activation, norm) in &cases {
+        let mut cfg = ModelConfig::synthetic(d, h, l, window);
+        cfg.m_tokens = m;
+        cfg.activation = activation.to_string();
+        cfg.norm = norm.to_string();
+        let params = ModelParams::synthetic(&cfg, &mut Rng::new(7 + d as u64));
+        for lanes in [1usize, 3, 5] {
+            let mut batched = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params.clone(), lanes);
+            let mut naives: Vec<NaiveScalarDeepCoT> = (0..lanes)
+                .map(|_| NaiveScalarDeepCoT::new(cfg.clone(), params.clone()))
+                .collect();
+            let mut rngs: Vec<Rng> = (0..lanes).map(|s| Rng::new(900 + s as u64)).collect();
+            for tick in 0..25 {
+                let mut stacked = Mat::zeros(lanes * m, cfg.d_in);
+                let mut lane_toks = Vec::new();
+                for (s, rng) in rngs.iter_mut().enumerate() {
+                    let toks = rng.normal_vec(m * cfg.d_in, 1.0);
+                    stacked.data[s * m * cfg.d_in..(s + 1) * m * cfg.d_in]
+                        .copy_from_slice(&toks);
+                    lane_toks.push(toks);
+                }
+                let mut want: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+                for (solo, toks) in naives.iter_mut().zip(&lane_toks) {
+                    let t = Mat::from_vec(m, cfg.d_in, toks.clone());
+                    let (lg, out) = solo.tick(&t).unwrap();
+                    want.push((lg, out.data));
+                }
+                let step = batched.tick_all(&stacked).unwrap();
+                for s in 0..lanes {
+                    let label =
+                        format!("{d}/{h}/{l} n={window} m={m} {activation}/{norm} lanes={lanes} \
+                         tick={tick} lane={s}");
+                    assert_rel_close(
+                        &format!("{label} logits"),
+                        step.logits.row(s),
+                        &want[s].0,
+                        1e-4,
+                    );
+                    let got_out = step.out.rows_view(s * m, m);
+                    assert_rel_close(
+                        &format!("{label} out"),
+                        got_out.as_slice(),
+                        &want[s].1,
+                        1e-4,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Lane-count invariance, bitwise: the same stream stepped in a 1-lane
+/// and a 5-lane instance (other lanes busy) produces identical bits —
+/// the property the sharded cluster's layout-equivalence rests on.
+#[test]
+fn lane_count_never_changes_a_streams_bits() {
+    let cfg = ModelConfig::synthetic(20, 2, 2, 9);
+    let params = ModelParams::synthetic(&cfg, &mut Rng::new(23));
+    let mut solo = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params.clone(), 1);
+    let mut wide = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, 5);
+    let mut stream_rng = Rng::new(31);
+    let mut noise_rng = Rng::new(37);
+    let mut pos = 0i32;
+    for _ in 0..20 {
+        let tok = stream_rng.normal_vec(cfg.d_in, 1.0);
+        let solo_toks = Mat::from_vec(1, cfg.d_in, tok.clone());
+        let mut wide_toks = Mat::from_vec(5, cfg.d_in, noise_rng.normal_vec(5 * cfg.d_in, 1.0));
+        wide_toks.row_mut(2).copy_from_slice(&tok);
+        let (sl, so) = {
+            let s = solo.tick_lanes(&solo_toks, &[true], &[pos]).unwrap();
+            (s.logits.row(0).to_vec(), s.out.row(0).to_vec())
+        };
+        let (wl, wo) = {
+            let live = [true, true, true, true, true];
+            let p = [pos + 7, pos + 1, pos, pos + 3, pos];
+            let s = wide.tick_lanes(&wide_toks, &live, &p).unwrap();
+            (s.logits.row(2).to_vec(), s.out.row(2).to_vec())
+        };
+        assert_eq!(bits(&sl), bits(&wl), "logits bits diverged across lane counts");
+        assert_eq!(bits(&so), bits(&wo), "activation bits diverged across lane counts");
+        pos += 1;
+    }
+}
+
+/// Old column-major forward/backward substitution, kept verbatim as the
+/// reference the cache-friendly row sweep must reproduce bitwise.
+fn cholesky_solve_column_walk(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    let mut x = b.clone();
+    for col in 0..b.cols {
+        for i in 0..n {
+            let mut s = x.at(i, col);
+            for k in 0..i {
+                s -= l.at(i, k) * x.at(k, col);
+            }
+            *x.at_mut(i, col) = s / l.at(i, i);
+        }
+        for i in (0..n).rev() {
+            let mut s = x.at(i, col);
+            for k in i + 1..n {
+                s -= l.at(k, i) * x.at(k, col);
+            }
+            *x.at_mut(i, col) = s / l.at(i, i);
+        }
+    }
+    x
+}
+
+#[test]
+fn row_sweep_cholesky_solve_is_bitwise_identical_to_column_walk() {
+    let mut rng = Rng::new(104);
+    for (n, cols) in [(1usize, 1usize), (4, 3), (9, 7), (16, 5)] {
+        // SPD via A = G G^T + n·I
+        let g = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+        let mut a = g.matmul(&g.transpose());
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f32;
+        }
+        let l = cholesky(&a).unwrap();
+        let b = Mat::from_vec(n, cols, rng.normal_vec(n * cols, 1.0));
+        let got = cholesky_solve(&l, &b);
+        let want = cholesky_solve_column_walk(&l, &b);
+        assert_eq!(bits(&got.data), bits(&want.data), "solve bits diverged at n={n}");
+    }
+}
+
+/// Ridge's outer-product gram build vs the old transpose+matmul
+/// formulation — same inner-dimension summation order, bitwise equal.
+#[test]
+fn ridge_outer_product_build_is_bitwise_identical_to_matmul_build() {
+    let mut rng = Rng::new(105);
+    let (n, d, c) = (60usize, 11usize, 3usize);
+    let x = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+    let y = Mat::from_vec(n, c, rng.normal_vec(n * c, 1.0));
+    let lambda = 1e-2;
+    let got = ridge(&x, &y, lambda).unwrap();
+    // old formulation, verbatim
+    let xt = x.transpose();
+    let mut gram = xt.matmul(&x);
+    for i in 0..gram.rows {
+        *gram.at_mut(i, i) += lambda;
+    }
+    let l = cholesky(&gram).unwrap();
+    let xty = xt.matmul(&y);
+    let want = cholesky_solve_column_walk(&l, &xty);
+    assert_eq!(bits(&got.data), bits(&want.data), "ridge bits diverged");
+}

@@ -28,16 +28,23 @@ fn cfg(
 fn assert_close(what: &str, got: &[f32], want: &[f32], tol: f32) {
     assert_eq!(got.len(), want.len(), "{what}: length");
     for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        // hybrid abs+rel: unnormalized regimes (SOFT / ReZero) grow
+        // activations, so reassociation drift scales with magnitude
         assert!(
-            (g - w).abs() <= tol,
+            (g - w).abs() <= tol + tol * w.abs(),
             "{what}[{i}]: got {g}, want {w} (tol {tol})"
         );
     }
 }
 
 /// The refactored ring-buffer stepper must reproduce the pre-refactor
-/// flat-memory stepper exactly: same logical attention order, same
-/// summation order, over a deep stack and many wraparounds.
+/// flat-memory stepper: same logical attention order over a deep stack
+/// and many wraparounds. Since the kernel-suite refactor the hot path
+/// sums with 8-wide split accumulators (fixed order, but legitimately
+/// reassociated vs the naive sequential sums), so equivalence is
+/// pinned at the 1e-4-scale tolerance of the `nn::kernels` determinism
+/// policy rather than the old identical-numerics 1e-6
+/// (tests/kernels_equiv.rs sweeps this property across odd geometries).
 #[test]
 fn ring_stepper_matches_pre_refactor_naive() {
     for (activation, norm, m) in
@@ -57,9 +64,9 @@ fn ring_stepper_matches_pre_refactor_naive() {
                 &format!("{activation}/{norm} tick {t} logits"),
                 rl,
                 &nl,
-                1e-6,
+                5e-4,
             );
-            assert_close(&format!("{activation}/{norm} tick {t} out"), &ro.data, &no.data, 1e-6);
+            assert_close(&format!("{activation}/{norm} tick {t} out"), &ro.data, &no.data, 5e-4);
         }
     }
 }

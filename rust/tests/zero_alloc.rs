@@ -129,4 +129,33 @@ fn steady_state_ticks_allocate_nothing() {
         after - before
     );
     assert!(sink.is_finite());
+
+    // packed-kernel remainder paths + RopeTable steady state: a
+    // geometry whose d_head (10) is not a multiple of the 8-wide
+    // unroll, with multi-token ticks so the ring write head lands at
+    // varied mid-buffer offsets. The packing pass and the rope-row
+    // memo storage are built at construction; steady-state ticks must
+    // compute sin/cos rows and remainder-lane dots entirely in place.
+    let mut odd_cfg = ModelConfig::synthetic(20, 2, 2, 9);
+    odd_cfg.m_tokens = 2;
+    let odd_params = ModelParams::synthetic(&odd_cfg, &mut Rng::new(29));
+    let mut odd = BatchedScalarDeepCoT::with_lanes(odd_cfg.clone(), odd_params, 3);
+    let odd_toks =
+        Mat::from_vec(3 * 2, odd_cfg.d_in, Rng::new(31).normal_vec(3 * 2 * odd_cfg.d_in, 1.0));
+    for _ in 0..4 {
+        odd.tick_all(&odd_toks).unwrap();
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        let step = odd.tick_all(&odd_toks).unwrap();
+        sink += step.logits.at(0, 0) + step.out.at(0, 0);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "odd-geometry packed-kernel tick allocated {} times across 5 steady-state ticks",
+        after - before
+    );
+    assert!(sink.is_finite());
 }
