@@ -8,6 +8,28 @@
 //! swap the variant name to serve those instead.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! # Serving over TCP (`deepcot_serve`)
+//!
+//! Everything below also works from *outside* the process: the
+//! `deepcot_serve` binary puts the same engine behind the
+//! length-prefixed wire protocol in `deepcot::net` (one engine
+//! `Session` per client stream; backpressure, saturation, and shutdown
+//! arrive as the same typed errors you see in-process):
+//!
+//!     # terminal 1 — hermetic synthetic server on an ephemeral port
+//!     cargo run --release --bin deepcot_serve -- \
+//!         --synthetic --shards 2 --listen 127.0.0.1:7433
+//!
+//!     # one-command loopback self-test (CI runs exactly this):
+//!     # serve, push 100 tokens over TCP, clean shutdown
+//!     cargo run --release --bin deepcot_serve -- \
+//!         --synthetic --listen 127.0.0.1:0 --smoke 100
+//!
+//! From Rust, connect with `deepcot::net::client::NetClient`
+//! (`connect` → `open` → `push`/`recv_tick` → `close`, plus
+//! `shutdown_server` for a graceful drain); `bench_throughput --tcp`
+//! measures the same closed-loop traffic end-to-end over loopback.
 
 use std::time::Duration;
 

@@ -19,6 +19,12 @@
 //! the attempted/completed/aborted counters and quiesce quantiles
 //! printed from `ClusterMetrics`.
 //!
+//! With `--tcp` the same closed-loop clients talk to the engine through
+//! a loopback `net::server::NetServer` front door via the blocking
+//! `net::client::NetClient` — the end-to-end-over-the-wire series of
+//! the perf trajectory, directly comparable to the in-process one
+//! (same model, same traffic, `"transport"` recorded in `--json`).
+//!
 //! The CI smoke runs use a tiny model, 2 shards and a bounded tick
 //! count — see .github/workflows/ci.yml.
 
@@ -28,6 +34,9 @@ use anyhow::{Context, Result};
 
 use deepcot::config::{EngineBackend, EngineConfig};
 use deepcot::coordinator::engine::EngineThread;
+use deepcot::coordinator::slots::StreamId;
+use deepcot::net::client::NetClient;
+use deepcot::net::server::NetServer;
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::cli::Cli;
 use deepcot::util::json::{num, obj, Json};
@@ -52,18 +61,60 @@ fn run_one(
     ticks: usize,
     d_in: usize,
     migrate_every: usize,
+    tcp: bool,
 ) -> Result<RunResult> {
     let shards = cfg.effective_shards();
     let slots_per_shard = cfg.slots_per_shard;
     let engine = EngineThread::spawn(cfg)?;
+    // --tcp: same closed-loop clients, but every push/recv crosses a
+    // loopback socket through the wire protocol (the end-to-end series
+    // of the perf trajectory, next to the in-process one)
+    let server = if tcp {
+        Some(NetServer::start("127.0.0.1:0", engine.handle()).context("starting net server")?)
+    } else {
+        None
+    };
+    let addr = server.as_ref().map(|s| s.local_addr());
     let t0 = Instant::now();
     let mut clients = Vec::new();
     for s in 0..streams {
         let h = engine.handle();
         clients.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::new(0xBE9C4 ^ ((s as u64 + 1) * 0x9E37));
-            // total slots >= streams, but an open can race a neighbor's
-            // placement; retry briefly instead of failing the bench
+            if let Some(addr) = addr {
+                let mut c = NetClient::connect(addr).context("connect")?;
+                c.set_read_timeout(Some(Duration::from_secs(60)))?;
+                // total slots >= streams, but an open can race a
+                // neighbor's placement; retry briefly
+                let stream = {
+                    let mut attempt = 0;
+                    loop {
+                        match c.open() {
+                            Ok(stream) => break stream,
+                            Err(_) if attempt < 50 => {
+                                attempt += 1;
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(e) => return Err(e).context("tcp open"),
+                        }
+                    }
+                };
+                for t in 0..ticks {
+                    c.push(stream, &rng.normal_vec(d_in, 1.0))
+                        .with_context(|| format!("tcp push tick {t}"))?;
+                    c.recv_tick(stream).with_context(|| format!("tcp tick {t} result"))?;
+                    if migrate_every > 0 && (t + 1) % migrate_every == 0 {
+                        // wire ids ARE engine StreamIds, so the bench
+                        // can drive migration in-process while the
+                        // traffic stays on the socket
+                        let id = StreamId(stream);
+                        let cur = h.shard_of(id).unwrap_or(0);
+                        let _ = h.migrate(id, (cur + 1) % shards.max(1));
+                    }
+                }
+                let _ = c.close(stream);
+                return Ok(());
+            }
             let sess = {
                 let mut attempt = 0;
                 loop {
@@ -99,6 +150,9 @@ fn run_one(
     }
     let wall = t0.elapsed();
     let m = engine.handle().metrics()?;
+    if let Some(server) = server {
+        server.shutdown();
+    }
     engine.shutdown()?;
     let total_ticks = (streams * ticks) as f64;
     Ok(RunResult {
@@ -127,8 +181,10 @@ fn main() -> Result<()> {
         .opt("deadline-us", "200", "partial-batch flush deadline (µs)")
         .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin")
         .opt("migrate-every", "0", "live-migrate each stream every N ticks (0 = off)")
-        .opt("json", "", "write sweep results JSON to this path (perf trajectory)");
+        .opt("json", "", "write sweep results JSON to this path (perf trajectory)")
+        .flag("tcp", "drive the engine end-to-end over a loopback TCP front door");
     let args = cli.parse()?;
+    let tcp = args.has("tcp");
     let shard_counts: Vec<usize> = args
         .get("shards-list")
         .split(',')
@@ -151,7 +207,8 @@ fn main() -> Result<()> {
     };
     let dir = spec.write()?;
     println!(
-        "bench_throughput: {} streams x {} ticks, model d={} L={} H={} n={}, deadline={}µs{}",
+        "bench_throughput[{}]: {} streams x {} ticks, model d={} L={} H={} n={}, deadline={}µs{}",
+        if tcp { "tcp" } else { "in-process" },
         streams,
         ticks,
         spec.d_model,
@@ -180,7 +237,7 @@ fn main() -> Result<()> {
             .slots_per_shard(slots)
             .placement(args.get("placement").parse()?)
             .build();
-        results.push(run_one(cfg, streams, ticks, spec.d_in, migrate_every)?);
+        results.push(run_one(cfg, streams, ticks, spec.d_in, migrate_every, tcp)?);
     }
     // speedups are anchored to the 1-shard entry when the sweep has one
     // (the headline sharded-vs-single number); otherwise to the first
@@ -209,6 +266,10 @@ fn main() -> Result<()> {
     if !args.get("json").is_empty() {
         let doc = obj(vec![
             ("bench", Json::Str("throughput".into())),
+            (
+                "transport",
+                Json::Str(if tcp { "tcp-loopback".into() } else { "in-process".into() }),
+            ),
             ("streams", num(streams as f64)),
             ("ticks", num(ticks as f64)),
             ("migrate_every", num(migrate_every as f64)),

@@ -1,0 +1,99 @@
+//! `deepcot_serve` — the TCP serving front door as a binary: spawn the
+//! shard cluster and expose it over the `net::proto` wire protocol.
+//!
+//! Serve real artifacts (default) or a hermetic synthetic model:
+//!
+//!     cargo run --release --bin deepcot_serve -- --listen 127.0.0.1:7433
+//!     cargo run --release --bin deepcot_serve -- --synthetic --shards 2
+//!
+//! All engine options (`--variant`, `--backend`, `--shards`,
+//! `--placement`, …) come from `EngineConfig::cli`. `--listen
+//! 127.0.0.1:0` picks an ephemeral port (printed on startup). The
+//! server runs until a client sends a SHUTDOWN frame, then drains:
+//! every live stream gets a terminal typed error, the engine shuts
+//! down cleanly, and the process exits 0.
+//!
+//! `--smoke N` is the CI loopback self-test: after startup an
+//! in-process client connects over TCP, opens a stream, pushes N
+//! tokens (checking every tick reply), prints the server's metrics
+//! report, and requests a clean shutdown.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use deepcot::config::{EngineBackend, EngineConfig};
+use deepcot::coordinator::engine::EngineThread;
+use deepcot::manifest::Manifest;
+use deepcot::net::client::NetClient;
+use deepcot::net::server::NetServer;
+use deepcot::synthetic::SyntheticServeSpec;
+use deepcot::util::cli::Cli;
+use deepcot::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let cli = EngineConfig::cli(Cli::new(
+        "deepcot_serve: TCP wire-protocol front door for the DeepCoT serving cluster",
+    ))
+    .opt("listen", "127.0.0.1:7433", "address to listen on (port 0 = ephemeral)")
+    .opt("smoke", "0", "loopback self-test: push N tokens, then clean shutdown (0 = off)")
+    .flag("synthetic", "serve a hermetic synthetic model (no `make artifacts` needed)");
+    let args = cli.parse()?;
+    let mut cfg = EngineConfig::from_args(&args)?;
+    if args.has("synthetic") {
+        cfg.artifacts_dir = SyntheticServeSpec::default().write()?;
+        cfg.variant = SyntheticServeSpec::variant_name(1);
+        cfg.backend = EngineBackend::Scalar;
+        if cfg.slots_per_shard == 0 {
+            cfg.slots_per_shard = 4;
+        }
+    }
+    // lane width for the smoke client, straight off the served manifest
+    let (manifest, _) = Manifest::load(&cfg.artifacts_dir)?;
+    let mc = &manifest.variant(&cfg.variant)?.config;
+    let d_lane = mc.m_tokens * mc.d_in;
+
+    let engine = EngineThread::spawn(cfg).context("spawning the serving cluster")?;
+    let server =
+        NetServer::start(args.get("listen"), engine.handle()).context("binding the front door")?;
+    println!("deepcot_serve: listening on {}", server.local_addr());
+
+    let smoke = args.get_usize("smoke")?;
+    if smoke > 0 {
+        run_smoke(&server, smoke, d_lane)?;
+    }
+
+    // serve until some client requests shutdown (the smoke client does)
+    while !server.wait_shutdown_requested(Duration::from_secs(3600)) {}
+    println!("deepcot_serve: shutdown requested; draining");
+    let net = server.metrics();
+    server.shutdown();
+    engine.shutdown().context("engine shutdown")?;
+    println!("deepcot_serve: drained ({})", net.report());
+    Ok(())
+}
+
+/// Loopback self-test: a real TCP client against our own front door.
+fn run_smoke(server: &NetServer, ticks: usize, d_lane: usize) -> Result<()> {
+    let mut client =
+        NetClient::connect(server.local_addr()).context("smoke client connecting")?;
+    client.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let stream = client.open().context("smoke open")?;
+    let mut rng = Rng::new(0x5E21E);
+    for t in 0..ticks {
+        client
+            .push(stream, &rng.normal_vec(d_lane, 1.0))
+            .with_context(|| format!("smoke push {t}"))?;
+        let tick = client.recv_tick(stream).with_context(|| format!("smoke tick {t}"))?;
+        anyhow::ensure!(tick.tick == t as u64 + 1, "tick ordinal {} != {}", tick.tick, t + 1);
+        anyhow::ensure!(
+            tick.logits.iter().all(|v| v.is_finite()),
+            "non-finite logits at tick {t}"
+        );
+    }
+    println!("{}", client.metrics().context("smoke metrics")?);
+    client.close(stream).context("smoke close")?;
+    client.shutdown_server().context("smoke shutdown")?;
+    println!("deepcot_serve: smoke ok ({ticks} ticks over loopback)");
+    Ok(())
+}

@@ -41,7 +41,7 @@
 //! [`ClusterMetrics`]: crate::coordinator::metrics::ClusterMetrics
 
 pub use crate::coordinator::cluster::{EngineHandle, RebalanceReport, ShardedEngine};
-pub use crate::coordinator::session::{EngineError, Session};
+pub use crate::coordinator::session::{EngineError, Session, TickReceiver};
 pub use crate::coordinator::shard::TickResult;
 pub use crate::coordinator::slot_stepper::{StreamBackend, StreamState};
 

@@ -42,7 +42,10 @@
 //!   stream migration ([`cluster::EngineHandle::migrate`] /
 //!   [`cluster::EngineHandle::rebalance`]).
 //! - [`session`] — the client layer: RAII [`session::Session`] stream
-//!   handles over the typed [`session::EngineError`] enum.
+//!   handles over the typed [`session::EngineError`] enum, with a
+//!   splittable [`session::TickReceiver`] half so pushes and receives
+//!   can live on different threads (the net server's reader/forwarder
+//!   split; see `crate::net`).
 //! - [`engine`]  — the public facade (`EngineThread`, `EngineHandle`,
 //!   `Session`, `EngineError` re-exports).
 //! - [`metrics`] — latency histograms, per-shard counters, and the

@@ -8,7 +8,9 @@
 //! front door (no leaked slots when a client unwinds). Every fallible
 //! operation returns an [`EngineError`] variant instead of a stringly
 //! error, so callers can branch on backpressure vs saturation vs
-//! shutdown without parsing messages.
+//! shutdown without parsing messages. [`Session::split_receiver`]
+//! detaches the receiving half as a [`TickReceiver`] for callers whose
+//! push and receive sides live on different threads (the net server).
 
 use std::fmt;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
@@ -81,14 +83,72 @@ impl std::error::Error for EngineError {}
 /// client that unwinds (panic, early return) cannot leak its slot.
 pub struct Session {
     id: StreamId,
-    rx: Receiver<TickResult>,
+    rx: Option<Receiver<TickResult>>,
     handle: EngineHandle,
     closed: bool,
 }
 
+/// The receiving half of a split [`Session`] (see
+/// [`Session::split_receiver`]): same `recv` / `recv_timeout` /
+/// `try_recv` semantics, movable to another thread while the session
+/// itself keeps pushing (an mpsc receiver is `Send` but not `Sync`, so
+/// the two halves cannot share one handle across threads). Dropping the
+/// receiver does NOT close the stream — the session half owns the RAII
+/// close.
+pub struct TickReceiver {
+    id: StreamId,
+    rx: Receiver<TickResult>,
+}
+
+impl TickReceiver {
+    /// The stream this receiver belongs to.
+    pub fn id(&self) -> StreamId {
+        self.id
+    }
+
+    /// Block for the next tick result (see [`Session::recv`]).
+    pub fn recv(&self) -> Result<TickResult, EngineError> {
+        self.rx.recv().map_err(|_| EngineError::StreamClosed(self.id))
+    }
+
+    /// Block for the next tick result up to `timeout`.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<TickResult, EngineError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Timeout) => Err(EngineError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(EngineError::StreamClosed(self.id)),
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` when no result is ready yet.
+    pub fn try_recv(&self) -> Result<Option<TickResult>, EngineError> {
+        match self.rx.try_recv() {
+            Ok(r) => Ok(Some(r)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(EngineError::StreamClosed(self.id)),
+        }
+    }
+}
+
+impl fmt::Debug for TickReceiver {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TickReceiver({})", self.id.0)
+    }
+}
+
 impl Session {
     pub(crate) fn attach(id: StreamId, rx: Receiver<TickResult>, handle: EngineHandle) -> Self {
-        Self { id, rx, handle, closed: false }
+        Self { id, rx: Some(rx), handle, closed: false }
+    }
+
+    /// Detach the receiving half so pushes and receives can run on
+    /// different threads (the net server's reader/forwarder split).
+    /// Returns `None` if the receiver was already taken. After the
+    /// split the session's own `recv`/`try_recv` report
+    /// [`EngineError::StreamClosed`]; `push`, `close`, and the RAII
+    /// close-on-drop are unaffected.
+    pub fn split_receiver(&mut self) -> Option<TickReceiver> {
+        self.rx.take().map(|rx| TickReceiver { id: self.id, rx })
     }
 
     /// The cluster-unique stream id (for logs, metrics correlation, and
@@ -106,14 +166,20 @@ impl Session {
 
     /// Block for the next tick result. Errors with
     /// [`EngineError::StreamClosed`] once the stream is torn down
-    /// (evicted, or the engine shut down).
+    /// (evicted, the engine shut down, or the receiver was split off).
     pub fn recv(&self) -> Result<TickResult, EngineError> {
-        self.rx.recv().map_err(|_| EngineError::StreamClosed(self.id))
+        match &self.rx {
+            Some(rx) => rx.recv().map_err(|_| EngineError::StreamClosed(self.id)),
+            None => Err(EngineError::StreamClosed(self.id)),
+        }
     }
 
     /// Block for the next tick result up to `timeout`.
     pub fn recv_timeout(&self, timeout: Duration) -> Result<TickResult, EngineError> {
-        match self.rx.recv_timeout(timeout) {
+        let Some(rx) = &self.rx else {
+            return Err(EngineError::StreamClosed(self.id));
+        };
+        match rx.recv_timeout(timeout) {
             Ok(r) => Ok(r),
             Err(RecvTimeoutError::Timeout) => Err(EngineError::Timeout),
             Err(RecvTimeoutError::Disconnected) => Err(EngineError::StreamClosed(self.id)),
@@ -122,7 +188,10 @@ impl Session {
 
     /// Non-blocking poll: `Ok(None)` when no result is ready yet.
     pub fn try_recv(&self) -> Result<Option<TickResult>, EngineError> {
-        match self.rx.try_recv() {
+        let Some(rx) = &self.rx else {
+            return Err(EngineError::StreamClosed(self.id));
+        };
+        match rx.try_recv() {
             Ok(r) => Ok(Some(r)),
             Err(TryRecvError::Empty) => Ok(None),
             Err(TryRecvError::Disconnected) => Err(EngineError::StreamClosed(self.id)),

@@ -15,6 +15,9 @@
 //!   typed errors, router, slot batcher, tick scheduler, pluggable
 //!   `StreamBackend`s with portable stream-state snapshots, live
 //!   cross-shard migration, metrics.
+//! - [`net`] — the TCP front door: length-prefixed binary wire
+//!   protocol, multi-threaded server (one engine `Session` per client
+//!   stream), and blocking client; `bin/deepcot_serve` is the CLI.
 //! - [`baselines`] — the paper's comparison systems behind one
 //!   [`baselines::StreamModel`] trait (regular encoder, Continual
 //!   Transformer, Nyströmformer, FNet, DeepCoT, DeepCoT-XL, MAT-SED
@@ -42,6 +45,8 @@ pub mod config;
 pub mod coordinator;
 pub mod flops;
 pub mod manifest;
+#[deny(missing_docs)]
+pub mod net;
 pub mod nn;
 pub mod probe;
 pub mod runtime;

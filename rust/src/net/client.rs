@@ -1,0 +1,265 @@
+//! Blocking TCP client for the `net::proto` wire protocol — used by
+//! tests, benches, and `deepcot_serve --smoke`.
+//!
+//! One [`NetClient`] owns one connection and may multiplex several
+//! streams over it. The API is synchronous (one request in flight at a
+//! time), but TICK frames arrive asynchronously relative to request
+//! acks, so every receive path demultiplexes: frames that answer the
+//! current request return immediately, tick results and per-stream
+//! terminal errors for *other* streams are parked in an inbox and
+//! handed out by the matching [`NetClient::recv_tick`] call.
+//!
+//! Typed errors survive the hop: a server-side [`EngineError`] comes
+//! back as [`ClientError::Engine`] with the same variant an in-process
+//! `Session` call would have returned (`Backpressure`, `Saturated`,
+//! `ShuttingDown`, …), so callers can keep branching on semantics
+//! rather than parsing messages.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::io::{self, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::coordinator::session::EngineError;
+use crate::net::proto::{self, Frame, ProtoError};
+
+/// Why a client call failed: a typed engine error relayed by the
+/// server, a transport failure, or a protocol violation.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The server replied with a typed engine error.
+    Engine(EngineError),
+    /// The transport failed (connect, read, or write).
+    Io(io::Error),
+    /// The server sent a frame this protocol version cannot decode.
+    Proto(ProtoError),
+    /// The server closed the connection while a reply was expected
+    /// (e.g. hard kill mid-request) — a terminal condition.
+    Disconnected,
+    /// The server sent a well-formed frame that does not answer the
+    /// outstanding request (a protocol-state violation).
+    Unexpected(String),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Engine(e) => write!(f, "engine error over the wire: {e}"),
+            ClientError::Io(e) => write!(f, "transport error: {e}"),
+            ClientError::Proto(e) => write!(f, "protocol error: {e}"),
+            ClientError::Disconnected => write!(f, "server closed the connection"),
+            ClientError::Unexpected(m) => write!(f, "unexpected reply: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
+        match e.kind() {
+            // a socket read timeout at a frame boundary is the wire
+            // form of recv_timeout running out: retryable, surfaced as
+            // the same typed error. proto::read_frame only lets a
+            // timeout through when zero bytes of the frame were
+            // consumed — a mid-frame timeout arrives as UnexpectedEof
+            // (the stream is desynchronized) and lands in `Io`, which
+            // is terminal for the connection.
+            io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+                ClientError::Engine(EngineError::Timeout)
+            }
+            _ => ClientError::Io(e),
+        }
+    }
+}
+
+impl From<ProtoError> for ClientError {
+    fn from(e: ProtoError) -> Self {
+        ClientError::Proto(e)
+    }
+}
+
+/// One tick result received over the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireTick {
+    /// Stream the result belongs to.
+    pub stream: u64,
+    /// Per-stream tick ordinal (1-based; survives migration).
+    pub tick: u64,
+    /// Classifier logits for the newest token.
+    pub logits: Vec<f32>,
+    /// Final-layer activations for the new tokens.
+    pub out: Vec<f32>,
+}
+
+/// What the inbox parks for a stream while other calls are in flight.
+enum Parked {
+    Tick(WireTick),
+    /// Terminal per-stream error (eviction / shutdown announcement).
+    Dead(EngineError),
+}
+
+/// A blocking client connection to a [`NetServer`].
+///
+/// [`NetServer`]: crate::net::server::NetServer
+pub struct NetClient {
+    sock: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    inbox: VecDeque<(u64, Parked)>,
+}
+
+impl NetClient {
+    /// Connect to a serving front door.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<NetClient> {
+        let sock = TcpStream::connect(addr)?;
+        let _ = sock.set_nodelay(true);
+        Ok(NetClient {
+            sock,
+            rbuf: Vec::with_capacity(4096),
+            wbuf: Vec::with_capacity(4096),
+            inbox: VecDeque::new(),
+        })
+    }
+
+    /// Bound every blocking read (None = wait forever). A read that
+    /// times out surfaces as [`EngineError::Timeout`].
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.sock.set_read_timeout(d)
+    }
+
+    fn send(&mut self, f: &Frame) -> Result<(), ClientError> {
+        f.encode_into(&mut self.wbuf);
+        self.sock.write_all(&self.wbuf).map_err(ClientError::from)
+    }
+
+    /// Read and decode the next frame off the socket.
+    fn read_one(&mut self) -> Result<Frame, ClientError> {
+        if !proto::read_frame(&mut self.sock, &mut self.rbuf)? {
+            return Err(ClientError::Disconnected);
+        }
+        Ok(Frame::decode(&self.rbuf)?)
+    }
+
+    /// Park an asynchronous frame that belongs to some stream's future
+    /// `recv_tick`; anything else is a protocol-state violation.
+    fn park(&mut self, f: Frame) -> Result<(), ClientError> {
+        match f {
+            Frame::Tick { stream, tick, logits, out } => {
+                self.inbox.push_back((stream, Parked::Tick(WireTick { stream, tick, logits, out })));
+                Ok(())
+            }
+            Frame::Error(w) if w.stream != 0 => {
+                let e = w.to_engine();
+                self.inbox.push_back((w.stream, Parked::Dead(e)));
+                Ok(())
+            }
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Open a stream; returns its engine-assigned id.
+    pub fn open(&mut self) -> Result<u64, ClientError> {
+        self.send(&Frame::Open)?;
+        loop {
+            match self.read_one()? {
+                Frame::Opened { stream } => return Ok(stream),
+                // open errors are connection-scoped (stream 0)
+                Frame::Error(w) if w.stream == 0 => return Err(ClientError::Engine(w.to_engine())),
+                other => self.park(other)?,
+            }
+        }
+    }
+
+    /// Push the next token vector for a stream. A rejected push comes
+    /// back as the same typed error an in-process `Session::push`
+    /// returns (`Backpressure`, `StreamClosed`, `ShuttingDown`, …).
+    pub fn push(&mut self, stream: u64, tokens: &[f32]) -> Result<(), ClientError> {
+        proto::write_push(&mut self.wbuf, stream, tokens);
+        self.sock.write_all(&self.wbuf).map_err(ClientError::from)?;
+        loop {
+            match self.read_one()? {
+                Frame::PushOk { stream: s } if s == stream => return Ok(()),
+                Frame::Error(w) if w.stream == stream || w.stream == 0 => {
+                    return Err(ClientError::Engine(w.to_engine()))
+                }
+                other => self.park(other)?,
+            }
+        }
+    }
+
+    /// Block for the next tick result of a stream (parked results are
+    /// returned first). A stream torn down server-side yields its
+    /// terminal typed error.
+    pub fn recv_tick(&mut self, stream: u64) -> Result<WireTick, ClientError> {
+        if let Some(idx) = self.inbox.iter().position(|(s, _)| *s == stream) {
+            let (_, parked) = self.inbox.remove(idx).expect("index just found");
+            return match parked {
+                Parked::Tick(t) => Ok(t),
+                Parked::Dead(e) => Err(ClientError::Engine(e)),
+            };
+        }
+        loop {
+            match self.read_one()? {
+                Frame::Tick { stream: s, tick, logits, out } if s == stream => {
+                    return Ok(WireTick { stream: s, tick, logits, out })
+                }
+                Frame::Error(w) if w.stream == stream || w.stream == 0 => {
+                    return Err(ClientError::Engine(w.to_engine()))
+                }
+                other => self.park(other)?,
+            }
+        }
+    }
+
+    /// Close a stream (the wire analogue of dropping a `Session`).
+    /// Tick results still in flight for it are discarded.
+    pub fn close(&mut self, stream: u64) -> Result<(), ClientError> {
+        self.send(&Frame::Close { stream })?;
+        let res = loop {
+            match self.read_one()? {
+                Frame::Closed { stream: s } if s == stream => break Ok(()),
+                // in-flight results for the closing stream are stale
+                Frame::Tick { stream: s, .. } if s == stream => {}
+                Frame::Error(w) if w.stream == stream || w.stream == 0 => {
+                    break Err(ClientError::Engine(w.to_engine()))
+                }
+                other => self.park(other)?,
+            }
+        };
+        self.inbox.retain(|(s, _)| *s != stream);
+        res
+    }
+
+    /// Fetch the server's operator report (cluster + net counters).
+    pub fn metrics(&mut self) -> Result<String, ClientError> {
+        self.send(&Frame::Metrics)?;
+        loop {
+            match self.read_one()? {
+                Frame::MetricsReport { report } => return Ok(report),
+                Frame::Error(w) if w.stream == 0 => return Err(ClientError::Engine(w.to_engine())),
+                other => self.park(other)?,
+            }
+        }
+    }
+
+    /// Ask the server to shut down gracefully; returns once the server
+    /// acknowledges (expect terminal errors / EOF afterwards).
+    pub fn shutdown_server(&mut self) -> Result<(), ClientError> {
+        self.send(&Frame::Shutdown)?;
+        loop {
+            match self.read_one()? {
+                Frame::ShutdownOk => return Ok(()),
+                Frame::Error(w) if w.stream == 0 => return Err(ClientError::Engine(w.to_engine())),
+                other => self.park(other)?,
+            }
+        }
+    }
+}
+
+impl fmt::Debug for NetClient {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "NetClient({:?})", self.sock.peer_addr())
+    }
+}

@@ -1,0 +1,42 @@
+//! The network serving layer: a dependency-free (std-only) TCP front
+//! door that turns the in-process shard cluster into a servable
+//! system — streams arrive from *outside* the process, which is the
+//! deployment shape the paper's real-time-inference pitch implies.
+//!
+//! ```text
+//!   remote clients ──► net::client::NetClient (blocking; also: any
+//!        │             implementation of net::proto over TCP)
+//!        │  OPEN / PUSH / CLOSE / METRICS / SHUTDOWN
+//!        │  ◄─ OPENED / PUSH_OK / TICK / typed ERROR frames
+//!        ▼
+//!   net::server::NetServer (acceptor + per-connection reader/writer
+//!        │                  threads + per-stream tick forwarders;
+//!        │                  owns one engine Session per client stream)
+//!        ▼
+//!   EngineHandle (cluster front door)
+//!        │  ShardRouter: placement, migration, rebalance
+//!   ┌────┼──────────┐
+//!   ▼    ▼          ▼
+//! shard 0 … shard N-1   Router + Batcher + StreamBackend per worker
+//! ```
+//!
+//! Layering: [`proto`] is the pure codec (length-prefixed binary
+//! frames, typed error mapping, zero-alloc hot-path readers/writers);
+//! [`server`] owns the threads and the engine sessions; [`client`] is
+//! the blocking reference client. The engine is untouched — the server
+//! is just another `EngineHandle` user, so everything the cluster
+//! pins (bitwise layout-independence, migration transparency,
+//! drain-on-shutdown) holds identically for TCP streams, which
+//! `tests/net.rs` pins end-to-end over loopback.
+//!
+//! Error semantics over the wire mirror the in-process `Session` API:
+//! a push that would return [`EngineError::Backpressure`] in-process
+//! returns the same variant through [`client::NetClient::push`];
+//! saturation, shutdown, and malformed requests all arrive as typed
+//! [`proto::WireError`] frames instead of dropped connections.
+//!
+//! [`EngineError::Backpressure`]: crate::coordinator::session::EngineError::Backpressure
+
+pub mod client;
+pub mod proto;
+pub mod server;

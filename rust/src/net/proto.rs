@@ -1,0 +1,729 @@
+//! Length-prefixed binary wire protocol for the TCP serving front door.
+//!
+//! Every frame on the wire is `[len: u32 LE][opcode: u8][body: len-1
+//! bytes]`; `len` counts the opcode byte plus the body, so a zero
+//! length is malformed by construction and a reader always knows
+//! exactly how many bytes to consume before interpreting anything.
+//! Integers are little-endian, token/activation payloads are raw f32
+//! LE arrays, strings are UTF-8.
+//!
+//! Request frames (client → server): [`Frame::Open`], [`Frame::Push`],
+//! [`Frame::Close`], [`Frame::Metrics`], [`Frame::Shutdown`]. Reply
+//! frames (server → client): [`Frame::Opened`], [`Frame::PushOk`],
+//! [`Frame::Closed`], [`Frame::Tick`], [`Frame::MetricsReport`],
+//! [`Frame::ShutdownOk`], and [`Frame::Error`] — whose [`WireError`]
+//! payload mirrors every [`EngineError`] variant (code + stream id +
+//! numeric aux + detail string), so typed backpressure / saturation /
+//! shutdown semantics survive the network hop instead of collapsing
+//! into a dropped connection.
+//!
+//! Robustness contract: decoding NEVER panics on malformed input —
+//! every bad length, unknown opcode, truncated body, misaligned f32
+//! payload, bad error code, or invalid UTF-8 surfaces as a typed
+//! [`ProtoError`] (pinned by the fuzz loop in `tests/proto.rs` and
+//! `tests/net.rs`). Frame lengths are capped at [`MAX_FRAME_LEN`] so a
+//! hostile length prefix cannot drive a huge allocation.
+//!
+//! Allocation contract: the hot-path frames (PUSH and TICK) have
+//! dedicated writers ([`write_push`], [`write_tick`]) and borrowed
+//! readers ([`RawFrame::push_fields_into`],
+//! [`RawFrame::tick_fields_into`]) that work entirely in caller-owned
+//! reusable buffers — after warmup, a steady-state PUSH → TICK reply
+//! loop performs zero codec allocations (pinned in
+//! `tests/zero_alloc.rs`).
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::coordinator::session::EngineError;
+use crate::coordinator::slots::StreamId;
+
+/// Upper bound on the length prefix: caps what a hostile or corrupt
+/// prefix can make the reader allocate (16 MiB — orders of magnitude
+/// above any real token vector).
+pub const MAX_FRAME_LEN: usize = 1 << 24;
+
+// Opcodes. Requests have the high bit clear, replies set — purely a
+// readability convention; the decoder treats them all uniformly.
+const OP_OPEN: u8 = 0x01;
+const OP_PUSH: u8 = 0x02;
+const OP_CLOSE: u8 = 0x03;
+const OP_METRICS: u8 = 0x04;
+const OP_SHUTDOWN: u8 = 0x05;
+const OP_OPENED: u8 = 0x81;
+const OP_PUSH_OK: u8 = 0x82;
+const OP_CLOSED: u8 = 0x83;
+const OP_TICK: u8 = 0x84;
+const OP_METRICS_REPORT: u8 = 0x85;
+const OP_SHUTDOWN_OK: u8 = 0x86;
+const OP_ERROR: u8 = 0xEE;
+
+/// Typed decode failure: what exactly was malformed. Never a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Length prefix of zero or beyond [`MAX_FRAME_LEN`].
+    BadLength(u32),
+    /// Opcode byte not assigned by this protocol version.
+    BadOpcode(u8),
+    /// Body shorter than the opcode's fixed fields require.
+    Truncated {
+        /// The frame's opcode (0 for an empty frame).
+        op: u8,
+        /// Bytes the opcode's layout needs.
+        want: usize,
+        /// Bytes actually present.
+        got: usize,
+    },
+    /// Variable payload malformed (misaligned f32 data, trailing
+    /// garbage after a fixed-size frame, logits length out of range).
+    BadPayload(&'static str),
+    /// Error frame carrying an unassigned error code.
+    BadErrorCode(u8),
+    /// A string field is not valid UTF-8.
+    BadUtf8,
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::BadLength(n) => {
+                write!(f, "bad frame length {n} (1..={MAX_FRAME_LEN} allowed)")
+            }
+            ProtoError::BadOpcode(op) => write!(f, "unknown opcode {op:#04x}"),
+            ProtoError::Truncated { op, want, got } => {
+                write!(f, "truncated frame (op {op:#04x}): need {want} body bytes, got {got}")
+            }
+            ProtoError::BadPayload(m) => write!(f, "bad frame payload: {m}"),
+            ProtoError::BadErrorCode(c) => write!(f, "unknown error code {c}"),
+            ProtoError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Wire error codes, one per [`EngineError`] variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// [`EngineError::Saturated`] — aux carries the capacity.
+    Saturated,
+    /// [`EngineError::StreamClosed`] — stream carries the id.
+    StreamClosed,
+    /// [`EngineError::Backpressure`] — stream carries the id.
+    Backpressure,
+    /// [`EngineError::ShuttingDown`].
+    ShuttingDown,
+    /// [`EngineError::Timeout`].
+    Timeout,
+    /// [`EngineError::InvalidRequest`] — detail carries the message.
+    InvalidRequest,
+    /// [`EngineError::Unsupported`] — detail carries the message (the
+    /// round trip back to `EngineError` is lossy: the variant holds a
+    /// `&'static str`, so the client substitutes a fixed message).
+    Unsupported,
+    /// [`EngineError::Internal`] — detail carries the message.
+    Internal,
+}
+
+impl ErrCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrCode::Saturated => 1,
+            ErrCode::StreamClosed => 2,
+            ErrCode::Backpressure => 3,
+            ErrCode::ShuttingDown => 4,
+            ErrCode::Timeout => 5,
+            ErrCode::InvalidRequest => 6,
+            ErrCode::Unsupported => 7,
+            ErrCode::Internal => 8,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self, ProtoError> {
+        Ok(match v {
+            1 => ErrCode::Saturated,
+            2 => ErrCode::StreamClosed,
+            3 => ErrCode::Backpressure,
+            4 => ErrCode::ShuttingDown,
+            5 => ErrCode::Timeout,
+            6 => ErrCode::InvalidRequest,
+            7 => ErrCode::Unsupported,
+            8 => ErrCode::Internal,
+            other => return Err(ProtoError::BadErrorCode(other)),
+        })
+    }
+}
+
+/// A typed error reply: the wire form of an [`EngineError`], plus the
+/// stream it concerns (0 = connection-level, no particular stream).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Stream the error concerns (0 when none).
+    pub stream: u64,
+    /// Which [`EngineError`] variant this mirrors.
+    pub code: ErrCode,
+    /// Numeric payload (the capacity for `Saturated`, else 0).
+    pub aux: u32,
+    /// Human-readable payload (message for `InvalidRequest` /
+    /// `Unsupported` / `Internal`, else empty).
+    pub detail: String,
+}
+
+impl WireError {
+    /// Encode an [`EngineError`] for the wire. `stream` is the request
+    /// context; variants that carry their own id override it.
+    pub fn from_engine(stream: u64, e: &EngineError) -> Self {
+        match e {
+            EngineError::Saturated { capacity } => Self {
+                stream,
+                code: ErrCode::Saturated,
+                aux: (*capacity).min(u32::MAX as usize) as u32,
+                detail: String::new(),
+            },
+            EngineError::StreamClosed(id) => {
+                Self { stream: id.0, code: ErrCode::StreamClosed, aux: 0, detail: String::new() }
+            }
+            EngineError::Backpressure(id) => {
+                Self { stream: id.0, code: ErrCode::Backpressure, aux: 0, detail: String::new() }
+            }
+            EngineError::ShuttingDown => {
+                Self { stream, code: ErrCode::ShuttingDown, aux: 0, detail: String::new() }
+            }
+            EngineError::Timeout => {
+                Self { stream, code: ErrCode::Timeout, aux: 0, detail: String::new() }
+            }
+            EngineError::InvalidRequest(m) => {
+                Self { stream, code: ErrCode::InvalidRequest, aux: 0, detail: m.clone() }
+            }
+            EngineError::Unsupported(m) => {
+                Self { stream, code: ErrCode::Unsupported, aux: 0, detail: (*m).to_string() }
+            }
+            EngineError::Internal(m) => {
+                Self { stream, code: ErrCode::Internal, aux: 0, detail: m.clone() }
+            }
+        }
+    }
+
+    /// Reconstruct the typed [`EngineError`] on the client side.
+    /// Bitwise-faithful for every variant except `Unsupported`, whose
+    /// `&'static str` payload is replaced by a fixed message.
+    pub fn to_engine(&self) -> EngineError {
+        match self.code {
+            ErrCode::Saturated => EngineError::Saturated { capacity: self.aux as usize },
+            ErrCode::StreamClosed => EngineError::StreamClosed(StreamId(self.stream)),
+            ErrCode::Backpressure => EngineError::Backpressure(StreamId(self.stream)),
+            ErrCode::ShuttingDown => EngineError::ShuttingDown,
+            ErrCode::Timeout => EngineError::Timeout,
+            ErrCode::InvalidRequest => EngineError::InvalidRequest(self.detail.clone()),
+            ErrCode::Unsupported => {
+                EngineError::Unsupported("operation reported unsupported by the remote engine")
+            }
+            ErrCode::Internal => EngineError::Internal(self.detail.clone()),
+        }
+    }
+}
+
+/// One decoded protocol frame (owned form; the server hot path uses
+/// [`RawFrame`] + the `write_*` helpers instead to stay allocation-free).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Open a new stream on the engine.
+    Open,
+    /// Push the next token vector for a stream.
+    Push {
+        /// Target stream id (from [`Frame::Opened`]).
+        stream: u64,
+        /// `m_tokens * d_in` f32s.
+        tokens: Vec<f32>,
+    },
+    /// Close a stream (the wire analogue of dropping the `Session`).
+    Close {
+        /// Stream to close.
+        stream: u64,
+    },
+    /// Request the server's cluster + net metrics report.
+    Metrics,
+    /// Ask the server to shut down gracefully (drain + terminal
+    /// errors to every other live stream).
+    Shutdown,
+    /// Reply to [`Frame::Open`]: the engine-assigned stream id.
+    Opened {
+        /// Cluster-unique stream id (also valid for `EngineHandle`
+        /// calls in-process, e.g. migration in tests/benches).
+        stream: u64,
+    },
+    /// Reply to [`Frame::Push`]: the token vector was accepted.
+    PushOk {
+        /// Stream the push targeted.
+        stream: u64,
+    },
+    /// Reply to [`Frame::Close`]: the stream is closed.
+    Closed {
+        /// Stream that closed.
+        stream: u64,
+    },
+    /// One tick result, delivered asynchronously per accepted push.
+    Tick {
+        /// Stream the result belongs to.
+        stream: u64,
+        /// Per-stream tick ordinal (1-based, survives migration).
+        tick: u64,
+        /// Classifier logits for the newest token.
+        logits: Vec<f32>,
+        /// Final-layer activations for the new tokens.
+        out: Vec<f32>,
+    },
+    /// Reply to [`Frame::Metrics`]: the operator report text.
+    MetricsReport {
+        /// `ClusterMetrics::report()` plus the net layer's counters.
+        report: String,
+    },
+    /// Reply to [`Frame::Shutdown`]: drain is underway; expect EOF.
+    ShutdownOk,
+    /// Typed failure reply (any request, or an async stream teardown).
+    Error(WireError),
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn get_u32(b: &[u8], at: usize, op: u8) -> Result<u32, ProtoError> {
+    match b.get(at..at + 4) {
+        Some(s) => Ok(u32::from_le_bytes(s.try_into().unwrap())),
+        None => Err(ProtoError::Truncated { op, want: at + 4, got: b.len() }),
+    }
+}
+
+fn get_u64(b: &[u8], at: usize, op: u8) -> Result<u64, ProtoError> {
+    match b.get(at..at + 8) {
+        Some(s) => Ok(u64::from_le_bytes(s.try_into().unwrap())),
+        None => Err(ProtoError::Truncated { op, want: at + 8, got: b.len() }),
+    }
+}
+
+/// Copy an f32 LE payload into a reusable vector (cleared first).
+/// Rejects misaligned lengths; allocates only to grow capacity.
+fn get_f32s_into(b: &[u8], dst: &mut Vec<f32>) -> Result<(), ProtoError> {
+    if b.len() % 4 != 0 {
+        return Err(ProtoError::BadPayload("f32 payload length not a multiple of 4"));
+    }
+    dst.clear();
+    dst.reserve(b.len() / 4);
+    for chunk in b.chunks_exact(4) {
+        dst.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(())
+}
+
+fn expect_exact(b: &[u8], want: usize, _op: u8) -> Result<(), ProtoError> {
+    if b.len() != want {
+        return Err(ProtoError::BadPayload("trailing bytes after a fixed-size frame"));
+    }
+    Ok(())
+}
+
+/// Encode a PUSH frame (length prefix included) into a reusable buffer
+/// — the client hot path. The buffer is cleared, never shrunk.
+pub fn write_push(out: &mut Vec<u8>, stream: u64, tokens: &[f32]) {
+    out.clear();
+    put_u32(out, (1 + 8 + 4 * tokens.len()) as u32);
+    out.push(OP_PUSH);
+    put_u64(out, stream);
+    put_f32s(out, tokens);
+}
+
+/// Encode a TICK frame (length prefix included) into a reusable buffer
+/// — the server writer-thread hot path.
+pub fn write_tick(out: &mut Vec<u8>, stream: u64, tick: u64, logits: &[f32], acts: &[f32]) {
+    out.clear();
+    put_u32(out, (1 + 8 + 8 + 4 + 4 * (logits.len() + acts.len())) as u32);
+    out.push(OP_TICK);
+    put_u64(out, stream);
+    put_u64(out, tick);
+    put_u32(out, logits.len() as u32);
+    put_f32s(out, logits);
+    put_f32s(out, acts);
+}
+
+/// A borrowed, length-validated frame: opcode + body slice. The
+/// zero-copy decode entry point used by the server's reader thread.
+#[derive(Debug, Clone, Copy)]
+pub struct RawFrame<'a> {
+    /// The frame's opcode byte.
+    pub op: u8,
+    /// Everything after the opcode.
+    pub body: &'a [u8],
+}
+
+impl<'a> RawFrame<'a> {
+    /// Split a received frame (the bytes after the length prefix) into
+    /// opcode + body. An empty frame is malformed.
+    pub fn parse(frame: &'a [u8]) -> Result<Self, ProtoError> {
+        match frame.split_first() {
+            Some((&op, body)) => Ok(Self { op, body }),
+            None => Err(ProtoError::Truncated { op: 0, want: 1, got: 0 }),
+        }
+    }
+
+    /// Decode PUSH fields without allocating: returns the stream id and
+    /// copies the tokens into `tokens` (cleared, capacity reused).
+    pub fn push_fields_into(&self, tokens: &mut Vec<f32>) -> Result<u64, ProtoError> {
+        if self.op != OP_PUSH {
+            return Err(ProtoError::BadOpcode(self.op));
+        }
+        let stream = get_u64(self.body, 0, self.op)?;
+        get_f32s_into(&self.body[8..], tokens)?;
+        Ok(stream)
+    }
+
+    /// Decode TICK fields without allocating: returns `(stream, tick)`
+    /// and copies logits/activations into the reusable vectors.
+    pub fn tick_fields_into(
+        &self,
+        logits: &mut Vec<f32>,
+        acts: &mut Vec<f32>,
+    ) -> Result<(u64, u64), ProtoError> {
+        if self.op != OP_TICK {
+            return Err(ProtoError::BadOpcode(self.op));
+        }
+        let stream = get_u64(self.body, 0, self.op)?;
+        let tick = get_u64(self.body, 8, self.op)?;
+        let n_logits = get_u32(self.body, 16, self.op)? as usize;
+        let rest = &self.body[20..];
+        let Some(split) = n_logits.checked_mul(4).filter(|&b| b <= rest.len()) else {
+            return Err(ProtoError::BadPayload("logits length exceeds frame body"));
+        };
+        get_f32s_into(&rest[..split], logits)?;
+        get_f32s_into(&rest[split..], acts)?;
+        Ok((stream, tick))
+    }
+
+    /// Full owned decode (the convenient non-hot-path form).
+    pub fn to_frame(&self) -> Result<Frame, ProtoError> {
+        let b = self.body;
+        Ok(match self.op {
+            OP_OPEN => {
+                expect_exact(b, 0, self.op)?;
+                Frame::Open
+            }
+            OP_METRICS => {
+                expect_exact(b, 0, self.op)?;
+                Frame::Metrics
+            }
+            OP_SHUTDOWN => {
+                expect_exact(b, 0, self.op)?;
+                Frame::Shutdown
+            }
+            OP_SHUTDOWN_OK => {
+                expect_exact(b, 0, self.op)?;
+                Frame::ShutdownOk
+            }
+            OP_PUSH => {
+                let mut tokens = Vec::new();
+                let stream = self.push_fields_into(&mut tokens)?;
+                Frame::Push { stream, tokens }
+            }
+            OP_CLOSE => {
+                expect_exact(b, 8, self.op)?;
+                Frame::Close { stream: get_u64(b, 0, self.op)? }
+            }
+            OP_OPENED => {
+                expect_exact(b, 8, self.op)?;
+                Frame::Opened { stream: get_u64(b, 0, self.op)? }
+            }
+            OP_PUSH_OK => {
+                expect_exact(b, 8, self.op)?;
+                Frame::PushOk { stream: get_u64(b, 0, self.op)? }
+            }
+            OP_CLOSED => {
+                expect_exact(b, 8, self.op)?;
+                Frame::Closed { stream: get_u64(b, 0, self.op)? }
+            }
+            OP_TICK => {
+                let (mut logits, mut out) = (Vec::new(), Vec::new());
+                let (stream, tick) = self.tick_fields_into(&mut logits, &mut out)?;
+                Frame::Tick { stream, tick, logits, out }
+            }
+            OP_METRICS_REPORT => {
+                let report =
+                    std::str::from_utf8(b).map_err(|_| ProtoError::BadUtf8)?.to_string();
+                Frame::MetricsReport { report }
+            }
+            OP_ERROR => {
+                let stream = get_u64(b, 0, self.op)?;
+                let code = match b.get(8) {
+                    Some(&c) => ErrCode::from_u8(c)?,
+                    None => return Err(ProtoError::Truncated { op: self.op, want: 9, got: 8 }),
+                };
+                let aux = get_u32(b, 9, self.op)?;
+                let detail =
+                    std::str::from_utf8(&b[13..]).map_err(|_| ProtoError::BadUtf8)?.to_string();
+                Frame::Error(WireError { stream, code, aux, detail })
+            }
+            other => return Err(ProtoError::BadOpcode(other)),
+        })
+    }
+}
+
+impl Frame {
+    /// Encode into a reusable buffer (cleared first), length prefix
+    /// included — ready for one `write_all`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Frame::Push { stream, tokens } => return write_push(out, *stream, tokens),
+            Frame::Tick { stream, tick, logits, out: acts } => {
+                return write_tick(out, *stream, *tick, logits, acts)
+            }
+            _ => {}
+        }
+        out.clear();
+        // reserve the prefix, fill the body, then patch the length in
+        put_u32(out, 0);
+        match self {
+            Frame::Open => out.push(OP_OPEN),
+            Frame::Metrics => out.push(OP_METRICS),
+            Frame::Shutdown => out.push(OP_SHUTDOWN),
+            Frame::ShutdownOk => out.push(OP_SHUTDOWN_OK),
+            Frame::Close { stream } => {
+                out.push(OP_CLOSE);
+                put_u64(out, *stream);
+            }
+            Frame::Opened { stream } => {
+                out.push(OP_OPENED);
+                put_u64(out, *stream);
+            }
+            Frame::PushOk { stream } => {
+                out.push(OP_PUSH_OK);
+                put_u64(out, *stream);
+            }
+            Frame::Closed { stream } => {
+                out.push(OP_CLOSED);
+                put_u64(out, *stream);
+            }
+            Frame::MetricsReport { report } => {
+                out.push(OP_METRICS_REPORT);
+                out.extend_from_slice(report.as_bytes());
+            }
+            Frame::Error(e) => {
+                out.push(OP_ERROR);
+                put_u64(out, e.stream);
+                out.push(e.code.to_u8());
+                put_u32(out, e.aux);
+                out.extend_from_slice(e.detail.as_bytes());
+            }
+            Frame::Push { .. } | Frame::Tick { .. } => unreachable!("handled above"),
+        }
+        let len = (out.len() - 4) as u32;
+        out[..4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    /// Encode into a fresh buffer (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Decode a received frame (the bytes after the length prefix).
+    pub fn decode(frame: &[u8]) -> Result<Frame, ProtoError> {
+        RawFrame::parse(frame)?.to_frame()
+    }
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+fn desync() -> io::Error {
+    io::Error::new(
+        io::ErrorKind::UnexpectedEof,
+        "read timed out mid-frame: the byte stream is desynchronized",
+    )
+}
+
+/// Read one frame into `buf` (cleared; capacity reused): length prefix
+/// first, then exactly that many bytes. Returns `Ok(false)` on a clean
+/// EOF at a frame boundary (peer closed), `Err` on a torn frame, a bad
+/// length, or any transport error. Malformed lengths surface as
+/// `io::ErrorKind::InvalidData` wrapping the [`ProtoError`].
+///
+/// Read-timeout discipline: a timeout with ZERO bytes consumed (a
+/// clean frame boundary) is returned as-is — the caller may safely
+/// retry the read later. A timeout after bytes of this frame were
+/// consumed is promoted to `io::ErrorKind::UnexpectedEof`: partial
+/// reads are not resumable, so retrying would misinterpret mid-frame
+/// bytes as a new length prefix. Callers must treat it as terminal.
+pub fn read_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> io::Result<bool> {
+    let mut prefix = [0u8; 4];
+    // a clean EOF (or retryable timeout) is only clean before the
+    // first prefix byte
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut prefix[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "EOF inside a frame length prefix",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if got > 0 && is_timeout(&e) => return Err(desync()),
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(prefix);
+    if len == 0 || len as usize > MAX_FRAME_LEN {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, ProtoError::BadLength(len)));
+    }
+    buf.clear();
+    buf.resize(len as usize, 0);
+    let mut read = 0;
+    while read < buf.len() {
+        match r.read(&mut buf[read..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "EOF inside a frame body",
+                ))
+            }
+            Ok(n) => read += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => return Err(desync()),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Write one already-encoded frame (length prefix included).
+pub fn write_frame<W: Write>(w: &mut W, encoded: &[u8]) -> io::Result<()> {
+    w.write_all(encoded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_frames_round_trip() {
+        for f in [Frame::Open, Frame::Metrics, Frame::Shutdown, Frame::ShutdownOk] {
+            let enc = f.encode();
+            assert_eq!(Frame::decode(&enc[4..]).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn push_and_tick_round_trip() {
+        let p = Frame::Push { stream: 7, tokens: vec![1.0, -2.5, 3.25] };
+        let enc = p.encode();
+        assert_eq!(u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize, enc.len() - 4);
+        assert_eq!(Frame::decode(&enc[4..]).unwrap(), p);
+        let t = Frame::Tick { stream: 9, tick: 42, logits: vec![0.5; 4], out: vec![-1.0; 16] };
+        let enc = t.encode();
+        assert_eq!(Frame::decode(&enc[4..]).unwrap(), t);
+        // empty logits/out are legal frames
+        let t0 = Frame::Tick { stream: 1, tick: 1, logits: vec![], out: vec![] };
+        assert_eq!(Frame::decode(&t0.encode()[4..]).unwrap(), t0);
+    }
+
+    #[test]
+    fn errors_round_trip_typed() {
+        use crate::coordinator::session::EngineError as E;
+        let cases = [
+            E::Saturated { capacity: 4 },
+            E::StreamClosed(StreamId(3)),
+            E::Backpressure(StreamId(8)),
+            E::ShuttingDown,
+            E::Timeout,
+            E::InvalidRequest("bad length".into()),
+            E::Internal("boom".into()),
+        ];
+        for e in cases {
+            let w = WireError::from_engine(5, &e);
+            let enc = Frame::Error(w.clone()).encode();
+            let Frame::Error(back) = Frame::decode(&enc[4..]).unwrap() else {
+                panic!("not an error frame");
+            };
+            assert_eq!(back, w);
+            assert_eq!(back.to_engine(), e, "typed error must survive the wire");
+        }
+        // Unsupported is documented lossy: variant survives, text does not
+        let w = WireError::from_engine(5, &E::Unsupported("snapshot export"));
+        let Frame::Error(back) = Frame::decode(&Frame::Error(w).encode()[4..]).unwrap() else {
+            panic!("not an error frame");
+        };
+        assert!(matches!(back.to_engine(), E::Unsupported(_)));
+    }
+
+    #[test]
+    fn malformed_frames_reject_cleanly() {
+        assert!(matches!(Frame::decode(&[]), Err(ProtoError::Truncated { .. })));
+        assert!(matches!(Frame::decode(&[0x7f]), Err(ProtoError::BadOpcode(0x7f))));
+        // truncated CLOSE (needs 8 body bytes)
+        assert!(Frame::decode(&[OP_CLOSE, 1, 2]).is_err());
+        // trailing garbage after a fixed-size frame
+        assert!(Frame::decode(&[OP_OPEN, 0]).is_err());
+        // misaligned f32 payload
+        let mut push = vec![OP_PUSH];
+        push.extend_from_slice(&7u64.to_le_bytes());
+        push.extend_from_slice(&[1, 2, 3]);
+        assert!(matches!(Frame::decode(&push), Err(ProtoError::BadPayload(_))));
+        // tick whose logits length exceeds the body
+        let mut tick = vec![OP_TICK];
+        tick.extend_from_slice(&1u64.to_le_bytes());
+        tick.extend_from_slice(&1u64.to_le_bytes());
+        tick.extend_from_slice(&100u32.to_le_bytes());
+        assert!(matches!(Frame::decode(&tick), Err(ProtoError::BadPayload(_))));
+        // error frame with an unknown code
+        let mut err = vec![OP_ERROR];
+        err.extend_from_slice(&0u64.to_le_bytes());
+        err.push(99);
+        err.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(Frame::decode(&err), Err(ProtoError::BadErrorCode(99))));
+        // invalid UTF-8 detail
+        let mut err = vec![OP_ERROR];
+        err.extend_from_slice(&0u64.to_le_bytes());
+        err.push(8);
+        err.extend_from_slice(&0u32.to_le_bytes());
+        err.extend_from_slice(&[0xff, 0xfe]);
+        assert_eq!(Frame::decode(&err), Err(ProtoError::BadUtf8));
+    }
+
+    #[test]
+    fn read_frame_handles_eof_and_bad_lengths() {
+        let mut buf = Vec::new();
+        // clean EOF at a boundary
+        let mut empty: &[u8] = &[];
+        assert!(!read_frame(&mut empty, &mut buf).unwrap());
+        // EOF inside the prefix
+        let mut torn: &[u8] = &[1, 0];
+        assert!(read_frame(&mut torn, &mut buf).is_err());
+        // zero length
+        let mut zero: &[u8] = &[0, 0, 0, 0];
+        assert!(read_frame(&mut zero, &mut buf).is_err());
+        // insane length
+        let mut huge: &[u8] = &[0xff, 0xff, 0xff, 0xff];
+        assert!(read_frame(&mut huge, &mut buf).is_err());
+        // EOF inside the body
+        let mut body: &[u8] = &[5, 0, 0, 0, OP_OPEN];
+        assert!(read_frame(&mut body, &mut buf).is_err());
+        // a whole valid frame
+        let enc = Frame::Opened { stream: 3 }.encode();
+        let mut ok: &[u8] = &enc;
+        assert!(read_frame(&mut ok, &mut buf).unwrap());
+        assert_eq!(Frame::decode(&buf).unwrap(), Frame::Opened { stream: 3 });
+    }
+}

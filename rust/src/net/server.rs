@@ -1,0 +1,514 @@
+//! The TCP front door: a multi-threaded server exposing the serving
+//! cluster over `net::proto`.
+//!
+//! Thread layout:
+//!
+//! ```text
+//!   acceptor ──► one reader thread per connection
+//!                  │ owns: the socket's read half, the connection's
+//!                  │ engine Sessions (push/close halves), a reusable
+//!                  │ frame buffer
+//!                  │
+//!                  ├─► writer thread (socket write half): serializes
+//!                  │   every reply through one mpsc queue into one
+//!                  │   reusable encode buffer
+//!                  │
+//!                  └─► one forwarder thread per open stream: blocks on
+//!                      the split TickReceiver, relays TickResults to
+//!                      the writer as TICK frames
+//! ```
+//!
+//! Error discipline: engine failures reply typed [`WireError`] frames
+//! (backpressure, saturation, shutdown all reach the client as the
+//! same [`EngineError`] variant an in-process caller would see);
+//! malformed-but-framed requests reply `InvalidRequest` and the
+//! connection keeps serving (the length prefix kept the byte stream
+//! aligned); an undecodable length prefix tears the connection down —
+//! resynchronization is impossible. Nothing the client sends can panic
+//! the server.
+//!
+//! Allocation posture: frame decode and encode run in per-thread
+//! reusable buffers (the codec's zero-alloc contract, pinned in
+//! `tests/zero_alloc.rs`); the remaining steady-state allocations per
+//! push are engine-API costs — the owned `Vec<f32>` a `Session::push`
+//! consumes and the mpsc node per reply message — not codec work.
+//!
+//! Shutdown discipline ([`NetServer::shutdown`]): stop accepting, then
+//! sever every connection's read half — each reader wakes, announces a
+//! terminal `ShuttingDown` error for every stream still open on its
+//! connection (flushed by its writer before the socket closes), closes
+//! its sessions, and joins its helper threads. Clients mid-stream get
+//! a typed terminal error followed by EOF, never a hang.
+
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::cluster::EngineHandle;
+use crate::coordinator::session::{EngineError, Session, TickReceiver};
+use crate::coordinator::shard::TickResult;
+use crate::net::proto::{self, Frame, RawFrame, WireError};
+
+/// Shared atomic counters (per-connection accounting rolls up here).
+#[derive(Default)]
+struct Counters {
+    connections_accepted: AtomicU64,
+    connections_active: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    protocol_errors: AtomicU64,
+    streams_opened: AtomicU64,
+    shutdown_requests: AtomicU64,
+}
+
+/// A point-in-time snapshot of the net layer's counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetMetrics {
+    /// Connections accepted since start.
+    pub connections_accepted: u64,
+    /// Connections currently serving.
+    pub connections_active: u64,
+    /// Frames successfully read off sockets.
+    pub frames_in: u64,
+    /// Frames written to sockets.
+    pub frames_out: u64,
+    /// Malformed frames answered with `InvalidRequest`.
+    pub protocol_errors: u64,
+    /// Streams opened over the wire.
+    pub streams_opened: u64,
+    /// SHUTDOWN frames honored.
+    pub shutdown_requests: u64,
+}
+
+impl NetMetrics {
+    /// One-line operator summary.
+    pub fn report(&self) -> String {
+        format!(
+            "net: conns={}/{} frames={}in/{}out proto_errors={} streams={} shutdown_reqs={}",
+            self.connections_active,
+            self.connections_accepted,
+            self.frames_in,
+            self.frames_out,
+            self.protocol_errors,
+            self.streams_opened,
+            self.shutdown_requests,
+        )
+    }
+}
+
+impl Counters {
+    fn snapshot(&self) -> NetMetrics {
+        NetMetrics {
+            connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
+            connections_active: self.connections_active.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            streams_opened: self.streams_opened.load(Ordering::Relaxed),
+            shutdown_requests: self.shutdown_requests.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What travels to a connection's writer thread. Tick results ride as
+/// their engine form and are serialized in the writer's one reusable
+/// buffer (no intermediate encode per message).
+enum Reply {
+    Frame(Frame),
+    Tick { stream: u64, result: TickResult },
+}
+
+struct StreamEntry {
+    sess: Session,
+    /// Set before a deliberate close so the forwarder exits silently
+    /// instead of reporting the disconnect as an error.
+    closed: Arc<AtomicBool>,
+    forwarder: JoinHandle<()>,
+}
+
+/// Live connections: the accepted socket (kept for severing its read
+/// half at shutdown) and the reader thread's join handle.
+type ConnRegistry = Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>;
+
+/// The running TCP front door. Start with [`NetServer::start`]; stop
+/// with [`NetServer::shutdown`] (graceful drain).
+pub struct NetServer {
+    addr: SocketAddr,
+    shutting_down: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    conns: ConnRegistry,
+    counters: Arc<Counters>,
+    shutdown_req_rx: Receiver<()>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting connections against the given engine front door.
+    pub fn start<A: ToSocketAddrs>(addr: A, engine: EngineHandle) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        let conns: ConnRegistry = Arc::default();
+        let counters = Arc::new(Counters::default());
+        let (shutdown_req_tx, shutdown_req_rx) = mpsc::channel();
+        let acceptor = {
+            let shutting_down = Arc::clone(&shutting_down);
+            let conns = Arc::clone(&conns);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new().name("deepcot-net-acceptor".into()).spawn(move || {
+                loop {
+                    let sock = match listener.accept() {
+                        Ok((sock, _peer)) => sock,
+                        Err(_) if shutting_down.load(Ordering::SeqCst) => return,
+                        Err(_) => {
+                            // persistent accept failures (e.g. EMFILE)
+                            // must not busy-spin a core
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    if shutting_down.load(Ordering::SeqCst) {
+                        // the wake-up connection (or a late client):
+                        // drop it and stop accepting
+                        return;
+                    }
+                    counters.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                    counters.connections_active.fetch_add(1, Ordering::Relaxed);
+                    let _ = sock.set_nodelay(true);
+                    let reader_sock = match sock.try_clone() {
+                        Ok(s) => s,
+                        Err(_) => {
+                            counters.connections_active.fetch_sub(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    };
+                    let engine = engine.clone();
+                    let shutting_down2 = Arc::clone(&shutting_down);
+                    let counters2 = Arc::clone(&counters);
+                    let shutdown_req = shutdown_req_tx.clone();
+                    let spawned =
+                        std::thread::Builder::new().name("deepcot-net-conn".into()).spawn(
+                            move || {
+                                conn_main(
+                                    reader_sock,
+                                    engine,
+                                    shutting_down2,
+                                    Arc::clone(&counters2),
+                                    shutdown_req,
+                                );
+                                counters2.connections_active.fetch_sub(1, Ordering::Relaxed);
+                            },
+                        );
+                    match spawned {
+                        Ok(handle) => {
+                            let mut reg = conns.lock().unwrap_or_else(|p| p.into_inner());
+                            // prune finished connections so a long-lived
+                            // server doesn't accumulate one fd + handle
+                            // per connection it ever served (the dropped
+                            // socket clone releases the kernel socket)
+                            reg.retain(|(_, h)| !h.is_finished());
+                            reg.push((sock, handle));
+                        }
+                        Err(_) => {
+                            counters.connections_active.fetch_sub(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })?
+        };
+        Ok(NetServer {
+            addr,
+            shutting_down,
+            acceptor: Some(acceptor),
+            conns,
+            counters,
+            shutdown_req_rx,
+        })
+    }
+
+    /// The address the server actually listens on (resolves `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the net layer's counters.
+    pub fn metrics(&self) -> NetMetrics {
+        self.counters.snapshot()
+    }
+
+    /// Block until some client sends a SHUTDOWN frame, or `timeout`
+    /// passes (`true` = shutdown was requested). The server keeps
+    /// serving either way — pair with [`NetServer::shutdown`]. A
+    /// defunct acceptor (every request source gone) also reports
+    /// `true`: there is nothing left to wait for but the drain.
+    pub fn wait_shutdown_requested(&self, timeout: Duration) -> bool {
+        match self.shutdown_req_rx.recv_timeout(timeout) {
+            Ok(()) => true,
+            Err(RecvTimeoutError::Disconnected) => true,
+            Err(RecvTimeoutError::Timeout) => false,
+        }
+    }
+
+    /// Graceful drain: stop accepting, sever every connection's read
+    /// half (each reader announces terminal `ShuttingDown` errors for
+    /// its live streams and closes its sessions), and join every
+    /// thread. Engine shutdown is the caller's (the engine may outlive
+    /// the front door).
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shutting_down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // wake the acceptor out of accept(); it sees the flag and exits
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let conns = {
+            let mut reg = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+            std::mem::take(&mut *reg)
+        };
+        for (sock, _) in &conns {
+            // readers wake with EOF/error and run their drain path;
+            // their writers still own a live write half for the
+            // terminal error frames
+            let _ = sock.shutdown(Shutdown::Read);
+        }
+        for (_, handle) in conns {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One connection's reader loop: decode → dispatch → reply. Owns the
+/// connection's sessions; spawns its writer and per-stream forwarders.
+fn conn_main(
+    sock: TcpStream,
+    engine: EngineHandle,
+    shutting_down: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    shutdown_req: Sender<()>,
+) {
+    let Ok(write_sock) = sock.try_clone() else { return };
+    let (wtx, wrx) = mpsc::channel::<Reply>();
+    let writer = {
+        let counters = Arc::clone(&counters);
+        std::thread::Builder::new()
+            .name("deepcot-net-writer".into())
+            .spawn(move || writer_main(write_sock, wrx, counters))
+    };
+    let Ok(writer) = writer else { return };
+
+    let mut sock = sock;
+    let mut streams: BTreeMap<u64, StreamEntry> = BTreeMap::new();
+    let mut frame_buf: Vec<u8> = Vec::with_capacity(4096);
+    loop {
+        match proto::read_frame(&mut sock, &mut frame_buf) {
+            Ok(true) => {}
+            // clean client EOF, torn frame, severed socket, or an
+            // undecodable length prefix: the connection is over (a bad
+            // prefix cannot be resynchronized)
+            Ok(false) | Err(_) => break,
+        }
+        counters.frames_in.fetch_add(1, Ordering::Relaxed);
+        let raw = match RawFrame::parse(&frame_buf) {
+            Ok(raw) => raw,
+            Err(e) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = wtx.send(invalid(0, &e));
+                continue;
+            }
+        };
+        // PUSH dominates steady state: decode it zero-copy off the
+        // reused frame buffer before falling back to the owned decoder
+        let mut tokens = Vec::new();
+        if let Ok(stream) = raw.push_fields_into(&mut tokens) {
+            let reply = match streams.get(&stream) {
+                None => Frame::Error(WireError::from_engine(
+                    stream,
+                    &EngineError::StreamClosed(crate::coordinator::slots::StreamId(stream)),
+                )),
+                Some(entry) => match entry.sess.push(tokens) {
+                    Ok(()) => Frame::PushOk { stream },
+                    Err(e) => Frame::Error(WireError::from_engine(stream, &e)),
+                },
+            };
+            let _ = wtx.send(Reply::Frame(reply));
+            continue;
+        }
+        match raw.to_frame() {
+            Ok(Frame::Open) => {
+                let reply = match engine.open() {
+                    Ok(mut sess) => {
+                        let stream = sess.id().0;
+                        // the receiving half lives on its own forwarder
+                        // thread; the session half stays here for
+                        // push/close
+                        let rx = sess.split_receiver().expect("fresh session has its receiver");
+                        let closed = Arc::new(AtomicBool::new(false));
+                        let forwarder = spawn_forwarder(
+                            rx,
+                            stream,
+                            wtx.clone(),
+                            Arc::clone(&closed),
+                            Arc::clone(&shutting_down),
+                        );
+                        match forwarder {
+                            Ok(forwarder) => {
+                                counters.streams_opened.fetch_add(1, Ordering::Relaxed);
+                                streams.insert(stream, StreamEntry { sess, closed, forwarder });
+                                Frame::Opened { stream }
+                            }
+                            Err(_) => Frame::Error(WireError::from_engine(
+                                stream,
+                                &EngineError::Internal("spawning stream forwarder".into()),
+                            )),
+                        }
+                    }
+                    Err(e) => Frame::Error(WireError::from_engine(0, &e)),
+                };
+                let _ = wtx.send(Reply::Frame(reply));
+            }
+            Ok(Frame::Close { stream }) => {
+                let reply = match streams.remove(&stream) {
+                    Some(entry) => {
+                        entry.closed.store(true, Ordering::SeqCst);
+                        entry.sess.close();
+                        let _ = entry.forwarder.join();
+                        Frame::Closed { stream }
+                    }
+                    None => Frame::Error(WireError::from_engine(
+                        stream,
+                        &EngineError::StreamClosed(crate::coordinator::slots::StreamId(stream)),
+                    )),
+                };
+                let _ = wtx.send(Reply::Frame(reply));
+            }
+            Ok(Frame::Metrics) => {
+                let reply = match engine.metrics() {
+                    Ok(m) => Frame::MetricsReport {
+                        report: format!("{}\n  {}", m.report(), counters.snapshot().report()),
+                    },
+                    Err(e) => Frame::Error(WireError::from_engine(0, &e)),
+                };
+                let _ = wtx.send(Reply::Frame(reply));
+            }
+            Ok(Frame::Shutdown) => {
+                counters.shutdown_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = wtx.send(Reply::Frame(Frame::ShutdownOk));
+                // the owner of the NetServer decides what shutdown
+                // means (typically: drain the front door, then the
+                // engine); the reader keeps serving until severed
+                let _ = shutdown_req.send(());
+            }
+            // reply frames arriving at the server are client bugs, not
+            // transport corruption: answer typed, keep serving
+            Ok(_) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = wtx.send(Reply::Frame(Frame::Error(WireError::from_engine(
+                    0,
+                    &EngineError::InvalidRequest("reply opcode sent to the server".into()),
+                ))));
+            }
+            Err(e) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = wtx.send(invalid(0, &e));
+            }
+        }
+    }
+
+    // teardown: on server shutdown every still-open stream gets a
+    // terminal typed error (flushed before the writer closes); on a
+    // plain client disconnect the sessions just close (RAII) silently
+    let announce = shutting_down.load(Ordering::SeqCst);
+    for (stream, entry) in streams {
+        entry.closed.store(true, Ordering::SeqCst);
+        if announce {
+            let _ = wtx.send(Reply::Frame(Frame::Error(WireError::from_engine(
+                stream,
+                &EngineError::ShuttingDown,
+            ))));
+        }
+        entry.sess.close();
+        let _ = entry.forwarder.join();
+    }
+    drop(wtx);
+    let _ = writer.join();
+}
+
+fn invalid(stream: u64, e: &proto::ProtoError) -> Reply {
+    Reply::Frame(Frame::Error(WireError::from_engine(
+        stream,
+        &EngineError::InvalidRequest(e.to_string()),
+    )))
+}
+
+/// Relay a stream's tick results to the connection's writer until the
+/// stream tears down; an unexpected teardown (eviction, engine or
+/// server shutdown) is announced with a terminal typed error.
+fn spawn_forwarder(
+    rx: TickReceiver,
+    stream: u64,
+    wtx: Sender<Reply>,
+    closed: Arc<AtomicBool>,
+    shutting_down: Arc<AtomicBool>,
+) -> io::Result<JoinHandle<()>> {
+    std::thread::Builder::new().name("deepcot-net-stream".into()).spawn(move || loop {
+        match rx.recv() {
+            Ok(result) => {
+                if wtx.send(Reply::Tick { stream, result }).is_err() {
+                    return; // connection gone
+                }
+            }
+            Err(e) => {
+                if !closed.load(Ordering::SeqCst) {
+                    let e = if shutting_down.load(Ordering::SeqCst) {
+                        EngineError::ShuttingDown
+                    } else {
+                        e
+                    };
+                    let _ =
+                        wtx.send(Reply::Frame(Frame::Error(WireError::from_engine(stream, &e))));
+                }
+                return;
+            }
+        }
+    })
+}
+
+/// Drain the reply queue into the socket through one reusable encode
+/// buffer. Exits when every sender is gone or the socket dies.
+fn writer_main(mut sock: TcpStream, wrx: Receiver<Reply>, counters: Arc<Counters>) {
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    while let Ok(reply) = wrx.recv() {
+        match reply {
+            Reply::Frame(f) => f.encode_into(&mut buf),
+            Reply::Tick { stream, result } => {
+                proto::write_tick(&mut buf, stream, result.tick, &result.logits, &result.out)
+            }
+        }
+        if sock.write_all(&buf).is_err() {
+            // socket dead: drain (dropping replies) so senders never
+            // observe the channel as live-but-stuck
+            while wrx.recv().is_ok() {}
+            break;
+        }
+        counters.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = sock.flush();
+    let _ = sock.shutdown(Shutdown::Write);
+}

@@ -21,6 +21,10 @@ use std::time::Duration;
 
 use deepcot::config::{EngineBackend, EngineConfig};
 use deepcot::coordinator::engine::{EngineError, EngineThread, Session, TickResult};
+use deepcot::manifest::Manifest;
+use deepcot::nn::batched::BatchedScalarDeepCoT;
+use deepcot::nn::params::ModelParams;
+use deepcot::nn::tensor::Mat;
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::rng::Rng;
 
@@ -434,6 +438,101 @@ fn idle_eviction_reconciles_front_door_and_counts_once() {
     assert_eq!(m.streams_evicted, 1);
     assert_eq!(m.streams_closed, 0, "evicted stream must not also count as closed");
     b.close();
+    engine.shutdown().unwrap();
+}
+
+/// Randomized open/push/migrate/close interleaving (seeded, ≥1k ops)
+/// on a 3-shard cluster, checked against a single-threaded oracle:
+/// every live stream carries its own 1-lane `BatchedScalarDeepCoT`
+/// stepped in lockstep with its pushes. Whatever placement, eviction
+/// headroom, and migration the schedule hits, each stream's engine
+/// outputs must stay bitwise equal to its isolated oracle — the
+/// concurrency-coverage gap the steady/churn traces above leave open.
+#[test]
+fn randomized_interleaving_matches_single_stream_oracle() {
+    let (manifest, mdir) = Manifest::load(&synth_artifacts()).unwrap();
+    let entry = manifest.variant(&SyntheticServeSpec::variant_name(1)).unwrap();
+    let params = ModelParams::load(&mdir, entry).unwrap();
+    let mc = entry.config.clone();
+    let engine = EngineThread::spawn(cluster_cfg(3, 3)).unwrap(); // 9 slots
+    let h = engine.handle();
+
+    struct LiveStream {
+        sess: Session,
+        rng: Rng,
+        oracle: BatchedScalarDeepCoT,
+        pos: i32,
+        ticks: u64,
+    }
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut live: Vec<LiveStream> = Vec::new();
+    let (mut opened, mut pushed, mut migrated, mut closed, mut saturated) = (0, 0, 0, 0, 0u64);
+    const OPS: usize = 1200;
+    for _ in 0..OPS {
+        match rng.below(10) {
+            0 | 1 => match h.open() {
+                Ok(sess) => {
+                    live.push(LiveStream {
+                        sess,
+                        rng: rng.fork(),
+                        oracle: BatchedScalarDeepCoT::with_lanes(mc.clone(), params.clone(), 1),
+                        pos: 0,
+                        ticks: 0,
+                    });
+                    opened += 1;
+                }
+                Err(EngineError::Saturated { .. }) => saturated += 1,
+                Err(e) => panic!("open failed with a non-saturation error: {e:?}"),
+            },
+            2 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    live.swap_remove(i).sess.close();
+                    closed += 1;
+                }
+            }
+            3 | 4 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let id = live[i].sess.id();
+                    // a same-shard pick is a no-op, a full target
+                    // aborts with the stream intact — both fine here
+                    let _ = h.migrate(id, rng.below(3));
+                    migrated += 1;
+                }
+            }
+            _ => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let l = &mut live[i];
+                    let toks = l.rng.normal_vec(mc.d_in, 1.0);
+                    l.sess.push(toks.clone()).unwrap();
+                    let got = l.sess.recv_timeout(Duration::from_secs(30)).unwrap();
+                    let tokens = Mat::from_vec(1, mc.d_in, toks);
+                    let step = l.oracle.tick_lanes(&tokens, &[true], &[l.pos]).unwrap();
+                    let logits_want: Vec<u32> =
+                        step.logits.row(0).iter().map(|v| v.to_bits()).collect();
+                    let out_want: Vec<u32> = (0..mc.m_tokens)
+                        .flat_map(|r| step.out.row(r).iter().map(|v| v.to_bits()))
+                        .collect();
+                    let logits_got: Vec<u32> = got.logits.iter().map(|v| v.to_bits()).collect();
+                    let out_got: Vec<u32> = got.out.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(logits_got, logits_want, "stream {} logits diverge", l.sess.id().0);
+                    assert_eq!(out_got, out_want, "stream {} out diverges", l.sess.id().0);
+                    l.pos += 1;
+                    l.ticks += 1;
+                    assert_eq!(got.tick, l.ticks, "stream {} tick ordinal", l.sess.id().0);
+                    pushed += 1;
+                }
+            }
+        }
+    }
+    assert!(
+        pushed >= 300 && opened >= 30 && migrated >= 60 && closed >= 30,
+        "schedule under-exercised: pushed={pushed} opened={opened} \
+         migrated={migrated} closed={closed} saturated={saturated}"
+    );
+    drop(live); // sessions close on drop
     engine.shutdown().unwrap();
 }
 

@@ -1,0 +1,203 @@
+//! Frame-codec property tests for `net::proto` via `util::prop`:
+//! random frames round-trip exactly (length prefix consistent, typed
+//! errors survive as the same `EngineError` variant), and malformed
+//! input — truncations, corruptions, random byte soup — always rejects
+//! cleanly with a typed `ProtoError`, never a panic. This is the
+//! socket-facing safety contract: the server feeds every received
+//! frame through exactly these paths.
+
+use deepcot::coordinator::session::EngineError;
+use deepcot::coordinator::slots::StreamId;
+use deepcot::net::proto::{Frame, RawFrame, WireError};
+use deepcot::util::prop;
+use deepcot::util::rng::Rng;
+
+fn rand_string(rng: &mut Rng) -> String {
+    let n = rng.below(24);
+    (0..n)
+        .map(|_| match rng.below(12) {
+            0 => 'é',
+            1 => '中',
+            2 => ' ',
+            _ => (b'a' + rng.below(26) as u8) as char,
+        })
+        .collect()
+}
+
+/// Finite random payloads (exact-equality friendly; arbitrary bit
+/// patterns incl. NaN are pinned separately below).
+fn rand_f32s(rng: &mut Rng, max: usize) -> Vec<f32> {
+    let n = rng.below(max + 1);
+    (0..n).map(|_| rng.range_f32(-1e6, 1e6)).collect()
+}
+
+fn rand_engine_error(rng: &mut Rng) -> EngineError {
+    match rng.below(8) {
+        0 => EngineError::Saturated { capacity: rng.below(1 << 20) },
+        1 => EngineError::StreamClosed(StreamId(rng.next_u64())),
+        2 => EngineError::Backpressure(StreamId(rng.next_u64())),
+        3 => EngineError::ShuttingDown,
+        4 => EngineError::Timeout,
+        5 => EngineError::InvalidRequest(rand_string(rng)),
+        6 => EngineError::Unsupported("a static unsupported message"),
+        _ => EngineError::Internal(rand_string(rng)),
+    }
+}
+
+fn rand_frame(rng: &mut Rng) -> Frame {
+    match rng.below(12) {
+        0 => Frame::Open,
+        1 => Frame::Push { stream: rng.next_u64(), tokens: rand_f32s(rng, 32) },
+        2 => Frame::Close { stream: rng.next_u64() },
+        3 => Frame::Metrics,
+        4 => Frame::Shutdown,
+        5 => Frame::Opened { stream: rng.next_u64() },
+        6 => Frame::PushOk { stream: rng.next_u64() },
+        7 => Frame::Closed { stream: rng.next_u64() },
+        8 => Frame::Tick {
+            stream: rng.next_u64(),
+            tick: rng.next_u64(),
+            logits: rand_f32s(rng, 16),
+            out: rand_f32s(rng, 64),
+        },
+        9 => Frame::MetricsReport { report: rand_string(rng) },
+        10 => Frame::ShutdownOk,
+        _ => Frame::Error(WireError::from_engine(rng.next_u64(), &rand_engine_error(rng))),
+    }
+}
+
+/// Body bytes (beyond the opcode) an opcode's fixed fields require —
+/// any truncation below this must reject.
+fn min_fields(frame: &Frame) -> usize {
+    match frame {
+        Frame::Open | Frame::Metrics | Frame::Shutdown | Frame::ShutdownOk => 0,
+        Frame::MetricsReport { .. } => 0,
+        Frame::Close { .. }
+        | Frame::Opened { .. }
+        | Frame::PushOk { .. }
+        | Frame::Closed { .. }
+        | Frame::Push { .. } => 8,
+        Frame::Tick { .. } => 20,
+        Frame::Error(_) => 13,
+    }
+}
+
+#[test]
+fn prop_frames_round_trip_with_consistent_prefix() {
+    prop::check("proto-roundtrip", 400, |rng| {
+        let f = rand_frame(rng);
+        let enc = f.encode();
+        if enc.len() < 5 {
+            return Err(format!("frame encoded to {} bytes (< prefix + opcode)", enc.len()));
+        }
+        let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize;
+        if len != enc.len() - 4 {
+            return Err(format!("prefix says {len}, body is {}", enc.len() - 4));
+        }
+        let dec = Frame::decode(&enc[4..]).map_err(|e| format!("decode failed: {e}"))?;
+        if dec != f {
+            return Err(format!("round trip changed the frame: {f:?} -> {dec:?}"));
+        }
+        // encode_into on a dirty reused buffer must produce identical bytes
+        let mut buf = vec![0xAA; 7];
+        f.encode_into(&mut buf);
+        if buf != enc {
+            return Err("encode_into(reused buffer) diverged from encode()".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_errors_round_trip_typed() {
+    prop::check("proto-error-roundtrip", 300, |rng| {
+        let e = rand_engine_error(rng);
+        let w = WireError::from_engine(rng.next_u64(), &e);
+        let enc = Frame::Error(w).encode();
+        let Ok(Frame::Error(back)) = Frame::decode(&enc[4..]) else {
+            return Err("error frame did not decode as an error".into());
+        };
+        let got = back.to_engine();
+        let ok = match (&e, &got) {
+            // Unsupported is documented lossy (static str payload)
+            (EngineError::Unsupported(_), EngineError::Unsupported(_)) => true,
+            _ => got == e,
+        };
+        if !ok {
+            return Err(format!("typed error changed over the wire: {e:?} -> {got:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncations_reject_cleanly() {
+    prop::check("proto-truncation", 250, |rng| {
+        let f = rand_frame(rng);
+        let enc = f.encode();
+        let body = &enc[4..];
+        let min = min_fields(&f);
+        for cut in 0..body.len() {
+            // contract: never a panic; typed error wherever the fixed
+            // fields cannot possibly be present
+            let res = Frame::decode(&body[..cut]);
+            let fields = cut.saturating_sub(1);
+            if (cut == 0 || fields < min) && res.is_ok() {
+                return Err(format!(
+                    "truncation to {cut} bytes decoded Ok for {f:?} (needs {min} field bytes)"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupt_and_random_bytes_never_panic() {
+    prop::check("proto-corruption", 400, |rng| {
+        // corrupt a valid encoding in 1..=5 random body positions
+        let f = rand_frame(rng);
+        let mut enc = f.encode();
+        if enc.len() > 4 {
+            for _ in 0..rng.range(1, 6) {
+                let i = rng.range(4, enc.len());
+                enc[i] ^= 1 << rng.below(8);
+            }
+            let _ = Frame::decode(&enc[4..]); // Ok or typed Err, never panic
+        }
+        // pure byte soup, uniformly random
+        let n = rng.below(120);
+        let soup: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let _ = Frame::decode(&soup);
+        let _ = RawFrame::parse(&soup).map(|r| r.to_frame());
+        Ok(())
+    });
+}
+
+/// Arbitrary bit patterns — NaN, infinities, denormals — must cross
+/// the hot-path codec bit-for-bit (the wire must never perturb a
+/// payload the way a float round-trip through text could).
+#[test]
+fn hot_path_payloads_are_bit_exact() {
+    let mut rng = Rng::new(0xB17);
+    for _ in 0..200 {
+        let n = rng.below(32);
+        let bits: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+        let tokens: Vec<f32> = bits.iter().map(|&b| f32::from_bits(b)).collect();
+        let mut buf = Vec::new();
+        deepcot::net::proto::write_push(&mut buf, 9, &tokens);
+        let raw = RawFrame::parse(&buf[4..]).unwrap();
+        let mut back = Vec::new();
+        assert_eq!(raw.push_fields_into(&mut back).unwrap(), 9);
+        let back_bits: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(back_bits, bits, "PUSH payload must be bit-exact");
+
+        let mut tick_buf = Vec::new();
+        deepcot::net::proto::write_tick(&mut tick_buf, 9, 3, &tokens, &tokens);
+        let raw = RawFrame::parse(&tick_buf[4..]).unwrap();
+        let (mut lg, mut out) = (Vec::new(), Vec::new());
+        assert_eq!(raw.tick_fields_into(&mut lg, &mut out).unwrap(), (9, 3));
+        assert_eq!(lg.iter().map(|v| v.to_bits()).collect::<Vec<_>>(), bits);
+        assert_eq!(out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(), bits);
+    }
+}

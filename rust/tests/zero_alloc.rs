@@ -13,6 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use deepcot::manifest::ModelConfig;
+use deepcot::net::proto::{self, RawFrame};
 use deepcot::nn::batched::BatchedScalarDeepCoT;
 use deepcot::nn::encoder::ScalarDeepCoT;
 use deepcot::nn::params::ModelParams;
@@ -155,6 +156,48 @@ fn steady_state_ticks_allocate_nothing() {
         after - before,
         0,
         "odd-geometry packed-kernel tick allocated {} times across 5 steady-state ticks",
+        after - before
+    );
+    assert!(sink.is_finite());
+
+    // net wire codec steady state: the serialization layer of the TCP
+    // front door's PUSH → TICK loop — encode into reused frame
+    // buffers, decode into reused scratch vectors — performs ZERO
+    // allocations after warmup. Scope is the CODEC, pinned in
+    // isolation: the server's full reply loop still allocates once
+    // per push by engine-API design (`Session::push` consumes an
+    // owned Vec<f32>, and each mpsc reply message is a heap node);
+    // those are engine costs, not codec regressions, and this test
+    // keeps the codec from quietly adding to them. The buffers below
+    // are exactly what the server's reader/writer threads and the
+    // client hot path hold.
+    let tokens = Rng::new(37).normal_vec(16, 1.0);
+    let logits = Rng::new(41).normal_vec(4, 1.0);
+    let acts = Rng::new(43).normal_vec(32, 1.0);
+    let (mut push_buf, mut tick_buf) = (Vec::new(), Vec::new());
+    let (mut tok_scratch, mut logit_scratch, mut act_scratch) =
+        (Vec::new(), Vec::new(), Vec::new());
+    let mut codec_cycle = |i: u64, sink: &mut f32| {
+        proto::write_push(&mut push_buf, 7, &tokens);
+        let raw = RawFrame::parse(&push_buf[4..]).unwrap();
+        let stream = raw.push_fields_into(&mut tok_scratch).unwrap();
+        proto::write_tick(&mut tick_buf, stream, i + 1, &logits, &acts);
+        let raw = RawFrame::parse(&tick_buf[4..]).unwrap();
+        let (s2, t2) = raw.tick_fields_into(&mut logit_scratch, &mut act_scratch).unwrap();
+        *sink += tok_scratch[0] + logit_scratch[0] + act_scratch[0] + (s2 + t2) as f32;
+    };
+    for i in 0..3 {
+        codec_cycle(i, &mut sink); // warmup establishes buffer capacity
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for i in 0..5 {
+        codec_cycle(i, &mut sink);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state PUSH/TICK codec round trips allocated {} times across 5 cycles",
         after - before
     );
     assert!(sink.is_finite());
