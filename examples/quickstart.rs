@@ -30,6 +30,27 @@
 //! (`connect` → `open` → `push`/`recv_tick` → `close`, plus
 //! `shutdown_server` for a graceful drain); `bench_throughput --tcp`
 //! measures the same closed-loop traffic end-to-end over loopback.
+//!
+//! # Kernel dispatch
+//!
+//! The scalar backend's hot kernels resolve onto an explicit-SIMD path
+//! once at startup (`deepcot::nn::simd`): AVX2 on x86_64, NEON on
+//! aarch64, the portable scalar suite otherwise. Dispatch never
+//! changes stream bits — SIMD ≡ scalar is pinned bitwise — only
+//! latency. Three knobs, strongest first:
+//!
+//! * `EngineConfig::builder().kernel_dispatch("scalar".parse()?)` (or
+//!   any `DispatchChoice`) pins the path in code;
+//! * `--kernel-dispatch scalar|avx2|neon` on `deepcot_serve` and both
+//!   benches sets the same config field from the CLI;
+//! * `DEEPCOT_KERNEL_DISPATCH=scalar|avx2|neon` forces the path under
+//!   the default `auto` without touching config or flags.
+//!
+//! Forcing a path the CPU can't run fails loudly at startup. The
+//! resolved path is reported in `ClusterMetrics::kernel_dispatch`, in
+//! the `dispatch=<path>` token of `report()` / the TCP `METRICS`
+//! reply, and in `bench_kernels --json` next to the detected CPU
+//! features.
 
 use std::time::Duration;
 

@@ -18,8 +18,19 @@
 //! (`BENCH_KERNELS.json` at the repo root holds the committed
 //! baseline); `--quick` bounds iteration counts for CI smokes; and
 //! `--assert-speedup X` fails the run if the end-to-end kernel tick is
-//! not at least `X` times faster than the naive tick — CI guards at a
-//! generous 1.0x (not-slower), real numbers live in the JSON.
+//! not at least `X` times faster than the naive tick — CI guards the
+//! scalar leg at a generous 1.0x (not-slower) and the native SIMD leg
+//! at a stricter bar, real numbers live in the JSON.
+//!
+//! Kernel dispatch: `--kernel-dispatch scalar|avx2|neon|auto` pins the
+//! kernel path for the whole run (it also exports
+//! `DEEPCOT_KERNEL_DISPATCH` so the end-to-end engine constructors
+//! follow); the resolved path and the detected CPU features are printed
+//! and recorded in the JSON, so a number is never divorced from the
+//! hardware and path that produced it. `--assert-dispatch
+//! scalar|avx2|neon|simd` fails the run if the resolved path is not
+//! the expected one (`simd` = any non-scalar path) — the CI guard
+//! against dispatch silently falling back.
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -29,11 +40,11 @@ use anyhow::{Context, Result};
 use deepcot::manifest::ModelConfig;
 use deepcot::nn::batched::BatchedScalarDeepCoT;
 use deepcot::nn::encoder::ScalarDeepCoT;
-use deepcot::nn::kernels::{self, PackedLinear};
 use deepcot::nn::kv_ring::KvRing;
 use deepcot::nn::naive::NaiveScalarDeepCoT;
 use deepcot::nn::params::ModelParams;
-use deepcot::nn::rope::{apply_rope_inplace, apply_rope_row, RopeTable};
+use deepcot::nn::rope::{apply_rope_inplace, RopeTable};
+use deepcot::nn::simd::{cpu_features, DispatchChoice, DispatchPath, KernelOps, DISPATCH_ENV};
 use deepcot::nn::tensor::{self, Mat};
 use deepcot::util::cli::Cli;
 use deepcot::util::json::{num, obj, Json};
@@ -70,7 +81,7 @@ impl OpRow {
     }
 }
 
-fn bench_ops(cfg: &ModelConfig, iters: usize) -> Vec<OpRow> {
+fn bench_ops(cfg: &ModelConfig, iters: usize, kops: &'static KernelOps) -> Vec<OpRow> {
     let mut rng = Rng::new(0xBE9C5);
     let d = cfg.d_model;
     let (h, dh, mlen) = (cfg.n_heads, cfg.d_head(), cfg.mem_len());
@@ -84,7 +95,7 @@ fn bench_ops(cfg: &ModelConfig, iters: usize) -> Vec<OpRow> {
             black_box(tensor::dot(black_box(&a), black_box(&b)));
         });
         let kernel_ns = time_ns(iters * 64, || {
-            black_box(kernels::dot(black_box(&a), black_box(&b)));
+            black_box((kops.dot)(black_box(&a), black_box(&b)));
         });
         rows.push(OpRow { name: "dot_d_model", naive_ns, kernel_ns });
     }
@@ -100,7 +111,7 @@ fn bench_ops(cfg: &ModelConfig, iters: usize) -> Vec<OpRow> {
             out.add_row(black_box(&bias));
             black_box(out.at(0, 0));
         });
-        let packed = PackedLinear::pack(&w, &bias);
+        let packed = deepcot::nn::kernels::PackedLinear::pack_with(&w, &bias, kops);
         let kernel_ns = time_ns(iters, || {
             packed.forward_into(black_box(&x), &mut out);
             black_box(out.at(0, 0));
@@ -127,7 +138,7 @@ fn bench_ops(cfg: &ModelConfig, iters: usize) -> Vec<OpRow> {
             row.copy_from_slice(&row0);
             pos += 1;
             let (sin, cos) = tab.row(0, pos);
-            apply_rope_row(&mut row, dh, sin, cos);
+            (kops.rope_rotate_row)(&mut row, dh, sin, cos);
             black_box(row[0]);
         });
         rows.push(OpRow { name: "rope_token_row", naive_ns, kernel_ns });
@@ -162,9 +173,9 @@ fn bench_ops(cfg: &ModelConfig, iters: usize) -> Vec<OpRow> {
         let kernel_ns = time_ns(iters, || {
             let (ka, kb) = kring.as_segments();
             let (va, vb) = vring.as_segments();
-            kernels::dot_scores_segments(black_box(&q), ka, kb, scale, &mut s);
+            (kops.dot_scores_segments)(black_box(&q), ka, kb, scale, &mut s);
             acc.fill(0.0);
-            kernels::weighted_sum_segments(&s, va, vb, &mut acc);
+            (kops.weighted_sum_segments)(&s, va, vb, &mut acc);
             black_box(acc[0]);
         });
         rows.push(OpRow { name: "attention_head_ring", naive_ns, kernel_ns });
@@ -185,7 +196,7 @@ impl EndToEnd {
     }
 }
 
-fn bench_end_to_end(cfg: &ModelConfig, ticks: usize) -> Result<EndToEnd> {
+fn bench_end_to_end(cfg: &ModelConfig, ticks: usize, kops: &'static KernelOps) -> Result<EndToEnd> {
     let params = ModelParams::synthetic(cfg, &mut Rng::new(0xBE9C6));
     let mut rng = Rng::new(0xBE9C7);
     let tok_elems = cfg.m_tokens * cfg.d_in;
@@ -204,7 +215,7 @@ fn bench_end_to_end(cfg: &ModelConfig, ticks: usize) -> Result<EndToEnd> {
     });
 
     let lanes = 4;
-    let mut batched = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, lanes);
+    let mut batched = BatchedScalarDeepCoT::with_lanes_ops(cfg.clone(), params, lanes, kops);
     let stacked = Mat::from_vec(
         lanes * cfg.m_tokens,
         cfg.d_in,
@@ -232,6 +243,12 @@ fn main() -> Result<()> {
             "0",
             "fail unless end-to-end kernel speedup vs naive >= this (0 = off)",
         )
+        .opt("kernel-dispatch", "auto", "kernel path: auto|scalar|avx2|neon")
+        .opt(
+            "assert-dispatch",
+            "",
+            "fail unless the resolved path is this (scalar|avx2|neon|simd; simd = any non-scalar)",
+        )
         .flag("quick", "reduced iteration counts (CI smoke)")
         .parse()?;
     let cfg = ModelConfig::synthetic(
@@ -245,6 +262,16 @@ fn main() -> Result<()> {
     let quick = args.has("quick");
     let ticks = if quick { 120 } else { args.get_usize("ticks")?.max(10) };
     let iters = if quick { 300 } else { args.get_usize("iters")?.max(10) };
+
+    let choice: DispatchChoice = args.get("kernel-dispatch").parse()?;
+    if choice != DispatchChoice::Auto {
+        // export the force so every Auto-resolving constructor in the
+        // end-to-end leg (ScalarDeepCoT and friends) follows the same
+        // path this process measures
+        std::env::set_var(DISPATCH_ENV, choice.to_string());
+    }
+    let kops = KernelOps::resolve(choice)?;
+    let features = cpu_features();
     println!(
         "bench_kernels: d={} H={} L={} n={} (mem_len {}), {} ticks, {} per-op iters{}",
         cfg.d_model,
@@ -256,8 +283,23 @@ fn main() -> Result<()> {
         iters,
         if quick { " [quick]" } else { "" },
     );
+    println!("kernel dispatch: {} (cpu {features})", kops.path);
 
-    let ops = bench_ops(&cfg, iters);
+    let expect = args.get("assert-dispatch").to_string();
+    if !expect.is_empty() {
+        let ok = match expect.as_str() {
+            "simd" => kops.path != DispatchPath::Scalar,
+            other => kops.path.as_str() == other,
+        };
+        anyhow::ensure!(
+            ok,
+            "resolved kernel dispatch {} but --assert-dispatch {expect} (cpu {features})",
+            kops.path
+        );
+        println!("dispatch guard passed: {} matches {expect}", kops.path);
+    }
+
+    let ops = bench_ops(&cfg, iters, kops);
     println!("{:>22} {:>12} {:>12} {:>9}", "op", "naive ns", "kernel ns", "speedup");
     for r in &ops {
         println!(
@@ -269,7 +311,7 @@ fn main() -> Result<()> {
         );
     }
 
-    let e2e = bench_end_to_end(&cfg, ticks)?;
+    let e2e = bench_end_to_end(&cfg, ticks, kops)?;
     println!(
         "end-to-end tick: naive {:.1}µs, kernel {:.1}µs, batched-4 {:.1}µs/lane — {:.2}x",
         e2e.naive_ns / 1e3,
@@ -282,6 +324,8 @@ fn main() -> Result<()> {
         let doc = obj(vec![
             ("bench", Json::Str("kernels".into())),
             ("quick", Json::Bool(quick)),
+            ("kernel_dispatch", Json::Str(kops.path.as_str().into())),
+            ("cpu_features", Json::Str(features.clone())),
             (
                 "geometry",
                 obj(vec![

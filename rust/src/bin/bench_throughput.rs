@@ -25,6 +25,12 @@
 //! the perf trajectory, directly comparable to the in-process one
 //! (same model, same traffic, `"transport"` recorded in `--json`).
 //!
+//! `--kernel-dispatch scalar|avx2|neon` forces the shard backends onto
+//! one kernel path (`nn::simd`; default `auto` picks the widest the
+//! CPU supports). The resolved path and detected CPU features land in
+//! the `--json` document, so scalar and SIMD sweeps stay labelled in
+//! the perf trajectory. Dispatch never changes stream bits.
+//!
 //! The CI smoke runs use a tiny model, 2 shards and a bounded tick
 //! count — see .github/workflows/ci.yml.
 
@@ -37,6 +43,7 @@ use deepcot::coordinator::engine::EngineThread;
 use deepcot::coordinator::slots::StreamId;
 use deepcot::net::client::NetClient;
 use deepcot::net::server::NetServer;
+use deepcot::nn::simd::{cpu_features, DispatchChoice, KernelOps};
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::cli::Cli;
 use deepcot::util::json::{num, obj, Json};
@@ -180,6 +187,7 @@ fn main() -> Result<()> {
         .opt("window", "16", "synthetic continual window")
         .opt("deadline-us", "200", "partial-batch flush deadline (µs)")
         .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin")
+        .opt("kernel-dispatch", "auto", "kernel path: auto|scalar|avx2|neon")
         .opt("migrate-every", "0", "live-migrate each stream every N ticks (0 = off)")
         .opt("json", "", "write sweep results JSON to this path (perf trajectory)")
         .flag("tcp", "drive the engine end-to-end over a loopback TCP front door");
@@ -194,6 +202,10 @@ fn main() -> Result<()> {
     let streams = args.get_usize("streams")?.max(1);
     let ticks = args.get_usize("ticks")?.max(1);
     let migrate_every = args.get_usize("migrate-every")?;
+    let dispatch: DispatchChoice = args.get("kernel-dispatch").parse()?;
+    // resolve up front so a forced-but-unsupported path fails before
+    // any engine spins up, and so the sweep can report the real path
+    let kops = KernelOps::resolve(dispatch)?;
     let d_model = args.get_usize("d-model")?;
     let spec = SyntheticServeSpec {
         d_in: (d_model / 2).max(1),
@@ -207,7 +219,8 @@ fn main() -> Result<()> {
     };
     let dir = spec.write()?;
     println!(
-        "bench_throughput[{}]: {} streams x {} ticks, model d={} L={} H={} n={}, deadline={}µs{}",
+        "bench_throughput[{}]: {} streams x {} ticks, model d={} L={} H={} n={}, \
+         dispatch={}, deadline={}µs{}",
         if tcp { "tcp" } else { "in-process" },
         streams,
         ticks,
@@ -215,6 +228,7 @@ fn main() -> Result<()> {
         spec.n_layers,
         spec.n_heads,
         spec.window,
+        kops.path,
         args.get_u64("deadline-us")?,
         if migrate_every > 0 {
             format!(", migrate every {migrate_every} ticks")
@@ -236,6 +250,7 @@ fn main() -> Result<()> {
             .shards(shards)
             .slots_per_shard(slots)
             .placement(args.get("placement").parse()?)
+            .kernel_dispatch(dispatch)
             .build();
         results.push(run_one(cfg, streams, ticks, spec.d_in, migrate_every, tcp)?);
     }
@@ -273,6 +288,8 @@ fn main() -> Result<()> {
             ("streams", num(streams as f64)),
             ("ticks", num(ticks as f64)),
             ("migrate_every", num(migrate_every as f64)),
+            ("kernel_dispatch", Json::Str(kops.path.as_str().into())),
+            ("cpu_features", Json::Str(cpu_features())),
             (
                 "model",
                 obj(vec![

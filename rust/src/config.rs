@@ -6,6 +6,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::nn::simd::DispatchChoice;
 use crate::util::cli::{Args, Cli};
 
 /// Which execution backend the engine thread drives.
@@ -88,6 +89,12 @@ pub struct EngineConfig {
     /// Per-shard slot capacity override (scalar backend only; 0 = the
     /// variant's compiled batch size).
     pub slots_per_shard: usize,
+    /// Kernel path for the scalar backend's hot-tick kernels: `Auto`
+    /// (env override via `DEEPCOT_KERNEL_DISPATCH`, else the best
+    /// detected native SIMD path) or an explicit scalar/avx2/neon
+    /// force. Dispatch is bitwise-invisible (see `nn::simd`); this
+    /// knob exists so tests, CI, and benches can pin a path.
+    pub kernel_dispatch: DispatchChoice,
 }
 
 impl Default for EngineConfig {
@@ -103,6 +110,7 @@ impl Default for EngineConfig {
             shards: 1,
             placement: PlacementPolicy::Hash,
             slots_per_shard: 0,
+            kernel_dispatch: DispatchChoice::Auto,
         }
     }
 }
@@ -188,6 +196,12 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// Kernel path for the scalar backend (auto / scalar / avx2 / neon).
+    pub fn kernel_dispatch(mut self, d: DispatchChoice) -> Self {
+        self.cfg.kernel_dispatch = d;
+        self
+    }
+
     /// Finish the build.
     pub fn build(self) -> EngineConfig {
         self.cfg
@@ -211,6 +225,7 @@ impl EngineConfig {
             .opt("shards", "1", "engine worker shards (0 = one per core)")
             .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin")
             .opt("slots-per-shard", "0", "per-shard slot capacity (scalar; 0 = variant batch)")
+            .opt("kernel-dispatch", "auto", "kernel path: auto|scalar|avx2|neon")
     }
 
     pub fn from_args(args: &Args) -> Result<Self> {
@@ -226,6 +241,7 @@ impl EngineConfig {
         cfg.shards = args.get_usize("shards")?;
         cfg.placement = args.get("placement").parse()?;
         cfg.slots_per_shard = args.get_usize("slots-per-shard")?;
+        cfg.kernel_dispatch = args.get("kernel-dispatch").parse()?;
         Ok(cfg)
     }
 
@@ -264,6 +280,23 @@ mod tests {
         assert_eq!(c.variant, "serve_deepcot_b1");
         assert_eq!(c.batch_deadline, Duration::from_micros(500));
         assert_eq!(c.backend, EngineBackend::Scalar);
+        assert_eq!(c.kernel_dispatch, DispatchChoice::Auto);
+    }
+
+    #[test]
+    fn kernel_dispatch_parses() {
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli
+            .parse_from(["--kernel-dispatch", "scalar"].iter().map(|s| s.to_string()))
+            .unwrap();
+        let c = EngineConfig::from_args(&args).unwrap();
+        assert_eq!(c.kernel_dispatch, DispatchChoice::Scalar);
+        assert_eq!(EngineConfig::default().kernel_dispatch, DispatchChoice::Auto);
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli
+            .parse_from(["--kernel-dispatch", "sse9"].iter().map(|s| s.to_string()))
+            .unwrap();
+        assert!(EngineConfig::from_args(&args).is_err(), "bad dispatch must fail to parse");
     }
 
     #[test]
@@ -304,6 +337,7 @@ mod tests {
             .max_queue_per_stream(3)
             .request_queue(64)
             .artifacts_dir("/tmp/x")
+            .kernel_dispatch(DispatchChoice::Scalar)
             .build();
         assert_eq!(c.variant, "serve_deepcot_b1");
         assert_eq!(c.backend, EngineBackend::Scalar);
@@ -315,6 +349,7 @@ mod tests {
         assert_eq!(c.max_queue_per_stream, 3);
         assert_eq!(c.request_queue, 64);
         assert_eq!(c.artifacts_dir, PathBuf::from("/tmp/x"));
+        assert_eq!(c.kernel_dispatch, DispatchChoice::Scalar);
         // untouched fields keep their defaults
         let d = EngineConfig::default();
         assert_eq!(EngineConfig::builder().build().variant, d.variant);

@@ -35,8 +35,11 @@
 //!
 //! `metrics()` returns [`ClusterMetrics`]: the aggregate fields carry
 //! the same names the single-engine metrics had, plus a per-shard
-//! breakdown, the front door's placement counters, and the migration
-//! counters (attempted/completed/aborted, quiesce-time quantiles).
+//! breakdown, the front door's placement counters, the migration
+//! counters (attempted/completed/aborted, quiesce-time quantiles), and
+//! the kernel path the shard backends resolved at startup
+//! (`kernel_dispatch`: scalar / avx2 / neon — see `nn::simd`; dispatch
+//! never changes stream bits, only latency).
 //!
 //! [`ClusterMetrics`]: crate::coordinator::metrics::ClusterMetrics
 

@@ -106,6 +106,13 @@ pub struct EngineMetrics {
     pub tick_latency: LatencyHisto,
     /// time a token waits in the batcher before its tick starts
     pub queue_latency: LatencyHisto,
+    /// Kernel path the shard's backend resolved at startup ("scalar" /
+    /// "avx2" / "neon"; "n/a" for backends without a dispatched kernel
+    /// layer, empty before the shard reports). Dispatch never changes
+    /// results (bitwise-pinned in `tests/simd_equiv.rs`) — this field
+    /// exists so a latency number is never read without knowing which
+    /// path produced it.
+    pub kernel_dispatch: String,
 }
 
 impl EngineMetrics {
@@ -128,11 +135,16 @@ impl EngineMetrics {
         self.migrations_out += other.migrations_out;
         self.tick_latency.merge(&other.tick_latency);
         self.queue_latency.merge(&other.queue_latency);
+        // shards share one EngineConfig, so paths agree; first
+        // non-empty wins (merging into fresh all-zero counters)
+        if self.kernel_dispatch.is_empty() {
+            self.kernel_dispatch = other.kernel_dispatch.clone();
+        }
     }
 
     /// One-line operator summary of the counters.
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "ticks={} tokens={} outputs={} streams={}/{} evicted={} rejects={} \
              migr={}in/{}out tick(mean={:?} p50={:?} p95={:?} max={:?}) queue(p95={:?})",
             self.ticks,
@@ -149,7 +161,11 @@ impl EngineMetrics {
             self.tick_latency.quantile(0.95),
             self.tick_latency.max(),
             self.queue_latency.quantile(0.95),
-        )
+        );
+        if !self.kernel_dispatch.is_empty() {
+            s.push_str(&format!(" dispatch={}", self.kernel_dispatch));
+        }
+        s
     }
 }
 
@@ -199,6 +215,9 @@ pub struct ClusterMetrics {
     /// Stream-unavailability window per completed migration: export
     /// request to import acknowledgment (read p50/p99 off this).
     pub quiesce_latency: LatencyHisto,
+    /// Kernel path the shard backends resolved at startup (shards share
+    /// one `EngineConfig`, so one value describes the cluster).
+    pub kernel_dispatch: String,
 }
 
 impl ClusterMetrics {
@@ -219,6 +238,7 @@ impl ClusterMetrics {
             admission_rejects: agg.admission_rejects,
             tick_latency: agg.tick_latency,
             queue_latency: agg.queue_latency,
+            kernel_dispatch: agg.kernel_dispatch,
             per_shard,
             ..Self::default()
         }
@@ -245,6 +265,7 @@ impl ClusterMetrics {
             migrations_out,
             tick_latency: self.tick_latency.clone(),
             queue_latency: self.queue_latency.clone(),
+            kernel_dispatch: self.kernel_dispatch.clone(),
         }
     }
 
@@ -316,12 +337,14 @@ mod tests {
         a.streams_opened = 2;
         a.migrations_out = 1;
         a.tick_latency.record(Duration::from_micros(100));
+        a.kernel_dispatch = "scalar".to_string();
         let mut b = EngineMetrics::new();
         b.ticks = 4;
         b.outputs = 7;
         b.streams_evicted = 1;
         b.migrations_in = 1;
         b.tick_latency.record(Duration::from_micros(400));
+        b.kernel_dispatch = "scalar".to_string();
         let c = ClusterMetrics::from_shards(vec![a, b]);
         assert_eq!(c.ticks, 7);
         assert_eq!(c.outputs, 12);
@@ -334,5 +357,18 @@ mod tests {
         assert_eq!(c.aggregate().migrations_out, 1);
         assert!(c.report().contains("shard 1"));
         assert!(c.report().contains("migrations(attempted=0"));
+        // the resolved kernel path reaches the aggregate and the report
+        assert_eq!(c.kernel_dispatch, "scalar");
+        assert_eq!(c.aggregate().kernel_dispatch, "scalar");
+        assert!(c.report().contains("dispatch=scalar"));
+    }
+
+    #[test]
+    fn dispatch_absent_until_reported() {
+        // fresh counters carry no path; the report omits the field
+        // rather than printing an empty value
+        let m = EngineMetrics::new();
+        assert!(m.kernel_dispatch.is_empty());
+        assert!(!m.report().contains("dispatch="));
     }
 }

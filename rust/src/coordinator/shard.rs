@@ -292,7 +292,10 @@ fn init_stepper(cfg: &EngineConfig) -> Result<(Option<Runtime>, SlotStepper), En
         } else {
             entry.config.batch
         };
-        Ok((None, SlotStepper::new_scalar_with_capacity(entry, params, capacity)?))
+        Ok((
+            None,
+            SlotStepper::new_scalar_with_dispatch(entry, params, capacity, cfg.kernel_dispatch)?,
+        ))
     };
     match cfg.backend {
         EngineBackend::Pjrt => pjrt(cfg),
@@ -385,12 +388,13 @@ fn shard_main(
         }
     };
     // auto-fallback silently changes the latency class — always say
-    // which backend actually came up
+    // which backend (and kernel path) actually came up
     eprintln!(
-        "deepcot engine: shard {shard} serving {} on the {} backend (slots={})",
+        "deepcot engine: shard {shard} serving {} on the {} backend (slots={}, dispatch={})",
         cfg.variant,
         stepper.backend_name(),
-        stepper.capacity()
+        stepper.capacity(),
+        stepper.kernel_dispatch()
     );
     let lane_elems = {
         let c = stepper.config();
@@ -400,6 +404,7 @@ fn shard_main(
     let mut batcher = Batcher::new(cfg.batch_deadline, cfg.max_queue_per_stream);
     let mut ports: BTreeMap<StreamId, StreamPort> = Default::default();
     let mut metrics = EngineMetrics::new();
+    metrics.kernel_dispatch = stepper.kernel_dispatch().to_string();
 
     loop {
         // 1. drain / wait for requests up to the batching deadline

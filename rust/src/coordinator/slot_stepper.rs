@@ -61,6 +61,7 @@ use crate::coordinator::slots::StreamId;
 use crate::manifest::{ModelConfig, VariantEntry};
 use crate::nn::batched::BatchedScalarDeepCoT;
 use crate::nn::params::ModelParams;
+use crate::nn::simd::{DispatchChoice, KernelOps};
 use crate::nn::tensor::Mat;
 use crate::runtime::{HostTensor, LoadedVariant};
 
@@ -130,6 +131,13 @@ pub trait StreamBackend {
     /// Restore a lane from a snapshot; the lane then ticks
     /// bitwise-identically to the exported stream.
     fn import_lane(&mut self, lane: usize, state: &StreamState) -> Result<(), EngineError>;
+
+    /// The kernel path this backend's tick runs on ("scalar" / "avx2"
+    /// / "neon"), for metrics and logs. Backends without a dispatched
+    /// kernel layer report "n/a".
+    fn kernel_dispatch(&self) -> &'static str {
+        "n/a"
+    }
 }
 
 /// Backend-dispatching batched stepper: a thin owner of a boxed
@@ -153,13 +161,30 @@ impl SlotStepper {
     }
 
     /// Scalar backend with an explicit slot capacity (shard-sized lane
-    /// count, independent of the manifest's compiled batch).
+    /// count, independent of the manifest's compiled batch), kernel
+    /// path resolved under `DispatchChoice::Auto`.
     pub fn new_scalar_with_capacity(
         entry: &VariantEntry,
         params: ModelParams,
         capacity: usize,
     ) -> Result<Self, EngineError> {
-        let b = ScalarSlotStepper::new(entry, params, capacity).map_err(EngineError::internal)?;
+        Self::new_scalar_with_dispatch(entry, params, capacity, DispatchChoice::Auto)
+    }
+
+    /// Scalar backend with an explicit slot capacity and kernel
+    /// dispatch choice (`EngineConfig::kernel_dispatch`). Resolution
+    /// happens here, once — a forced-but-unsupported path is rejected
+    /// before any lane state exists.
+    pub fn new_scalar_with_dispatch(
+        entry: &VariantEntry,
+        params: ModelParams,
+        capacity: usize,
+        dispatch: DispatchChoice,
+    ) -> Result<Self, EngineError> {
+        let ops = KernelOps::resolve(dispatch)
+            .map_err(|e| EngineError::InvalidRequest(e.to_string()))?;
+        let b =
+            ScalarSlotStepper::new(entry, params, capacity, ops).map_err(EngineError::internal)?;
         Ok(Self { backend: Box::new(b) })
     }
 
@@ -173,6 +198,12 @@ impl SlotStepper {
     /// Short backend name for logs.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The backend's resolved kernel path ("n/a" for backends without
+    /// a dispatched kernel layer).
+    pub fn kernel_dispatch(&self) -> &'static str {
+        self.backend.kernel_dispatch()
     }
 
     /// The served model geometry.
@@ -229,7 +260,12 @@ struct ScalarSlotStepper {
 }
 
 impl ScalarSlotStepper {
-    fn new(entry: &VariantEntry, params: ModelParams, capacity: usize) -> Result<Self> {
+    fn new(
+        entry: &VariantEntry,
+        params: ModelParams,
+        capacity: usize,
+        ops: &'static KernelOps,
+    ) -> Result<Self> {
         if entry.family != "deepcot" {
             bail!(
                 "scalar slot backend implements the deepcot family only (got {})",
@@ -243,7 +279,7 @@ impl ScalarSlotStepper {
         }
         let cfg = entry.config.clone();
         anyhow::ensure!(capacity >= 1, "scalar slot backend needs capacity >= 1");
-        let model = BatchedScalarDeepCoT::with_lanes(cfg.clone(), params, capacity);
+        let model = BatchedScalarDeepCoT::with_lanes_ops(cfg.clone(), params, capacity, ops);
         let tokens = Mat::zeros(capacity * cfg.m_tokens, cfg.d_in);
         Ok(Self {
             cfg,
@@ -350,6 +386,10 @@ impl StreamBackend for ScalarSlotStepper {
             .map_err(|e| EngineError::InvalidRequest(e.to_string()))?;
         self.lane_pos[lane] = state.pos;
         Ok(())
+    }
+
+    fn kernel_dispatch(&self) -> &'static str {
+        self.model.dispatch().as_str()
     }
 }
 

@@ -276,6 +276,10 @@ pub enum Frame {
     /// Reply to [`Frame::Metrics`]: the operator report text.
     MetricsReport {
         /// `ClusterMetrics::report()` plus the net layer's counters.
+        /// Includes the engine's resolved kernel path as
+        /// `dispatch=<scalar|avx2|neon>` — no wire change was needed;
+        /// the field rides in the report string like every other
+        /// engine counter.
         report: String,
     },
     /// Reply to [`Frame::Shutdown`]: drain is underway; expect EOF.

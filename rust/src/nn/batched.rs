@@ -31,13 +31,11 @@
 use anyhow::Result;
 
 use crate::manifest::ModelConfig;
-use crate::nn::kernels::{
-    self, dot_scores_segments, residual_fused, soft_scores_segments, weighted_sum_segments,
-    PackedParams,
-};
+use crate::nn::kernels::{residual_fused, PackedParams};
 use crate::nn::kv_ring::KvRing;
 use crate::nn::params::{ModelParams, Norm};
-use crate::nn::rope::{apply_rope_row, RopeTable};
+use crate::nn::rope::RopeTable;
+use crate::nn::simd::{DispatchPath, KernelOps};
 use crate::nn::tensor::{softmax_inplace, Mat};
 
 /// Preallocated per-tick workspace, sized once from the model geometry.
@@ -124,6 +122,9 @@ pub struct BatchedScalarDeepCoT {
     /// Internal per-lane position clocks, used and advanced by
     /// [`Self::tick_all`] only; `tick_lanes` callers own their clocks.
     lane_pos: Vec<i32>,
+    /// Kernel path resolved once at construction; every hot-tick kernel
+    /// routes through this table (no per-call-site feature branching).
+    ops: &'static KernelOps,
 }
 
 impl BatchedScalarDeepCoT {
@@ -133,7 +134,24 @@ impl BatchedScalarDeepCoT {
         Self::with_lanes(cfg, p, lanes)
     }
 
+    /// [`Self::with_lanes_ops`] under
+    /// [`DispatchChoice::Auto`](crate::nn::simd::DispatchChoice) (env
+    /// override, else the best native path).
     pub fn with_lanes(cfg: ModelConfig, p: ModelParams, lanes: usize) -> Self {
+        Self::with_lanes_ops(cfg, p, lanes, KernelOps::auto())
+    }
+
+    /// Construct on an explicit, already-resolved kernel path. Dispatch
+    /// is bitwise-invisible (every path satisfies the `nn::kernels`
+    /// fixed-summation-order policy), so instances built on different
+    /// paths are freely interchangeable — snapshots migrate between
+    /// them without perturbing stream bits.
+    pub fn with_lanes_ops(
+        cfg: ModelConfig,
+        p: ModelParams,
+        lanes: usize,
+        ops: &'static KernelOps,
+    ) -> Self {
         assert!(lanes > 0, "need at least one lane");
         let (l, h, mlen, dh) = (cfg.n_layers, cfg.n_heads, cfg.mem_len(), cfg.d_head());
         let n = lanes * l * h;
@@ -144,14 +162,30 @@ impl BatchedScalarDeepCoT {
         // here so steady-state ticks never allocate. Only the norm
         // parameters survive from the naive layout — the packed copy
         // is the single resident set of projection weights.
-        let packed = p.pack();
+        let packed = p.pack_with(ops);
         let norms = p.layers.iter().map(|lp| lp.norm.clone()).collect();
         let rope = RopeTable::new(dh, lanes * cfg.m_tokens);
-        Self { cfg, norms, packed, rope, lanes, kmem, vmem, scratch, lane_pos: vec![0; lanes] }
+        Self {
+            cfg,
+            norms,
+            packed,
+            rope,
+            lanes,
+            kmem,
+            vmem,
+            scratch,
+            lane_pos: vec![0; lanes],
+            ops,
+        }
     }
 
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// The kernel path this stepper's tick runs on.
+    pub fn dispatch(&self) -> DispatchPath {
+        self.ops.path
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -314,6 +348,7 @@ impl BatchedScalarDeepCoT {
         let n_layers = self.norms.len();
         let norms = &self.norms;
         let pk = &self.packed;
+        let ops = self.ops;
         let Scratch { x, q, k, v, attn, proj, hid, scores, logits, live, pos } = &mut self.scratch;
 
         pk.w_in.forward_into(tokens, x);
@@ -331,8 +366,8 @@ impl BatchedScalarDeepCoT {
                     // (position unchanged within a tick), as do masked
                     // lanes across ticks (their clocks don't advance)
                     let (sin, cos) = self.rope.row(row, pp);
-                    apply_rope_row(q.row_mut(row), dh, sin, cos);
-                    apply_rope_row(k.row_mut(row), dh, sin, cos);
+                    (ops.rope_rotate_row)(q.row_mut(row), dh, sin, cos);
+                    (ops.rope_rotate_row)(k.row_mut(row), dh, sin, cos);
                 }
             }
             attn.fill(0.0);
@@ -355,25 +390,25 @@ impl BatchedScalarDeepCoT {
                         // the exact logical order of the old
                         // [memory; new] concatenation
                         if softmax {
-                            dot_scores_segments(qh, ka, kb, scale, &mut s[..mlen]);
+                            (ops.dot_scores_segments)(qh, ka, kb, scale, &mut s[..mlen]);
                             for j in 0..m {
                                 let kh = &k.row(lane * m + j)[hh * dh..(hh + 1) * dh];
-                                s[mlen + j] = kernels::dot(qh, kh) * scale;
+                                s[mlen + j] = (ops.dot)(qh, kh) * scale;
                             }
                             softmax_inplace(s);
                         } else {
                             // SOFT (paper Eq. 4): unnormalized Gaussian
-                            soft_scores_segments(qh, ka, kb, scale, &mut s[..mlen]);
+                            (ops.soft_scores_segments)(qh, ka, kb, scale, &mut s[..mlen]);
                             for j in 0..m {
                                 let kh = &k.row(lane * m + j)[hh * dh..(hh + 1) * dh];
-                                s[mlen + j] = (-kernels::sqdist(qh, kh) * 0.5 * scale).exp();
+                                s[mlen + j] = (-(ops.sqdist)(qh, kh) * 0.5 * scale).exp();
                             }
                         }
                         let orow = &mut attn.row_mut(row)[hh * dh..(hh + 1) * dh];
-                        weighted_sum_segments(&s[..mlen], va, vb, orow);
+                        (ops.weighted_sum_segments)(&s[..mlen], va, vb, orow);
                         for j in 0..m {
                             let vrow = &v.row(lane * m + j)[hh * dh..(hh + 1) * dh];
-                            kernels::axpy(s[mlen + j], vrow, orow);
+                            (ops.axpy)(s[mlen + j], vrow, orow);
                         }
                     }
                     // advance the ring: the m new rows overwrite the m
@@ -389,15 +424,15 @@ impl BatchedScalarDeepCoT {
                 }
             }
             pl.wo.forward_into(attn, proj);
-            residual_fused(norm, x, proj, 0);
-            // FFN up-projection with the GELU fused at store time
+            residual_fused(ops, norm, x, proj, 0);
+            // FFN up-projection with the GELU applied in-row
             if gelu_act {
                 pl.w1.forward_gelu_into(x, hid);
             } else {
                 pl.w1.forward_into(x, hid);
             }
             pl.w2.forward_into(hid, proj);
-            residual_fused(norm, x, proj, 1);
+            residual_fused(ops, norm, x, proj, 1);
         }
         // classifier head on each lane's newest token (bias added after
         // the completed product sum, like the naive matmul + add_row)

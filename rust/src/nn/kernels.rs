@@ -50,8 +50,35 @@
 //! (sequential summation), results legitimately differ by float
 //! reassociation; equivalence is asserted within 1e-4 relative
 //! tolerance in `tests/kernels_equiv.rs`.
+//!
+//! ## SIMD lane mapping (`nn::simd`)
+//!
+//! The explicit-SIMD kernels in [`simd`](crate::nn::simd) are held to
+//! the same policy **bitwise**, which pins the mapping between this
+//! module's scalar code and the vector registers:
+//!
+//! * the 8 split accumulators of [`dot`] / [`sqdist`] ARE the 8 f32
+//!   lanes of one AVX2 register (a NEON register pair): scalar
+//!   `acc[j] += xs[j] * ys[j]` and a per-lane packed mul-then-add are
+//!   the same two IEEE-754 operations on the same values;
+//! * **no FMA, ever** — a fused multiply-add rounds once where
+//!   mul-then-add rounds twice, so `_mm256_fmadd_ps` / `vfmaq_f32`
+//!   would change bits. Packed multiplies and adds only;
+//! * the vector accumulator is spilled back to a `[f32; 8]` and fed
+//!   through the **same** [`reduce`] pairwise tree — SIMD
+//!   horizontal-add shuffles impose a different tree shape and are
+//!   forbidden;
+//! * remainder elements (`len % 8`) run the scalar remainder code,
+//!   folding into accumulator lanes `0..len % 8` exactly as here.
+//!
+//! `tests/simd_equiv.rs` pins every SIMD kernel against its scalar
+//! twin bit for bit; because both satisfy the fixed-summation-order
+//! contract, dispatch choice (scalar / AVX2 / NEON — see
+//! [`KernelOps`](crate::nn::simd::KernelOps)) is invisible to every
+//! bitwise invariant above.
 
 use crate::nn::params::{ModelParams, Norm};
+use crate::nn::simd::KernelOps;
 use crate::nn::tensor::{gelu, layer_norm_inplace, Mat};
 
 /// Unroll width of the split-accumulator kernels. Eight f32 lanes: one
@@ -61,9 +88,10 @@ pub const UNROLL: usize = 8;
 
 /// Reduce the split accumulators in a fixed pairwise tree. The order is
 /// a function of nothing at all — every `dot`/`sqdist` of a given
-/// length sums in exactly this shape.
+/// length sums in exactly this shape. Public so the `nn::simd` kernels
+/// can spill their vector accumulators into the identical tree.
 #[inline]
-fn reduce(acc: [f32; UNROLL]) -> f32 {
+pub fn reduce(acc: [f32; UNROLL]) -> f32 {
     ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
 }
 
@@ -215,13 +243,23 @@ pub struct PackedLinear {
     /// (out_dim x in_dim): row `j` is column `j` of the source matrix.
     wt: Vec<f32>,
     bias: Vec<f32>,
+    /// Kernel path resolved once at pack time (`&'static` dispatch
+    /// table — no per-call-site feature branching in the tick loop).
+    ops: &'static KernelOps,
 }
 
 impl PackedLinear {
     /// Pack `w` (`in_dim x out_dim`, the `x @ w` convention of
-    /// [`Mat::matmul`]) and its bias. One transposition pass; the
-    /// source matrix can be dropped afterwards.
+    /// [`Mat::matmul`]) and its bias, resolving the kernel path under
+    /// [`DispatchChoice::Auto`](crate::nn::simd::DispatchChoice). One
+    /// transposition pass; the source matrix can be dropped afterwards.
     pub fn pack(w: &Mat, bias: &[f32]) -> Self {
+        Self::pack_with(w, bias, KernelOps::auto())
+    }
+
+    /// [`PackedLinear::pack`] onto an explicit, already-resolved kernel
+    /// path.
+    pub fn pack_with(w: &Mat, bias: &[f32], ops: &'static KernelOps) -> Self {
         assert_eq!(w.cols, bias.len(), "PackedLinear::pack bias length");
         assert!(w.rows > 0 && w.cols > 0, "PackedLinear::pack empty weight");
         let (k, c) = (w.rows, w.cols);
@@ -231,7 +269,7 @@ impl PackedLinear {
                 wt[j * k + r] = w.at(r, j);
             }
         }
-        Self { in_dim: k, out_dim: c, wt, bias: bias.to_vec() }
+        Self { in_dim: k, out_dim: c, wt, bias: bias.to_vec(), ops }
     }
 
     /// Input width (`k`).
@@ -244,21 +282,14 @@ impl PackedLinear {
         self.out_dim
     }
 
-    #[inline]
-    fn forward_row_map<F: Fn(f32) -> f32>(&self, x: &[f32], out: &mut [f32], f: &F) {
+    /// One row: `out = x @ W + b` (bias added after the completed
+    /// product sum, matching the naive matmul-then-`add_row` order),
+    /// via the monolithic fused row sweep of the resolved kernel path
+    /// (one indirect call per row, not per output dot).
+    pub fn forward_row_into(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(out.len(), self.out_dim);
-        for ((o, wrow), b) in
-            out.iter_mut().zip(self.wt.chunks_exact(self.in_dim)).zip(&self.bias)
-        {
-            *o = f(dot(x, wrow) + b);
-        }
-    }
-
-    /// One row: `out = x @ W + b` (bias added after the completed
-    /// product sum, matching the naive matmul-then-`add_row` order).
-    pub fn forward_row_into(&self, x: &[f32], out: &mut [f32]) {
-        self.forward_row_map(x, out, &|v| v);
+        (self.ops.linear_forward)(x, &self.wt, &self.bias, out);
     }
 
     /// `out = x @ W + b` over all rows. `out` must not alias `x`.
@@ -267,19 +298,25 @@ impl PackedLinear {
         assert_eq!(out.cols, self.out_dim, "PackedLinear::forward_into out_dim");
         assert_eq!(x.rows, out.rows, "PackedLinear::forward_into rows");
         for r in 0..x.rows {
-            self.forward_row_map(x.row(r), out.row_mut(r), &|v| v);
+            (self.ops.linear_forward)(x.row(r), &self.wt, &self.bias, out.row_mut(r));
         }
     }
 
     /// `out = gelu(x @ W + b)` — the FFN up-projection with the
-    /// activation fused at store time (one sweep instead of
-    /// matmul + bias sweep + activation sweep).
+    /// activation applied in a second in-place sweep over the freshly
+    /// written row. The activation input values are bit-identical to
+    /// [`PackedLinear::forward_into`]'s output, so fusing or splitting
+    /// the sweep cannot change bits (pinned in the tests below).
     pub fn forward_gelu_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols, self.in_dim, "PackedLinear::forward_gelu_into in_dim");
         assert_eq!(out.cols, self.out_dim, "PackedLinear::forward_gelu_into out_dim");
         assert_eq!(x.rows, out.rows, "PackedLinear::forward_gelu_into rows");
         for r in 0..x.rows {
-            self.forward_row_map(x.row(r), out.row_mut(r), &gelu);
+            let orow = out.row_mut(r);
+            (self.ops.linear_forward)(x.row(r), &self.wt, &self.bias, orow);
+            for v in orow.iter_mut() {
+                *v = gelu(*v);
+            }
         }
     }
 }
@@ -320,25 +357,35 @@ pub struct PackedParams {
 }
 
 impl PackedParams {
-    /// Pack every projection of `p`. `p` itself is untouched (the
-    /// stepper keeps it for norm parameters and snapshots).
+    /// Pack every projection of `p`, resolving the kernel path under
+    /// [`DispatchChoice::Auto`](crate::nn::simd::DispatchChoice). `p`
+    /// itself is untouched (the stepper keeps it for norm parameters
+    /// and snapshots).
     pub fn pack(p: &ModelParams) -> Self {
+        Self::pack_with(p, KernelOps::auto())
+    }
+
+    /// [`PackedParams::pack`] onto an explicit, already-resolved kernel
+    /// path (the stepper-construction entry point: the dispatch choice
+    /// from `EngineConfig` / `--kernel-dispatch` is resolved once and
+    /// threaded here).
+    pub fn pack_with(p: &ModelParams, ops: &'static KernelOps) -> Self {
         let layers = p
             .layers
             .iter()
             .map(|lp| PackedLayer {
-                wq: PackedLinear::pack(&lp.wq, &lp.bq),
-                wk: PackedLinear::pack(&lp.wk, &lp.bk),
-                wv: PackedLinear::pack(&lp.wv, &lp.bv),
-                wo: PackedLinear::pack(&lp.wo, &lp.bo),
-                w1: PackedLinear::pack(&lp.w1, &lp.b1),
-                w2: PackedLinear::pack(&lp.w2, &lp.b2),
+                wq: PackedLinear::pack_with(&lp.wq, &lp.bq, ops),
+                wk: PackedLinear::pack_with(&lp.wk, &lp.bk, ops),
+                wv: PackedLinear::pack_with(&lp.wv, &lp.bv, ops),
+                wo: PackedLinear::pack_with(&lp.wo, &lp.bo, ops),
+                w1: PackedLinear::pack_with(&lp.w1, &lp.b1, ops),
+                w2: PackedLinear::pack_with(&lp.w2, &lp.b2, ops),
             })
             .collect();
         Self {
-            w_in: PackedLinear::pack(&p.w_in, &p.b_in),
+            w_in: PackedLinear::pack_with(&p.w_in, &p.b_in, ops),
             layers,
-            w_cls: PackedLinear::pack(&p.w_cls, &p.b_cls),
+            w_cls: PackedLinear::pack_with(&p.w_cls, &p.b_cls, ops),
         }
     }
 }
@@ -351,30 +398,32 @@ impl PackedParams {
 /// of per-element `at_mut` walks. `idx` selects the attention (0) or
 /// FFN (1) parameter set — the same contract as
 /// `nn::encoder::residual` (which takes the layer's [`Norm`] via its
-/// `LayerParams`), and elementwise-identical numerics (the add is
-/// elementwise and the norm is the shared [`layer_norm_inplace`]).
-pub fn residual_fused(norm: &Norm, x: &mut Mat, sub: &Mat, idx: usize) {
+/// `LayerParams`), and elementwise-identical numerics. The add/axpy
+/// sweeps run on the resolved kernel path `ops`; the norm itself is
+/// the shared scalar [`layer_norm_inplace`] on every path (a shared op
+/// is trivially bitwise-identical across dispatch choices).
+pub fn residual_fused(ops: &KernelOps, norm: &Norm, x: &mut Mat, sub: &Mat, idx: usize) {
     debug_assert_eq!(x.rows, sub.rows);
     debug_assert_eq!(x.cols, sub.cols);
     match (norm, idx) {
         (Norm::LayerNorm { g1, be1, .. }, 0) => {
             for t in 0..x.rows {
                 let row = x.row_mut(t);
-                add_assign(row, sub.row(t));
+                (ops.add_assign)(row, sub.row(t));
                 layer_norm_inplace(row, g1, be1);
             }
         }
         (Norm::LayerNorm { g2, be2, .. }, _) => {
             for t in 0..x.rows {
                 let row = x.row_mut(t);
-                add_assign(row, sub.row(t));
+                (ops.add_assign)(row, sub.row(t));
                 layer_norm_inplace(row, g2, be2);
             }
         }
         (Norm::ReZero { a1, a2 }, _) => {
             let a = if idx == 0 { *a1 } else { *a2 };
             for t in 0..x.rows {
-                axpy(a, sub.row(t), x.row_mut(t));
+                (ops.axpy)(a, sub.row(t), x.row_mut(t));
             }
         }
     }

@@ -34,6 +34,10 @@
 //!   (`ModelParams::pack`).
 //! - [`rope`]    — RoPE: the per-call reference path and the memoized
 //!   [`rope::RopeTable`] (bitwise-transparent precomputation).
+//! - [`simd`]    — explicit AVX2/NEON versions of the hot kernels with
+//!   runtime CPU-feature dispatch resolved once at startup
+//!   ([`simd::KernelOps`]); bitwise-pinned against [`kernels`] so
+//!   dispatch choice is invisible to every cluster invariant.
 //! - [`linalg`]  — the probe trainer's Cholesky/ridge, row-sweep
 //!   (cache-friendly) solves built on the [`kernels`] primitives.
 
@@ -45,4 +49,5 @@ pub mod linalg;
 pub mod naive;
 pub mod params;
 pub mod rope;
+pub mod simd;
 pub mod tensor;

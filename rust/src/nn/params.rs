@@ -57,6 +57,17 @@ impl ModelParams {
         crate::nn::kernels::PackedParams::pack(self)
     }
 
+    /// [`Self::pack`] onto an explicit, already-resolved kernel path
+    /// (see [`crate::nn::simd::KernelOps::resolve`]) — the entry point
+    /// stepper construction uses once the `EngineConfig` /
+    /// `--kernel-dispatch` choice is resolved.
+    pub fn pack_with(
+        &self,
+        ops: &'static crate::nn::simd::KernelOps,
+    ) -> crate::nn::kernels::PackedParams {
+        crate::nn::kernels::PackedParams::pack_with(self, ops)
+    }
+
     /// Load from the variant's weight file (artifacts dir relative).
     pub fn load(artifacts_dir: &std::path::Path, entry: &VariantEntry) -> Result<Self> {
         let tensors = load_weights(&artifacts_dir.join(&entry.weights), &entry.params)?;

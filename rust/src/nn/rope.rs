@@ -63,7 +63,11 @@ pub fn apply_rope_cached(x: &mut [f32], sin: &[f32], cos: &[f32]) {
 /// Rotate every `dh`-wide head chunk of a stacked `(n_heads * dh)` row
 /// with one shared sin/cos row — all heads of a token share the same
 /// position and head width, so the row is computed once per token
-/// instead of once per head per Q/K.
+/// instead of once per head per Q/K. This is the scalar entry of the
+/// `rope_rotate_row` dispatch slot in
+/// [`KernelOps`](crate::nn::simd::KernelOps); the SIMD rotates consume
+/// the identical memoized [`RopeTable`] rows and are pinned bitwise
+/// against this function in `tests/simd_equiv.rs`.
 #[inline]
 pub fn apply_rope_row(row: &mut [f32], dh: usize, sin: &[f32], cos: &[f32]) {
     for chunk in row.chunks_exact_mut(dh) {

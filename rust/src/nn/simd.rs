@@ -1,0 +1,894 @@
+//! Explicit-SIMD implementations of the `nn::kernels` hot path with
+//! runtime CPU-feature dispatch resolved **once at startup**.
+//!
+//! PR 4's kernels are written so the autovectorizer *can* emit packed
+//! arithmetic; this module stops hoping and writes the packed
+//! arithmetic down: `target_feature`-gated AVX2 (x86_64) and NEON
+//! (aarch64) versions of every hot kernel — `dot`, `sqdist`, `axpy`,
+//! `add_assign`, the packed fused matmul+bias row sweep, the
+//! two-segment ring-attention score/weighted-sum kernels, and the RoPE
+//! rotate — std-only, no new dependencies.
+//!
+//! # Dispatch model
+//!
+//! A [`KernelOps`] is a table of plain function pointers, one static
+//! table per path ([`DispatchPath`]: scalar / AVX2 / NEON). The table
+//! is chosen **once** — [`KernelOps::resolve`] at
+//! `ModelParams::pack` / stepper construction — and held by reference
+//! (`&'static KernelOps`) in [`PackedLinear`](crate::nn::kernels::PackedLinear)
+//! and [`BatchedScalarDeepCoT`](crate::nn::batched::BatchedScalarDeepCoT),
+//! so the per-tick hot loop performs zero per-call-site feature
+//! branching. Selection order:
+//!
+//! 1. an explicit [`DispatchChoice`] (`EngineConfig::kernel_dispatch`,
+//!    `--kernel-dispatch`) wins; forcing a path the CPU/build does not
+//!    support fails loudly rather than silently falling back;
+//! 2. under [`DispatchChoice::Auto`], the `DEEPCOT_KERNEL_DISPATCH`
+//!    env var (`scalar|avx2|neon|auto`) is consulted — the knob tests
+//!    and CI use to exercise every path on any machine;
+//! 3. otherwise the best native path: AVX2 when
+//!    `is_x86_feature_detected!("avx2")`, NEON on aarch64, else the
+//!    PR 4 scalar kernels. The detection result is cached in a
+//!    `OnceLock` ([`KernelOps::native`]).
+//!
+//! The chosen path is observable end to end: `ClusterMetrics` /
+//! `METRICS` report `dispatch=<path>`, and `bench_kernels --json`
+//! records it next to the detected CPU features ([`cpu_features`]).
+//!
+//! # Bitwise determinism (the non-negotiable part)
+//!
+//! Every SIMD kernel reproduces the scalar kernels **bit for bit**
+//! (pinned per kernel in `tests/simd_equiv.rs`), so all cluster pins —
+//! 1-shard ≡ 4-shard, migration transparency, TCP-trace identity, lane
+//! snapshot roundtrips — hold with SIMD active, and a stream can even
+//! migrate between machines resolving *different* paths without its
+//! bits diverging. The recipe:
+//!
+//! * the scalar kernels' 8 split accumulators map onto 8 f32 SIMD
+//!   lanes (one AVX2 register; a NEON register pair with lanes 0..3
+//!   in the low register and 4..7 in the high one), updated with plain
+//!   packed mul-then-add — **never FMA**: a fused multiply-add rounds
+//!   once where mul+add rounds twice, which would change bits;
+//! * the vector accumulator is spilled to a `[f32; 8]` and reduced by
+//!   the *scalar* fixed pairwise tree
+//!   ([`kernels::reduce`](crate::nn::kernels::reduce)) — SIMD
+//!   horizontal-add shuffles would impose a different tree shape;
+//! * remainder elements (`len % 8`) run the exact scalar remainder
+//!   code, folding into accumulator lanes `0..len % 8`;
+//! * elementwise kernels (`axpy`, `add_assign`, RoPE) have no
+//!   reduction, so lane widths can differ freely; each lane performs
+//!   the identical mul/add/sub op sequence as its scalar twin. (The
+//!   one licensed deviation: the AVX2 RoPE odd lane computes
+//!   `o·cos + e·sin` where the scalar computes `e·sin + o·cos` — f32
+//!   addition is commutative bitwise for the finite values the engine
+//!   produces, and `tests/simd_equiv.rs` pins the equality.)
+
+use std::fmt;
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use crate::nn::kernels;
+use crate::nn::rope;
+
+/// Environment knob consulted under [`DispatchChoice::Auto`]:
+/// `DEEPCOT_KERNEL_DISPATCH=scalar|avx2|neon|auto`. An unparsable
+/// value fails resolution loudly (a typo must not silently change the
+/// measured path); an explicit non-`Auto` choice ignores the variable.
+pub const DISPATCH_ENV: &str = "DEEPCOT_KERNEL_DISPATCH";
+
+/// The kernel path a [`KernelOps`] table actually runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPath {
+    /// The PR 4 autovectorizer-friendly scalar kernels.
+    Scalar,
+    /// Explicit 256-bit AVX2 intrinsics (x86_64).
+    Avx2,
+    /// Explicit 128-bit NEON intrinsics (aarch64).
+    Neon,
+}
+
+impl DispatchPath {
+    /// Lowercase path name ("scalar" / "avx2" / "neon") for metrics,
+    /// logs, and bench JSON.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DispatchPath::Scalar => "scalar",
+            DispatchPath::Avx2 => "avx2",
+            DispatchPath::Neon => "neon",
+        }
+    }
+}
+
+impl fmt::Display for DispatchPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What the caller *asked for* (config / CLI / env), as opposed to the
+/// [`DispatchPath`] that resolution produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchChoice {
+    /// Env var if set, else the best detected native path.
+    #[default]
+    Auto,
+    /// Force the scalar kernels.
+    Scalar,
+    /// Force AVX2; resolution errors on non-x86_64 builds or CPUs
+    /// without AVX2.
+    Avx2,
+    /// Force NEON; resolution errors on non-aarch64 builds.
+    Neon,
+}
+
+impl std::str::FromStr for DispatchChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(Self::Auto),
+            "scalar" => Ok(Self::Scalar),
+            "avx2" => Ok(Self::Avx2),
+            "neon" => Ok(Self::Neon),
+            other => {
+                anyhow::bail!("unknown kernel dispatch {other:?} (want auto|scalar|avx2|neon)")
+            }
+        }
+    }
+}
+
+impl fmt::Display for DispatchChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DispatchChoice::Auto => "auto",
+            DispatchChoice::Scalar => "scalar",
+            DispatchChoice::Avx2 => "avx2",
+            DispatchChoice::Neon => "neon",
+        })
+    }
+}
+
+/// One resolved kernel path: plain function pointers for every hot
+/// kernel, resolved once and held as `&'static KernelOps` by the
+/// packed weights and the batched stepper (no per-call-site feature
+/// branching in the tick loop).
+///
+/// All entries obey the `nn::kernels` determinism policy and are
+/// bitwise-interchangeable across tables (pinned in
+/// `tests/simd_equiv.rs`); only their speed differs.
+pub struct KernelOps {
+    /// Which path this table runs (for metrics / logs / bench JSON).
+    pub path: DispatchPath,
+    /// Dot product, 8 split accumulators + fixed pairwise-tree reduce.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// Squared Euclidean distance, same accumulator discipline.
+    pub sqdist: fn(&[f32], &[f32]) -> f32,
+    /// `y += a * x`, elementwise.
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// `y += x`, elementwise.
+    pub add_assign: fn(&mut [f32], &[f32]),
+    /// Fused matmul+bias row sweep over a packed (transposed) weight:
+    /// `(x, wt, bias, out)` with `wt` laid out `out.len()` rows of
+    /// `x.len()` contiguous weights; `out[j] = dot(x, wt_row_j) +
+    /// bias[j]`. Monolithic on purpose — one indirect call per *row
+    /// sweep*, not per output dot.
+    pub linear_forward: fn(&[f32], &[f32], &[f32], &mut [f32]),
+    /// Scaled dot scores of one query head over a two-segment K view.
+    pub dot_scores_segments: fn(&[f32], &[f32], &[f32], f32, &mut [f32]),
+    /// SOFT (Gaussian-kernel) scores over a two-segment K view.
+    pub soft_scores_segments: fn(&[f32], &[f32], &[f32], f32, &mut [f32]),
+    /// `out += Σ_j weights[j] * v_j` over a two-segment V view.
+    pub weighted_sum_segments: fn(&[f32], &[f32], &[f32], &mut [f32]),
+    /// RoPE-rotate every `dh`-wide head chunk of one stacked row with
+    /// a precomputed sin/cos row: `(row, dh, sin, cos)`.
+    pub rope_rotate_row: fn(&mut [f32], usize, &[f32], &[f32]),
+}
+
+impl fmt::Debug for KernelOps {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("KernelOps").field("path", &self.path).finish_non_exhaustive()
+    }
+}
+
+impl PartialEq for KernelOps {
+    fn eq(&self, other: &Self) -> bool {
+        self.path == other.path
+    }
+}
+
+/// The PR 4 scalar kernels as a dispatch table (the fallback every
+/// build has).
+static SCALAR_OPS: KernelOps = KernelOps {
+    path: DispatchPath::Scalar,
+    dot: kernels::dot,
+    sqdist: kernels::sqdist,
+    axpy: kernels::axpy,
+    add_assign: kernels::add_assign,
+    linear_forward: linear_forward_scalar,
+    dot_scores_segments: kernels::dot_scores_segments,
+    soft_scores_segments: kernels::soft_scores_segments,
+    weighted_sum_segments: kernels::weighted_sum_segments,
+    rope_rotate_row: rope::apply_rope_row,
+};
+
+/// Scalar packed-linear row sweep: each output element one contiguous
+/// 8-wide [`kernels::dot`] plus its bias (the op sequence
+/// `PackedLinear` has always run).
+fn linear_forward_scalar(x: &[f32], wt: &[f32], bias: &[f32], out: &mut [f32]) {
+    let k = x.len().max(1);
+    debug_assert_eq!(wt.len(), x.len() * out.len());
+    debug_assert_eq!(bias.len(), out.len());
+    for ((o, wrow), b) in out.iter_mut().zip(wt.chunks_exact(k)).zip(bias) {
+        *o = kernels::dot(x, wrow) + b;
+    }
+}
+
+impl KernelOps {
+    /// The scalar table — always available, never consults the
+    /// environment.
+    pub fn scalar() -> &'static KernelOps {
+        &SCALAR_OPS
+    }
+
+    /// The best path this CPU supports, detected once and cached
+    /// (`OnceLock`). Ignores [`DISPATCH_ENV`] — this is raw hardware
+    /// capability, not policy.
+    pub fn native() -> &'static KernelOps {
+        static NATIVE: OnceLock<&'static KernelOps> = OnceLock::new();
+        *NATIVE.get_or_init(|| {
+            #[cfg(target_arch = "x86_64")]
+            if std::is_x86_feature_detected!("avx2") {
+                return &avx2::OPS;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return &neon::OPS;
+            }
+            &SCALAR_OPS
+        })
+    }
+
+    /// Resolve a dispatch choice to a table. Explicit choices win and
+    /// fail loudly when the build/CPU cannot honor them; `Auto`
+    /// consults [`DISPATCH_ENV`] (whose value may itself force a path
+    /// or fail parsing) and otherwise returns [`KernelOps::native`].
+    pub fn resolve(choice: DispatchChoice) -> Result<&'static KernelOps> {
+        let effective = match choice {
+            DispatchChoice::Auto => match std::env::var(DISPATCH_ENV) {
+                Ok(v) => v
+                    .parse::<DispatchChoice>()
+                    .map_err(|e| anyhow::anyhow!("${DISPATCH_ENV}: {e}"))?,
+                Err(_) => DispatchChoice::Auto,
+            },
+            explicit => explicit,
+        };
+        match effective {
+            DispatchChoice::Auto => Ok(Self::native()),
+            DispatchChoice::Scalar => Ok(&SCALAR_OPS),
+            DispatchChoice::Avx2 => resolve_avx2(),
+            DispatchChoice::Neon => resolve_neon(),
+        }
+    }
+
+    /// [`KernelOps::resolve`]`(Auto)` for infallible construction
+    /// paths (`ModelParams::pack`, `BatchedScalarDeepCoT::with_lanes`).
+    /// Panics with the resolution error when [`DISPATCH_ENV`] is set
+    /// to garbage or forces an unsupported path — a misconfigured
+    /// override must not silently run a different path than asked.
+    pub fn auto() -> &'static KernelOps {
+        Self::resolve(DispatchChoice::Auto).unwrap_or_else(|e| panic!("kernel dispatch: {e}"))
+    }
+}
+
+fn resolve_avx2() -> Result<&'static KernelOps> {
+    #[cfg(target_arch = "x86_64")]
+    if std::is_x86_feature_detected!("avx2") {
+        return Ok(&avx2::OPS);
+    }
+    anyhow::bail!(
+        "kernel dispatch forced to avx2, but this build/CPU does not support it (arch {})",
+        std::env::consts::ARCH
+    )
+}
+
+fn resolve_neon() -> Result<&'static KernelOps> {
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return Ok(&neon::OPS);
+    }
+    anyhow::bail!(
+        "kernel dispatch forced to neon, but this build/CPU does not support it (arch {})",
+        std::env::consts::ARCH
+    )
+}
+
+/// Human/JSON-friendly `arch/feat+feat+...` summary of the detected
+/// CPU features relevant to dispatch — recorded next to every
+/// `bench_kernels --json` row so a number is never divorced from the
+/// hardware that produced it.
+pub fn cpu_features() -> String {
+    let mut feats: Vec<&'static str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("sse2") {
+            feats.push("sse2");
+        }
+        if std::is_x86_feature_detected!("avx") {
+            feats.push("avx");
+        }
+        if std::is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if std::is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        if std::is_x86_feature_detected!("avx512f") {
+            feats.push("avx512f");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            feats.push("neon");
+        }
+    }
+    if feats.is_empty() {
+        feats.push("none-detected");
+    }
+    format!("{}/{}", std::env::consts::ARCH, feats.join("+"))
+}
+
+// ---------------------------------------------------------------------
+// AVX2 (x86_64)
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! 256-bit AVX2 kernels. The 8 scalar split accumulators ARE the 8
+    //! f32 lanes of one `__m256`; updates are `_mm256_add_ps ∘
+    //! _mm256_mul_ps` (per-lane IEEE mul then add — exactly the scalar
+    //! `acc[j] += x*y`, and deliberately not `_mm256_fmadd_ps`), the
+    //! accumulator spills to a `[f32; 8]`, remainders run the scalar
+    //! remainder code, and the reduction is the shared scalar pairwise
+    //! tree. See the module docs for why each step is bitwise-forced.
+    //!
+    //! SAFETY: every `unsafe fn` here requires AVX2; the safe wrappers
+    //! are reachable only through [`OPS`], which `KernelOps::resolve` /
+    //! `native` hand out strictly behind
+    //! `is_x86_feature_detected!("avx2")`.
+
+    use core::arch::x86_64::*;
+
+    use super::{DispatchPath, KernelOps};
+    use crate::nn::kernels::{reduce, UNROLL};
+
+    pub(super) static OPS: KernelOps = KernelOps {
+        path: DispatchPath::Avx2,
+        dot,
+        sqdist,
+        axpy,
+        add_assign,
+        linear_forward,
+        dot_scores_segments,
+        soft_scores_segments,
+        weighted_sum_segments,
+        rope_rotate_row,
+    };
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        unsafe { dot_impl(a, b) }
+    }
+
+    fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+        unsafe { sqdist_impl(a, b) }
+    }
+
+    fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe { axpy_impl(a, x, y) }
+    }
+
+    fn add_assign(y: &mut [f32], x: &[f32]) {
+        unsafe { add_assign_impl(y, x) }
+    }
+
+    fn linear_forward(x: &[f32], wt: &[f32], bias: &[f32], out: &mut [f32]) {
+        unsafe { linear_forward_impl(x, wt, bias, out) }
+    }
+
+    fn dot_scores_segments(q: &[f32], seg_a: &[f32], seg_b: &[f32], scale: f32, out: &mut [f32]) {
+        unsafe { dot_scores_impl(q, seg_a, seg_b, scale, out) }
+    }
+
+    fn soft_scores_segments(q: &[f32], seg_a: &[f32], seg_b: &[f32], scale: f32, out: &mut [f32]) {
+        unsafe { soft_scores_impl(q, seg_a, seg_b, scale, out) }
+    }
+
+    fn weighted_sum_segments(weights: &[f32], seg_a: &[f32], seg_b: &[f32], out: &mut [f32]) {
+        unsafe { weighted_sum_impl(weights, seg_a, seg_b, out) }
+    }
+
+    fn rope_rotate_row(row: &mut [f32], dh: usize, sin: &[f32], cos: &[f32]) {
+        unsafe { rope_rotate_row_impl(row, dh, sin, cos) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / UNROLL;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i * UNROLL));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i * UNROLL));
+            // mul then add — NOT fmadd (single rounding would change bits)
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; UNROLL];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for j in 0..n % UNROLL {
+            lanes[j] += a[chunks * UNROLL + j] * b[chunks * UNROLL + j];
+        }
+        reduce(lanes)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn sqdist_impl(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / UNROLL;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i * UNROLL));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i * UNROLL));
+            let d = _mm256_sub_ps(va, vb);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+        }
+        let mut lanes = [0.0f32; UNROLL];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for j in 0..n % UNROLL {
+            let d = a[chunks * UNROLL + j] - b[chunks * UNROLL + j];
+            lanes[j] += d * d;
+        }
+        reduce(lanes)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_impl(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / UNROLL;
+        let va = _mm256_set1_ps(a);
+        for i in 0..chunks {
+            let p = y.as_mut_ptr().add(i * UNROLL);
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i * UNROLL));
+            let vy = _mm256_loadu_ps(p);
+            _mm256_storeu_ps(p, _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+        }
+        for j in chunks * UNROLL..n {
+            y[j] += a * x[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_assign_impl(y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / UNROLL;
+        for i in 0..chunks {
+            let p = y.as_mut_ptr().add(i * UNROLL);
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i * UNROLL));
+            let vy = _mm256_loadu_ps(p);
+            _mm256_storeu_ps(p, _mm256_add_ps(vy, vx));
+        }
+        for j in chunks * UNROLL..n {
+            y[j] += x[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn linear_forward_impl(x: &[f32], wt: &[f32], bias: &[f32], out: &mut [f32]) {
+        let k = x.len().max(1);
+        debug_assert_eq!(wt.len(), x.len() * out.len());
+        debug_assert_eq!(bias.len(), out.len());
+        for ((o, wrow), b) in out.iter_mut().zip(wt.chunks_exact(k)).zip(bias) {
+            *o = dot_impl(x, wrow) + b;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_scores_impl(
+        q: &[f32],
+        seg_a: &[f32],
+        seg_b: &[f32],
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        let dh = q.len().max(1);
+        debug_assert_eq!(out.len() * dh, seg_a.len() + seg_b.len());
+        let mut idx = 0;
+        for seg in [seg_a, seg_b] {
+            for krow in seg.chunks_exact(dh) {
+                out[idx] = dot_impl(q, krow) * scale;
+                idx += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn soft_scores_impl(
+        q: &[f32],
+        seg_a: &[f32],
+        seg_b: &[f32],
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        let dh = q.len().max(1);
+        debug_assert_eq!(out.len() * dh, seg_a.len() + seg_b.len());
+        let mut idx = 0;
+        for seg in [seg_a, seg_b] {
+            for krow in seg.chunks_exact(dh) {
+                out[idx] = (-sqdist_impl(q, krow) * 0.5 * scale).exp();
+                idx += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn weighted_sum_impl(weights: &[f32], seg_a: &[f32], seg_b: &[f32], out: &mut [f32]) {
+        let dh = out.len().max(1);
+        debug_assert_eq!(weights.len() * dh, seg_a.len() + seg_b.len());
+        let mut idx = 0;
+        for seg in [seg_a, seg_b] {
+            for vrow in seg.chunks_exact(dh) {
+                axpy_impl(weights[idx], vrow, out);
+                idx += 1;
+            }
+        }
+    }
+
+    /// Four interleaved (even, odd) pairs per 256-bit op. `sin`/`cos`
+    /// hold one value per pair, so each 128-bit load of 4 values is
+    /// expanded to `[c0,c0,c1,c1,c2,c2,c3,c3]` via a cross-lane
+    /// permute. `_mm256_addsub_ps(t1, t2)` then yields
+    /// `e·cos − o·sin` on even lanes (the exact scalar op order) and
+    /// `o·cos + e·sin` on odd lanes (addition commuted vs the scalar
+    /// `e·sin + o·cos` — bitwise-identical for finite f32).
+    #[target_feature(enable = "avx2")]
+    unsafe fn rope_rotate_row_impl(row: &mut [f32], dh: usize, sin: &[f32], cos: &[f32]) {
+        let half = dh / 2;
+        debug_assert_eq!(half * 2, dh);
+        debug_assert!(sin.len() >= half && cos.len() >= half);
+        let expand = _mm256_setr_epi32(0, 0, 1, 1, 2, 2, 3, 3);
+        for chunk in row.chunks_exact_mut(dh) {
+            let vec_pairs = half / 4;
+            for i in 0..vec_pairs {
+                let p = chunk.as_mut_ptr().add(i * 8);
+                // x = [e0,o0,e1,o1,e2,o2,e3,o3]
+                let x = _mm256_loadu_ps(p);
+                let c4 = _mm_loadu_ps(cos.as_ptr().add(i * 4));
+                let s4 = _mm_loadu_ps(sin.as_ptr().add(i * 4));
+                let c = _mm256_permutevar8x32_ps(_mm256_set_m128(c4, c4), expand);
+                let s = _mm256_permutevar8x32_ps(_mm256_set_m128(s4, s4), expand);
+                // swapped = [o0,e0,o1,e1,...] (within-lane pair swap)
+                let swapped = _mm256_permute_ps::<0b1011_0001>(x);
+                let t1 = _mm256_mul_ps(x, c); // [e·c, o·c, ...]
+                let t2 = _mm256_mul_ps(swapped, s); // [o·s, e·s, ...]
+                _mm256_storeu_ps(p, _mm256_addsub_ps(t1, t2));
+            }
+            // remainder pairs (half % 4): the exact scalar op sequence
+            for i in vec_pairs * 4..half {
+                let e = chunk[2 * i];
+                let o = chunk[2 * i + 1];
+                chunk[2 * i] = e * cos[i] - o * sin[i];
+                chunk[2 * i + 1] = e * sin[i] + o * cos[i];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (aarch64)
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! 128-bit NEON kernels. The 8 scalar split accumulators map onto
+    //! a register pair — lanes 0..3 in `acc_lo`, lanes 4..7 in
+    //! `acc_hi` — updated with `vaddq_f32 ∘ vmulq_f32` (never
+    //! `vfmaq_f32`: fused rounding would change bits), spilled to a
+    //! `[f32; 8]` and reduced by the shared scalar pairwise tree.
+    //!
+    //! SAFETY: the safe wrappers are reachable only through [`OPS`],
+    //! which `KernelOps::resolve` / `native` hand out strictly behind
+    //! `is_aarch64_feature_detected!("neon")`.
+
+    use core::arch::aarch64::*;
+
+    use super::{DispatchPath, KernelOps};
+    use crate::nn::kernels::{reduce, UNROLL};
+
+    pub(super) static OPS: KernelOps = KernelOps {
+        path: DispatchPath::Neon,
+        dot,
+        sqdist,
+        axpy,
+        add_assign,
+        linear_forward,
+        dot_scores_segments,
+        soft_scores_segments,
+        weighted_sum_segments,
+        rope_rotate_row,
+    };
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        unsafe { dot_impl(a, b) }
+    }
+
+    fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+        unsafe { sqdist_impl(a, b) }
+    }
+
+    fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe { axpy_impl(a, x, y) }
+    }
+
+    fn add_assign(y: &mut [f32], x: &[f32]) {
+        unsafe { add_assign_impl(y, x) }
+    }
+
+    fn linear_forward(x: &[f32], wt: &[f32], bias: &[f32], out: &mut [f32]) {
+        unsafe { linear_forward_impl(x, wt, bias, out) }
+    }
+
+    fn dot_scores_segments(q: &[f32], seg_a: &[f32], seg_b: &[f32], scale: f32, out: &mut [f32]) {
+        unsafe { dot_scores_impl(q, seg_a, seg_b, scale, out) }
+    }
+
+    fn soft_scores_segments(q: &[f32], seg_a: &[f32], seg_b: &[f32], scale: f32, out: &mut [f32]) {
+        unsafe { soft_scores_impl(q, seg_a, seg_b, scale, out) }
+    }
+
+    fn weighted_sum_segments(weights: &[f32], seg_a: &[f32], seg_b: &[f32], out: &mut [f32]) {
+        unsafe { weighted_sum_impl(weights, seg_a, seg_b, out) }
+    }
+
+    fn rope_rotate_row(row: &mut [f32], dh: usize, sin: &[f32], cos: &[f32]) {
+        unsafe { rope_rotate_row_impl(row, dh, sin, cos) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / UNROLL;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for i in 0..chunks {
+            let pa = a.as_ptr().add(i * UNROLL);
+            let pb = b.as_ptr().add(i * UNROLL);
+            // mul then add — NOT vfmaq (single rounding would change bits)
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+        }
+        let mut lanes = [0.0f32; UNROLL];
+        vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+        for j in 0..n % UNROLL {
+            lanes[j] += a[chunks * UNROLL + j] * b[chunks * UNROLL + j];
+        }
+        reduce(lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn sqdist_impl(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / UNROLL;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for i in 0..chunks {
+            let pa = a.as_ptr().add(i * UNROLL);
+            let pb = b.as_ptr().add(i * UNROLL);
+            let d_lo = vsubq_f32(vld1q_f32(pa), vld1q_f32(pb));
+            let d_hi = vsubq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4)));
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(d_lo, d_lo));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(d_hi, d_hi));
+        }
+        let mut lanes = [0.0f32; UNROLL];
+        vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+        for j in 0..n % UNROLL {
+            let d = a[chunks * UNROLL + j] - b[chunks * UNROLL + j];
+            lanes[j] += d * d;
+        }
+        reduce(lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_impl(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4;
+        let va = vdupq_n_f32(a);
+        for i in 0..chunks {
+            let p = y.as_mut_ptr().add(i * 4);
+            let vx = vld1q_f32(x.as_ptr().add(i * 4));
+            vst1q_f32(p, vaddq_f32(vld1q_f32(p), vmulq_f32(va, vx)));
+        }
+        for j in chunks * 4..n {
+            y[j] += a * x[j];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn add_assign_impl(y: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4;
+        for i in 0..chunks {
+            let p = y.as_mut_ptr().add(i * 4);
+            vst1q_f32(p, vaddq_f32(vld1q_f32(p), vld1q_f32(x.as_ptr().add(i * 4))));
+        }
+        for j in chunks * 4..n {
+            y[j] += x[j];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn linear_forward_impl(x: &[f32], wt: &[f32], bias: &[f32], out: &mut [f32]) {
+        let k = x.len().max(1);
+        debug_assert_eq!(wt.len(), x.len() * out.len());
+        debug_assert_eq!(bias.len(), out.len());
+        for ((o, wrow), b) in out.iter_mut().zip(wt.chunks_exact(k)).zip(bias) {
+            *o = dot_impl(x, wrow) + b;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_scores_impl(
+        q: &[f32],
+        seg_a: &[f32],
+        seg_b: &[f32],
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        let dh = q.len().max(1);
+        debug_assert_eq!(out.len() * dh, seg_a.len() + seg_b.len());
+        let mut idx = 0;
+        for seg in [seg_a, seg_b] {
+            for krow in seg.chunks_exact(dh) {
+                out[idx] = dot_impl(q, krow) * scale;
+                idx += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn soft_scores_impl(
+        q: &[f32],
+        seg_a: &[f32],
+        seg_b: &[f32],
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        let dh = q.len().max(1);
+        debug_assert_eq!(out.len() * dh, seg_a.len() + seg_b.len());
+        let mut idx = 0;
+        for seg in [seg_a, seg_b] {
+            for krow in seg.chunks_exact(dh) {
+                out[idx] = (-sqdist_impl(q, krow) * 0.5 * scale).exp();
+                idx += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn weighted_sum_impl(weights: &[f32], seg_a: &[f32], seg_b: &[f32], out: &mut [f32]) {
+        let dh = out.len().max(1);
+        debug_assert_eq!(weights.len() * dh, seg_a.len() + seg_b.len());
+        let mut idx = 0;
+        for seg in [seg_a, seg_b] {
+            for vrow in seg.chunks_exact(dh) {
+                axpy_impl(weights[idx], vrow, out);
+                idx += 1;
+            }
+        }
+    }
+
+    /// Four (even, odd) pairs per op via `vld2q_f32` deinterleaving;
+    /// both output lanes run the exact scalar operand order
+    /// (`e·cos − o·sin`, `e·sin + o·cos`), re-interleaved with
+    /// `vst2q_f32`. Remainder pairs run the scalar code.
+    #[target_feature(enable = "neon")]
+    unsafe fn rope_rotate_row_impl(row: &mut [f32], dh: usize, sin: &[f32], cos: &[f32]) {
+        let half = dh / 2;
+        debug_assert_eq!(half * 2, dh);
+        debug_assert!(sin.len() >= half && cos.len() >= half);
+        for chunk in row.chunks_exact_mut(dh) {
+            let vec_pairs = half / 4;
+            for i in 0..vec_pairs {
+                let p = chunk.as_mut_ptr().add(i * 8);
+                let eo = vld2q_f32(p); // .0 = evens, .1 = odds
+                let c = vld1q_f32(cos.as_ptr().add(i * 4));
+                let s = vld1q_f32(sin.as_ptr().add(i * 4));
+                let e2 = vsubq_f32(vmulq_f32(eo.0, c), vmulq_f32(eo.1, s));
+                let o2 = vaddq_f32(vmulq_f32(eo.0, s), vmulq_f32(eo.1, c));
+                vst2q_f32(p, float32x4x2_t(e2, o2));
+            }
+            for i in vec_pairs * 4..half {
+                let e = chunk[2 * i];
+                let o = chunk[2 * i + 1];
+                chunk[2 * i] = e * cos[i] - o * sin[i];
+                chunk[2 * i + 1] = e * sin[i] + o * cos[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses() {
+        assert_eq!("auto".parse::<DispatchChoice>().unwrap(), DispatchChoice::Auto);
+        assert_eq!("scalar".parse::<DispatchChoice>().unwrap(), DispatchChoice::Scalar);
+        assert_eq!("AVX2".parse::<DispatchChoice>().unwrap(), DispatchChoice::Avx2);
+        assert_eq!(" neon ".parse::<DispatchChoice>().unwrap(), DispatchChoice::Neon);
+        assert!("sse9".parse::<DispatchChoice>().is_err());
+        assert_eq!(DispatchChoice::default(), DispatchChoice::Auto);
+        assert_eq!(DispatchChoice::Avx2.to_string(), "avx2");
+    }
+
+    #[test]
+    fn scalar_table_runs_the_scalar_kernels() {
+        let ops = KernelOps::scalar();
+        assert_eq!(ops.path, DispatchPath::Scalar);
+        assert_eq!((ops.dot)(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        let mut y = vec![1.0f32; 5];
+        (ops.axpy)(2.0, &[1.0, 1.0, 1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0; 5]);
+    }
+
+    #[test]
+    fn native_is_cached_and_resolvable() {
+        let a = KernelOps::native();
+        let b = KernelOps::native();
+        assert!(std::ptr::eq(a, b), "native detection must be cached");
+        // whatever native is, resolving its own path explicitly succeeds
+        let explicit = match a.path {
+            DispatchPath::Scalar => DispatchChoice::Scalar,
+            DispatchPath::Avx2 => DispatchChoice::Avx2,
+            DispatchPath::Neon => DispatchChoice::Neon,
+        };
+        assert_eq!(KernelOps::resolve(explicit).unwrap().path, a.path);
+    }
+
+    #[test]
+    fn explicit_scalar_always_resolves() {
+        let ops = KernelOps::resolve(DispatchChoice::Scalar).unwrap();
+        assert_eq!(ops.path, DispatchPath::Scalar);
+    }
+
+    #[test]
+    fn foreign_arch_force_fails_loudly() {
+        // at most one of these can be the host arch; the other(s) must
+        // error instead of silently falling back to scalar
+        #[cfg(not(target_arch = "x86_64"))]
+        assert!(KernelOps::resolve(DispatchChoice::Avx2).is_err());
+        #[cfg(not(target_arch = "aarch64"))]
+        assert!(KernelOps::resolve(DispatchChoice::Neon).is_err());
+    }
+
+    #[test]
+    fn cpu_features_names_the_arch() {
+        let f = cpu_features();
+        assert!(f.starts_with(std::env::consts::ARCH), "{f}");
+        assert!(f.contains('/'), "{f}");
+    }
+
+    #[test]
+    fn debug_prints_path_only() {
+        let s = format!("{:?}", KernelOps::scalar());
+        assert!(s.contains("Scalar"), "{s}");
+    }
+}

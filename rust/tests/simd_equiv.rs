@@ -1,0 +1,362 @@
+//! SIMD ≡ scalar, bitwise: every kernel in the `nn::simd` dispatch
+//! tables pinned against its scalar twin **bit for bit**, per kernel
+//! and end to end, across the same odd-geometry matrix
+//! `tests/kernels_equiv.rs` sweeps (remainder lanes via `d_head` ∉ 8ℤ,
+//! mid-wrap two-segment rings via every split, lane counts 1/3/5).
+//!
+//! This is the contract that lets dispatch be chosen per machine while
+//! every bitwise cluster pin (1-shard ≡ 4-shard, migration
+//! transparency, TCP-trace identity, lane snapshot roundtrips) keeps
+//! holding: scalar vs SIMD is *not* a tolerance relationship — the
+//! SIMD kernels reproduce the exact fixed-summation-order op sequence
+//! (see the determinism policy in `nn::kernels` and `nn::simd`), so
+//! equality here is `to_bits()` throughout.
+//!
+//! Every test iterates [`simd_paths`] — the non-scalar tables this
+//! build/CPU can actually run (AVX2 on x86_64 with the feature, NEON
+//! on aarch64). On a machine with no SIMD path the sweeps are vacuous
+//! and [`native_path_is_covered`] documents that that is because
+//! native dispatch is scalar there, not because coverage silently
+//! narrowed.
+
+use deepcot::manifest::ModelConfig;
+use deepcot::nn::batched::BatchedScalarDeepCoT;
+use deepcot::nn::kernels::{residual_fused, PackedLinear};
+use deepcot::nn::params::{ModelParams, Norm};
+use deepcot::nn::rope::RopeTable;
+use deepcot::nn::simd::{DispatchChoice, DispatchPath, KernelOps};
+use deepcot::nn::tensor::Mat;
+use deepcot::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every non-scalar dispatch table this build/CPU can run. Explicit
+/// resolution ignores `DEEPCOT_KERNEL_DISPATCH`, so these tests
+/// exercise the SIMD kernels even under a scalar-forced test
+/// environment (the CI scalar leg).
+fn simd_paths() -> Vec<&'static KernelOps> {
+    [DispatchChoice::Avx2, DispatchChoice::Neon]
+        .into_iter()
+        .filter_map(|c| KernelOps::resolve(c).ok())
+        .collect()
+}
+
+/// If native dispatch resolves to a SIMD path, that path must be in
+/// the set the sweeps below cover — the guard that keeps the vacuous
+/// no-SIMD-machine case honest.
+#[test]
+fn native_path_is_covered() {
+    let native = KernelOps::native();
+    if native.path != DispatchPath::Scalar {
+        assert!(
+            simd_paths().iter().any(|o| o.path == native.path),
+            "native path {} missing from the swept set",
+            native.path
+        );
+    }
+}
+
+/// Reductions: `dot` / `sqdist` bit-identical through several unroll
+/// multiples and every remainder length (the 8 SIMD lanes must BE the
+/// 8 scalar split accumulators, reduced by the same pairwise tree).
+#[test]
+fn dot_and_sqdist_are_bitwise_across_paths() {
+    let scalar = KernelOps::scalar();
+    for ops in simd_paths() {
+        let mut rng = Rng::new(201);
+        for len in (0..=40).chain([64, 100]) {
+            let a = rng.normal_vec(len, 1.0);
+            let b = rng.normal_vec(len, 1.0);
+            assert_eq!(
+                (ops.dot)(&a, &b).to_bits(),
+                (scalar.dot)(&a, &b).to_bits(),
+                "{} dot len {len}",
+                ops.path
+            );
+            assert_eq!(
+                (ops.sqdist)(&a, &b).to_bits(),
+                (scalar.sqdist)(&a, &b).to_bits(),
+                "{} sqdist len {len}",
+                ops.path
+            );
+        }
+    }
+}
+
+/// Elementwise kernels: `axpy` / `add_assign` have no reduction, but
+/// the per-lane op sequence must still be mul-then-add (no FMA) for
+/// the bits to match.
+#[test]
+fn elementwise_kernels_are_bitwise_across_paths() {
+    let scalar = KernelOps::scalar();
+    for ops in simd_paths() {
+        let mut rng = Rng::new(202);
+        for len in 0..=40 {
+            let x = rng.normal_vec(len, 1.0);
+            let y0 = rng.normal_vec(len, 1.0);
+            let mut want = y0.clone();
+            (scalar.axpy)(0.37, &x, &mut want);
+            let mut got = y0.clone();
+            (ops.axpy)(0.37, &x, &mut got);
+            assert_eq!(bits(&got), bits(&want), "{} axpy len {len}", ops.path);
+            let mut want = y0.clone();
+            (scalar.add_assign)(&mut want, &x);
+            let mut got = y0;
+            (ops.add_assign)(&mut got, &x);
+            assert_eq!(bits(&got), bits(&want), "{} add_assign len {len}", ops.path);
+        }
+    }
+}
+
+/// Packed fused matmul+bias: same weights packed onto each path, all
+/// three forward entries bit-identical across shapes that exercise
+/// full-chunk and remainder dot paths (incl. the `(6, 10)` remainder
+/// pair and a `k > 32` shape).
+#[test]
+fn packed_linear_is_bitwise_across_paths() {
+    for ops in simd_paths() {
+        let mut rng = Rng::new(203);
+        for (k, c) in [(1usize, 1usize), (5, 3), (6, 10), (8, 8), (10, 4), (33, 7), (64, 10)] {
+            let w = Mat::from_vec(k, c, rng.normal_vec(k * c, 1.0));
+            let bias = rng.normal_vec(c, 0.5);
+            let x = Mat::from_vec(3, k, rng.normal_vec(3 * k, 1.0));
+            let scalar = PackedLinear::pack_with(&w, &bias, KernelOps::scalar());
+            let simd = PackedLinear::pack_with(&w, &bias, ops);
+            let mut want = Mat::zeros(3, c);
+            scalar.forward_into(&x, &mut want);
+            let mut got = Mat::zeros(3, c);
+            simd.forward_into(&x, &mut got);
+            assert_eq!(bits(&got.data), bits(&want.data), "{} linear {k}x{c}", ops.path);
+            let mut want_g = Mat::zeros(3, c);
+            scalar.forward_gelu_into(&x, &mut want_g);
+            let mut got_g = Mat::zeros(3, c);
+            simd.forward_gelu_into(&x, &mut got_g);
+            assert_eq!(bits(&got_g.data), bits(&want_g.data), "{} gelu {k}x{c}", ops.path);
+            let mut want_r = vec![0.0f32; c];
+            scalar.forward_row_into(x.row(1), &mut want_r);
+            let mut got_r = vec![0.0f32; c];
+            simd.forward_row_into(x.row(1), &mut got_r);
+            assert_eq!(bits(&got_r), bits(&want_r), "{} row {k}x{c}", ops.path);
+        }
+    }
+}
+
+/// Two-segment ring attention: scores and weighted sums bit-identical
+/// at **every** possible segment split (empty-tail, empty-head, and
+/// every mid-wrap split) for remainder-heavy and exact-multiple
+/// `d_head` widths.
+#[test]
+fn segment_kernels_are_bitwise_across_paths_at_every_split() {
+    let scalar = KernelOps::scalar();
+    let rows = 7usize;
+    for ops in simd_paths() {
+        let mut rng = Rng::new(204);
+        for dh in [6usize, 10, 16] {
+            let flat = rng.normal_vec(rows * dh, 1.0);
+            let q = rng.normal_vec(dh, 1.0);
+            for split in 0..=rows {
+                let (a, b) = flat.split_at(split * dh);
+                let mut want = vec![0.0f32; rows];
+                (scalar.dot_scores_segments)(&q, a, b, 0.25, &mut want);
+                let mut got = vec![0.0f32; rows];
+                (ops.dot_scores_segments)(&q, a, b, 0.25, &mut got);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "{} dot scores dh={dh} split={split}",
+                    ops.path
+                );
+                let mut want_soft = vec![0.0f32; rows];
+                (scalar.soft_scores_segments)(&q, a, b, 0.25, &mut want_soft);
+                let mut got_soft = vec![0.0f32; rows];
+                (ops.soft_scores_segments)(&q, a, b, 0.25, &mut got_soft);
+                assert_eq!(
+                    bits(&got_soft),
+                    bits(&want_soft),
+                    "{} soft scores dh={dh} split={split}",
+                    ops.path
+                );
+                let mut want_sum = vec![0.0f32; dh];
+                (scalar.weighted_sum_segments)(&want, a, b, &mut want_sum);
+                let mut got_sum = vec![0.0f32; dh];
+                (ops.weighted_sum_segments)(&want, a, b, &mut got_sum);
+                assert_eq!(
+                    bits(&got_sum),
+                    bits(&want_sum),
+                    "{} weighted sum dh={dh} split={split}",
+                    ops.path
+                );
+            }
+        }
+    }
+}
+
+/// RoPE rotation: multi-head rows rotated with memoized table rows,
+/// bit-identical across vectorized-pair and remainder-pair widths
+/// (`half % 4` ∈ {0, 1, 3}) and several positions. This is the pin
+/// that licenses the AVX2 odd-lane operand commutation.
+#[test]
+fn rope_rotate_is_bitwise_across_paths() {
+    let scalar = KernelOps::scalar();
+    for ops in simd_paths() {
+        let mut rng = Rng::new(205);
+        for dh in [2usize, 4, 6, 10, 16, 24] {
+            let mut table = RopeTable::new(dh, 1);
+            for pos in [0i32, 1, 7, 100] {
+                let (sin, cos) = table.row(0, pos);
+                let (sin, cos) = (sin.to_vec(), cos.to_vec());
+                let row0 = rng.normal_vec(3 * dh, 1.0);
+                let mut want = row0.clone();
+                (scalar.rope_rotate_row)(&mut want, dh, &sin, &cos);
+                let mut got = row0;
+                (ops.rope_rotate_row)(&mut got, dh, &sin, &cos);
+                assert_eq!(bits(&got), bits(&want), "{} rope dh={dh} pos={pos}", ops.path);
+            }
+        }
+    }
+}
+
+/// Fused residual epilogue on both norm modes and both parameter sets
+/// (attention / FFN).
+#[test]
+fn residual_fused_is_bitwise_across_paths() {
+    let scalar = KernelOps::scalar();
+    for ops in simd_paths() {
+        let mut rng = Rng::new(206);
+        let (rows, d) = (3usize, 10usize);
+        let gain = |rng: &mut Rng| -> Vec<f32> {
+            rng.normal_vec(d, 0.2).iter().map(|v| 1.0 + v).collect()
+        };
+        let norms = [
+            (
+                "layernorm",
+                Norm::LayerNorm {
+                    g1: gain(&mut rng),
+                    be1: rng.normal_vec(d, 0.1),
+                    g2: gain(&mut rng),
+                    be2: rng.normal_vec(d, 0.1),
+                },
+            ),
+            ("rezero", Norm::ReZero { a1: 0.7, a2: 0.3 }),
+        ];
+        for (name, norm) in &norms {
+            for idx in [0usize, 1] {
+                let x0 = Mat::from_vec(rows, d, rng.normal_vec(rows * d, 1.0));
+                let sub = Mat::from_vec(rows, d, rng.normal_vec(rows * d, 1.0));
+                let mut want = x0.clone();
+                residual_fused(scalar, norm, &mut want, &sub, idx);
+                let mut got = x0;
+                residual_fused(ops, norm, &mut got, &sub, idx);
+                assert_eq!(
+                    bits(&got.data),
+                    bits(&want.data),
+                    "{} residual {name} idx={idx}",
+                    ops.path
+                );
+            }
+        }
+    }
+}
+
+/// The engine-level pin: a forced-SIMD batched stepper vs a
+/// forced-scalar one over the `tests/kernels_equiv.rs` odd-geometry
+/// matrix — remainder `d_head`s, multi-token ticks, both attention
+/// modes, both norms, lane counts 1/3/5, and enough ticks that every
+/// ring wraps several times. Logits and activations bit-identical at
+/// every tick.
+#[test]
+fn forced_simd_engine_matches_forced_scalar_bitwise() {
+    let cases: [(usize, usize, usize, usize, usize, &str, &str); 3] = [
+        (12, 2, 2, 7, 1, "softmax", "layernorm"),
+        (20, 2, 3, 9, 2, "soft", "rezero"),
+        (16, 2, 2, 8, 3, "softmax", "rezero"),
+    ];
+    for ops in simd_paths() {
+        for &(d, h, l, window, m, activation, norm) in &cases {
+            let mut cfg = ModelConfig::synthetic(d, h, l, window);
+            cfg.m_tokens = m;
+            cfg.activation = activation.to_string();
+            cfg.norm = norm.to_string();
+            let params = ModelParams::synthetic(&cfg, &mut Rng::new(7 + d as u64));
+            for lanes in [1usize, 3, 5] {
+                let mut scalar = BatchedScalarDeepCoT::with_lanes_ops(
+                    cfg.clone(),
+                    params.clone(),
+                    lanes,
+                    KernelOps::scalar(),
+                );
+                let mut simd =
+                    BatchedScalarDeepCoT::with_lanes_ops(cfg.clone(), params.clone(), lanes, ops);
+                assert_eq!(simd.dispatch(), ops.path);
+                assert_eq!(scalar.dispatch(), DispatchPath::Scalar);
+                let mut rng = Rng::new(900 + d as u64);
+                for tick in 0..25 {
+                    let toks = rng.normal_vec(lanes * m * cfg.d_in, 1.0);
+                    let stacked = Mat::from_vec(lanes * m, cfg.d_in, toks);
+                    let (want_logits, want_out) = {
+                        let s = scalar.tick_all(&stacked).unwrap();
+                        (bits(&s.logits.data), bits(&s.out.data))
+                    };
+                    let (got_logits, got_out) = {
+                        let s = simd.tick_all(&stacked).unwrap();
+                        (bits(&s.logits.data), bits(&s.out.data))
+                    };
+                    let label = format!(
+                        "{} {d}/{h}/{l} n={window} m={m} {activation}/{norm} lanes={lanes} \
+                         tick={tick}",
+                        ops.path
+                    );
+                    assert_eq!(got_logits, want_logits, "{label} logits");
+                    assert_eq!(got_out, want_out, "{label} out");
+                }
+            }
+        }
+    }
+}
+
+/// Migration across dispatch paths: a lane exported from a
+/// forced-scalar instance and imported into a forced-SIMD one (the
+/// cross-machine migration case where source and target resolved
+/// different paths) continues bit-for-bit.
+#[test]
+fn snapshots_roundtrip_bitwise_across_dispatch_paths() {
+    for ops in simd_paths() {
+        let mut cfg = ModelConfig::synthetic(16, 2, 2, 6);
+        cfg.m_tokens = 2;
+        let params = ModelParams::synthetic(&cfg, &mut Rng::new(11));
+        let tok_elems = cfg.m_tokens * cfg.d_in;
+        let mut scalar = BatchedScalarDeepCoT::with_lanes_ops(
+            cfg.clone(),
+            params.clone(),
+            1,
+            KernelOps::scalar(),
+        );
+        let mut rng = Rng::new(501);
+        // 13 ticks of 2 tokens into a 6-slot ring: exported mid-wrap
+        for _ in 0..13 {
+            let toks = Mat::from_vec(cfg.m_tokens, cfg.d_in, rng.normal_vec(tok_elems, 1.0));
+            scalar.tick_all(&toks).unwrap();
+        }
+        let (mut data, mut heads) = (Vec::new(), Vec::new());
+        scalar.export_lane(0, &mut data, &mut heads);
+        let mut simd = BatchedScalarDeepCoT::with_lanes_ops(cfg.clone(), params.clone(), 1, ops);
+        simd.import_lane(0, &data, &heads).unwrap();
+        let mut pos = scalar.lane_pos(0);
+        for tick in 0..12 {
+            let toks = Mat::from_vec(cfg.m_tokens, cfg.d_in, rng.normal_vec(tok_elems, 1.0));
+            let (want_logits, want_out) = {
+                let s = scalar.tick_all(&toks).unwrap();
+                (bits(&s.logits.data), bits(&s.out.data))
+            };
+            let (got_logits, got_out) = {
+                let s = simd.tick_lanes(&toks, &[true], &[pos]).unwrap();
+                (bits(&s.logits.data), bits(&s.out.data))
+            };
+            assert_eq!(got_logits, want_logits, "{} migrated logits tick {tick}", ops.path);
+            assert_eq!(got_out, want_out, "{} migrated out tick {tick}", ops.path);
+            pos += cfg.m_tokens as i32;
+        }
+    }
+}

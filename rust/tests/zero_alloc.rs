@@ -17,6 +17,7 @@ use deepcot::net::proto::{self, RawFrame};
 use deepcot::nn::batched::BatchedScalarDeepCoT;
 use deepcot::nn::encoder::ScalarDeepCoT;
 use deepcot::nn::params::ModelParams;
+use deepcot::nn::simd::KernelOps;
 use deepcot::nn::tensor::Mat;
 use deepcot::util::rng::Rng;
 
@@ -156,6 +157,34 @@ fn steady_state_ticks_allocate_nothing() {
         after - before,
         0,
         "odd-geometry packed-kernel tick allocated {} times across 5 steady-state ticks",
+        after - before
+    );
+    assert!(sink.is_finite());
+
+    // explicit-SIMD dispatch steady state: the same odd geometry
+    // forced onto the best native path (`KernelOps::native` — AVX2 /
+    // NEON where available, the scalar table otherwise, so this
+    // section never goes vacuous). The SIMD kernels spill their
+    // accumulators to stack arrays and write through the caller's
+    // slices — dispatch must not cost a single heap allocation per
+    // tick any more than the scalar path does.
+    let odd_params = ModelParams::synthetic(&odd_cfg, &mut Rng::new(29));
+    let mut simd =
+        BatchedScalarDeepCoT::with_lanes_ops(odd_cfg.clone(), odd_params, 3, KernelOps::native());
+    for _ in 0..4 {
+        simd.tick_all(&odd_toks).unwrap();
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        let step = simd.tick_all(&odd_toks).unwrap();
+        sink += step.logits.at(0, 0) + step.out.at(0, 0);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "native-SIMD ({}) tick allocated {} times across 5 steady-state ticks",
+        simd.dispatch(),
         after - before
     );
     assert!(sink.is_finite());
