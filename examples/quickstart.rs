@@ -51,6 +51,50 @@
 //! the `dispatch=<path>` token of `report()` / the TCP `METRICS`
 //! reply, and in `bench_kernels --json` next to the detected CPU
 //! features.
+//!
+//! # Observability
+//!
+//! The serving stack instruments itself through `deepcot::obs`. One
+//! knob picks how much gets recorded — `off | counters | spans |
+//! journal` (cumulative; default `journal`) — settable three ways:
+//! `EngineConfig::builder().obs(ObsLevel::Spans)` in code, `--obs
+//! spans` on `deepcot_serve` and the benches, or `DEEPCOT_OBS=spans`
+//! in the environment. The pre-existing counters and tick/queue
+//! histograms are always on; `off` reduces every newer site to a
+//! branch, and no level ever changes stream bits or allocates on the
+//! steady-state tick path (pinned in `tests/zero_alloc.rs`).
+//!
+//! What each layer adds:
+//!
+//! * `counters` — uptime, wall-clock boot timestamp, monotonic
+//!   snapshot sequence numbers, and windowed rates (ticks/s, tokens/s,
+//!   rejects/s) over a trailing 10s window.
+//! * `spans` — per-stage pipeline latency (`deepcot::obs::span`):
+//!   `ingress`, `queue`, `batch_form`, `backend_step`, `deliver`,
+//!   `pipeline_total` (the four engine segments partition it), plus
+//!   `net_decode` / `net_encode` and the migration legs. Exposed as
+//!   the `deepcot_stage_latency_us{stage="..."}` summary family and
+//!   in `bench_throughput --json` under `results[].stages`.
+//! * `journal` — a bounded, rate-gated ring of typed events
+//!   (`deepcot::obs::journal`): stream lifecycle, migrations,
+//!   admission rejects, protocol errors, slow ticks (`--slow-tick-us`
+//!   threshold), kernel-dispatch resolution.
+//!
+//! `deepcot_serve --metrics-listen 127.0.0.1:9100` binds the HTTP
+//! endpoint (`deepcot::obs::server`):
+//!
+//!     curl localhost:9100/metrics        # Prometheus text format
+//!     curl localhost:9100/metrics.json   # the same snapshot as JSON
+//!     curl localhost:9100/journal        # drain the event journal
+//!
+//! The same Prometheus document answers the `METRICS_PROM` wire frame
+//! (`NetClient::metrics_prometheus`), and `deepcot_serve` dumps any
+//! undrained journal events as one-line JSON on shutdown. Headline
+//! series: `deepcot_ticks_total`, `deepcot_tick_latency_us`,
+//! `deepcot_stage_latency_us{stage=...}`, per-shard
+//! `deepcot_shard_*_total` breakdowns (each sums to its aggregate —
+//! pinned in `tests/obs.rs`), `deepcot_slow_ticks_total`, and the
+//! `deepcot_net_*` front-door counters.
 
 use std::time::Duration;
 
@@ -58,6 +102,7 @@ use anyhow::Result;
 
 use deepcot::config::{EngineBackend, EngineConfig};
 use deepcot::coordinator::engine::EngineThread;
+use deepcot::obs::expo;
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::rng::Rng;
 
@@ -104,9 +149,14 @@ fn main() -> Result<()> {
     }
     println!("final logits[0..4] = {:?}", &last[..4.min(last.len())]);
 
-    // 6. observability: cluster metrics incl. migration counters
+    // 6. observability: the operator report, then the same snapshot in
+    //    the Prometheus text format (what `deepcot_serve`'s
+    //    `--metrics-listen` endpoint serves on /metrics)
     let m = handle.metrics()?;
     println!("{}", m.report());
+    let prom = expo::render_prometheus(handle.obs(), &m, None);
+    let stage_lines = prom.lines().filter(|l| l.starts_with("deepcot_stage_latency_us")).count();
+    println!("prometheus exposition: {} bytes, {stage_lines} stage-span lines", prom.len());
 
     session.close(); // explicit; dropping the session would do the same
     engine.shutdown()?;

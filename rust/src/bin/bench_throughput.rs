@@ -31,6 +31,12 @@
 //! the `--json` document, so scalar and SIMD sweeps stay labelled in
 //! the perf trajectory. Dispatch never changes stream bits.
 //!
+//! When the engine runs with `--obs spans` or above (the default),
+//! every config also reports the per-stage pipeline breakdown (queue /
+//! batch-form / backend-step / deliver spans from `obs::span`), and
+//! the `--json` document carries it under `results[].stages` — the
+//! where-did-the-latency-go axis of the perf trajectory.
+//!
 //! The CI smoke runs use a tiny model, 2 shards and a bounded tick
 //! count — see .github/workflows/ci.yml.
 
@@ -60,6 +66,10 @@ struct RunResult {
     migrations: (u64, u64, u64),
     quiesce_p50: Duration,
     quiesce_p99: Duration,
+    /// Per-stage `(name, count, p50, p99, sum)` pipeline breakdown,
+    /// zero-count stages omitted (empty when the engine ran `obs` at a
+    /// level below `spans`).
+    stages: Vec<(&'static str, u64, Duration, Duration, Duration)>,
 }
 
 fn run_one(
@@ -173,6 +183,12 @@ fn run_one(
         migrations: (m.migrations_attempted, m.migrations_completed, m.migrations_aborted),
         quiesce_p50: m.quiesce_latency.quantile(0.5),
         quiesce_p99: m.quiesce_latency.quantile(0.99),
+        stages: m
+            .stage_spans
+            .iter()
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(s, h)| (s.name(), h.count(), h.quantile(0.5), h.quantile(0.99), h.sum()))
+            .collect(),
     })
 }
 
@@ -278,6 +294,17 @@ fn main() -> Result<()> {
             r.ticks_per_sec / baseline
         );
     }
+    // per-stage pipeline breakdown (obs=spans and above; the engine
+    // default) — where each tick's latency actually went
+    for r in results.iter().filter(|r| !r.stages.is_empty()) {
+        let cut = r
+            .stages
+            .iter()
+            .map(|(name, n, p50, p99, _)| format!("{name}={n}@(p50 {p50:.2?}, p99 {p99:.2?})"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!("stages @{} shards: {cut}", r.shards);
+    }
     if !args.get("json").is_empty() {
         let doc = obj(vec![
             ("bench", Json::Str("throughput".into())),
@@ -315,6 +342,23 @@ fn main() -> Result<()> {
                                 ("tick_p50_us", num(r.p50.as_secs_f64() * 1e6)),
                                 ("tick_p99_us", num(r.p99.as_secs_f64() * 1e6)),
                                 ("speedup_vs_baseline", num(r.ticks_per_sec / baseline)),
+                                (
+                                    "stages",
+                                    Json::Arr(
+                                        r.stages
+                                            .iter()
+                                            .map(|(name, n, p50, p99, sum)| {
+                                                obj(vec![
+                                                    ("stage", Json::Str((*name).into())),
+                                                    ("count", num(*n as f64)),
+                                                    ("p50_us", num(p50.as_secs_f64() * 1e6)),
+                                                    ("p99_us", num(p99.as_secs_f64() * 1e6)),
+                                                    ("sum_us", num(sum.as_secs_f64() * 1e6)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
                             ])
                         })
                         .collect(),

@@ -16,8 +16,16 @@
 //! `--smoke N` is the CI loopback self-test: after startup an
 //! in-process client connects over TCP, opens a stream, pushes N
 //! tokens (checking every tick reply), prints the server's metrics
-//! report, and requests a clean shutdown.
+//! report, scrapes the HTTP metrics endpoint when one is up, and
+//! requests a clean shutdown.
+//!
+//! `--metrics-listen ADDR` binds the HTTP observability endpoint
+//! (`/metrics` Prometheus text, `/metrics.json`, `/journal`); on
+//! shutdown any undrained journal events are dumped to stdout as
+//! one-line JSON.
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -27,6 +35,8 @@ use deepcot::coordinator::engine::EngineThread;
 use deepcot::manifest::Manifest;
 use deepcot::net::client::NetClient;
 use deepcot::net::server::NetServer;
+use deepcot::obs::expo;
+use deepcot::obs::server::{MetricsFormat, MetricsServer};
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::cli::Cli;
 use deepcot::util::rng::Rng;
@@ -36,6 +46,7 @@ fn main() -> Result<()> {
         "deepcot_serve: TCP wire-protocol front door for the DeepCoT serving cluster",
     ))
     .opt("listen", "127.0.0.1:7433", "address to listen on (port 0 = ephemeral)")
+    .opt("metrics-listen", "", "HTTP metrics endpoint address (empty = off, port 0 = ephemeral)")
     .opt("smoke", "0", "loopback self-test: push N tokens, then clean shutdown (0 = off)")
     .flag("synthetic", "serve a hermetic synthetic model (no `make artifacts` needed)");
     let args = cli.parse()?;
@@ -58,23 +69,79 @@ fn main() -> Result<()> {
         NetServer::start(args.get("listen"), engine.handle()).context("binding the front door")?;
     println!("deepcot_serve: listening on {}", server.local_addr());
 
+    let obs = engine.handle().obs().clone();
+    let metrics_srv = if args.get("metrics-listen").is_empty() {
+        None
+    } else {
+        let eng = engine.handle();
+        let net = server.metrics_handle();
+        let srv = MetricsServer::start(args.get("metrics-listen"), move |fmt| {
+            let obs = eng.obs();
+            match fmt {
+                MetricsFormat::JournalDrain => expo::render_journal(obs),
+                _ => match eng.metrics() {
+                    Ok(m) => {
+                        let n = net.snapshot();
+                        match fmt {
+                            MetricsFormat::Prometheus => {
+                                expo::render_prometheus(obs, &m, Some(&n))
+                            }
+                            _ => expo::render_json(obs, &m, Some(&n)),
+                        }
+                    }
+                    Err(e) => format!("# metrics unavailable: {e}\n"),
+                },
+            }
+        })
+        .context("binding the metrics endpoint")?;
+        println!("deepcot_serve: metrics endpoint on http://{}/metrics", srv.local_addr());
+        Some(srv)
+    };
+
     let smoke = args.get_usize("smoke")?;
     if smoke > 0 {
-        run_smoke(&server, smoke, d_lane)?;
+        let scrape = metrics_srv.as_ref().map(|s| s.local_addr());
+        run_smoke(&server, smoke, d_lane, scrape, obs.spans_on())?;
     }
 
     // serve until some client requests shutdown (the smoke client does)
     while !server.wait_shutdown_requested(Duration::from_secs(3600)) {}
     println!("deepcot_serve: shutdown requested; draining");
     let net = server.metrics();
+    drop(metrics_srv); // stop scraping before the engine goes away
     server.shutdown();
     engine.shutdown().context("engine shutdown")?;
+    // dump whatever the journal still holds, one JSON line per event
+    for ev in obs.journal().drain() {
+        println!("deepcot_serve: journal {}", expo::event_json(&ev));
+    }
     println!("deepcot_serve: drained ({})", net.report());
     Ok(())
 }
 
-/// Loopback self-test: a real TCP client against our own front door.
-fn run_smoke(server: &NetServer, ticks: usize, d_lane: usize) -> Result<()> {
+/// `GET path` against the metrics endpoint; returns the response body.
+fn scrape(addr: SocketAddr, path: &str) -> Result<String> {
+    let mut sock = TcpStream::connect(addr).context("connecting to the metrics endpoint")?;
+    sock.set_read_timeout(Some(Duration::from_secs(10)))?;
+    write!(sock, "GET {path} HTTP/1.0\r\n\r\n")?;
+    let mut resp = String::new();
+    sock.read_to_string(&mut resp).context("reading the scrape response")?;
+    anyhow::ensure!(resp.starts_with("HTTP/1.0 200"), "scrape of {path} failed: {resp}");
+    match resp.split_once("\r\n\r\n") {
+        Some((_, body)) => Ok(body.to_string()),
+        None => anyhow::bail!("scrape of {path} returned no body"),
+    }
+}
+
+/// Loopback self-test: a real TCP client against our own front door,
+/// plus one scrape of the HTTP metrics endpoint when one is bound.
+fn run_smoke(
+    server: &NetServer,
+    ticks: usize,
+    d_lane: usize,
+    metrics_addr: Option<SocketAddr>,
+    spans_on: bool,
+) -> Result<()> {
     let mut client =
         NetClient::connect(server.local_addr()).context("smoke client connecting")?;
     client.set_read_timeout(Some(Duration::from_secs(30)))?;
@@ -92,6 +159,23 @@ fn run_smoke(server: &NetServer, ticks: usize, d_lane: usize) -> Result<()> {
         );
     }
     println!("{}", client.metrics().context("smoke metrics")?);
+    if let Some(addr) = metrics_addr {
+        let body = scrape(addr, "/metrics")?;
+        anyhow::ensure!(
+            body.contains("deepcot_ticks_total"),
+            "scrape missing deepcot_ticks_total:\n{body}"
+        );
+        if spans_on {
+            let key = "deepcot_stage_latency_us_count{stage=\"backend_step\"}";
+            let count = body
+                .lines()
+                .find_map(|l| l.strip_prefix(key))
+                .and_then(|v| v.trim().parse::<f64>().ok())
+                .unwrap_or(0.0);
+            anyhow::ensure!(count > 0.0, "no backend_step stage spans in scrape:\n{body}");
+        }
+        println!("deepcot_serve: smoke scrape ok ({} bytes of /metrics)", body.len());
+    }
     client.close(stream).context("smoke close")?;
     client.shutdown_server().context("smoke shutdown")?;
     println!("deepcot_serve: smoke ok ({ticks} ticks over loopback)");

@@ -7,6 +7,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::nn::simd::DispatchChoice;
+use crate::obs::ObsLevel;
 use crate::util::cli::{Args, Cli};
 
 /// Which execution backend the engine thread drives.
@@ -95,6 +96,14 @@ pub struct EngineConfig {
     /// force. Dispatch is bitwise-invisible (see `nn::simd`); this
     /// knob exists so tests, CI, and benches can pin a path.
     pub kernel_dispatch: DispatchChoice,
+    /// Observability level (`off|counters|spans|journal`): how much
+    /// the serving stack records beyond the always-on base counters.
+    /// Defaults from `DEEPCOT_OBS` (else `journal`); never changes
+    /// results, only what gets measured.
+    pub obs: ObsLevel,
+    /// Journal a slow-tick event (and bump `slow_ticks`) when a tick's
+    /// end-to-end pipeline time exceeds this.
+    pub slow_tick: Duration,
 }
 
 impl Default for EngineConfig {
@@ -111,6 +120,8 @@ impl Default for EngineConfig {
             placement: PlacementPolicy::Hash,
             slots_per_shard: 0,
             kernel_dispatch: DispatchChoice::Auto,
+            obs: ObsLevel::default_from_env(),
+            slow_tick: Duration::from_millis(100),
         }
     }
 }
@@ -202,6 +213,18 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// Observability level (off / counters / spans / journal).
+    pub fn obs(mut self, level: ObsLevel) -> Self {
+        self.cfg.obs = level;
+        self
+    }
+
+    /// Slow-tick journal threshold.
+    pub fn slow_tick(mut self, d: Duration) -> Self {
+        self.cfg.slow_tick = d;
+        self
+    }
+
     /// Finish the build.
     pub fn build(self) -> EngineConfig {
         self.cfg
@@ -226,6 +249,8 @@ impl EngineConfig {
             .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin")
             .opt("slots-per-shard", "0", "per-shard slot capacity (scalar; 0 = variant batch)")
             .opt("kernel-dispatch", "auto", "kernel path: auto|scalar|avx2|neon")
+            .opt("obs", "auto", "observability: off|counters|spans|journal (auto = $DEEPCOT_OBS)")
+            .opt("slow-tick-us", "100000", "journal a slow-tick event past this pipeline time (µs)")
     }
 
     pub fn from_args(args: &Args) -> Result<Self> {
@@ -242,6 +267,10 @@ impl EngineConfig {
         cfg.placement = args.get("placement").parse()?;
         cfg.slots_per_shard = args.get_usize("slots-per-shard")?;
         cfg.kernel_dispatch = args.get("kernel-dispatch").parse()?;
+        if args.get("obs") != "auto" {
+            cfg.obs = args.get("obs").parse()?;
+        }
+        cfg.slow_tick = Duration::from_micros(args.get_u64("slow-tick-us")?);
         Ok(cfg)
     }
 
@@ -297,6 +326,24 @@ mod tests {
             .parse_from(["--kernel-dispatch", "sse9"].iter().map(|s| s.to_string()))
             .unwrap();
         assert!(EngineConfig::from_args(&args).is_err(), "bad dispatch must fail to parse");
+    }
+
+    #[test]
+    fn obs_options_parse() {
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli
+            .parse_from(["--obs", "spans", "--slow-tick-us", "2500"].iter().map(|s| s.to_string()))
+            .unwrap();
+        let c = EngineConfig::from_args(&args).unwrap();
+        assert_eq!(c.obs, ObsLevel::Spans);
+        assert_eq!(c.slow_tick, Duration::from_micros(2500));
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli.parse_from(["--obs", "loud"].iter().map(|s| s.to_string())).unwrap();
+        assert!(EngineConfig::from_args(&args).is_err(), "bad obs level must fail to parse");
+        // builder knob + default threshold
+        let b = EngineConfig::builder().obs(ObsLevel::Off).build();
+        assert_eq!(b.obs, ObsLevel::Off);
+        assert_eq!(b.slow_tick, Duration::from_millis(100));
     }
 
     #[test]

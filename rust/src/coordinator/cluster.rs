@@ -62,6 +62,9 @@ use crate::coordinator::metrics::{ClusterMetrics, LatencyHisto};
 use crate::coordinator::session::{EngineError, Session};
 use crate::coordinator::shard::{ShardHandle, ShardThread};
 use crate::coordinator::slots::StreamId;
+use crate::obs::journal::EventKind;
+use crate::obs::span::Stage;
+use crate::obs::ObsHandle;
 
 /// Cluster-level placement: pins streams to shards and tracks the load
 /// the front door believes each shard carries (opens minus closes). A
@@ -198,6 +201,7 @@ pub struct RebalanceReport {
 pub struct EngineHandle {
     shards: Arc<[ShardHandle]>,
     door: Arc<RwLock<FrontDoor>>,
+    obs: ObsHandle,
 }
 
 impl EngineHandle {
@@ -283,6 +287,12 @@ impl EngineHandle {
         self.shards.len()
     }
 
+    /// The cluster's observability handle (level, journal, exposition
+    /// sequence / rate state) — shared by every shard and the net layer.
+    pub fn obs(&self) -> &ObsHandle {
+        &self.obs
+    }
+
     /// The shard a stream currently serves on (observability; may be
     /// stale by the time the caller acts on it).
     pub fn shard_of(&self, id: StreamId) -> Option<usize> {
@@ -320,6 +330,8 @@ impl EngineHandle {
         let Some(from) = door.router.shard_of(id) else {
             door.migrations_attempted += 1;
             door.migrations_aborted += 1;
+            self.obs.event(EventKind::MigrationAttempt, id.0, -1, to_shard as u64);
+            self.obs.event(EventKind::MigrationAbort, id.0, -1, to_shard as u64);
             return Err(EngineError::StreamClosed(id));
         };
         if from == to_shard {
@@ -329,12 +341,14 @@ impl EngineHandle {
             return Ok(());
         }
         door.migrations_attempted += 1;
+        self.obs.event(EventKind::MigrationAttempt, id.0, from as i64, to_shard as u64);
         // export atomically detaches the stream from its source shard
         // (or fails with the stream still serving there, untouched)
         let payload = match self.shards[from].export(id) {
             Ok(p) => p,
             Err(e) => {
                 door.migrations_aborted += 1;
+                self.obs.event(EventKind::MigrationAbort, id.0, from as i64, to_shard as u64);
                 return Err(e);
             }
         };
@@ -346,7 +360,14 @@ impl EngineHandle {
                 }
                 door.router.bind(id, to_shard);
                 door.migrations_completed += 1;
-                door.quiesce_latency.record(t0.elapsed());
+                let quiesce = t0.elapsed();
+                door.quiesce_latency.record(quiesce);
+                self.obs.event(
+                    EventKind::MigrationComplete,
+                    id.0,
+                    to_shard as i64,
+                    quiesce.as_micros() as u64,
+                );
                 Ok(())
             }
             Err((e, mut payload, evicted)) => {
@@ -356,6 +377,7 @@ impl EngineHandle {
                     door.router.unbind(eid);
                 }
                 door.migrations_aborted += 1;
+                self.obs.event(EventKind::MigrationAbort, id.0, from as i64, to_shard as u64);
                 // abort: put the stream back on its source shard. The
                 // slot the export freed is USUALLY still free, but an
                 // open racing its lock-free shard round-trip can have
@@ -452,6 +474,14 @@ impl EngineHandle {
         m.migrations_completed = door.migrations_completed;
         m.migrations_aborted = door.migrations_aborted;
         m.quiesce_latency = door.quiesce_latency.clone();
+        drop(door);
+        m.uptime = self.obs.uptime();
+        m.boot_unix_ms = self.obs.boot_unix_ms();
+        if self.obs.spans_on() {
+            // the quiesce window is a front-door span, not a shard one;
+            // fold it into the stage family so exposition sees one table
+            m.stage_spans.merge_histo(Stage::MigQuiesce, &m.quiesce_latency);
+        }
         Ok(m)
     }
 }
@@ -471,9 +501,10 @@ impl ShardedEngine {
     /// so their backends initialize in parallel.
     pub fn spawn(cfg: EngineConfig) -> Result<Self, EngineError> {
         let n = cfg.effective_shards().max(1);
+        let obs = ObsHandle::new(cfg.obs);
         let mut shards = Vec::with_capacity(n);
         for s in 0..n {
-            shards.push(ShardThread::start(s, cfg.clone())?);
+            shards.push(ShardThread::start(s, cfg.clone(), obs.clone())?);
         }
         for t in shards.iter_mut() {
             t.wait_ready()?;
@@ -491,7 +522,7 @@ impl ShardedEngine {
             migrations_aborted: 0,
             quiesce_latency: LatencyHisto::new(),
         };
-        let handle = EngineHandle { shards: handles, door: Arc::new(RwLock::new(door)) };
+        let handle = EngineHandle { shards: handles, door: Arc::new(RwLock::new(door)), obs };
         Ok(Self { shards, handle })
     }
 

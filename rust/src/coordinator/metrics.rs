@@ -3,8 +3,10 @@
 
 use std::time::Duration;
 
+use crate::obs::span::StageSpans;
+
 /// Log2-bucketed latency histogram from 1µs to ~68s.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LatencyHisto {
     /// bucket i counts samples in [2^i, 2^(i+1)) microseconds.
     buckets: Vec<u64>,
@@ -53,17 +55,44 @@ impl LatencyHisto {
         Duration::from_micros(self.max_us)
     }
 
-    /// Upper bound of the bucket containing quantile q (conservative).
+    /// Sum of all recorded samples.
+    pub fn sum(&self) -> Duration {
+        Duration::from_micros(self.sum_us)
+    }
+
+    /// Zero every counter in place (storage retained; no allocation).
+    pub fn reset(&mut self) {
+        for b in &mut self.buckets {
+            *b = 0;
+        }
+        self.count = 0;
+        self.sum_us = 0;
+        self.max_us = 0;
+    }
+
+    /// Estimated value at quantile q: linear interpolation by rank
+    /// inside the terminal bucket, clamped so the estimate never
+    /// exceeds the true recorded maximum — `quantile(1.0) == max()`.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
         }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
-        let mut seen = 0;
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+                // rank within this bucket, in (0, 1]
+                let rank = target - (seen - c);
+                let frac = rank as f64 / c as f64;
+                let lo = 1u64 << i;
+                let hi = if i + 1 >= self.buckets.len() {
+                    self.max_us
+                } else {
+                    (1u64 << (i + 1)).min(self.max_us)
+                }
+                .max(lo);
+                return Duration::from_micros(lo + ((hi - lo) as f64 * frac) as u64);
             }
         }
         Duration::from_micros(self.max_us)
@@ -106,6 +135,13 @@ pub struct EngineMetrics {
     pub tick_latency: LatencyHisto,
     /// time a token waits in the batcher before its tick starts
     pub queue_latency: LatencyHisto,
+    /// Per-stage pipeline latency breakdown (ingress → queue →
+    /// batch-form → backend-step → deliver, plus migration legs).
+    /// Empty unless the engine runs with `obs` at `spans` or above.
+    pub stage_spans: StageSpans,
+    /// Ticks whose end-to-end pipeline time exceeded the configured
+    /// `slow_tick` threshold (counted at `obs=spans` and above).
+    pub slow_ticks: u64,
     /// Kernel path the shard's backend resolved at startup ("scalar" /
     /// "avx2" / "neon"; "n/a" for backends without a dispatched kernel
     /// layer, empty before the shard reports). Dispatch never changes
@@ -135,6 +171,8 @@ impl EngineMetrics {
         self.migrations_out += other.migrations_out;
         self.tick_latency.merge(&other.tick_latency);
         self.queue_latency.merge(&other.queue_latency);
+        self.stage_spans.merge(&other.stage_spans);
+        self.slow_ticks += other.slow_ticks;
         // shards share one EngineConfig, so paths agree; first
         // non-empty wins (merging into fresh all-zero counters)
         if self.kernel_dispatch.is_empty() {
@@ -196,6 +234,12 @@ pub struct ClusterMetrics {
     pub tick_latency: LatencyHisto,
     /// Batcher queue-wait latency, merged across shards.
     pub queue_latency: LatencyHisto,
+    /// Per-stage pipeline latency, merged across shards; the front
+    /// door folds its quiesce histogram into the migration-quiesce
+    /// stage when spans are enabled.
+    pub stage_spans: StageSpans,
+    /// Over-threshold ticks, cluster-wide.
+    pub slow_ticks: u64,
     /// Per-shard breakdown (index = shard id).
     pub per_shard: Vec<EngineMetrics>,
     /// Streams placed on their policy-preferred shard.
@@ -218,6 +262,10 @@ pub struct ClusterMetrics {
     /// Kernel path the shard backends resolved at startup (shards share
     /// one `EngineConfig`, so one value describes the cluster).
     pub kernel_dispatch: String,
+    /// Time since the engine front door booted.
+    pub uptime: Duration,
+    /// Wall-clock boot instant, milliseconds since the Unix epoch.
+    pub boot_unix_ms: u64,
 }
 
 impl ClusterMetrics {
@@ -238,6 +286,8 @@ impl ClusterMetrics {
             admission_rejects: agg.admission_rejects,
             tick_latency: agg.tick_latency,
             queue_latency: agg.queue_latency,
+            stage_spans: agg.stage_spans,
+            slow_ticks: agg.slow_ticks,
             kernel_dispatch: agg.kernel_dispatch,
             per_shard,
             ..Self::default()
@@ -265,6 +315,8 @@ impl ClusterMetrics {
             migrations_out,
             tick_latency: self.tick_latency.clone(),
             queue_latency: self.queue_latency.clone(),
+            stage_spans: self.stage_spans.clone(),
+            slow_ticks: self.slow_ticks,
             kernel_dispatch: self.kernel_dispatch.clone(),
         }
     }
@@ -310,6 +362,36 @@ mod tests {
         assert!(h.quantile(0.1) <= h.quantile(0.5));
         assert!(h.quantile(0.5) <= h.quantile(0.99));
         assert!(h.mean() >= Duration::from_micros(20_000));
+    }
+
+    #[test]
+    fn quantile_never_exceeds_max() {
+        // regression: the old implementation returned the terminal
+        // bucket's upper bound 2^(i+1), overstating p99 up to 2x; the
+        // estimate must now clamp to the true recorded maximum
+        let mut h = LatencyHisto::new();
+        for us in [3u64, 130, 130, 131, 1050] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.quantile(1.0), h.max());
+        assert_eq!(h.max(), Duration::from_micros(1050));
+        for q in [0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert!(h.quantile(q) <= h.max(), "q={q} overshoots max");
+        }
+        // single sample: every quantile is that sample
+        let mut one = LatencyHisto::new();
+        one.record(Duration::from_micros(777));
+        assert_eq!(one.quantile(0.5), Duration::from_micros(777));
+        assert_eq!(one.quantile(1.0), one.max());
+    }
+
+    #[test]
+    fn reset_zeroes_in_place() {
+        let mut h = LatencyHisto::new();
+        h.record(Duration::from_micros(42));
+        h.reset();
+        assert_eq!(h, LatencyHisto::new());
+        assert_eq!(h.sum(), Duration::ZERO);
     }
 
     #[test]

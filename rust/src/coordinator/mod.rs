@@ -50,7 +50,9 @@
 //!   `Session`, `EngineError` re-exports).
 //! - [`metrics`] — latency histograms, per-shard counters, and the
 //!   merged [`metrics::ClusterMetrics`] view with migration
-//!   observability.
+//!   observability. Stage-span breakdowns, the event journal, and the
+//!   Prometheus/JSON exposition of all of it live in `crate::obs`,
+//!   governed by the `EngineConfig::obs` level knob.
 
 pub mod batcher;
 #[deny(missing_docs)]

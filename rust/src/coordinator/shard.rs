@@ -52,6 +52,9 @@ use crate::coordinator::slot_stepper::{SlotStepper, StreamState};
 use crate::coordinator::slots::StreamId;
 use crate::manifest::Manifest;
 use crate::nn::params::ModelParams;
+use crate::obs::journal::EventKind;
+use crate::obs::span::Stage;
+use crate::obs::ObsHandle;
 use crate::runtime::Runtime;
 
 /// One tick's result delivered to a stream's owner.
@@ -209,12 +212,16 @@ impl ShardThread {
     /// Start one shard worker WITHOUT waiting for its backend: the
     /// cluster starts every shard first and then waits on all of them,
     /// so N shards load their models in parallel instead of serially.
-    pub(crate) fn start(shard: usize, cfg: EngineConfig) -> Result<Self, EngineError> {
+    pub(crate) fn start(
+        shard: usize,
+        cfg: EngineConfig,
+        obs: ObsHandle,
+    ) -> Result<Self, EngineError> {
         let (tx, rx) = mpsc::sync_channel::<ShardRequest>(cfg.request_queue);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), EngineError>>();
         let join = std::thread::Builder::new()
             .name(format!("deepcot-shard-{shard}"))
-            .spawn(move || shard_main(shard, cfg, rx, ready_tx))
+            .spawn(move || shard_main(shard, cfg, obs, rx, ready_tx))
             .map_err(EngineError::internal)?;
         Ok(Self {
             handle: ShardHandle { shard, tx },
@@ -323,6 +330,8 @@ fn import_stream(
     payload: Box<ExportedStream>,
     rollback: bool,
     now: Instant,
+    shard: usize,
+    obs: &ObsHandle,
     stepper: &mut SlotStepper,
     router: &mut Router,
     batcher: &mut Batcher,
@@ -338,11 +347,13 @@ fn import_stream(
         batcher.forget(eid);
         ports.remove(&eid);
         metrics.streams_evicted += 1;
+        obs.event(EventKind::StreamEvict, eid.0, shard as i64, 0);
     }
     let slot = match adm {
         Admission::Accepted(slot) => slot,
         Admission::Rejected => {
             metrics.admission_rejects += 1;
+            obs.event(EventKind::AdmissionReject, id.0, shard as i64, 0);
             return Err((
                 EngineError::Saturated { capacity: router.capacity() },
                 Some(payload),
@@ -374,6 +385,7 @@ fn import_stream(
 fn shard_main(
     shard: usize,
     cfg: EngineConfig,
+    obs: ObsHandle,
     rx: Receiver<ShardRequest>,
     ready: Sender<Result<(), EngineError>>,
 ) -> Result<(), EngineError> {
@@ -396,6 +408,13 @@ fn shard_main(
         stepper.capacity(),
         stepper.kernel_dispatch()
     );
+    obs.event(
+        EventKind::DispatchResolved,
+        0,
+        shard as i64,
+        EventKind::dispatch_aux(stepper.kernel_dispatch()),
+    );
+    let spans_on = obs.spans_on();
     let lane_elems = {
         let c = stepper.config();
         c.m_tokens * c.d_in
@@ -425,6 +444,7 @@ fn shard_main(
                             batcher.forget(eid);
                             ports.remove(&eid);
                             metrics.streams_evicted += 1;
+                            obs.event(EventKind::StreamEvict, eid.0, shard as i64, 0);
                         }
                         let res = match adm {
                             Admission::Accepted(slot) => {
@@ -432,10 +452,12 @@ fn shard_main(
                                 let (out_tx, out_rx) = mpsc::channel();
                                 ports.insert(id, StreamPort { out: out_tx, ticks: 0 });
                                 metrics.streams_opened += 1;
+                                obs.event(EventKind::StreamOpen, id.0, shard as i64, 0);
                                 Ok((out_rx, evicted))
                             }
                             Admission::Rejected => {
                                 metrics.admission_rejects += 1;
+                                obs.event(EventKind::AdmissionReject, id.0, shard as i64, 0);
                                 Err(EngineError::Saturated { capacity: router.capacity() })
                             }
                         };
@@ -456,6 +478,9 @@ fn shard_main(
                             ))
                         } else if batcher.push(id, tokens, now) {
                             metrics.tokens_in += 1;
+                            if spans_on {
+                                metrics.stage_spans.record(Stage::Ingress, now.elapsed());
+                            }
                             Ok(())
                         } else {
                             Err((EngineError::Backpressure(id), None))
@@ -469,6 +494,7 @@ fn shard_main(
                         if let Some(slot) = router.close(id) {
                             stepper.clear_lane(slot);
                             metrics.streams_closed += 1;
+                            obs.event(EventKind::StreamClose, id.0, shard as i64, 0);
                         }
                         batcher.forget(id);
                         ports.remove(&id);
@@ -505,6 +531,9 @@ fn shard_main(
                                 }
                             }
                         };
+                        if spans_on && res.is_ok() {
+                            metrics.stage_spans.record(Stage::MigExport, now.elapsed());
+                        }
                         let _ = reply.send(res);
                     }
                     ShardRequest::Import { id, payload, rollback, reply } => {
@@ -513,12 +542,17 @@ fn shard_main(
                             payload,
                             rollback,
                             now,
+                            shard,
+                            &obs,
                             &mut stepper,
                             &mut router,
                             &mut batcher,
                             &mut ports,
                             &mut metrics,
                         );
+                        if spans_on && res.is_ok() {
+                            metrics.stage_spans.record(Stage::MigImport, now.elapsed());
+                        }
                         let _ = reply.send(res);
                     }
                     ShardRequest::Metrics { reply } => {
@@ -538,12 +572,17 @@ fn shard_main(
             if plan.lanes.is_empty() {
                 continue;
             }
+            let mut oldest = now;
             for (_, _, _, enq) in &plan.lanes {
                 metrics.queue_latency.record(now.duration_since(*enq));
+                if *enq < oldest {
+                    oldest = *enq;
+                }
             }
             let t0 = Instant::now();
             let lanes = stepper.tick_lanes(&plan)?;
-            metrics.tick_latency.record(t0.elapsed());
+            let stepped = Instant::now();
+            metrics.tick_latency.record(stepped.duration_since(t0));
             metrics.ticks += 1;
             let done = Instant::now();
             for lane in lanes {
@@ -556,6 +595,22 @@ fn shard_main(
                         out: lane.out,
                         tick: port.ticks,
                     });
+                }
+            }
+            if spans_on {
+                // contiguous segments over [oldest-enqueue, delivered]:
+                // queue + batch-form + backend-step + deliver sum (within
+                // timer truncation) to pipeline-total — pinned by a test
+                let delivered = Instant::now();
+                metrics.stage_spans.record(Stage::Queue, now.duration_since(oldest));
+                metrics.stage_spans.record(Stage::BatchForm, t0.duration_since(now));
+                metrics.stage_spans.record(Stage::BackendStep, stepped.duration_since(t0));
+                metrics.stage_spans.record(Stage::Deliver, delivered.duration_since(stepped));
+                let total = delivered.duration_since(oldest);
+                metrics.stage_spans.record(Stage::PipelineTotal, total);
+                if total > cfg.slow_tick {
+                    metrics.slow_ticks += 1;
+                    obs.event(EventKind::SlowTick, 0, shard as i64, total.as_micros() as u64);
                 }
             }
         }

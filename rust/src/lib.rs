@@ -18,6 +18,10 @@
 //! - [`net`] — the TCP front door: length-prefixed binary wire
 //!   protocol, multi-threaded server (one engine `Session` per client
 //!   stream), and blocking client; `bin/deepcot_serve` is the CLI.
+//! - [`obs`] — production observability: tick-pipeline stage spans,
+//!   Prometheus/JSON exposition (HTTP endpoint + wire frame), windowed
+//!   rates, and a bounded structured event journal, all behind the
+//!   `obs` level knob.
 //! - [`baselines`] — the paper's comparison systems behind one
 //!   [`baselines::StreamModel`] trait (regular encoder, Continual
 //!   Transformer, Nyströmformer, FNet, DeepCoT, DeepCoT-XL, MAT-SED
@@ -48,6 +52,8 @@ pub mod manifest;
 #[deny(missing_docs)]
 pub mod net;
 pub mod nn;
+#[deny(missing_docs)]
+pub mod obs;
 pub mod probe;
 pub mod runtime;
 pub mod synthetic;

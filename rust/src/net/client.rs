@@ -244,6 +244,19 @@ impl NetClient {
         }
     }
 
+    /// Fetch the server's full Prometheus text exposition — the same
+    /// document its HTTP `/metrics` endpoint serves.
+    pub fn metrics_prometheus(&mut self) -> Result<String, ClientError> {
+        self.send(&Frame::MetricsProm)?;
+        loop {
+            match self.read_one()? {
+                Frame::MetricsReport { report } => return Ok(report),
+                Frame::Error(w) if w.stream == 0 => return Err(ClientError::Engine(w.to_engine())),
+                other => self.park(other)?,
+            }
+        }
+    }
+
     /// Ask the server to shut down gracefully; returns once the server
     /// acknowledges (expect terminal errors / EOF afterwards).
     pub fn shutdown_server(&mut self) -> Result<(), ClientError> {

@@ -8,7 +8,8 @@
 //! LE arrays, strings are UTF-8.
 //!
 //! Request frames (client → server): [`Frame::Open`], [`Frame::Push`],
-//! [`Frame::Close`], [`Frame::Metrics`], [`Frame::Shutdown`]. Reply
+//! [`Frame::Close`], [`Frame::Metrics`], [`Frame::MetricsProm`],
+//! [`Frame::Shutdown`]. Reply
 //! frames (server → client): [`Frame::Opened`], [`Frame::PushOk`],
 //! [`Frame::Closed`], [`Frame::Tick`], [`Frame::MetricsReport`],
 //! [`Frame::ShutdownOk`], and [`Frame::Error`] — whose [`WireError`]
@@ -50,6 +51,7 @@ const OP_PUSH: u8 = 0x02;
 const OP_CLOSE: u8 = 0x03;
 const OP_METRICS: u8 = 0x04;
 const OP_SHUTDOWN: u8 = 0x05;
+const OP_METRICS_PROM: u8 = 0x06;
 const OP_OPENED: u8 = 0x81;
 const OP_PUSH_OK: u8 = 0x82;
 const OP_CLOSED: u8 = 0x83;
@@ -243,6 +245,10 @@ pub enum Frame {
     },
     /// Request the server's cluster + net metrics report.
     Metrics,
+    /// Request the full Prometheus text exposition (the same document
+    /// the HTTP `/metrics` endpoint serves); answered with
+    /// [`Frame::MetricsReport`].
+    MetricsProm,
     /// Ask the server to shut down gracefully (drain + terminal
     /// errors to every other live stream).
     Shutdown,
@@ -425,6 +431,10 @@ impl<'a> RawFrame<'a> {
                 expect_exact(b, 0, self.op)?;
                 Frame::Metrics
             }
+            OP_METRICS_PROM => {
+                expect_exact(b, 0, self.op)?;
+                Frame::MetricsProm
+            }
             OP_SHUTDOWN => {
                 expect_exact(b, 0, self.op)?;
                 Frame::Shutdown
@@ -497,6 +507,7 @@ impl Frame {
         match self {
             Frame::Open => out.push(OP_OPEN),
             Frame::Metrics => out.push(OP_METRICS),
+            Frame::MetricsProm => out.push(OP_METRICS_PROM),
             Frame::Shutdown => out.push(OP_SHUTDOWN),
             Frame::ShutdownOk => out.push(OP_SHUTDOWN_OK),
             Frame::Close { stream } => {
@@ -623,7 +634,9 @@ mod tests {
 
     #[test]
     fn fixed_frames_round_trip() {
-        for f in [Frame::Open, Frame::Metrics, Frame::Shutdown, Frame::ShutdownOk] {
+        for f in
+            [Frame::Open, Frame::Metrics, Frame::MetricsProm, Frame::Shutdown, Frame::ShutdownOk]
+        {
             let enc = f.encode();
             assert_eq!(Frame::decode(&enc[4..]).unwrap(), f);
         }

@@ -47,15 +47,19 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant, SystemTime};
 
 use crate::coordinator::cluster::EngineHandle;
 use crate::coordinator::session::{EngineError, Session, TickReceiver};
 use crate::coordinator::shard::TickResult;
 use crate::net::proto::{self, Frame, RawFrame, WireError};
+use crate::obs::expo;
+use crate::obs::journal::EventKind;
+use crate::obs::span::{Stage, StageSpans};
+use crate::obs::{ObsHandle, ObsLevel};
 
-/// Shared atomic counters (per-connection accounting rolls up here).
-#[derive(Default)]
+/// Shared atomic counters (per-connection accounting rolls up here),
+/// plus the net layer's boot clocks and its decode/encode stage spans.
 struct Counters {
     connections_accepted: AtomicU64,
     connections_active: AtomicU64,
@@ -64,6 +68,10 @@ struct Counters {
     protocol_errors: AtomicU64,
     streams_opened: AtomicU64,
     shutdown_requests: AtomicU64,
+    boot: Instant,
+    boot_unix_ms: u64,
+    level: ObsLevel,
+    spans: Mutex<StageSpans>,
 }
 
 /// A point-in-time snapshot of the net layer's counters.
@@ -83,6 +91,13 @@ pub struct NetMetrics {
     pub streams_opened: u64,
     /// SHUTDOWN frames honored.
     pub shutdown_requests: u64,
+    /// Time since the net front door started.
+    pub uptime: Duration,
+    /// Wall-clock start of the net front door, ms since the Unix epoch.
+    pub boot_unix_ms: u64,
+    /// Net-layer stage spans (frame decode / encode), recorded at
+    /// `obs >= spans`; empty otherwise.
+    pub spans: StageSpans,
 }
 
 impl NetMetrics {
@@ -102,6 +117,34 @@ impl NetMetrics {
 }
 
 impl Counters {
+    fn new(level: ObsLevel) -> Self {
+        let boot_unix_ms = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        Self {
+            connections_accepted: AtomicU64::new(0),
+            connections_active: AtomicU64::new(0),
+            frames_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+            streams_opened: AtomicU64::new(0),
+            shutdown_requests: AtomicU64::new(0),
+            boot: Instant::now(),
+            boot_unix_ms,
+            level,
+            spans: Mutex::new(StageSpans::new()),
+        }
+    }
+
+    fn spans_on(&self) -> bool {
+        self.level >= ObsLevel::Spans
+    }
+
+    fn record_span(&self, stage: Stage, d: Duration) {
+        self.spans.lock().unwrap_or_else(|p| p.into_inner()).record(stage, d);
+    }
+
     fn snapshot(&self) -> NetMetrics {
         NetMetrics {
             connections_accepted: self.connections_accepted.load(Ordering::Relaxed),
@@ -111,7 +154,25 @@ impl Counters {
             protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
             streams_opened: self.streams_opened.load(Ordering::Relaxed),
             shutdown_requests: self.shutdown_requests.load(Ordering::Relaxed),
+            uptime: self.boot.elapsed(),
+            boot_unix_ms: self.boot_unix_ms,
+            spans: self.spans.lock().unwrap_or_else(|p| p.into_inner()).clone(),
         }
+    }
+}
+
+/// Cloneable snapshot handle to the net layer's counters, detached
+/// from the [`NetServer`]'s lifetime — the exposition endpoint's
+/// render closure holds one without borrowing the server.
+#[derive(Clone)]
+pub struct NetMetricsHandle {
+    counters: Arc<Counters>,
+}
+
+impl NetMetricsHandle {
+    /// Snapshot of the net layer's counters.
+    pub fn snapshot(&self) -> NetMetrics {
+        self.counters.snapshot()
     }
 }
 
@@ -154,7 +215,7 @@ impl NetServer {
         let addr = listener.local_addr()?;
         let shutting_down = Arc::new(AtomicBool::new(false));
         let conns: ConnRegistry = Arc::default();
-        let counters = Arc::new(Counters::default());
+        let counters = Arc::new(Counters::new(engine.obs().level()));
         let (shutdown_req_tx, shutdown_req_rx) = mpsc::channel();
         let acceptor = {
             let shutting_down = Arc::clone(&shutting_down);
@@ -241,6 +302,12 @@ impl NetServer {
         self.counters.snapshot()
     }
 
+    /// A counters handle that outlives this server value (for the
+    /// metrics endpoint's render closure).
+    pub fn metrics_handle(&self) -> NetMetricsHandle {
+        NetMetricsHandle { counters: Arc::clone(&self.counters) }
+    }
+
     /// Block until some client sends a SHUTDOWN frame, or `timeout`
     /// passes (`true` = shutdown was requested). The server keeps
     /// serving either way — pair with [`NetServer::shutdown`]. A
@@ -316,6 +383,8 @@ fn conn_main(
     let mut sock = sock;
     let mut streams: BTreeMap<u64, StreamEntry> = BTreeMap::new();
     let mut frame_buf: Vec<u8> = Vec::with_capacity(4096);
+    let obs = engine.obs().clone();
+    let spans_on = counters.spans_on();
     loop {
         match proto::read_frame(&mut sock, &mut frame_buf) {
             Ok(true) => {}
@@ -325,10 +394,12 @@ fn conn_main(
             Ok(false) | Err(_) => break,
         }
         counters.frames_in.fetch_add(1, Ordering::Relaxed);
+        let t_decode = Instant::now();
         let raw = match RawFrame::parse(&frame_buf) {
             Ok(raw) => raw,
             Err(e) => {
                 counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                obs.event(EventKind::ProtoError, 0, -1, 0);
                 let _ = wtx.send(invalid(0, &e));
                 continue;
             }
@@ -337,6 +408,9 @@ fn conn_main(
         // reused frame buffer before falling back to the owned decoder
         let mut tokens = Vec::new();
         if let Ok(stream) = raw.push_fields_into(&mut tokens) {
+            if spans_on {
+                counters.record_span(Stage::NetDecode, t_decode.elapsed());
+            }
             let reply = match streams.get(&stream) {
                 None => Frame::Error(WireError::from_engine(
                     stream,
@@ -350,7 +424,11 @@ fn conn_main(
             let _ = wtx.send(Reply::Frame(reply));
             continue;
         }
-        match raw.to_frame() {
+        let decoded = raw.to_frame();
+        if spans_on {
+            counters.record_span(Stage::NetDecode, t_decode.elapsed());
+        }
+        match decoded {
             Ok(Frame::Open) => {
                 let reply = match engine.open() {
                     Ok(mut sess) => {
@@ -407,6 +485,17 @@ fn conn_main(
                 };
                 let _ = wtx.send(Reply::Frame(reply));
             }
+            Ok(Frame::MetricsProm) => {
+                // the same document the HTTP /metrics endpoint serves,
+                // carried in a MetricsReport frame
+                let reply = match engine.metrics() {
+                    Ok(m) => Frame::MetricsReport {
+                        report: expo::render_prometheus(&obs, &m, Some(&counters.snapshot())),
+                    },
+                    Err(e) => Frame::Error(WireError::from_engine(0, &e)),
+                };
+                let _ = wtx.send(Reply::Frame(reply));
+            }
             Ok(Frame::Shutdown) => {
                 counters.shutdown_requests.fetch_add(1, Ordering::Relaxed);
                 let _ = wtx.send(Reply::Frame(Frame::ShutdownOk));
@@ -419,6 +508,7 @@ fn conn_main(
             // transport corruption: answer typed, keep serving
             Ok(_) => {
                 counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                obs.event(EventKind::ProtoError, 0, -1, u64::from(raw.op));
                 let _ = wtx.send(Reply::Frame(Frame::Error(WireError::from_engine(
                     0,
                     &EngineError::InvalidRequest("reply opcode sent to the server".into()),
@@ -426,6 +516,7 @@ fn conn_main(
             }
             Err(e) => {
                 counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                obs.event(EventKind::ProtoError, 0, -1, u64::from(raw.op));
                 let _ = wtx.send(invalid(0, &e));
             }
         }
@@ -494,12 +585,17 @@ fn spawn_forwarder(
 /// buffer. Exits when every sender is gone or the socket dies.
 fn writer_main(mut sock: TcpStream, wrx: Receiver<Reply>, counters: Arc<Counters>) {
     let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let spans_on = counters.spans_on();
     while let Ok(reply) = wrx.recv() {
+        let t_encode = Instant::now();
         match reply {
             Reply::Frame(f) => f.encode_into(&mut buf),
             Reply::Tick { stream, result } => {
                 proto::write_tick(&mut buf, stream, result.tick, &result.logits, &result.out)
             }
+        }
+        if spans_on {
+            counters.record_span(Stage::NetEncode, t_encode.elapsed());
         }
         if sock.write_all(&buf).is_err() {
             // socket dead: drain (dropping replies) so senders never

@@ -1,0 +1,533 @@
+//! Metrics exposition: Prometheus text format + JSON snapshots, with
+//! monotonic snapshot sequence numbers and windowed rates computed
+//! from a small preallocated ring of timestamped counter samples.
+//!
+//! Every renderer here is a cold path (scrapes are rare); the only
+//! hot-adjacent structure is [`SnapshotRing`], whose `push` is
+//! alloc-free after construction so rate accounting can never perturb
+//! the serving steady state.
+
+use std::time::Duration;
+
+use crate::coordinator::cluster::ClusterMetrics;
+use crate::coordinator::metrics::LatencyHisto;
+use crate::net::server::NetMetrics;
+use crate::obs::journal::{Event, EventKind};
+use crate::obs::span::Stage;
+use crate::obs::{ObsHandle, ObsLevel};
+
+/// Window the built-in rate view is computed over.
+pub const RATE_WINDOW: Duration = Duration::from_secs(10);
+
+/// One timestamped sample of the cumulative counters that back the
+/// windowed-rate view.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RateSample {
+    /// Microseconds since obs boot when the sample was taken.
+    pub t_us: u64,
+    /// Cumulative ticks at sample time.
+    pub ticks: u64,
+    /// Cumulative accepted token vectors at sample time.
+    pub tokens_in: u64,
+    /// Cumulative delivered tick results at sample time.
+    pub outputs: u64,
+    /// Cumulative rejects (admission + cluster) at sample time.
+    pub rejects: u64,
+}
+
+impl RateSample {
+    /// Build a sample from a cluster snapshot at `t_us`.
+    pub fn from_cluster(t_us: u64, m: &ClusterMetrics) -> Self {
+        Self {
+            t_us,
+            ticks: m.ticks,
+            tokens_in: m.tokens_in,
+            outputs: m.outputs,
+            rejects: m.admission_rejects + m.cluster_rejects,
+        }
+    }
+}
+
+/// Windowed rates: counter deltas against the oldest sample inside the
+/// window, divided by the actual span between the two samples.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Rates {
+    /// The actual span the deltas cover (zero when no prior sample).
+    pub window: Duration,
+    /// Batched ticks per second over the window.
+    pub ticks_per_sec: f64,
+    /// Accepted token vectors per second over the window.
+    pub tokens_per_sec: f64,
+    /// Delivered tick results per second over the window.
+    pub outputs_per_sec: f64,
+    /// Rejects per second over the window.
+    pub rejects_per_sec: f64,
+}
+
+/// Fixed-capacity ring of [`RateSample`]s; push is alloc-free after
+/// construction (overflow overwrites the oldest sample).
+#[derive(Debug)]
+pub struct SnapshotRing {
+    samples: Vec<RateSample>,
+    head: usize,
+}
+
+impl SnapshotRing {
+    /// Ring holding at most `capacity` samples.
+    pub fn new(capacity: usize) -> Self {
+        Self { samples: Vec::with_capacity(capacity.max(2)), head: 0 }
+    }
+
+    /// Record a sample (alloc-free; overwrites the oldest when full).
+    pub fn push(&mut self, s: RateSample) {
+        if self.samples.len() < self.samples.capacity() {
+            self.samples.push(s); // within reserved capacity: no realloc
+        } else {
+            self.samples[self.head] = s;
+            self.head = (self.head + 1) % self.samples.capacity();
+        }
+    }
+
+    /// Samples currently resident.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no samples are resident.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Rates for `now` against the oldest resident sample not older
+    /// than `window` (zero rates when no usable baseline exists).
+    pub fn rates_against(&self, now: &RateSample, window: Duration) -> Rates {
+        let window_us = window.as_micros() as u64;
+        let mut base: Option<&RateSample> = None;
+        for s in &self.samples {
+            if s.t_us >= now.t_us || now.t_us - s.t_us > window_us {
+                continue;
+            }
+            if base.map(|b| s.t_us < b.t_us).unwrap_or(true) {
+                base = Some(s);
+            }
+        }
+        let Some(b) = base else { return Rates::default() };
+        let dt = (now.t_us - b.t_us) as f64 / 1e6;
+        if dt <= 0.0 {
+            return Rates::default();
+        }
+        let per_sec = |n: u64, o: u64| n.saturating_sub(o) as f64 / dt;
+        Rates {
+            window: Duration::from_micros(now.t_us - b.t_us),
+            ticks_per_sec: per_sec(now.ticks, b.ticks),
+            tokens_per_sec: per_sec(now.tokens_in, b.tokens_in),
+            outputs_per_sec: per_sec(now.outputs, b.outputs),
+            rejects_per_sec: per_sec(now.rejects, b.rejects),
+        }
+    }
+}
+
+/// Growing Prometheus text buffer: `# HELP`/`# TYPE` headers + samples.
+struct Prom {
+    out: String,
+}
+
+impl Prom {
+    fn new() -> Self {
+        Self { out: String::with_capacity(8 << 10) }
+    }
+
+    fn header(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// One sample line; `labels` is the raw inside-braces text ("" = none).
+    fn sample(&mut self, name: &str, labels: &str, value: f64) {
+        if labels.is_empty() {
+            self.out.push_str(&format!("{name} {value}\n"));
+        } else {
+            self.out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+        }
+    }
+
+    fn counter(&mut self, name: &str, help: &str, v: u64) {
+        self.header(name, "counter", help);
+        self.sample(name, "", v as f64);
+    }
+
+    fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, "gauge", help);
+        self.sample(name, "", v);
+    }
+
+    /// Summary-style histogram exposition: p50/p90/p99 + sum + count.
+    /// `labels` ride on every line so one family can carry many series
+    /// (e.g. a `stage` label).
+    fn summary_series(&mut self, name: &str, labels: &str, h: &LatencyHisto) {
+        for (q, qs) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+            let ql = if labels.is_empty() {
+                format!("quantile=\"{qs}\"")
+            } else {
+                format!("{labels},quantile=\"{qs}\"")
+            };
+            self.sample(name, &ql, h.quantile(q).as_micros() as f64);
+        }
+        self.sample(&format!("{name}_sum"), labels, h.sum().as_micros() as f64);
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    fn summary(&mut self, name: &str, help: &str, h: &LatencyHisto) {
+        self.header(name, "summary", help);
+        self.summary_series(name, "", h);
+    }
+}
+
+/// Render the full cluster (+ optional net-layer) snapshot in the
+/// Prometheus text exposition format. Bumps the snapshot sequence and
+/// feeds the windowed-rate ring when the level admits counters.
+pub fn render_prometheus(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMetrics>) -> String {
+    let mut p = Prom::new();
+
+    if obs.level() >= ObsLevel::Counters {
+        p.gauge("deepcot_uptime_seconds", "Seconds since engine boot", m.uptime.as_secs_f64());
+        p.gauge(
+            "deepcot_boot_timestamp_seconds",
+            "Unix time the engine booted",
+            m.boot_unix_ms as f64 / 1e3,
+        );
+        p.counter("deepcot_snapshot_seq", "Monotonic snapshot sequence number", obs.next_seq());
+    }
+
+    if !m.kernel_dispatch.is_empty() {
+        p.header("deepcot_engine_info", "gauge", "Engine build/runtime facts as labels");
+        p.sample("deepcot_engine_info", &format!("dispatch=\"{}\"", m.kernel_dispatch), 1.0);
+    }
+    p.gauge("deepcot_shards", "Worker shard count", m.per_shard.len() as f64);
+
+    p.counter("deepcot_ticks_total", "Batched ticks executed", m.ticks);
+    p.counter("deepcot_tokens_in_total", "Token vectors accepted by batchers", m.tokens_in);
+    p.counter("deepcot_outputs_total", "Tick results delivered to stream owners", m.outputs);
+    p.counter("deepcot_streams_opened_total", "Streams admitted", m.streams_opened);
+    p.counter("deepcot_streams_closed_total", "Streams explicitly closed", m.streams_closed);
+    p.counter("deepcot_streams_evicted_total", "Idle streams reclaimed", m.streams_evicted);
+    p.counter("deepcot_admission_rejects_total", "Shard admission rejects", m.admission_rejects);
+    p.counter("deepcot_cluster_rejects_total", "Opens rejected by every shard", m.cluster_rejects);
+    p.counter("deepcot_placed_primary_total", "Streams on their preferred shard", m.placed_primary);
+    p.counter("deepcot_placed_fallback_total", "Streams on a fallback shard", m.placed_fallback);
+    p.counter("deepcot_migrations_attempted_total", "Migrations requested", m.migrations_attempted);
+    p.counter("deepcot_migrations_completed_total", "Migrations landed", m.migrations_completed);
+    p.counter("deepcot_migrations_aborted_total", "Live migrations failed", m.migrations_aborted);
+    p.counter("deepcot_slow_ticks_total", "Ticks over the slow-tick threshold", m.slow_ticks);
+
+    // per-shard breakdown: every series a scraper can sum back to the
+    // aggregate above (pinned in tests/obs.rs)
+    p.header("deepcot_shard_ticks_total", "counter", "Per-shard tick counts");
+    for (i, s) in m.per_shard.iter().enumerate() {
+        p.sample("deepcot_shard_ticks_total", &format!("shard=\"{i}\""), s.ticks as f64);
+    }
+    let shard_series: [(&str, fn(&crate::coordinator::metrics::EngineMetrics) -> u64); 8] = [
+        ("deepcot_shard_tokens_in_total", |s| s.tokens_in),
+        ("deepcot_shard_outputs_total", |s| s.outputs),
+        ("deepcot_shard_streams_opened_total", |s| s.streams_opened),
+        ("deepcot_shard_streams_closed_total", |s| s.streams_closed),
+        ("deepcot_shard_streams_evicted_total", |s| s.streams_evicted),
+        ("deepcot_shard_admission_rejects_total", |s| s.admission_rejects),
+        ("deepcot_shard_migrations_in_total", |s| s.migrations_in),
+        ("deepcot_shard_migrations_out_total", |s| s.migrations_out),
+    ];
+    for (name, field) in shard_series {
+        p.header(name, "counter", "Per-shard counter");
+        for (i, s) in m.per_shard.iter().enumerate() {
+            p.sample(name, &format!("shard=\"{i}\""), field(s) as f64);
+        }
+    }
+
+    p.summary("deepcot_tick_latency_us", "Backend step latency per tick (µs)", &m.tick_latency);
+    p.summary("deepcot_queue_latency_us", "Batcher queue wait per token (µs)", &m.queue_latency);
+    p.summary(
+        "deepcot_quiesce_latency_us",
+        "Stream-unavailability window per completed migration (µs)",
+        &m.quiesce_latency,
+    );
+
+    if obs.spans_on() {
+        let mut stages = m.stage_spans.clone();
+        if let Some(n) = net {
+            stages.merge(&n.spans);
+        }
+        p.header(
+            "deepcot_stage_latency_us",
+            "summary",
+            "Pipeline stage latency breakdown (µs); engine stages partition pipeline_total",
+        );
+        for (stage, h) in stages.iter() {
+            p.summary_series("deepcot_stage_latency_us", &format!("stage=\"{}\"", stage.name()), h);
+        }
+    }
+
+    if obs.level() >= ObsLevel::Counters {
+        let sample = RateSample::from_cluster(obs.now_us(), m);
+        let r = obs.observe(sample, RATE_WINDOW);
+        let w = format!("window=\"{}s\"", RATE_WINDOW.as_secs());
+        p.header("deepcot_ticks_per_second", "gauge", "Tick rate over the trailing window");
+        p.sample("deepcot_ticks_per_second", &w, r.ticks_per_sec);
+        p.header("deepcot_tokens_per_second", "gauge", "Token rate over the trailing window");
+        p.sample("deepcot_tokens_per_second", &w, r.tokens_per_sec);
+        p.header("deepcot_rejects_per_second", "gauge", "Reject rate over the trailing window");
+        p.sample("deepcot_rejects_per_second", &w, r.rejects_per_sec);
+    }
+
+    if obs.level() >= ObsLevel::Journal {
+        let js = obs.journal().stats();
+        p.counter("deepcot_journal_events_total", "Events accepted into the journal", js.recorded);
+        p.counter("deepcot_journal_dropped_total", "Events overwritten", js.dropped_oldest);
+        p.counter("deepcot_journal_suppressed_total", "Events rate-gated", js.suppressed);
+    }
+
+    if let Some(n) = net {
+        let active = n.connections_active as f64;
+        p.gauge("deepcot_net_connections_active", "Connections serving now", active);
+        p.counter(
+            "deepcot_net_connections_accepted_total",
+            "Connections accepted",
+            n.connections_accepted,
+        );
+        p.counter("deepcot_net_frames_in_total", "Frames read off sockets", n.frames_in);
+        p.counter("deepcot_net_frames_out_total", "Frames written to sockets", n.frames_out);
+        p.counter("deepcot_net_protocol_errors_total", "Bad frames answered", n.protocol_errors);
+        p.counter("deepcot_net_streams_opened_total", "Wire streams opened", n.streams_opened);
+        p.counter(
+            "deepcot_net_shutdown_requests_total",
+            "SHUTDOWN frames honored",
+            n.shutdown_requests,
+        );
+        if obs.level() >= ObsLevel::Counters {
+            p.gauge(
+                "deepcot_net_uptime_seconds",
+                "Seconds since the net front door started",
+                n.uptime.as_secs_f64(),
+            );
+            p.gauge(
+                "deepcot_net_boot_timestamp_seconds",
+                "Unix time the net front door started",
+                n.boot_unix_ms as f64 / 1e3,
+            );
+        }
+    }
+
+    p.out
+}
+
+fn histo_json(h: &LatencyHisto) -> crate::util::json::Json {
+    use crate::util::json::{num, obj};
+    obj(vec![
+        ("count", num(h.count() as f64)),
+        ("p50_us", num(h.quantile(0.5).as_micros() as f64)),
+        ("p90_us", num(h.quantile(0.9).as_micros() as f64)),
+        ("p99_us", num(h.quantile(0.99).as_micros() as f64)),
+        ("max_us", num(h.max().as_micros() as f64)),
+        ("sum_us", num(h.sum().as_micros() as f64)),
+    ])
+}
+
+/// Render the same snapshot as machine-readable JSON (served on
+/// `/metrics.json`). Bumps the snapshot sequence and feeds the rate
+/// ring exactly like the Prometheus renderer.
+pub fn render_json(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMetrics>) -> String {
+    use crate::util::json::{num, obj, Json};
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("obs_level", Json::Str(obs.level().to_string())),
+        ("shards", num(m.per_shard.len() as f64)),
+        ("kernel_dispatch", Json::Str(m.kernel_dispatch.clone())),
+        ("ticks", num(m.ticks as f64)),
+        ("tokens_in", num(m.tokens_in as f64)),
+        ("outputs", num(m.outputs as f64)),
+        ("streams_opened", num(m.streams_opened as f64)),
+        ("streams_closed", num(m.streams_closed as f64)),
+        ("streams_evicted", num(m.streams_evicted as f64)),
+        ("admission_rejects", num(m.admission_rejects as f64)),
+        ("cluster_rejects", num(m.cluster_rejects as f64)),
+        ("placed_primary", num(m.placed_primary as f64)),
+        ("placed_fallback", num(m.placed_fallback as f64)),
+        ("migrations_attempted", num(m.migrations_attempted as f64)),
+        ("migrations_completed", num(m.migrations_completed as f64)),
+        ("migrations_aborted", num(m.migrations_aborted as f64)),
+        ("slow_ticks", num(m.slow_ticks as f64)),
+        ("tick_latency", histo_json(&m.tick_latency)),
+        ("queue_latency", histo_json(&m.queue_latency)),
+        ("quiesce_latency", histo_json(&m.quiesce_latency)),
+    ];
+    if obs.level() >= ObsLevel::Counters {
+        fields.push(("seq", num(obs.next_seq() as f64)));
+        fields.push(("uptime_seconds", num(m.uptime.as_secs_f64())));
+        fields.push(("boot_unix_ms", num(m.boot_unix_ms as f64)));
+        let sample = RateSample::from_cluster(obs.now_us(), m);
+        let r = obs.observe(sample, RATE_WINDOW);
+        fields.push((
+            "rates",
+            obj(vec![
+                ("window_seconds", num(r.window.as_secs_f64())),
+                ("ticks_per_sec", num(r.ticks_per_sec)),
+                ("tokens_per_sec", num(r.tokens_per_sec)),
+                ("outputs_per_sec", num(r.outputs_per_sec)),
+                ("rejects_per_sec", num(r.rejects_per_sec)),
+            ]),
+        ));
+    }
+    if obs.spans_on() {
+        let mut stages = m.stage_spans.clone();
+        if let Some(n) = net {
+            stages.merge(&n.spans);
+        }
+        let entries = stages.iter().map(|(s, h)| (s.name(), histo_json(h))).collect::<Vec<_>>();
+        fields.push(("stages", obj(entries)));
+    }
+    if obs.level() >= ObsLevel::Journal {
+        let js = obs.journal().stats();
+        fields.push((
+            "journal",
+            obj(vec![
+                ("events", num(js.recorded as f64)),
+                ("resident", num(js.len as f64)),
+                ("dropped", num(js.dropped_oldest as f64)),
+                ("suppressed", num(js.suppressed as f64)),
+            ]),
+        ));
+    }
+    if let Some(n) = net {
+        fields.push((
+            "net",
+            obj(vec![
+                ("connections_active", num(n.connections_active as f64)),
+                ("connections_accepted", num(n.connections_accepted as f64)),
+                ("frames_in", num(n.frames_in as f64)),
+                ("frames_out", num(n.frames_out as f64)),
+                ("protocol_errors", num(n.protocol_errors as f64)),
+                ("streams_opened", num(n.streams_opened as f64)),
+                ("shutdown_requests", num(n.shutdown_requests as f64)),
+                ("uptime_seconds", num(n.uptime.as_secs_f64())),
+                ("boot_unix_ms", num(n.boot_unix_ms as f64)),
+            ]),
+        ));
+    }
+    let shard_objs = m
+        .per_shard
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("ticks", num(s.ticks as f64)),
+                ("tokens_in", num(s.tokens_in as f64)),
+                ("outputs", num(s.outputs as f64)),
+                ("streams_opened", num(s.streams_opened as f64)),
+                ("streams_closed", num(s.streams_closed as f64)),
+                ("streams_evicted", num(s.streams_evicted as f64)),
+                ("admission_rejects", num(s.admission_rejects as f64)),
+                ("migrations_in", num(s.migrations_in as f64)),
+                ("migrations_out", num(s.migrations_out as f64)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    fields.push(("per_shard", Json::Arr(shard_objs)));
+    obj(fields).to_string()
+}
+
+/// One journal event as a single-line JSON object (shutdown dumps and
+/// `/journal` drains share this shape).
+pub fn event_json(e: &Event) -> String {
+    let mut s = format!(
+        "{{\"seq\":{},\"t_us\":{},\"kind\":\"{}\",\"stream\":{},\"shard\":{},\"aux\":{}",
+        e.seq,
+        e.t_us,
+        e.kind.name(),
+        e.stream,
+        e.shard,
+        e.aux
+    );
+    if e.kind == EventKind::DispatchResolved {
+        s.push_str(&format!(",\"dispatch\":\"{}\"", EventKind::dispatch_aux_name(e.aux)));
+    }
+    s.push('}');
+    s
+}
+
+/// Drain the journal into a JSON document: health counters + every
+/// resident event, oldest first. Draining consumes the events.
+pub fn render_journal(obs: &ObsHandle) -> String {
+    let stats = obs.journal().stats();
+    let events = obs.journal().drain();
+    let mut s = format!(
+        "{{\"recorded\":{},\"dropped\":{},\"suppressed\":{},\"events\":[",
+        stats.recorded, stats.dropped_oldest, stats.suppressed
+    );
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&event_json(e));
+    }
+    s.push_str("]}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_us: u64, ticks: u64) -> RateSample {
+        RateSample { t_us, ticks, tokens_in: ticks * 4, outputs: ticks * 4, rejects: 0 }
+    }
+
+    #[test]
+    fn rates_use_oldest_in_window() {
+        let mut ring = SnapshotRing::new(8);
+        ring.push(sample(0, 0));
+        ring.push(sample(1_000_000, 100));
+        // now = t 2s: baseline is t 0 (inside a 10s window) → 100 ticks / 2s
+        let r = ring.rates_against(&sample(2_000_000, 200), Duration::from_secs(10));
+        assert_eq!(r.ticks_per_sec, 100.0);
+        assert_eq!(r.tokens_per_sec, 400.0);
+        assert_eq!(r.window, Duration::from_secs(2));
+        // a 1.5s window excludes t 0: baseline is t 1s → 100 ticks / 1s
+        let r = ring.rates_against(&sample(2_000_000, 200), Duration::from_millis(1500));
+        assert_eq!(r.ticks_per_sec, 100.0);
+        assert_eq!(r.window, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn rates_zero_without_baseline() {
+        let ring = SnapshotRing::new(4);
+        let r = ring.rates_against(&sample(5_000_000, 10), Duration::from_secs(10));
+        assert_eq!(r, Rates::default());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut ring = SnapshotRing::new(4);
+        for i in 0..10u64 {
+            ring.push(sample(i * 1_000_000, i));
+        }
+        assert_eq!(ring.len(), 4);
+        // the oldest resident sample is t=6s; within a 100s window the
+        // baseline for t=10s is that sample
+        let r = ring.rates_against(&sample(10_000_000, 100), Duration::from_secs(100));
+        assert_eq!(r.window, Duration::from_secs(4));
+    }
+
+    #[test]
+    fn event_json_shapes() {
+        let e = Event {
+            seq: 3,
+            t_us: 77,
+            kind: EventKind::StreamOpen,
+            stream: 9,
+            shard: 1,
+            aux: 0,
+        };
+        assert_eq!(
+            event_json(&e),
+            "{\"seq\":3,\"t_us\":77,\"kind\":\"stream_open\",\"stream\":9,\"shard\":1,\"aux\":0}"
+        );
+        let d = Event { kind: EventKind::DispatchResolved, aux: 1, ..e };
+        assert!(event_json(&d).contains("\"dispatch\":\"avx2\""));
+    }
+}

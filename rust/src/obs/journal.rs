@@ -1,0 +1,328 @@
+//! Structured event journal: a bounded ring of typed, fixed-size
+//! serving events (stream lifecycle, migrations, admission rejects,
+//! protocol errors, slow ticks, dispatch resolution).
+//!
+//! The hot-path contract is the same as the rest of the serving stack:
+//! `push` takes one short mutex hold, never blocks on a full ring
+//! (overflow overwrites the oldest event), and never allocates — the
+//! ring is preallocated at construction and [`Event`] is `Copy` with
+//! no owned strings. Per-event-type rate gates (a rolling one-second
+//! window) keep a pathological event storm from drowning the rest of
+//! the journal. Draining (the only allocating operation) happens on
+//! the cold exposition path.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Typed journal event kinds.
+///
+/// The discriminant doubles as the index into the per-kind rate-gate
+/// and suppression tables; keep [`EventKind::ALL`] in declaration
+/// order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A stream was admitted on a shard (fresh open).
+    StreamOpen = 0,
+    /// A bound stream was explicitly closed.
+    StreamClose = 1,
+    /// An idle stream was reclaimed by admission.
+    StreamEvict = 2,
+    /// The front door started a live migration (`aux` = target shard).
+    MigrationAttempt = 3,
+    /// A migration landed on its target (`aux` = quiesce time, µs).
+    MigrationComplete = 4,
+    /// A migration failed; the stream stayed on (or returned to) its
+    /// source shard where possible.
+    MigrationAbort = 5,
+    /// A shard rejected an open or import at capacity.
+    AdmissionReject = 6,
+    /// The net layer hit a malformed or unexpected frame (`aux` = the
+    /// offending opcode when known).
+    ProtoError = 7,
+    /// A tick's end-to-end pipeline time exceeded the configured
+    /// threshold (`aux` = observed time, µs).
+    SlowTick = 8,
+    /// A shard backend resolved its kernel dispatch path at boot
+    /// (`aux`: 0 = scalar, 1 = avx2, 2 = neon, 3 = other).
+    DispatchResolved = 9,
+}
+
+impl EventKind {
+    /// Every kind, in storage order.
+    pub const ALL: [EventKind; 10] = [
+        EventKind::StreamOpen,
+        EventKind::StreamClose,
+        EventKind::StreamEvict,
+        EventKind::MigrationAttempt,
+        EventKind::MigrationComplete,
+        EventKind::MigrationAbort,
+        EventKind::AdmissionReject,
+        EventKind::ProtoError,
+        EventKind::SlowTick,
+        EventKind::DispatchResolved,
+    ];
+
+    /// Encode a kernel-dispatch path name as `DispatchResolved` aux.
+    pub fn dispatch_aux(path: &str) -> u64 {
+        match path {
+            "scalar" => 0,
+            "avx2" => 1,
+            "neon" => 2,
+            _ => 3,
+        }
+    }
+
+    /// Decode a `DispatchResolved` aux back to its path name.
+    pub fn dispatch_aux_name(aux: u64) -> &'static str {
+        match aux {
+            0 => "scalar",
+            1 => "avx2",
+            2 => "neon",
+            _ => "other",
+        }
+    }
+
+    /// Stable snake_case name used in exposition.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::StreamOpen => "stream_open",
+            EventKind::StreamClose => "stream_close",
+            EventKind::StreamEvict => "stream_evict",
+            EventKind::MigrationAttempt => "migration_attempt",
+            EventKind::MigrationComplete => "migration_complete",
+            EventKind::MigrationAbort => "migration_abort",
+            EventKind::AdmissionReject => "admission_reject",
+            EventKind::ProtoError => "proto_error",
+            EventKind::SlowTick => "slow_tick",
+            EventKind::DispatchResolved => "dispatch_resolved",
+        }
+    }
+}
+
+/// One journal entry: fixed-size, `Copy`, no owned data — pushing one
+/// can never allocate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Monotonic sequence number (gaps reveal dropped-oldest events).
+    pub seq: u64,
+    /// Microseconds since journal boot.
+    pub t_us: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Stream id, or 0 when not stream-scoped.
+    pub stream: u64,
+    /// Shard id, or -1 for front-door / net-layer events.
+    pub shard: i64,
+    /// Kind-specific payload (see [`EventKind`] docs).
+    pub aux: u64,
+}
+
+/// Rolling one-second admission window for one event kind.
+#[derive(Debug, Clone, Copy, Default)]
+struct RateGate {
+    window_start_us: u64,
+    in_window: u32,
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// Ring storage; grows (without reallocating past `with_capacity`)
+    /// until full, then overwrites at `head`.
+    ring: Vec<Event>,
+    /// Oldest element once the ring is full; 0 while still filling.
+    head: usize,
+    next_seq: u64,
+    recorded: u64,
+    dropped_oldest: u64,
+    suppressed: [u64; 10],
+    gates: [RateGate; 10],
+    max_per_sec: u32,
+}
+
+/// Bounded, lock-cheap, alloc-free-on-push event journal.
+#[derive(Debug)]
+pub struct Journal {
+    boot: Instant,
+    inner: Mutex<Inner>,
+}
+
+/// Aggregate journal health counters (cheap snapshot, no drain).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JournalStats {
+    /// Events accepted into the ring since boot.
+    pub recorded: u64,
+    /// Events overwritten by newer ones before being drained.
+    pub dropped_oldest: u64,
+    /// Events refused by per-kind rate gates.
+    pub suppressed: u64,
+    /// Events currently resident in the ring.
+    pub len: u64,
+}
+
+impl Default for Journal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Journal {
+    /// Default sizing: 1024-event ring, 256 events/sec per kind.
+    pub fn new() -> Self {
+        Self::with_limits(1024, 256)
+    }
+
+    /// Journal with an explicit ring capacity and per-kind rate limit.
+    pub fn with_limits(capacity: usize, max_per_sec: u32) -> Self {
+        Self {
+            boot: Instant::now(),
+            inner: Mutex::new(Inner {
+                ring: Vec::with_capacity(capacity.max(1)),
+                head: 0,
+                next_seq: 0,
+                recorded: 0,
+                dropped_oldest: 0,
+                suppressed: [0; 10],
+                gates: [RateGate::default(); 10],
+                max_per_sec: max_per_sec.max(1),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Record one event. Never blocks on a full ring (the oldest event
+    /// is overwritten) and never allocates; over-rate events for a
+    /// kind are counted as suppressed and dropped.
+    pub fn push(&self, kind: EventKind, stream: u64, shard: i64, aux: u64) {
+        let t_us = self.boot.elapsed().as_micros() as u64;
+        let mut g = self.lock();
+        let max = g.max_per_sec;
+        let gate = &mut g.gates[kind as usize];
+        if t_us.saturating_sub(gate.window_start_us) >= 1_000_000 {
+            gate.window_start_us = t_us;
+            gate.in_window = 0;
+        }
+        if gate.in_window >= max {
+            g.suppressed[kind as usize] += 1;
+            return;
+        }
+        gate.in_window += 1;
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        g.recorded += 1;
+        let ev = Event { seq, t_us, kind, stream, shard, aux };
+        if g.ring.len() < g.ring.capacity() {
+            g.ring.push(ev); // within reserved capacity: no realloc
+        } else {
+            let head = g.head;
+            g.ring[head] = ev;
+            g.head = (head + 1) % g.ring.capacity();
+            g.dropped_oldest += 1;
+        }
+    }
+
+    /// Drain every resident event, oldest first, and empty the ring
+    /// (capacity retained). Cold path: allocates the returned Vec.
+    pub fn drain(&self) -> Vec<Event> {
+        let mut g = self.lock();
+        let n = g.ring.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(g.ring[(g.head + i) % n]);
+        }
+        g.ring.clear();
+        g.head = 0;
+        out
+    }
+
+    /// Aggregate health counters without draining.
+    pub fn stats(&self) -> JournalStats {
+        let g = self.lock();
+        JournalStats {
+            recorded: g.recorded,
+            dropped_oldest: g.dropped_oldest,
+            suppressed: g.suppressed.iter().sum(),
+            len: g.ring.len() as u64,
+        }
+    }
+
+    /// Events currently resident in the ring.
+    pub fn len(&self) -> usize {
+        self.lock().ring.len()
+    }
+
+    /// True when no events are resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity (events resident at most).
+    pub fn capacity(&self) -> usize {
+        self.lock().ring.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_indices_match_all_order() {
+        for (i, k) in EventKind::ALL.iter().enumerate() {
+            assert_eq!(*k as usize, i, "EventKind::ALL out of declaration order at {i}");
+        }
+    }
+
+    #[test]
+    fn push_and_drain_ordered() {
+        let j = Journal::with_limits(16, 1_000_000);
+        j.push(EventKind::StreamOpen, 1, 0, 0);
+        j.push(EventKind::StreamClose, 1, 0, 0);
+        let evs = j.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, EventKind::StreamOpen);
+        assert_eq!(evs[1].kind, EventKind::StreamClose);
+        assert!(evs[0].seq < evs[1].seq);
+        assert!(j.is_empty());
+        // capacity survives the drain
+        assert_eq!(j.capacity(), 16);
+    }
+
+    #[test]
+    fn overflow_drops_oldest() {
+        let j = Journal::with_limits(8, 1_000_000);
+        for i in 0..100u64 {
+            j.push(EventKind::SlowTick, i, 0, 0);
+        }
+        let stats = j.stats();
+        assert_eq!(stats.recorded, 100);
+        assert_eq!(stats.dropped_oldest, 92);
+        assert_eq!(stats.len, 8);
+        let evs = j.drain();
+        assert_eq!(evs.len(), 8);
+        // the survivors are exactly the newest 8, oldest first
+        for (i, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.seq, 92 + i as u64);
+            assert_eq!(ev.stream, 92 + i as u64);
+        }
+    }
+
+    #[test]
+    fn rate_gate_suppresses_storms() {
+        let j = Journal::with_limits(1024, 5);
+        for _ in 0..100 {
+            j.push(EventKind::ProtoError, 0, -1, 0);
+        }
+        let stats = j.stats();
+        // a 1s window can roll over mid-loop at most once in practice,
+        // so assert the gate bit without pinning the exact split
+        assert!(stats.suppressed > 0, "no suppression under a 20x-over-rate storm");
+        assert!(stats.recorded < 100);
+        assert_eq!(stats.recorded + stats.suppressed, 100);
+        // other kinds are unaffected by this kind's gate
+        j.push(EventKind::StreamOpen, 9, 0, 0);
+        assert!(j.drain().iter().any(|e| e.kind == EventKind::StreamOpen));
+    }
+}

@@ -1,0 +1,240 @@
+//! Production observability: tick-pipeline stage spans, a
+//! Prometheus-style exposition layer, and a structured event journal.
+//!
+//! The pieces:
+//!
+//! * [`span`] — named pipeline stages ([`span::Stage`]) timed into
+//!   per-stage latency histograms ([`span::StageSpans`]) carried in
+//!   `EngineMetrics`, so queueing delay, kernel time, and delivery
+//!   time are separate cuts instead of one opaque tick latency.
+//! * [`journal`] — a bounded, alloc-free-on-push ring of typed events
+//!   ([`journal::EventKind`]): stream lifecycle, migrations, admission
+//!   rejects, protocol errors, slow ticks, dispatch resolution.
+//! * [`expo`] — renderers for the Prometheus text format and a JSON
+//!   snapshot, with monotonic snapshot sequence numbers and windowed
+//!   rates (ticks/s, tokens/s, rejects/s) off a ring of timestamped
+//!   samples.
+//! * [`server`] — a std-only HTTP/1.0 responder serving `/metrics`,
+//!   `/metrics.json`, and `/journal` on `--metrics-listen`; the same
+//!   text also answers the `METRICS_PROM` wire frame.
+//!
+//! Cost is governed by one knob, [`ObsLevel`] (`off | counters |
+//! spans | journal`, config + `--obs` CLI + `DEEPCOT_OBS` env): the
+//! pre-existing counters and the tick/queue histograms are always on;
+//! `off` reduces every *new* instrumentation site to a branch, and
+//! each higher level adds the next layer. None of it may perturb
+//! results — every bitwise pin in the test suite holds at every
+//! level, and steady-state ticks stay allocation-free with spans on.
+
+pub mod expo;
+pub mod journal;
+pub mod server;
+pub mod span;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant, SystemTime};
+
+use anyhow::Result;
+
+use crate::obs::expo::{RateSample, Rates, SnapshotRing};
+use crate::obs::journal::{EventKind, Journal};
+
+/// How much observability the serving stack records.
+///
+/// Levels are cumulative (`Ord`): `spans` includes everything
+/// `counters` does, `journal` includes everything `spans` does. The
+/// legacy counters and tick/queue histograms predate the knob and are
+/// always on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum ObsLevel {
+    /// New instrumentation compiled down to a branch: no uptime/rate
+    /// snapshots, no stage spans, no journal.
+    Off,
+    /// Uptime, boot timestamp, snapshot sequence numbers, windowed
+    /// rates.
+    Counters,
+    /// Plus per-stage pipeline latency spans.
+    Spans,
+    /// Plus the structured event journal (the default: events are
+    /// rare, rate-gated, and bounded).
+    #[default]
+    Journal,
+}
+
+impl ObsLevel {
+    /// Environment variable consulted by [`ObsLevel::default_from_env`].
+    pub const ENV: &'static str = "DEEPCOT_OBS";
+
+    /// The default level, overridable via `DEEPCOT_OBS` (an invalid
+    /// value warns and keeps the default rather than failing boot).
+    pub fn default_from_env() -> Self {
+        match std::env::var(Self::ENV) {
+            Ok(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("deepcot obs: ignoring {}={v:?}: {e}", Self::ENV);
+                Self::Journal
+            }),
+            Err(_) => Self::Journal,
+        }
+    }
+}
+
+impl std::str::FromStr for ObsLevel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(Self::Off),
+            "counters" => Ok(Self::Counters),
+            "spans" => Ok(Self::Spans),
+            "journal" => Ok(Self::Journal),
+            other => anyhow::bail!("unknown obs level {other:?} (want off|counters|spans|journal)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ObsLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::Off => "off",
+            Self::Counters => "counters",
+            Self::Spans => "spans",
+            Self::Journal => "journal",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Shared observability state for one engine: the level knob, boot
+/// clocks, the event journal, the snapshot sequence counter, and the
+/// windowed-rate sample ring. Created once by `ShardedEngine::spawn`,
+/// cloned (cheaply — everything shared is behind an `Arc`) into every
+/// shard worker and the net layer.
+#[derive(Debug, Clone)]
+pub struct ObsHandle {
+    level: ObsLevel,
+    boot: Instant,
+    boot_unix_ms: u64,
+    journal: Arc<Journal>,
+    seq: Arc<AtomicU64>,
+    ring: Arc<Mutex<SnapshotRing>>,
+}
+
+impl ObsHandle {
+    /// Fresh observability state at the given level, booted now.
+    pub fn new(level: ObsLevel) -> Self {
+        let boot_unix_ms = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        Self {
+            level,
+            boot: Instant::now(),
+            boot_unix_ms,
+            journal: Arc::new(Journal::new()),
+            seq: Arc::new(AtomicU64::new(0)),
+            ring: Arc::new(Mutex::new(SnapshotRing::new(64))),
+        }
+    }
+
+    /// The configured observability level.
+    pub fn level(&self) -> ObsLevel {
+        self.level
+    }
+
+    /// True when stage spans should be recorded (`spans` or above).
+    pub fn spans_on(&self) -> bool {
+        self.level >= ObsLevel::Spans
+    }
+
+    /// Time since this handle was created.
+    pub fn uptime(&self) -> Duration {
+        self.boot.elapsed()
+    }
+
+    /// Microseconds since boot (the journal/ring timebase).
+    pub fn now_us(&self) -> u64 {
+        self.boot.elapsed().as_micros() as u64
+    }
+
+    /// Wall-clock boot instant, milliseconds since the Unix epoch.
+    pub fn boot_unix_ms(&self) -> u64 {
+        self.boot_unix_ms
+    }
+
+    /// The shared event journal (push directly for pre-gated sites;
+    /// prefer [`ObsHandle::event`] which branches on the level).
+    pub fn journal(&self) -> &Journal {
+        &self.journal
+    }
+
+    /// Record a journal event iff the level admits the journal — the
+    /// one-line instrumentation call whose `off` cost is this branch.
+    pub fn event(&self, kind: EventKind, stream: u64, shard: i64, aux: u64) {
+        if self.level >= ObsLevel::Journal {
+            self.journal.push(kind, stream, shard, aux);
+        }
+    }
+
+    /// Next monotonic snapshot sequence number (each rendered snapshot
+    /// consumes one, so a scraper can detect reordering or gaps).
+    pub fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn ring(&self) -> MutexGuard<'_, SnapshotRing> {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Push a timestamped counter sample and read the windowed rates
+    /// back (deltas against the oldest sample inside `window`).
+    pub fn observe(&self, sample: RateSample, window: Duration) -> Rates {
+        let mut ring = self.ring();
+        let rates = ring.rates_against(&sample, window);
+        ring.push(sample);
+        rates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(ObsLevel::Off < ObsLevel::Counters);
+        assert!(ObsLevel::Counters < ObsLevel::Spans);
+        assert!(ObsLevel::Spans < ObsLevel::Journal);
+        for (s, want) in [
+            ("off", ObsLevel::Off),
+            ("counters", ObsLevel::Counters),
+            ("spans", ObsLevel::Spans),
+            ("journal", ObsLevel::Journal),
+        ] {
+            assert_eq!(s.parse::<ObsLevel>().unwrap(), want);
+            assert_eq!(want.to_string(), s);
+        }
+        assert!("verbose".parse::<ObsLevel>().is_err());
+        assert_eq!(ObsLevel::default(), ObsLevel::Journal);
+    }
+
+    #[test]
+    fn handle_gates_journal_on_level() {
+        let off = ObsHandle::new(ObsLevel::Spans);
+        off.event(EventKind::StreamOpen, 1, 0, 0);
+        assert!(off.journal().is_empty(), "spans level must not journal");
+        let on = ObsHandle::new(ObsLevel::Journal);
+        on.event(EventKind::StreamOpen, 1, 0, 0);
+        assert_eq!(on.journal().len(), 1);
+        assert!(on.spans_on());
+        assert!(!ObsHandle::new(ObsLevel::Counters).spans_on());
+    }
+
+    #[test]
+    fn seq_is_monotonic() {
+        let h = ObsHandle::new(ObsLevel::Counters);
+        let a = h.next_seq();
+        let b = h.next_seq();
+        assert!(b > a);
+    }
+}

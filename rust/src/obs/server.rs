@@ -1,0 +1,191 @@
+//! The metrics endpoint: a deliberately tiny HTTP/1.0 text responder
+//! (std-only, like the rest of the stack) bound on `--metrics-listen`.
+//!
+//! Routes:
+//!
+//! * `GET /metrics` — Prometheus text format
+//!   (`text/plain; version=0.0.4`)
+//! * `GET /metrics.json` — the JSON snapshot (`application/json`)
+//! * `GET /journal` — drain the event journal as JSON (consumes the
+//!   drained events)
+//! * `GET /` — a short plain-text index of the above
+//!
+//! Scrapes are rare and tiny, so connections are handled serially on
+//! one acceptor thread with a short read timeout — no pool, no
+//! keep-alive (`Connection: close`, HTTP/1.0 semantics). Rendering is
+//! delegated to a caller-supplied closure so the endpoint composes
+//! over any engine + net handle pair without this module knowing
+//! their types.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Which rendering a request resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricsFormat {
+    /// Prometheus text exposition (`/metrics`).
+    Prometheus,
+    /// JSON snapshot (`/metrics.json`).
+    Json,
+    /// Journal drain (`/journal`).
+    JournalDrain,
+}
+
+/// The running metrics endpoint. Start with [`MetricsServer::start`];
+/// stops on drop (or explicitly via [`MetricsServer::stop`]).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stopping: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve scrapes, rendering
+    /// each through `render`.
+    pub fn start<A, F>(addr: A, render: F) -> io::Result<MetricsServer>
+    where
+        A: ToSocketAddrs,
+        F: Fn(MetricsFormat) -> String + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stopping = Arc::new(AtomicBool::new(false));
+        let acceptor = {
+            let stopping = Arc::clone(&stopping);
+            std::thread::Builder::new().name("deepcot-obs-http".into()).spawn(move || {
+                loop {
+                    let sock = match listener.accept() {
+                        Ok((sock, _peer)) => sock,
+                        Err(_) if stopping.load(Ordering::SeqCst) => return,
+                        Err(_) => {
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    if stopping.load(Ordering::SeqCst) {
+                        return; // the wake-up connection
+                    }
+                    serve_one(sock, &render);
+                }
+            })?
+        };
+        Ok(MetricsServer { addr, stopping, acceptor: Some(acceptor) })
+    }
+
+    /// The address the endpoint actually listens on (resolves `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the acceptor thread.
+    pub fn stop(&mut self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // wake the acceptor out of accept(); it sees the flag and exits
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Answer one scrape: read the request head, route on the request
+/// line, write one response, close.
+fn serve_one<F: Fn(MetricsFormat) -> String>(mut sock: TcpStream, render: &F) {
+    let _ = sock.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut buf = [0u8; 1024];
+    let n = match sock.read(&mut buf) {
+        Ok(0) | Err(_) => return,
+        Ok(n) => n,
+    };
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let mut words = head.split_whitespace();
+    let (method, path) = (words.next().unwrap_or(""), words.next().unwrap_or(""));
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain; charset=utf-8", "GET only\n".to_string())
+    } else {
+        match path {
+            "/metrics" => (
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                render(MetricsFormat::Prometheus),
+            ),
+            "/metrics.json" => ("200 OK", "application/json", render(MetricsFormat::Json)),
+            "/journal" => ("200 OK", "application/json", render(MetricsFormat::JournalDrain)),
+            "/" => (
+                "200 OK",
+                "text/plain; charset=utf-8",
+                "deepcot metrics endpoint\n/metrics\n/metrics.json\n/journal\n".to_string(),
+            ),
+            _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+        }
+    };
+    let _ = write!(
+        sock,
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = sock.write_all(body.as_bytes());
+    let _ = sock.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut sock = TcpStream::connect(addr).expect("connect");
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(sock, "GET {path} HTTP/1.0\r\n\r\n").unwrap();
+        let mut out = String::new();
+        sock.read_to_string(&mut out).expect("read response");
+        out
+    }
+
+    #[test]
+    fn routes_and_statuses() {
+        let mut srv = MetricsServer::start("127.0.0.1:0", |f| match f {
+            MetricsFormat::Prometheus => "deepcot_test_total 1\n".to_string(),
+            MetricsFormat::Json => "{\"ok\":true}".to_string(),
+            MetricsFormat::JournalDrain => "{\"events\":[]}".to_string(),
+        })
+        .expect("start");
+        let addr = srv.local_addr();
+        let prom = get(addr, "/metrics");
+        assert!(prom.starts_with("HTTP/1.0 200 OK\r\n"), "{prom}");
+        assert!(prom.contains("text/plain; version=0.0.4"));
+        assert!(prom.ends_with("deepcot_test_total 1\n"));
+        let json = get(addr, "/metrics.json");
+        assert!(json.contains("application/json"));
+        assert!(json.ends_with("{\"ok\":true}"));
+        assert!(get(addr, "/journal").ends_with("{\"events\":[]}"));
+        assert!(get(addr, "/").contains("/metrics.json"));
+        assert!(get(addr, "/nope").starts_with("HTTP/1.0 404"));
+        // sequential scrapes keep working (serial accept loop)
+        assert!(get(addr, "/metrics").contains("deepcot_test_total"));
+        srv.stop();
+    }
+
+    #[test]
+    fn non_get_is_405() {
+        let srv = MetricsServer::start("127.0.0.1:0", |_| String::new()).expect("start");
+        let mut sock = TcpStream::connect(srv.local_addr()).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(sock, "POST /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut out = String::new();
+        sock.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.0 405"), "{out}");
+    }
+}

@@ -1,0 +1,209 @@
+//! Tick-pipeline stage spans: named segments of the serving hot path
+//! timed with a [`Stopwatch`] and recorded into per-stage
+//! [`LatencyHisto`]s.
+//!
+//! The engine-side stages are *contiguous* timestamp segments — queue,
+//! batch-form, backend-step, and deliver partition the interval from
+//! the oldest enqueue in a tick to its last delivery, so their sums
+//! reconcile with [`Stage::PipelineTotal`] to within µs truncation
+//! (pinned in `tests/obs.rs`). Net decode/encode and the migration
+//! legs are independent spans around their own code paths.
+//!
+//! Everything here is preallocated and alloc-free to record, so spans
+//! can run inside the zero-alloc steady state (`tests/zero_alloc.rs`
+//! measures with `obs=spans` forced on in CI).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyHisto;
+
+/// A named stage of the serving pipeline.
+///
+/// The discriminant doubles as the index into [`StageSpans`] storage;
+/// keep [`Stage::ALL`] in declaration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Push receipt → handed to the batcher (per accepted push).
+    Ingress = 0,
+    /// Oldest enqueue in a tick → the tick starts forming (per tick).
+    Queue = 1,
+    /// Tick formation: lane planning + queue bookkeeping (per tick).
+    BatchForm = 2,
+    /// Backend `tick_lanes` execution (per tick).
+    BackendStep = 3,
+    /// Tick results fanned out to stream owners (per tick).
+    Deliver = 4,
+    /// Oldest enqueue → last delivery; the end-to-end cut the four
+    /// engine segments above sum to (per tick).
+    PipelineTotal = 5,
+    /// Wire frame parsed → typed `Frame` decoded (per net frame).
+    NetDecode = 6,
+    /// Typed reply → encoded wire bytes (per net frame).
+    NetEncode = 7,
+    /// Migration export leg on the source shard (per export).
+    MigExport = 8,
+    /// Full stream-unavailability window of a completed migration
+    /// (the front door's quiesce histogram, folded in at snapshot).
+    MigQuiesce = 9,
+    /// Migration import leg on the target shard (per import).
+    MigImport = 10,
+}
+
+impl Stage {
+    /// Every stage, in storage order.
+    pub const ALL: [Stage; 11] = [
+        Stage::Ingress,
+        Stage::Queue,
+        Stage::BatchForm,
+        Stage::BackendStep,
+        Stage::Deliver,
+        Stage::PipelineTotal,
+        Stage::NetDecode,
+        Stage::NetEncode,
+        Stage::MigExport,
+        Stage::MigQuiesce,
+        Stage::MigImport,
+    ];
+
+    /// Stable snake_case name used as the `stage` label in exposition.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Ingress => "ingress",
+            Stage::Queue => "queue",
+            Stage::BatchForm => "batch_form",
+            Stage::BackendStep => "backend_step",
+            Stage::Deliver => "deliver",
+            Stage::PipelineTotal => "pipeline_total",
+            Stage::NetDecode => "net_decode",
+            Stage::NetEncode => "net_encode",
+            Stage::MigExport => "migration_export",
+            Stage::MigQuiesce => "migration_quiesce",
+            Stage::MigImport => "migration_import",
+        }
+    }
+}
+
+/// One latency histogram per [`Stage`]; fixed storage, alloc-free to
+/// record and reset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSpans {
+    histos: [LatencyHisto; 11],
+}
+
+impl Default for StageSpans {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StageSpans {
+    /// Empty histograms for every stage.
+    pub fn new() -> Self {
+        Self { histos: std::array::from_fn(|_| LatencyHisto::new()) }
+    }
+
+    /// Record one sample for a stage.
+    pub fn record(&mut self, stage: Stage, d: Duration) {
+        self.histos[stage as usize].record(d);
+    }
+
+    /// The histogram for one stage.
+    pub fn get(&self, stage: Stage) -> &LatencyHisto {
+        &self.histos[stage as usize]
+    }
+
+    /// Fold another span set into this one, stage-wise.
+    pub fn merge(&mut self, other: &StageSpans) {
+        for (a, b) in self.histos.iter_mut().zip(&other.histos) {
+            a.merge(b);
+        }
+    }
+
+    /// Fold a standalone histogram into one stage's slot (used to pull
+    /// the front door's quiesce histogram into the span view).
+    pub fn merge_histo(&mut self, stage: Stage, h: &LatencyHisto) {
+        self.histos[stage as usize].merge(h);
+    }
+
+    /// Zero every histogram in place (no allocation).
+    pub fn reset(&mut self) {
+        for h in &mut self.histos {
+            h.reset();
+        }
+    }
+
+    /// Total samples recorded across all stages.
+    pub fn total_count(&self) -> u64 {
+        self.histos.iter().map(|h| h.count()).sum()
+    }
+
+    /// Iterate `(stage, histogram)` pairs in storage order.
+    pub fn iter(&self) -> impl Iterator<Item = (Stage, &LatencyHisto)> {
+        Stage::ALL.iter().map(move |&s| (s, &self.histos[s as usize]))
+    }
+}
+
+/// Minimal lap timer for carving a code path into contiguous spans.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    last: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self { last: Instant::now() }
+    }
+
+    /// Time since the last lap (or start), and reset the lap marker —
+    /// consecutive laps partition the elapsed time exactly.
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now.duration_since(self.last);
+        self.last = now;
+        d
+    }
+
+    /// Time since the last lap without resetting.
+    pub fn elapsed(&self) -> Duration {
+        self.last.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_indices_match_all_order() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i, "Stage::ALL out of declaration order at {i}");
+        }
+    }
+
+    #[test]
+    fn record_and_merge_roundtrip() {
+        let mut a = StageSpans::new();
+        let mut b = StageSpans::new();
+        a.record(Stage::BackendStep, Duration::from_micros(100));
+        b.record(Stage::BackendStep, Duration::from_micros(300));
+        b.record(Stage::Deliver, Duration::from_micros(5));
+        a.merge(&b);
+        assert_eq!(a.get(Stage::BackendStep).count(), 2);
+        assert_eq!(a.get(Stage::Deliver).count(), 1);
+        assert_eq!(a.total_count(), 3);
+        a.reset();
+        assert_eq!(a.total_count(), 0);
+        assert_eq!(a, StageSpans::new());
+    }
+
+    #[test]
+    fn stopwatch_laps_partition_elapsed() {
+        let mut w = Stopwatch::start();
+        let a = w.lap();
+        let b = w.lap();
+        // laps are non-negative and consecutive (monotonic clock)
+        assert!(a + b >= a);
+        assert!(w.elapsed() >= Duration::ZERO);
+    }
+}

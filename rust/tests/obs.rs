@@ -1,0 +1,430 @@
+//! Observability-layer integration tests: stage spans must *partition*
+//! the tick pipeline (the four engine segments sum to `pipeline_total`
+//! within timer truncation), `obs=off` must record nothing new, the
+//! journal must capture lifecycle events in order, the HTTP metrics
+//! endpoint and the `METRICS_PROM` wire frame must serve well-formed
+//! expositions over a live engine, every per-shard Prometheus series
+//! must sum back to its cluster aggregate, and the histogram/journal
+//! primitives must hold their invariants under random inputs
+//! (`util::prop`).
+//!
+//! Hermetic: `SyntheticServeSpec::default()` artifacts on the scalar
+//! backend, ephemeral loopback ports, bounded timeouts.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use deepcot::config::{EngineBackend, EngineConfig};
+use deepcot::coordinator::engine::{EngineHandle, EngineThread};
+use deepcot::coordinator::metrics::LatencyHisto;
+use deepcot::net::client::NetClient;
+use deepcot::net::server::NetServer;
+use deepcot::obs::expo;
+use deepcot::obs::journal::{EventKind, Journal};
+use deepcot::obs::server::{MetricsFormat, MetricsServer};
+use deepcot::obs::span::Stage;
+use deepcot::obs::ObsLevel;
+use deepcot::synthetic::SyntheticServeSpec;
+use deepcot::util::json::Json;
+use deepcot::util::prop;
+use deepcot::util::rng::Rng;
+
+const D_IN: usize = 8; // must match SyntheticServeSpec::default()
+
+fn synth_artifacts() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| SyntheticServeSpec::default().write().unwrap()).clone()
+}
+
+fn cluster_cfg(shards: usize, slots_per_shard: usize, obs: ObsLevel) -> EngineConfig {
+    EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(shards)
+        .slots_per_shard(slots_per_shard)
+        .obs(obs)
+        .build()
+}
+
+/// Serial closed-loop traffic: `streams` sessions, `rounds` ticks each.
+fn drive(h: &EngineHandle, streams: usize, rounds: usize) {
+    let sessions: Vec<_> = (0..streams).map(|_| h.open().expect("open")).collect();
+    let mut rng = Rng::new(0x0B5E);
+    for _ in 0..rounds {
+        for sess in &sessions {
+            sess.push(rng.normal_vec(D_IN, 1.0)).expect("push");
+            sess.recv_timeout(Duration::from_secs(30)).expect("tick result");
+        }
+    }
+    for sess in sessions {
+        sess.close();
+    }
+}
+
+/// Raw `GET path`; returns the full response (status line + body).
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut sock = TcpStream::connect(addr).expect("connect metrics endpoint");
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(sock, "GET {path} HTTP/1.0\r\n\r\n").unwrap();
+    let mut out = String::new();
+    sock.read_to_string(&mut out).expect("read scrape");
+    out
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("")
+}
+
+/// Value of an unlabelled Prometheus sample line (`name value`).
+fn prom_value(body: &str, name: &str) -> f64 {
+    body.lines()
+        .find_map(|l| {
+            let rest = l.strip_prefix(name)?;
+            if !rest.starts_with(' ') {
+                return None;
+            }
+            rest.trim().parse::<f64>().ok()
+        })
+        .unwrap_or_else(|| panic!("no sample {name} in:\n{body}"))
+}
+
+/// Sum of every labelled series in a family (`family{...} value`).
+fn prom_sum(body: &str, family: &str) -> f64 {
+    let prefix = format!("{family}{{");
+    body.lines()
+        .filter(|l| l.starts_with(&prefix))
+        .filter_map(|l| l.rsplit(' ').next()?.parse::<f64>().ok())
+        .sum()
+}
+
+// ---------------------------------------------------------------- spans
+
+/// The headline span contract: queue + batch-form + backend-step +
+/// deliver are contiguous segments of [oldest enqueue, delivery], so
+/// their per-tick counts match `pipeline_total` exactly and their sums
+/// reconcile with it to within timer truncation.
+#[test]
+fn stage_spans_partition_pipeline_total() {
+    let engine = EngineThread::spawn(cluster_cfg(1, 4, ObsLevel::Spans)).expect("spawn");
+    let h = engine.handle();
+    drive(&h, 1, 50);
+    let m = h.metrics().expect("metrics");
+    engine.shutdown().expect("shutdown");
+
+    let total = m.stage_spans.get(Stage::PipelineTotal);
+    assert_eq!(m.ticks, 50, "serial closed loop: one tick per push");
+    assert_eq!(total.count(), m.ticks, "one pipeline_total span per tick");
+    let parts = [Stage::Queue, Stage::BatchForm, Stage::BackendStep, Stage::Deliver];
+    for st in parts {
+        assert_eq!(
+            m.stage_spans.get(st).count(),
+            total.count(),
+            "stage {} must record once per tick",
+            st.name()
+        );
+    }
+    let part_sum: u64 = parts.iter().map(|&s| m.stage_spans.get(s).sum().as_micros() as u64).sum();
+    let whole = total.sum().as_micros() as u64;
+    // each span records at µs resolution with a 1µs floor: at most a
+    // few µs of slack per tick, nowhere near 16
+    let tol = 16 * total.count();
+    assert!(
+        part_sum.abs_diff(whole) <= tol,
+        "stage sums {part_sum}µs do not reconcile with pipeline_total {whole}µs (tol {tol}µs)"
+    );
+    // ingress records once per accepted token vector
+    assert_eq!(m.stage_spans.get(Stage::Ingress).count(), m.tokens_in);
+}
+
+#[test]
+fn obs_off_records_no_spans_and_no_events() {
+    let engine = EngineThread::spawn(cluster_cfg(1, 4, ObsLevel::Off)).expect("spawn");
+    let h = engine.handle();
+    drive(&h, 1, 10);
+    let m = h.metrics().expect("metrics");
+    assert_eq!(m.stage_spans.total_count(), 0, "obs=off must not record spans");
+    assert_eq!(m.slow_ticks, 0);
+    assert!(h.obs().journal().is_empty(), "obs=off must not journal");
+    // the pre-existing counters and histograms stay on at every level
+    assert_eq!(m.ticks, 10);
+    assert_eq!(m.tick_latency.count(), 10);
+    assert!(m.queue_latency.count() >= 10);
+    engine.shutdown().expect("shutdown");
+}
+
+// -------------------------------------------------------------- journal
+
+#[test]
+fn journal_captures_lifecycle_in_order() {
+    let engine = EngineThread::spawn(cluster_cfg(2, 2, ObsLevel::Journal)).expect("spawn");
+    let h = engine.handle();
+    let a = h.open().expect("open a");
+    let b = h.open().expect("open b");
+    let mut rng = Rng::new(0x10A);
+    for _ in 0..3 {
+        a.push(rng.normal_vec(D_IN, 1.0)).expect("push");
+        a.recv_timeout(Duration::from_secs(30)).expect("tick");
+    }
+    let from = h.shard_of(a.id()).unwrap_or(0);
+    h.migrate(a.id(), (from + 1) % 2).expect("migrate");
+    let a_id = a.id().0;
+    a.close();
+    b.close();
+    // metrics is a synchronous round-trip through every shard, so the
+    // closes above are fully processed before the drain below
+    let _ = h.metrics().expect("metrics barrier");
+
+    let events = h.obs().journal().drain();
+    let has = |k: EventKind| events.iter().any(|e| e.kind == k);
+    assert!(has(EventKind::DispatchResolved), "boot must journal the resolved kernel path");
+    assert!(has(EventKind::StreamOpen));
+    assert!(has(EventKind::StreamClose));
+    assert!(has(EventKind::MigrationAttempt));
+    assert!(has(EventKind::MigrationComplete));
+    assert!(
+        events.iter().any(|e| e.kind == EventKind::MigrationAttempt && e.stream == a_id),
+        "the migration attempt must carry the migrated stream id"
+    );
+    assert!(
+        events.windows(2).all(|w| w[0].seq < w[1].seq),
+        "drained events must come out in strictly increasing seq order"
+    );
+    engine.shutdown().expect("shutdown");
+}
+
+// ------------------------------------------------------- HTTP endpoint
+
+#[test]
+fn metrics_endpoint_serves_live_engine() {
+    let engine = EngineThread::spawn(cluster_cfg(1, 4, ObsLevel::Journal)).expect("spawn");
+    let h = engine.handle();
+    drive(&h, 1, 20);
+
+    let eng = engine.handle();
+    let srv = MetricsServer::start("127.0.0.1:0", move |fmt| {
+        let obs = eng.obs();
+        match fmt {
+            MetricsFormat::JournalDrain => expo::render_journal(obs),
+            MetricsFormat::Prometheus => match eng.metrics() {
+                Ok(m) => expo::render_prometheus(obs, &m, None),
+                Err(e) => format!("# metrics unavailable: {e}\n"),
+            },
+            MetricsFormat::Json => match eng.metrics() {
+                Ok(m) => expo::render_json(obs, &m, None),
+                Err(e) => format!("{{\"error\":\"{e}\"}}"),
+            },
+        }
+    })
+    .expect("start metrics endpoint");
+    let addr = srv.local_addr();
+
+    let prom = http_get(addr, "/metrics");
+    assert!(prom.starts_with("HTTP/1.0 200"), "{prom}");
+    let body = body_of(&prom);
+    assert_eq!(prom_value(body, "deepcot_ticks_total"), 20.0);
+    assert!(body.contains("deepcot_snapshot_seq"));
+    let stage_key = "deepcot_stage_latency_us_count{stage=\"backend_step\"}";
+    assert_eq!(prom_value(body, stage_key), 20.0, "one backend_step span per tick");
+
+    // JSON snapshot parses, agrees on the counters, and the snapshot
+    // sequence is strictly monotonic across scrapes
+    let v1 = Json::parse(body_of(&http_get(addr, "/metrics.json"))).expect("json scrape 1");
+    assert_eq!(v1.get("ticks").unwrap().as_f64().unwrap(), 20.0);
+    assert!(v1.get("stages").is_some(), "spans are on at obs=journal");
+    let v2 = Json::parse(body_of(&http_get(addr, "/metrics.json"))).expect("json scrape 2");
+    let (s1, s2) = (
+        v1.get("seq").unwrap().as_f64().unwrap(),
+        v2.get("seq").unwrap().as_f64().unwrap(),
+    );
+    assert!(s2 > s1, "snapshot seq must be monotonic ({s1} then {s2})");
+
+    // /journal drains: the first scrape consumes the resident events
+    let j1 = body_of(&http_get(addr, "/journal")).to_string();
+    Json::parse(&j1).expect("journal is well-formed JSON");
+    assert!(!j1.contains("\"events\":[]"), "lifecycle events were resident:\n{j1}");
+    let j2 = body_of(&http_get(addr, "/journal")).to_string();
+    assert!(j2.contains("\"events\":[]"), "second drain must be empty:\n{j2}");
+
+    assert!(http_get(addr, "/nope").starts_with("HTTP/1.0 404"));
+    drop(srv);
+    engine.shutdown().expect("shutdown");
+}
+
+// ------------------------------------------------------------- the wire
+
+#[test]
+fn metrics_prom_frame_serves_the_same_exposition() {
+    let engine = EngineThread::spawn(cluster_cfg(1, 4, ObsLevel::Journal)).expect("spawn");
+    let server = NetServer::start("127.0.0.1:0", engine.handle()).expect("net server");
+    let mut c = NetClient::connect(server.local_addr()).expect("connect");
+    c.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout");
+    let stream = c.open().expect("open");
+    let mut rng = Rng::new(0x11FE);
+    for _ in 0..5 {
+        c.push(stream, &rng.normal_vec(D_IN, 1.0)).expect("push");
+        c.recv_tick(stream).expect("tick");
+    }
+    let prom = c.metrics_prometheus().expect("METRICS_PROM");
+    assert_eq!(prom_value(&prom, "deepcot_ticks_total"), 5.0);
+    assert!(prom.contains("deepcot_net_frames_in_total"), "net counters ride along:\n{prom}");
+    assert!(
+        prom.contains("stage=\"net_decode\""),
+        "net decode spans must reach the wire exposition:\n{prom}"
+    );
+    c.close(stream).expect("close");
+    server.shutdown();
+    engine.shutdown().expect("shutdown");
+}
+
+// ------------------------------------------------- snapshot consistency
+
+/// Every exported per-shard series must sum back to its cluster
+/// aggregate — both in the `ClusterMetrics` struct and in the rendered
+/// Prometheus text a scraper actually sees.
+#[test]
+fn per_shard_series_sum_to_aggregates() {
+    let engine = EngineThread::spawn(cluster_cfg(2, 4, ObsLevel::Journal)).expect("spawn");
+    let h = engine.handle();
+    drive(&h, 4, 10);
+    let m = h.metrics().expect("metrics");
+
+    let sums = |f: fn(&deepcot::coordinator::metrics::EngineMetrics) -> u64| -> u64 {
+        m.per_shard.iter().map(f).sum()
+    };
+    assert_eq!(m.ticks, sums(|s| s.ticks));
+    assert_eq!(m.tokens_in, sums(|s| s.tokens_in));
+    assert_eq!(m.outputs, sums(|s| s.outputs));
+    assert_eq!(m.streams_opened, sums(|s| s.streams_opened));
+    assert_eq!(m.streams_closed, sums(|s| s.streams_closed));
+    assert_eq!(m.streams_evicted, sums(|s| s.streams_evicted));
+    assert_eq!(m.admission_rejects, sums(|s| s.admission_rejects));
+    assert_eq!(m.tick_latency.count(), sums(|s| s.tick_latency.count()));
+    assert_eq!(
+        m.tick_latency.sum().as_micros(),
+        m.per_shard.iter().map(|s| s.tick_latency.sum().as_micros()).sum::<u128>()
+    );
+    assert_eq!(
+        m.stage_spans.total_count(),
+        m.per_shard.iter().map(|s| s.stage_spans.total_count()).sum::<u64>()
+    );
+
+    let body = expo::render_prometheus(h.obs(), &m, None);
+    for (shard_family, agg_name) in [
+        ("deepcot_shard_ticks_total", "deepcot_ticks_total"),
+        ("deepcot_shard_tokens_in_total", "deepcot_tokens_in_total"),
+        ("deepcot_shard_outputs_total", "deepcot_outputs_total"),
+        ("deepcot_shard_streams_opened_total", "deepcot_streams_opened_total"),
+        ("deepcot_shard_streams_closed_total", "deepcot_streams_closed_total"),
+        ("deepcot_shard_streams_evicted_total", "deepcot_streams_evicted_total"),
+        ("deepcot_shard_admission_rejects_total", "deepcot_admission_rejects_total"),
+    ] {
+        assert_eq!(
+            prom_sum(&body, shard_family),
+            prom_value(&body, agg_name),
+            "{shard_family} must sum to {agg_name}"
+        );
+    }
+    engine.shutdown().expect("shutdown");
+}
+
+// ------------------------------------------------------------ properties
+
+fn rand_histo(rng: &mut Rng, max_samples: usize) -> LatencyHisto {
+    let mut h = LatencyHisto::new();
+    let n = rng.below(max_samples + 1);
+    for _ in 0..n {
+        // spread samples across the histogram's full log range
+        let us = 1u64 + rng.below(1 << rng.below(27)) as u64;
+        h.record(Duration::from_micros(us));
+    }
+    h
+}
+
+#[test]
+fn prop_quantile_monotone_and_bounded_by_max() {
+    prop::check("histo-quantile-monotone", 200, |rng| {
+        let mut h = rand_histo(rng, 200);
+        h.record(Duration::from_micros(1 + rng.below(1 << 20) as u64)); // never empty
+        let mut prev = Duration::ZERO;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = h.quantile(q);
+            if v < prev {
+                return Err(format!("quantile({q}) = {v:?} dropped below {prev:?}"));
+            }
+            if v > h.max() {
+                return Err(format!("quantile({q}) = {v:?} exceeds max {:?}", h.max()));
+            }
+            prev = v;
+        }
+        if h.quantile(1.0) != h.max() {
+            return Err(format!("quantile(1.0) {:?} != max {:?}", h.quantile(1.0), h.max()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_preserves_count_sum_max() {
+    prop::check("histo-merge-mass", 200, |rng| {
+        let a = rand_histo(rng, 150);
+        let b = rand_histo(rng, 150);
+        let mut m = a.clone();
+        m.merge(&b);
+        if m.count() != a.count() + b.count() {
+            return Err(format!("count {} != {} + {}", m.count(), a.count(), b.count()));
+        }
+        if m.sum() != a.sum() + b.sum() {
+            return Err(format!("sum {:?} != {:?} + {:?}", m.sum(), a.sum(), b.sum()));
+        }
+        if m.max() != a.max().max(b.max()) {
+            return Err(format!("max {:?} != max({:?}, {:?})", m.max(), a.max(), b.max()));
+        }
+        if m.count() > 0 && m.quantile(1.0) != m.max() {
+            return Err("merged quantile(1.0) != merged max".into());
+        }
+        // merging an empty histogram is the identity
+        let mut e = a.clone();
+        e.merge(&LatencyHisto::new());
+        if e != a {
+            return Err("merge with empty changed the histogram".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_journal_stays_bounded() {
+    prop::check("journal-bounded", 60, |rng| {
+        let cap = rng.below(32) + 1;
+        let j = Journal::with_limits(cap, 1_000_000);
+        let n = rng.below(200);
+        for i in 0..n {
+            let kind = EventKind::ALL[rng.below(EventKind::ALL.len())];
+            j.push(kind, i as u64, 0, 0);
+        }
+        if j.len() > cap {
+            return Err(format!("journal grew to {} past capacity {cap}", j.len()));
+        }
+        let stats = j.stats();
+        if stats.recorded != n as u64 || stats.len != n.min(cap) as u64 {
+            return Err(format!("stats {stats:?} inconsistent with {n} pushes, cap {cap}"));
+        }
+        let evs = j.drain();
+        if evs.len() != n.min(cap) {
+            return Err(format!("drained {} events, expected {}", evs.len(), n.min(cap)));
+        }
+        if !evs.windows(2).all(|w| w[0].seq + 1 == w[1].seq) {
+            return Err("drained seqs are not consecutive oldest-first".into());
+        }
+        if n > 0 && evs.last().unwrap().seq != n as u64 - 1 {
+            return Err("the newest event did not survive the overwrites".into());
+        }
+        Ok(())
+    });
+}

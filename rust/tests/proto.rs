@@ -45,12 +45,13 @@ fn rand_engine_error(rng: &mut Rng) -> EngineError {
 }
 
 fn rand_frame(rng: &mut Rng) -> Frame {
-    match rng.below(12) {
+    match rng.below(13) {
         0 => Frame::Open,
         1 => Frame::Push { stream: rng.next_u64(), tokens: rand_f32s(rng, 32) },
         2 => Frame::Close { stream: rng.next_u64() },
         3 => Frame::Metrics,
         4 => Frame::Shutdown,
+        12 => Frame::MetricsProm,
         5 => Frame::Opened { stream: rng.next_u64() },
         6 => Frame::PushOk { stream: rng.next_u64() },
         7 => Frame::Closed { stream: rng.next_u64() },
@@ -70,8 +71,8 @@ fn rand_frame(rng: &mut Rng) -> Frame {
 /// any truncation below this must reject.
 fn min_fields(frame: &Frame) -> usize {
     match frame {
-        Frame::Open | Frame::Metrics | Frame::Shutdown | Frame::ShutdownOk => 0,
-        Frame::MetricsReport { .. } => 0,
+        Frame::Open | Frame::Metrics | Frame::MetricsProm | Frame::Shutdown => 0,
+        Frame::ShutdownOk | Frame::MetricsReport { .. } => 0,
         Frame::Close { .. }
         | Frame::Opened { .. }
         | Frame::PushOk { .. }

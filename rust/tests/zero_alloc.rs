@@ -11,7 +11,9 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
+use deepcot::coordinator::metrics::LatencyHisto;
 use deepcot::manifest::ModelConfig;
 use deepcot::net::proto::{self, RawFrame};
 use deepcot::nn::batched::BatchedScalarDeepCoT;
@@ -19,6 +21,9 @@ use deepcot::nn::encoder::ScalarDeepCoT;
 use deepcot::nn::params::ModelParams;
 use deepcot::nn::simd::KernelOps;
 use deepcot::nn::tensor::Mat;
+use deepcot::obs::expo::{RateSample, SnapshotRing};
+use deepcot::obs::journal::{EventKind, Journal};
+use deepcot::obs::span::{Stage, StageSpans};
 use deepcot::util::rng::Rng;
 
 static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
@@ -229,5 +234,44 @@ fn steady_state_ticks_allocate_nothing() {
         "steady-state PUSH/TICK codec round trips allocated {} times across 5 cycles",
         after - before
     );
+    assert!(sink.is_finite());
+
+    // observability primitives: everything the instrumentation touches
+    // per tick (stage-span records, slow-tick journal pushes past ring
+    // capacity, rate-ring samples, in-place histogram resets) must be
+    // allocation-free once warmed — `obs=spans` may not perturb the
+    // steady state it observes (CI runs this suite with DEEPCOT_OBS
+    // forced to `spans`)
+    let mut spans = StageSpans::new();
+    let journal = Journal::with_limits(8, 1_000_000);
+    let mut ring = SnapshotRing::new(4);
+    let mut histo = LatencyHisto::new();
+    for i in 0..12u64 {
+        // warm past both ring capacities so pushes rotate, not grow
+        journal.push(EventKind::SlowTick, i, 0, i);
+        ring.push(RateSample { t_us: i * 1000, ticks: i, ..RateSample::default() });
+    }
+    histo.record(Duration::from_micros(5));
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for i in 0..20u64 {
+        spans.record(Stage::BackendStep, Duration::from_micros(i + 1));
+        spans.record(Stage::PipelineTotal, Duration::from_micros(i + 2));
+        journal.push(EventKind::SlowTick, i, 0, i);
+        let sample = RateSample { t_us: (12 + i) * 1000, ticks: 12 + i, ..RateSample::default() };
+        let rates = ring.rates_against(&sample, Duration::from_secs(10));
+        ring.push(sample);
+        sink += rates.ticks_per_sec as f32;
+        histo.record(Duration::from_micros(i + 1));
+        histo.reset();
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "obs primitives allocated {} times across 20 warmed record/push/reset cycles",
+        after - before
+    );
+    assert_eq!(spans.get(Stage::BackendStep).count(), 20);
+    assert_eq!(journal.len(), 8, "journal must stay bounded at capacity");
     assert!(sink.is_finite());
 }
