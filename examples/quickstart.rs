@@ -95,6 +95,48 @@
 //! `deepcot_shard_*_total` breakdowns (each sums to its aggregate —
 //! pinned in `tests/obs.rs`), `deepcot_slow_ticks_total`, and the
 //! `deepcot_net_*` front-door counters.
+//!
+//! # Session persistence & crash recovery
+//!
+//! A DeepCoT stream's whole identity is its `StreamState` (K/V rings +
+//! position clock) plus any queued tokens — a few KB that move as a
+//! value. Hibernation (`deepcot::store` + the coordinator policy)
+//! builds on that: when every lane is taken, the coldest stream is
+//! *spilled* to a `StateStore` instead of the open being rejected, and
+//! the next PUSH to a spilled stream transparently restores it (the
+//! victim of *that* restore spills in turn). Slot capacity bounds
+//! **active** streams, not registered ones — a 64-lane cluster happily
+//! owns 10 000 registered sessions (pinned in `tests/hibernate.rs`,
+//! bitwise against per-stream oracles). Enable it in code with
+//! `EngineConfig::builder().hibernate(true)` (in-memory store) or
+//! `--hibernate` on `deepcot_serve` and the benches.
+//!
+//! Give the store a disk instead and the same mechanism is crash
+//! recovery:
+//!
+//!     # terminal 1 — persistent server: every spill is journaled to
+//!     # DIR/streams.log, plus a full-cluster snapshot every 2s and on
+//!     # clean shutdown
+//!     cargo run --release --bin deepcot_serve -- \
+//!         --synthetic --state-dir /tmp/deepcot-state \
+//!         --snapshot-every-ms 2000 --listen 127.0.0.1:7433
+//!
+//!     # kill -9 it mid-traffic, then start it again with the same
+//!     # --state-dir: every registered stream is recovered as
+//!     # hibernated, and clients reattach with an OPEN-resume frame
+//!     # (`NetClient::open_resume(id)`) — tick ordinals and bits
+//!     # continue exactly where the dead process left off.
+//!
+//! In-process the same flow is `handle.snapshot()` (checkpoint every
+//! lane-resident stream), `handle.hibernated_streams()` /
+//! `is_hibernated(id)` (inspection), and `handle.resume(id)` (reattach
+//! a recovered, ownerless stream as a fresh RAII `Session`). A PUSH to
+//! a recovered-but-unresumed stream answers the typed
+//! `EngineError::Hibernated` — distinct from `StreamClosed`, so
+//! clients can tell "resume me" from "gone". Records are versioned,
+//! length-checked, and CRC-guarded (`store::codec`): a torn or
+//! corrupted state file is detected and reported, never decoded into
+//! garbage state (fuzzed over ≥10k corrupt blobs in `tests/store.rs`).
 
 use std::time::Duration;
 
@@ -118,6 +160,7 @@ fn main() -> Result<()> {
         .backend(EngineBackend::Scalar)
         .shards(2)
         .slots_per_shard(2)
+        .hibernate(true) // full shards spill cold streams, never reject
         .batch_deadline(Duration::from_millis(1))
         .build();
     let engine = EngineThread::spawn(cfg)?;
@@ -149,7 +192,19 @@ fn main() -> Result<()> {
     }
     println!("final logits[0..4] = {:?}", &last[..4.min(last.len())]);
 
-    // 6. observability: the operator report, then the same snapshot in
+    // 6. hibernation: register more streams than the 4 lanes can hold —
+    //    the coldest spill to the state store instead of the opens
+    //    failing, and a push to a spilled stream wakes it transparently
+    let extras: Vec<_> = (0..5).map(|_| handle.open()).collect::<Result<_, _>>()?;
+    println!(
+        "6 registered streams on 4 lanes: {} hibernated",
+        handle.hibernated_streams().len()
+    );
+    session.push(rng.normal_vec(spec.d_in, 1.0))?; // wakes it if it was spilled
+    session.recv_timeout(Duration::from_secs(10))?;
+    drop(extras);
+
+    // 7. observability: the operator report, then the same snapshot in
     //    the Prometheus text format (what `deepcot_serve`'s
     //    `--metrics-listen` endpoint serves on /metrics)
     let m = handle.metrics()?;

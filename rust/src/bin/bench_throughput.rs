@@ -37,6 +37,14 @@
 //! the `--json` document carries it under `results[].stages` — the
 //! where-did-the-latency-go axis of the perf trajectory.
 //!
+//! With `--registered N` (plus `--slots S`) the bench switches to the
+//! hibernation-churn smoke instead of the shard sweep: register N
+//! streams over a cluster with only `shards * S` lanes (hibernation
+//! on, in-memory store), then hammer random members from worker
+//! threads so pushes continually wake hibernated streams and spill
+//! warm ones. Reports wakes/s and requires the hibernate/restore
+//! counters to have moved — the capacity-beyond-lanes claim, measured.
+//!
 //! The CI smoke runs use a tiny model, 2 shards and a bounded tick
 //! count — see .github/workflows/ci.yml.
 
@@ -192,6 +200,74 @@ fn run_one(
     })
 }
 
+/// Hibernation-churn smoke: register far more streams than the cluster
+/// has lanes (hibernation spills the overflow to an in-memory store at
+/// open time), then wake random members from closed-loop worker
+/// threads — every wake of a hibernated stream restores it into a lane
+/// and spills a warmer victim. The run fails unless both churn
+/// counters moved, so CI catches a silently-disabled hibernation path.
+fn run_churn(cfg: EngineConfig, registered: usize, wakes: usize, d_in: usize) -> Result<()> {
+    let shards = cfg.effective_shards();
+    let lanes = shards * cfg.slots_per_shard;
+    anyhow::ensure!(
+        registered > lanes,
+        "--registered ({registered}) must exceed total lanes ({lanes}) for churn to happen"
+    );
+    let engine = EngineThread::spawn(cfg)?;
+    let h = engine.handle();
+    let t0 = Instant::now();
+    let mut sessions = Vec::with_capacity(registered);
+    for i in 0..registered {
+        sessions.push(h.open().with_context(|| format!("registering stream {i}"))?);
+    }
+    let register_wall = t0.elapsed();
+    println!(
+        "hibernation churn: {registered} streams registered over {lanes} lanes \
+         ({shards} shards) in {register_wall:.2?}"
+    );
+    let wakes = if wakes == 0 { registered * 2 } else { wakes };
+    let workers = sessions.len().min(8).max(1);
+    let per = registered.div_ceil(workers);
+    let t1 = Instant::now();
+    let mut handles = Vec::new();
+    let mut iter = sessions.into_iter();
+    for w in 0..workers {
+        let mine: Vec<_> = iter.by_ref().take(per).collect();
+        if mine.is_empty() {
+            break;
+        }
+        let quota = wakes / workers + usize::from(w < wakes % workers);
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(0xC0FFEE ^ ((w as u64 + 1) * 0x9E37));
+            for _ in 0..quota {
+                // random member: overwhelmingly a hibernated stream,
+                // so this push transparently restores it into a lane
+                let sess = &mine[rng.below(mine.len())];
+                sess.push(rng.normal_vec(d_in, 1.0)).context("churn push")?;
+                sess.recv_timeout(Duration::from_secs(60)).context("churn tick")?;
+            }
+            Ok(())
+        }));
+    }
+    for t in handles {
+        t.join().expect("churn worker")?;
+    }
+    let churn_wall = t1.elapsed();
+    let m = h.metrics()?;
+    engine.shutdown()?;
+    println!(
+        "hibernation churn: {wakes} wakes in {churn_wall:.2?} ({:.1} wakes/s), \
+         hibernated={} restored={} resident={}",
+        wakes as f64 / churn_wall.as_secs_f64(),
+        m.streams_hibernated,
+        m.streams_restored,
+        m.hibernated_resident,
+    );
+    anyhow::ensure!(m.streams_hibernated > 0, "churn never hibernated a stream");
+    anyhow::ensure!(m.streams_restored > 0, "churn never restored a hibernated stream");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let cli = Cli::new("bench_throughput: aggregate serving throughput vs shard count")
         .opt("shards-list", "1,2,4", "comma-separated shard counts to sweep")
@@ -205,6 +281,9 @@ fn main() -> Result<()> {
         .opt("placement", "hash", "stream placement: hash|least-loaded|round-robin")
         .opt("kernel-dispatch", "auto", "kernel path: auto|scalar|avx2|neon")
         .opt("migrate-every", "0", "live-migrate each stream every N ticks (0 = off)")
+        .opt("registered", "0", "hibernation churn: register N streams over few lanes (0 = off)")
+        .opt("slots", "32", "hibernation churn: lanes per shard")
+        .opt("wakes", "0", "hibernation churn: total random wakes (0 = 2x registered)")
         .opt("json", "", "write sweep results JSON to this path (perf trajectory)")
         .flag("tcp", "drive the engine end-to-end over a loopback TCP front door");
     let args = cli.parse()?;
@@ -252,6 +331,22 @@ fn main() -> Result<()> {
             String::new()
         },
     );
+    let registered = args.get_usize("registered")?;
+    if registered > 0 {
+        let shards = shard_counts[0].max(1);
+        let cfg = EngineConfig::builder()
+            .artifacts_dir(dir.clone())
+            .variant(SyntheticServeSpec::variant_name(1))
+            .backend(EngineBackend::Scalar)
+            .batch_deadline(Duration::from_micros(args.get_u64("deadline-us")?))
+            .shards(shards)
+            .slots_per_shard(args.get_usize("slots")?.max(1))
+            .placement(args.get("placement").parse()?)
+            .kernel_dispatch(dispatch)
+            .hibernate(true)
+            .build();
+        return run_churn(cfg, registered, args.get_usize("wakes")?, spec.d_in);
+    }
     let mut results = Vec::with_capacity(shard_counts.len());
     for &shards in &shard_counts {
         let shards = shards.max(1);

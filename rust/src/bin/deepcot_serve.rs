@@ -23,6 +23,17 @@
 //! (`/metrics` Prometheus text, `/metrics.json`, `/journal`); on
 //! shutdown any undrained journal events are dumped to stdout as
 //! one-line JSON.
+//!
+//! Session persistence (see `store::disk`): with `--state-dir DIR` the
+//! engine journals every hibernated stream to `DIR/streams.log`, takes
+//! a full-cluster snapshot every `--snapshot-every-ms` (and a final one
+//! on clean shutdown), and recovers every registered stream as
+//! hibernated on the next boot. The kill-and-recover CI smoke drives
+//! exactly this: `--smoke N --smoke-hold` pushes traffic and then keeps
+//! serving (no close, no shutdown) so a SIGKILL lands on live state;
+//! the restarted process runs `--resume-smoke` to reattach each
+//! recovered stream over loopback TCP and prove its tick ordinals
+//! continue where the killed run left off.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -48,6 +59,8 @@ fn main() -> Result<()> {
     .opt("listen", "127.0.0.1:7433", "address to listen on (port 0 = ephemeral)")
     .opt("metrics-listen", "", "HTTP metrics endpoint address (empty = off, port 0 = ephemeral)")
     .opt("smoke", "0", "loopback self-test: push N tokens, then clean shutdown (0 = off)")
+    .flag("smoke-hold", "after --smoke, keep serving instead of shutting down (crash-test aid)")
+    .flag("resume-smoke", "resume every recovered stream over loopback TCP, then shut down")
     .flag("synthetic", "serve a hermetic synthetic model (no `make artifacts` needed)");
     let args = cli.parse()?;
     let mut cfg = EngineConfig::from_args(&args)?;
@@ -64,7 +77,13 @@ fn main() -> Result<()> {
     let mc = &manifest.variant(&cfg.variant)?.config;
     let d_lane = mc.m_tokens * mc.d_in;
 
+    let snapshot_every = cfg.snapshot_every;
+    let persistent = cfg.state_dir.is_some();
     let engine = EngineThread::spawn(cfg).context("spawning the serving cluster")?;
+    if persistent {
+        let recovered = engine.handle().hibernated_streams().len();
+        println!("deepcot_serve: recovered {recovered} hibernated stream(s) from the state dir");
+    }
     let server =
         NetServer::start(args.get("listen"), engine.handle()).context("binding the front door")?;
     println!("deepcot_serve: listening on {}", server.local_addr());
@@ -99,14 +118,36 @@ fn main() -> Result<()> {
     };
 
     let smoke = args.get_usize("smoke")?;
+    // a held smoke client must outlive the wait loop: dropping it would
+    // close the connection and with it the server-side stream
+    let mut _held_client = None;
     if smoke > 0 {
         let scrape = metrics_srv.as_ref().map(|s| s.local_addr());
-        run_smoke(&server, smoke, d_lane, scrape, obs.spans_on())?;
+        _held_client =
+            run_smoke(&server, smoke, d_lane, scrape, obs.spans_on(), args.has("smoke-hold"))?;
+    }
+    if args.has("resume-smoke") {
+        run_resume_smoke(&server, &engine, d_lane)?;
     }
 
-    // serve until some client requests shutdown (the smoke client does)
-    while !server.wait_shutdown_requested(Duration::from_secs(3600)) {}
+    // serve until some client requests shutdown (the smoke client
+    // does), taking a full-cluster snapshot each period when one is
+    // configured
+    let period = if snapshot_every > Duration::ZERO { snapshot_every } else { Duration::from_secs(3600) };
+    while !server.wait_shutdown_requested(period) {
+        if snapshot_every > Duration::ZERO {
+            let n = engine.handle().snapshot().context("periodic snapshot")?;
+            if n > 0 {
+                println!("deepcot_serve: snapshot checkpointed {n} live stream(s)");
+            }
+        }
+    }
     println!("deepcot_serve: shutdown requested; draining");
+    if persistent {
+        // one final checkpoint so a clean shutdown loses nothing
+        let n = engine.handle().snapshot().context("final snapshot")?;
+        println!("deepcot_serve: final snapshot checkpointed {n} live stream(s)");
+    }
     let net = server.metrics();
     drop(metrics_srv); // stop scraping before the engine goes away
     server.shutdown();
@@ -135,13 +176,19 @@ fn scrape(addr: SocketAddr, path: &str) -> Result<String> {
 
 /// Loopback self-test: a real TCP client against our own front door,
 /// plus one scrape of the HTTP metrics endpoint when one is bound.
+///
+/// With `hold` set the client neither closes its stream nor requests
+/// shutdown, and is returned to the caller so the connection (and with
+/// it the server-side stream) stays alive until the process dies —
+/// the setup half of the kill-and-recover smoke.
 fn run_smoke(
     server: &NetServer,
     ticks: usize,
     d_lane: usize,
     metrics_addr: Option<SocketAddr>,
     spans_on: bool,
-) -> Result<()> {
+    hold: bool,
+) -> Result<Option<NetClient>> {
     let mut client =
         NetClient::connect(server.local_addr()).context("smoke client connecting")?;
     client.set_read_timeout(Some(Duration::from_secs(30)))?;
@@ -176,8 +223,47 @@ fn run_smoke(
         }
         println!("deepcot_serve: smoke scrape ok ({} bytes of /metrics)", body.len());
     }
+    if hold {
+        println!("deepcot_serve: smoke ok ({ticks} ticks over loopback); holding stream {stream}");
+        return Ok(Some(client));
+    }
     client.close(stream).context("smoke close")?;
     client.shutdown_server().context("smoke shutdown")?;
     println!("deepcot_serve: smoke ok ({ticks} ticks over loopback)");
+    Ok(None)
+}
+
+/// The recovery half of the kill-and-recover smoke: reattach every
+/// stream the engine recovered from its state dir over loopback TCP,
+/// push one token each, and require the tick ordinal to *continue*
+/// past 1 — proof the pre-kill state survived — then shut down.
+fn run_resume_smoke(server: &NetServer, engine: &EngineThread, d_lane: usize) -> Result<()> {
+    let ids = engine.handle().hibernated_streams();
+    anyhow::ensure!(!ids.is_empty(), "resume-smoke found no recovered streams to resume");
+    let mut client =
+        NetClient::connect(server.local_addr()).context("resume-smoke client connecting")?;
+    client.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut rng = Rng::new(0x2E5);
+    for id in &ids {
+        let stream = client
+            .open_resume(id.0)
+            .with_context(|| format!("resume-smoke reattaching stream {}", id.0))?;
+        anyhow::ensure!(stream == id.0, "resume returned stream {stream}, asked for {}", id.0);
+        client.push(stream, &rng.normal_vec(d_lane, 1.0)).context("resume-smoke push")?;
+        let tick = client.recv_tick(stream).context("resume-smoke tick")?;
+        anyhow::ensure!(
+            tick.tick > 1,
+            "stream {} restarted from tick {} instead of continuing",
+            id.0,
+            tick.tick
+        );
+        anyhow::ensure!(
+            tick.logits.iter().all(|v| v.is_finite()),
+            "non-finite logits after resuming stream {}",
+            id.0
+        );
+    }
+    client.shutdown_server().context("resume-smoke shutdown")?;
+    println!("deepcot_serve: resume smoke ok ({} stream(s) continued past their kill point)", ids.len());
     Ok(())
 }

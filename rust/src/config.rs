@@ -104,6 +104,20 @@ pub struct EngineConfig {
     /// Journal a slow-tick event (and bump `slow_ticks`) when a tick's
     /// end-to-end pipeline time exceeds this.
     pub slow_tick: Duration,
+    /// Hibernation: when slots run out, spill the least-recently-active
+    /// stream to the state store instead of rejecting/evicting, so slot
+    /// capacity bounds *active* streams, not registered ones. Implied by
+    /// `state_dir`; on its own it uses an in-memory store (overcommit
+    /// without durability).
+    pub hibernate: bool,
+    /// Session persistence directory. When set, stream state spills to
+    /// (and recovers from) a log-structured file in this directory and
+    /// hibernation is enabled; `None` = no durability.
+    pub state_dir: Option<PathBuf>,
+    /// Periodic full-cluster snapshot interval for `deepcot_serve`
+    /// (crash-recovery checkpoint; `Duration::ZERO` = only snapshot on
+    /// clean shutdown). Only meaningful with `state_dir`.
+    pub snapshot_every: Duration,
 }
 
 impl Default for EngineConfig {
@@ -122,6 +136,9 @@ impl Default for EngineConfig {
             kernel_dispatch: DispatchChoice::Auto,
             obs: ObsLevel::default_from_env(),
             slow_tick: Duration::from_millis(100),
+            hibernate: false,
+            state_dir: None,
+            snapshot_every: Duration::ZERO,
         }
     }
 }
@@ -225,6 +242,24 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// Enable hibernation (spill-don't-reject) with an in-memory store.
+    pub fn hibernate(mut self, on: bool) -> Self {
+        self.cfg.hibernate = on;
+        self
+    }
+
+    /// Session persistence directory (enables hibernation + recovery).
+    pub fn state_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.state_dir = Some(dir.into());
+        self
+    }
+
+    /// Periodic snapshot interval for the serving loop.
+    pub fn snapshot_every(mut self, d: Duration) -> Self {
+        self.cfg.snapshot_every = d;
+        self
+    }
+
     /// Finish the build.
     pub fn build(self) -> EngineConfig {
         self.cfg
@@ -251,6 +286,9 @@ impl EngineConfig {
             .opt("kernel-dispatch", "auto", "kernel path: auto|scalar|avx2|neon")
             .opt("obs", "auto", "observability: off|counters|spans|journal (auto = $DEEPCOT_OBS)")
             .opt("slow-tick-us", "100000", "journal a slow-tick event past this pipeline time (µs)")
+            .flag("hibernate", "spill idle streams to an in-memory store instead of rejecting")
+            .opt("state-dir", "", "session persistence dir (enables hibernation + crash recovery)")
+            .opt("snapshot-every-ms", "0", "periodic full snapshot interval (ms; 0 = shutdown only)")
     }
 
     pub fn from_args(args: &Args) -> Result<Self> {
@@ -271,6 +309,11 @@ impl EngineConfig {
             cfg.obs = args.get("obs").parse()?;
         }
         cfg.slow_tick = Duration::from_micros(args.get_u64("slow-tick-us")?);
+        cfg.hibernate = args.has("hibernate");
+        if !args.get("state-dir").is_empty() {
+            cfg.state_dir = Some(args.get("state-dir").into());
+        }
+        cfg.snapshot_every = Duration::from_millis(args.get_u64("snapshot-every-ms")?);
         Ok(cfg)
     }
 
@@ -400,6 +443,36 @@ mod tests {
         // untouched fields keep their defaults
         let d = EngineConfig::default();
         assert_eq!(EngineConfig::builder().build().variant, d.variant);
+    }
+
+    #[test]
+    fn persistence_options_parse() {
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli
+            .parse_from(
+                ["--state-dir", "/tmp/deepcot-state", "--snapshot-every-ms", "250", "--hibernate"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        let c = EngineConfig::from_args(&args).unwrap();
+        assert_eq!(c.state_dir, Some(PathBuf::from("/tmp/deepcot-state")));
+        assert_eq!(c.snapshot_every, Duration::from_millis(250));
+        assert!(c.hibernate);
+        // defaults: no persistence, no hibernation
+        let d = EngineConfig::default();
+        assert_eq!(d.state_dir, None);
+        assert_eq!(d.snapshot_every, Duration::ZERO);
+        assert!(!d.hibernate);
+        // builder knobs
+        let b = EngineConfig::builder()
+            .hibernate(true)
+            .state_dir("/tmp/x")
+            .snapshot_every(Duration::from_secs(1))
+            .build();
+        assert!(b.hibernate);
+        assert_eq!(b.state_dir, Some(PathBuf::from("/tmp/x")));
+        assert_eq!(b.snapshot_every, Duration::from_secs(1));
     }
 
     #[test]

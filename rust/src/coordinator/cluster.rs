@@ -33,6 +33,18 @@
 //!        └────────┴──────────┴── per-stream channels ──► TickResult
 //! ```
 //!
+//! **Hibernation** (when `cfg.hibernate` or `cfg.state_dir` is set)
+//! decouples registered streams from slot capacity: a full shard spills
+//! its least-recently-active stream to the
+//! [`StateStore`](crate::store::StateStore) instead of rejecting the
+//! newcomer, and a push to a spilled stream transparently restores it
+//! into a free lane (possibly spilling a colder victim). With a
+//! `state_dir` the store is a durable on-disk log: periodic
+//! [`EngineHandle::snapshot`]s checkpoint every lane-resident stream,
+//! recover-on-boot re-registers everything found on disk as hibernated,
+//! and [`EngineHandle::resume`] reattaches a client to a recovered
+//! stream — same id, same tick ordinals, bitwise-identical outputs.
+//!
 //! The front door serializes only `open`/`close`/`migrate` bookkeeping
 //! (write locks on the shard map); `push` takes a read lock for one map
 //! lookup and then talks straight to the owning shard, so concurrent
@@ -54,17 +66,21 @@
 //! [`SlotStepper`]: crate::coordinator::slot_stepper::SlotStepper
 
 use std::collections::BTreeMap;
+use std::sync::mpsc;
 use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
 
 use crate::config::{EngineConfig, PlacementPolicy};
+use crate::coordinator::hibernate::{self, HibernatePool};
 use crate::coordinator::metrics::{ClusterMetrics, LatencyHisto};
 use crate::coordinator::session::{EngineError, Session};
-use crate::coordinator::shard::{ShardHandle, ShardThread};
+use crate::coordinator::shard::{ImportReason, ShardHandle, ShardThread};
 use crate::coordinator::slots::StreamId;
 use crate::obs::journal::EventKind;
 use crate::obs::span::Stage;
 use crate::obs::ObsHandle;
+use crate::store::disk::DiskStore;
+use crate::store::MemStore;
 
 /// Cluster-level placement: pins streams to shards and tracks the load
 /// the front door believes each shard carries (opens minus closes). A
@@ -168,6 +184,11 @@ struct FrontDoor {
     migrations_completed: u64,
     migrations_aborted: u64,
     quiesce_latency: LatencyHisto,
+    /// Streams re-registered as hibernated by recover-on-boot.
+    streams_recovered: u64,
+    /// Full-cluster snapshots completed.
+    snapshots_taken: u64,
+    snapshot_latency: LatencyHisto,
 }
 
 // the front door is read-mostly on the hot path (push only needs the
@@ -202,6 +223,10 @@ pub struct EngineHandle {
     shards: Arc<[ShardHandle]>,
     door: Arc<RwLock<FrontDoor>>,
     obs: ObsHandle,
+    /// Hibernation table + state store; `None` when neither
+    /// `cfg.hibernate` nor `cfg.state_dir` is set (legacy semantics:
+    /// full shards evict-or-reject).
+    pool: Option<HibernatePool>,
 }
 
 impl EngineHandle {
@@ -251,7 +276,10 @@ impl EngineHandle {
     /// Submit the next token(s) for a stream (m*d_in f32s); routed to
     /// the stream's pinned shard. If the binding raced a live migration
     /// (the shard hands the unaccepted tokens back), the push re-routes
-    /// to the stream's new shard transparently.
+    /// to the stream's new shard transparently — and if the stream was
+    /// hibernated (spilled by an overcommitted shard), it is restored
+    /// into a lane first, possibly spilling a colder victim to make
+    /// room. The pushing client notices neither.
     pub(crate) fn push_raw(&self, id: StreamId, mut tokens: Vec<f32>) -> Result<(), EngineError> {
         // bounded retries: a shard disowns a push (handing the tokens
         // back) when the stream just migrated away — the re-read of the
@@ -262,8 +290,17 @@ impl EngineHandle {
         // shard inequality; a genuinely-gone stream exits via the
         // unbound binding or the retry bound.
         for _ in 0..4 {
-            let Some(shard) = read(&self.door).router.shard_of(id) else {
-                return Err(EngineError::StreamClosed(id));
+            let shard = match read(&self.door).router.shard_of(id) {
+                Some(s) => s,
+                None => {
+                    // unbound: transparently wake the stream if it is
+                    // hibernated, then re-read the fresh binding
+                    self.try_restore(id)?;
+                    match read(&self.door).router.shard_of(id) {
+                        Some(s) => s,
+                        None => return Err(EngineError::StreamClosed(id)),
+                    }
+                }
             };
             match self.shards[shard].push(id, tokens) {
                 Ok(()) => return Ok(()),
@@ -274,11 +311,201 @@ impl EngineHandle {
         Err(EngineError::StreamClosed(id))
     }
 
-    /// Close a stream by id (sessions call this on drop).
+    /// Wake a hibernated stream that still has a live owner: import its
+    /// stored record into a lane (walking the placement plan; a full
+    /// shard spills its coldest stream to make room) and rebind it. The
+    /// door write lock is the quiesce, exactly as in [`Self::migrate`].
+    ///
+    /// Errors: [`EngineError::StreamClosed`] when the id is neither
+    /// bound nor hibernated, [`EngineError::Hibernated`] when the
+    /// stream exists but has no live output channel (recovered from
+    /// disk after a restart — only [`Self::resume`] can mint one).
+    fn try_restore(&self, id: StreamId) -> Result<(), EngineError> {
+        let Some(pool) = &self.pool else {
+            return Err(EngineError::StreamClosed(id));
+        };
+        let mut door = write(&self.door);
+        if door.router.shard_of(id).is_some() {
+            // a racing push already restored it while we waited
+            return Ok(());
+        }
+        let Some((rec, port)) = pool.begin_restore(id).map_err(EngineError::internal)? else {
+            return Err(EngineError::StreamClosed(id));
+        };
+        let Some(port) = port else {
+            pool.abort_restore(id, None);
+            return Err(EngineError::Hibernated(id));
+        };
+        let order = door.router.plan(id);
+        let mut payload = Some(hibernate::payload_of(rec, port.clone(), Instant::now()));
+        let mut last_err = None;
+        for &shard in &order {
+            let Some(p) = payload.take() else { break };
+            match self.shards[shard].import(id, p, ImportReason::Restore) {
+                Ok(evicted) => {
+                    if let Some(eid) = evicted {
+                        door.router.unbind(eid);
+                    }
+                    door.router.bind(id, shard);
+                    pool.commit_restore(id);
+                    return Ok(());
+                }
+                Err((e, p, evicted)) => {
+                    if let Some(eid) = evicted {
+                        door.router.unbind(eid);
+                    }
+                    payload = p;
+                    last_err = Some(e);
+                }
+            }
+        }
+        // nowhere to land: the stream stays hibernated and resumable
+        pool.abort_restore(id, Some(port));
+        Err(last_err.unwrap_or(EngineError::ShuttingDown))
+    }
+
+    /// Resume a hibernated stream that has no live owner (recovered
+    /// from the state store after a restart): mint a fresh output
+    /// channel, restore the stream into a lane, and hand back a
+    /// [`Session`] that continues exactly where the stream left off —
+    /// same id, same tick ordinals, bitwise-identical outputs.
+    ///
+    /// A stream whose original owner still holds its channel cannot be
+    /// resumed (that would silently steal its output); pushes from that
+    /// owner wake it transparently instead.
+    pub fn resume(&self, id: StreamId) -> Result<Session, EngineError> {
+        let Some(pool) = &self.pool else {
+            return Err(EngineError::InvalidRequest(
+                "resume requires hibernation (set hibernate or state_dir)".to_string(),
+            ));
+        };
+        let mut door = write(&self.door);
+        if door.router.shard_of(id).is_some() {
+            return Err(EngineError::InvalidRequest(format!(
+                "stream {} is live; resume only applies to hibernated streams",
+                id.0
+            )));
+        }
+        let Some((rec, old_port)) = pool.begin_restore(id).map_err(EngineError::internal)? else {
+            return Err(EngineError::StreamClosed(id));
+        };
+        if let Some(port) = old_port {
+            pool.abort_restore(id, Some(port));
+            return Err(EngineError::InvalidRequest(format!(
+                "stream {} still has a live owner; it wakes on push, not resume",
+                id.0
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let order = door.router.plan(id);
+        let mut payload = Some(hibernate::payload_of(rec, tx, Instant::now()));
+        let mut last_err = None;
+        for &shard in &order {
+            let Some(p) = payload.take() else { break };
+            match self.shards[shard].import(id, p, ImportReason::Restore) {
+                Ok(evicted) => {
+                    if let Some(eid) = evicted {
+                        door.router.unbind(eid);
+                    }
+                    door.router.bind(id, shard);
+                    pool.commit_restore(id);
+                    drop(door);
+                    return Ok(Session::attach(id, rx, self.clone()));
+                }
+                Err((e, p, evicted)) => {
+                    if let Some(eid) = evicted {
+                        door.router.unbind(eid);
+                    }
+                    payload = p;
+                    last_err = Some(e);
+                }
+            }
+        }
+        pool.abort_restore(id, None);
+        Err(last_err.unwrap_or(EngineError::ShuttingDown))
+    }
+
+    /// Whether a stream is currently hibernated (no lane anywhere; its
+    /// state lives in the store and wakes on push or resume).
+    pub fn is_hibernated(&self, id: StreamId) -> bool {
+        self.pool.as_ref().map_or(false, |p| p.contains(id))
+    }
+
+    /// Every currently hibernated stream id (ascending).
+    pub fn hibernated_streams(&self) -> Vec<StreamId> {
+        self.pool.as_ref().map(|p| p.ids()).unwrap_or_default()
+    }
+
+    /// Checkpoint every lane-resident stream to the state store and
+    /// flush it: export each bound stream, persist its record, and put
+    /// it straight back in its lane (counter-neutral — the stream never
+    /// logically moved; its owner keeps pushing through the snapshot).
+    /// Hibernated streams are already durable, so after a snapshot the
+    /// store holds every registered stream and a crash loses nothing.
+    ///
+    /// Returns the number of streams checkpointed. A no-op `Ok(0)`
+    /// without a configured pool.
+    pub fn snapshot(&self) -> Result<usize, EngineError> {
+        let Some(pool) = &self.pool else {
+            return Ok(0);
+        };
+        let t0 = Instant::now();
+        let mut door = write(&self.door);
+        let bound: Vec<(StreamId, usize)> = (0..self.shards.len())
+            .flat_map(|s| door.router.streams_on(s).into_iter().map(move |id| (id, s)))
+            .collect();
+        let mut n = 0usize;
+        for (id, shard) in bound {
+            let payload = match self.shards[shard].export(id, false) {
+                Ok(p) => p,
+                // the stream closed between the load snapshot and now
+                Err(_) => continue,
+            };
+            let rec = hibernate::record_of(id, &payload);
+            let ckpt = pool.checkpoint(&rec);
+            match self.shards[shard].import(id, payload, ImportReason::Snapshot) {
+                Ok(evicted) => {
+                    if let Some(eid) = evicted {
+                        door.router.unbind(eid);
+                    }
+                }
+                Err((_, payload, evicted)) => {
+                    // an open racing its lock-free shard round-trip took
+                    // the freed slot; park the stream as hibernated
+                    // rather than lose it (its channel stays live)
+                    if let Some(eid) = evicted {
+                        door.router.unbind(eid);
+                    }
+                    door.router.unbind(id);
+                    if let Some(p) = payload {
+                        let port = p.port.clone();
+                        let rec = hibernate::record_of(id, &p);
+                        let _ = pool.spill(&rec, port);
+                    }
+                }
+            }
+            if ckpt.is_ok() {
+                n += 1;
+            }
+        }
+        pool.sync().map_err(EngineError::internal)?;
+        door.snapshots_taken += 1;
+        let dt = t0.elapsed();
+        door.snapshot_latency.record(dt);
+        drop(door);
+        self.obs.event(EventKind::Snapshot, 0, -1, n as u64);
+        Ok(n)
+    }
+
+    /// Close a stream by id (sessions call this on drop). Hibernated
+    /// streams are forgotten entirely — table row and stored blob.
     pub(crate) fn close_raw(&self, id: StreamId) {
         let shard = write(&self.door).router.unbind(id);
         if let Some(s) = shard {
             self.shards[s].close(id);
+        }
+        if let Some(pool) = &self.pool {
+            let _ = pool.remove(id);
         }
     }
 
@@ -344,7 +571,7 @@ impl EngineHandle {
         self.obs.event(EventKind::MigrationAttempt, id.0, from as i64, to_shard as u64);
         // export atomically detaches the stream from its source shard
         // (or fails with the stream still serving there, untouched)
-        let payload = match self.shards[from].export(id) {
+        let payload = match self.shards[from].export(id, true) {
             Ok(p) => p,
             Err(e) => {
                 door.migrations_aborted += 1;
@@ -353,7 +580,7 @@ impl EngineHandle {
             }
         };
         door.router.unbind(id);
-        match self.shards[to_shard].import(id, payload, false) {
+        match self.shards[to_shard].import(id, payload, ImportReason::Migrate) {
             Ok(evicted) => {
                 if let Some(eid) = evicted {
                     door.router.unbind(eid);
@@ -392,7 +619,12 @@ impl EngineHandle {
                     .collect();
                 for shard in rescue {
                     let Some(p) = payload.take() else { break };
-                    match self.shards[shard].import(id, p, shard == from) {
+                    let reason = if shard == from {
+                        ImportReason::MigrateRollback
+                    } else {
+                        ImportReason::Migrate
+                    };
+                    match self.shards[shard].import(id, p, reason) {
                         Ok(evicted) => {
                             if let Some(eid) = evicted {
                                 door.router.unbind(eid);
@@ -474,13 +706,21 @@ impl EngineHandle {
         m.migrations_completed = door.migrations_completed;
         m.migrations_aborted = door.migrations_aborted;
         m.quiesce_latency = door.quiesce_latency.clone();
+        m.streams_recovered = door.streams_recovered;
+        m.snapshots_taken = door.snapshots_taken;
+        m.snapshot_latency = door.snapshot_latency.clone();
         drop(door);
+        if let Some(pool) = &self.pool {
+            m.hibernated_resident = pool.resident() as u64;
+        }
         m.uptime = self.obs.uptime();
         m.boot_unix_ms = self.obs.boot_unix_ms();
         if self.obs.spans_on() {
-            // the quiesce window is a front-door span, not a shard one;
-            // fold it into the stage family so exposition sees one table
+            // the quiesce + snapshot windows are front-door spans, not
+            // shard ones; fold them into the stage family so exposition
+            // sees one table
             m.stage_spans.merge_histo(Stage::MigQuiesce, &m.quiesce_latency);
+            m.stage_spans.merge_histo(Stage::Snapshot, &m.snapshot_latency);
         }
         Ok(m)
     }
@@ -502,9 +742,31 @@ impl ShardedEngine {
     pub fn spawn(cfg: EngineConfig) -> Result<Self, EngineError> {
         let n = cfg.effective_shards().max(1);
         let obs = ObsHandle::new(cfg.obs);
+        let pool = match (&cfg.state_dir, cfg.hibernate) {
+            (Some(dir), _) => {
+                std::fs::create_dir_all(dir).map_err(EngineError::internal)?;
+                let store =
+                    DiskStore::open(dir.join("streams.log")).map_err(EngineError::internal)?;
+                Some(HibernatePool::new(Box::new(store)))
+            }
+            (None, true) => Some(HibernatePool::new(Box::new(MemStore::new()))),
+            (None, false) => None,
+        };
+        // recover-on-boot: every stream a previous run persisted is
+        // re-registered as hibernated (portless until resumed), and the
+        // id counter moves past them so new opens never collide
+        let mut next_id = 1u64;
+        let mut recovered = 0u64;
+        if let Some(pool) = &pool {
+            for raw in pool.stored_ids().map_err(EngineError::internal)? {
+                pool.register_recovered(StreamId(raw));
+                next_id = next_id.max(raw + 1);
+                recovered += 1;
+            }
+        }
         let mut shards = Vec::with_capacity(n);
         for s in 0..n {
-            shards.push(ShardThread::start(s, cfg.clone(), obs.clone())?);
+            shards.push(ShardThread::start(s, cfg.clone(), obs.clone(), pool.clone())?);
         }
         for t in shards.iter_mut() {
             t.wait_ready()?;
@@ -513,7 +775,7 @@ impl ShardedEngine {
             shards.iter().map(|t| t.handle()).collect::<Vec<_>>().into();
         let door = FrontDoor {
             router: ShardRouter::new(n, cfg.placement),
-            next_id: 1,
+            next_id,
             placed_primary: 0,
             placed_fallback: 0,
             cluster_rejects: 0,
@@ -521,8 +783,12 @@ impl ShardedEngine {
             migrations_completed: 0,
             migrations_aborted: 0,
             quiesce_latency: LatencyHisto::new(),
+            streams_recovered: recovered,
+            snapshots_taken: 0,
+            snapshot_latency: LatencyHisto::new(),
         };
-        let handle = EngineHandle { shards: handles, door: Arc::new(RwLock::new(door)), obs };
+        let handle =
+            EngineHandle { shards: handles, door: Arc::new(RwLock::new(door)), obs, pool };
         Ok(Self { shards, handle })
     }
 

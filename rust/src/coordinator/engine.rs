@@ -15,7 +15,8 @@
 //!   clients ──► Session::push / recv / try_recv   (close-on-drop)
 //!                 │
 //!                 ▼
-//!              EngineHandle::open / metrics / migrate / rebalance
+//!              EngineHandle::open / resume / metrics / migrate /
+//!                 │            rebalance / snapshot
 //!                 │  ShardRouter (hash placement, least-loaded
 //!                 │  fallback, stream → shard pinning)
 //!                 │  migrate: quiesce → export StreamState →
@@ -24,8 +25,19 @@
 //!        ▼        ▼          ▼
 //!     shard 0   shard 1 …  shard N-1   Router + Batcher + StreamBackend
 //!        │        │          │         per worker thread
+//!        │        │          │  full? spill LRU stream ──► StateStore
+//!        │        │          │  push to spilled stream ◄── restore
 //!        └────────┴──────────┴── per-stream channels ──► TickResult
 //! ```
+//!
+//! With `cfg.hibernate` / `cfg.state_dir` set, slot capacity bounds
+//! *active* streams, not registered ones: full shards spill their
+//! coldest stream to a [`StateStore`](crate::store::StateStore) and a
+//! push wakes it back transparently. A `state_dir` additionally makes
+//! sessions durable — `snapshot()` checkpoints every live lane, a
+//! restarted engine recovers every registered stream as hibernated,
+//! and `resume(id)` reattaches a client bitwise-exactly where it
+//! left off.
 //!
 //! Execution backends implement the [`StreamBackend`] trait (scalar and
 //! PJRT ship built-in); a stream's whole serving identity exports as a

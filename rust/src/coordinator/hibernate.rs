@@ -1,0 +1,303 @@
+//! Hibernation policy: the cluster-wide table of spilled streams and
+//! the glue between coordinator types and the `store` subsystem.
+//!
+//! A hibernated stream has no backend lane anywhere — its whole
+//! identity lives as a [`StreamRecord`] blob in a [`StateStore`], plus
+//! one row in this pool's table remembering whether a live client still
+//! holds the stream's output channel. Spilling happens on the shard
+//! worker (the victim's lane is exported right before the slot is
+//! reused); restoring happens at the front door (a PUSH or resume to a
+//! hibernated id imports the record into a free lane, possibly after a
+//! colder stream is spilled to make room). The pool serializes store
+//! access behind one mutex; callers must never hold that lock across a
+//! shard round-trip, so every method here does its store work and
+//! returns.
+//!
+//! The blob is *kept* in the store after a restore: it doubles as the
+//! crash-recovery checkpoint (refreshed by the next spill or periodic
+//! snapshot) and is only deleted when the stream is explicitly closed.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::coordinator::batcher::Pending;
+use crate::coordinator::shard::{ExportedStream, TickResult};
+use crate::coordinator::slot_stepper::StreamState;
+use crate::coordinator::slots::StreamId;
+use crate::store::codec::StreamRecord;
+use crate::store::{StateStore, StoreError};
+
+/// Counters for the hibernation subsystem, snapshotted into
+/// `ClusterMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HibernateStats {
+    /// Streams spilled out of a lane into the store (lifetime total).
+    pub spills: u64,
+    /// Streams restored from the store into a lane (lifetime total).
+    pub restores: u64,
+    /// Streams re-registered as hibernated by recover-on-boot.
+    pub recovered: u64,
+}
+
+struct PoolInner {
+    store: Box<dyn StateStore>,
+    /// Hibernated streams → the output channel their client still
+    /// holds (`None` for streams recovered from disk after a restart:
+    /// those wait for an explicit resume to mint a new channel).
+    table: BTreeMap<StreamId, Option<Sender<TickResult>>>,
+    stats: HibernateStats,
+    /// Reused encode buffer so steady snapshotting stays allocation-lean.
+    buf: Vec<u8>,
+}
+
+/// Cloneable, thread-safe handle to the hibernation table + store.
+#[derive(Clone)]
+pub(crate) struct HibernatePool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl HibernatePool {
+    pub(crate) fn new(store: Box<dyn StateStore>) -> HibernatePool {
+        HibernatePool {
+            inner: Arc::new(Mutex::new(PoolInner {
+                store,
+                table: BTreeMap::new(),
+                stats: HibernateStats::default(),
+                buf: Vec::new(),
+            })),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        // a poisoned pool lock means a panic mid-store-call; the table
+        // and store are still structurally valid, so keep serving
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Spill a live stream: persist its record and remember its output
+    /// channel. On store failure nothing is recorded and the caller
+    /// keeps the stream in its lane.
+    pub(crate) fn spill(
+        &self,
+        rec: &StreamRecord,
+        port: Sender<TickResult>,
+    ) -> Result<(), StoreError> {
+        let mut g = self.lock();
+        let PoolInner { store, buf, .. } = &mut *g;
+        rec.encode_into(buf);
+        store.put(rec.stream, buf)?;
+        g.table.insert(StreamId(rec.stream), Some(port));
+        g.stats.spills += 1;
+        Ok(())
+    }
+
+    /// Refresh the durable checkpoint of a stream that stays resident
+    /// in its lane (the periodic-snapshot path): store write only, no
+    /// table entry.
+    pub(crate) fn checkpoint(&self, rec: &StreamRecord) -> Result<(), StoreError> {
+        let mut g = self.lock();
+        let PoolInner { store, buf, .. } = &mut *g;
+        rec.encode_into(buf);
+        store.put(rec.stream, buf)
+    }
+
+    /// Whether `id` is currently hibernated.
+    pub(crate) fn contains(&self, id: StreamId) -> bool {
+        self.lock().table.contains_key(&id)
+    }
+
+    /// `None` if not hibernated; otherwise whether a live client still
+    /// holds the stream's output channel.
+    pub(crate) fn has_port(&self, id: StreamId) -> Option<bool> {
+        self.lock().table.get(&id).map(|p| p.is_some())
+    }
+
+    /// Start restoring `id`: load + decode its record and take its
+    /// table row. The caller must either land the stream in a lane and
+    /// call [`Self::commit_restore`], or put the row back with
+    /// [`Self::abort_restore`]. The blob stays in the store either way
+    /// (it is the crash-recovery checkpoint until the stream closes).
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn begin_restore(
+        &self,
+        id: StreamId,
+    ) -> Result<Option<(StreamRecord, Option<Sender<TickResult>>)>, StoreError> {
+        let mut g = self.lock();
+        if !g.table.contains_key(&id) {
+            return Ok(None);
+        }
+        let Some(blob) = g.store.get(id.0)? else {
+            // table/store diverged (e.g. a store error during spill
+            // cleanup): drop the orphan row rather than wedge the id
+            g.table.remove(&id);
+            return Ok(None);
+        };
+        let rec = StreamRecord::decode(&blob)?;
+        let port = g.table.remove(&id).flatten();
+        Ok(Some((rec, port)))
+    }
+
+    /// The restore landed in a lane.
+    pub(crate) fn commit_restore(&self, _id: StreamId) {
+        self.lock().stats.restores += 1;
+    }
+
+    /// The restore failed everywhere: put the table row back so the
+    /// stream stays resumable.
+    pub(crate) fn abort_restore(&self, id: StreamId, port: Option<Sender<TickResult>>) {
+        self.lock().table.insert(id, port);
+    }
+
+    /// Recover-on-boot: re-register a stream found in the store as
+    /// hibernated with no owner (a resume request mints its channel).
+    pub(crate) fn register_recovered(&self, id: StreamId) {
+        let mut g = self.lock();
+        g.table.insert(id, None);
+        g.stats.recovered += 1;
+    }
+
+    /// Forget `id` entirely (stream closed): table row and stored blob.
+    pub(crate) fn remove(&self, id: StreamId) -> Result<bool, StoreError> {
+        let mut g = self.lock();
+        let had_row = g.table.remove(&id).is_some();
+        let had_blob = g.store.delete(id.0)?;
+        Ok(had_row || had_blob)
+    }
+
+    /// Stream ids currently hibernated (ascending).
+    pub(crate) fn ids(&self) -> Vec<StreamId> {
+        self.lock().table.keys().copied().collect()
+    }
+
+    /// Stream ids present in the backing store (ascending) — on a fresh
+    /// boot over an existing state dir these are the streams to recover.
+    pub(crate) fn stored_ids(&self) -> Result<Vec<u64>, StoreError> {
+        self.lock().store.list()
+    }
+
+    /// Number of currently hibernated streams.
+    pub(crate) fn resident(&self) -> usize {
+        self.lock().table.len()
+    }
+
+    pub(crate) fn stats(&self) -> HibernateStats {
+        self.lock().stats
+    }
+
+    /// Flush the backing store to durable media.
+    pub(crate) fn sync(&self) -> Result<(), StoreError> {
+        self.lock().store.sync()
+    }
+}
+
+/// Snapshot an exported stream as a storable record. `f32`s are moved
+/// bit-for-bit; only the batcher timestamps are dropped (they are
+/// re-stamped on restore).
+pub(crate) fn record_of(id: StreamId, payload: &ExportedStream) -> StreamRecord {
+    record_from_parts(id, payload.ticks, &payload.state, &payload.queued)
+}
+
+/// [`record_of`] over the pieces a shard holds mid-spill, before any
+/// `ExportedStream` exists.
+pub(crate) fn record_from_parts(
+    id: StreamId,
+    ticks: u64,
+    state: &StreamState,
+    queued: &[Pending],
+) -> StreamRecord {
+    StreamRecord {
+        stream: id.0,
+        ticks,
+        pos: state.pos,
+        write_heads: state.write_heads.clone(),
+        kv_rings: state.kv_rings.clone(),
+        queued: queued.iter().map(|p| p.tokens.clone()).collect(),
+    }
+}
+
+/// Rebuild an importable stream from a stored record plus the output
+/// channel it should deliver ticks on. Queued tokens are re-stamped
+/// `now` (their original enqueue instants died with the spill; queue
+/// latency restarts at restore, which is the honest reading).
+pub(crate) fn payload_of(
+    rec: StreamRecord,
+    port: Sender<TickResult>,
+    now: Instant,
+) -> Box<ExportedStream> {
+    let StreamRecord { ticks, pos, write_heads, kv_rings, queued, .. } = rec;
+    Box::new(ExportedStream {
+        state: StreamState { kv_rings, write_heads, pos },
+        port,
+        ticks,
+        queued: queued
+            .into_iter()
+            .map(|tokens| Pending { tokens, enqueued: now })
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemStore;
+    use std::sync::mpsc;
+
+    fn rec(id: u64) -> StreamRecord {
+        StreamRecord {
+            stream: id,
+            ticks: 3,
+            pos: 5,
+            write_heads: vec![1, 2],
+            kv_rings: vec![0.5, -1.5],
+            queued: vec![vec![9.0]],
+        }
+    }
+
+    #[test]
+    fn spill_restore_cycle_keeps_blob_until_removed() {
+        let pool = HibernatePool::new(Box::new(MemStore::new()));
+        let (tx, _rx) = mpsc::channel();
+        pool.spill(&rec(7), tx).unwrap();
+        assert!(pool.contains(StreamId(7)));
+        assert_eq!(pool.has_port(StreamId(7)), Some(true));
+        let (got, port) = pool.begin_restore(StreamId(7)).unwrap().unwrap();
+        assert_eq!(got, rec(7));
+        assert!(port.is_some());
+        assert!(!pool.contains(StreamId(7)));
+        pool.commit_restore(StreamId(7));
+        // blob survives the restore as the crash checkpoint…
+        assert_eq!(pool.stored_ids().unwrap(), vec![7]);
+        // …until the stream is closed for real
+        assert!(pool.remove(StreamId(7)).unwrap());
+        assert_eq!(pool.stored_ids().unwrap(), Vec::<u64>::new());
+        let s = pool.stats();
+        assert_eq!((s.spills, s.restores, s.recovered), (1, 1, 0));
+    }
+
+    #[test]
+    fn abort_restore_reinstates_the_row() {
+        let pool = HibernatePool::new(Box::new(MemStore::new()));
+        let (tx, _rx) = mpsc::channel();
+        pool.spill(&rec(4), tx).unwrap();
+        let (_rec, port) = pool.begin_restore(StreamId(4)).unwrap().unwrap();
+        pool.abort_restore(StreamId(4), port);
+        assert_eq!(pool.has_port(StreamId(4)), Some(true));
+    }
+
+    #[test]
+    fn recovered_streams_are_portless() {
+        let mut store = MemStore::new();
+        store.put(11, &rec(11).encode()).unwrap();
+        let pool = HibernatePool::new(Box::new(store));
+        for id in pool.stored_ids().unwrap() {
+            pool.register_recovered(StreamId(id));
+        }
+        assert_eq!(pool.has_port(StreamId(11)), Some(false));
+        assert_eq!(pool.stats().recovered, 1);
+        let (got, port) = pool.begin_restore(StreamId(11)).unwrap().unwrap();
+        assert_eq!(got.stream, 11);
+        assert!(port.is_none());
+    }
+}

@@ -131,6 +131,11 @@ pub struct EngineMetrics {
     pub migrations_in: u64,
     /// Streams that migrated off this shard (net of aborted exports).
     pub migrations_out: u64,
+    /// Streams this shard spilled to the state store to make room
+    /// (hibernation: state is kept and resumable, unlike an eviction).
+    pub streams_hibernated: u64,
+    /// Hibernated streams restored into one of this shard's lanes.
+    pub streams_restored: u64,
     /// Per-tick backend step latency.
     pub tick_latency: LatencyHisto,
     /// time a token waits in the batcher before its tick starts
@@ -169,6 +174,8 @@ impl EngineMetrics {
         self.admission_rejects += other.admission_rejects;
         self.migrations_in += other.migrations_in;
         self.migrations_out += other.migrations_out;
+        self.streams_hibernated += other.streams_hibernated;
+        self.streams_restored += other.streams_restored;
         self.tick_latency.merge(&other.tick_latency);
         self.queue_latency.merge(&other.queue_latency);
         self.stage_spans.merge(&other.stage_spans);
@@ -184,7 +191,8 @@ impl EngineMetrics {
     pub fn report(&self) -> String {
         let mut s = format!(
             "ticks={} tokens={} outputs={} streams={}/{} evicted={} rejects={} \
-             migr={}in/{}out tick(mean={:?} p50={:?} p95={:?} max={:?}) queue(p95={:?})",
+             migr={}in/{}out hib={}out/{}in tick(mean={:?} p50={:?} p95={:?} max={:?}) \
+             queue(p95={:?})",
             self.ticks,
             self.tokens_in,
             self.outputs,
@@ -194,6 +202,8 @@ impl EngineMetrics {
             self.admission_rejects,
             self.migrations_in,
             self.migrations_out,
+            self.streams_hibernated,
+            self.streams_restored,
             self.tick_latency.mean(),
             self.tick_latency.quantile(0.5),
             self.tick_latency.quantile(0.95),
@@ -230,6 +240,10 @@ pub struct ClusterMetrics {
     pub streams_evicted: u64,
     /// Shard-level admission rejects, cluster-wide.
     pub admission_rejects: u64,
+    /// Streams spilled to the state store, cluster-wide.
+    pub streams_hibernated: u64,
+    /// Hibernated streams restored into lanes, cluster-wide.
+    pub streams_restored: u64,
     /// Per-tick backend step latency, merged across shards.
     pub tick_latency: LatencyHisto,
     /// Batcher queue-wait latency, merged across shards.
@@ -259,6 +273,16 @@ pub struct ClusterMetrics {
     /// Stream-unavailability window per completed migration: export
     /// request to import acknowledgment (read p50/p99 off this).
     pub quiesce_latency: LatencyHisto,
+    /// Streams currently hibernated (a gauge, not a counter: state in
+    /// the store with no backend lane anywhere).
+    pub hibernated_resident: u64,
+    /// Streams re-registered as hibernated by recover-on-boot.
+    pub streams_recovered: u64,
+    /// Full-cluster snapshots taken (periodic or explicit).
+    pub snapshots_taken: u64,
+    /// Wall time per full-cluster snapshot (quiesce + export + store
+    /// write for every bound stream).
+    pub snapshot_latency: LatencyHisto,
     /// Kernel path the shard backends resolved at startup (shards share
     /// one `EngineConfig`, so one value describes the cluster).
     pub kernel_dispatch: String,
@@ -284,6 +308,8 @@ impl ClusterMetrics {
             streams_closed: agg.streams_closed,
             streams_evicted: agg.streams_evicted,
             admission_rejects: agg.admission_rejects,
+            streams_hibernated: agg.streams_hibernated,
+            streams_restored: agg.streams_restored,
             tick_latency: agg.tick_latency,
             queue_latency: agg.queue_latency,
             stage_spans: agg.stage_spans,
@@ -313,6 +339,8 @@ impl ClusterMetrics {
             admission_rejects: self.admission_rejects,
             migrations_in,
             migrations_out,
+            streams_hibernated: self.streams_hibernated,
+            streams_restored: self.streams_restored,
             tick_latency: self.tick_latency.clone(),
             queue_latency: self.queue_latency.clone(),
             stage_spans: self.stage_spans.clone(),
@@ -339,6 +367,16 @@ impl ClusterMetrics {
             self.quiesce_latency.quantile(0.99),
             self.aggregate().report(),
         );
+        if self.hibernated_resident > 0 || self.streams_hibernated > 0 || self.snapshots_taken > 0
+        {
+            s.push_str(&format!(
+                "\n  hibernation: resident={} recovered={} snapshots={} (p99={:?})",
+                self.hibernated_resident,
+                self.streams_recovered,
+                self.snapshots_taken,
+                self.snapshot_latency.quantile(0.99),
+            ));
+        }
         if self.per_shard.len() > 1 {
             for (i, m) in self.per_shard.iter().enumerate() {
                 s.push_str(&format!("\n  shard {i}: {}", m.report()));

@@ -41,6 +41,12 @@
 //!   fallback), the [`cluster::ShardedEngine`] front door, and live
 //!   stream migration ([`cluster::EngineHandle::migrate`] /
 //!   [`cluster::EngineHandle::rebalance`]).
+//! - [`hibernate`] — the hibernation policy layer: the cluster-wide
+//!   table of streams spilled out of backend lanes into a
+//!   `crate::store::StateStore`, plus the conversions between live
+//!   coordinator state and durable `store::codec::StreamRecord`s.
+//!   Spill happens shard-side when admission needs a lane; restore
+//!   happens at the front door on the next PUSH or resume.
 //! - [`session`] — the client layer: RAII [`session::Session`] stream
 //!   handles over the typed [`session::EngineError`] enum, with a
 //!   splittable [`session::TickReceiver`] half so pushes and receives
@@ -57,6 +63,8 @@
 pub mod batcher;
 #[deny(missing_docs)]
 pub mod cluster;
+#[deny(missing_docs)]
+pub mod hibernate;
 #[deny(missing_docs)]
 pub mod engine;
 #[deny(missing_docs)]

@@ -88,6 +88,18 @@ impl Router {
         (Admission::Accepted(slot), evicted)
     }
 
+    /// The hibernation spill candidate: when every slot is busy, the
+    /// longest-idle session — *regardless* of the idle timeout, because
+    /// hibernation spills state to the store instead of dropping it, so
+    /// slot capacity bounds *active* streams, not registered ones.
+    /// `None` while a free slot remains (nothing needs to move).
+    pub fn spill_victim(&self) -> Option<StreamId> {
+        if !self.slots.is_full() {
+            return None;
+        }
+        self.sessions.iter().min_by_key(|(_, s)| s.last_activity).map(|(&id, _)| id)
+    }
+
     /// Record a completed tick for a stream.
     pub fn touch(&mut self, id: StreamId, now: Instant) {
         if let Some(s) = self.sessions.get_mut(&id) {
@@ -149,6 +161,20 @@ mod tests {
         assert_eq!(adm, Admission::Rejected);
         assert_eq!(ev, None);
         assert!(r.session(id1).is_some());
+    }
+
+    #[test]
+    fn spill_victim_is_lru_and_ignores_idle_timeout() {
+        let now = Instant::now();
+        let mut r = Router::new(2, Duration::from_secs(3600));
+        assert_eq!(r.spill_victim(), None); // empty: nothing to spill
+        r.admit(StreamId(1), now);
+        assert_eq!(r.spill_victim(), None); // free slot remains
+        r.admit(StreamId(2), now + Duration::from_millis(1));
+        // Full: LRU wins even though neither is past the idle timeout.
+        assert_eq!(r.spill_victim(), Some(StreamId(1)));
+        r.touch(StreamId(1), now + Duration::from_millis(2));
+        assert_eq!(r.spill_victim(), Some(StreamId(2)));
     }
 
     #[test]

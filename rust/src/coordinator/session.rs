@@ -42,9 +42,13 @@ pub enum EngineError {
     Timeout,
     /// The request was malformed (e.g. a wrong token-vector length).
     InvalidRequest(String),
+    /// The stream is hibernated (its state lives in the state store)
+    /// and has no live owner to restore it through — re-open it with a
+    /// resume request to wake it.
+    Hibernated(StreamId),
     /// The active backend cannot perform the operation (e.g. stream
     /// snapshot export on the PJRT backend).
-    Unsupported(&'static str),
+    Unsupported(String),
     /// An internal engine failure (model/backend/runtime error).
     Internal(String),
 }
@@ -69,6 +73,9 @@ impl fmt::Display for EngineError {
             EngineError::ShuttingDown => write!(f, "engine is shutting down"),
             EngineError::Timeout => write!(f, "timed out waiting for a tick result"),
             EngineError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            EngineError::Hibernated(id) => {
+                write!(f, "stream {} is hibernated; resume it to push", id.0)
+            }
             EngineError::Unsupported(m) => write!(f, "unsupported: {m}"),
             EngineError::Internal(m) => write!(f, "engine internal error: {m}"),
         }
@@ -239,6 +246,10 @@ mod tests {
             "stream 3 queue full (backpressure)"
         );
         assert_eq!(EngineError::ShuttingDown.to_string(), "engine is shutting down");
+        assert_eq!(
+            EngineError::Hibernated(StreamId(9)).to_string(),
+            "stream 9 is hibernated; resume it to push"
+        );
         assert!(EngineError::internal("boom").to_string().contains("boom"));
     }
 

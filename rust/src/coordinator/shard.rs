@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{EngineBackend, EngineConfig};
 use crate::coordinator::batcher::{Batcher, Pending};
+use crate::coordinator::hibernate::{self, HibernatePool};
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::router::{Admission, Router};
 use crate::coordinator::session::EngineError;
@@ -95,19 +96,38 @@ pub(crate) type PushRejected = (EngineError, Option<Vec<f32>>);
 /// front door must still unbind the victim or its binding leaks.
 pub(crate) type ImportRejected = (EngineError, Option<Box<ExportedStream>>, Option<StreamId>);
 
+/// Why a stream is being imported into a lane — drives which counters
+/// and spans the landing shard records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ImportReason {
+    /// Live migration landing on its target shard.
+    Migrate,
+    /// Migration abort: this import undoes this shard's own failed
+    /// export, so the export's `migrations_out` is un-counted instead
+    /// of `migrations_in` incremented.
+    MigrateRollback,
+    /// A hibernated stream waking back into a lane.
+    Restore,
+    /// A stream returning to its own slot right after a snapshot
+    /// export (counter-neutral: the stream never logically moved).
+    Snapshot,
+}
+
 pub(crate) enum ShardRequest {
     Open { id: StreamId, reply: Sender<Result<Admitted, EngineError>> },
     Push { id: StreamId, tokens: Vec<f32>, reply: Sender<Result<(), PushRejected>> },
     Close { id: StreamId },
-    Export { id: StreamId, reply: Sender<Result<Box<ExportedStream>, EngineError>> },
+    Export {
+        id: StreamId,
+        /// Migration exports count `migrations_out`; snapshot exports
+        /// are counter-neutral (the stream comes right back).
+        for_migration: bool,
+        reply: Sender<Result<Box<ExportedStream>, EngineError>>,
+    },
     Import {
         id: StreamId,
         payload: Box<ExportedStream>,
-        /// True when this import undoes this shard's own failed export
-        /// (migration abort): the stream's return must not count as a
-        /// migration, so the export's `migrations_out` is un-counted
-        /// instead of `migrations_in` incremented.
-        rollback: bool,
+        reason: ImportReason,
         reply: Sender<Result<Option<StreamId>, ImportRejected>>,
     },
     Metrics { reply: Sender<EngineMetrics> },
@@ -152,29 +172,35 @@ impl ShardHandle {
         let _ = self.tx.send(ShardRequest::Close { id });
     }
 
-    /// Quiesce + snapshot a stream for migration (removes it from this
-    /// shard on success).
-    pub(crate) fn export(&self, id: StreamId) -> Result<Box<ExportedStream>, EngineError> {
+    /// Quiesce + snapshot a stream (removes it from this shard on
+    /// success). `for_migration` governs counters only — snapshot
+    /// exports re-import immediately and must stay counter-neutral.
+    pub(crate) fn export(
+        &self,
+        id: StreamId,
+        for_migration: bool,
+    ) -> Result<Box<ExportedStream>, EngineError> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(ShardRequest::Export { id, reply })
+            .send(ShardRequest::Export { id, for_migration, reply })
             .map_err(|_| EngineError::ShuttingDown)?;
         rx.recv().map_err(|_| EngineError::ShuttingDown)?
     }
 
-    /// Land an exported stream on this shard (`rollback` = this is the
-    /// abort path undoing this shard's own export). On failure the
-    /// payload is returned (when recoverable) so the caller can
-    /// re-import it on the source shard.
+    /// Land an exported stream on this shard ([`ImportReason`] says
+    /// whether this is a migration, its abort path, a hibernation
+    /// restore, or a snapshot return). On failure the payload is
+    /// returned (when recoverable) so the caller can re-import it on
+    /// the source shard or re-hibernate it.
     pub(crate) fn import(
         &self,
         id: StreamId,
         payload: Box<ExportedStream>,
-        rollback: bool,
+        reason: ImportReason,
     ) -> Result<Option<StreamId>, ImportRejected> {
         let (reply, rx) = mpsc::channel();
         if let Err(mpsc::SendError(req)) =
-            self.tx.send(ShardRequest::Import { id, payload, rollback, reply })
+            self.tx.send(ShardRequest::Import { id, payload, reason, reply })
         {
             let payload = match req {
                 ShardRequest::Import { payload, .. } => Some(payload),
@@ -216,12 +242,13 @@ impl ShardThread {
         shard: usize,
         cfg: EngineConfig,
         obs: ObsHandle,
+        pool: Option<HibernatePool>,
     ) -> Result<Self, EngineError> {
         let (tx, rx) = mpsc::sync_channel::<ShardRequest>(cfg.request_queue);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), EngineError>>();
         let join = std::thread::Builder::new()
             .name(format!("deepcot-shard-{shard}"))
-            .spawn(move || shard_main(shard, cfg, obs, rx, ready_tx))
+            .spawn(move || shard_main(shard, cfg, obs, pool, rx, ready_tx))
             .map_err(EngineError::internal)?;
         Ok(Self {
             handle: ShardHandle { shard, tx },
@@ -320,6 +347,59 @@ struct StreamPort {
     ticks: u64,
 }
 
+/// When hibernation is on and every slot is busy, spill the
+/// longest-idle resident stream to the state store so the admission
+/// that follows lands in a free lane. Returns the spilled victim — the
+/// caller reports it to the front door exactly like an eviction victim
+/// (the door unbinds it; the pool's table keeps it resumable). On any
+/// failure (backend can't snapshot, store write failed) the victim
+/// stays live, its tokens go back in the batcher, and admission falls
+/// through to the legacy evict-or-reject path.
+#[allow(clippy::too_many_arguments)]
+fn make_room(
+    now: Instant,
+    shard: usize,
+    obs: &ObsHandle,
+    pool: &Option<HibernatePool>,
+    stepper: &mut SlotStepper,
+    router: &mut Router,
+    batcher: &mut Batcher,
+    ports: &mut BTreeMap<StreamId, StreamPort>,
+    metrics: &mut EngineMetrics,
+    spans_on: bool,
+) -> Option<StreamId> {
+    let pool = pool.as_ref()?;
+    let vid = router.spill_victim()?;
+    let slot = router.slot_of(vid)?;
+    let port = ports.get(&vid)?;
+    let mut state = StreamState::default();
+    if stepper.export_lane(slot, &mut state).is_err() {
+        // backend can't snapshot lanes (e.g. PJRT): hard-drop semantics
+        return None;
+    }
+    let queued = batcher.extract(vid);
+    let rec = hibernate::record_from_parts(vid, port.ticks, &state, &queued);
+    match pool.spill(&rec, port.out.clone()) {
+        Ok(()) => {
+            ports.remove(&vid);
+            router.close(vid);
+            stepper.clear_lane(slot);
+            metrics.streams_hibernated += 1;
+            obs.event(EventKind::StreamHibernate, vid.0, shard as i64, 0);
+            if spans_on {
+                metrics.stage_spans.record(Stage::HibernateSpill, now.elapsed());
+            }
+            Some(vid)
+        }
+        Err(_) => {
+            // store write failed: the stream never left — requeue its
+            // tokens and let admission take the legacy path
+            batcher.restore(vid, queued);
+            None
+        }
+    }
+}
+
 /// The `Import` request body: validate → admit → restore lane → attach
 /// port → requeue tokens. Validation runs before admission so a bad
 /// snapshot cannot strand a half-admitted stream; on any failure the
@@ -328,19 +408,23 @@ struct StreamPort {
 fn import_stream(
     id: StreamId,
     payload: Box<ExportedStream>,
-    rollback: bool,
+    reason: ImportReason,
     now: Instant,
     shard: usize,
     obs: &ObsHandle,
+    pool: &Option<HibernatePool>,
     stepper: &mut SlotStepper,
     router: &mut Router,
     batcher: &mut Batcher,
     ports: &mut BTreeMap<StreamId, StreamPort>,
     metrics: &mut EngineMetrics,
+    spans_on: bool,
 ) -> Result<Option<StreamId>, ImportRejected> {
     if let Err(e) = stepper.validate_state(&payload.state) {
         return Err((e, Some(payload), None));
     }
+    let spilled =
+        make_room(now, shard, obs, pool, stepper, router, batcher, ports, metrics, spans_on);
     let (adm, evicted) = router.admit(id, now);
     if let Some(eid) = evicted {
         // same teardown as an admission eviction on Open
@@ -349,6 +433,9 @@ fn import_stream(
         metrics.streams_evicted += 1;
         obs.event(EventKind::StreamEvict, eid.0, shard as i64, 0);
     }
+    // at most one of the two is set: a successful spill guarantees the
+    // admission below finds a free slot and evicts nobody
+    let evicted = spilled.or(evicted);
     let slot = match adm {
         Admission::Accepted(slot) => slot,
         Admission::Rejected => {
@@ -372,12 +459,18 @@ fn import_stream(
     let ExportedStream { port, ticks, queued, .. } = *payload;
     ports.insert(id, StreamPort { out: port, ticks });
     batcher.restore(id, queued);
-    if rollback {
-        // the stream never left: un-count the aborted export so failed
-        // migrations don't inflate this shard's in/out counters
-        metrics.migrations_out = metrics.migrations_out.saturating_sub(1);
-    } else {
-        metrics.migrations_in += 1;
+    match reason {
+        ImportReason::Migrate => metrics.migrations_in += 1,
+        ImportReason::MigrateRollback => {
+            // the stream never left: un-count the aborted export so
+            // failed migrations don't inflate this shard's counters
+            metrics.migrations_out = metrics.migrations_out.saturating_sub(1);
+        }
+        ImportReason::Restore => {
+            metrics.streams_restored += 1;
+            obs.event(EventKind::StreamRestore, id.0, shard as i64, 0);
+        }
+        ImportReason::Snapshot => {}
     }
     Ok(evicted)
 }
@@ -386,6 +479,7 @@ fn shard_main(
     shard: usize,
     cfg: EngineConfig,
     obs: ObsHandle,
+    pool: Option<HibernatePool>,
     rx: Receiver<ShardRequest>,
     ready: Sender<Result<(), EngineError>>,
 ) -> Result<(), EngineError> {
@@ -437,6 +531,21 @@ fn shard_main(
                 let now = Instant::now();
                 match req {
                     ShardRequest::Open { id, reply } => {
+                        // with hibernation on, a full shard spills its
+                        // coldest stream to the store instead of dropping
+                        // an idle one
+                        let spilled = make_room(
+                            now,
+                            shard,
+                            &obs,
+                            &pool,
+                            &mut stepper,
+                            &mut router,
+                            &mut batcher,
+                            &mut ports,
+                            &mut metrics,
+                            spans_on,
+                        );
                         let (adm, evicted) = router.admit(id, now);
                         if let Some(eid) = evicted {
                             // the victim's port and queued tokens go with
@@ -446,6 +555,7 @@ fn shard_main(
                             metrics.streams_evicted += 1;
                             obs.event(EventKind::StreamEvict, eid.0, shard as i64, 0);
                         }
+                        let evicted = spilled.or(evicted);
                         let res = match adm {
                             Admission::Accepted(slot) => {
                                 stepper.clear_lane(slot);
@@ -499,7 +609,7 @@ fn shard_main(
                         batcher.forget(id);
                         ports.remove(&id);
                     }
-                    ShardRequest::Export { id, reply } => {
+                    ShardRequest::Export { id, for_migration, reply } => {
                         let res = match router.slot_of(id) {
                             None => Err(EngineError::StreamClosed(id)),
                             Some(slot) => {
@@ -509,7 +619,9 @@ fn shard_main(
                                         router.close(id);
                                         stepper.clear_lane(slot);
                                         let queued = batcher.extract(id);
-                                        metrics.migrations_out += 1;
+                                        if for_migration {
+                                            metrics.migrations_out += 1;
+                                        }
                                         Ok(Box::new(ExportedStream {
                                             state,
                                             port: port.out,
@@ -531,27 +643,41 @@ fn shard_main(
                                 }
                             }
                         };
-                        if spans_on && res.is_ok() {
+                        if spans_on && res.is_ok() && for_migration {
                             metrics.stage_spans.record(Stage::MigExport, now.elapsed());
                         }
                         let _ = reply.send(res);
                     }
-                    ShardRequest::Import { id, payload, rollback, reply } => {
+                    ShardRequest::Import { id, payload, reason, reply } => {
                         let res = import_stream(
                             id,
                             payload,
-                            rollback,
+                            reason,
                             now,
                             shard,
                             &obs,
+                            &pool,
                             &mut stepper,
                             &mut router,
                             &mut batcher,
                             &mut ports,
                             &mut metrics,
+                            spans_on,
                         );
                         if spans_on && res.is_ok() {
-                            metrics.stage_spans.record(Stage::MigImport, now.elapsed());
+                            match reason {
+                                ImportReason::Migrate | ImportReason::MigrateRollback => {
+                                    metrics.stage_spans.record(Stage::MigImport, now.elapsed());
+                                }
+                                ImportReason::Restore => {
+                                    metrics
+                                        .stage_spans
+                                        .record(Stage::HibernateRestore, now.elapsed());
+                                }
+                                // snapshot round-trips are measured whole
+                                // at the front door (Stage::Snapshot)
+                                ImportReason::Snapshot => {}
+                            }
                         }
                         let _ = reply.send(res);
                     }

@@ -563,14 +563,14 @@ impl StreamBackend for PjrtSlotStepper {
     }
 
     fn validate_state(&self, _state: &StreamState) -> Result<(), EngineError> {
-        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED))
+        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED.to_string()))
     }
 
     fn export_lane(&self, _lane: usize, _into: &mut StreamState) -> Result<(), EngineError> {
-        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED))
+        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED.to_string()))
     }
 
     fn import_lane(&mut self, _lane: usize, _state: &StreamState) -> Result<(), EngineError> {
-        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED))
+        Err(EngineError::Unsupported(PJRT_SNAPSHOT_UNSUPPORTED.to_string()))
     }
 }

@@ -22,6 +22,11 @@
 //!   Prometheus/JSON exposition (HTTP endpoint + wire frame), windowed
 //!   rates, and a bounded structured event journal, all behind the
 //!   `obs` level knob.
+//! - [`store`] — durable stream-state storage: a versioned checksummed
+//!   codec for hibernated stream records plus the [`store::StateStore`]
+//!   trait (in-memory and log-structured single-file disk impls) that
+//!   stream hibernation and `deepcot_serve --state-dir` crash recovery
+//!   run on.
 //! - [`baselines`] — the paper's comparison systems behind one
 //!   [`baselines::StreamModel`] trait (regular encoder, Continual
 //!   Transformer, Nyströmformer, FNet, DeepCoT, DeepCoT-XL, MAT-SED
@@ -56,6 +61,8 @@ pub mod nn;
 pub mod obs;
 pub mod probe;
 pub mod runtime;
+#[deny(missing_docs)]
+pub mod store;
 pub mod synthetic;
 pub mod workload;
 

@@ -161,12 +161,28 @@ impl NetClient {
 
     /// Open a stream; returns its engine-assigned id.
     pub fn open(&mut self) -> Result<u64, ClientError> {
-        self.send(&Frame::Open)?;
+        self.open_frame(Frame::Open { resume: None }, 0)
+    }
+
+    /// Reattach to a hibernated stream the server recovered from its
+    /// state store: same id, tick ordinals continue where the previous
+    /// run's left off, outputs bitwise-identical to an uninterrupted
+    /// run. Fails typed when the id is unknown ([`EngineError::StreamClosed`])
+    /// or still has a live owner ([`EngineError::InvalidRequest`]).
+    pub fn open_resume(&mut self, stream: u64) -> Result<u64, ClientError> {
+        self.open_frame(Frame::Open { resume: Some(stream) }, stream)
+    }
+
+    fn open_frame(&mut self, f: Frame, resume: u64) -> Result<u64, ClientError> {
+        self.send(&f)?;
         loop {
             match self.read_one()? {
                 Frame::Opened { stream } => return Ok(stream),
-                // open errors are connection-scoped (stream 0)
-                Frame::Error(w) if w.stream == 0 => return Err(ClientError::Engine(w.to_engine())),
+                // open errors are connection-scoped (stream 0); a
+                // resume failure may also carry the requested id
+                Frame::Error(w) if w.stream == 0 || (resume != 0 && w.stream == resume) => {
+                    return Err(ClientError::Engine(w.to_engine()))
+                }
                 other => self.park(other)?,
             }
         }

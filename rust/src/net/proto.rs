@@ -119,12 +119,15 @@ pub enum ErrCode {
     Timeout,
     /// [`EngineError::InvalidRequest`] — detail carries the message.
     InvalidRequest,
-    /// [`EngineError::Unsupported`] — detail carries the message (the
-    /// round trip back to `EngineError` is lossy: the variant holds a
-    /// `&'static str`, so the client substitutes a fixed message).
+    /// [`EngineError::Unsupported`] — detail carries the message.
     Unsupported,
     /// [`EngineError::Internal`] — detail carries the message.
     Internal,
+    /// [`EngineError::Hibernated`] — stream carries the id. Distinct
+    /// from [`ErrCode::StreamClosed`] so clients can tell "stream
+    /// unknown" from "stream hibernated with no live owner: send OPEN
+    /// with a resume id to reattach".
+    Hibernated,
 }
 
 impl ErrCode {
@@ -138,6 +141,7 @@ impl ErrCode {
             ErrCode::InvalidRequest => 6,
             ErrCode::Unsupported => 7,
             ErrCode::Internal => 8,
+            ErrCode::Hibernated => 9,
         }
     }
 
@@ -151,6 +155,7 @@ impl ErrCode {
             6 => ErrCode::InvalidRequest,
             7 => ErrCode::Unsupported,
             8 => ErrCode::Internal,
+            9 => ErrCode::Hibernated,
             other => return Err(ProtoError::BadErrorCode(other)),
         })
     }
@@ -198,17 +203,19 @@ impl WireError {
                 Self { stream, code: ErrCode::InvalidRequest, aux: 0, detail: m.clone() }
             }
             EngineError::Unsupported(m) => {
-                Self { stream, code: ErrCode::Unsupported, aux: 0, detail: (*m).to_string() }
+                Self { stream, code: ErrCode::Unsupported, aux: 0, detail: m.clone() }
             }
             EngineError::Internal(m) => {
                 Self { stream, code: ErrCode::Internal, aux: 0, detail: m.clone() }
             }
+            EngineError::Hibernated(id) => {
+                Self { stream: id.0, code: ErrCode::Hibernated, aux: 0, detail: String::new() }
+            }
         }
     }
 
-    /// Reconstruct the typed [`EngineError`] on the client side.
-    /// Bitwise-faithful for every variant except `Unsupported`, whose
-    /// `&'static str` payload is replaced by a fixed message.
+    /// Reconstruct the typed [`EngineError`] on the client side —
+    /// faithful for every variant (pinned in `tests/proto.rs`).
     pub fn to_engine(&self) -> EngineError {
         match self.code {
             ErrCode::Saturated => EngineError::Saturated { capacity: self.aux as usize },
@@ -217,10 +224,9 @@ impl WireError {
             ErrCode::ShuttingDown => EngineError::ShuttingDown,
             ErrCode::Timeout => EngineError::Timeout,
             ErrCode::InvalidRequest => EngineError::InvalidRequest(self.detail.clone()),
-            ErrCode::Unsupported => {
-                EngineError::Unsupported("operation reported unsupported by the remote engine")
-            }
+            ErrCode::Unsupported => EngineError::Unsupported(self.detail.clone()),
             ErrCode::Internal => EngineError::Internal(self.detail.clone()),
+            ErrCode::Hibernated => EngineError::Hibernated(StreamId(self.stream)),
         }
     }
 }
@@ -229,8 +235,15 @@ impl WireError {
 /// [`RawFrame`] + the `write_*` helpers instead to stay allocation-free).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    /// Open a new stream on the engine.
-    Open,
+    /// Open a stream on the engine: fresh (`resume: None`), or resume
+    /// a hibernated stream by id (after a server restart recovered it
+    /// from the state store). A fresh OPEN encodes with an empty body —
+    /// byte-identical to the pre-resume protocol — and a resume adds an
+    /// 8-byte id body, so older peers and captures stay compatible.
+    Open {
+        /// Hibernated stream to resume, or `None` for a fresh open.
+        resume: Option<u64>,
+    },
     /// Push the next token vector for a stream.
     Push {
         /// Target stream id (from [`Frame::Opened`]).
@@ -423,10 +436,15 @@ impl<'a> RawFrame<'a> {
     pub fn to_frame(&self) -> Result<Frame, ProtoError> {
         let b = self.body;
         Ok(match self.op {
-            OP_OPEN => {
-                expect_exact(b, 0, self.op)?;
-                Frame::Open
-            }
+            OP_OPEN => match b.len() {
+                0 => Frame::Open { resume: None },
+                8 => Frame::Open { resume: Some(get_u64(b, 0, self.op)?) },
+                _ => {
+                    return Err(ProtoError::BadPayload(
+                        "OPEN body must be empty (fresh) or an 8-byte resume id",
+                    ))
+                }
+            },
             OP_METRICS => {
                 expect_exact(b, 0, self.op)?;
                 Frame::Metrics
@@ -505,7 +523,12 @@ impl Frame {
         // reserve the prefix, fill the body, then patch the length in
         put_u32(out, 0);
         match self {
-            Frame::Open => out.push(OP_OPEN),
+            Frame::Open { resume } => {
+                out.push(OP_OPEN);
+                if let Some(id) = resume {
+                    put_u64(out, *id);
+                }
+            }
             Frame::Metrics => out.push(OP_METRICS),
             Frame::MetricsProm => out.push(OP_METRICS_PROM),
             Frame::Shutdown => out.push(OP_SHUTDOWN),
@@ -634,12 +657,32 @@ mod tests {
 
     #[test]
     fn fixed_frames_round_trip() {
-        for f in
-            [Frame::Open, Frame::Metrics, Frame::MetricsProm, Frame::Shutdown, Frame::ShutdownOk]
-        {
+        for f in [
+            Frame::Open { resume: None },
+            Frame::Metrics,
+            Frame::MetricsProm,
+            Frame::Shutdown,
+            Frame::ShutdownOk,
+        ] {
             let enc = f.encode();
             assert_eq!(Frame::decode(&enc[4..]).unwrap(), f);
         }
+    }
+
+    #[test]
+    fn open_resume_round_trips_and_stays_wire_compatible() {
+        // a fresh OPEN is the legacy 1-byte frame, byte for byte
+        let fresh = Frame::Open { resume: None };
+        assert_eq!(fresh.encode(), vec![1, 0, 0, 0, OP_OPEN]);
+        let res = Frame::Open { resume: Some(42) };
+        let enc = res.encode();
+        assert_eq!(enc.len(), 4 + 1 + 8);
+        assert_eq!(Frame::decode(&enc[4..]).unwrap(), res);
+        // any other body size is malformed, never a panic
+        assert!(matches!(
+            Frame::decode(&[OP_OPEN, 1, 2, 3]),
+            Err(ProtoError::BadPayload(_))
+        ));
     }
 
     #[test]
@@ -666,7 +709,9 @@ mod tests {
             E::ShuttingDown,
             E::Timeout,
             E::InvalidRequest("bad length".into()),
+            E::Unsupported("snapshot export on PJRT".into()),
             E::Internal("boom".into()),
+            E::Hibernated(StreamId(6)),
         ];
         for e in cases {
             let w = WireError::from_engine(5, &e);
@@ -677,12 +722,11 @@ mod tests {
             assert_eq!(back, w);
             assert_eq!(back.to_engine(), e, "typed error must survive the wire");
         }
-        // Unsupported is documented lossy: variant survives, text does not
-        let w = WireError::from_engine(5, &E::Unsupported("snapshot export"));
-        let Frame::Error(back) = Frame::decode(&Frame::Error(w).encode()[4..]).unwrap() else {
-            panic!("not an error frame");
-        };
-        assert!(matches!(back.to_engine(), E::Unsupported(_)));
+        // Hibernated and StreamClosed must stay distinguishable codes
+        assert_ne!(
+            WireError::from_engine(0, &E::Hibernated(StreamId(1))).code,
+            WireError::from_engine(0, &E::StreamClosed(StreamId(1))).code,
+        );
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //!
 //! Error discipline: engine failures reply typed [`WireError`] frames
 //! (backpressure, saturation, shutdown all reach the client as the
-//! same [`EngineError`] variant an in-process caller would see);
+//! same [`EngineError`] variant an in-process caller would see); a
+//! PUSH to a stream this connection doesn't own answers `Hibernated`
+//! when the engine holds it in the state store (reattach with an OPEN
+//! carrying the resume id) and `StreamClosed` when it is truly gone;
 //! malformed-but-framed requests reply `InvalidRequest` and the
 //! connection keeps serving (the length prefix kept the byte stream
 //! aligned); an undecodable length prefix tears the connection down —
@@ -412,10 +415,18 @@ fn conn_main(
                 counters.record_span(Stage::NetDecode, t_decode.elapsed());
             }
             let reply = match streams.get(&stream) {
-                None => Frame::Error(WireError::from_engine(
-                    stream,
-                    &EngineError::StreamClosed(crate::coordinator::slots::StreamId(stream)),
-                )),
+                None => {
+                    let id = crate::coordinator::slots::StreamId(stream);
+                    // "hibernated" and "gone" must stay distinguishable:
+                    // a hibernated stream is reattachable via OPEN with
+                    // a resume id, a closed one is not
+                    let e = if engine.is_hibernated(id) {
+                        EngineError::Hibernated(id)
+                    } else {
+                        EngineError::StreamClosed(id)
+                    };
+                    Frame::Error(WireError::from_engine(stream, &e))
+                }
                 Some(entry) => match entry.sess.push(tokens) {
                     Ok(()) => Frame::PushOk { stream },
                     Err(e) => Frame::Error(WireError::from_engine(stream, &e)),
@@ -429,8 +440,15 @@ fn conn_main(
             counters.record_span(Stage::NetDecode, t_decode.elapsed());
         }
         match decoded {
-            Ok(Frame::Open) => {
-                let reply = match engine.open() {
+            Ok(Frame::Open { resume }) => {
+                // fresh open, or reattach to a stream recovered from
+                // the state store (same id, ticks continue where the
+                // previous run left off)
+                let opened = match resume {
+                    None => engine.open(),
+                    Some(id) => engine.resume(crate::coordinator::slots::StreamId(id)),
+                };
+                let reply = match opened {
                     Ok(mut sess) => {
                         let stream = sess.id().0;
                         // the receiving half lives on its own forwarder
@@ -457,7 +475,7 @@ fn conn_main(
                             )),
                         }
                     }
-                    Err(e) => Frame::Error(WireError::from_engine(0, &e)),
+                    Err(e) => Frame::Error(WireError::from_engine(resume.unwrap_or(0), &e)),
                 };
                 let _ = wtx.send(Reply::Frame(reply));
             }

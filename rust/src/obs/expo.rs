@@ -218,6 +218,27 @@ pub fn render_prometheus(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMe
     p.counter("deepcot_migrations_completed_total", "Migrations landed", m.migrations_completed);
     p.counter("deepcot_migrations_aborted_total", "Live migrations failed", m.migrations_aborted);
     p.counter("deepcot_slow_ticks_total", "Ticks over the slow-tick threshold", m.slow_ticks);
+    p.counter(
+        "deepcot_streams_hibernated_total",
+        "Streams spilled to the state store",
+        m.streams_hibernated,
+    );
+    p.counter(
+        "deepcot_streams_restored_total",
+        "Hibernated streams restored into lanes",
+        m.streams_restored,
+    );
+    p.counter(
+        "deepcot_streams_recovered_total",
+        "Streams re-registered as hibernated at boot",
+        m.streams_recovered,
+    );
+    p.counter("deepcot_snapshots_total", "Full-cluster snapshots taken", m.snapshots_taken);
+    p.gauge(
+        "deepcot_hibernated_resident",
+        "Streams currently hibernated in the state store",
+        m.hibernated_resident as f64,
+    );
 
     // per-shard breakdown: every series a scraper can sum back to the
     // aggregate above (pinned in tests/obs.rs)
@@ -225,7 +246,7 @@ pub fn render_prometheus(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMe
     for (i, s) in m.per_shard.iter().enumerate() {
         p.sample("deepcot_shard_ticks_total", &format!("shard=\"{i}\""), s.ticks as f64);
     }
-    let shard_series: [(&str, fn(&crate::coordinator::metrics::EngineMetrics) -> u64); 8] = [
+    let shard_series: [(&str, fn(&crate::coordinator::metrics::EngineMetrics) -> u64); 10] = [
         ("deepcot_shard_tokens_in_total", |s| s.tokens_in),
         ("deepcot_shard_outputs_total", |s| s.outputs),
         ("deepcot_shard_streams_opened_total", |s| s.streams_opened),
@@ -234,6 +255,8 @@ pub fn render_prometheus(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMe
         ("deepcot_shard_admission_rejects_total", |s| s.admission_rejects),
         ("deepcot_shard_migrations_in_total", |s| s.migrations_in),
         ("deepcot_shard_migrations_out_total", |s| s.migrations_out),
+        ("deepcot_shard_streams_hibernated_total", |s| s.streams_hibernated),
+        ("deepcot_shard_streams_restored_total", |s| s.streams_restored),
     ];
     for (name, field) in shard_series {
         p.header(name, "counter", "Per-shard counter");
@@ -248,6 +271,11 @@ pub fn render_prometheus(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMe
         "deepcot_quiesce_latency_us",
         "Stream-unavailability window per completed migration (µs)",
         &m.quiesce_latency,
+    );
+    p.summary(
+        "deepcot_snapshot_latency_us",
+        "Wall time per full-cluster snapshot (µs)",
+        &m.snapshot_latency,
     );
 
     if obs.spans_on() {
@@ -353,9 +381,15 @@ pub fn render_json(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMetrics>
         ("migrations_completed", num(m.migrations_completed as f64)),
         ("migrations_aborted", num(m.migrations_aborted as f64)),
         ("slow_ticks", num(m.slow_ticks as f64)),
+        ("streams_hibernated", num(m.streams_hibernated as f64)),
+        ("streams_restored", num(m.streams_restored as f64)),
+        ("streams_recovered", num(m.streams_recovered as f64)),
+        ("snapshots_taken", num(m.snapshots_taken as f64)),
+        ("hibernated_resident", num(m.hibernated_resident as f64)),
         ("tick_latency", histo_json(&m.tick_latency)),
         ("queue_latency", histo_json(&m.queue_latency)),
         ("quiesce_latency", histo_json(&m.quiesce_latency)),
+        ("snapshot_latency", histo_json(&m.snapshot_latency)),
     ];
     if obs.level() >= ObsLevel::Counters {
         fields.push(("seq", num(obs.next_seq() as f64)));
@@ -424,6 +458,8 @@ pub fn render_json(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMetrics>
                 ("admission_rejects", num(s.admission_rejects as f64)),
                 ("migrations_in", num(s.migrations_in as f64)),
                 ("migrations_out", num(s.migrations_out as f64)),
+                ("streams_hibernated", num(s.streams_hibernated as f64)),
+                ("streams_restored", num(s.streams_restored as f64)),
             ])
         })
         .collect::<Vec<_>>();

@@ -45,11 +45,18 @@ pub enum EventKind {
     /// A shard backend resolved its kernel dispatch path at boot
     /// (`aux`: 0 = scalar, 1 = avx2, 2 = neon, 3 = other).
     DispatchResolved = 9,
+    /// A stream was spilled from its lane to the state store (its state
+    /// is kept and resumable, unlike a `StreamEvict`).
+    StreamHibernate = 10,
+    /// A hibernated stream was restored into a lane.
+    StreamRestore = 11,
+    /// A full-cluster snapshot completed (`aux` = streams checkpointed).
+    Snapshot = 12,
 }
 
 impl EventKind {
     /// Every kind, in storage order.
-    pub const ALL: [EventKind; 10] = [
+    pub const ALL: [EventKind; 13] = [
         EventKind::StreamOpen,
         EventKind::StreamClose,
         EventKind::StreamEvict,
@@ -60,6 +67,9 @@ impl EventKind {
         EventKind::ProtoError,
         EventKind::SlowTick,
         EventKind::DispatchResolved,
+        EventKind::StreamHibernate,
+        EventKind::StreamRestore,
+        EventKind::Snapshot,
     ];
 
     /// Encode a kernel-dispatch path name as `DispatchResolved` aux.
@@ -95,6 +105,9 @@ impl EventKind {
             EventKind::ProtoError => "proto_error",
             EventKind::SlowTick => "slow_tick",
             EventKind::DispatchResolved => "dispatch_resolved",
+            EventKind::StreamHibernate => "stream_hibernate",
+            EventKind::StreamRestore => "stream_restore",
+            EventKind::Snapshot => "snapshot",
         }
     }
 }
@@ -134,8 +147,8 @@ struct Inner {
     next_seq: u64,
     recorded: u64,
     dropped_oldest: u64,
-    suppressed: [u64; 10],
-    gates: [RateGate; 10],
+    suppressed: [u64; 13],
+    gates: [RateGate; 13],
     max_per_sec: u32,
 }
 
@@ -181,8 +194,8 @@ impl Journal {
                 next_seq: 0,
                 recorded: 0,
                 dropped_oldest: 0,
-                suppressed: [0; 10],
-                gates: [RateGate::default(); 10],
+                suppressed: [0; 13],
+                gates: [RateGate::default(); 13],
                 max_per_sec: max_per_sec.max(1),
             }),
         }

@@ -47,11 +47,20 @@ pub enum Stage {
     MigQuiesce = 9,
     /// Migration import leg on the target shard (per import).
     MigImport = 10,
+    /// Hibernation spill: victim lane export + store write on the
+    /// shard making room (per spill).
+    HibernateSpill = 11,
+    /// Hibernation restore: store read + lane import on the landing
+    /// shard (per restore).
+    HibernateRestore = 12,
+    /// Full-cluster snapshot wall time at the front door (per
+    /// snapshot; folded in from the door's histogram like MigQuiesce).
+    Snapshot = 13,
 }
 
 impl Stage {
     /// Every stage, in storage order.
-    pub const ALL: [Stage; 11] = [
+    pub const ALL: [Stage; 14] = [
         Stage::Ingress,
         Stage::Queue,
         Stage::BatchForm,
@@ -63,6 +72,9 @@ impl Stage {
         Stage::MigExport,
         Stage::MigQuiesce,
         Stage::MigImport,
+        Stage::HibernateSpill,
+        Stage::HibernateRestore,
+        Stage::Snapshot,
     ];
 
     /// Stable snake_case name used as the `stage` label in exposition.
@@ -79,6 +91,9 @@ impl Stage {
             Stage::MigExport => "migration_export",
             Stage::MigQuiesce => "migration_quiesce",
             Stage::MigImport => "migration_import",
+            Stage::HibernateSpill => "hibernate_spill",
+            Stage::HibernateRestore => "hibernate_restore",
+            Stage::Snapshot => "snapshot",
         }
     }
 }
@@ -87,7 +102,7 @@ impl Stage {
 /// record and reset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageSpans {
-    histos: [LatencyHisto; 11],
+    histos: [LatencyHisto; 14],
 }
 
 impl Default for StageSpans {

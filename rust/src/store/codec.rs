@@ -1,0 +1,418 @@
+//! Versioned, checksummed binary codec for hibernated stream records.
+//!
+//! A [`StreamRecord`] is everything the coordinator needs to transparently
+//! resurrect a stream into a backend lane: the portable
+//! `StreamState` payload (KV rings + ring write heads + `pos` clock), the
+//! stream's tick ordinal, and any tokens that were still queued in the
+//! batcher when the stream was spilled.
+//!
+//! Wire layout (all little-endian, `f32` stored as raw bit patterns so
+//! NaN payloads and signed zeros round-trip bit-exactly):
+//!
+//! ```text
+//!   offset  size  field
+//!        0     4  magic      0x31_54_53_44 ("DST1")
+//!        4     2  version    currently 1
+//!        6     2  flags      must be 0 (reserved)
+//!        8     8  stream id  u64
+//!       16     8  ticks      u64 (delivered tick ordinal)
+//!       24     8  pos        i64 (continual position clock, widened)
+//!       32     4  n_heads    u32
+//!       36     4  n_kv       u32
+//!       40     4  n_queued   u32
+//!       44     …  heads      n_heads × u32
+//!        …     …  kv rings   n_kv × u32 (f32 bits)
+//!        …     …  queued     n_queued × (u32 len + len × u32 f32 bits)
+//!     tail     4  crc32      IEEE CRC-32 over every preceding byte
+//! ```
+//!
+//! Decoding is hardened: every length is bounds-checked against the
+//! remaining input *before* any allocation, the checksum is verified
+//! before the payload is trusted, and any structural violation returns a
+//! typed [`StoreError::Corrupt`] — never a panic, never a huge
+//! speculative allocation driven by a corrupt count field.
+
+use super::StoreError;
+
+/// Magic prefix: the bytes `DST1` read as a little-endian `u32`.
+pub const MAGIC: u32 = 0x3154_5344;
+/// Current (and only) codec version.
+pub const VERSION: u16 = 1;
+/// Fixed header length in bytes (everything before the variable arrays).
+pub const HEADER_LEN: usize = 44;
+/// Smallest well-formed record: header + trailing CRC, no array elements.
+pub const MIN_LEN: usize = HEADER_LEN + 4;
+
+/// A hibernated stream, fully described: identity, clocks, backend lane
+/// state, and tokens still queued for future ticks.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamRecord {
+    /// Engine-assigned stream id.
+    pub stream: u64,
+    /// Delivered tick ordinal (the next tick this stream receives is
+    /// `ticks + 1`, so resumed streams keep a continuous tick series).
+    pub ticks: u64,
+    /// Continual position clock (RoPE phase) at hibernation time.
+    pub pos: i32,
+    /// KV ring write heads, one per (layer, head, K/V) ring.
+    pub write_heads: Vec<usize>,
+    /// Flattened KV ring contents, `f32` preserved bit-exactly.
+    pub kv_rings: Vec<f32>,
+    /// Batcher-queued token vectors (FIFO order, oldest first) that had
+    /// not ticked when the stream was spilled.
+    pub queued: Vec<Vec<f32>>,
+}
+
+impl StreamRecord {
+    /// Exact encoded size of this record in bytes.
+    pub fn encoded_len(&self) -> usize {
+        MIN_LEN
+            + 4 * self.write_heads.len()
+            + 4 * self.kv_rings.len()
+            + self.queued.iter().map(|q| 4 + 4 * q.len()).sum::<usize>()
+    }
+
+    /// Encode into `out`, clearing it first. Reuses `out`'s capacity, so
+    /// repeated encodes through a warm buffer are allocation-free.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.encoded_len());
+        put_u32(out, MAGIC);
+        put_u16(out, VERSION);
+        put_u16(out, 0); // flags
+        put_u64(out, self.stream);
+        put_u64(out, self.ticks);
+        put_u64(out, self.pos as i64 as u64);
+        put_u32(out, self.write_heads.len() as u32);
+        put_u32(out, self.kv_rings.len() as u32);
+        put_u32(out, self.queued.len() as u32);
+        for &h in &self.write_heads {
+            debug_assert!(h <= u32::MAX as usize, "ring head exceeds u32");
+            put_u32(out, h as u32);
+        }
+        for &v in &self.kv_rings {
+            put_u32(out, v.to_bits());
+        }
+        for q in &self.queued {
+            put_u32(out, q.len() as u32);
+            for &v in q {
+                put_u32(out, v.to_bits());
+            }
+        }
+        let crc = crc32(out);
+        put_u32(out, crc);
+    }
+
+    /// Encode into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Decode a record from `buf`.
+    pub fn decode(buf: &[u8]) -> Result<StreamRecord, StoreError> {
+        let mut rec = StreamRecord::default();
+        rec.decode_into(buf)?;
+        Ok(rec)
+    }
+
+    /// Decode `buf` into `self`, reusing the existing vector capacities.
+    /// When the shapes match a previous decode this performs no
+    /// allocation (the hibernation snapshot hot path relies on this).
+    pub fn decode_into(&mut self, buf: &[u8]) -> Result<(), StoreError> {
+        if buf.len() < MIN_LEN {
+            return Err(StoreError::corrupt(format!(
+                "record too short: {} bytes, need at least {MIN_LEN}",
+                buf.len()
+            )));
+        }
+        let (body, tail) = buf.split_at(buf.len() - 4);
+        let stored_crc = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        let actual_crc = crc32(body);
+        if stored_crc != actual_crc {
+            return Err(StoreError::corrupt(format!(
+                "checksum mismatch: stored {stored_crc:#010x}, computed {actual_crc:#010x}"
+            )));
+        }
+        let mut cur = Cursor::new(body);
+        let magic = cur.u32()?;
+        if magic != MAGIC {
+            return Err(StoreError::corrupt(format!(
+                "bad magic {magic:#010x}, expected {MAGIC:#010x}"
+            )));
+        }
+        let version = cur.u16()?;
+        if version != VERSION {
+            return Err(StoreError::corrupt(format!(
+                "unsupported record version {version} (this build reads {VERSION})"
+            )));
+        }
+        let flags = cur.u16()?;
+        if flags != 0 {
+            return Err(StoreError::corrupt(format!("reserved flags set: {flags:#06x}")));
+        }
+        self.stream = cur.u64()?;
+        self.ticks = cur.u64()?;
+        let pos = cur.u64()? as i64;
+        self.pos = i32::try_from(pos)
+            .map_err(|_| StoreError::corrupt(format!("pos clock {pos} outside i32 range")))?;
+        let n_heads = cur.u32()? as usize;
+        let n_kv = cur.u32()? as usize;
+        let n_queued = cur.u32()? as usize;
+
+        // Validate the fixed-width arrays against the remaining bytes
+        // BEFORE allocating anything: a corrupt count must not drive a
+        // multi-gigabyte reserve.
+        let fixed = n_heads
+            .checked_mul(4)
+            .and_then(|a| n_kv.checked_mul(4).and_then(|b| a.checked_add(b)))
+            .ok_or_else(|| StoreError::corrupt("array counts overflow".to_string()))?;
+        if fixed > cur.remaining() {
+            return Err(StoreError::corrupt(format!(
+                "array counts ({n_heads} heads, {n_kv} kv) exceed {} remaining bytes",
+                cur.remaining()
+            )));
+        }
+        // Each queued vector costs at least its 4-byte length prefix.
+        if n_queued.checked_mul(4).map(|q| fixed + q > cur.remaining()).unwrap_or(true) {
+            return Err(StoreError::corrupt(format!(
+                "queued count {n_queued} exceeds {} remaining bytes",
+                cur.remaining()
+            )));
+        }
+
+        self.write_heads.clear();
+        self.write_heads.reserve(n_heads);
+        for _ in 0..n_heads {
+            self.write_heads.push(cur.u32()? as usize);
+        }
+        self.kv_rings.clear();
+        self.kv_rings.reserve(n_kv);
+        for _ in 0..n_kv {
+            self.kv_rings.push(f32::from_bits(cur.u32()?));
+        }
+        // Reuse the outer queued vec and as many inner vecs as survive.
+        self.queued.truncate(n_queued);
+        for i in 0..n_queued {
+            let len = cur.u32()? as usize;
+            if len.checked_mul(4).map(|b| b > cur.remaining()).unwrap_or(true) {
+                return Err(StoreError::corrupt(format!(
+                    "queued[{i}] length {len} exceeds {} remaining bytes",
+                    cur.remaining()
+                )));
+            }
+            if i == self.queued.len() {
+                self.queued.push(Vec::with_capacity(len));
+            }
+            let q = &mut self.queued[i];
+            q.clear();
+            q.reserve(len);
+            for _ in 0..len {
+                q.push(f32::from_bits(cur.u32()?));
+            }
+        }
+        if cur.remaining() != 0 {
+            return Err(StoreError::corrupt(format!(
+                "{} trailing bytes after record payload",
+                cur.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, at: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        if self.remaining() < n {
+            return Err(StoreError::corrupt(format!(
+                "truncated record: wanted {n} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, StoreError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, StoreError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, StoreError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+const CRC_TABLE: [u32; 256] = make_crc_table();
+
+const fn make_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// IEEE CRC-32 (the zlib/zip polynomial) over `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StreamRecord {
+        StreamRecord {
+            stream: 42,
+            ticks: 7,
+            pos: -3,
+            write_heads: vec![0, 5, 2, 5],
+            kv_rings: vec![1.5, -0.0, f32::NAN, f32::INFINITY, 3.25e-12],
+            queued: vec![vec![1.0, 2.0], vec![], vec![-4.5]],
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard check value for the IEEE polynomial.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let rec = sample();
+        let blob = rec.encode();
+        assert_eq!(blob.len(), rec.encoded_len());
+        let back = StreamRecord::decode(&blob).unwrap();
+        assert_eq!(back.stream, rec.stream);
+        assert_eq!(back.ticks, rec.ticks);
+        assert_eq!(back.pos, rec.pos);
+        assert_eq!(back.write_heads, rec.write_heads);
+        assert_eq!(back.kv_rings.len(), rec.kv_rings.len());
+        for (a, b) in back.kv_rings.iter().zip(&rec.kv_rings) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.queued.len(), rec.queued.len());
+        for (a, b) in back.queued.iter().zip(&rec.queued) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn decode_into_reuses_capacity() {
+        let rec = sample();
+        let blob = rec.encode();
+        let mut target = StreamRecord::decode(&blob).unwrap();
+        let heads_ptr = target.write_heads.as_ptr();
+        let kv_ptr = target.kv_rings.as_ptr();
+        target.decode_into(&blob).unwrap();
+        assert_eq!(target.write_heads.as_ptr(), heads_ptr);
+        assert_eq!(target.kv_rings.as_ptr(), kv_ptr);
+        assert_eq!(target, StreamRecord::decode(&blob).unwrap());
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        let blob = sample().encode();
+        for cut in 0..blob.len() {
+            let err = StreamRecord::decode(&blob[..cut]);
+            assert!(err.is_err(), "decode of {cut}-byte prefix must fail");
+        }
+    }
+
+    #[test]
+    fn bitflips_are_detected() {
+        let blob = sample().encode();
+        for byte in 0..blob.len() {
+            let mut bad = blob.clone();
+            bad[byte] ^= 0x01;
+            assert!(
+                StreamRecord::decode(&bad).is_err(),
+                "single bitflip at byte {byte} must be detected"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_counts_do_not_allocate() {
+        // Forge a record whose kv count claims 1 billion entries but keep
+        // a valid CRC: the decoder must reject it on bounds, not reserve.
+        let mut rec = sample();
+        rec.queued.clear();
+        let mut blob = rec.encode();
+        let kv_count_off = 36;
+        blob[kv_count_off..kv_count_off + 4].copy_from_slice(&1_000_000_000u32.to_le_bytes());
+        let body_len = blob.len() - 4;
+        let crc = crc32(&blob[..body_len]);
+        blob[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let err = StreamRecord::decode(&blob).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn wrong_magic_version_flags_rejected() {
+        let good = sample().encode();
+        for (off, val) in [(0usize, 0xDEADBEEFu32), (4, 99), (6, 1 << 16 | 1)] {
+            let mut bad = good.clone();
+            // Patch the field then re-seal the CRC so only the field is wrong.
+            let bytes = (val as u32).to_le_bytes();
+            let width = if off == 0 { 4 } else { 2 };
+            bad[off..off + width].copy_from_slice(&bytes[..width]);
+            let body_len = bad.len() - 4;
+            let crc = crc32(&bad[..body_len]);
+            bad[body_len..].copy_from_slice(&crc.to_le_bytes());
+            assert!(StreamRecord::decode(&bad).is_err(), "field at {off} must be checked");
+        }
+    }
+}

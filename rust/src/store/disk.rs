@@ -1,0 +1,447 @@
+//! Single-file log-structured [`StateStore`], std-only.
+//!
+//! File layout:
+//!
+//! ```text
+//!   header   [magic u32 = "DCLG"][version u16 = 1][reserved u16 = 0]
+//!   entry*   [len u32][kind u8][stream u64][payload…][crc32 u32]
+//! ```
+//!
+//! `len` counts every byte after the length field itself
+//! (`1 + 8 + payload + 4`). `kind` is `1` for a put and `2` for a
+//! tombstone (empty payload). The CRC covers `kind..payload`, so a torn
+//! append — the normal state of the file after a SIGKILL — is detected
+//! and truncated away on the next open; everything before the tear is
+//! served as usual. Writes append; an in-memory index maps stream id to
+//! the live payload's file offset, and when dead bytes outweigh live
+//! ones the log is compacted by rewriting live entries to a sibling
+//! temp file and atomically renaming it over the log.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::codec::crc32;
+use super::{StateStore, StoreError};
+
+/// Log file magic: the bytes `DCLG` read as a little-endian `u32`.
+pub const FILE_MAGIC: u32 = 0x474C_4344;
+/// Log format version.
+pub const FILE_VERSION: u16 = 1;
+const HEADER_LEN: u64 = 8;
+/// Fixed per-entry overhead after the length field: kind + stream + crc.
+const ENTRY_OVERHEAD: u32 = 1 + 8 + 4;
+/// Upper bound on a single entry body; counts beyond this are treated as
+/// corruption rather than honored with a giant allocation.
+const MAX_ENTRY: u32 = 1 << 30;
+
+const KIND_PUT: u8 = 1;
+const KIND_DEL: u8 = 2;
+
+/// Compaction triggers once at least this many dead bytes accumulate…
+const COMPACT_MIN_DEAD: u64 = 64 * 1024;
+/// …and dead bytes outweigh live ones by this factor.
+const COMPACT_DEAD_FACTOR: u64 = 1;
+
+/// Single-file log-structured blob store. See the module docs for the
+/// format; see [`DiskStore::open`] for recovery semantics.
+pub struct DiskStore {
+    path: PathBuf,
+    file: File,
+    /// stream id → (payload offset, payload length) of the live entry.
+    index: BTreeMap<u64, (u64, u32)>,
+    /// Logical end of the log (append point).
+    tail: u64,
+    /// Bytes belonging to superseded or deleted entries (incl. headers).
+    dead_bytes: u64,
+    /// Bytes belonging to live entries (incl. headers).
+    live_bytes: u64,
+    wbuf: Vec<u8>,
+}
+
+impl DiskStore {
+    /// Open (or create) the log at `path`, scanning it to rebuild the
+    /// index. A torn or corrupt tail — e.g. after SIGKILL mid-append —
+    /// is truncated off; every entry before the tear survives. A corrupt
+    /// *header* is a hard [`StoreError::Corrupt`]: that file was never
+    /// ours or is damaged beyond the append region, and silently wiping
+    /// it would destroy user state.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<DiskStore, StoreError> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)?;
+        let file_len = file.seek(SeekFrom::End(0))?;
+        let mut store = DiskStore {
+            path,
+            file,
+            index: BTreeMap::new(),
+            tail: HEADER_LEN,
+            dead_bytes: 0,
+            live_bytes: 0,
+            wbuf: Vec::new(),
+        };
+        if file_len == 0 {
+            store.write_header()?;
+            return Ok(store);
+        }
+        if file_len < HEADER_LEN {
+            return Err(StoreError::corrupt(format!(
+                "state log shorter than its {HEADER_LEN}-byte header ({file_len} bytes)"
+            )));
+        }
+        store.file.seek(SeekFrom::Start(0))?;
+        let mut header = [0u8; HEADER_LEN as usize];
+        store.file.read_exact(&mut header)?;
+        let magic = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+        let version = u16::from_le_bytes([header[4], header[5]]);
+        if magic != FILE_MAGIC {
+            return Err(StoreError::corrupt(format!(
+                "bad state-log magic {magic:#010x}, expected {FILE_MAGIC:#010x}"
+            )));
+        }
+        if version != FILE_VERSION {
+            return Err(StoreError::corrupt(format!(
+                "unsupported state-log version {version} (this build reads {FILE_VERSION})"
+            )));
+        }
+        store.scan(file_len)?;
+        Ok(store)
+    }
+
+    /// Path this store persists to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of live blobs.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Whether the store holds no live blobs.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// (live, dead) byte accounting for the current log.
+    pub fn byte_usage(&self) -> (u64, u64) {
+        (self.live_bytes, self.dead_bytes)
+    }
+
+    fn write_header(&mut self) -> Result<(), StoreError> {
+        let mut h = [0u8; HEADER_LEN as usize];
+        h[0..4].copy_from_slice(&FILE_MAGIC.to_le_bytes());
+        h[4..6].copy_from_slice(&FILE_VERSION.to_le_bytes());
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.write_all(&h)?;
+        self.tail = HEADER_LEN;
+        Ok(())
+    }
+
+    /// Replay the log from just past the header, rebuilding the index.
+    /// Stops at the first structurally invalid or checksum-failing entry
+    /// and truncates the file there (torn-append recovery).
+    fn scan(&mut self, file_len: u64) -> Result<(), StoreError> {
+        let mut buf = Vec::new();
+        self.file.seek(SeekFrom::Start(HEADER_LEN))?;
+        buf.resize((file_len - HEADER_LEN) as usize, 0);
+        self.file.read_exact(&mut buf)?;
+        let mut at = 0usize;
+        let mut valid_end = HEADER_LEN;
+        while at < buf.len() {
+            let Some(entry) = parse_entry(&buf[at..]) else { break };
+            let (stream, kind, payload_off, payload_len, entry_len) = entry;
+            let abs_payload = HEADER_LEN + (at + payload_off) as u64;
+            match kind {
+                KIND_PUT => {
+                    if let Some((_, old_len)) = self.index.insert(stream, (abs_payload, payload_len))
+                    {
+                        let old_entry = 4 + ENTRY_OVERHEAD as u64 + old_len as u64;
+                        self.dead_bytes += old_entry;
+                        self.live_bytes -= old_entry;
+                    }
+                    self.live_bytes += entry_len as u64;
+                }
+                KIND_DEL => {
+                    if let Some((_, old_len)) = self.index.remove(&stream) {
+                        let old_entry = 4 + ENTRY_OVERHEAD as u64 + old_len as u64;
+                        self.dead_bytes += old_entry;
+                        self.live_bytes -= old_entry;
+                    }
+                    // The tombstone itself is immediately dead weight.
+                    self.dead_bytes += entry_len as u64;
+                }
+                _ => break,
+            }
+            at += entry_len;
+            valid_end = HEADER_LEN + at as u64;
+        }
+        self.tail = valid_end;
+        if valid_end < file_len {
+            // Torn tail: cut it off so future appends start clean.
+            self.file.set_len(valid_end)?;
+        }
+        Ok(())
+    }
+
+    fn append_entry(&mut self, kind: u8, stream: u64, payload: &[u8]) -> Result<u64, StoreError> {
+        let len = ENTRY_OVERHEAD + payload.len() as u32;
+        if len > MAX_ENTRY {
+            return Err(StoreError::corrupt(format!(
+                "refusing to write {}-byte entry (cap {MAX_ENTRY})",
+                payload.len()
+            )));
+        }
+        let mut wbuf = std::mem::take(&mut self.wbuf);
+        wbuf.clear();
+        wbuf.extend_from_slice(&len.to_le_bytes());
+        wbuf.push(kind);
+        wbuf.extend_from_slice(&stream.to_le_bytes());
+        wbuf.extend_from_slice(payload);
+        let crc = crc32(&wbuf[4..]);
+        wbuf.extend_from_slice(&crc.to_le_bytes());
+        self.file.seek(SeekFrom::Start(self.tail))?;
+        let res = self.file.write_all(&wbuf);
+        let written = wbuf.len() as u64;
+        self.wbuf = wbuf;
+        res?;
+        let payload_abs = self.tail + 4 + 1 + 8;
+        self.tail += written;
+        Ok(payload_abs)
+    }
+
+    fn retire(&mut self, old_payload_len: u32) {
+        let old_entry = 4 + ENTRY_OVERHEAD as u64 + old_payload_len as u64;
+        self.dead_bytes += old_entry;
+        self.live_bytes -= old_entry;
+    }
+
+    fn maybe_compact(&mut self) -> Result<(), StoreError> {
+        if self.dead_bytes >= COMPACT_MIN_DEAD && self.dead_bytes > self.live_bytes * COMPACT_DEAD_FACTOR
+        {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    /// Rewrite only the live entries to a temp file and atomically
+    /// rename it over the log. Callable any time; also runs
+    /// automatically when dead bytes outweigh live ones.
+    pub fn compact(&mut self) -> Result<(), StoreError> {
+        let tmp_path = self.path.with_extension("compact-tmp");
+        let mut tmp = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp_path)?;
+        let mut h = [0u8; HEADER_LEN as usize];
+        h[0..4].copy_from_slice(&FILE_MAGIC.to_le_bytes());
+        h[4..6].copy_from_slice(&FILE_VERSION.to_le_bytes());
+        tmp.write_all(&h)?;
+
+        let ids: Vec<u64> = self.index.keys().copied().collect();
+        let mut new_index = BTreeMap::new();
+        let mut new_tail = HEADER_LEN;
+        let mut live = 0u64;
+        let mut payload = Vec::new();
+        let mut entry = Vec::new();
+        for stream in ids {
+            let (off, plen) = self.index[&stream];
+            payload.resize(plen as usize, 0);
+            self.file.seek(SeekFrom::Start(off))?;
+            self.file.read_exact(&mut payload)?;
+            let len = ENTRY_OVERHEAD + plen;
+            entry.clear();
+            entry.extend_from_slice(&len.to_le_bytes());
+            entry.push(KIND_PUT);
+            entry.extend_from_slice(&stream.to_le_bytes());
+            entry.extend_from_slice(&payload);
+            let crc = crc32(&entry[4..]);
+            entry.extend_from_slice(&crc.to_le_bytes());
+            tmp.write_all(&entry)?;
+            new_index.insert(stream, (new_tail + 4 + 1 + 8, plen));
+            new_tail += entry.len() as u64;
+            live += entry.len() as u64;
+        }
+        tmp.sync_all()?;
+        std::fs::rename(&tmp_path, &self.path)?;
+        self.file = tmp;
+        self.index = new_index;
+        self.tail = new_tail;
+        self.live_bytes = live;
+        self.dead_bytes = 0;
+        Ok(())
+    }
+}
+
+/// Try to parse one entry at the head of `buf`. Returns
+/// `(stream, kind, payload offset within buf, payload len, total entry len)`
+/// or `None` if the bytes are truncated/corrupt (scan stops there).
+#[allow(clippy::type_complexity)]
+fn parse_entry(buf: &[u8]) -> Option<(u64, u8, usize, u32, usize)> {
+    if buf.len() < 4 {
+        return None;
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if len < ENTRY_OVERHEAD || len > MAX_ENTRY {
+        return None;
+    }
+    let total = 4 + len as usize;
+    if buf.len() < total {
+        return None;
+    }
+    let body = &buf[4..total];
+    let (content, crc_bytes) = body.split_at(body.len() - 4);
+    let stored = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+    if crc32(content) != stored {
+        return None;
+    }
+    let kind = content[0];
+    if kind != KIND_PUT && kind != KIND_DEL {
+        return None;
+    }
+    let stream = u64::from_le_bytes([
+        content[1], content[2], content[3], content[4], content[5], content[6], content[7],
+        content[8],
+    ]);
+    let payload_len = len - ENTRY_OVERHEAD;
+    Some((stream, kind, 4 + 1 + 8, payload_len, total))
+}
+
+impl StateStore for DiskStore {
+    fn put(&mut self, stream: u64, blob: &[u8]) -> Result<(), StoreError> {
+        let payload_abs = self.append_entry(KIND_PUT, stream, blob)?;
+        if let Some((_, old_len)) = self.index.insert(stream, (payload_abs, blob.len() as u32)) {
+            self.retire(old_len);
+        }
+        self.live_bytes += 4 + ENTRY_OVERHEAD as u64 + blob.len() as u64;
+        self.maybe_compact()
+    }
+
+    fn get(&mut self, stream: u64) -> Result<Option<Vec<u8>>, StoreError> {
+        let Some(&(off, len)) = self.index.get(&stream) else {
+            return Ok(None);
+        };
+        let mut blob = vec![0u8; len as usize];
+        self.file.seek(SeekFrom::Start(off))?;
+        self.file.read_exact(&mut blob)?;
+        Ok(Some(blob))
+    }
+
+    fn delete(&mut self, stream: u64) -> Result<bool, StoreError> {
+        let Some((_, old_len)) = self.index.remove(&stream) else {
+            return Ok(false);
+        };
+        self.retire(old_len);
+        self.append_entry(KIND_DEL, stream, &[])?;
+        self.dead_bytes += 4 + ENTRY_OVERHEAD as u64;
+        self.maybe_compact()?;
+        Ok(true)
+    }
+
+    fn list(&mut self) -> Result<Vec<u64>, StoreError> {
+        Ok(self.index.keys().copied().collect())
+    }
+
+    fn sync(&mut self) -> Result<(), StoreError> {
+        self.file.sync_all()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("deepcot-diskstore-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn put_get_delete_survive_reopen() {
+        let path = tmp_path("reopen");
+        {
+            let mut s = DiskStore::open(&path).unwrap();
+            s.put(1, b"one").unwrap();
+            s.put(2, b"two").unwrap();
+            s.put(1, b"ONE").unwrap();
+            s.delete(2).unwrap();
+            s.sync().unwrap();
+        }
+        let mut s = DiskStore::open(&path).unwrap();
+        assert_eq!(s.list().unwrap(), vec![1]);
+        assert_eq!(s.get(1).unwrap().as_deref(), Some(&b"ONE"[..]));
+        assert_eq!(s.get(2).unwrap(), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let path = tmp_path("torn");
+        {
+            let mut s = DiskStore::open(&path).unwrap();
+            s.put(1, b"alpha").unwrap();
+            s.put(2, b"beta").unwrap();
+            s.sync().unwrap();
+        }
+        // Tear the last entry mid-payload, as a SIGKILL mid-append would.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+        let mut s = DiskStore::open(&path).unwrap();
+        assert_eq!(s.list().unwrap(), vec![1]);
+        assert_eq!(s.get(1).unwrap().as_deref(), Some(&b"alpha"[..]));
+        // The store still accepts writes after recovery.
+        s.put(3, b"gamma").unwrap();
+        assert_eq!(s.list().unwrap(), vec![1, 3]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_header_is_a_typed_error() {
+        let path = tmp_path("header");
+        std::fs::write(&path, b"definitely not a deepcot log").unwrap();
+        match DiskStore::open(&path) {
+            Err(StoreError::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_drops_dead_bytes_and_preserves_blobs() {
+        let path = tmp_path("compact");
+        let mut s = DiskStore::open(&path).unwrap();
+        let blob = vec![0xAB; 512];
+        for _round in 0..300u64 {
+            for id in 0..8u64 {
+                s.put(id, &blob).unwrap();
+            }
+        }
+        // Auto-compaction must have kept dead weight bounded.
+        let (live, dead) = s.byte_usage();
+        assert!(dead <= COMPACT_MIN_DEAD.max(live), "dead {dead} live {live}");
+        s.compact().unwrap();
+        let (_, dead) = s.byte_usage();
+        assert_eq!(dead, 0);
+        for id in 0..8u64 {
+            assert_eq!(s.get(id).unwrap().as_deref(), Some(&blob[..]));
+        }
+        // And the compacted file reopens cleanly.
+        drop(s);
+        let mut s = DiskStore::open(&path).unwrap();
+        assert_eq!(s.list().unwrap().len(), 8);
+        assert_eq!(s.get(3).unwrap().as_deref(), Some(&blob[..]));
+        let _ = std::fs::remove_file(&path);
+    }
+}

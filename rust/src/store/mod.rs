@@ -1,0 +1,148 @@
+//! Durable stream-state storage — the persistence layer under stream
+//! hibernation and `deepcot_serve` crash recovery.
+//!
+//! DeepCoT's continual attention makes the per-stream KV rings the
+//! *entire* session state, so a stream can be checkpointed and moved
+//! like data. This module owns the at-rest half of that story:
+//!
+//! - [`codec`] — a versioned, CRC-checksummed binary format for
+//!   [`codec::StreamRecord`] (lane state + queued tokens + clocks).
+//!   Corruption is always a typed [`StoreError`], never a panic.
+//! - [`StateStore`] — the blob-store trait the coordinator hibernates
+//!   through (`put`/`get`/`delete`/`list`/`sync`), keyed by stream id.
+//! - [`MemStore`] — trivial in-memory impl for tests and for
+//!   hibernation without durability (`EngineConfig::hibernate` with no
+//!   `state_dir`).
+//! - [`disk`] — a std-only single-file log-structured store with
+//!   torn-tail recovery and background-free compaction; this is what
+//!   `deepcot_serve --state-dir` runs on.
+//!
+//! The coordinator-side policy (when to spill, how to restore, snapshot
+//! cadence) lives in `crate::coordinator::hibernate`; this module knows
+//! nothing about engines, only bytes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+pub mod codec;
+pub mod disk;
+
+/// Typed storage failure. Corruption and I/O problems are reported, not
+/// panicked, so a damaged state file can never take the server down.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    /// Bytes failed structural validation (bad magic/version/length,
+    /// checksum mismatch, truncated or trailing data).
+    Corrupt(String),
+    /// The underlying I/O layer failed (open/read/write/sync/rename).
+    Io(String),
+}
+
+impl StoreError {
+    pub(crate) fn corrupt<S: Into<String>>(msg: S) -> StoreError {
+        StoreError::Corrupt(msg.into())
+    }
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Corrupt(m) => write!(f, "corrupt state: {m}"),
+            StoreError::Io(m) => write!(f, "state store i/o: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> StoreError {
+        StoreError::Io(e.to_string())
+    }
+}
+
+/// A durable (or not) blob store keyed by stream id.
+///
+/// Implementations must make `put` replace any previous blob for the
+/// same stream, and `list` return each live stream id exactly once in
+/// ascending order. Methods take `&mut self` because disk-backed
+/// implementations seek; the coordinator serializes access behind its
+/// hibernation pool lock.
+pub trait StateStore: Send {
+    /// Write (or replace) the blob for `stream`.
+    fn put(&mut self, stream: u64, blob: &[u8]) -> Result<(), StoreError>;
+    /// Read the blob for `stream`, `None` if absent.
+    fn get(&mut self, stream: u64) -> Result<Option<Vec<u8>>, StoreError>;
+    /// Remove `stream`; returns whether it was present.
+    fn delete(&mut self, stream: u64) -> Result<bool, StoreError>;
+    /// All live stream ids, ascending.
+    fn list(&mut self) -> Result<Vec<u64>, StoreError>;
+    /// Flush everything to durable media (no-op for volatile stores).
+    fn sync(&mut self) -> Result<(), StoreError>;
+}
+
+/// Volatile in-memory [`StateStore`]: hibernation without durability.
+#[derive(Debug, Default)]
+pub struct MemStore {
+    blobs: BTreeMap<u64, Vec<u8>>,
+}
+
+impl MemStore {
+    /// Fresh empty store.
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    /// Number of stored blobs.
+    pub fn len(&self) -> usize {
+        self.blobs.len()
+    }
+
+    /// Whether the store holds no blobs.
+    pub fn is_empty(&self) -> bool {
+        self.blobs.is_empty()
+    }
+}
+
+impl StateStore for MemStore {
+    fn put(&mut self, stream: u64, blob: &[u8]) -> Result<(), StoreError> {
+        self.blobs.insert(stream, blob.to_vec());
+        Ok(())
+    }
+
+    fn get(&mut self, stream: u64) -> Result<Option<Vec<u8>>, StoreError> {
+        Ok(self.blobs.get(&stream).cloned())
+    }
+
+    fn delete(&mut self, stream: u64) -> Result<bool, StoreError> {
+        Ok(self.blobs.remove(&stream).is_some())
+    }
+
+    fn list(&mut self) -> Result<Vec<u64>, StoreError> {
+        Ok(self.blobs.keys().copied().collect())
+    }
+
+    fn sync(&mut self) -> Result<(), StoreError> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memstore_put_get_delete_list() {
+        let mut s = MemStore::new();
+        assert_eq!(s.get(7).unwrap(), None);
+        s.put(7, b"seven").unwrap();
+        s.put(3, b"three").unwrap();
+        s.put(7, b"SEVEN").unwrap();
+        assert_eq!(s.get(7).unwrap().as_deref(), Some(&b"SEVEN"[..]));
+        assert_eq!(s.list().unwrap(), vec![3, 7]);
+        assert!(s.delete(3).unwrap());
+        assert!(!s.delete(3).unwrap());
+        assert_eq!(s.list().unwrap(), vec![7]);
+        s.sync().unwrap();
+    }
+}

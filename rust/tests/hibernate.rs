@@ -1,0 +1,477 @@
+//! Hibernation integration: spill/restore and crash recovery must be
+//! **bitwise-invisible** to streams.
+//!
+//! The subsystem's acceptance properties, pinned end to end:
+//!
+//! 1. A stream served on a slot-starved cluster (every push first has
+//!    to wake it from the state store, spilling a warmer victim) emits
+//!    `TickResult`s bitwise-identical to the same trace on a cluster
+//!    with lanes to spare — steady traffic and open/close churn both.
+//! 2. A 64-lane cluster serves 10 000 registered streams under random
+//!    wake patterns, every output bitwise equal to a per-stream scalar
+//!    oracle replay.
+//! 3. Snapshot → kill (sessions never close) → recover on a fresh
+//!    engine restores every registered stream's state bit-exactly:
+//!    `resume(id)` continues the tick series as if the crash never
+//!    happened.
+//!
+//! Hermetic: `SyntheticServeSpec::default()` artifacts on the batched
+//! scalar backend, serial drivers, deterministic seeds throughout.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use deepcot::config::{EngineBackend, EngineConfig};
+use deepcot::coordinator::engine::{EngineError, EngineThread, Session, TickResult};
+use deepcot::coordinator::slots::StreamId;
+use deepcot::manifest::Manifest;
+use deepcot::nn::batched::BatchedScalarDeepCoT;
+use deepcot::nn::params::ModelParams;
+use deepcot::nn::tensor::Mat;
+use deepcot::synthetic::SyntheticServeSpec;
+use deepcot::util::rng::Rng;
+
+const D_IN: usize = 8; // must match SyntheticServeSpec::default()
+
+fn synth_artifacts() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| SyntheticServeSpec::default().write().unwrap()).clone()
+}
+
+fn base_cfg(shards: usize, slots_per_shard: usize) -> EngineConfig {
+    EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(shards)
+        .slots_per_shard(slots_per_shard)
+        .build()
+}
+
+fn hib_cfg(shards: usize, slots_per_shard: usize) -> EngineConfig {
+    EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(shards)
+        .slots_per_shard(slots_per_shard)
+        .hibernate(true)
+        .build()
+}
+
+fn recv_tick(sess: &Session) -> TickResult {
+    sess.recv_timeout(Duration::from_secs(30)).expect("tick result")
+}
+
+fn assert_bitwise(label: &str, a: &[Vec<TickResult>], b: &[Vec<TickResult>]) {
+    assert_eq!(a.len(), b.len(), "{label}: stream count");
+    for (s, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.len(), tb.len(), "{label}: stream {s} tick count");
+        for (t, (ra, rb)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(ra.tick, rb.tick, "{label}: stream {s} tick {t} ordinal");
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&ra.logits), bits(&rb.logits), "{label}: stream {s} tick {t} logits");
+            assert_eq!(bits(&ra.out), bits(&rb.out), "{label}: stream {s} tick {t} out");
+        }
+    }
+}
+
+/// Steady serial trace: STREAMS streams, TICKS rounds, every stream
+/// ticks every round.
+fn run_steady_trace(cfg: EngineConfig) -> Vec<Vec<TickResult>> {
+    const STREAMS: usize = 6;
+    const TICKS: usize = 8;
+    let engine = EngineThread::spawn(cfg).unwrap();
+    let h = engine.handle();
+    let mut sessions = Vec::new();
+    for s in 0..STREAMS {
+        sessions.push((h.open().unwrap(), Rng::new(7100 + s as u64)));
+    }
+    let mut traces: Vec<Vec<TickResult>> = vec![Vec::new(); STREAMS];
+    for _round in 0..TICKS {
+        for (s, (sess, rng)) in sessions.iter_mut().enumerate() {
+            sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+            traces[s].push(recv_tick(sess));
+        }
+    }
+    for (sess, _) in sessions {
+        sess.close();
+    }
+    engine.shutdown().unwrap();
+    traces
+}
+
+/// Bitwise transparency under steady traffic: 6 streams on 4 lanes —
+/// every round-robin push wakes a hibernated stream and spills another
+/// (constant churn through the store) — versus 6 streams with lanes to
+/// spare and no hibernation at all.
+#[test]
+fn hibernation_is_bitwise_invisible_steady() {
+    let roomy = run_steady_trace(base_cfg(2, 6));
+    let starved = run_steady_trace(hib_cfg(2, 2));
+    assert_bitwise("steady: starved+hibernating vs roomy", &roomy, &starved);
+    // the single-lane extreme: every push of every stream goes through
+    // a full spill/restore cycle
+    let single_lane = run_steady_trace(hib_cfg(1, 1));
+    assert_bitwise("steady: 1 lane vs roomy", &roomy, &single_lane);
+}
+
+/// Open/close churn variant: streams open mid-run, close, recycle
+/// capacity — with hibernation multiplexing 1-2 lanes under them.
+fn run_churn_trace(cfg: EngineConfig) -> Vec<Vec<TickResult>> {
+    const LOGICAL: usize = 6;
+    let engine = EngineThread::spawn(cfg).unwrap();
+    let h = engine.handle();
+    let mut sessions: Vec<Option<Session>> = (0..LOGICAL).map(|_| None).collect();
+    let mut rngs: Vec<Rng> = (0..LOGICAL).map(|s| Rng::new(8200 + s as u64)).collect();
+    let mut traces: Vec<Vec<TickResult>> = vec![Vec::new(); LOGICAL];
+    for sess in sessions.iter_mut().take(4) {
+        *sess = Some(h.open().unwrap());
+    }
+    for round in 0..12 {
+        if round == 4 {
+            for s in [1, 3] {
+                sessions[s].take().unwrap().close();
+            }
+            sessions[4] = Some(h.open().unwrap());
+        }
+        if round == 8 {
+            sessions[0].take().unwrap().close();
+            sessions[5] = Some(h.open().unwrap());
+        }
+        for ((sess, rng), trace) in sessions.iter().zip(rngs.iter_mut()).zip(traces.iter_mut()) {
+            if let Some(sess) = sess {
+                sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+                trace.push(recv_tick(sess));
+            }
+        }
+    }
+    for sess in sessions.into_iter().flatten() {
+        sess.close();
+    }
+    engine.shutdown().unwrap();
+    traces
+}
+
+#[test]
+fn hibernation_is_bitwise_invisible_under_churn() {
+    let roomy = run_churn_trace(base_cfg(1, 4));
+    let starved = run_churn_trace(hib_cfg(2, 1));
+    assert_bitwise("churn: starved+hibernating vs roomy", &roomy, &starved);
+}
+
+/// Slot capacity bounds *active* streams, not registered ones: a
+/// 64-lane cluster carries 10 000 registered streams, woken in a
+/// seeded random pattern, and every output matches a per-stream scalar
+/// oracle replay bit for bit. (The oracle check runs as a replay at
+/// the end so the test never holds 10k oracle instances at once.)
+#[test]
+fn ten_thousand_registered_streams_on_64_lanes_match_oracles() {
+    const REGISTERED: usize = 10_000;
+    const WAKES: usize = 3_000;
+    let seed_of = |s: usize| 0x5EED_0000 + s as u64;
+
+    let engine = EngineThread::spawn(hib_cfg(4, 16)).unwrap(); // 64 lanes
+    let h = engine.handle();
+    let mut sessions = Vec::with_capacity(REGISTERED);
+    for s in 0..REGISTERED {
+        sessions.push((h.open().unwrap(), Rng::new(seed_of(s))));
+    }
+    // far more registered than lanes: almost everything is hibernated
+    let m = h.metrics().unwrap();
+    assert_eq!(m.streams_opened, REGISTERED as u64);
+    assert!(
+        m.hibernated_resident >= (REGISTERED - 64) as u64,
+        "only 64 lanes exist, got {} hibernated",
+        m.hibernated_resident
+    );
+
+    // random wakes; record output bits per stream for the replay below
+    let mut outputs: Vec<Vec<(u64, Vec<u32>, Vec<u32>)>> = vec![Vec::new(); REGISTERED];
+    let mut pick = Rng::new(0xA11_CE);
+    for _ in 0..WAKES {
+        let s = pick.below(REGISTERED);
+        let (sess, rng) = &mut sessions[s];
+        sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+        let got = recv_tick(sess);
+        assert_eq!(got.tick, outputs[s].len() as u64 + 1, "stream {s} tick ordinal");
+        outputs[s].push((
+            got.tick,
+            got.logits.iter().map(|v| v.to_bits()).collect(),
+            got.out.iter().map(|v| v.to_bits()).collect(),
+        ));
+    }
+    let m = h.metrics().unwrap();
+    assert!(m.streams_hibernated > 0, "wake churn must have spilled streams");
+    assert!(m.streams_restored > 0, "wake churn must have restored streams");
+
+    drop(sessions); // 10k closes
+    engine.shutdown().unwrap();
+
+    // oracle replay: one isolated 1-lane scalar model per woken stream,
+    // fed the same deterministic token sequence
+    let (manifest, mdir) = Manifest::load(&synth_artifacts()).unwrap();
+    let entry = manifest.variant(&SyntheticServeSpec::variant_name(1)).unwrap();
+    let params = ModelParams::load(&mdir, entry).unwrap();
+    let mc = entry.config.clone();
+    let mut checked = 0usize;
+    for (s, ticks) in outputs.iter().enumerate() {
+        if ticks.is_empty() {
+            continue;
+        }
+        let mut oracle = BatchedScalarDeepCoT::with_lanes(mc.clone(), params.clone(), 1);
+        let mut rng = Rng::new(seed_of(s));
+        for (t, (ord, logits_bits, out_bits)) in ticks.iter().enumerate() {
+            let toks = rng.normal_vec(mc.d_in, 1.0);
+            let tokens = Mat::from_vec(1, mc.d_in, toks);
+            let step = oracle.tick_lanes(&tokens, &[true], &[t as i32]).unwrap();
+            assert_eq!(*ord, t as u64 + 1);
+            let want_logits: Vec<u32> = step.logits.row(0).iter().map(|v| v.to_bits()).collect();
+            let want_out: Vec<u32> = (0..mc.m_tokens)
+                .flat_map(|r| step.out.row(r).iter().map(|v| v.to_bits()))
+                .collect();
+            assert_eq!(logits_bits, &want_logits, "stream {s} tick {t} logits vs oracle");
+            assert_eq!(out_bits, &want_out, "stream {s} tick {t} out vs oracle");
+        }
+        checked += 1;
+    }
+    assert!(checked > 1_000, "wake pattern under-covered: only {checked} streams woke");
+}
+
+fn tmp_state_dir(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("deepcot-hibernate-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// Crash → recover, bit-exact: run streams on a disk-backed engine,
+/// snapshot, then *kill* it (sessions are forgotten, never closed — a
+/// close would legitimately delete the stored state). A fresh engine
+/// over the same state dir must recover every stream as hibernated and
+/// `resume` must continue each one such that the concatenated trace is
+/// bitwise-identical to an uninterrupted run.
+#[test]
+fn crash_recovery_restores_every_stream_bit_exactly() {
+    const STREAMS: usize = 5;
+    const TICKS_BEFORE: usize = 4;
+    const TICKS_AFTER: usize = 4;
+    let seed_of = |s: usize| 9300 + s as u64;
+
+    // the uninterrupted reference: same seeds, one engine, full trace
+    let mut reference: Vec<Vec<TickResult>> = vec![Vec::new(); STREAMS];
+    {
+        let engine = EngineThread::spawn(base_cfg(2, 4)).unwrap();
+        let h = engine.handle();
+        let mut sessions: Vec<(Session, Rng)> =
+            (0..STREAMS).map(|s| (h.open().unwrap(), Rng::new(seed_of(s)))).collect();
+        for _ in 0..TICKS_BEFORE + TICKS_AFTER {
+            for (s, (sess, rng)) in sessions.iter_mut().enumerate() {
+                sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+                reference[s].push(recv_tick(sess));
+            }
+        }
+        for (sess, _) in sessions {
+            sess.close();
+        }
+        engine.shutdown().unwrap();
+    }
+
+    let dir = tmp_state_dir("crash");
+    let mut ids: Vec<StreamId> = Vec::new();
+    let mut crash_trace: Vec<Vec<TickResult>> = vec![Vec::new(); STREAMS];
+    // phase 1: serve, snapshot, crash
+    {
+        let cfg = EngineConfig::builder()
+            .variant(SyntheticServeSpec::variant_name(1))
+            .artifacts_dir(synth_artifacts())
+            .backend(EngineBackend::Scalar)
+            .batch_deadline(Duration::from_millis(1))
+            .shards(2)
+            .slots_per_shard(4)
+            .state_dir(dir.clone())
+            .build();
+        let engine = EngineThread::spawn(cfg).unwrap();
+        let h = engine.handle();
+        let mut sessions: Vec<(Session, Rng)> =
+            (0..STREAMS).map(|s| (h.open().unwrap(), Rng::new(seed_of(s)))).collect();
+        for (sess, _) in &sessions {
+            ids.push(sess.id());
+        }
+        for _ in 0..TICKS_BEFORE {
+            for (s, (sess, rng)) in sessions.iter_mut().enumerate() {
+                sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+                crash_trace[s].push(recv_tick(sess));
+            }
+        }
+        let n = h.snapshot().unwrap();
+        assert_eq!(n, STREAMS, "snapshot must checkpoint every lane-resident stream");
+        assert!(dir.join("streams.log").exists(), "state dir must hold the log");
+        // the crash: owners vanish without closing (a close would
+        // rightly delete the stored blobs), then the engine dies
+        for (sess, _) in sessions {
+            std::mem::forget(sess);
+        }
+        engine.shutdown().unwrap();
+    }
+
+    // phase 2: recover on a fresh engine over the same state dir
+    {
+        let cfg = EngineConfig::builder()
+            .variant(SyntheticServeSpec::variant_name(1))
+            .artifacts_dir(synth_artifacts())
+            .backend(EngineBackend::Scalar)
+            .batch_deadline(Duration::from_millis(1))
+            .shards(2)
+            .slots_per_shard(4)
+            .state_dir(dir.clone())
+            .build();
+        let engine = EngineThread::spawn(cfg).unwrap();
+        let h = engine.handle();
+        let m = h.metrics().unwrap();
+        assert_eq!(m.streams_recovered, STREAMS as u64, "recover-on-boot must see every stream");
+        let mut recovered = h.hibernated_streams();
+        recovered.sort_by_key(|id| id.0);
+        let mut want = ids.clone();
+        want.sort_by_key(|id| id.0);
+        assert_eq!(recovered, want, "every registered stream recovers as hibernated");
+        for id in &ids {
+            assert!(h.is_hibernated(*id));
+        }
+
+        // new opens must not collide with recovered ids
+        let fresh = h.open().unwrap();
+        assert!(!ids.contains(&fresh.id()), "recovered ids must stay reserved");
+        fresh.close();
+
+        let mut sessions: Vec<(Session, Rng)> = ids
+            .iter()
+            .enumerate()
+            .map(|(s, id)| {
+                let sess = h.resume(*id).expect("resume recovered stream");
+                assert_eq!(sess.id(), *id);
+                let mut rng = Rng::new(seed_of(s));
+                // replay the pre-crash draws so the token stream continues
+                for _ in 0..TICKS_BEFORE {
+                    let _ = rng.normal_vec(D_IN, 1.0);
+                }
+                (sess, rng)
+            })
+            .collect();
+        // double-resume of a now-live stream must be refused, typed
+        let err = h.resume(ids[0]).expect_err("resume of a live stream must fail");
+        assert!(matches!(err, EngineError::InvalidRequest(_)), "got {err:?}");
+        for _ in 0..TICKS_AFTER {
+            for (s, (sess, rng)) in sessions.iter_mut().enumerate() {
+                sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+                crash_trace[s].push(recv_tick(sess));
+            }
+        }
+        for (sess, _) in sessions {
+            sess.close();
+        }
+        engine.shutdown().unwrap();
+    }
+    assert_bitwise("crash-recover vs uninterrupted", &reference, &crash_trace);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Typed-error semantics around hibernate/resume, plus the journal
+/// trail and counters.
+#[test]
+fn resume_and_hibernate_error_semantics() {
+    use deepcot::obs::journal::EventKind;
+    use deepcot::obs::ObsLevel;
+    let cfg = EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(1)
+        .slots_per_shard(1)
+        .hibernate(true)
+        .obs(ObsLevel::Journal)
+        .build();
+    let engine = EngineThread::spawn(cfg).unwrap();
+    let h = engine.handle();
+    let mut rng = Rng::new(44);
+
+    let a = h.open().unwrap();
+    a.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+    recv_tick(&a);
+    // one lane: opening B spills A
+    let b = h.open().unwrap();
+    assert!(h.is_hibernated(a.id()), "A must hibernate when B takes the only lane");
+    assert!(!h.is_hibernated(b.id()));
+    assert_eq!(h.hibernated_streams(), vec![a.id()]);
+
+    // a hibernated stream with a live owner wakes on push, not resume
+    let err = h.resume(a.id()).expect_err("resume with live owner must fail");
+    assert!(matches!(err, EngineError::InvalidRequest(_)), "got {err:?}");
+    a.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+    let out = recv_tick(&a);
+    assert_eq!(out.tick, 2, "wake must continue the tick series");
+    assert!(h.is_hibernated(b.id()), "waking A must spill B in turn");
+
+    // unknown streams are StreamClosed, exactly as before hibernation
+    let err = h.resume(StreamId(999_999)).expect_err("unknown id");
+    assert!(matches!(err, EngineError::StreamClosed(_)), "got {err:?}");
+    // resuming a live (lane-resident) stream is refused, typed
+    let err = h.resume(a.id()).expect_err("resume of live stream");
+    assert!(matches!(err, EngineError::InvalidRequest(_)), "got {err:?}");
+
+    // snapshot without a state dir still checkpoints into the mem store
+    let n = h.snapshot().unwrap();
+    assert_eq!(n, 1, "one lane-resident stream to checkpoint");
+
+    let m = h.metrics().unwrap();
+    assert!(m.streams_hibernated >= 2, "got {}", m.streams_hibernated);
+    assert!(m.streams_restored >= 1, "got {}", m.streams_restored);
+    assert_eq!(m.hibernated_resident, 1);
+    assert_eq!(m.snapshots_taken, 1);
+    assert_eq!(m.snapshot_latency.count(), 1);
+
+    let events = h.obs().journal().drain();
+    let has = |k: EventKind| events.iter().any(|e| e.kind == k);
+    assert!(has(EventKind::StreamHibernate), "spill must journal StreamHibernate");
+    assert!(has(EventKind::StreamRestore), "wake must journal StreamRestore");
+    assert!(has(EventKind::Snapshot), "snapshot must journal Snapshot");
+
+    // closing a hibernated stream forgets it entirely
+    let b_id = b.id();
+    b.close();
+    for _ in 0..50 {
+        if !h.is_hibernated(b_id) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(!h.is_hibernated(b_id), "close must forget a hibernated stream");
+    let err = h.resume(b_id).expect_err("closed stream cannot resume");
+    assert!(matches!(err, EngineError::StreamClosed(_)), "got {err:?}");
+
+    a.close();
+    engine.shutdown().unwrap();
+}
+
+/// Without hibernation configured, resume is a typed configuration
+/// error and capacity semantics are exactly the legacy ones.
+#[test]
+fn resume_without_hibernation_is_a_typed_config_error() {
+    let engine = EngineThread::spawn(base_cfg(1, 1)).unwrap();
+    let h = engine.handle();
+    let a = h.open().unwrap();
+    // legacy semantics intact: a full cluster rejects instead of spilling
+    let err = h.open().expect_err("second open must saturate a 1x1 cluster");
+    assert!(matches!(err, EngineError::Saturated { .. }), "got {err:?}");
+    let err = h.resume(a.id()).expect_err("resume without hibernation");
+    assert!(matches!(err, EngineError::InvalidRequest(_)), "got {err:?}");
+    assert!(!h.is_hibernated(a.id()));
+    assert!(h.hibernated_streams().is_empty());
+    assert_eq!(h.snapshot().unwrap(), 0, "snapshot is a no-op without a pool");
+    a.close();
+    engine.shutdown().unwrap();
+}

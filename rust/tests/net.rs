@@ -437,6 +437,149 @@ fn server_shutdown_mid_stream_gives_terminal_errors_not_hangs() {
     engine.shutdown().unwrap();
 }
 
+fn hib_cfg(shards: usize, slots_per_shard: usize) -> EngineConfig {
+    EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(deepcot::config::EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(shards)
+        .slots_per_shard(slots_per_shard)
+        .hibernate(true)
+        .build()
+}
+
+/// Hibernation stays bitwise-invisible at network distance: 6 TCP
+/// streams multiplexed over 4 lanes (every round trips spill/restore
+/// cycles through the state store) match the roomy in-process
+/// reference exactly.
+#[test]
+fn hibernating_tcp_streams_are_bitwise_identical_to_in_process() {
+    let reference = {
+        let engine = EngineThread::spawn(cluster_cfg(1, 6)).unwrap();
+        let mut d = Driver::InProc(engine.handle());
+        let t = steady_trace(&mut d, 6, 8, 4300, |_, _| {});
+        drop(d);
+        engine.shutdown().unwrap();
+        t
+    };
+    let tcp = {
+        let engine = EngineThread::spawn(hib_cfg(2, 2)).unwrap();
+        let server = NetServer::start("127.0.0.1:0", engine.handle()).unwrap();
+        let mut d = Driver::Tcp(tcp_client(&server));
+        let t = steady_trace(&mut d, 6, 8, 4300, |_, _| {});
+        drop(d);
+        let m = engine.handle().metrics().unwrap();
+        assert!(m.streams_hibernated > 0, "6 streams on 4 lanes must spill");
+        assert!(m.streams_restored > 0, "round-robin pushes must restore");
+        server.shutdown();
+        engine.shutdown().unwrap();
+        t
+    };
+    assert_traces("tcp+hibernation vs roomy in-process", &reference, &tcp);
+}
+
+/// The HIBERNATED wire error is its own code, distinct from
+/// stream-unknown: after a crash+recover, a bare PUSH to a recovered
+/// (ownerless) stream says "hibernated — resume me", an unknown id
+/// still says StreamClosed, and an OPEN-resume reattaches the stream
+/// so its tick series continues bitwise-identically to an
+/// uninterrupted run.
+#[test]
+fn hibernated_wire_error_is_distinct_from_stream_closed() {
+    let state_dir = {
+        let mut p = std::env::temp_dir();
+        p.push(format!("deepcot-net-hib-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    };
+    let disk_cfg = || {
+        EngineConfig::builder()
+            .variant(SyntheticServeSpec::variant_name(1))
+            .artifacts_dir(synth_artifacts())
+            .backend(deepcot::config::EngineBackend::Scalar)
+            .batch_deadline(Duration::from_millis(1))
+            .shards(1)
+            .slots_per_shard(4)
+            .state_dir(state_dir.clone())
+            .build()
+    };
+    const SEED: u64 = 0xB01D;
+
+    // uninterrupted reference: 4 ticks on a plain in-process engine
+    let reference = {
+        let engine = EngineThread::spawn(cluster_cfg(1, 4)).unwrap();
+        let mut d = Driver::InProc(engine.handle());
+        let t = steady_trace(&mut d, 1, 4, SEED, |_, _| {});
+        drop(d);
+        engine.shutdown().unwrap();
+        t.into_iter().next().unwrap()
+    };
+
+    // phase 1: two ticks on a disk-backed engine, snapshot, then crash
+    // (the session is forgotten, not closed — a close would rightly
+    // delete the stored state)
+    let mut rng = Rng::new(SEED);
+    let mut trace: Vec<TickBits> = Vec::new();
+    let id = {
+        let engine = EngineThread::spawn(disk_cfg()).unwrap();
+        let sess = engine.handle().open().unwrap();
+        let id = sess.id().0;
+        for _ in 0..2 {
+            sess.push(rng.normal_vec(D_IN, 1.0)).unwrap();
+            let r = sess.recv_timeout(Duration::from_secs(30)).expect("tick");
+            trace.push((r.tick, bits(&r.logits), bits(&r.out)));
+        }
+        assert_eq!(engine.handle().snapshot().unwrap(), 1);
+        std::mem::forget(sess);
+        engine.shutdown().unwrap();
+        id
+    };
+
+    // phase 2: recover on a fresh engine and probe the wire semantics
+    let engine = EngineThread::spawn(disk_cfg()).unwrap();
+    let server = NetServer::start("127.0.0.1:0", engine.handle()).unwrap();
+    let mut client = tcp_client(&server);
+    let toks = Rng::new(77).normal_vec(D_IN, 1.0);
+
+    // a recovered stream is registered but ownerless: PUSH says
+    // "hibernated", carrying the id — NOT stream-unknown
+    match client.push(id, &toks) {
+        Err(ClientError::Engine(EngineError::Hibernated(got))) => assert_eq!(got.0, id),
+        other => panic!("push to recovered stream: want Hibernated, got {other:?}"),
+    }
+    // unknown ids still surface as StreamClosed, on push and on resume
+    match client.push(999_999, &toks) {
+        Err(ClientError::Engine(EngineError::StreamClosed(got))) => assert_eq!(got.0, 999_999),
+        other => panic!("push to unknown stream: want StreamClosed, got {other:?}"),
+    }
+    match client.open_resume(999_999) {
+        Err(ClientError::Engine(EngineError::StreamClosed(got))) => assert_eq!(got.0, 999_999),
+        other => panic!("resume of unknown stream: want StreamClosed, got {other:?}"),
+    }
+
+    // OPEN-resume reattaches the stream and its history continues
+    let s = client.open_resume(id).expect("resume over the wire");
+    assert_eq!(s, id, "resume must hand back the recovered stream id");
+    for _ in 0..2 {
+        let toks = rng.normal_vec(D_IN, 1.0);
+        client.push(s, &toks).expect("post-resume push");
+        let t = client.recv_tick(s).expect("post-resume tick");
+        trace.push((t.tick, bits(&t.logits), bits(&t.out)));
+    }
+    // resuming the now-live stream again is refused, typed
+    match client.open_resume(id) {
+        Err(ClientError::Engine(EngineError::InvalidRequest(_))) => {}
+        other => panic!("second resume: want InvalidRequest, got {other:?}"),
+    }
+    client.close(s).expect("close");
+    server.shutdown();
+    engine.shutdown().unwrap();
+
+    assert_eq!(trace, reference, "crash+recover+resume trace diverges from uninterrupted run");
+    let _ = std::fs::remove_dir_all(&state_dir);
+}
+
 /// ≥10k malformed frames — valid length prefixes around random bodies
 /// on one connection, plus raw byte soup on many — must never panic
 /// the server; a fresh well-formed client serves normally afterwards.

@@ -303,6 +303,8 @@ fn per_shard_series_sum_to_aggregates() {
     assert_eq!(m.streams_closed, sums(|s| s.streams_closed));
     assert_eq!(m.streams_evicted, sums(|s| s.streams_evicted));
     assert_eq!(m.admission_rejects, sums(|s| s.admission_rejects));
+    assert_eq!(m.streams_hibernated, sums(|s| s.streams_hibernated));
+    assert_eq!(m.streams_restored, sums(|s| s.streams_restored));
     assert_eq!(m.tick_latency.count(), sums(|s| s.tick_latency.count()));
     assert_eq!(
         m.tick_latency.sum().as_micros(),
@@ -322,6 +324,8 @@ fn per_shard_series_sum_to_aggregates() {
         ("deepcot_shard_streams_closed_total", "deepcot_streams_closed_total"),
         ("deepcot_shard_streams_evicted_total", "deepcot_streams_evicted_total"),
         ("deepcot_shard_admission_rejects_total", "deepcot_admission_rejects_total"),
+        ("deepcot_shard_streams_hibernated_total", "deepcot_streams_hibernated_total"),
+        ("deepcot_shard_streams_restored_total", "deepcot_streams_restored_total"),
     ] {
         assert_eq!(
             prom_sum(&body, shard_family),

@@ -32,21 +32,24 @@ fn rand_f32s(rng: &mut Rng, max: usize) -> Vec<f32> {
 }
 
 fn rand_engine_error(rng: &mut Rng) -> EngineError {
-    match rng.below(8) {
+    match rng.below(9) {
         0 => EngineError::Saturated { capacity: rng.below(1 << 20) },
         1 => EngineError::StreamClosed(StreamId(rng.next_u64())),
         2 => EngineError::Backpressure(StreamId(rng.next_u64())),
         3 => EngineError::ShuttingDown,
         4 => EngineError::Timeout,
         5 => EngineError::InvalidRequest(rand_string(rng)),
-        6 => EngineError::Unsupported("a static unsupported message"),
+        6 => EngineError::Unsupported(rand_string(rng)),
+        7 => EngineError::Hibernated(StreamId(rng.next_u64())),
         _ => EngineError::Internal(rand_string(rng)),
     }
 }
 
 fn rand_frame(rng: &mut Rng) -> Frame {
     match rng.below(13) {
-        0 => Frame::Open,
+        0 => Frame::Open {
+            resume: if rng.below(2) == 0 { None } else { Some(rng.next_u64()) },
+        },
         1 => Frame::Push { stream: rng.next_u64(), tokens: rand_f32s(rng, 32) },
         2 => Frame::Close { stream: rng.next_u64() },
         3 => Frame::Metrics,
@@ -71,7 +74,10 @@ fn rand_frame(rng: &mut Rng) -> Frame {
 /// any truncation below this must reject.
 fn min_fields(frame: &Frame) -> usize {
     match frame {
-        Frame::Open | Frame::Metrics | Frame::MetricsProm | Frame::Shutdown => 0,
+        // OPEN truncated to its bare opcode is a *valid* fresh open
+        // (the resume id is an optional wire-compatible extension), so
+        // its floor stays 0 even when a resume id was encoded.
+        Frame::Open { .. } | Frame::Metrics | Frame::MetricsProm | Frame::Shutdown => 0,
         Frame::ShutdownOk | Frame::MetricsReport { .. } => 0,
         Frame::Close { .. }
         | Frame::Opened { .. }
@@ -119,12 +125,9 @@ fn prop_wire_errors_round_trip_typed() {
             return Err("error frame did not decode as an error".into());
         };
         let got = back.to_engine();
-        let ok = match (&e, &got) {
-            // Unsupported is documented lossy (static str payload)
-            (EngineError::Unsupported(_), EngineError::Unsupported(_)) => true,
-            _ => got == e,
-        };
-        if !ok {
+        // every variant — including Unsupported's detail string and the
+        // Hibernated/StreamClosed distinction — survives the hop exactly
+        if got != e {
             return Err(format!("typed error changed over the wire: {e:?} -> {got:?}"));
         }
         Ok(())

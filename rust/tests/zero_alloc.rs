@@ -24,6 +24,7 @@ use deepcot::nn::tensor::Mat;
 use deepcot::obs::expo::{RateSample, SnapshotRing};
 use deepcot::obs::journal::{EventKind, Journal};
 use deepcot::obs::span::{Stage, StageSpans};
+use deepcot::store::codec::StreamRecord;
 use deepcot::util::rng::Rng;
 
 static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
@@ -232,6 +233,47 @@ fn steady_state_ticks_allocate_nothing() {
         after - before,
         0,
         "steady-state PUSH/TICK codec round trips allocated {} times across 5 cycles",
+        after - before
+    );
+    assert!(sink.is_finite());
+
+    // hibernation steady state: with hibernation enabled, ticking an
+    // *active* stream must cost exactly what it costs without it — the
+    // pool is consulted on open/wake/close only, never on the tick
+    // path, so the sections above already pin that side. What IS new
+    // per snapshot period is the store codec: `HibernatePool`
+    // checkpoints by `encode_into` a reused buffer, and restore decodes
+    // with `decode_into` into a warm record. After one warmup cycle
+    // establishes the capacities, that whole persist/restore round
+    // trip must be allocation-free — a periodic snapshot may not
+    // perturb the steady state it is checkpointing.
+    let make_rec = |seed: u64| {
+        let mut r = Rng::new(seed);
+        StreamRecord {
+            stream: 7,
+            ticks: 40,
+            pos: 40,
+            write_heads: (0..4).map(|_| r.below(64)).collect(),
+            kv_rings: r.normal_vec(256, 1.0),
+            queued: vec![r.normal_vec(16, 1.0), r.normal_vec(16, 1.0)],
+        }
+    };
+    let rec = make_rec(47);
+    let mut blob = Vec::new();
+    let mut warm = make_rec(53); // same shape, different contents
+    rec.encode_into(&mut blob);
+    warm.decode_into(&blob).unwrap();
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        rec.encode_into(&mut blob);
+        warm.decode_into(&blob).unwrap();
+        sink += warm.kv_rings[0] + warm.queued[0][0];
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "store codec allocated {} times across 5 reused-buffer checkpoint cycles",
         after - before
     );
     assert!(sink.is_finite());
