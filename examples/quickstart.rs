@@ -137,6 +137,51 @@
 //! length-checked, and CRC-guarded (`store::codec`): a torn or
 //! corrupted state file is detected and reported, never decoded into
 //! garbage state (fuzzed over ≥10k corrupt blobs in `tests/store.rs`).
+//!
+//! # Failure modes & recovery
+//!
+//! Failure domains are isolated per shard: each worker runs under
+//! `catch_unwind`, so a panic kills *one shard*, never the engine. A
+//! supervisor thread marks the shard dead, re-homes its checkpointed
+//! streams onto the survivors (from their last `snapshot()` /
+//! `--snapshot-every-ms` checkpoint, via the hibernate path — clients
+//! reattach with the same OPEN-resume flow as crash recovery), and
+//! respawns the worker with bounded exponential backoff. What clients
+//! see in the window is typed, not mysterious:
+//!
+//! * `EngineError::ShardFailed { retryable: true }` — the shard is
+//!   down and the supervisor is re-homing; retry, then resume. Over
+//!   the wire this is `ErrCode::ShardFailed` with the retryable flag
+//!   in `aux`. A healthy engine **never** converts this into
+//!   `ShuttingDown` — that variant is reserved for real shutdown.
+//! * `EngineError::Hibernated(id)` — the stream was re-homed to its
+//!   checkpoint and waits for an OPEN-resume (`handle.resume(id)` /
+//!   `NetClient::open_resume`).
+//! * `ShardFailed { retryable: false }` — the stream had no
+//!   checkpoint to recover from; a typed loss notice, never a hang.
+//!
+//! The state store degrades instead of failing: a checkpoint or spill
+//! that hits an I/O error is retried with backoff
+//! (`store::with_retries`), then journaled (`StoreDegraded`) and
+//! metered (`store_degraded`, `store_retries`) while serving
+//! continues. The TCP front door rides out slow and dead peers too:
+//! per-connection read/idle timeouts reap stuck connections
+//! (`conns_reaped`), and `NetClient` reconnects with seeded
+//! exponential backoff + jitter (`ReconnectPolicy`), re-establishing
+//! streams via OPEN-resume; exhausted retries surface as the typed
+//! `EngineError::Timeout`.
+//!
+//! All of it is rehearsable deterministically: a seeded fault plan —
+//! `DEEPCOT_FAULT=seed=7,shard=0,shard_step=@40` in the environment,
+//! `--fault ...` on `deepcot_serve`, or
+//! `EngineConfig::builder().fault("...".parse()?)` in code — injects
+//! panics, store I/O errors, torn snapshot tails, and network faults
+//! at exact (seed, site, call#) points. Disabled (the default) it is
+//! a single branch: no allocation, no bit changes. `tests/fault.rs`
+//! drives a ≥500-op chaos run bitwise against a scalar oracle, and CI
+//! kills a shard mid-load over TCP (`deepcot_serve
+//! --expect-respawn`), asserting the respawn shows up in /metrics
+//! (`deepcot_shards_respawned_total`) while the client finishes.
 
 use std::time::Duration;
 

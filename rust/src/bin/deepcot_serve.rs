@@ -37,14 +37,15 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use deepcot::config::{EngineBackend, EngineConfig};
 use deepcot::coordinator::engine::EngineThread;
+use deepcot::coordinator::session::EngineError;
 use deepcot::manifest::Manifest;
-use deepcot::net::client::NetClient;
+use deepcot::net::client::{ClientError, NetClient};
 use deepcot::net::server::NetServer;
 use deepcot::obs::expo;
 use deepcot::obs::server::{MetricsFormat, MetricsServer};
@@ -61,6 +62,11 @@ fn main() -> Result<()> {
     .opt("smoke", "0", "loopback self-test: push N tokens, then clean shutdown (0 = off)")
     .flag("smoke-hold", "after --smoke, keep serving instead of shutting down (crash-test aid)")
     .flag("resume-smoke", "resume every recovered stream over loopback TCP, then shut down")
+    .flag(
+        "expect-respawn",
+        "chaos smoke: drive traffic through an injected shard crash (set --fault), assert the \
+         supervisor re-homes + respawns, then shut down",
+    )
     .flag("synthetic", "serve a hermetic synthetic model (no `make artifacts` needed)");
     let args = cli.parse()?;
     let mut cfg = EngineConfig::from_args(&args)?;
@@ -129,6 +135,9 @@ fn main() -> Result<()> {
     if args.has("resume-smoke") {
         run_resume_smoke(&server, &engine, d_lane)?;
     }
+    if args.has("expect-respawn") {
+        run_chaos_smoke(&server, &engine, d_lane, metrics_srv.as_ref().map(|s| s.local_addr()))?;
+    }
 
     // serve until some client requests shutdown (the smoke client
     // does), taking a full-cluster snapshot each period when one is
@@ -136,17 +145,29 @@ fn main() -> Result<()> {
     let period = if snapshot_every > Duration::ZERO { snapshot_every } else { Duration::from_secs(3600) };
     while !server.wait_shutdown_requested(period) {
         if snapshot_every > Duration::ZERO {
-            let n = engine.handle().snapshot().context("periodic snapshot")?;
-            if n > 0 {
-                println!("deepcot_serve: snapshot checkpointed {n} live stream(s)");
+            // a failing snapshot degrades durability, not availability:
+            // warn and keep serving (store-level failures are already
+            // absorbed + metered inside snapshot itself)
+            match engine.handle().snapshot() {
+                Ok(n) if n > 0 => {
+                    println!("deepcot_serve: snapshot checkpointed {n} live stream(s)");
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    eprintln!("deepcot_serve: periodic snapshot failed: {e} — serving continues");
+                }
             }
         }
     }
     println!("deepcot_serve: shutdown requested; draining");
     if persistent {
         // one final checkpoint so a clean shutdown loses nothing
-        let n = engine.handle().snapshot().context("final snapshot")?;
-        println!("deepcot_serve: final snapshot checkpointed {n} live stream(s)");
+        match engine.handle().snapshot() {
+            Ok(n) => println!("deepcot_serve: final snapshot checkpointed {n} live stream(s)"),
+            Err(e) => {
+                eprintln!("deepcot_serve: final snapshot failed: {e} — shutting down anyway");
+            }
+        }
     }
     let net = server.metrics();
     drop(metrics_srv); // stop scraping before the engine goes away
@@ -265,5 +286,156 @@ fn run_resume_smoke(server: &NetServer, engine: &EngineThread, d_lane: usize) ->
     }
     client.shutdown_server().context("resume-smoke shutdown")?;
     println!("deepcot_serve: resume smoke ok ({} stream(s) continued past their kill point)", ids.len());
+    Ok(())
+}
+
+/// Classify a chaos-smoke wire error: `Some(true)` — the stream lost
+/// its owner (re-homed to a checkpoint, or its forwarder announced the
+/// teardown) and wants an OPEN-resume; `Some(false)` — transient, just
+/// retry after a beat; `None` — not part of the planned failure, the
+/// smoke must fail loudly. `ShuttingDown` lands in `None` on purpose:
+/// supervision must never masquerade as shutdown.
+fn chaos_recoverable(e: &ClientError) -> Option<bool> {
+    match e {
+        ClientError::Engine(EngineError::Hibernated(_))
+        | ClientError::Engine(EngineError::StreamClosed(_)) => Some(true),
+        ClientError::Engine(EngineError::ShardFailed { retryable: true })
+        | ClientError::Engine(EngineError::Timeout)
+        | ClientError::Engine(EngineError::Backpressure(_)) => Some(false),
+        _ => None,
+    }
+}
+
+/// The supervision chaos smoke (`--expect-respawn`, paired with a
+/// `--fault … shard_step=@N` plan): drive several streams over
+/// loopback TCP into an injected shard-worker panic, recover each one
+/// through the typed-error protocol (retry / OPEN-resume), and require
+/// the metrics to report the crash, the re-home, and the respawn. The
+/// client must finish — a hang or an untyped failure fails the smoke.
+fn run_chaos_smoke(
+    server: &NetServer,
+    engine: &EngineThread,
+    d_lane: usize,
+    metrics_addr: Option<SocketAddr>,
+) -> Result<()> {
+    const STREAMS: usize = 4;
+    const WARMUP: usize = 8;
+    const CHAOS: usize = 40;
+    let mut client =
+        NetClient::connect(server.local_addr()).context("chaos client connecting")?;
+    client.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let ids: Vec<u64> =
+        (0..STREAMS).map(|_| client.open().context("chaos open")).collect::<Result<_>>()?;
+    let mut rng = Rng::new(0xC4A05);
+    // warm-up, then checkpoint: the injected crash must land AFTER a
+    // snapshot so every stream has a checkpoint to re-home onto
+    for _ in 0..WARMUP {
+        for &id in &ids {
+            client.push(id, &rng.normal_vec(d_lane, 1.0)).context("chaos warm-up push")?;
+            client.recv_tick(id).context("chaos warm-up tick")?;
+        }
+    }
+    let n = engine.handle().snapshot().context("chaos checkpoint")?;
+    anyhow::ensure!(
+        n >= STREAMS,
+        "chaos smoke checkpointed only {n}/{STREAMS} streams — pass --state-dir (or --hibernate) \
+         so every stream survives the injected crash"
+    );
+    println!("deepcot_serve: chaos smoke checkpointed {n} stream(s); entering fault window");
+    let mut recoveries = 0u64;
+    for round in 0..CHAOS {
+        for &id in &ids {
+            let tokens = rng.normal_vec(d_lane, 1.0);
+            let mut attempts = 0u32;
+            loop {
+                attempts += 1;
+                anyhow::ensure!(
+                    attempts <= 100,
+                    "stream {id} made no progress in round {round} after {attempts} attempts"
+                );
+                let step = match client.push(id, &tokens) {
+                    Ok(()) => match client.recv_tick(id) {
+                        Ok(t) => {
+                            anyhow::ensure!(
+                                t.logits.iter().all(|v| v.is_finite()),
+                                "non-finite logits on stream {id} in round {round}"
+                            );
+                            Ok(())
+                        }
+                        Err(e) => Err(e),
+                    },
+                    Err(e) => Err(e),
+                };
+                match step {
+                    Ok(()) => break,
+                    Err(e) => match chaos_recoverable(&e) {
+                        Some(true) => {
+                            recoveries += 1;
+                            // the crash enqueued a terminal error that
+                            // may have answered the wrong request; a
+                            // metrics round-trip parks any straggler
+                            // replies and resynchronizes the connection
+                            // before the OPEN-resume goes out
+                            let _ = client.metrics();
+                            match client.open_resume(id) {
+                                // reattached — re-drive from the
+                                // checkpoint (pushes past it died with
+                                // the crashed worker, as designed)
+                                Ok(_) => {}
+                                // stale trigger (the stream is live) or
+                                // the supervisor hasn't parked the
+                                // orphan yet — let the retry loop spin
+                                Err(ClientError::Engine(_)) => {
+                                    std::thread::sleep(Duration::from_millis(20));
+                                }
+                                Err(e) => {
+                                    return Err(e).with_context(|| {
+                                        format!("chaos resume of stream {id}")
+                                    })
+                                }
+                            }
+                        }
+                        Some(false) => std::thread::sleep(Duration::from_millis(20)),
+                        None => {
+                            return Err(e)
+                                .with_context(|| format!("unrecoverable chaos error, stream {id}"))
+                        }
+                    },
+                }
+            }
+        }
+    }
+    // the injected panic must be visible in the metrics: crash counted,
+    // streams re-homed, worker respawned (give the supervisor a moment)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let m = loop {
+        let m = engine.handle().metrics().context("chaos metrics")?;
+        if m.shards_respawned >= 1 || Instant::now() >= deadline {
+            break m;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    anyhow::ensure!(m.shard_failures >= 1, "no shard failure recorded — did the fault fire?");
+    anyhow::ensure!(m.streams_rehomed >= 1, "crash recorded but no stream was re-homed");
+    anyhow::ensure!(m.shards_respawned >= 1, "crashed shard was never respawned");
+    anyhow::ensure!(m.shards_dead == 0, "a shard is still dead after the respawn window");
+    anyhow::ensure!(recoveries >= 1, "client never exercised the resume recovery path");
+    if let Some(addr) = metrics_addr {
+        let body = scrape(addr, "/metrics")?;
+        let respawned = body
+            .lines()
+            .find_map(|l| l.strip_prefix("deepcot_shards_respawned_total "))
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .unwrap_or(0.0);
+        anyhow::ensure!(
+            respawned >= 1.0,
+            "scrape does not report the respawn:\n{body}"
+        );
+    }
+    client.shutdown_server().context("chaos shutdown")?;
+    println!(
+        "deepcot_serve: chaos smoke ok (failures={} rehomed={} respawned={} client recoveries={})",
+        m.shard_failures, m.streams_rehomed, m.shards_respawned, recoveries
+    );
     Ok(())
 }

@@ -6,6 +6,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::fault::FaultPlan;
 use crate::nn::simd::DispatchChoice;
 use crate::obs::ObsLevel;
 use crate::util::cli::{Args, Cli};
@@ -118,6 +119,11 @@ pub struct EngineConfig {
     /// (crash-recovery checkpoint; `Duration::ZERO` = only snapshot on
     /// clean shutdown). Only meaningful with `state_dir`.
     pub snapshot_every: Duration,
+    /// Deterministic fault-injection plan (chaos testing). Defaults
+    /// from `DEEPCOT_FAULT` (else disabled). When disabled every
+    /// injection site is a single branch — no counting, no allocation,
+    /// no behavior change.
+    pub fault: FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -139,6 +145,7 @@ impl Default for EngineConfig {
             hibernate: false,
             state_dir: None,
             snapshot_every: Duration::ZERO,
+            fault: FaultPlan::default_from_env(),
         }
     }
 }
@@ -260,6 +267,12 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// Deterministic fault-injection plan (chaos testing).
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.cfg.fault = plan;
+        self
+    }
+
     /// Finish the build.
     pub fn build(self) -> EngineConfig {
         self.cfg
@@ -289,6 +302,7 @@ impl EngineConfig {
             .flag("hibernate", "spill idle streams to an in-memory store instead of rejecting")
             .opt("state-dir", "", "session persistence dir (enables hibernation + crash recovery)")
             .opt("snapshot-every-ms", "0", "periodic full snapshot interval (ms; 0 = shutdown only)")
+            .opt("fault", "auto", "fault-injection plan, e.g. seed=7,shard_step=@40 (auto = $DEEPCOT_FAULT)")
     }
 
     pub fn from_args(args: &Args) -> Result<Self> {
@@ -314,6 +328,9 @@ impl EngineConfig {
             cfg.state_dir = Some(args.get("state-dir").into());
         }
         cfg.snapshot_every = Duration::from_millis(args.get_u64("snapshot-every-ms")?);
+        if args.get("fault") != "auto" {
+            cfg.fault = args.get("fault").parse().map_err(anyhow::Error::msg)?;
+        }
         Ok(cfg)
     }
 
@@ -473,6 +490,32 @@ mod tests {
         assert!(b.hibernate);
         assert_eq!(b.state_dir, Some(PathBuf::from("/tmp/x")));
         assert_eq!(b.snapshot_every, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn fault_option_parses() {
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli
+            .parse_from(["--fault", "seed=7,shard=1,shard_step=@40"].iter().map(|s| s.to_string()))
+            .unwrap();
+        let c = EngineConfig::from_args(&args).unwrap();
+        assert!(c.fault.is_enabled());
+        assert_eq!(c.fault.seed, 7);
+        assert_eq!(c.fault.target_shard, 1);
+        // "off" beats any DEEPCOT_FAULT the test environment could
+        // carry — it parses to the disabled plan
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli.parse_from(["--fault", "off"].iter().map(|s| s.to_string())).unwrap();
+        assert!(!EngineConfig::from_args(&args).unwrap().fault.is_enabled());
+        // malformed specs are typed CLI errors, not panics
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli.parse_from(["--fault", "shard_step=0"].iter().map(|s| s.to_string())).unwrap();
+        assert!(EngineConfig::from_args(&args).is_err());
+        // builder knob
+        let b = EngineConfig::builder()
+            .fault("seed=3,store_put=5".parse().unwrap())
+            .build();
+        assert!(b.fault.is_enabled());
     }
 
     #[test]

@@ -66,21 +66,23 @@
 //! [`SlotStepper`]: crate::coordinator::slot_stepper::SlotStepper
 
 use std::collections::BTreeMap;
-use std::sync::mpsc;
-use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::{Duration, Instant};
 
 use crate::config::{EngineConfig, PlacementPolicy};
 use crate::coordinator::hibernate::{self, HibernatePool};
-use crate::coordinator::metrics::{ClusterMetrics, LatencyHisto};
+use crate::coordinator::metrics::{ClusterMetrics, EngineMetrics, LatencyHisto};
 use crate::coordinator::session::{EngineError, Session};
-use crate::coordinator::shard::{ImportReason, ShardHandle, ShardThread};
+use crate::coordinator::shard::{ImportReason, ShardFailure, ShardHandle, ShardThread};
 use crate::coordinator::slots::StreamId;
+use crate::fault::{FaultInjector, FaultStore};
 use crate::obs::journal::EventKind;
 use crate::obs::span::Stage;
 use crate::obs::ObsHandle;
 use crate::store::disk::DiskStore;
-use crate::store::MemStore;
+use crate::store::{self, MemStore, StateStore};
 
 /// Cluster-level placement: pins streams to shards and tracks the load
 /// the front door believes each shard carries (opens minus closes). A
@@ -189,6 +191,21 @@ struct FrontDoor {
     /// Full-cluster snapshots completed.
     snapshots_taken: u64,
     snapshot_latency: LatencyHisto,
+    /// Shard worker deaths observed by the supervisor.
+    shard_failures: u64,
+    /// Dead shards respawned back into service.
+    shards_respawned: u64,
+    /// Crashed-shard streams re-homed onto their last checkpoint
+    /// (portless hibernation rows; a resume revives them).
+    streams_rehomed: u64,
+    /// Crashed-shard streams with no checkpoint: state lost, owner told
+    /// so with a typed error.
+    streams_lost: u64,
+    /// Store operations that failed past their retry budget — the
+    /// engine kept serving in degraded mode instead of aborting.
+    store_degraded: u64,
+    /// Retries spent by degraded-store exponential backoff.
+    store_retries: u64,
 }
 
 // the front door is read-mostly on the hot path (push only needs the
@@ -214,22 +231,98 @@ pub struct RebalanceReport {
     pub failed: usize,
 }
 
+/// One shard's slot in the front door's table: the live handle behind
+/// a lock (the supervisor swaps a respawned worker's handle in after a
+/// crash) plus a dead flag so the hot path fails fast with a typed,
+/// retryable error instead of blocking on a corpse.
+struct ShardCell {
+    inner: RwLock<ShardHandle>,
+    dead: AtomicBool,
+}
+
+impl ShardCell {
+    fn new(handle: ShardHandle) -> ShardCell {
+        ShardCell { inner: RwLock::new(handle), dead: AtomicBool::new(false) }
+    }
+
+    /// The live handle, or the retryable [`EngineError::ShardFailed`]
+    /// while the shard is down (the supervisor is re-homing its
+    /// streams and respawning its worker).
+    fn get(&self) -> Result<ShardHandle, EngineError> {
+        if self.dead.load(Ordering::Acquire) {
+            return Err(EngineError::ShardFailed { retryable: true });
+        }
+        Ok(self.inner.read().unwrap_or_else(|p| p.into_inner()).clone())
+    }
+
+    fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Release);
+    }
+
+    /// Swap in a respawned worker's handle and clear the dead flag —
+    /// called only after the crashed worker's streams were re-homed,
+    /// so a retrying caller can never land on the fresh shard through
+    /// a stale binding.
+    fn replace(&self, handle: ShardHandle) {
+        *self.inner.write().unwrap_or_else(|p| p.into_inner()) = handle;
+        self.dead.store(false, Ordering::Release);
+    }
+}
+
 /// Cloneable, `Send` front-door handle to the shard cluster. `open`
 /// hands out RAII [`Session`]s — the only public path for pushing
 /// tokens — while `metrics`, `migrate` and `rebalance` expose the
 /// cluster's observability and placement controls.
 #[derive(Clone)]
 pub struct EngineHandle {
-    shards: Arc<[ShardHandle]>,
+    shards: Arc<[ShardCell]>,
     door: Arc<RwLock<FrontDoor>>,
     obs: ObsHandle,
     /// Hibernation table + state store; `None` when neither
     /// `cfg.hibernate` nor `cfg.state_dir` is set (legacy semantics:
     /// full shards evict-or-reject).
     pool: Option<HibernatePool>,
+    /// Set for good when the engine starts tearing down: from then on
+    /// shard-failure errors report as [`EngineError::ShuttingDown`]
+    /// (the legacy contract), while a mid-flight crash before shutdown
+    /// stays the retryable [`EngineError::ShardFailed`].
+    shutting_down: Arc<AtomicBool>,
+    /// Deterministic fault injection; the net layer's read/write sites
+    /// fire through this shared injector. Disabled = one branch per
+    /// check.
+    fault: FaultInjector,
 }
 
 impl EngineHandle {
+    /// A live handle to `shard`, with the dead-shard error translated
+    /// for the engine's lifecycle phase.
+    fn shard(&self, shard: usize) -> Result<ShardHandle, EngineError> {
+        self.shards[shard].get().map_err(|e| self.translate(e))
+    }
+
+    /// During real shutdown a dead shard IS the engine going down;
+    /// outside it, supervision must never masquerade as shutdown (a
+    /// healthy cluster reporting [`EngineError::ShuttingDown`] for one
+    /// crashed shard is the poisoning this subsystem exists to stop).
+    fn translate(&self, e: EngineError) -> EngineError {
+        match e {
+            EngineError::ShardFailed { .. } if self.shutting_down.load(Ordering::Acquire) => {
+                EngineError::ShuttingDown
+            }
+            other => other,
+        }
+    }
+
+    /// The engine's shared fault injector (net sites fire through it;
+    /// a disabled injector is a single branch per check).
+    pub(crate) fn fault(&self) -> FaultInjector {
+        self.fault.clone()
+    }
+
     /// Open a stream: assign a cluster-unique id, walk the placement
     /// plan (primary, then least-loaded fallbacks) until a shard admits
     /// it, and pin the stream there. Returns the RAII [`Session`] that
@@ -248,7 +341,16 @@ impl EngineHandle {
         };
         let mut last_err = None;
         for (rank, &shard) in order.iter().enumerate() {
-            match self.shards[shard].open(id) {
+            let handle = match self.shard(shard) {
+                Ok(h) => h,
+                Err(e) => {
+                    // dead shard mid-supervision: skip it, the fallback
+                    // chain covers the survivors
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            match handle.open(id) {
                 Ok((rx, evicted)) => {
                     let mut door = write(&self.door);
                     if let Some(eid) = evicted {
@@ -270,7 +372,7 @@ impl EngineHandle {
             }
         }
         write(&self.door).cluster_rejects += 1;
-        Err(last_err.unwrap_or(EngineError::ShuttingDown))
+        Err(self.translate(last_err.unwrap_or(EngineError::ShuttingDown)))
     }
 
     /// Submit the next token(s) for a stream (m*d_in f32s); routed to
@@ -302,10 +404,10 @@ impl EngineHandle {
                     }
                 }
             };
-            match self.shards[shard].push(id, tokens) {
+            match self.shard(shard)?.push(id, tokens) {
                 Ok(()) => return Ok(()),
                 Err((EngineError::StreamClosed(_), Some(rejected))) => tokens = rejected,
-                Err((e, _)) => return Err(e),
+                Err((e, _)) => return Err(self.translate(e)),
             }
         }
         Err(EngineError::StreamClosed(id))
@@ -341,7 +443,15 @@ impl EngineHandle {
         let mut last_err = None;
         for &shard in &order {
             let Some(p) = payload.take() else { break };
-            match self.shards[shard].import(id, p, ImportReason::Restore) {
+            let handle = match self.shard(shard) {
+                Ok(h) => h,
+                Err(e) => {
+                    payload = Some(p);
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            match handle.import(id, p, ImportReason::Restore) {
                 Ok(evicted) => {
                     if let Some(eid) = evicted {
                         door.router.unbind(eid);
@@ -355,7 +465,7 @@ impl EngineHandle {
                         door.router.unbind(eid);
                     }
                     payload = p;
-                    last_err = Some(e);
+                    last_err = Some(self.translate(e));
                 }
             }
         }
@@ -402,7 +512,15 @@ impl EngineHandle {
         let mut last_err = None;
         for &shard in &order {
             let Some(p) = payload.take() else { break };
-            match self.shards[shard].import(id, p, ImportReason::Restore) {
+            let handle = match self.shard(shard) {
+                Ok(h) => h,
+                Err(e) => {
+                    payload = Some(p);
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            match handle.import(id, p, ImportReason::Restore) {
                 Ok(evicted) => {
                     if let Some(eid) = evicted {
                         door.router.unbind(eid);
@@ -417,7 +535,7 @@ impl EngineHandle {
                         door.router.unbind(eid);
                     }
                     payload = p;
-                    last_err = Some(e);
+                    last_err = Some(self.translate(e));
                 }
             }
         }
@@ -456,14 +574,20 @@ impl EngineHandle {
             .collect();
         let mut n = 0usize;
         for (id, shard) in bound {
-            let payload = match self.shards[shard].export(id, false) {
+            // a dead shard's streams belong to the supervisor now; the
+            // re-home path keys off their LAST checkpoint, so skipping
+            // them here is correct, not lossy
+            let Ok(handle) = self.shard(shard) else { continue };
+            let payload = match handle.export(id, false) {
                 Ok(p) => p,
                 // the stream closed between the load snapshot and now
                 Err(_) => continue,
             };
             let rec = hibernate::record_of(id, &payload);
-            let ckpt = pool.checkpoint(&rec);
-            match self.shards[shard].import(id, payload, ImportReason::Snapshot) {
+            let (ckpt, retries) =
+                store::with_retries(3, Duration::from_millis(10), || pool.checkpoint(&rec));
+            door.store_retries += u64::from(retries);
+            match handle.import(id, payload, ImportReason::Snapshot) {
                 Ok(evicted) => {
                     if let Some(eid) = evicted {
                         door.router.unbind(eid);
@@ -484,11 +608,33 @@ impl EngineHandle {
                     }
                 }
             }
-            if ckpt.is_ok() {
-                n += 1;
+            match ckpt {
+                Ok(()) => n += 1,
+                Err(e) => {
+                    // degraded mode: a failing store must not abort the
+                    // snapshot sweep, let alone the engine — journal it,
+                    // meter it, keep serving
+                    door.store_degraded += 1;
+                    let aux = u64::from(retries);
+                    self.obs.event(EventKind::StoreDegraded, id.0, shard as i64, aux);
+                    eprintln!(
+                        "deepcot: degraded store: checkpoint of stream {} failed after \
+                         {retries} retries: {e} — serving continues",
+                        id.0
+                    );
+                }
             }
         }
-        pool.sync().map_err(EngineError::internal)?;
+        let (synced, retries) = store::with_retries(3, Duration::from_millis(10), || pool.sync());
+        door.store_retries += u64::from(retries);
+        if let Err(e) = synced {
+            door.store_degraded += 1;
+            self.obs.event(EventKind::StoreDegraded, 0, -1, u64::from(retries));
+            eprintln!(
+                "deepcot: degraded store: snapshot sync failed after {retries} retries: {e} — \
+                 durability is behind, serving continues"
+            );
+        }
         door.snapshots_taken += 1;
         let dt = t0.elapsed();
         door.snapshot_latency.record(dt);
@@ -502,7 +648,11 @@ impl EngineHandle {
     pub(crate) fn close_raw(&self, id: StreamId) {
         let shard = write(&self.door).router.unbind(id);
         if let Some(s) = shard {
-            self.shards[s].close(id);
+            // a dead shard has nothing to close; the binding is gone
+            // either way and the blob removal below still runs
+            if let Ok(h) = self.shards[s].get() {
+                h.close(id);
+            }
         }
         if let Some(pool) = &self.pool {
             let _ = pool.remove(id);
@@ -569,18 +719,28 @@ impl EngineHandle {
         }
         door.migrations_attempted += 1;
         self.obs.event(EventKind::MigrationAttempt, id.0, from as i64, to_shard as u64);
-        // export atomically detaches the stream from its source shard
-        // (or fails with the stream still serving there, untouched)
-        let payload = match self.shards[from].export(id, true) {
-            Ok(p) => p,
-            Err(e) => {
+        // both endpoints must be alive before state starts moving; a
+        // dead endpoint aborts with the stream untouched on its source
+        let (src, dst) = match (self.shard(from), self.shard(to_shard)) {
+            (Ok(s), Ok(d)) => (s, d),
+            (Err(e), _) | (_, Err(e)) => {
                 door.migrations_aborted += 1;
                 self.obs.event(EventKind::MigrationAbort, id.0, from as i64, to_shard as u64);
                 return Err(e);
             }
         };
+        // export atomically detaches the stream from its source shard
+        // (or fails with the stream still serving there, untouched)
+        let payload = match src.export(id, true) {
+            Ok(p) => p,
+            Err(e) => {
+                door.migrations_aborted += 1;
+                self.obs.event(EventKind::MigrationAbort, id.0, from as i64, to_shard as u64);
+                return Err(self.translate(e));
+            }
+        };
         door.router.unbind(id);
-        match self.shards[to_shard].import(id, payload, ImportReason::Migrate) {
+        match dst.import(id, payload, ImportReason::Migrate) {
             Ok(evicted) => {
                 if let Some(eid) = evicted {
                     door.router.unbind(eid);
@@ -619,12 +779,16 @@ impl EngineHandle {
                     .collect();
                 for shard in rescue {
                     let Some(p) = payload.take() else { break };
+                    let Ok(handle) = self.shards[shard].get() else {
+                        payload = Some(p);
+                        continue;
+                    };
                     let reason = if shard == from {
                         ImportReason::MigrateRollback
                     } else {
                         ImportReason::Migrate
                     };
-                    match self.shards[shard].import(id, p, reason) {
+                    match handle.import(id, p, reason) {
                         Ok(evicted) => {
                             if let Some(eid) = evicted {
                                 door.router.unbind(eid);
@@ -640,7 +804,7 @@ impl EngineHandle {
                         }
                     }
                 }
-                Err(e)
+                Err(self.translate(e))
             }
         }
     }
@@ -692,11 +856,18 @@ impl EngineHandle {
     /// Cluster metrics: per-shard snapshots, their aggregate, and the
     /// front door's placement + migration counters.
     pub fn metrics(&self) -> Result<ClusterMetrics, EngineError> {
-        let per_shard = self
+        // a dead shard must not blind the whole cluster's metrics
+        // (supervision is exactly when operators need them); it
+        // contributes an empty snapshot until its respawn reports in
+        let per_shard: Vec<EngineMetrics> = self
             .shards
             .iter()
-            .map(|s| s.metrics())
-            .collect::<Result<Vec<_>, _>>()?;
+            .map(|cell| {
+                cell.get()
+                    .and_then(|h| h.metrics())
+                    .unwrap_or_else(|_| EngineMetrics::new())
+            })
+            .collect();
         let mut m = ClusterMetrics::from_shards(per_shard);
         let door = read(&self.door);
         m.placed_primary = door.placed_primary;
@@ -709,7 +880,14 @@ impl EngineHandle {
         m.streams_recovered = door.streams_recovered;
         m.snapshots_taken = door.snapshots_taken;
         m.snapshot_latency = door.snapshot_latency.clone();
+        m.shard_failures = door.shard_failures;
+        m.shards_respawned = door.shards_respawned;
+        m.streams_rehomed = door.streams_rehomed;
+        m.streams_lost = door.streams_lost;
+        m.store_degraded = door.store_degraded;
+        m.store_retries = door.store_retries;
         drop(door);
+        m.shards_dead = self.shards.iter().filter(|c| c.is_dead()).count() as u64;
         if let Some(pool) = &self.pool {
             m.hibernated_resident = pool.resident() as u64;
         }
@@ -726,12 +904,174 @@ impl EngineHandle {
     }
 }
 
-/// The sharded serving engine: N shard worker threads behind one
-/// [`EngineHandle`] front door. With `cfg.shards == 1` this is exactly
-/// the old single-threaded `EngineThread`.
-pub struct ShardedEngine {
-    shards: Vec<ShardThread>,
+/// How many times the supervisor tries to respawn a crashed shard
+/// worker (10 ms exponential backoff between attempts) before leaving
+/// it dead — the rest of the cluster keeps serving either way.
+const RESPAWN_ATTEMPTS: u32 = 8;
+
+/// The crash supervisor: a dedicated thread that owns the failure
+/// channel every shard worker reports into. On a worker panic it (1)
+/// marks the shard dead so the front door fails fast with the
+/// retryable [`EngineError::ShardFailed`], (2) re-homes the dead
+/// shard's streams — checkpointed ones become portless hibernation
+/// rows that a push/resume revives on a survivor from their last
+/// checkpoint; un-checkpointed ones are counted lost so their owners
+/// get a typed error instead of a hang — and (3) respawns the worker
+/// and swaps its fresh handle into the shard's cell.
+struct Supervisor {
+    cfg: EngineConfig,
     handle: EngineHandle,
+    workers: Arc<Mutex<Vec<ShardThread>>>,
+    /// Respawned workers report failures into the same channel; the
+    /// supervisor holding this clone means `recv` never disconnects
+    /// while shards can still crash.
+    fail_tx: Sender<ShardFailure>,
+}
+
+impl Supervisor {
+    fn shutting_down(&self) -> bool {
+        self.handle.shutting_down.load(Ordering::Acquire)
+    }
+
+    fn run(self, fail_rx: mpsc::Receiver<ShardFailure>) {
+        // poll with a timeout rather than blocking forever: the
+        // supervisor holds a fail_tx clone (for respawns), so the
+        // Disconnected arm alone can never end this loop
+        loop {
+            match fail_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(f) => {
+                    if self.shutting_down() {
+                        return;
+                    }
+                    self.handle_failure(f);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.shutting_down() {
+                        return;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
+
+    fn handle_failure(&self, f: ShardFailure) {
+        let shard = f.shard;
+        eprintln!("deepcot: shard {shard} worker died ({}); supervising", f.reason);
+        // fail fast first: every request routed at this shard from now
+        // on gets the retryable typed error instead of blocking
+        self.handle.shards[shard].mark_dead();
+        self.handle.obs.event(EventKind::ShardPanic, 0, shard as i64, 0);
+        // re-home under the door write lock — the same quiesce a
+        // migration uses, so no push can race the rebinding
+        {
+            let mut door = write(&self.handle.door);
+            door.shard_failures += 1;
+            let orphans = door.router.streams_on(shard);
+            for id in orphans {
+                door.router.unbind(id);
+                let ticks =
+                    self.handle.pool.as_ref().and_then(|p| p.checkpoint_ticks(id));
+                match (&self.handle.pool, ticks) {
+                    (Some(pool), Some(ticks)) => {
+                        // last checkpoint exists: park the stream as a
+                        // portless hibernation row — the owner's next
+                        // push (or an OPEN-resume) restores it onto a
+                        // survivor at exactly that checkpoint
+                        pool.register_orphan(id);
+                        door.streams_rehomed += 1;
+                        self.handle.obs.event(EventKind::StreamRehomed, id.0, shard as i64, ticks);
+                    }
+                    _ => {
+                        // no checkpoint: the state died with the worker.
+                        // The unbind above makes the owner's next push
+                        // return StreamClosed (typed, immediate) rather
+                        // than hang on a dead channel
+                        door.streams_lost += 1;
+                        self.handle.obs.event(EventKind::StreamLost, id.0, shard as i64, 0);
+                    }
+                }
+            }
+        }
+        // respawn with bounded exponential backoff; a persistent crash
+        // (e.g. a deterministic fault plan that kills every respawn at
+        // tick N) leaves the shard dead and the survivors serving
+        let mut delay = Duration::from_millis(10);
+        for attempt in 1..=RESPAWN_ATTEMPTS {
+            if self.shutting_down() {
+                return;
+            }
+            match self.respawn(shard) {
+                Ok(()) => {
+                    let total = {
+                        let mut door = write(&self.handle.door);
+                        door.shards_respawned += 1;
+                        door.shards_respawned
+                    };
+                    self.handle.obs.event(EventKind::ShardRespawn, 0, shard as i64, total);
+                    eprintln!("deepcot: shard {shard} respawned (attempt {attempt})");
+                    return;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "deepcot: shard {shard} respawn attempt {attempt}/{RESPAWN_ATTEMPTS} \
+                         failed: {e}"
+                    );
+                    std::thread::sleep(delay);
+                    delay = delay.saturating_mul(2);
+                }
+            }
+        }
+        eprintln!(
+            "deepcot: shard {shard} left dead after {RESPAWN_ATTEMPTS} respawn attempts; \
+             surviving shards keep serving"
+        );
+    }
+
+    fn respawn(&self, shard: usize) -> Result<(), EngineError> {
+        let mut t = ShardThread::start(
+            shard,
+            self.cfg.clone(),
+            self.handle.obs.clone(),
+            self.handle.pool.clone(),
+            self.fail_tx.clone(),
+            // the engine-wide injector: a respawned worker continues
+            // the fault schedule, it does not restart it
+            self.handle.fault.clone(),
+        )?;
+        t.wait_ready()?;
+        let fresh = t.handle();
+        // park the new worker where the corpse was; the old thread
+        // already exited, so its Drop-join returns immediately
+        let old = {
+            let mut workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+            std::mem::replace(&mut workers[shard], t)
+        };
+        drop(old);
+        // only now — streams re-homed, worker ready — does the cell go
+        // live again, so a retrying push can't land on the fresh shard
+        // through a stale binding
+        self.handle.shards[shard].replace(fresh.clone());
+        if self.shutting_down() {
+            // teardown raced the respawn: the fresh worker missed the
+            // shutdown broadcast, so deliver it ourselves (shutdown's
+            // second broadcast also covers this; signaling is idempotent)
+            fresh.signal_shutdown();
+        }
+        Ok(())
+    }
+}
+
+/// The sharded serving engine: N shard worker threads behind one
+/// [`EngineHandle`] front door, plus a supervisor thread that re-homes
+/// streams off crashed workers and respawns them. With
+/// `cfg.shards == 1` this is exactly the old single-threaded
+/// `EngineThread` — with a safety net.
+pub struct ShardedEngine {
+    /// Shared with the supervisor, which swaps respawned workers in.
+    workers: Arc<Mutex<Vec<ShardThread>>>,
+    handle: EngineHandle,
+    supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ShardedEngine {
@@ -742,14 +1082,27 @@ impl ShardedEngine {
     pub fn spawn(cfg: EngineConfig) -> Result<Self, EngineError> {
         let n = cfg.effective_shards().max(1);
         let obs = ObsHandle::new(cfg.obs);
+        let fault = FaultInjector::from_plan(&cfg.fault);
+        // with injection armed the state store is wrapped so its
+        // put/get/sync sites can fail on schedule; disabled plans keep
+        // the store untouched (zero overhead, identical code path)
+        let wrap = |inner: Box<dyn StateStore>,
+                    torn: Option<std::path::PathBuf>|
+         -> Box<dyn StateStore> {
+            if fault.enabled() {
+                Box::new(FaultStore::new(inner, fault.clone(), torn))
+            } else {
+                inner
+            }
+        };
         let pool = match (&cfg.state_dir, cfg.hibernate) {
             (Some(dir), _) => {
                 std::fs::create_dir_all(dir).map_err(EngineError::internal)?;
-                let store =
-                    DiskStore::open(dir.join("streams.log")).map_err(EngineError::internal)?;
-                Some(HibernatePool::new(Box::new(store)))
+                let path = dir.join("streams.log");
+                let store = DiskStore::open(&path).map_err(EngineError::internal)?;
+                Some(HibernatePool::new(wrap(Box::new(store), Some(path))))
             }
-            (None, true) => Some(HibernatePool::new(Box::new(MemStore::new()))),
+            (None, true) => Some(HibernatePool::new(wrap(Box::new(MemStore::new()), None))),
             (None, false) => None,
         };
         // recover-on-boot: every stream a previous run persisted is
@@ -764,15 +1117,23 @@ impl ShardedEngine {
                 recovered += 1;
             }
         }
-        let mut shards = Vec::with_capacity(n);
+        let (fail_tx, fail_rx) = mpsc::channel::<ShardFailure>();
+        let mut workers = Vec::with_capacity(n);
         for s in 0..n {
-            shards.push(ShardThread::start(s, cfg.clone(), obs.clone(), pool.clone())?);
+            workers.push(ShardThread::start(
+                s,
+                cfg.clone(),
+                obs.clone(),
+                pool.clone(),
+                fail_tx.clone(),
+                fault.clone(),
+            )?);
         }
-        for t in shards.iter_mut() {
+        for t in workers.iter_mut() {
             t.wait_ready()?;
         }
-        let handles: Arc<[ShardHandle]> =
-            shards.iter().map(|t| t.handle()).collect::<Vec<_>>().into();
+        let cells: Arc<[ShardCell]> =
+            workers.iter().map(|t| ShardCell::new(t.handle())).collect::<Vec<_>>().into();
         let door = FrontDoor {
             router: ShardRouter::new(n, cfg.placement),
             next_id,
@@ -786,10 +1147,33 @@ impl ShardedEngine {
             streams_recovered: recovered,
             snapshots_taken: 0,
             snapshot_latency: LatencyHisto::new(),
+            shard_failures: 0,
+            shards_respawned: 0,
+            streams_rehomed: 0,
+            streams_lost: 0,
+            store_degraded: 0,
+            store_retries: 0,
         };
-        let handle =
-            EngineHandle { shards: handles, door: Arc::new(RwLock::new(door)), obs, pool };
-        Ok(Self { shards, handle })
+        let handle = EngineHandle {
+            shards: cells,
+            door: Arc::new(RwLock::new(door)),
+            obs,
+            pool,
+            shutting_down: Arc::new(AtomicBool::new(false)),
+            fault,
+        };
+        let workers = Arc::new(Mutex::new(workers));
+        let sup = Supervisor {
+            cfg,
+            handle: handle.clone(),
+            workers: Arc::clone(&workers),
+            fail_tx,
+        };
+        let supervisor = std::thread::Builder::new()
+            .name("deepcot-supervisor".to_string())
+            .spawn(move || sup.run(fail_rx))
+            .map_err(EngineError::internal)?;
+        Ok(Self { workers, handle, supervisor: Some(supervisor) })
     }
 
     /// A cloneable front-door handle.
@@ -799,7 +1183,7 @@ impl ShardedEngine {
 
     /// Number of worker shards.
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.handle.shards.len()
     }
 
     /// Live-migrate a stream to another shard (see
@@ -816,13 +1200,30 @@ impl ShardedEngine {
 
     /// Signal every shard, then join them all: each shard drains its
     /// queued requests with terminal errors before exiting, so no
-    /// in-flight caller is left blocked.
+    /// in-flight caller is left blocked. The supervisor is retired
+    /// first (flag, then join) so a crash racing the teardown can't
+    /// respawn a worker nobody will join.
     pub fn shutdown(mut self) -> Result<(), EngineError> {
-        for t in &self.shards {
+        self.handle.shutting_down.store(true, Ordering::Release);
+        {
+            let workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+            for t in workers.iter() {
+                t.signal_shutdown();
+            }
+        }
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
+        }
+        // second broadcast + join under one lock: a worker the
+        // supervisor respawned after the first broadcast missed it, and
+        // signaling an already-draining shard is a harmless extra
+        // Shutdown message
+        let mut res = Ok(());
+        let mut workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+        for t in workers.iter() {
             t.signal_shutdown();
         }
-        let mut res = Ok(());
-        for t in self.shards.iter_mut() {
+        for t in workers.iter_mut() {
             if let Err(e) = t.join() {
                 res = Err(e);
             }
@@ -833,10 +1234,17 @@ impl ShardedEngine {
 
 impl Drop for ShardedEngine {
     fn drop(&mut self) {
-        // broadcast first so shards drain in parallel; ShardThread's own
-        // Drop joins each one
-        for t in &self.shards {
-            t.signal_shutdown();
+        // broadcast first so shards drain in parallel; dropping the
+        // workers vec joins each one via ShardThread's own Drop
+        self.handle.shutting_down.store(true, Ordering::Release);
+        {
+            let workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+            for t in workers.iter() {
+                t.signal_shutdown();
+            }
+        }
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
         }
     }
 }

@@ -158,6 +158,32 @@ impl HibernatePool {
         g.stats.recovered += 1;
     }
 
+    /// Whether the store holds a checkpoint blob for `id` — the
+    /// supervisor's re-home test after a shard crash. A read error
+    /// counts as "no checkpoint": claiming one we cannot load would
+    /// wedge the stream in an unresumable state.
+    pub(crate) fn has_checkpoint(&self, id: StreamId) -> bool {
+        self.checkpoint_ticks(id).is_some()
+    }
+
+    /// The tick ordinal a re-home would resume `id` from: decoded from
+    /// its checkpoint blob, `None` when there is no loadable
+    /// checkpoint. Read-only (the table row is untouched).
+    pub(crate) fn checkpoint_ticks(&self, id: StreamId) -> Option<u64> {
+        let blob = self.lock().store.get(id.0).ok().flatten()?;
+        StreamRecord::decode(&blob).ok().map(|rec| rec.ticks)
+    }
+
+    /// Re-home a crashed shard's stream: register it as hibernated
+    /// with no owner, exactly like recover-on-boot but without
+    /// counting toward `recovered` (the crash path has its own
+    /// counters). The stream's last checkpoint blob becomes its
+    /// state; a resume request (or OPEN-resume over the wire) wakes
+    /// it on a surviving shard.
+    pub(crate) fn register_orphan(&self, id: StreamId) {
+        self.lock().table.insert(id, None);
+    }
+
     /// Forget `id` entirely (stream closed): table row and stored blob.
     pub(crate) fn remove(&self, id: StreamId) -> Result<bool, StoreError> {
         let mut g = self.lock();
@@ -284,6 +310,21 @@ mod tests {
         let (_rec, port) = pool.begin_restore(StreamId(4)).unwrap().unwrap();
         pool.abort_restore(StreamId(4), port);
         assert_eq!(pool.has_port(StreamId(4)), Some(true));
+    }
+
+    #[test]
+    fn orphan_registration_mirrors_recovery_without_counting() {
+        let mut store = MemStore::new();
+        store.put(5, &rec(5).encode()).unwrap();
+        let pool = HibernatePool::new(Box::new(store));
+        assert!(pool.has_checkpoint(StreamId(5)));
+        assert!(!pool.has_checkpoint(StreamId(6)));
+        pool.register_orphan(StreamId(5));
+        assert_eq!(pool.has_port(StreamId(5)), Some(false));
+        assert_eq!(pool.stats().recovered, 0, "crash re-home is not boot recovery");
+        let (got, port) = pool.begin_restore(StreamId(5)).unwrap().unwrap();
+        assert_eq!(got.stream, 5);
+        assert!(port.is_none());
     }
 
     #[test]

@@ -283,6 +283,25 @@ pub struct ClusterMetrics {
     /// Wall time per full-cluster snapshot (quiesce + export + store
     /// write for every bound stream).
     pub snapshot_latency: LatencyHisto,
+    /// Shard worker deaths observed by the supervisor.
+    pub shard_failures: u64,
+    /// Dead shards respawned back into service by the supervisor.
+    pub shards_respawned: u64,
+    /// Shards currently dead (a gauge: marked failed, not yet — or
+    /// never — respawned; requests routed at them fail fast with a
+    /// retryable error).
+    pub shards_dead: u64,
+    /// Crashed-shard streams re-homed onto their last checkpoint
+    /// (resumable on a surviving shard).
+    pub streams_rehomed: u64,
+    /// Crashed-shard streams lost for lack of a checkpoint (their
+    /// owners get a typed error, never a hang).
+    pub streams_lost: u64,
+    /// Store operations that stayed failed past their retry budget —
+    /// the engine served on in degraded mode instead of aborting.
+    pub store_degraded: u64,
+    /// Retries spent by degraded-store exponential backoff.
+    pub store_retries: u64,
     /// Kernel path the shard backends resolved at startup (shards share
     /// one `EngineConfig`, so one value describes the cluster).
     pub kernel_dispatch: String,
@@ -375,6 +394,19 @@ impl ClusterMetrics {
                 self.streams_recovered,
                 self.snapshots_taken,
                 self.snapshot_latency.quantile(0.99),
+            ));
+        }
+        if self.shard_failures > 0 || self.store_degraded > 0 {
+            s.push_str(&format!(
+                "\n  faults: shard_failures={} respawned={} dead={} rehomed={} lost={} \
+                 store_degraded={} store_retries={}",
+                self.shard_failures,
+                self.shards_respawned,
+                self.shards_dead,
+                self.streams_rehomed,
+                self.streams_lost,
+                self.store_degraded,
+                self.store_retries,
             ));
         }
         if self.per_shard.len() > 1 {

@@ -46,6 +46,16 @@ pub enum EngineError {
     /// and has no live owner to restore it through — re-open it with a
     /// resume request to wake it.
     Hibernated(StreamId),
+    /// The stream's shard worker crashed. When `retryable` the
+    /// supervisor is re-homing the shard's streams onto survivors —
+    /// retry the request (a re-homed stream resumes from its last
+    /// checkpoint via an OPEN-resume); when not, the failure is
+    /// permanent for this stream (no checkpoint existed).
+    ShardFailed {
+        /// Whether the caller should retry after the supervisor
+        /// finishes re-homing (`true` for checkpointed streams).
+        retryable: bool,
+    },
     /// The active backend cannot perform the operation (e.g. stream
     /// snapshot export on the PJRT backend).
     Unsupported(String),
@@ -75,6 +85,12 @@ impl fmt::Display for EngineError {
             EngineError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
             EngineError::Hibernated(id) => {
                 write!(f, "stream {} is hibernated; resume it to push", id.0)
+            }
+            EngineError::ShardFailed { retryable: true } => {
+                write!(f, "shard worker failed; streams are being re-homed — retry")
+            }
+            EngineError::ShardFailed { retryable: false } => {
+                write!(f, "shard worker failed; stream state was lost (no checkpoint)")
             }
             EngineError::Unsupported(m) => write!(f, "unsupported: {m}"),
             EngineError::Internal(m) => write!(f, "engine internal error: {m}"),
@@ -211,6 +227,15 @@ impl Session {
         self.closed = true;
         self.handle.close_raw(self.id);
     }
+
+    /// Disarm the RAII close WITHOUT touching the engine. For zombie
+    /// session objects only: after a shard crash re-homes a stream and
+    /// a resume mints it a new owner, the old session refers to a
+    /// stream it no longer owns — closing through the corpse would
+    /// tear down (and un-persist) the resumed stream.
+    pub(crate) fn forget(mut self) {
+        self.closed = true;
+    }
 }
 
 impl Drop for Session {
@@ -246,6 +271,14 @@ mod tests {
             "stream 3 queue full (backpressure)"
         );
         assert_eq!(EngineError::ShuttingDown.to_string(), "engine is shutting down");
+        assert_eq!(
+            EngineError::ShardFailed { retryable: true }.to_string(),
+            "shard worker failed; streams are being re-homed — retry"
+        );
+        assert_eq!(
+            EngineError::ShardFailed { retryable: false }.to_string(),
+            "shard worker failed; stream state was lost (no checkpoint)"
+        );
         assert_eq!(
             EngineError::Hibernated(StreamId(9)).to_string(),
             "stream 9 is hibernated; resume it to push"

@@ -37,7 +37,17 @@
 //! served) — a caller blocked on a reply is never left hanging, and
 //! queued pushes fail loudly instead of silently dropping their ticks.
 //!
+//! **Crash isolation**: the serve loop runs under `catch_unwind`, so a
+//! panicking backend (or an injected `FaultSite::ShardStep` fault)
+//! kills only this shard, not the process. The worker reports the
+//! failure over a [`ShardFailure`] channel to the cluster's supervisor,
+//! which marks the shard dead, re-homes its checkpointed streams onto
+//! survivors, and respawns the worker. While a shard is down, its
+//! callers see the retryable [`EngineError::ShardFailed`] — never a
+//! poisoned [`EngineError::ShuttingDown`].
+//!
 //! [`EngineError::ShuttingDown`]: crate::coordinator::session::EngineError::ShuttingDown
+//! [`EngineError::ShardFailed`]: crate::coordinator::session::EngineError::ShardFailed
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
@@ -51,6 +61,7 @@ use crate::coordinator::router::{Admission, Router};
 use crate::coordinator::session::EngineError;
 use crate::coordinator::slot_stepper::{SlotStepper, StreamState};
 use crate::coordinator::slots::StreamId;
+use crate::fault::{FaultInjector, FaultSite};
 use crate::manifest::Manifest;
 use crate::nn::params::ModelParams;
 use crate::obs::journal::EventKind;
@@ -135,13 +146,22 @@ pub(crate) enum ShardRequest {
 }
 
 /// Cloneable, `Send` handle to one shard's worker thread. Every
-/// channel failure (worker gone, reply dropped) surfaces as
-/// [`EngineError::ShuttingDown`] — a dead or panicked shard never
-/// panics its clients.
+/// channel failure (worker gone, reply dropped) surfaces as the
+/// retryable [`EngineError::ShardFailed`] — a dead or panicked shard
+/// never panics its clients, and the front door translates the error
+/// to [`EngineError::ShuttingDown`] when the whole engine is actually
+/// going down (so supervision never masquerades as shutdown or vice
+/// versa).
 #[derive(Clone)]
 pub(crate) struct ShardHandle {
     shard: usize,
     tx: SyncSender<ShardRequest>,
+}
+
+/// A dead shard's channel error: the supervisor will re-home and
+/// respawn, so the caller should retry.
+fn shard_gone() -> EngineError {
+    EngineError::ShardFailed { retryable: true }
 }
 
 impl ShardHandle {
@@ -149,10 +169,8 @@ impl ShardHandle {
     /// and the idle stream evicted to make room, if any.
     pub(crate) fn open(&self, id: StreamId) -> Result<Admitted, EngineError> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(ShardRequest::Open { id, reply })
-            .map_err(|_| EngineError::ShuttingDown)?;
-        rx.recv().map_err(|_| EngineError::ShuttingDown)?
+        self.tx.send(ShardRequest::Open { id, reply }).map_err(|_| shard_gone())?;
+        rx.recv().map_err(|_| shard_gone())?
     }
 
     /// Submit the next token(s) for a stream bound to this shard.
@@ -163,9 +181,9 @@ impl ShardHandle {
                 ShardRequest::Push { tokens, .. } => Some(tokens),
                 _ => None,
             };
-            return Err((EngineError::ShuttingDown, tokens));
+            return Err((shard_gone(), tokens));
         }
-        rx.recv().map_err(|_| (EngineError::ShuttingDown, None))?
+        rx.recv().map_err(|_| (shard_gone(), None))?
     }
 
     pub(crate) fn close(&self, id: StreamId) {
@@ -183,8 +201,8 @@ impl ShardHandle {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(ShardRequest::Export { id, for_migration, reply })
-            .map_err(|_| EngineError::ShuttingDown)?;
-        rx.recv().map_err(|_| EngineError::ShuttingDown)?
+            .map_err(|_| shard_gone())?;
+        rx.recv().map_err(|_| shard_gone())?
     }
 
     /// Land an exported stream on this shard ([`ImportReason`] says
@@ -206,25 +224,34 @@ impl ShardHandle {
                 ShardRequest::Import { payload, .. } => Some(payload),
                 _ => None,
             };
-            return Err((EngineError::ShuttingDown, payload, None));
+            return Err((shard_gone(), payload, None));
         }
         match rx.recv() {
             Ok(res) => res,
-            Err(_) => Err((EngineError::ShuttingDown, None, None)),
+            Err(_) => Err((shard_gone(), None, None)),
         }
     }
 
     pub(crate) fn metrics(&self) -> Result<EngineMetrics, EngineError> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(ShardRequest::Metrics { reply })
-            .map_err(|_| EngineError::ShuttingDown)?;
-        rx.recv().map_err(|_| EngineError::ShuttingDown)
+        self.tx.send(ShardRequest::Metrics { reply }).map_err(|_| shard_gone())?;
+        rx.recv().map_err(|_| shard_gone())
     }
 
     pub(crate) fn signal_shutdown(&self) {
         let _ = self.tx.send(ShardRequest::Shutdown);
     }
+}
+
+/// What the worker thread reports to the supervisor when it dies
+/// abnormally (panic or a backend tick error). A clean shutdown sends
+/// nothing.
+pub(crate) struct ShardFailure {
+    /// Which shard died.
+    pub(crate) shard: usize,
+    /// The terminal error (a caught panic surfaces as the retryable
+    /// [`EngineError::ShardFailed`]).
+    pub(crate) reason: EngineError,
 }
 
 pub(crate) struct ShardThread {
@@ -238,17 +265,29 @@ impl ShardThread {
     /// Start one shard worker WITHOUT waiting for its backend: the
     /// cluster starts every shard first and then waits on all of them,
     /// so N shards load their models in parallel instead of serially.
+    /// `fail_tx` is the supervisor's failure feed: the worker announces
+    /// its own abnormal death there (nothing on clean shutdown).
     pub(crate) fn start(
         shard: usize,
         cfg: EngineConfig,
         obs: ObsHandle,
         pool: Option<HibernatePool>,
+        fail_tx: Sender<ShardFailure>,
+        inj: FaultInjector,
     ) -> Result<Self, EngineError> {
         let (tx, rx) = mpsc::sync_channel::<ShardRequest>(cfg.request_queue);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), EngineError>>();
         let join = std::thread::Builder::new()
             .name(format!("deepcot-shard-{shard}"))
-            .spawn(move || shard_main(shard, cfg, obs, pool, rx, ready_tx))
+            .spawn(move || {
+                let res = shard_main(shard, cfg, obs, pool, rx, ready_tx, inj);
+                if let Err(e) = &res {
+                    // receiver gone = no supervisor (startup failure or
+                    // engine teardown); nothing to notify
+                    let _ = fail_tx.send(ShardFailure { shard, reason: e.clone() });
+                }
+                res
+            })
             .map_err(EngineError::internal)?;
         Ok(Self {
             handle: ShardHandle { shard, tx },
@@ -391,10 +430,17 @@ fn make_room(
             }
             Some(vid)
         }
-        Err(_) => {
+        Err(e) => {
             // store write failed: the stream never left — requeue its
-            // tokens and let admission take the legacy path
+            // tokens and let admission take the legacy path. Degraded,
+            // not fatal: journal + warn so operators see the store
+            // misbehaving long before durability is actually needed
             batcher.restore(vid, queued);
+            obs.event(EventKind::StoreDegraded, vid.0, shard as i64, 0);
+            eprintln!(
+                "deepcot: degraded store: spill of stream {} failed: {e} — stream stays in its lane",
+                vid.0
+            );
             None
         }
     }
@@ -482,8 +528,9 @@ fn shard_main(
     pool: Option<HibernatePool>,
     rx: Receiver<ShardRequest>,
     ready: Sender<Result<(), EngineError>>,
+    inj: FaultInjector,
 ) -> Result<(), EngineError> {
-    let (_rt, mut stepper) = match init_stepper(&cfg) {
+    let (_rt, stepper) = match init_stepper(&cfg) {
         Ok(v) => {
             let _ = ready.send(Ok(()));
             v
@@ -508,6 +555,35 @@ fn shard_main(
         shard as i64,
         EventKind::dispatch_aux(stepper.kernel_dispatch()),
     );
+    // Crash isolation: a panic anywhere in the serve loop (backend bug,
+    // injected fault) must kill only this shard. The mutable serving
+    // state is confined to the closure, so nothing observable outlives
+    // the unwind — AssertUnwindSafe is sound here.
+    let mut stepper = stepper;
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_loop(shard, &cfg, &obs, &pool, &rx, &mut stepper, &inj)
+    }));
+    match caught {
+        Ok(res) => res,
+        Err(_) => Err(EngineError::ShardFailed { retryable: true }),
+    }
+}
+
+/// The shard worker's request/tick loop — everything after backend
+/// init. Runs under `catch_unwind` in [`shard_main`]; returning `Err`
+/// (backend tick failure) and panicking are both reported to the
+/// supervisor as a [`ShardFailure`].
+fn serve_loop(
+    shard: usize,
+    cfg: &EngineConfig,
+    obs: &ObsHandle,
+    pool: &Option<HibernatePool>,
+    rx: &Receiver<ShardRequest>,
+    stepper: &mut SlotStepper,
+    // the engine-wide injector, shared across worker incarnations so a
+    // one-shot `@N` schedule stays one-shot through a respawn
+    inj: &FaultInjector,
+) -> Result<(), EngineError> {
     let spans_on = obs.spans_on();
     let lane_elems = {
         let c = stepper.config();
@@ -537,9 +613,9 @@ fn shard_main(
                         let spilled = make_room(
                             now,
                             shard,
-                            &obs,
-                            &pool,
-                            &mut stepper,
+                            obs,
+                            pool,
+                            stepper,
                             &mut router,
                             &mut batcher,
                             &mut ports,
@@ -655,9 +731,9 @@ fn shard_main(
                             reason,
                             now,
                             shard,
-                            &obs,
-                            &pool,
-                            &mut stepper,
+                            obs,
+                            pool,
+                            stepper,
                             &mut router,
                             &mut batcher,
                             &mut ports,
@@ -684,7 +760,7 @@ fn shard_main(
                     ShardRequest::Metrics { reply } => {
                         let _ = reply.send(metrics.clone());
                     }
-                    ShardRequest::Shutdown => return drain(shard, &rx, &metrics),
+                    ShardRequest::Shutdown => return drain(shard, rx, &metrics),
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -706,6 +782,12 @@ fn shard_main(
                 }
             }
             let t0 = Instant::now();
+            // deterministic chaos: the injector counts only this
+            // shard's ticks when it is the plan's target, so `@N`
+            // fires on the N-th tick of a known shard, every run
+            if inj.fire_on_shard(FaultSite::ShardStep, shard as u64) {
+                panic!("injected fault: shard-step (shard {shard})");
+            }
             let lanes = stepper.tick_lanes(&plan)?;
             let stepped = Instant::now();
             metrics.tick_latency.record(stepped.duration_since(t0));

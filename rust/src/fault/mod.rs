@@ -1,0 +1,479 @@
+//! Deterministic, seeded fault injection — the chaos half of the
+//! fault-isolation story.
+//!
+//! A [`FaultPlan`] names *where* faults may fire (an injection site per
+//! failure-prone subsystem boundary: shard step, state-store I/O, net
+//! reads/writes, snapshot torn tails) and *when* (a seeded 1-in-N
+//! probability per call, or exactly once at call N). Plans are
+//! plain-text specs so they travel through config, CLI, and the
+//! `DEEPCOT_FAULT` environment variable:
+//!
+//! ```text
+//!   seed=7,shard=0,shard_step=@40      # shard 0 panics on its 40th tick
+//!   seed=9,store_put=25                # ~1 in 25 store puts fail
+//!   seed=3,net_read=200,torn_tail=@1   # flaky reads + one torn tail
+//! ```
+//!
+//! Determinism contract: whether call number `k` at a site fires
+//! depends only on `(seed, site, k)` — never on wall time, thread
+//! scheduling, or an OS RNG — so a failing chaos run replays exactly
+//! from its seed. Shard-step faults additionally apply to one target
+//! shard (`shard=K`, default 0) and are counted on that shard's calls
+//! alone, so "panic on the 40th tick" means the 40th tick *of that
+//! shard* regardless of how the other shards interleave.
+//!
+//! Cost contract: a disabled [`FaultInjector`] is one `Option` branch
+//! per site visit — no atomics, no hashing, no allocation — so the
+//! zero-alloc and bitwise pins on the serving hot path hold unchanged
+//! when injection is off (the default everywhere).
+
+use std::fmt;
+use std::path::PathBuf;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::store::{StateStore, StoreError};
+
+/// Where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Panic the shard worker just before a backend step (targets the
+    /// plan's `shard=K`; counted on that shard's steps alone).
+    ShardStep = 0,
+    /// Fail a [`StateStore::put`] with a typed I/O error.
+    StorePut = 1,
+    /// Fail a [`StateStore::get`] with a typed I/O error.
+    StoreGet = 2,
+    /// Fail a [`StateStore::sync`] with a typed I/O error.
+    StoreSync = 3,
+    /// Tear down a server-side connection read (half-open client).
+    NetRead = 4,
+    /// Abandon a server-side frame write halfway (partial write).
+    NetWrite = 5,
+    /// Append a torn (truncated, CRC-less) entry to the state log, as
+    /// a crash mid-append would leave behind.
+    TornTail = 6,
+}
+
+impl FaultSite {
+    /// Number of injection sites.
+    pub const COUNT: usize = 7;
+
+    /// Every site, in discriminant order.
+    pub const ALL: [FaultSite; FaultSite::COUNT] = [
+        FaultSite::ShardStep,
+        FaultSite::StorePut,
+        FaultSite::StoreGet,
+        FaultSite::StoreSync,
+        FaultSite::NetRead,
+        FaultSite::NetWrite,
+        FaultSite::TornTail,
+    ];
+
+    /// The spec key naming this site in a [`FaultPlan`] string.
+    pub fn key(&self) -> &'static str {
+        match self {
+            FaultSite::ShardStep => "shard_step",
+            FaultSite::StorePut => "store_put",
+            FaultSite::StoreGet => "store_get",
+            FaultSite::StoreSync => "store_sync",
+            FaultSite::NetRead => "net_read",
+            FaultSite::NetWrite => "net_write",
+            FaultSite::TornTail => "torn_tail",
+        }
+    }
+
+    fn from_key(key: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|s| s.key() == key)
+    }
+}
+
+/// When a site fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Trigger {
+    /// Fire with seeded probability 1-in-N per call.
+    Rate(u64),
+    /// Fire exactly once, on the N-th call (1-based).
+    At(u64),
+}
+
+/// A parsed fault schedule: which sites fire, and when. The default
+/// plan is fully disabled; see the module docs for the spec grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for the per-call fire decision at `Rate` sites.
+    pub seed: u64,
+    /// Shard index that shard-step faults target (other shards never
+    /// count or fire them).
+    pub target_shard: u64,
+    triggers: [Option<Trigger>; FaultSite::COUNT],
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { seed: 0, target_shard: 0, triggers: [None; FaultSite::COUNT] }
+    }
+}
+
+impl FaultPlan {
+    /// Environment variable consulted by [`FaultPlan::default_from_env`].
+    pub const ENV: &'static str = "DEEPCOT_FAULT";
+
+    /// A plan with no armed sites (injection fully off).
+    pub fn disabled() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Whether any site is armed.
+    pub fn is_enabled(&self) -> bool {
+        self.triggers.iter().any(|t| t.is_some())
+    }
+
+    /// Whether the shard-step site is armed (a supervisor smoke can
+    /// expect a panic only when one is scheduled).
+    pub fn arms_shard_step(&self) -> bool {
+        self.triggers[FaultSite::ShardStep as usize].is_some()
+    }
+
+    /// The plan `DEEPCOT_FAULT` requests, or the disabled default when
+    /// the variable is unset. An unparsable value warns on stderr and
+    /// keeps the default rather than silently arming anything.
+    pub fn default_from_env() -> FaultPlan {
+        match std::env::var(Self::ENV) {
+            Err(_) => FaultPlan::default(),
+            Ok(raw) => match raw.parse() {
+                Ok(plan) => plan,
+                Err(e) => {
+                    eprintln!("warning: ignoring {}={raw:?}: {e}", Self::ENV);
+                    FaultPlan::default()
+                }
+            },
+        }
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FaultPlan, String> {
+        let s = s.trim();
+        let mut plan = FaultPlan::default();
+        if s.is_empty() || s == "off" {
+            return Ok(plan);
+        }
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec entry {part:?} is not key=value"))?;
+            let parse_u64 = |v: &str, what: &str| {
+                v.parse::<u64>().map_err(|_| format!("{what} {v:?} is not an integer"))
+            };
+            match key.trim() {
+                "seed" => plan.seed = parse_u64(value, "seed")?,
+                "shard" => plan.target_shard = parse_u64(value, "shard")?,
+                key => {
+                    let site = FaultSite::from_key(key)
+                        .ok_or_else(|| format!("unknown fault site {key:?}"))?;
+                    let trig = if let Some(at) = value.strip_prefix('@') {
+                        Trigger::At(parse_u64(at, "call index")?)
+                    } else {
+                        Trigger::Rate(parse_u64(value, "rate")?)
+                    };
+                    let n = match trig {
+                        Trigger::Rate(n) | Trigger::At(n) => n,
+                    };
+                    if n == 0 {
+                        return Err(format!("fault site {key} wants a value >= 1"));
+                    }
+                    plan.triggers[site as usize] = Some(trig);
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if !self.is_enabled() {
+            return write!(f, "off");
+        }
+        write!(f, "seed={},shard={}", self.seed, self.target_shard)?;
+        for site in FaultSite::ALL {
+            match self.triggers[site as usize] {
+                None => {}
+                Some(Trigger::Rate(n)) => write!(f, ",{}={n}", site.key())?,
+                Some(Trigger::At(n)) => write!(f, ",{}=@{n}", site.key())?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// SplitMix64 finalizer: the stateless hash behind `Rate` decisions.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[derive(Debug)]
+struct InjectorState {
+    seed: u64,
+    target_shard: u64,
+    triggers: [Option<Trigger>; FaultSite::COUNT],
+    calls: [AtomicU64; FaultSite::COUNT],
+    fired: [AtomicU64; FaultSite::COUNT],
+}
+
+/// The runtime form of a [`FaultPlan`]: cheap to clone, shared across
+/// every subsystem of one engine, with per-site call and fire counters.
+/// Disabled (the default) it is a single `Option` branch per visit.
+#[derive(Debug, Clone, Default)]
+pub struct FaultInjector {
+    state: Option<Arc<InjectorState>>,
+}
+
+impl FaultInjector {
+    /// An injector that never fires (zero per-visit cost beyond one
+    /// branch).
+    pub fn disabled() -> FaultInjector {
+        FaultInjector { state: None }
+    }
+
+    /// Build the injector a plan describes (disabled when the plan
+    /// arms nothing).
+    pub fn from_plan(plan: &FaultPlan) -> FaultInjector {
+        if !plan.is_enabled() {
+            return FaultInjector::disabled();
+        }
+        FaultInjector {
+            state: Some(Arc::new(InjectorState {
+                seed: plan.seed,
+                target_shard: plan.target_shard,
+                triggers: plan.triggers,
+                calls: std::array::from_fn(|_| AtomicU64::new(0)),
+                fired: std::array::from_fn(|_| AtomicU64::new(0)),
+            })),
+        }
+    }
+
+    /// Whether any site is armed.
+    pub fn enabled(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Visit a site: count the call and decide — deterministically from
+    /// `(seed, site, call index)` — whether the fault fires here.
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let Some(st) = &self.state else { return false };
+        let Some(trig) = st.triggers[site as usize] else { return false };
+        let call = st.calls[site as usize].fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = match trig {
+            Trigger::At(n) => call == n,
+            Trigger::Rate(n) => mix(st.seed ^ ((site as u64) << 32) ^ call) % n == 0,
+        };
+        if hit {
+            st.fired[site as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// [`FaultInjector::fire`] gated to the plan's target shard: other
+    /// shards neither count nor fire (this is what keeps "the 40th
+    /// step" deterministic on a multi-shard cluster).
+    pub fn fire_on_shard(&self, site: FaultSite, shard: u64) -> bool {
+        let Some(st) = &self.state else { return false };
+        if shard != st.target_shard {
+            return false;
+        }
+        self.fire(site)
+    }
+
+    /// Times `site` has been visited.
+    pub fn calls(&self, site: FaultSite) -> u64 {
+        self.state.as_ref().map_or(0, |st| st.calls[site as usize].load(Ordering::Relaxed))
+    }
+
+    /// Times `site` has fired.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.state.as_ref().map_or(0, |st| st.fired[site as usize].load(Ordering::Relaxed))
+    }
+}
+
+/// A [`StateStore`] decorator that injects typed I/O failures and torn
+/// log tails per the engine's fault plan. With injection disabled it is
+/// never constructed — the engine wraps its store only when a store
+/// site is armed, so healthy configurations pay nothing.
+pub struct FaultStore {
+    inner: Box<dyn StateStore>,
+    inj: FaultInjector,
+    /// The on-disk log to tear when [`FaultSite::TornTail`] fires
+    /// (`None` for volatile stores, where a torn tail is meaningless).
+    torn_path: Option<PathBuf>,
+}
+
+impl FaultStore {
+    /// Wrap `inner`, injecting per `inj`; `torn_path` is the log file
+    /// torn-tail faults append garbage to.
+    pub fn new(
+        inner: Box<dyn StateStore>,
+        inj: FaultInjector,
+        torn_path: Option<PathBuf>,
+    ) -> FaultStore {
+        FaultStore { inner, inj, torn_path }
+    }
+
+    fn tear_tail(&self) {
+        let Some(path) = &self.torn_path else { return };
+        // a truncated entry: a plausible length prefix with only a few
+        // of its promised bytes behind it — exactly what a crash
+        // mid-append leaves; the next open must truncate it away
+        if let Ok(mut f) = std::fs::OpenOptions::new().append(true).open(path) {
+            use std::io::Write;
+            let _ = f.write_all(&[0x40, 0, 0, 0, 1, 0xDE, 0xAD, 0xBE, 0xEF, 0x00, 0x01]);
+        }
+    }
+}
+
+impl StateStore for FaultStore {
+    fn put(&mut self, stream: u64, blob: &[u8]) -> Result<(), StoreError> {
+        if self.inj.fire(FaultSite::StorePut) {
+            return Err(StoreError::Io(format!("injected fault: store put (stream {stream})")));
+        }
+        self.inner.put(stream, blob)
+    }
+
+    fn get(&mut self, stream: u64) -> Result<Option<Vec<u8>>, StoreError> {
+        if self.inj.fire(FaultSite::StoreGet) {
+            return Err(StoreError::Io(format!("injected fault: store get (stream {stream})")));
+        }
+        self.inner.get(stream)
+    }
+
+    fn delete(&mut self, stream: u64) -> Result<bool, StoreError> {
+        self.inner.delete(stream)
+    }
+
+    fn list(&mut self) -> Result<Vec<u64>, StoreError> {
+        self.inner.list()
+    }
+
+    fn sync(&mut self) -> Result<(), StoreError> {
+        if self.inj.fire(FaultSite::StoreSync) {
+            return Err(StoreError::Io("injected fault: store sync".into()));
+        }
+        if self.inj.fire(FaultSite::TornTail) {
+            self.tear_tail();
+        }
+        self.inner.sync()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemStore;
+
+    #[test]
+    fn default_plan_is_disabled_and_free() {
+        let plan = FaultPlan::default();
+        assert!(!plan.is_enabled());
+        assert_eq!(plan.to_string(), "off");
+        let inj = FaultInjector::from_plan(&plan);
+        assert!(!inj.enabled());
+        for site in FaultSite::ALL {
+            assert!(!inj.fire(site));
+            assert_eq!(inj.calls(site), 0, "disabled injector must not even count");
+        }
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        let plan: FaultPlan = "seed=7,shard=1,shard_step=@40,store_put=25".parse().unwrap();
+        assert!(plan.is_enabled());
+        assert!(plan.arms_shard_step());
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.target_shard, 1);
+        let rendered = plan.to_string();
+        let back: FaultPlan = rendered.parse().unwrap();
+        assert_eq!(back, plan);
+        assert_eq!("off".parse::<FaultPlan>().unwrap(), FaultPlan::disabled());
+        assert_eq!("".parse::<FaultPlan>().unwrap(), FaultPlan::disabled());
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        for bad in ["nonsense", "seed", "bogus_site=3", "store_put=0", "store_put=@0", "seed=x"] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "spec {bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn at_trigger_fires_exactly_once() {
+        let plan: FaultPlan = "seed=1,store_put=@3".parse().unwrap();
+        let inj = FaultInjector::from_plan(&plan);
+        let fires: Vec<bool> = (0..10).map(|_| inj.fire(FaultSite::StorePut)).collect();
+        assert_eq!(fires.iter().filter(|f| **f).count(), 1);
+        assert!(fires[2], "must fire on the 3rd call");
+        assert_eq!(inj.fired(FaultSite::StorePut), 1);
+        assert_eq!(inj.calls(FaultSite::StorePut), 10);
+    }
+
+    #[test]
+    fn rate_trigger_is_seed_deterministic() {
+        let plan: FaultPlan = "seed=42,store_get=10".parse().unwrap();
+        let a = FaultInjector::from_plan(&plan);
+        let b = FaultInjector::from_plan(&plan);
+        let fa: Vec<bool> = (0..10_000).map(|_| a.fire(FaultSite::StoreGet)).collect();
+        let fb: Vec<bool> = (0..10_000).map(|_| b.fire(FaultSite::StoreGet)).collect();
+        assert_eq!(fa, fb, "same seed, same schedule");
+        let hits = fa.iter().filter(|f| **f).count();
+        // 1-in-10 over 10k calls: loose 2x band, deterministic anyway
+        assert!((500..2000).contains(&hits), "rate wildly off: {hits}");
+        // a different seed gives a different schedule
+        let other = FaultInjector::from_plan(&"seed=43,store_get=10".parse().unwrap());
+        let fo: Vec<bool> = (0..10_000).map(|_| other.fire(FaultSite::StoreGet)).collect();
+        assert_ne!(fa, fo);
+    }
+
+    #[test]
+    fn shard_gate_neither_counts_nor_fires_elsewhere() {
+        let plan: FaultPlan = "seed=5,shard=2,shard_step=@1".parse().unwrap();
+        let inj = FaultInjector::from_plan(&plan);
+        assert!(!inj.fire_on_shard(FaultSite::ShardStep, 0));
+        assert!(!inj.fire_on_shard(FaultSite::ShardStep, 1));
+        assert_eq!(inj.calls(FaultSite::ShardStep), 0);
+        assert!(inj.fire_on_shard(FaultSite::ShardStep, 2));
+        assert_eq!(inj.fired(FaultSite::ShardStep), 1);
+    }
+
+    #[test]
+    fn fault_store_injects_typed_io_errors() {
+        let plan: FaultPlan = "seed=1,store_put=@2,store_get=@1,store_sync=@1".parse().unwrap();
+        let mut s =
+            FaultStore::new(Box::new(MemStore::new()), FaultInjector::from_plan(&plan), None);
+        s.put(1, b"one").unwrap();
+        match s.put(2, b"two") {
+            Err(StoreError::Io(m)) => assert!(m.contains("injected"), "{m}"),
+            other => panic!("expected injected Io error, got {other:?}"),
+        }
+        match s.get(1) {
+            Err(StoreError::Io(_)) => {}
+            other => panic!("expected injected Io error, got {other:?}"),
+        }
+        assert!(s.sync().is_err());
+        // after the scheduled faults, the store serves normally
+        assert_eq!(s.get(1).unwrap().as_deref(), Some(&b"one"[..]));
+        s.sync().unwrap();
+        assert_eq!(s.list().unwrap(), vec![1]);
+        assert!(s.delete(1).unwrap());
+    }
+}

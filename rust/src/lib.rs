@@ -27,6 +27,10 @@
 //!   trait (in-memory and log-structured single-file disk impls) that
 //!   stream hibernation and `deepcot_serve --state-dir` crash recovery
 //!   run on.
+//! - [`fault`] — deterministic, seeded fault injection (shard panics,
+//!   store I/O errors, net failures, torn log tails) behind
+//!   `EngineConfig::fault` / `DEEPCOT_FAULT`; the chaos harness the
+//!   shard supervisor and degraded store mode are tested under.
 //! - [`baselines`] — the paper's comparison systems behind one
 //!   [`baselines::StreamModel`] trait (regular encoder, Continual
 //!   Transformer, Nyströmformer, FNet, DeepCoT, DeepCoT-XL, MAT-SED
@@ -52,6 +56,8 @@ pub mod util;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
+#[deny(missing_docs)]
+pub mod fault;
 pub mod flops;
 pub mod manifest;
 #[deny(missing_docs)]

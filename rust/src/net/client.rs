@@ -80,6 +80,58 @@ impl From<ProtoError> for ClientError {
     }
 }
 
+/// Backoff policy for re-dialing a serving front door that dropped the
+/// connection (server restart, reaped socket, injected transport
+/// fault): exponential delay growth from `base_delay`, capped at
+/// `max_delay`, with deterministic ±25% jitter derived from `seed` so
+/// a fleet of clients knocked over together doesn't re-dial in
+/// lockstep. Exhausting `max_attempts` surfaces as the typed
+/// [`EngineError::Timeout`] — the same retryable error a slow read
+/// yields — so callers keep one recovery branch.
+#[derive(Debug, Clone)]
+pub struct ReconnectPolicy {
+    /// Dial attempts before giving up (clamped to at least 1).
+    pub max_attempts: u32,
+    /// Delay before the second attempt; doubles per attempt after.
+    pub base_delay: Duration,
+    /// Upper bound on any single backoff delay.
+    pub max_delay: Duration,
+    /// Jitter seed; two clients with different seeds spread their
+    /// retries, equal seeds retry identically (deterministic tests).
+    pub seed: u64,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 5,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(2),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// SplitMix64: the jitter stream (deterministic, seed-keyed).
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl ReconnectPolicy {
+    /// The delay taken after failed attempt `attempt` (0-based):
+    /// `base_delay << attempt`, capped, then jittered to 75–125%.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let exp = self.base_delay.saturating_mul(1u32 << attempt.min(20));
+        let capped = exp.min(self.max_delay);
+        let z = splitmix64(self.seed.wrapping_add(u64::from(attempt)));
+        let frac = (z >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+        capped.mul_f64(0.75 + 0.5 * frac).min(self.max_delay)
+    }
+}
+
 /// One tick result received over the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireTick {
@@ -108,6 +160,9 @@ pub struct NetClient {
     rbuf: Vec<u8>,
     wbuf: Vec<u8>,
     inbox: VecDeque<(u64, Parked)>,
+    /// Failed dials retried by `connect_with_retry`/`reconnect_resume`
+    /// over this client's lifetime (survives the socket swap).
+    reconnect_attempts: u64,
 }
 
 impl NetClient {
@@ -120,7 +175,61 @@ impl NetClient {
             rbuf: Vec::with_capacity(4096),
             wbuf: Vec::with_capacity(4096),
             inbox: VecDeque::new(),
+            reconnect_attempts: 0,
         })
+    }
+
+    /// Connect with the policy's exponential backoff: each failed dial
+    /// sleeps the (jittered) delay and tries again. Exhaustion is the
+    /// typed retryable [`EngineError::Timeout`], never a hang.
+    pub fn connect_with_retry<A: ToSocketAddrs>(
+        addr: A,
+        policy: &ReconnectPolicy,
+    ) -> Result<NetClient, ClientError> {
+        let mut retried = 0u64;
+        for attempt in 0..policy.max_attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(policy.delay(attempt - 1));
+                retried += 1;
+            }
+            if let Ok(mut c) = NetClient::connect(&addr) {
+                c.reconnect_attempts = retried;
+                return Ok(c);
+            }
+        }
+        Err(ClientError::Engine(EngineError::Timeout))
+    }
+
+    /// Recover from a dropped connection: re-dial with backoff, then
+    /// reattach every id in `streams` via OPEN-resume — tick ordinals
+    /// continue from each stream's last server-side checkpoint. On
+    /// success the client's socket and buffers are replaced in place
+    /// (parked inbox entries from the dead connection are discarded);
+    /// on failure the client is left unusable for transport but the
+    /// error is typed: [`EngineError::Timeout`] when every dial failed,
+    /// or the per-stream engine error when a resume was refused.
+    pub fn reconnect_resume<A: ToSocketAddrs>(
+        &mut self,
+        addr: A,
+        policy: &ReconnectPolicy,
+        streams: &[u64],
+    ) -> Result<(), ClientError> {
+        let mut fresh = NetClient::connect_with_retry(&addr, policy)?;
+        // fold the dial count into self first so it survives even when
+        // a resume below is refused and `fresh` is dropped
+        self.reconnect_attempts += fresh.reconnect_attempts;
+        fresh.reconnect_attempts = self.reconnect_attempts;
+        for &s in streams {
+            fresh.open_resume(s)?;
+        }
+        *self = fresh;
+        Ok(())
+    }
+
+    /// Failed dials this client retried across every
+    /// `connect_with_retry`/`reconnect_resume` call.
+    pub fn reconnect_attempts(&self) -> u64 {
+        self.reconnect_attempts
     }
 
     /// Bound every blocking read (None = wait forever). A read that
@@ -147,7 +256,8 @@ impl NetClient {
     fn park(&mut self, f: Frame) -> Result<(), ClientError> {
         match f {
             Frame::Tick { stream, tick, logits, out } => {
-                self.inbox.push_back((stream, Parked::Tick(WireTick { stream, tick, logits, out })));
+                let t = WireTick { stream, tick, logits, out };
+                self.inbox.push_back((stream, Parked::Tick(t)));
                 Ok(())
             }
             Frame::Error(w) if w.stream != 0 => {
@@ -290,5 +400,54 @@ impl NetClient {
 impl fmt::Debug for NetClient {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "NetClient({:?})", self.sock.peer_addr())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let p = ReconnectPolicy {
+            max_attempts: 8,
+            base_delay: Duration::from_millis(40),
+            max_delay: Duration::from_millis(500),
+            seed: 11,
+        };
+        for a in 0..8u32 {
+            let d = p.delay(a);
+            // ±25% jitter around base << a, hard-capped
+            let nominal = p.base_delay.saturating_mul(1 << a).min(p.max_delay);
+            assert!(d >= nominal.mul_f64(0.75), "attempt {a}: {d:?} under jitter floor");
+            assert!(d <= p.max_delay, "attempt {a}: {d:?} over the cap");
+        }
+        // deep attempts saturate at the cap's jitter band, no overflow
+        assert!(p.delay(40) <= p.max_delay);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let a = ReconnectPolicy { seed: 7, ..Default::default() };
+        let b = ReconnectPolicy { seed: 7, ..Default::default() };
+        let c = ReconnectPolicy { seed: 8, ..Default::default() };
+        assert_eq!(a.delay(3), b.delay(3), "equal seeds must retry identically");
+        assert_ne!(a.delay(3), c.delay(3), "different seeds must spread retries");
+    }
+
+    #[test]
+    fn exhausted_retry_is_typed_timeout() {
+        // a port nothing listens on: every dial fails fast, and the
+        // exhaustion error is the typed retryable Timeout
+        let p = ReconnectPolicy {
+            max_attempts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+            seed: 1,
+        };
+        match NetClient::connect_with_retry("127.0.0.1:9", &p) {
+            Err(ClientError::Engine(EngineError::Timeout)) => {}
+            other => panic!("expected typed Timeout, got {other:?}"),
+        }
     }
 }

@@ -128,6 +128,9 @@ pub enum ErrCode {
     /// unknown" from "stream hibernated with no live owner: send OPEN
     /// with a resume id to reattach".
     Hibernated,
+    /// [`EngineError::ShardFailed`] — aux carries the retryable flag
+    /// (1 = the supervisor is re-homing the shard's streams; retry).
+    ShardFailed,
 }
 
 impl ErrCode {
@@ -142,6 +145,7 @@ impl ErrCode {
             ErrCode::Unsupported => 7,
             ErrCode::Internal => 8,
             ErrCode::Hibernated => 9,
+            ErrCode::ShardFailed => 10,
         }
     }
 
@@ -156,6 +160,7 @@ impl ErrCode {
             7 => ErrCode::Unsupported,
             8 => ErrCode::Internal,
             9 => ErrCode::Hibernated,
+            10 => ErrCode::ShardFailed,
             other => return Err(ProtoError::BadErrorCode(other)),
         })
     }
@@ -211,6 +216,12 @@ impl WireError {
             EngineError::Hibernated(id) => {
                 Self { stream: id.0, code: ErrCode::Hibernated, aux: 0, detail: String::new() }
             }
+            EngineError::ShardFailed { retryable } => Self {
+                stream,
+                code: ErrCode::ShardFailed,
+                aux: u32::from(*retryable),
+                detail: String::new(),
+            },
         }
     }
 
@@ -227,6 +238,7 @@ impl WireError {
             ErrCode::Unsupported => EngineError::Unsupported(self.detail.clone()),
             ErrCode::Internal => EngineError::Internal(self.detail.clone()),
             ErrCode::Hibernated => EngineError::Hibernated(StreamId(self.stream)),
+            ErrCode::ShardFailed => EngineError::ShardFailed { retryable: self.aux != 0 },
         }
     }
 }
@@ -712,6 +724,8 @@ mod tests {
             E::Unsupported("snapshot export on PJRT".into()),
             E::Internal("boom".into()),
             E::Hibernated(StreamId(6)),
+            E::ShardFailed { retryable: true },
+            E::ShardFailed { retryable: false },
         ];
         for e in cases {
             let w = WireError::from_engine(5, &e);

@@ -55,6 +55,7 @@ use std::time::{Duration, Instant, SystemTime};
 use crate::coordinator::cluster::EngineHandle;
 use crate::coordinator::session::{EngineError, Session, TickReceiver};
 use crate::coordinator::shard::TickResult;
+use crate::fault::{FaultInjector, FaultSite};
 use crate::net::proto::{self, Frame, RawFrame, WireError};
 use crate::obs::expo;
 use crate::obs::journal::EventKind;
@@ -71,6 +72,7 @@ struct Counters {
     protocol_errors: AtomicU64,
     streams_opened: AtomicU64,
     shutdown_requests: AtomicU64,
+    idle_conns_reaped: AtomicU64,
     boot: Instant,
     boot_unix_ms: u64,
     level: ObsLevel,
@@ -94,6 +96,10 @@ pub struct NetMetrics {
     pub streams_opened: u64,
     /// SHUTDOWN frames honored.
     pub shutdown_requests: u64,
+    /// Idle connections with no open streams reaped by the read-timeout
+    /// sweep (slow-loris defense; a connection holding streams is never
+    /// reaped).
+    pub idle_conns_reaped: u64,
     /// Time since the net front door started.
     pub uptime: Duration,
     /// Wall-clock start of the net front door, ms since the Unix epoch.
@@ -107,7 +113,8 @@ impl NetMetrics {
     /// One-line operator summary.
     pub fn report(&self) -> String {
         format!(
-            "net: conns={}/{} frames={}in/{}out proto_errors={} streams={} shutdown_reqs={}",
+            "net: conns={}/{} frames={}in/{}out proto_errors={} streams={} shutdown_reqs={} \
+             idle_reaped={}",
             self.connections_active,
             self.connections_accepted,
             self.frames_in,
@@ -115,6 +122,7 @@ impl NetMetrics {
             self.protocol_errors,
             self.streams_opened,
             self.shutdown_requests,
+            self.idle_conns_reaped,
         )
     }
 }
@@ -133,6 +141,7 @@ impl Counters {
             protocol_errors: AtomicU64::new(0),
             streams_opened: AtomicU64::new(0),
             shutdown_requests: AtomicU64::new(0),
+            idle_conns_reaped: AtomicU64::new(0),
             boot: Instant::now(),
             boot_unix_ms,
             level,
@@ -157,6 +166,7 @@ impl Counters {
             protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
             streams_opened: self.streams_opened.load(Ordering::Relaxed),
             shutdown_requests: self.shutdown_requests.load(Ordering::Relaxed),
+            idle_conns_reaped: self.idle_conns_reaped.load(Ordering::Relaxed),
             uptime: self.boot.elapsed(),
             boot_unix_ms: self.boot_unix_ms,
             spans: self.spans.lock().unwrap_or_else(|p| p.into_inner()).clone(),
@@ -210,10 +220,32 @@ pub struct NetServer {
     shutdown_req_rx: Receiver<()>,
 }
 
+/// How long a connection may sit with zero open streams and zero
+/// inbound bytes before the server reaps it (slow-loris defense).
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
 impl NetServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
     /// accepting connections against the given engine front door.
+    /// Connections idle past [`DEFAULT_IDLE_TIMEOUT`] with no open
+    /// streams are reaped; use [`NetServer::start_with_idle_timeout`]
+    /// to tune that window.
     pub fn start<A: ToSocketAddrs>(addr: A, engine: EngineHandle) -> io::Result<NetServer> {
+        Self::start_with_idle_timeout(addr, engine, DEFAULT_IDLE_TIMEOUT)
+    }
+
+    /// [`NetServer::start`] with an explicit idle-connection timeout. A
+    /// connection that has sent no bytes for `idle_timeout` AND holds
+    /// no open streams is closed and counted in
+    /// [`NetMetrics::idle_conns_reaped`] — a half-open or deliberately
+    /// slow client cannot pin a reader thread + fd forever. A
+    /// connection with open streams is never reaped, however quiet
+    /// (streaming clients legitimately sit idle between pushes).
+    pub fn start_with_idle_timeout<A: ToSocketAddrs>(
+        addr: A,
+        engine: EngineHandle,
+        idle_timeout: Duration,
+    ) -> io::Result<NetServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         let shutting_down = Arc::new(AtomicBool::new(false));
@@ -264,6 +296,7 @@ impl NetServer {
                                     shutting_down2,
                                     Arc::clone(&counters2),
                                     shutdown_req,
+                                    idle_timeout,
                                 );
                                 counters2.connections_active.fetch_sub(1, Ordering::Relaxed);
                             },
@@ -372,29 +405,67 @@ fn conn_main(
     shutting_down: Arc<AtomicBool>,
     counters: Arc<Counters>,
     shutdown_req: Sender<()>,
+    idle_timeout: Duration,
 ) {
     let Ok(write_sock) = sock.try_clone() else { return };
+    let inj = engine.fault();
     let (wtx, wrx) = mpsc::channel::<Reply>();
     let writer = {
         let counters = Arc::clone(&counters);
+        let inj = inj.clone();
         std::thread::Builder::new()
             .name("deepcot-net-writer".into())
-            .spawn(move || writer_main(write_sock, wrx, counters))
+            .spawn(move || writer_main(write_sock, wrx, counters, inj))
     };
     let Ok(writer) = writer else { return };
 
     let mut sock = sock;
+    // a bounded read timeout turns the blocking reader into a periodic
+    // idle sweep: read_frame returns the timeout untouched at a frame
+    // boundary (retryable), so each tick we can check idleness and the
+    // shutdown flag without ever tearing a frame
+    let tick = idle_timeout.min(Duration::from_secs(5)).max(Duration::from_millis(10));
+    let _ = sock.set_read_timeout(Some(tick));
+    let mut last_activity = Instant::now();
     let mut streams: BTreeMap<u64, StreamEntry> = BTreeMap::new();
     let mut frame_buf: Vec<u8> = Vec::with_capacity(4096);
     let obs = engine.obs().clone();
     let spans_on = counters.spans_on();
     loop {
         match proto::read_frame(&mut sock, &mut frame_buf) {
-            Ok(true) => {}
-            // clean client EOF, torn frame, severed socket, or an
-            // undecodable length prefix: the connection is over (a bad
-            // prefix cannot be resynchronized)
-            Ok(false) | Err(_) => break,
+            Ok(true) => last_activity = Instant::now(),
+            // clean client EOF: the connection is over
+            Ok(false) => break,
+            // boundary timeout: no frame bytes consumed — an idle tick,
+            // not an error. Reap only truly abandoned connections:
+            // quiet past the deadline AND holding no streams (a
+            // streaming client legitimately idles between pushes).
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if shutting_down.load(Ordering::SeqCst) {
+                    break;
+                }
+                let idle = last_activity.elapsed();
+                if streams.is_empty() && idle >= idle_timeout {
+                    counters.idle_conns_reaped.fetch_add(1, Ordering::Relaxed);
+                    obs.event(EventKind::ConnReaped, 0, -1, idle.as_millis() as u64);
+                    break;
+                }
+                continue;
+            }
+            // torn frame, severed socket, or an undecodable length
+            // prefix: the connection is over (a bad prefix cannot be
+            // resynchronized; a mid-frame timeout arrives here as
+            // UnexpectedEof — the stream is desynchronized)
+            Err(_) => break,
+        }
+        if inj.fire(FaultSite::NetRead) {
+            // injected transport fault: behave exactly like a socket
+            // read error — tear the connection down through the normal
+            // drain path (clients must recover via reconnect + resume)
+            break;
         }
         counters.frames_in.fetch_add(1, Ordering::Relaxed);
         let t_decode = Instant::now();
@@ -466,6 +537,17 @@ fn conn_main(
                         match forwarder {
                             Ok(forwarder) => {
                                 counters.streams_opened.fetch_add(1, Ordering::Relaxed);
+                                if let Some(old) = streams.remove(&stream) {
+                                    // a resume only succeeds when the
+                                    // stream lost its owner (shard crash
+                                    // re-home), so this entry is a
+                                    // zombie — defuse its RAII close or
+                                    // it would tear down the stream we
+                                    // just resumed
+                                    old.closed.store(true, Ordering::SeqCst);
+                                    old.sess.forget();
+                                    let _ = old.forwarder.join();
+                                }
                                 streams.insert(stream, StreamEntry { sess, closed, forwarder });
                                 Frame::Opened { stream }
                             }
@@ -601,7 +683,12 @@ fn spawn_forwarder(
 
 /// Drain the reply queue into the socket through one reusable encode
 /// buffer. Exits when every sender is gone or the socket dies.
-fn writer_main(mut sock: TcpStream, wrx: Receiver<Reply>, counters: Arc<Counters>) {
+fn writer_main(
+    mut sock: TcpStream,
+    wrx: Receiver<Reply>,
+    counters: Arc<Counters>,
+    inj: FaultInjector,
+) {
     let mut buf: Vec<u8> = Vec::with_capacity(4096);
     let spans_on = counters.spans_on();
     while let Ok(reply) = wrx.recv() {
@@ -614,6 +701,15 @@ fn writer_main(mut sock: TcpStream, wrx: Receiver<Reply>, counters: Arc<Counters
         }
         if spans_on {
             counters.record_span(Stage::NetEncode, t_encode.elapsed());
+        }
+        if inj.fire(FaultSite::NetWrite) {
+            // injected partial write: flush half a frame then die, the
+            // worst desync a crashing peer can leave on the wire — the
+            // client's length prefix discipline must reject the tail
+            let half = buf.len() / 2;
+            let _ = sock.write_all(&buf[..half]);
+            while wrx.recv().is_ok() {}
+            break;
         }
         if sock.write_all(&buf).is_err() {
             // socket dead: drain (dropping replies) so senders never

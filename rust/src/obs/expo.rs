@@ -239,6 +239,37 @@ pub fn render_prometheus(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMe
         "Streams currently hibernated in the state store",
         m.hibernated_resident as f64,
     );
+    p.counter(
+        "deepcot_shard_failures_total",
+        "Shard worker deaths observed by the supervisor",
+        m.shard_failures,
+    );
+    p.counter(
+        "deepcot_shards_respawned_total",
+        "Dead shards respawned back into service",
+        m.shards_respawned,
+    );
+    p.gauge("deepcot_shards_dead", "Shards currently dead (failing fast)", m.shards_dead as f64);
+    p.counter(
+        "deepcot_streams_rehomed_total",
+        "Crashed-shard streams re-homed onto their last checkpoint",
+        m.streams_rehomed,
+    );
+    p.counter(
+        "deepcot_streams_lost_total",
+        "Crashed-shard streams lost for lack of a checkpoint",
+        m.streams_lost,
+    );
+    p.counter(
+        "deepcot_store_degraded_total",
+        "Store failures survived in degraded mode",
+        m.store_degraded,
+    );
+    p.counter(
+        "deepcot_store_retries_total",
+        "Retries spent by degraded-store backoff",
+        m.store_retries,
+    );
 
     // per-shard breakdown: every series a scraper can sum back to the
     // aggregate above (pinned in tests/obs.rs)
@@ -329,6 +360,11 @@ pub fn render_prometheus(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMe
             "SHUTDOWN frames honored",
             n.shutdown_requests,
         );
+        p.counter(
+            "deepcot_net_idle_reaped_total",
+            "Idle stream-less connections reaped by the server",
+            n.idle_conns_reaped,
+        );
         if obs.level() >= ObsLevel::Counters {
             p.gauge(
                 "deepcot_net_uptime_seconds",
@@ -386,6 +422,13 @@ pub fn render_json(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMetrics>
         ("streams_recovered", num(m.streams_recovered as f64)),
         ("snapshots_taken", num(m.snapshots_taken as f64)),
         ("hibernated_resident", num(m.hibernated_resident as f64)),
+        ("shard_failures", num(m.shard_failures as f64)),
+        ("shards_respawned", num(m.shards_respawned as f64)),
+        ("shards_dead", num(m.shards_dead as f64)),
+        ("streams_rehomed", num(m.streams_rehomed as f64)),
+        ("streams_lost", num(m.streams_lost as f64)),
+        ("store_degraded", num(m.store_degraded as f64)),
+        ("store_retries", num(m.store_retries as f64)),
         ("tick_latency", histo_json(&m.tick_latency)),
         ("queue_latency", histo_json(&m.queue_latency)),
         ("quiesce_latency", histo_json(&m.quiesce_latency)),
@@ -439,6 +482,7 @@ pub fn render_json(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMetrics>
                 ("protocol_errors", num(n.protocol_errors as f64)),
                 ("streams_opened", num(n.streams_opened as f64)),
                 ("shutdown_requests", num(n.shutdown_requests as f64)),
+                ("idle_conns_reaped", num(n.idle_conns_reaped as f64)),
                 ("uptime_seconds", num(n.uptime.as_secs_f64())),
                 ("boot_unix_ms", num(n.boot_unix_ms as f64)),
             ]),

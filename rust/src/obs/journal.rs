@@ -52,11 +52,30 @@ pub enum EventKind {
     StreamRestore = 11,
     /// A full-cluster snapshot completed (`aux` = streams checkpointed).
     Snapshot = 12,
+    /// A shard worker died (panic or backend failure); its streams are
+    /// being re-homed and the worker respawned (`shard` = which).
+    ShardPanic = 13,
+    /// A dead shard's worker was respawned and is serving again
+    /// (`aux` = respawns of this shard so far).
+    ShardRespawn = 14,
+    /// A dead shard's stream was re-homed onto the state store from its
+    /// last checkpoint (resume it to continue; `aux` = checkpoint tick).
+    StreamRehomed = 15,
+    /// A dead shard's stream had no checkpoint to recover from; its
+    /// state is lost and its owner was told so (typed, never a hang).
+    StreamLost = 16,
+    /// A store write failed past its retry budget; the engine degraded
+    /// (kept serving without that checkpoint) instead of aborting
+    /// (`aux` = retries spent).
+    StoreDegraded = 17,
+    /// An idle, stream-less connection was reaped by the net layer's
+    /// slow-loris defense (`aux` = idle time, ms).
+    ConnReaped = 18,
 }
 
 impl EventKind {
     /// Every kind, in storage order.
-    pub const ALL: [EventKind; 13] = [
+    pub const ALL: [EventKind; 19] = [
         EventKind::StreamOpen,
         EventKind::StreamClose,
         EventKind::StreamEvict,
@@ -70,6 +89,12 @@ impl EventKind {
         EventKind::StreamHibernate,
         EventKind::StreamRestore,
         EventKind::Snapshot,
+        EventKind::ShardPanic,
+        EventKind::ShardRespawn,
+        EventKind::StreamRehomed,
+        EventKind::StreamLost,
+        EventKind::StoreDegraded,
+        EventKind::ConnReaped,
     ];
 
     /// Encode a kernel-dispatch path name as `DispatchResolved` aux.
@@ -108,6 +133,12 @@ impl EventKind {
             EventKind::StreamHibernate => "stream_hibernate",
             EventKind::StreamRestore => "stream_restore",
             EventKind::Snapshot => "snapshot",
+            EventKind::ShardPanic => "shard_panic",
+            EventKind::ShardRespawn => "shard_respawn",
+            EventKind::StreamRehomed => "stream_rehomed",
+            EventKind::StreamLost => "stream_lost",
+            EventKind::StoreDegraded => "store_degraded",
+            EventKind::ConnReaped => "conn_reaped",
         }
     }
 }
@@ -147,8 +178,8 @@ struct Inner {
     next_seq: u64,
     recorded: u64,
     dropped_oldest: u64,
-    suppressed: [u64; 13],
-    gates: [RateGate; 13],
+    suppressed: [u64; 19],
+    gates: [RateGate; 19],
     max_per_sec: u32,
 }
 
@@ -194,8 +225,8 @@ impl Journal {
                 next_seq: 0,
                 recorded: 0,
                 dropped_oldest: 0,
-                suppressed: [0; 13],
-                gates: [RateGate::default(); 13],
+                suppressed: [0; 19],
+                gates: [RateGate::default(); 19],
                 max_per_sec: max_per_sec.max(1),
             }),
         }

@@ -271,6 +271,15 @@ impl DiskStore {
         }
         tmp.sync_all()?;
         std::fs::rename(&tmp_path, &self.path)?;
+        // the rename only becomes durable once the parent directory's
+        // entry for it is on disk — without this fsync a crash right
+        // after compaction can resurrect the old (pre-compaction) log
+        // on some filesystems
+        let parent = match self.path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        File::open(parent)?.sync_all()?;
         self.file = tmp;
         self.index = new_index;
         self.tail = new_tail;

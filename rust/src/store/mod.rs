@@ -61,6 +61,36 @@ impl From<std::io::Error> for StoreError {
     }
 }
 
+/// Run `op` up to `attempts` times, sleeping `base_delay` and doubling
+/// it between tries (exponential backoff). Returns the final result
+/// plus how many retries were spent — the building block of degraded
+/// store mode, where a transient I/O failure must not abort a snapshot
+/// cycle. `attempts` is clamped to at least 1.
+pub fn with_retries<T>(
+    attempts: u32,
+    base_delay: std::time::Duration,
+    mut op: impl FnMut() -> Result<T, StoreError>,
+) -> (Result<T, StoreError>, u32) {
+    let attempts = attempts.max(1);
+    let mut delay = base_delay;
+    let mut retries = 0u32;
+    loop {
+        match op() {
+            Ok(v) => return (Ok(v), retries),
+            Err(e) => {
+                if retries + 1 >= attempts {
+                    return (Err(e), retries);
+                }
+                retries += 1;
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                delay = delay.saturating_mul(2);
+            }
+        }
+    }
+}
+
 /// A durable (or not) blob store keyed by stream id.
 ///
 /// Implementations must make `put` replace any previous blob for the
@@ -130,6 +160,36 @@ impl StateStore for MemStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn with_retries_counts_and_gives_up() {
+        use std::time::Duration;
+        // succeeds on the 3rd attempt: 2 retries spent
+        let mut calls = 0;
+        let (res, retries) = with_retries(5, Duration::ZERO, || {
+            calls += 1;
+            if calls < 3 {
+                Err(StoreError::Io("flaky".into()))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(res.unwrap(), 3);
+        assert_eq!(retries, 2);
+        // a persistent failure exhausts the budget and reports it typed
+        let mut calls = 0;
+        let (res, retries) = with_retries::<()>(3, Duration::ZERO, || {
+            calls += 1;
+            Err(StoreError::Io("down".into()))
+        });
+        assert!(matches!(res, Err(StoreError::Io(_))));
+        assert_eq!(retries, 2);
+        assert_eq!(calls, 3);
+        // attempts=0 still runs the op once
+        let (res, retries) = with_retries(0, Duration::ZERO, || Ok(7));
+        assert_eq!(res.unwrap(), 7);
+        assert_eq!(retries, 0);
+    }
 
     #[test]
     fn memstore_put_get_delete_list() {

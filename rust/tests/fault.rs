@@ -1,0 +1,520 @@
+//! Fault-isolation integration: a crashing shard worker must be a
+//! contained, typed, recoverable event — never a poisoned engine.
+//!
+//! The subsystem's acceptance properties, pinned end to end:
+//!
+//! 1. An injected shard-worker panic (deterministic `shard_step=@N`
+//!    plan) kills exactly one shard. Streams on the survivors keep
+//!    serving **bitwise-identically**; the crashed shard's streams
+//!    come back via resume from their last checkpoint, and the
+//!    concatenated per-stream traces still match a scalar oracle
+//!    replay bit for bit. The supervisor re-homes, respawns, and the
+//!    engine never reports `ShuttingDown` while healthy.
+//! 2. A ≥500-op chaos run over a slot-starved hibernating cluster
+//!    with seeded store faults (failing puts + syncs, a torn log
+//!    tail) stays bitwise-exact against the oracle: store failures
+//!    degrade durability, never correctness or availability.
+//! 3. `EngineError::ShardFailed` survives the wire byte-exactly
+//!    (code 10, aux = retryable flag), and a TCP client can ride
+//!    through a mid-load shard crash using only typed errors +
+//!    OPEN-resume.
+//!
+//! Hermetic: `SyntheticServeSpec::default()` artifacts on the batched
+//! scalar backend, explicit fault plans (env-independent), serial
+//! drivers, deterministic seeds throughout.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use deepcot::config::{EngineBackend, EngineConfig, PlacementPolicy};
+use deepcot::coordinator::engine::{EngineError, EngineHandle, EngineThread, Session, TickResult};
+use deepcot::coordinator::slots::StreamId;
+use deepcot::fault::FaultPlan;
+use deepcot::manifest::Manifest;
+use deepcot::net::client::{ClientError, NetClient};
+use deepcot::net::proto::{ErrCode, Frame, WireError};
+use deepcot::net::server::NetServer;
+use deepcot::nn::batched::BatchedScalarDeepCoT;
+use deepcot::nn::params::ModelParams;
+use deepcot::nn::tensor::Mat;
+use deepcot::obs::journal::EventKind;
+use deepcot::obs::ObsLevel;
+use deepcot::synthetic::SyntheticServeSpec;
+use deepcot::util::rng::Rng;
+
+const D_IN: usize = 8; // must match SyntheticServeSpec::default()
+
+fn synth_artifacts() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| SyntheticServeSpec::default().write().unwrap()).clone()
+}
+
+fn tmp_state_dir(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("deepcot-fault-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// Replay one stream's recorded tokens through an isolated 1-lane
+/// scalar model and demand bit-equality with the recorded ticks.
+fn assert_oracle(stream: u64, tokens: &[Vec<f32>], trace: &[TickResult]) {
+    assert_eq!(tokens.len(), trace.len(), "stream {stream}: tokens vs ticks");
+    let (manifest, mdir) = Manifest::load(&synth_artifacts()).unwrap();
+    let entry = manifest.variant(&SyntheticServeSpec::variant_name(1)).unwrap();
+    let params = ModelParams::load(&mdir, entry).unwrap();
+    let mc = entry.config.clone();
+    let mut oracle = BatchedScalarDeepCoT::with_lanes(mc.clone(), params, 1);
+    for (t, (toks, got)) in tokens.iter().zip(trace).enumerate() {
+        let lane = Mat::from_vec(1, mc.d_in, toks.clone());
+        let step = oracle.tick_lanes(&lane, &[true], &[t as i32]).unwrap();
+        assert_eq!(got.tick, t as u64 + 1, "stream {stream} tick {t} ordinal");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        let want_logits: Vec<u32> = step.logits.row(0).iter().map(|v| v.to_bits()).collect();
+        let want_out: Vec<u32> = (0..mc.m_tokens)
+            .flat_map(|r| step.out.row(r).iter().map(|v| v.to_bits()))
+            .collect();
+        assert_eq!(bits(&got.logits), want_logits, "stream {stream} tick {t} logits vs oracle");
+        assert_eq!(bits(&got.out), want_out, "stream {stream} tick {t} out vs oracle");
+    }
+}
+
+/// The fault plan flows config → engine: defaults inherit
+/// `DEEPCOT_FAULT`, an explicit builder plan beats the environment.
+#[test]
+fn config_inherits_env_fault_plan_and_builder_overrides() {
+    assert_eq!(
+        EngineConfig::default().fault,
+        FaultPlan::default_from_env(),
+        "the default config must carry exactly the environment's plan"
+    );
+    let pinned: FaultPlan = "seed=3,store_put=7".parse().unwrap();
+    let cfg = EngineConfig::builder().fault(pinned.clone()).build();
+    assert_eq!(cfg.fault, pinned, "an explicit plan must beat DEEPCOT_FAULT");
+    let off = EngineConfig::builder().fault(FaultPlan::disabled()).build();
+    assert!(!off.fault.is_enabled());
+}
+
+/// `ShardFailed` over the wire: code 10, aux carries the retryable
+/// flag, and the decoded client-side error is the same variant.
+#[test]
+fn shard_failed_survives_the_wire_byte_exactly() {
+    for retryable in [true, false] {
+        let e = EngineError::ShardFailed { retryable };
+        let w = WireError::from_engine(3, &e);
+        assert_eq!(w.code, ErrCode::ShardFailed);
+        assert_eq!(w.aux, u32::from(retryable));
+        let enc = Frame::Error(w).encode();
+        let Frame::Error(back) = Frame::decode(&enc[4..]).unwrap() else {
+            panic!("not an error frame");
+        };
+        assert_eq!(back.to_engine(), e, "retryable={retryable} must round-trip");
+    }
+}
+
+/// One logical stream of the crash test: its session (absent while the
+/// stream waits for a resume), deterministic token source, the full
+/// token history for the oracle replay, and the pushed-but-unticked
+/// window a resume has to re-drive.
+struct Lane {
+    id: StreamId,
+    sess: Option<Session>,
+    rng: Rng,
+    history: Vec<Vec<f32>>,
+    unacked: VecDeque<Vec<f32>>,
+    trace: Vec<TickResult>,
+    resumed: bool,
+}
+
+/// Deliver every unacked token of `lane` and collect its tick,
+/// recovering from the planned shard crash through typed errors only:
+/// `ShardFailed {retryable: true}` → retry; `Hibernated` (or a dead
+/// output port) → drop the zombie session, `resume`, re-drive. Any
+/// other error — `ShuttingDown` above all — fails the test.
+fn pump(h: &EngineHandle, lane: &mut Lane) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while let Some(tok) = lane.unacked.front().cloned() {
+        assert!(Instant::now() < deadline, "stream {} made no progress", lane.id.0);
+        let Some(sess) = &lane.sess else {
+            match h.resume(lane.id) {
+                Ok(sess) => {
+                    lane.sess = Some(sess);
+                    lane.resumed = true;
+                }
+                // not re-homed yet (still bound, or the orphan row is
+                // not registered): the supervisor is mid-flight
+                Err(EngineError::InvalidRequest(_))
+                | Err(EngineError::StreamClosed(_))
+                | Err(EngineError::ShardFailed { retryable: true }) => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => panic!("stream {}: resume failed typed-unexpectedly: {e:?}", lane.id.0),
+            }
+            continue;
+        };
+        match sess.push(tok) {
+            Ok(()) => {}
+            Err(EngineError::ShardFailed { retryable: true }) => {
+                // dead-shard window before the re-home lands
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(EngineError::Hibernated(_)) => {
+                // re-homed to its checkpoint: the old session is a
+                // zombie — closing through it would tear down the
+                // checkpoint, so leak it instead (test-only stand-in
+                // for the server's internal forget path)
+                std::mem::forget(lane.sess.take().unwrap());
+                continue;
+            }
+            Err(e) => panic!("stream {}: push failed typed-unexpectedly: {e:?}", lane.id.0),
+        }
+        match lane.sess.as_ref().unwrap().recv_timeout(Duration::from_secs(10)) {
+            Ok(tick) => {
+                assert_eq!(
+                    tick.tick,
+                    lane.trace.len() as u64 + 1,
+                    "stream {}: tick ordinals must stay contiguous across the crash",
+                    lane.id.0
+                );
+                lane.trace.push(tick);
+                lane.unacked.pop_front();
+            }
+            Err(EngineError::StreamClosed(_)) => {
+                // the worker died holding our output port; the token at
+                // the unacked front never ticked — resume re-drives it
+                std::mem::forget(lane.sess.take().unwrap());
+            }
+            Err(e) => panic!("stream {}: recv failed typed-unexpectedly: {e:?}", lane.id.0),
+        }
+    }
+}
+
+/// Property 1: the tentpole. A deterministic shard-0 panic mid-load on
+/// a 2-shard cluster — survivors bitwise-unaffected, crashed streams
+/// resume from their checkpoint, supervisor re-homes + respawns, new
+/// opens succeed, and nothing ever reports `ShuttingDown`.
+#[test]
+fn shard_crash_is_isolated_and_bitwise() {
+    const STREAMS: usize = 4;
+    const WARM: usize = 5; // rounds before the checkpoint
+    const AFTER: usize = 6; // rounds driven through + past the crash
+    // round-robin: 2 streams per shard, so after WARM serial rounds
+    // shard 0 has ticked exactly 2*WARM times — the next shard-0 tick
+    // (the first one after the snapshot) panics
+    let plan: FaultPlan = format!("seed=1,shard=0,shard_step=@{}", 2 * WARM + 1).parse().unwrap();
+    let cfg = EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(2)
+        .slots_per_shard(STREAMS)
+        .placement(PlacementPolicy::RoundRobin)
+        .hibernate(true)
+        .obs(ObsLevel::Journal)
+        .fault(plan)
+        .build();
+    let engine = EngineThread::spawn(cfg).unwrap();
+    let h = engine.handle();
+
+    let mut lanes: Vec<Lane> = (0..STREAMS)
+        .map(|s| {
+            let sess = h.open().unwrap();
+            Lane {
+                id: sess.id(),
+                sess: Some(sess),
+                rng: Rng::new(4400 + s as u64),
+                history: Vec::new(),
+                unacked: VecDeque::new(),
+                trace: Vec::new(),
+                resumed: false,
+            }
+        })
+        .collect();
+
+    let round_all = |lanes: &mut Vec<Lane>| {
+        for lane in lanes.iter_mut() {
+            let tok = lane.rng.normal_vec(D_IN, 1.0);
+            lane.history.push(tok.clone());
+            lane.unacked.push_back(tok);
+            pump(&h, lane);
+        }
+    };
+
+    // warm up, then checkpoint every stream — the injected crash lands
+    // strictly after this snapshot
+    for _ in 0..WARM {
+        round_all(&mut lanes);
+    }
+    assert_eq!(h.snapshot().unwrap(), STREAMS, "every stream must be checkpointed");
+
+    // drive through the crash: the first post-snapshot shard-0 tick
+    // panics; pump() rides the typed-error recovery for every lane
+    for _ in 0..AFTER {
+        round_all(&mut lanes);
+    }
+
+    // every stream finished the full schedule, crash or not, and the
+    // traces are bitwise what an uninterrupted scalar oracle produces
+    let resumed = lanes.iter().filter(|l| l.resumed).count();
+    assert_eq!(resumed, 2, "exactly the crashed shard's streams resume");
+    for lane in &lanes {
+        assert_eq!(lane.trace.len(), WARM + AFTER, "stream {}", lane.id.0);
+        assert_oracle(lane.id.0, &lane.history, &lane.trace);
+    }
+
+    // the supervisor respawned the worker (give it a beat) and the
+    // books balance: one failure, two re-homes, zero losses
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let m = loop {
+        let m = h.metrics().unwrap();
+        if m.shards_respawned >= 1 || Instant::now() >= deadline {
+            break m;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(m.shard_failures, 1);
+    assert_eq!(m.streams_rehomed, 2);
+    assert_eq!(m.streams_lost, 0, "checkpointed streams must never be lost");
+    assert_eq!(m.shards_respawned, 1);
+    assert_eq!(m.shards_dead, 0, "the respawn must clear the dead flag");
+
+    // the full supervision arc is journaled
+    let events = h.obs().journal().drain();
+    let count = |k: EventKind| events.iter().filter(|e| e.kind == k).count();
+    assert_eq!(count(EventKind::ShardPanic), 1);
+    assert_eq!(count(EventKind::StreamRehomed), 2);
+    assert_eq!(count(EventKind::StreamLost), 0);
+    assert_eq!(count(EventKind::ShardRespawn), 1);
+
+    // a healthy (respawned) cluster admits new work
+    let fresh = h.open().expect("open after respawn");
+    fresh.close();
+
+    for lane in lanes {
+        if let Some(sess) = lane.sess {
+            sess.close();
+        }
+    }
+    engine.shutdown().unwrap();
+}
+
+/// Property 2: ≥500 ops against a slot-starved hibernating cluster
+/// whose store fails on a seeded schedule (puts, syncs, and a torn
+/// on-disk log tail). Durability degrades — correctness must not: every
+/// tick stays bitwise-exact, periodic snapshots still return `Ok`, and
+/// a fresh engine over the battered state dir boots and recovers.
+#[test]
+fn chaos_store_faults_stay_bitwise_over_500_ops() {
+    const STREAMS: usize = 9; // over 6 lanes: constant spill/restore churn
+    const ROUNDS: usize = 60; // 9 * 60 = 540 pushes
+    let dir = tmp_state_dir("chaos");
+    let plan: FaultPlan = "seed=77,store_put=8,store_sync=4,torn_tail=@3".parse().unwrap();
+    let cfg = EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(3)
+        .slots_per_shard(2)
+        .placement(PlacementPolicy::RoundRobin)
+        .state_dir(dir.clone())
+        .fault(plan)
+        .build();
+    let engine = EngineThread::spawn(cfg).unwrap();
+    let h = engine.handle();
+
+    // a push may bounce off a spill whose store write failed (the shard
+    // falls back to rejecting) or a restore whose read failed; both are
+    // scheduled faults — retry. Anything else typed-unexpected panics.
+    let tolerated = |e: &EngineError| match e {
+        EngineError::Saturated { .. } => true,
+        EngineError::Internal(m) => m.contains("injected fault"),
+        _ => false,
+    };
+
+    // an open past lane capacity spills a victim through the faulty
+    // store, so admission itself can bounce off an injected put — retry
+    let open = || loop {
+        match h.open() {
+            Ok(sess) => return sess,
+            Err(e) if tolerated(&e) => std::thread::sleep(Duration::from_millis(2)),
+            Err(e) => panic!("open: unexpected error: {e:?}"),
+        }
+    };
+    let mut sessions: Vec<(Session, Rng, Vec<Vec<f32>>, Vec<TickResult>)> = (0..STREAMS)
+        .map(|s| (open(), Rng::new(9900 + s as u64), Vec::new(), Vec::new()))
+        .collect();
+    let mut ops = 0u64;
+    for round in 0..ROUNDS {
+        for (sess, rng, history, trace) in sessions.iter_mut() {
+            let tok = rng.normal_vec(D_IN, 1.0);
+            history.push(tok.clone());
+            let deadline = Instant::now() + Duration::from_secs(30);
+            loop {
+                match sess.push(tok.clone()) {
+                    Ok(()) => break,
+                    Err(e) if tolerated(&e) => {
+                        assert!(
+                            Instant::now() < deadline,
+                            "stream {} wedged on {e:?}",
+                            sess.id().0
+                        );
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => panic!("stream {}: unexpected error: {e:?}", sess.id().0),
+                }
+            }
+            ops += 1;
+            let tick = sess.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(tick.tick, trace.len() as u64 + 1);
+            trace.push(tick);
+        }
+        // the degraded-store contract: snapshots absorb scheduled store
+        // failures (warn + journal + retry) instead of erroring out
+        if round % 10 == 9 {
+            assert!(h.snapshot().is_ok(), "snapshot must degrade, not fail");
+        }
+    }
+    assert!(ops >= 500, "chaos run too small: {ops} ops");
+    let m = h.metrics().unwrap();
+    assert!(m.streams_hibernated > 0, "churn must spill through the faulty store");
+    assert!(m.streams_restored > 0, "churn must restore through the faulty store");
+
+    for (sess, _, history, trace) in &sessions {
+        assert_oracle(sess.id().0, history, trace);
+    }
+    for (sess, ..) in sessions {
+        std::mem::forget(sess); // crash-style exit: keep the stored blobs
+    }
+    engine.shutdown().unwrap();
+
+    // the battered log (torn tail included) must still boot a fresh
+    // engine and yield recoverable streams
+    let cfg = EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(3)
+        .slots_per_shard(2)
+        .state_dir(dir.clone())
+        .fault(FaultPlan::disabled())
+        .build();
+    let engine = EngineThread::spawn(cfg).expect("recovery over a torn log must boot");
+    let h = engine.handle();
+    assert!(
+        !h.hibernated_streams().is_empty(),
+        "540 ops with snapshots must leave recoverable checkpoints"
+    );
+    engine.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property 3, live half: a TCP client rides through a mid-load shard
+/// crash on typed wire errors alone — `ShardFailed`/`Hibernated`/
+/// `StreamClosed` → OPEN-resume → ticks continue — and the server's
+/// zombie session for the crashed stream must not tear the resumed
+/// stream down.
+#[test]
+fn wire_client_recovers_from_shard_crash_via_open_resume() {
+    const STREAMS: usize = 4;
+    const WARM: usize = 5;
+    const AFTER: usize = 8;
+    let plan: FaultPlan = format!("seed=2,shard=0,shard_step=@{}", 2 * WARM + 1).parse().unwrap();
+    let cfg = EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(2)
+        .slots_per_shard(STREAMS)
+        .placement(PlacementPolicy::RoundRobin)
+        .hibernate(true)
+        .fault(plan)
+        .build();
+    let engine = EngineThread::spawn(cfg).unwrap();
+    let server = NetServer::start("127.0.0.1:0", engine.handle()).unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    let ids: Vec<u64> = (0..STREAMS).map(|_| client.open().unwrap()).collect();
+    let mut rngs: Vec<Rng> = (0..STREAMS).map(|s| Rng::new(5500 + s as u64)).collect();
+    let mut ticks_seen = vec![0u64; STREAMS];
+    for _ in 0..WARM {
+        for (s, &id) in ids.iter().enumerate() {
+            client.push(id, &rngs[s].normal_vec(D_IN, 1.0)).unwrap();
+            let t = client.recv_tick(id).unwrap();
+            ticks_seen[s] = t.tick;
+        }
+    }
+    assert_eq!(engine.handle().snapshot().unwrap(), STREAMS);
+
+    let mut resumes = 0u64;
+    for _ in 0..AFTER {
+        for (s, &id) in ids.iter().enumerate() {
+            let tok = rngs[s].normal_vec(D_IN, 1.0);
+            let deadline = Instant::now() + Duration::from_secs(30);
+            loop {
+                assert!(Instant::now() < deadline, "stream {id} wedged");
+                let step = match client.push(id, &tok) {
+                    Ok(()) => client.recv_tick(id).map(|t| t.tick),
+                    Err(e) => Err(e),
+                };
+                match step {
+                    Ok(tick) => {
+                        // a resumed stream re-drives from its checkpoint,
+                        // so ordinals may step back — never skip forward
+                        assert!(
+                            tick <= ticks_seen[s] + 1,
+                            "stream {id}: tick {tick} skipped past {}",
+                            ticks_seen[s]
+                        );
+                        ticks_seen[s] = tick;
+                        break;
+                    }
+                    Err(ClientError::Engine(EngineError::ShardFailed { retryable: true }))
+                    | Err(ClientError::Engine(EngineError::Timeout)) => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(ClientError::Engine(EngineError::Hibernated(_)))
+                    | Err(ClientError::Engine(EngineError::StreamClosed(_))) => {
+                        // resync first: the crash's terminal error may
+                        // have answered the wrong request, leaving a
+                        // straggler reply in flight
+                        let _ = client.metrics();
+                        match client.open_resume(id) {
+                            Ok(got) => {
+                                assert_eq!(got, id, "resume must reattach the same id");
+                                resumes += 1;
+                            }
+                            // stale trigger (stream already live again)
+                            // or the re-home is still in flight
+                            Err(ClientError::Engine(_)) => {
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            Err(e) => panic!("stream {id}: resume transport error: {e:?}"),
+                        }
+                    }
+                    Err(e) => panic!("stream {id}: unexpected wire error: {e:?}"),
+                }
+            }
+        }
+    }
+    assert!(resumes >= 1, "the crash must force at least one OPEN-resume");
+    // every stream is live and past its checkpoint — the zombie session
+    // purge on resume kept the resumed streams alive
+    for (s, &id) in ids.iter().enumerate() {
+        assert!(ticks_seen[s] > WARM as u64, "stream {id} never got past its checkpoint");
+    }
+    let m = engine.handle().metrics().unwrap();
+    assert!(m.shard_failures >= 1);
+    assert!(m.streams_rehomed >= 1);
+
+    client.shutdown_server().unwrap();
+    server.shutdown();
+    engine.shutdown().unwrap();
+}
