@@ -26,10 +26,34 @@
 //!     cargo run --release --bin deepcot_serve -- \
 //!         --synthetic --listen 127.0.0.1:0 --smoke 100
 //!
+//! Since PR 10 the server is a readiness-loop executor, not
+//! thread-per-connection: one poll thread owns every socket
+//! (nonblocking reads, per-connection write queues, tick multiplexing,
+//! idle reaping) and a fixed worker pool decodes frames and drives the
+//! engine, so thread count is O(workers) at any connection fanout. The
+//! wire protocol is unchanged — every pre-PR-10 client still speaks to
+//! it byte-for-byte. Admission control knobs (all on `deepcot_serve`
+//! and `EngineConfig`):
+//!
+//! * `--net-workers N` — worker pool size (`0` = auto, clamped 2..=8);
+//! * `--net-max-conns N` — connection cap; beyond it new sockets get a
+//!   best-effort typed `Saturated` goodbye;
+//! * `--net-max-streams N` — per-connection open-stream quota,
+//!   answered with `Saturated { capacity: quota }` when exceeded;
+//! * `--net-auth-token SECRET` — shared-secret OPEN auth: every frame
+//!   is rejected until the connection's first OPEN carries the token
+//!   (`NetClient::set_auth_token` on the client side; the token rides
+//!   in an extended OPEN body, so unauthenticated servers and old
+//!   captures are unaffected).
+//!
 //! From Rust, connect with `deepcot::net::client::NetClient`
 //! (`connect` → `open` → `push`/`recv_tick` → `close`, plus
-//! `shutdown_server` for a graceful drain); `bench_throughput --tcp`
-//! measures the same closed-loop traffic end-to-end over loopback.
+//! `shutdown_server` for a graceful drain). The client pipelines:
+//! `push_nowait` keeps up to `set_max_inflight` requests in flight and
+//! `flush_acks` settles them FIFO, so one load generator can saturate
+//! the server; `bench_throughput --tcp` measures the same closed-loop
+//! traffic end-to-end over loopback, and `--conns 100,1000,10000`
+//! sweeps connection fanout against the fixed worker pool.
 //!
 //! # Kernel dispatch
 //!

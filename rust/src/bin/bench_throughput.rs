@@ -20,10 +20,21 @@
 //! printed from `ClusterMetrics`.
 //!
 //! With `--tcp` the same closed-loop clients talk to the engine through
-//! a loopback `net::server::NetServer` front door via the blocking
+//! a loopback `net::server::NetServer` front door via the pipelined
 //! `net::client::NetClient` — the end-to-end-over-the-wire series of
 //! the perf trajectory, directly comparable to the in-process one
 //! (same model, same traffic, `"transport"` recorded in `--json`).
+//!
+//! With `--tcp --conns 100,1000,10000` the bench switches to the
+//! connection-fanout sweep: at each count it holds that many concurrent
+//! loopback connections open against one server (at most 8 loader
+//! threads drive them all — the front door itself runs a fixed worker
+//! pool, so its thread count stays O(workers) however many sockets are
+//! up, which the sweep asserts via `/proc/self/task` on Linux), pushes
+//! `--ticks` ticks per connection, and reports connection-setup and
+//! aggregate tick throughput per count. `net::poller::raise_nofile`
+//! lifts `RLIMIT_NOFILE` first, and counts that exceed what the host
+//! allows are scaled down with a note rather than failing the sweep.
 //!
 //! `--kernel-dispatch scalar|avx2|neon` forces the shard backends onto
 //! one kernel path (`nn::simd`; default `auto` picks the widest the
@@ -56,7 +67,8 @@ use deepcot::config::{EngineBackend, EngineConfig};
 use deepcot::coordinator::engine::EngineThread;
 use deepcot::coordinator::slots::StreamId;
 use deepcot::net::client::NetClient;
-use deepcot::net::server::NetServer;
+use deepcot::net::poller::raise_nofile;
+use deepcot::net::server::{NetConfig, NetServer};
 use deepcot::nn::simd::{cpu_features, DispatchChoice, KernelOps};
 use deepcot::synthetic::SyntheticServeSpec;
 use deepcot::util::cli::Cli;
@@ -268,6 +280,143 @@ fn run_churn(cfg: EngineConfig, registered: usize, wakes: usize, d_in: usize) ->
     Ok(())
 }
 
+/// Threads in this process right now (Linux; `None` elsewhere).
+fn count_threads() -> Option<u64> {
+    std::fs::read_dir("/proc/self/task").ok().map(|d| d.count() as u64)
+}
+
+struct ConnResult {
+    conns: usize,
+    setup: Duration,
+    wall: Duration,
+    ticks_per_sec: f64,
+    /// Process thread count with every connection up (Linux only).
+    threads: Option<u64>,
+    net_workers: u64,
+}
+
+/// Connection-fanout sweep: hold `conns` concurrent loopback
+/// connections (one stream each) against one executor-driven server,
+/// driven by at most 8 loader threads, and measure setup + aggregate
+/// tick throughput. The server's thread count must stay O(workers).
+fn run_conns(
+    dir: &std::path::Path,
+    shards: usize,
+    conns: usize,
+    ticks: usize,
+    d_in: usize,
+    deadline_us: u64,
+    dispatch: DispatchChoice,
+) -> Result<ConnResult> {
+    let threads_before = count_threads();
+    let cfg = EngineConfig::builder()
+        .artifacts_dir(dir)
+        .variant(SyntheticServeSpec::variant_name(1))
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_micros(deadline_us))
+        .shards(shards)
+        // least-loaded keeps lane demand exactly balanced, so one
+        // slot of headroom per shard admits every connection's stream
+        .slots_per_shard(conns.div_ceil(shards) + 1)
+        .placement(deepcot::config::PlacementPolicy::LeastLoaded)
+        .kernel_dispatch(dispatch)
+        .net_max_conns(conns + 16)
+        .build();
+    let net_cfg = NetConfig::from_engine(&cfg);
+    let engine = EngineThread::spawn(cfg)?;
+    let server = NetServer::start_with("127.0.0.1:0", engine.handle(), net_cfg)
+        .context("starting net server")?;
+    let addr = server.local_addr();
+    let loaders = conns.clamp(1, 8);
+    let per = conns.div_ceil(loaders);
+    let t0 = Instant::now();
+    // phase A: bring every connection up, one stream each
+    let mut setup = Vec::new();
+    for l in 0..loaders {
+        let mine = per.min(conns - (l * per).min(conns));
+        if mine == 0 {
+            break;
+        }
+        setup.push(std::thread::spawn(move || -> Result<Vec<(NetClient, u64)>> {
+            let mut out = Vec::with_capacity(mine);
+            for i in 0..mine {
+                let mut c = NetClient::connect(addr)
+                    .with_context(|| format!("loader {l} connection {i}"))?;
+                c.set_read_timeout(Some(Duration::from_secs(60)))?;
+                let stream = {
+                    let mut attempt = 0;
+                    loop {
+                        match c.open() {
+                            Ok(stream) => break stream,
+                            Err(_) if attempt < 50 => {
+                                attempt += 1;
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(e) => return Err(e).context("conn-sweep open"),
+                        }
+                    }
+                };
+                out.push((c, stream));
+            }
+            Ok(out)
+        }));
+    }
+    let fleets: Vec<Vec<(NetClient, u64)>> =
+        setup.into_iter().map(|h| h.join().expect("loader thread")).collect::<Result<_>>()?;
+    let setup_wall = t0.elapsed();
+    let threads_up = count_threads();
+    let m = server.metrics();
+    anyhow::ensure!(
+        m.connections_active as usize == conns,
+        "sweep expected {conns} active connections, server reports {}",
+        m.connections_active
+    );
+    if let (Some(before), Some(up)) = (threads_before, threads_up) {
+        // the whole point: sockets don't cost threads. Loaders (≤8) +
+        // executor + workers (≤8) are the only additions.
+        anyhow::ensure!(
+            up.saturating_sub(before) < 100,
+            "thread count grew by {} for {conns} connections — the executor is supposed to \
+             hold it O(workers)",
+            up.saturating_sub(before)
+        );
+    }
+    // phase B: closed-loop ticks on every connection
+    let t1 = Instant::now();
+    let mut drivers = Vec::new();
+    for (l, mut mine) in fleets.into_iter().enumerate() {
+        drivers.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(0xC09_15 ^ ((l as u64 + 1) * 0x9E37));
+            for t in 0..ticks {
+                for (c, stream) in &mut mine {
+                    c.push(*stream, &rng.normal_vec(d_in, 1.0))
+                        .with_context(|| format!("conn-sweep push tick {t}"))?;
+                    c.recv_tick(*stream).with_context(|| format!("conn-sweep tick {t}"))?;
+                }
+            }
+            for (c, stream) in &mut mine {
+                let _ = c.close(*stream);
+            }
+            Ok(())
+        }));
+    }
+    for d in drivers {
+        d.join().expect("driver thread")?;
+    }
+    let wall = t1.elapsed();
+    let net_workers = server.metrics().workers;
+    server.shutdown();
+    engine.shutdown()?;
+    Ok(ConnResult {
+        conns,
+        setup: setup_wall,
+        wall,
+        ticks_per_sec: (conns * ticks) as f64 / wall.as_secs_f64(),
+        threads: threads_up,
+        net_workers,
+    })
+}
+
 fn main() -> Result<()> {
     let cli = Cli::new("bench_throughput: aggregate serving throughput vs shard count")
         .opt("shards-list", "1,2,4", "comma-separated shard counts to sweep")
@@ -285,6 +434,7 @@ fn main() -> Result<()> {
         .opt("slots", "32", "hibernation churn: lanes per shard")
         .opt("wakes", "0", "hibernation churn: total random wakes (0 = 2x registered)")
         .opt("json", "", "write sweep results JSON to this path (perf trajectory)")
+        .opt("conns", "", "connection-fanout sweep: comma-separated counts (requires --tcp)")
         .flag("tcp", "drive the engine end-to-end over a loopback TCP front door");
     let args = cli.parse()?;
     let tcp = args.has("tcp");
@@ -331,6 +481,96 @@ fn main() -> Result<()> {
             String::new()
         },
     );
+    if !args.get("conns").is_empty() {
+        anyhow::ensure!(args.has("tcp"), "--conns is a TCP front-door sweep; pass --tcp");
+        let mut wanted: Vec<usize> = args
+            .get("conns")
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().context("--conns entries must be integers"))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(
+            wanted.iter().all(|&n| n > 0),
+            "--conns entries must be positive connection counts"
+        );
+        // each connection is one client fd here + one accepted fd in
+        // the (same-process) server, plus engine/artifact overhead
+        let max = wanted.iter().copied().max().unwrap_or(0);
+        let limit = raise_nofile(max as u64 * 2 + 256).unwrap_or(u64::MAX);
+        let affordable = (limit.saturating_sub(256) / 2) as usize;
+        for n in &mut wanted {
+            if *n > affordable {
+                println!(
+                    "conns: scaling {n} down to {affordable} (RLIMIT_NOFILE allows {limit} fds)"
+                );
+                *n = affordable.max(1);
+            }
+        }
+        let shards = shard_counts[0].max(1);
+        let mut results = Vec::with_capacity(wanted.len());
+        for &conns in &wanted {
+            results.push(run_conns(
+                &dir,
+                shards,
+                conns,
+                ticks,
+                spec.d_in,
+                args.get_u64("deadline-us")?,
+                dispatch,
+            )?);
+        }
+        println!(
+            "{:>8} {:>10} {:>10} {:>12} {:>8} {:>8}",
+            "conns", "setup", "wall", "ticks/s", "workers", "threads"
+        );
+        for r in &results {
+            println!(
+                "{:>8} {:>10.2?} {:>10.2?} {:>12.1} {:>8} {:>8}",
+                r.conns,
+                r.setup,
+                r.wall,
+                r.ticks_per_sec,
+                r.net_workers,
+                r.threads.map(|t| t.to_string()).unwrap_or_else(|| "-".into()),
+            );
+        }
+        if !args.get("json").is_empty() {
+            let doc = obj(vec![
+                ("bench", Json::Str("throughput".into())),
+                ("transport", Json::Str("tcp-loopback".into())),
+                ("mode", Json::Str("conn_sweep".into())),
+                ("ticks_per_conn", num(ticks as f64)),
+                ("shards", num(shards as f64)),
+                ("kernel_dispatch", Json::Str(kops.path.as_str().into())),
+                ("cpu_features", Json::Str(cpu_features())),
+                (
+                    "results",
+                    Json::Arr(
+                        results
+                            .iter()
+                            .map(|r| {
+                                obj(vec![
+                                    ("conns", num(r.conns as f64)),
+                                    ("setup_s", num(r.setup.as_secs_f64())),
+                                    ("wall_s", num(r.wall.as_secs_f64())),
+                                    ("ticks_per_sec", num(r.ticks_per_sec)),
+                                    ("net_workers", num(r.net_workers as f64)),
+                                    (
+                                        "process_threads",
+                                        num(r.threads.map(|t| t as f64).unwrap_or(-1.0)),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]);
+            let path = args.get("json").to_string();
+            std::fs::write(&path, doc.to_string() + "\n")
+                .with_context(|| format!("writing {path}"))?;
+            println!("wrote {path}");
+        }
+        return Ok(());
+    }
     let registered = args.get_usize("registered")?;
     if registered > 0 {
         let shards = shard_counts[0].max(1);

@@ -7,7 +7,11 @@
 //!     cargo run --release --bin deepcot_serve -- --synthetic --shards 2
 //!
 //! All engine options (`--variant`, `--backend`, `--shards`,
-//! `--placement`, …) come from `EngineConfig::cli`. `--listen
+//! `--placement`, …) come from `EngineConfig::cli`, as do the front
+//! door's executor knobs: `--net-workers` (decode/engine worker pool;
+//! the server runs O(workers) threads however many connections are
+//! open), `--net-max-conns`, `--net-max-streams` (per-connection open
+//! quota), and `--net-auth-token` (shared-secret OPEN auth). `--listen
 //! 127.0.0.1:0` picks an ephemeral port (printed on startup). The
 //! server runs until a client sends a SHUTDOWN frame, then drains:
 //! every live stream gets a terminal typed error, the engine shuts
@@ -46,7 +50,7 @@ use deepcot::coordinator::engine::EngineThread;
 use deepcot::coordinator::session::EngineError;
 use deepcot::manifest::Manifest;
 use deepcot::net::client::{ClientError, NetClient};
-use deepcot::net::server::NetServer;
+use deepcot::net::server::{NetConfig, NetServer};
 use deepcot::obs::expo;
 use deepcot::obs::server::{MetricsFormat, MetricsServer};
 use deepcot::synthetic::SyntheticServeSpec;
@@ -85,14 +89,23 @@ fn main() -> Result<()> {
 
     let snapshot_every = cfg.snapshot_every;
     let persistent = cfg.state_dir.is_some();
+    // front-door knobs (--net-workers, --net-max-conns, --net-max-streams,
+    // --net-auth-token) ride on EngineConfig; lift them before the move
+    let net_cfg = NetConfig::from_engine(&cfg);
+    let auth_token = cfg.net_auth_token.clone();
     let engine = EngineThread::spawn(cfg).context("spawning the serving cluster")?;
     if persistent {
         let recovered = engine.handle().hibernated_streams().len();
         println!("deepcot_serve: recovered {recovered} hibernated stream(s) from the state dir");
     }
-    let server =
-        NetServer::start(args.get("listen"), engine.handle()).context("binding the front door")?;
-    println!("deepcot_serve: listening on {}", server.local_addr());
+    let authed = net_cfg.auth_token.is_some();
+    let server = NetServer::start_with(args.get("listen"), engine.handle(), net_cfg)
+        .context("binding the front door")?;
+    println!(
+        "deepcot_serve: listening on {}{}",
+        server.local_addr(),
+        if authed { " (OPEN auth required)" } else { "" }
+    );
 
     let obs = engine.handle().obs().clone();
     let metrics_srv = if args.get("metrics-listen").is_empty() {
@@ -129,14 +142,27 @@ fn main() -> Result<()> {
     let mut _held_client = None;
     if smoke > 0 {
         let scrape = metrics_srv.as_ref().map(|s| s.local_addr());
-        _held_client =
-            run_smoke(&server, smoke, d_lane, scrape, obs.spans_on(), args.has("smoke-hold"))?;
+        _held_client = run_smoke(
+            &server,
+            smoke,
+            d_lane,
+            scrape,
+            obs.spans_on(),
+            args.has("smoke-hold"),
+            &auth_token,
+        )?;
     }
     if args.has("resume-smoke") {
-        run_resume_smoke(&server, &engine, d_lane)?;
+        run_resume_smoke(&server, &engine, d_lane, &auth_token)?;
     }
     if args.has("expect-respawn") {
-        run_chaos_smoke(&server, &engine, d_lane, metrics_srv.as_ref().map(|s| s.local_addr()))?;
+        run_chaos_smoke(
+            &server,
+            &engine,
+            d_lane,
+            metrics_srv.as_ref().map(|s| s.local_addr()),
+            &auth_token,
+        )?;
     }
 
     // serve until some client requests shutdown (the smoke client
@@ -209,9 +235,11 @@ fn run_smoke(
     metrics_addr: Option<SocketAddr>,
     spans_on: bool,
     hold: bool,
+    auth_token: &str,
 ) -> Result<Option<NetClient>> {
     let mut client =
         NetClient::connect(server.local_addr()).context("smoke client connecting")?;
+    client.set_auth_token(auth_token);
     client.set_read_timeout(Some(Duration::from_secs(30)))?;
     let stream = client.open().context("smoke open")?;
     let mut rng = Rng::new(0x5E21E);
@@ -258,11 +286,17 @@ fn run_smoke(
 /// stream the engine recovered from its state dir over loopback TCP,
 /// push one token each, and require the tick ordinal to *continue*
 /// past 1 — proof the pre-kill state survived — then shut down.
-fn run_resume_smoke(server: &NetServer, engine: &EngineThread, d_lane: usize) -> Result<()> {
+fn run_resume_smoke(
+    server: &NetServer,
+    engine: &EngineThread,
+    d_lane: usize,
+    auth_token: &str,
+) -> Result<()> {
     let ids = engine.handle().hibernated_streams();
     anyhow::ensure!(!ids.is_empty(), "resume-smoke found no recovered streams to resume");
     let mut client =
         NetClient::connect(server.local_addr()).context("resume-smoke client connecting")?;
+    client.set_auth_token(auth_token);
     client.set_read_timeout(Some(Duration::from_secs(30)))?;
     let mut rng = Rng::new(0x2E5);
     for id in &ids {
@@ -290,7 +324,7 @@ fn run_resume_smoke(server: &NetServer, engine: &EngineThread, d_lane: usize) ->
 }
 
 /// Classify a chaos-smoke wire error: `Some(true)` — the stream lost
-/// its owner (re-homed to a checkpoint, or its forwarder announced the
+/// its owner (re-homed to a checkpoint, or its tick pump announced the
 /// teardown) and wants an OPEN-resume; `Some(false)` — transient, just
 /// retry after a beat; `None` — not part of the planned failure, the
 /// smoke must fail loudly. `ShuttingDown` lands in `None` on purpose:
@@ -317,12 +351,14 @@ fn run_chaos_smoke(
     engine: &EngineThread,
     d_lane: usize,
     metrics_addr: Option<SocketAddr>,
+    auth_token: &str,
 ) -> Result<()> {
     const STREAMS: usize = 4;
     const WARMUP: usize = 8;
     const CHAOS: usize = 40;
     let mut client =
         NetClient::connect(server.local_addr()).context("chaos client connecting")?;
+    client.set_auth_token(auth_token);
     client.set_read_timeout(Some(Duration::from_secs(10)))?;
     let ids: Vec<u64> =
         (0..STREAMS).map(|_| client.open().context("chaos open")).collect::<Result<_>>()?;

@@ -124,6 +124,20 @@ pub struct EngineConfig {
     /// injection site is a single branch — no counting, no allocation,
     /// no behavior change.
     pub fault: FaultPlan,
+    /// TCP front door worker threads decoding frames and driving the
+    /// engine (0 = auto: available cores clamped to 2..=8). Thread
+    /// count stays O(workers) however many connections are open.
+    pub net_workers: usize,
+    /// Concurrent TCP connections admitted before the front door
+    /// replies `Saturated` and drops the socket.
+    pub net_max_conns: usize,
+    /// Open streams allowed per TCP connection before OPEN replies
+    /// `Saturated`.
+    pub net_max_streams_per_conn: usize,
+    /// Shared-secret OPEN token for the TCP front door (empty = no
+    /// authentication). When set, a connection's requests are rejected
+    /// until its first OPEN carries this token.
+    pub net_auth_token: String,
 }
 
 impl Default for EngineConfig {
@@ -146,6 +160,10 @@ impl Default for EngineConfig {
             state_dir: None,
             snapshot_every: Duration::ZERO,
             fault: FaultPlan::default_from_env(),
+            net_workers: 0,
+            net_max_conns: 16_384,
+            net_max_streams_per_conn: 1024,
+            net_auth_token: String::new(),
         }
     }
 }
@@ -273,6 +291,30 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// TCP front door worker threads (0 = auto).
+    pub fn net_workers(mut self, n: usize) -> Self {
+        self.cfg.net_workers = n;
+        self
+    }
+
+    /// Concurrent TCP connection admission limit.
+    pub fn net_max_conns(mut self, n: usize) -> Self {
+        self.cfg.net_max_conns = n;
+        self
+    }
+
+    /// Open-stream quota per TCP connection.
+    pub fn net_max_streams_per_conn(mut self, n: usize) -> Self {
+        self.cfg.net_max_streams_per_conn = n;
+        self
+    }
+
+    /// Shared-secret OPEN token for the TCP front door (empty = none).
+    pub fn net_auth_token(mut self, token: impl Into<String>) -> Self {
+        self.cfg.net_auth_token = token.into();
+        self
+    }
+
     /// Finish the build.
     pub fn build(self) -> EngineConfig {
         self.cfg
@@ -303,6 +345,10 @@ impl EngineConfig {
             .opt("state-dir", "", "session persistence dir (enables hibernation + crash recovery)")
             .opt("snapshot-every-ms", "0", "periodic full snapshot interval (ms; 0 = shutdown only)")
             .opt("fault", "auto", "fault-injection plan, e.g. seed=7,shard_step=@40 (auto = $DEEPCOT_FAULT)")
+            .opt("net-workers", "0", "TCP front door worker threads (0 = auto, 2..=8 cores)")
+            .opt("net-max-conns", "16384", "concurrent TCP connection admission limit")
+            .opt("net-max-streams", "1024", "open-stream quota per TCP connection")
+            .opt("net-auth-token", "", "shared-secret OPEN token for the TCP front door (empty = none)")
     }
 
     pub fn from_args(args: &Args) -> Result<Self> {
@@ -331,6 +377,10 @@ impl EngineConfig {
         if args.get("fault") != "auto" {
             cfg.fault = args.get("fault").parse().map_err(anyhow::Error::msg)?;
         }
+        cfg.net_workers = args.get_usize("net-workers")?;
+        cfg.net_max_conns = args.get_usize("net-max-conns")?;
+        cfg.net_max_streams_per_conn = args.get_usize("net-max-streams")?;
+        cfg.net_auth_token = args.get("net-auth-token").to_string();
         Ok(cfg)
     }
 
@@ -516,6 +566,49 @@ mod tests {
             .fault("seed=3,store_put=5".parse().unwrap())
             .build();
         assert!(b.fault.is_enabled());
+    }
+
+    #[test]
+    fn net_options_parse() {
+        let cli = EngineConfig::cli(Cli::new("t"));
+        let args = cli
+            .parse_from(
+                [
+                    "--net-workers",
+                    "4",
+                    "--net-max-conns",
+                    "100",
+                    "--net-max-streams",
+                    "8",
+                    "--net-auth-token",
+                    "s3cret",
+                ]
+                .iter()
+                .map(|s| s.to_string()),
+            )
+            .unwrap();
+        let c = EngineConfig::from_args(&args).unwrap();
+        assert_eq!(c.net_workers, 4);
+        assert_eq!(c.net_max_conns, 100);
+        assert_eq!(c.net_max_streams_per_conn, 8);
+        assert_eq!(c.net_auth_token, "s3cret");
+        // defaults: auto workers, generous limits, no auth
+        let d = EngineConfig::default();
+        assert_eq!(d.net_workers, 0);
+        assert!(d.net_max_conns >= 1024);
+        assert!(d.net_max_streams_per_conn >= 1);
+        assert!(d.net_auth_token.is_empty());
+        // builder knobs
+        let b = EngineConfig::builder()
+            .net_workers(2)
+            .net_max_conns(10)
+            .net_max_streams_per_conn(3)
+            .net_auth_token("t")
+            .build();
+        assert_eq!(b.net_workers, 2);
+        assert_eq!(b.net_max_conns, 10);
+        assert_eq!(b.net_max_streams_per_conn, 3);
+        assert_eq!(b.net_auth_token, "t");
     }
 
     #[test]

@@ -50,8 +50,9 @@
 //! - [`session`] — the client layer: RAII [`session::Session`] stream
 //!   handles over the typed [`session::EngineError`] enum, with a
 //!   splittable [`session::TickReceiver`] half so pushes and receives
-//!   can live on different threads (the net server's reader/forwarder
-//!   split; see `crate::net`).
+//!   can live on different threads (the net server's executor polls
+//!   the receiver halves to multiplex ticks onto per-connection write
+//!   queues; see `crate::net`).
 //! - [`engine`]  — the public facade (`EngineThread`, `EngineHandle`,
 //!   `Session`, `EngineError` re-exports).
 //! - [`metrics`] — latency histograms, per-shard counters, and the

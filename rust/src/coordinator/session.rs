@@ -165,8 +165,9 @@ impl Session {
     }
 
     /// Detach the receiving half so pushes and receives can run on
-    /// different threads (the net server's reader/forwarder split).
-    /// Returns `None` if the receiver was already taken. After the
+    /// different threads (the net server's workers push while its poll
+    /// loop drains the receiver half into the connection's write
+    /// queue). Returns `None` if the receiver was already taken. After the
     /// split the session's own `recv`/`try_recv` report
     /// [`EngineError::StreamClosed`]; `push`, `close`, and the RAII
     /// close-on-drop are unaffected.

@@ -16,8 +16,10 @@
 //!   `StreamBackend`s with portable stream-state snapshots, live
 //!   cross-shard migration, metrics.
 //! - [`net`] — the TCP front door: length-prefixed binary wire
-//!   protocol, multi-threaded server (one engine `Session` per client
-//!   stream), and blocking client; `bin/deepcot_serve` is the CLI.
+//!   protocol, a readiness-loop executor server (one poll thread plus
+//!   a fixed worker pool, one engine `Session` per client stream, with
+//!   connection limits, stream quotas, and optional shared-token OPEN
+//!   auth), and a pipelining client; `bin/deepcot_serve` is the CLI.
 //! - [`obs`] — production observability: tick-pipeline stage spans,
 //!   Prometheus/JSON exposition (HTTP endpoint + wire frame), windowed
 //!   rates, and a bounded structured event journal, all behind the

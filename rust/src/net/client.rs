@@ -1,19 +1,35 @@
-//! Blocking TCP client for the `net::proto` wire protocol — used by
-//! tests, benches, and `deepcot_serve --smoke`.
+//! Blocking, pipelined TCP client for the `net::proto` wire protocol —
+//! used by tests, benches, and `deepcot_serve --smoke`.
 //!
 //! One [`NetClient`] owns one connection and may multiplex several
-//! streams over it. The API is synchronous (one request in flight at a
-//! time), but TICK frames arrive asynchronously relative to request
-//! acks, so every receive path demultiplexes: frames that answer the
-//! current request return immediately, tick results and per-stream
-//! terminal errors for *other* streams are parked in an inbox and
-//! handed out by the matching [`NetClient::recv_tick`] call.
+//! streams over it. PUSH is pipelined: [`NetClient::push_nowait`]
+//! writes the frame and returns without waiting for the ack, so up to
+//! [`NetClient::set_max_inflight`] requests ride the wire back to
+//! back and one load-generator process can saturate a server. Acks
+//! are matched strictly FIFO (the server serializes each connection's
+//! requests, so reply order is request order); [`NetClient::flush_acks`]
+//! drains them, and every synchronous call drains outstanding acks
+//! before issuing its own request, so the classic one-at-a-time API
+//! ([`NetClient::push`] and friends) behaves exactly as before.
+//!
+//! TICK frames arrive asynchronously relative to request acks, so
+//! every receive path demultiplexes: frames that answer the current
+//! request return immediately, tick results and per-stream terminal
+//! errors for *other* streams are parked in a **bounded** inbox
+//! (default 4096 frames, [`NetClient::set_inbox_cap`]) and handed out
+//! by the matching [`NetClient::recv_tick`] call. Overflowing the
+//! inbox drops the frame, counts it ([`NetClient::inbox_dropped`]),
+//! and surfaces as the typed [`ClientError::InboxOverflow`] instead
+//! of growing memory without bound.
 //!
 //! Typed errors survive the hop: a server-side [`EngineError`] comes
 //! back as [`ClientError::Engine`] with the same variant an in-process
 //! `Session` call would have returned (`Backpressure`, `Saturated`,
 //! `ShuttingDown`, …), so callers can keep branching on semantics
-//! rather than parsing messages.
+//! rather than parsing messages. For servers started with a shared
+//! auth token, [`NetClient::set_auth_token`] makes every subsequent
+//! open carry it ([`Frame::OpenAuth`]); the wire protocol is otherwise
+//! unchanged.
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -40,6 +56,14 @@ pub enum ClientError {
     /// The server sent a well-formed frame that does not answer the
     /// outstanding request (a protocol-state violation).
     Unexpected(String),
+    /// The parked-frame inbox hit its cap and a frame was dropped —
+    /// the caller is receiving ticks for one stream far slower than
+    /// the server produces them for others. Raise the cap
+    /// ([`NetClient::set_inbox_cap`]) or drain the lagging streams.
+    InboxOverflow {
+        /// The configured inbox capacity that was exceeded.
+        capacity: usize,
+    },
 }
 
 impl fmt::Display for ClientError {
@@ -50,6 +74,9 @@ impl fmt::Display for ClientError {
             ClientError::Proto(e) => write!(f, "protocol error: {e}"),
             ClientError::Disconnected => write!(f, "server closed the connection"),
             ClientError::Unexpected(m) => write!(f, "unexpected reply: {m}"),
+            ClientError::InboxOverflow { capacity } => {
+                write!(f, "parked-frame inbox overflowed its cap of {capacity}")
+            }
         }
     }
 }
@@ -160,10 +187,23 @@ pub struct NetClient {
     rbuf: Vec<u8>,
     wbuf: Vec<u8>,
     inbox: VecDeque<(u64, Parked)>,
+    /// Streams with a pipelined PUSH awaiting its ack, oldest first.
+    /// The server serializes each connection's requests, so acks come
+    /// back in exactly this order.
+    pending: VecDeque<u64>,
+    max_inflight: usize,
+    inbox_cap: usize,
+    inbox_dropped: u64,
+    auth_token: Option<String>,
     /// Failed dials retried by `connect_with_retry`/`reconnect_resume`
     /// over this client's lifetime (survives the socket swap).
     reconnect_attempts: u64,
 }
+
+/// Default bound on pipelined PUSHes awaiting acks.
+pub const DEFAULT_MAX_INFLIGHT: usize = 128;
+/// Default bound on the parked-frame inbox.
+pub const DEFAULT_INBOX_CAP: usize = 4096;
 
 impl NetClient {
     /// Connect to a serving front door.
@@ -175,6 +215,11 @@ impl NetClient {
             rbuf: Vec::with_capacity(4096),
             wbuf: Vec::with_capacity(4096),
             inbox: VecDeque::new(),
+            pending: VecDeque::new(),
+            max_inflight: DEFAULT_MAX_INFLIGHT,
+            inbox_cap: DEFAULT_INBOX_CAP,
+            inbox_dropped: 0,
+            auth_token: None,
             reconnect_attempts: 0,
         })
     }
@@ -219,6 +264,13 @@ impl NetClient {
         // a resume below is refused and `fresh` is dropped
         self.reconnect_attempts += fresh.reconnect_attempts;
         fresh.reconnect_attempts = self.reconnect_attempts;
+        // carry the knobs and credentials onto the new connection
+        // (pipelined pushes in flight on the dead socket are lost,
+        // like its parked inbox entries)
+        fresh.max_inflight = self.max_inflight;
+        fresh.inbox_cap = self.inbox_cap;
+        fresh.inbox_dropped = self.inbox_dropped;
+        fresh.auth_token = self.auth_token.clone();
         for &s in streams {
             fresh.open_resume(s)?;
         }
@@ -238,6 +290,38 @@ impl NetClient {
         self.sock.set_read_timeout(d)
     }
 
+    /// Carry `token` on every subsequent open ([`Frame::OpenAuth`]) —
+    /// required when the server was started with a shared auth token.
+    /// An empty token clears the setting (plain OPENs again).
+    pub fn set_auth_token(&mut self, token: impl Into<String>) {
+        let t = token.into();
+        self.auth_token = if t.is_empty() { None } else { Some(t) };
+    }
+
+    /// Cap the parked-frame inbox (clamped to at least 1). Frames over
+    /// the cap are dropped, counted, and surfaced as
+    /// [`ClientError::InboxOverflow`].
+    pub fn set_inbox_cap(&mut self, cap: usize) {
+        self.inbox_cap = cap.max(1);
+    }
+
+    /// Bound on pipelined PUSHes awaiting acks (clamped to at least
+    /// 1); [`NetClient::push_nowait`] blocks for one ack when full.
+    pub fn set_max_inflight(&mut self, n: usize) {
+        self.max_inflight = n.max(1);
+    }
+
+    /// Pipelined PUSHes currently awaiting their ack.
+    pub fn inflight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Parked frames dropped to inbox overflow over this client's
+    /// lifetime (survives `reconnect_resume`'s socket swap).
+    pub fn inbox_dropped(&self) -> u64 {
+        self.inbox_dropped
+    }
+
     fn send(&mut self, f: &Frame) -> Result<(), ClientError> {
         f.encode_into(&mut self.wbuf);
         self.sock.write_all(&self.wbuf).map_err(ClientError::from)
@@ -252,26 +336,89 @@ impl NetClient {
     }
 
     /// Park an asynchronous frame that belongs to some stream's future
-    /// `recv_tick`; anything else is a protocol-state violation.
+    /// `recv_tick`; anything else is a protocol-state violation. The
+    /// inbox is bounded: a frame over the cap is dropped and counted,
+    /// and the overflow surfaces as a typed error.
     fn park(&mut self, f: Frame) -> Result<(), ClientError> {
-        match f {
+        let entry = match f {
             Frame::Tick { stream, tick, logits, out } => {
-                let t = WireTick { stream, tick, logits, out };
-                self.inbox.push_back((stream, Parked::Tick(t)));
-                Ok(())
+                (stream, Parked::Tick(WireTick { stream, tick, logits, out }))
             }
-            Frame::Error(w) if w.stream != 0 => {
-                let e = w.to_engine();
-                self.inbox.push_back((w.stream, Parked::Dead(e)));
-                Ok(())
+            Frame::Error(w) if w.stream != 0 => (w.stream, Parked::Dead(w.to_engine())),
+            other => return Err(ClientError::Unexpected(format!("{other:?}"))),
+        };
+        if self.inbox.len() >= self.inbox_cap {
+            self.inbox_dropped += 1;
+            return Err(ClientError::InboxOverflow { capacity: self.inbox_cap });
+        }
+        self.inbox.push_back(entry);
+        Ok(())
+    }
+
+    /// Block for the ack of the oldest pipelined PUSH. The server
+    /// serializes each connection's requests, so the oldest pending
+    /// stream's `PUSH_OK` (or its typed error) is the next request
+    /// reply on the wire; anything else in between is parked.
+    fn take_ack(&mut self) -> Result<(), ClientError> {
+        let head =
+            *self.pending.front().expect("take_ack is only called with a pipelined push pending");
+        loop {
+            match self.read_one()? {
+                Frame::PushOk { stream } if stream == head => {
+                    self.pending.pop_front();
+                    return Ok(());
+                }
+                Frame::Error(w) if w.stream == head || w.stream == 0 => {
+                    self.pending.pop_front();
+                    return Err(ClientError::Engine(w.to_engine()));
+                }
+                other => self.park(other)?,
             }
-            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Drain every outstanding pipelined ack. Per-request engine
+    /// errors keep draining (the first one is returned once the wire
+    /// is quiet); transport and protocol errors abort immediately —
+    /// the connection is desynchronized and no further ack can be
+    /// trusted.
+    pub fn flush_acks(&mut self) -> Result<(), ClientError> {
+        let mut first: Option<ClientError> = None;
+        while !self.pending.is_empty() {
+            match self.take_ack() {
+                Ok(()) => {}
+                // a read timeout is the wire going quiet, not a
+                // per-request verdict: no further ack is coming and
+                // `pending` cannot shrink, so stop instead of spinning
+                Err(e @ ClientError::Engine(EngineError::Timeout)) => {
+                    return Err(first.unwrap_or(e));
+                }
+                Err(e @ (ClientError::Engine(_) | ClientError::InboxOverflow { .. })) => {
+                    if first.is_none() {
+                        first = Some(e);
+                    }
+                }
+                Err(terminal) => return Err(terminal),
+            }
+        }
+        match first {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// The OPEN frame for `resume`, carrying the auth token when set.
+    fn open_request(&self, resume: Option<u64>) -> Frame {
+        match &self.auth_token {
+            Some(t) => Frame::OpenAuth { resume, token: t.clone() },
+            None => Frame::Open { resume },
         }
     }
 
     /// Open a stream; returns its engine-assigned id.
     pub fn open(&mut self) -> Result<u64, ClientError> {
-        self.open_frame(Frame::Open { resume: None }, 0)
+        let f = self.open_request(None);
+        self.open_frame(f, 0)
     }
 
     /// Reattach to a hibernated stream the server recovered from its
@@ -280,10 +427,12 @@ impl NetClient {
     /// run. Fails typed when the id is unknown ([`EngineError::StreamClosed`])
     /// or still has a live owner ([`EngineError::InvalidRequest`]).
     pub fn open_resume(&mut self, stream: u64) -> Result<u64, ClientError> {
-        self.open_frame(Frame::Open { resume: Some(stream) }, stream)
+        let f = self.open_request(Some(stream));
+        self.open_frame(f, stream)
     }
 
     fn open_frame(&mut self, f: Frame, resume: u64) -> Result<u64, ClientError> {
+        self.flush_acks()?;
         self.send(&f)?;
         loop {
             match self.read_one()? {
@@ -298,27 +447,38 @@ impl NetClient {
         }
     }
 
-    /// Push the next token vector for a stream. A rejected push comes
-    /// back as the same typed error an in-process `Session::push`
-    /// returns (`Backpressure`, `StreamClosed`, `ShuttingDown`, …).
+    /// Push the next token vector for a stream and wait for its ack
+    /// (any pipelined acks still outstanding are drained first). A
+    /// rejected push comes back as the same typed error an in-process
+    /// `Session::push` returns (`Backpressure`, `StreamClosed`,
+    /// `ShuttingDown`, …).
     pub fn push(&mut self, stream: u64, tokens: &[f32]) -> Result<(), ClientError> {
+        self.flush_acks()?;
+        self.push_nowait(stream, tokens)?;
+        self.flush_acks()
+    }
+
+    /// Pipelined push: write the PUSH frame and return without waiting
+    /// for its ack. Up to `max_inflight` pushes may be outstanding;
+    /// when the window is full this blocks for exactly one ack first
+    /// (surfacing that push's typed error, if any). Collect the
+    /// remaining acks with [`NetClient::flush_acks`] — or let the next
+    /// synchronous call do it.
+    pub fn push_nowait(&mut self, stream: u64, tokens: &[f32]) -> Result<(), ClientError> {
+        if self.pending.len() >= self.max_inflight {
+            self.take_ack()?;
+        }
         proto::write_push(&mut self.wbuf, stream, tokens);
         self.sock.write_all(&self.wbuf).map_err(ClientError::from)?;
-        loop {
-            match self.read_one()? {
-                Frame::PushOk { stream: s } if s == stream => return Ok(()),
-                Frame::Error(w) if w.stream == stream || w.stream == 0 => {
-                    return Err(ClientError::Engine(w.to_engine()))
-                }
-                other => self.park(other)?,
-            }
-        }
+        self.pending.push_back(stream);
+        Ok(())
     }
 
     /// Block for the next tick result of a stream (parked results are
     /// returned first). A stream torn down server-side yields its
     /// terminal typed error.
     pub fn recv_tick(&mut self, stream: u64) -> Result<WireTick, ClientError> {
+        self.flush_acks()?;
         if let Some(idx) = self.inbox.iter().position(|(s, _)| *s == stream) {
             let (_, parked) = self.inbox.remove(idx).expect("index just found");
             return match parked {
@@ -342,6 +502,11 @@ impl NetClient {
     /// Close a stream (the wire analogue of dropping a `Session`).
     /// Tick results still in flight for it are discarded.
     pub fn close(&mut self, stream: u64) -> Result<(), ClientError> {
+        // drain pipelined acks before CLOSE: the server defers the
+        // CLOSED reply until the stream's queued ticks have reached
+        // the wire, which is only unobservable because no request is
+        // ever pipelined past a CLOSE
+        self.flush_acks()?;
         self.send(&Frame::Close { stream })?;
         let res = loop {
             match self.read_one()? {
@@ -360,6 +525,7 @@ impl NetClient {
 
     /// Fetch the server's operator report (cluster + net counters).
     pub fn metrics(&mut self) -> Result<String, ClientError> {
+        self.flush_acks()?;
         self.send(&Frame::Metrics)?;
         loop {
             match self.read_one()? {
@@ -373,6 +539,7 @@ impl NetClient {
     /// Fetch the server's full Prometheus text exposition — the same
     /// document its HTTP `/metrics` endpoint serves.
     pub fn metrics_prometheus(&mut self) -> Result<String, ClientError> {
+        self.flush_acks()?;
         self.send(&Frame::MetricsProm)?;
         loop {
             match self.read_one()? {
@@ -386,6 +553,7 @@ impl NetClient {
     /// Ask the server to shut down gracefully; returns once the server
     /// acknowledges (expect terminal errors / EOF afterwards).
     pub fn shutdown_server(&mut self) -> Result<(), ClientError> {
+        self.flush_acks()?;
         self.send(&Frame::Shutdown)?;
         loop {
             match self.read_one()? {
@@ -433,6 +601,106 @@ mod tests {
         let c = ReconnectPolicy { seed: 8, ..Default::default() };
         assert_eq!(a.delay(3), b.delay(3), "equal seeds must retry identically");
         assert_ne!(a.delay(3), c.delay(3), "different seeds must spread retries");
+    }
+
+    /// Read one frame off a scripted test server's socket.
+    fn read_req(sock: &mut TcpStream, buf: &mut Vec<u8>) -> Frame {
+        assert!(proto::read_frame(sock, buf).unwrap(), "client hung up mid-script");
+        Frame::decode(buf).unwrap()
+    }
+
+    #[test]
+    fn pipelined_pushes_ack_fifo_and_drain_before_close() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            assert!(matches!(read_req(&mut sock, &mut buf), Frame::Open { resume: None }));
+            sock.write_all(&Frame::Opened { stream: 7 }.encode()).unwrap();
+            // three pipelined pushes arrive before any ack is written
+            for _ in 0..3 {
+                assert!(matches!(read_req(&mut sock, &mut buf), Frame::Push { stream: 7, .. }));
+            }
+            for _ in 0..3 {
+                sock.write_all(&Frame::PushOk { stream: 7 }.encode()).unwrap();
+            }
+            // the CLOSE must not be pipelined past outstanding acks
+            assert!(matches!(read_req(&mut sock, &mut buf), Frame::Close { stream: 7 }));
+            sock.write_all(&Frame::Closed { stream: 7 }.encode()).unwrap();
+        });
+        let mut c = NetClient::connect(addr).unwrap();
+        let s = c.open().unwrap();
+        assert_eq!(s, 7);
+        for _ in 0..3 {
+            c.push_nowait(s, &[1.0, 2.0]).unwrap();
+        }
+        assert_eq!(c.inflight(), 3, "push_nowait must not wait for acks");
+        c.close(s).unwrap();
+        assert_eq!(c.inflight(), 0, "close must drain the ack window first");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn inbox_overflow_is_typed_and_counted() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            assert!(matches!(read_req(&mut sock, &mut buf), Frame::Open { .. }));
+            sock.write_all(&Frame::Opened { stream: 1 }.encode()).unwrap();
+            assert!(matches!(read_req(&mut sock, &mut buf), Frame::Push { stream: 1, .. }));
+            // three ticks for a stream nobody is draining, then the ack
+            for t in 1..=3u64 {
+                let tick = Frame::Tick { stream: 2, tick: t, logits: vec![0.5], out: vec![] };
+                sock.write_all(&tick.encode()).unwrap();
+            }
+            sock.write_all(&Frame::PushOk { stream: 1 }.encode()).unwrap();
+            // hold the socket open until the client is done asserting
+            let _ = proto::read_frame(&mut sock, &mut buf);
+        });
+        let mut c = NetClient::connect(addr).unwrap();
+        c.set_inbox_cap(2);
+        let s = c.open().unwrap();
+        match c.push(s, &[1.0]) {
+            Err(ClientError::InboxOverflow { capacity: 2 }) => {}
+            other => panic!("expected typed inbox overflow, got {other:?}"),
+        }
+        assert_eq!(c.inbox_dropped(), 1, "exactly the over-cap frame is dropped");
+        assert_eq!(c.inflight(), 0, "the ack is still consumed while reporting overflow");
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn auth_token_turns_opens_into_open_auth() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            match read_req(&mut sock, &mut buf) {
+                Frame::OpenAuth { resume: None, token } => assert_eq!(token, "hunter2"),
+                other => panic!("expected OpenAuth, got {other:?}"),
+            }
+            sock.write_all(&Frame::Opened { stream: 9 }.encode()).unwrap();
+            match read_req(&mut sock, &mut buf) {
+                Frame::OpenAuth { resume: Some(9), token } => assert_eq!(token, "hunter2"),
+                other => panic!("expected OpenAuth resume, got {other:?}"),
+            }
+            sock.write_all(&Frame::Opened { stream: 9 }.encode()).unwrap();
+            // clearing the token goes back to plain OPEN on the wire
+            assert!(matches!(read_req(&mut sock, &mut buf), Frame::Open { resume: None }));
+            sock.write_all(&Frame::Opened { stream: 10 }.encode()).unwrap();
+        });
+        let mut c = NetClient::connect(addr).unwrap();
+        c.set_auth_token("hunter2");
+        assert_eq!(c.open().unwrap(), 9);
+        assert_eq!(c.open_resume(9).unwrap(), 9);
+        c.set_auth_token("");
+        assert_eq!(c.open().unwrap(), 10);
+        server.join().unwrap();
     }
 
     #[test]

@@ -4,14 +4,20 @@
 //! deployment shape the paper's real-time-inference pitch implies.
 //!
 //! ```text
-//!   remote clients ──► net::client::NetClient (blocking; also: any
-//!        │             implementation of net::proto over TCP)
-//!        │  OPEN / PUSH / CLOSE / METRICS / SHUTDOWN
+//!   remote clients ──► net::client::NetClient (pipelined: many
+//!        │             in-flight requests, bounded demux inbox; also:
+//!        │             any implementation of net::proto over TCP)
+//!        │  OPEN(+token) / PUSH / CLOSE / METRICS / SHUTDOWN
 //!        │  ◄─ OPENED / PUSH_OK / TICK / typed ERROR frames
 //!        ▼
-//!   net::server::NetServer (acceptor + per-connection reader/writer
-//!        │                  threads + per-stream tick forwarders;
-//!        │                  owns one engine Session per client stream)
+//!   net::server::NetServer
+//!        │  ┌─ "deepcot-net-poll" readiness loop (net::poller —
+//!        │  │   std-only epoll/poll shim): accepts, nonblocking
+//!        │  │   reads/writes, per-connection write queues, tick
+//!        │  │   multiplexing via Session::split_receiver, idle reaping
+//!        │  └─ "deepcot-net-worker-0..N" fixed pool (size from
+//!        │      EngineConfig): decodes frames, drives the engine,
+//!        │      one job in flight per connection (strict FIFO)
 //!        ▼
 //!   EngineHandle (cluster front door)
 //!        │  ShardRouter: placement, migration, rebalance
@@ -21,11 +27,16 @@
 //! ```
 //!
 //! Layering: [`proto`] is the pure codec (length-prefixed binary
-//! frames, typed error mapping, zero-alloc hot-path readers/writers);
-//! [`server`] owns the threads and the engine sessions; [`client`] is
-//! the blocking reference client. The engine is untouched — the server
-//! is just another `EngineHandle` user, so everything the cluster
-//! pins (bitwise layout-independence, migration transparency,
+//! frames, typed error mapping, zero-alloc hot-path readers/writers —
+//! byte-identical since PR 5, the executor rewrite changed nothing on
+//! the wire); [`poller`] is the readiness shim; [`server`] owns the
+//! poll thread, the worker pool, and the engine sessions; [`client`]
+//! is the pipelined reference client. Thread count is O(workers), not
+//! O(connections): admission control (connection limits, per-connection
+//! stream quotas, optional shared-secret OPEN auth) is the server's,
+//! not the OS scheduler's. The engine is untouched — the server is
+//! just another `EngineHandle` user, so everything the cluster pins
+//! (bitwise layout-independence, migration transparency,
 //! drain-on-shutdown) holds identically for TCP streams, which
 //! `tests/net.rs` pins end-to-end over loopback.
 //!
@@ -38,5 +49,6 @@
 //! [`EngineError::Backpressure`]: crate::coordinator::session::EngineError::Backpressure
 
 pub mod client;
+pub mod poller;
 pub mod proto;
 pub mod server;

@@ -256,6 +256,23 @@ pub enum Frame {
         /// Hibernated stream to resume, or `None` for a fresh open.
         resume: Option<u64>,
     },
+    /// [`Frame::Open`] carrying the server's shared-secret token —
+    /// required as a connection's first request when the server is
+    /// started with an auth token, accepted (token ignored) otherwise.
+    /// Encodes as `OP_OPEN` with a body of `[resume u64 LE (0 =
+    /// fresh)][token UTF-8, non-empty]` — strictly longer than 8
+    /// bytes, so the fresh (empty) and resume (8-byte) forms of the
+    /// original protocol are untouched and every older capture still
+    /// decodes identically. An empty token must use [`Frame::Open`]
+    /// (an empty-token `OpenAuth` would be indistinguishable from a
+    /// plain resume on the wire).
+    OpenAuth {
+        /// Hibernated stream to resume, or `None` for a fresh open
+        /// (encoded as resume id 0).
+        resume: Option<u64>,
+        /// The shared secret (non-empty).
+        token: String,
+    },
     /// Push the next token vector for a stream.
     Push {
         /// Target stream id (from [`Frame::Opened`]).
@@ -451,6 +468,13 @@ impl<'a> RawFrame<'a> {
             OP_OPEN => match b.len() {
                 0 => Frame::Open { resume: None },
                 8 => Frame::Open { resume: Some(get_u64(b, 0, self.op)?) },
+                n if n > 8 => {
+                    // authenticated open: resume id (0 = fresh) + token
+                    let id = get_u64(b, 0, self.op)?;
+                    let token =
+                        std::str::from_utf8(&b[8..]).map_err(|_| ProtoError::BadUtf8)?.to_string();
+                    Frame::OpenAuth { resume: if id == 0 { None } else { Some(id) }, token }
+                }
                 _ => {
                     return Err(ProtoError::BadPayload(
                         "OPEN body must be empty (fresh) or an 8-byte resume id",
@@ -540,6 +564,12 @@ impl Frame {
                 if let Some(id) = resume {
                     put_u64(out, *id);
                 }
+            }
+            Frame::OpenAuth { resume, token } => {
+                debug_assert!(!token.is_empty(), "empty token: use Frame::Open");
+                out.push(OP_OPEN);
+                put_u64(out, resume.unwrap_or(0));
+                out.extend_from_slice(token.as_bytes());
             }
             Frame::Metrics => out.push(OP_METRICS),
             Frame::MetricsProm => out.push(OP_METRICS_PROM),
@@ -800,5 +830,34 @@ mod tests {
         let mut ok: &[u8] = &enc;
         assert!(read_frame(&mut ok, &mut buf).unwrap());
         assert_eq!(Frame::decode(&buf).unwrap(), Frame::Opened { stream: 3 });
+    }
+
+    #[test]
+    fn open_auth_round_trips_and_leaves_plain_open_untouched() {
+        // fresh authenticated open: resume id 0 on the wire
+        let f = Frame::OpenAuth { resume: None, token: "s3cret".into() };
+        let enc = f.encode();
+        assert_eq!(enc[4], OP_OPEN, "OpenAuth shares the OPEN opcode");
+        assert_eq!(Frame::decode(&enc[4..]).unwrap(), f);
+        // authenticated resume
+        let f = Frame::OpenAuth { resume: Some(42), token: "s3cret".into() };
+        let enc = f.encode();
+        assert_eq!(Frame::decode(&enc[4..]).unwrap(), f);
+        // plain opens are byte-identical to the pre-auth protocol
+        assert_eq!(Frame::Open { resume: None }.encode(), vec![1, 0, 0, 0, OP_OPEN]);
+        let resumed = Frame::Open { resume: Some(7) }.encode();
+        assert_eq!(resumed.len(), 4 + 1 + 8);
+        assert_eq!(Frame::decode(&resumed[4..]).unwrap(), Frame::Open { resume: Some(7) });
+        // 1..=7 byte OPEN bodies stay rejected (auth needs > 8)
+        for n in 1..=7 {
+            let mut b = vec![OP_OPEN];
+            b.resize(1 + n, 0);
+            assert!(Frame::decode(&b).is_err(), "{n}-byte OPEN body must stay invalid");
+        }
+        // non-UTF-8 token bytes reject cleanly
+        let mut bad = vec![OP_OPEN];
+        bad.extend_from_slice(&0u64.to_le_bytes());
+        bad.extend_from_slice(&[0xff, 0xfe]);
+        assert_eq!(Frame::decode(&bad), Err(ProtoError::BadUtf8));
     }
 }

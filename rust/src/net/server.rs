@@ -1,21 +1,23 @@
-//! The TCP front door: a multi-threaded server exposing the serving
-//! cluster over `net::proto`.
+//! The TCP front door: a readiness-loop executor exposing the serving
+//! cluster over `net::proto` (the wire protocol is unchanged from the
+//! thread-per-connection era — only the machinery under it moved).
 //!
-//! Thread layout:
+//! Thread layout — O(workers), never O(connections):
 //!
 //! ```text
-//!   acceptor ──► one reader thread per connection
-//!                  │ owns: the socket's read half, the connection's
-//!                  │ engine Sessions (push/close halves), a reusable
-//!                  │ frame buffer
-//!                  │
-//!                  ├─► writer thread (socket write half): serializes
-//!                  │   every reply through one mpsc queue into one
-//!                  │   reusable encode buffer
-//!                  │
-//!                  └─► one forwarder thread per open stream: blocks on
-//!                      the split TickReceiver, relays TickResults to
-//!                      the writer as TICK frames
+//!   deepcot-net-poll ──── the executor: one thread, one poller
+//!     │  accepts nonblocking sockets (connection limit, auth/quota
+//!     │  config), reads length-prefixed frames into per-connection
+//!     │  job queues, flushes per-connection write queues, pumps
+//!     │  split TickReceivers into TICK frames, reaps idle
+//!     │  connections, and tears finished connections down
+//!     │
+//!     ├──► deepcot-net-worker-0..N ── fixed pool (N from NetConfig):
+//!     │      decode → engine dispatch → encode, one job in flight
+//!     │      per connection (strict FIFO, so replies leave in
+//!     │      request order — the pipelined client counts on it)
+//!     │
+//!     └──◄ completions return over a channel + waker wake-up
 //! ```
 //!
 //! Error discipline: engine failures reply typed [`WireError`] frames
@@ -30,37 +32,62 @@
 //! resynchronization is impossible. Nothing the client sends can panic
 //! the server.
 //!
-//! Allocation posture: frame decode and encode run in per-thread
-//! reusable buffers (the codec's zero-alloc contract, pinned in
-//! `tests/zero_alloc.rs`); the remaining steady-state allocations per
-//! push are engine-API costs — the owned `Vec<f32>` a `Session::push`
-//! consumes and the mpsc node per reply message — not codec work.
+//! Admission control: beyond [`NetConfig::max_conns`] the acceptor
+//! answers a best-effort `Saturated` and drops the socket; OPEN beyond
+//! [`NetConfig::max_streams_per_conn`] answers `Saturated` with the
+//! quota as capacity; with [`NetConfig::auth_token`] configured every
+//! frame is rejected (and the connection torn down) until the
+//! connection's first OPEN carrying the matching token.
 //!
-//! Shutdown discipline ([`NetServer::shutdown`]): stop accepting, then
-//! sever every connection's read half — each reader wakes, announces a
-//! terminal `ShuttingDown` error for every stream still open on its
-//! connection (flushed by its writer before the socket closes), closes
-//! its sessions, and joins its helper threads. Clients mid-stream get
-//! a typed terminal error followed by EOF, never a hang.
+//! Backpressure: a connection with [`JOB_QUEUE_CAP`] undispatched
+//! frames stops being read (its socket buffer, then the client,
+//! fills); a write queue past [`WRITE_QUEUE_CAP`] — a client that
+//! stopped reading — is torn down and counted in
+//! `write_overflows`. Idle connections with no open streams are
+//! reaped after [`NetConfig::idle_timeout`] (slow-loris defense), as
+//! before the rewrite.
+//!
+//! Shutdown discipline ([`NetServer::shutdown`]): stop accepting,
+//! announce a terminal `ShuttingDown` error for every stream still
+//! open (flushed before the socket closes), close the engine
+//! sessions, give write queues a short drain grace, then close every
+//! socket and join the pool. Clients mid-stream get a typed terminal
+//! error followed by EOF, never a hang.
 
-use std::collections::BTreeMap;
-use std::io::{self, Write};
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant, SystemTime};
 
+use crate::config::EngineConfig;
 use crate::coordinator::cluster::EngineHandle;
 use crate::coordinator::session::{EngineError, Session, TickReceiver};
-use crate::coordinator::shard::TickResult;
 use crate::fault::{FaultInjector, FaultSite};
+use crate::net::poller::{waker_pair, PollEvent, Poller, WakeReader, Waker};
 use crate::net::proto::{self, Frame, RawFrame, WireError};
 use crate::obs::expo;
 use crate::obs::journal::EventKind;
 use crate::obs::span::{Stage, StageSpans};
 use crate::obs::{ObsHandle, ObsLevel};
+
+/// Undispatched frames a connection may queue before the executor
+/// stops reading its socket (resumes at half this).
+pub const JOB_QUEUE_CAP: usize = 1024;
+
+/// Pending write-queue bytes past which a connection that stopped
+/// reading is torn down instead of buffered forever.
+pub const WRITE_QUEUE_CAP: u64 = 64 * 1024 * 1024;
+
+/// Ticks relayed per stream per executor pass (fairness bound).
+const PUMP_BATCH: usize = 64;
+
+/// How long the drain phase of a graceful shutdown waits for write
+/// queues to flush before force-closing sockets.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(1);
 
 /// Shared atomic counters (per-connection accounting rolls up here),
 /// plus the net layer's boot clocks and its decode/encode stage spans.
@@ -73,6 +100,16 @@ struct Counters {
     streams_opened: AtomicU64,
     shutdown_requests: AtomicU64,
     idle_conns_reaped: AtomicU64,
+    connections_rejected: AtomicU64,
+    auth_failures: AtomicU64,
+    quota_rejected: AtomicU64,
+    write_overflows: AtomicU64,
+    workers: AtomicU64,
+    jobs_depth: AtomicU64,
+    jobs_depth_peak: AtomicU64,
+    write_queue_bytes: AtomicU64,
+    write_queue_peak: AtomicU64,
+    polls: AtomicU64,
     boot: Instant,
     boot_unix_ms: u64,
     level: ObsLevel,
@@ -96,10 +133,31 @@ pub struct NetMetrics {
     pub streams_opened: u64,
     /// SHUTDOWN frames honored.
     pub shutdown_requests: u64,
-    /// Idle connections with no open streams reaped by the read-timeout
-    /// sweep (slow-loris defense; a connection holding streams is never
-    /// reaped).
+    /// Idle connections with no open streams reaped by the executor's
+    /// idle sweep (slow-loris defense; a connection holding streams is
+    /// never reaped).
     pub idle_conns_reaped: u64,
+    /// Connections refused: over the connection limit, or a socket
+    /// option the server requires (nonblocking mode) failed.
+    pub connections_rejected: u64,
+    /// Frames rejected for a missing or wrong shared-secret token.
+    pub auth_failures: u64,
+    /// OPENs refused by the per-connection stream quota.
+    pub quota_rejected: u64,
+    /// Connections torn down for exceeding [`WRITE_QUEUE_CAP`].
+    pub write_overflows: u64,
+    /// Fixed worker-pool size serving this front door.
+    pub workers: u64,
+    /// Jobs queued or in flight at the last executor pass.
+    pub jobs_depth: u64,
+    /// High-water mark of `jobs_depth`.
+    pub jobs_depth_peak: u64,
+    /// Write-queue bytes pending at the last executor pass.
+    pub write_queue_bytes: u64,
+    /// High-water mark of `write_queue_bytes`.
+    pub write_queue_peak: u64,
+    /// Executor poll-loop passes since start.
+    pub polls: u64,
     /// Time since the net front door started.
     pub uptime: Duration,
     /// Wall-clock start of the net front door, ms since the Unix epoch.
@@ -114,7 +172,8 @@ impl NetMetrics {
     pub fn report(&self) -> String {
         format!(
             "net: conns={}/{} frames={}in/{}out proto_errors={} streams={} shutdown_reqs={} \
-             idle_reaped={}",
+             idle_reaped={} rejected={} auth_failed={} quota_rejected={} write_overflows={} \
+             workers={} jobs_depth={}/{} write_queue={}B/{}B polls={}",
             self.connections_active,
             self.connections_accepted,
             self.frames_in,
@@ -123,6 +182,16 @@ impl NetMetrics {
             self.streams_opened,
             self.shutdown_requests,
             self.idle_conns_reaped,
+            self.connections_rejected,
+            self.auth_failures,
+            self.quota_rejected,
+            self.write_overflows,
+            self.workers,
+            self.jobs_depth,
+            self.jobs_depth_peak,
+            self.write_queue_bytes,
+            self.write_queue_peak,
+            self.polls,
         )
     }
 }
@@ -142,6 +211,16 @@ impl Counters {
             streams_opened: AtomicU64::new(0),
             shutdown_requests: AtomicU64::new(0),
             idle_conns_reaped: AtomicU64::new(0),
+            connections_rejected: AtomicU64::new(0),
+            auth_failures: AtomicU64::new(0),
+            quota_rejected: AtomicU64::new(0),
+            write_overflows: AtomicU64::new(0),
+            workers: AtomicU64::new(0),
+            jobs_depth: AtomicU64::new(0),
+            jobs_depth_peak: AtomicU64::new(0),
+            write_queue_bytes: AtomicU64::new(0),
+            write_queue_peak: AtomicU64::new(0),
+            polls: AtomicU64::new(0),
             boot: Instant::now(),
             boot_unix_ms,
             level,
@@ -167,6 +246,16 @@ impl Counters {
             streams_opened: self.streams_opened.load(Ordering::Relaxed),
             shutdown_requests: self.shutdown_requests.load(Ordering::Relaxed),
             idle_conns_reaped: self.idle_conns_reaped.load(Ordering::Relaxed),
+            connections_rejected: self.connections_rejected.load(Ordering::Relaxed),
+            auth_failures: self.auth_failures.load(Ordering::Relaxed),
+            quota_rejected: self.quota_rejected.load(Ordering::Relaxed),
+            write_overflows: self.write_overflows.load(Ordering::Relaxed),
+            workers: self.workers.load(Ordering::Relaxed),
+            jobs_depth: self.jobs_depth.load(Ordering::Relaxed),
+            jobs_depth_peak: self.jobs_depth_peak.load(Ordering::Relaxed),
+            write_queue_bytes: self.write_queue_bytes.load(Ordering::Relaxed),
+            write_queue_peak: self.write_queue_peak.load(Ordering::Relaxed),
+            polls: self.polls.load(Ordering::Relaxed),
             uptime: self.boot.elapsed(),
             boot_unix_ms: self.boot_unix_ms,
             spans: self.spans.lock().unwrap_or_else(|p| p.into_inner()).clone(),
@@ -189,140 +278,174 @@ impl NetMetricsHandle {
     }
 }
 
-/// What travels to a connection's writer thread. Tick results ride as
-/// their engine form and are serialized in the writer's one reusable
-/// buffer (no intermediate encode per message).
-enum Reply {
-    Frame(Frame),
-    Tick { stream: u64, result: TickResult },
-}
-
-struct StreamEntry {
-    sess: Session,
-    /// Set before a deliberate close so the forwarder exits silently
-    /// instead of reporting the disconnect as an error.
-    closed: Arc<AtomicBool>,
-    forwarder: JoinHandle<()>,
-}
-
-/// Live connections: the accepted socket (kept for severing its read
-/// half at shutdown) and the reader thread's join handle.
-type ConnRegistry = Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>;
-
-/// The running TCP front door. Start with [`NetServer::start`]; stop
-/// with [`NetServer::shutdown`] (graceful drain).
-pub struct NetServer {
-    addr: SocketAddr,
-    shutting_down: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
-    conns: ConnRegistry,
-    counters: Arc<Counters>,
-    shutdown_req_rx: Receiver<()>,
-}
-
 /// How long a connection may sit with zero open streams and zero
 /// inbound bytes before the server reaps it (slow-loris defense).
 pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
+/// Tuning knobs for the executor front door. Build one with
+/// [`NetConfig::from_engine`] (the `net_*` `EngineConfig` knobs) or
+/// field-by-field from `Default`, and start with
+/// [`NetServer::start_with`].
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Worker threads decoding frames and driving the engine. `0`
+    /// sizes from `available_parallelism`, clamped to `2..=8`.
+    pub workers: usize,
+    /// Hard cap on concurrently served connections; beyond it the
+    /// acceptor answers a best-effort `Saturated` and drops the
+    /// socket.
+    pub max_conns: usize,
+    /// Per-connection open-stream quota; OPEN beyond it answers
+    /// `Saturated` with this quota as the capacity.
+    pub max_streams_per_conn: usize,
+    /// Shared-secret OPEN token. `Some(_)` rejects every frame until
+    /// the connection's first OPEN carrying the matching token;
+    /// `None` serves unauthenticated (the default, wire-compatible
+    /// with every prior client).
+    pub auth_token: Option<String>,
+    /// Idle-connection reap window (see [`DEFAULT_IDLE_TIMEOUT`]).
+    pub idle_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            workers: 0,
+            max_conns: 16_384,
+            max_streams_per_conn: 1024,
+            auth_token: None,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Lift the `net_*` knobs out of an [`EngineConfig`] (an empty
+    /// `net_auth_token` means no authentication).
+    pub fn from_engine(cfg: &EngineConfig) -> NetConfig {
+        NetConfig {
+            workers: cfg.net_workers,
+            max_conns: cfg.net_max_conns,
+            max_streams_per_conn: cfg.net_max_streams_per_conn,
+            auth_token: if cfg.net_auth_token.is_empty() {
+                None
+            } else {
+                Some(cfg.net_auth_token.clone())
+            },
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
+        }
+    }
+
+    fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8)
+        }
+    }
+}
+
+/// The running TCP front door. Start with [`NetServer::start`] (or
+/// [`NetServer::start_with`] for tuned limits); stop with
+/// [`NetServer::shutdown`] (graceful drain).
+pub struct NetServer {
+    addr: SocketAddr,
+    shutting_down: Arc<AtomicBool>,
+    waker: Waker,
+    executor: Option<JoinHandle<()>>,
+    counters: Arc<Counters>,
+    shutdown_req_rx: Receiver<()>,
+}
+
 impl NetServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
-    /// accepting connections against the given engine front door.
-    /// Connections idle past [`DEFAULT_IDLE_TIMEOUT`] with no open
-    /// streams are reaped; use [`NetServer::start_with_idle_timeout`]
-    /// to tune that window.
+    /// accepting connections against the given engine front door, with
+    /// default [`NetConfig`] limits. Connections idle past
+    /// [`DEFAULT_IDLE_TIMEOUT`] with no open streams are reaped; use
+    /// [`NetServer::start_with_idle_timeout`] to tune that window or
+    /// [`NetServer::start_with`] for the full knob set.
     pub fn start<A: ToSocketAddrs>(addr: A, engine: EngineHandle) -> io::Result<NetServer> {
-        Self::start_with_idle_timeout(addr, engine, DEFAULT_IDLE_TIMEOUT)
+        Self::start_with(addr, engine, NetConfig::default())
     }
 
     /// [`NetServer::start`] with an explicit idle-connection timeout. A
     /// connection that has sent no bytes for `idle_timeout` AND holds
     /// no open streams is closed and counted in
     /// [`NetMetrics::idle_conns_reaped`] — a half-open or deliberately
-    /// slow client cannot pin a reader thread + fd forever. A
-    /// connection with open streams is never reaped, however quiet
-    /// (streaming clients legitimately sit idle between pushes).
+    /// slow client cannot pin an fd forever. A connection with open
+    /// streams is never reaped, however quiet (streaming clients
+    /// legitimately sit idle between pushes).
     pub fn start_with_idle_timeout<A: ToSocketAddrs>(
         addr: A,
         engine: EngineHandle,
         idle_timeout: Duration,
     ) -> io::Result<NetServer> {
+        Self::start_with(addr, engine, NetConfig { idle_timeout, ..NetConfig::default() })
+    }
+
+    /// Bind and serve with explicit [`NetConfig`] limits: worker-pool
+    /// size, connection cap, per-connection stream quota, shared
+    /// OPEN token, and the idle-reap window.
+    pub fn start_with<A: ToSocketAddrs>(
+        addr: A,
+        engine: EngineHandle,
+        cfg: NetConfig,
+    ) -> io::Result<NetServer> {
         let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let mut poller = Poller::new()?;
+        let (waker, wake_rx) = waker_pair()?;
+        poller.register(&listener, TOKEN_LISTENER, true, false)?;
+        poller.register(&wake_rx, TOKEN_WAKER, true, false)?;
+
         let shutting_down = Arc::new(AtomicBool::new(false));
-        let conns: ConnRegistry = Arc::default();
         let counters = Arc::new(Counters::new(engine.obs().level()));
-        let (shutdown_req_tx, shutdown_req_rx) = mpsc::channel();
-        let acceptor = {
-            let shutting_down = Arc::clone(&shutting_down);
-            let conns = Arc::clone(&conns);
-            let counters = Arc::clone(&counters);
-            std::thread::Builder::new().name("deepcot-net-acceptor".into()).spawn(move || {
-                loop {
-                    let sock = match listener.accept() {
-                        Ok((sock, _peer)) => sock,
-                        Err(_) if shutting_down.load(Ordering::SeqCst) => return,
-                        Err(_) => {
-                            // persistent accept failures (e.g. EMFILE)
-                            // must not busy-spin a core
-                            std::thread::sleep(Duration::from_millis(10));
-                            continue;
-                        }
-                    };
-                    if shutting_down.load(Ordering::SeqCst) {
-                        // the wake-up connection (or a late client):
-                        // drop it and stop accepting
-                        return;
-                    }
-                    counters.connections_accepted.fetch_add(1, Ordering::Relaxed);
-                    counters.connections_active.fetch_add(1, Ordering::Relaxed);
-                    let _ = sock.set_nodelay(true);
-                    let reader_sock = match sock.try_clone() {
-                        Ok(s) => s,
-                        Err(_) => {
-                            counters.connections_active.fetch_sub(1, Ordering::Relaxed);
-                            continue;
-                        }
-                    };
-                    let engine = engine.clone();
-                    let shutting_down2 = Arc::clone(&shutting_down);
-                    let counters2 = Arc::clone(&counters);
-                    let shutdown_req = shutdown_req_tx.clone();
-                    let spawned =
-                        std::thread::Builder::new().name("deepcot-net-conn".into()).spawn(
-                            move || {
-                                conn_main(
-                                    reader_sock,
-                                    engine,
-                                    shutting_down2,
-                                    Arc::clone(&counters2),
-                                    shutdown_req,
-                                    idle_timeout,
-                                );
-                                counters2.connections_active.fetch_sub(1, Ordering::Relaxed);
-                            },
-                        );
-                    match spawned {
-                        Ok(handle) => {
-                            let mut reg = conns.lock().unwrap_or_else(|p| p.into_inner());
-                            // prune finished connections so a long-lived
-                            // server doesn't accumulate one fd + handle
-                            // per connection it ever served (the dropped
-                            // socket clone releases the kernel socket)
-                            reg.retain(|(_, h)| !h.is_finished());
-                            reg.push((sock, handle));
-                        }
-                        Err(_) => {
-                            counters.connections_active.fetch_sub(1, Ordering::Relaxed);
-                        }
-                    }
-                }
-            })?
+        let workers_n = cfg.resolved_workers();
+        counters.workers.store(workers_n as u64, Ordering::Relaxed);
+
+        let (work_tx, work_rx) = mpsc::channel::<Job>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (comp_tx, comp_rx) = mpsc::channel::<Completion>();
+        let (shutdown_req_tx, shutdown_req_rx) = mpsc::channel::<()>();
+
+        let mut worker_handles = Vec::with_capacity(workers_n);
+        for i in 0..workers_n {
+            let cx = WorkerCtx {
+                engine: engine.clone(),
+                counters: Arc::clone(&counters),
+                obs: engine.obs().clone(),
+                comp_tx: comp_tx.clone(),
+                shutdown_req_tx: shutdown_req_tx.clone(),
+                waker: waker.clone(),
+                auth_token: cfg.auth_token.clone(),
+                max_streams_per_conn: cfg.max_streams_per_conn,
+            };
+            let rx = Arc::clone(&work_rx);
+            worker_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("deepcot-net-worker-{i}"))
+                    .spawn(move || worker_main(rx, cx))?,
+            );
+        }
+
+        let sh = ExecShared {
+            counters: Arc::clone(&counters),
+            obs: engine.obs().clone(),
+            inj: engine.fault(),
+            cfg,
+            shutting_down: Arc::clone(&shutting_down),
+            work_tx,
         };
+        let executor = std::thread::Builder::new()
+            .name("deepcot-net-poll".into())
+            .spawn(move || run_executor(listener, poller, wake_rx, comp_rx, worker_handles, sh))?;
+
         Ok(NetServer {
             addr,
             shutting_down,
-            acceptor: Some(acceptor),
-            conns,
+            waker,
+            executor: Some(executor),
             counters,
             shutdown_req_rx,
         })
@@ -347,7 +470,7 @@ impl NetServer {
     /// Block until some client sends a SHUTDOWN frame, or `timeout`
     /// passes (`true` = shutdown was requested). The server keeps
     /// serving either way — pair with [`NetServer::shutdown`]. A
-    /// defunct acceptor (every request source gone) also reports
+    /// defunct worker pool (every request source gone) also reports
     /// `true`: there is nothing left to wait for but the drain.
     pub fn wait_shutdown_requested(&self, timeout: Duration) -> bool {
         match self.shutdown_req_rx.recv_timeout(timeout) {
@@ -357,36 +480,20 @@ impl NetServer {
         }
     }
 
-    /// Graceful drain: stop accepting, sever every connection's read
-    /// half (each reader announces terminal `ShuttingDown` errors for
-    /// its live streams and closes its sessions), and join every
-    /// thread. Engine shutdown is the caller's (the engine may outlive
-    /// the front door).
+    /// Graceful drain: stop accepting, announce terminal
+    /// `ShuttingDown` errors for live streams and close their engine
+    /// sessions, flush write queues (bounded grace), close every
+    /// socket, and join the executor and worker pool. Engine shutdown
+    /// is the caller's (the engine may outlive the front door).
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     fn stop(&mut self) {
-        if self.shutting_down.swap(true, Ordering::SeqCst) {
-            return;
-        }
-        // wake the acceptor out of accept(); it sees the flag and exits
-        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
-        }
-        let conns = {
-            let mut reg = self.conns.lock().unwrap_or_else(|p| p.into_inner());
-            std::mem::take(&mut *reg)
-        };
-        for (sock, _) in &conns {
-            // readers wake with EOF/error and run their drain path;
-            // their writers still own a live write half for the
-            // terminal error frames
-            let _ = sock.shutdown(Shutdown::Read);
-        }
-        for (_, handle) in conns {
-            let _ = handle.join();
+        self.shutting_down.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
         }
     }
 }
@@ -397,328 +504,924 @@ impl Drop for NetServer {
     }
 }
 
-/// One connection's reader loop: decode → dispatch → reply. Owns the
-/// connection's sessions; spawns its writer and per-stream forwarders.
-fn conn_main(
-    sock: TcpStream,
-    engine: EngineHandle,
-    shutting_down: Arc<AtomicBool>,
-    counters: Arc<Counters>,
-    shutdown_req: Sender<()>,
-    idle_timeout: Duration,
-) {
-    let Ok(write_sock) = sock.try_clone() else { return };
-    let inj = engine.fault();
-    let (wtx, wrx) = mpsc::channel::<Reply>();
-    let writer = {
-        let counters = Arc::clone(&counters);
-        let inj = inj.clone();
-        std::thread::Builder::new()
-            .name("deepcot-net-writer".into())
-            .spawn(move || writer_main(write_sock, wrx, counters, inj))
-    };
-    let Ok(writer) = writer else { return };
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
 
-    let mut sock = sock;
-    // a bounded read timeout turns the blocking reader into a periodic
-    // idle sweep: read_frame returns the timeout untouched at a frame
-    // boundary (retryable), so each tick we can check idleness and the
-    // shutdown flag without ever tearing a frame
-    let tick = idle_timeout.min(Duration::from_secs(5)).max(Duration::from_millis(10));
-    let _ = sock.set_read_timeout(Some(tick));
-    let mut last_activity = Instant::now();
-    let mut streams: BTreeMap<u64, StreamEntry> = BTreeMap::new();
-    let mut frame_buf: Vec<u8> = Vec::with_capacity(4096);
-    let obs = engine.obs().clone();
-    let spans_on = counters.spans_on();
-    loop {
-        match proto::read_frame(&mut sock, &mut frame_buf) {
-            Ok(true) => last_activity = Instant::now(),
-            // clean client EOF: the connection is over
-            Ok(false) => break,
-            // boundary timeout: no frame bytes consumed — an idle tick,
-            // not an error. Reap only truly abandoned connections:
-            // quiet past the deadline AND holding no streams (a
-            // streaming client legitimately idles between pushes).
-            Err(e)
-                if e.kind() == io::ErrorKind::WouldBlock
-                    || e.kind() == io::ErrorKind::TimedOut =>
-            {
-                if shutting_down.load(Ordering::SeqCst) {
-                    break;
-                }
-                let idle = last_activity.elapsed();
-                if streams.is_empty() && idle >= idle_timeout {
-                    counters.idle_conns_reaped.fetch_add(1, Ordering::Relaxed);
-                    obs.event(EventKind::ConnReaped, 0, -1, idle.as_millis() as u64);
-                    break;
-                }
-                continue;
-            }
-            // torn frame, severed socket, or an undecodable length
-            // prefix: the connection is over (a bad prefix cannot be
-            // resynchronized; a mid-frame timeout arrives here as
-            // UnexpectedEof — the stream is desynchronized)
-            Err(_) => break,
+/// One stream's engine session, as the worker pool sees it.
+struct CoreEntry {
+    sess: Session,
+    /// Set before a deliberate close so the executor's pump drains the
+    /// tail silently instead of reporting the disconnect as an error.
+    closed: Arc<AtomicBool>,
+}
+
+/// The worker-facing half of a connection: its engine sessions and
+/// auth state, behind one mutex a worker holds for a whole job (so
+/// teardown serializes behind in-flight engine calls).
+#[derive(Default)]
+struct ConnCore {
+    sessions: BTreeMap<u64, CoreEntry>,
+    /// Torn down: jobs still in flight complete as no-ops.
+    dead: bool,
+    /// Passed the shared-token gate (always false until the first
+    /// authenticated OPEN when a token is configured).
+    authed: bool,
+}
+
+/// One inbound frame (opcode + body, prefix stripped) bound for the
+/// worker pool.
+struct Job {
+    conn: u64,
+    frame: Vec<u8>,
+    core: Arc<Mutex<ConnCore>>,
+}
+
+/// Executor-side state changes a worker's job produced.
+enum Effect {
+    /// A new stream: pump its TickReceiver into this connection.
+    StreamOpened { stream: u64, rx: TickReceiver, closed: Arc<AtomicBool> },
+    /// A deliberate close: drain the pump's buffered tail (in order,
+    /// ahead of the CLOSED reply) and drop it.
+    StreamClosed { stream: u64 },
+    /// Tear the connection down once the reply is flushed (auth
+    /// failure).
+    Teardown,
+}
+
+/// A worker's result: the encoded reply bytes (possibly empty) plus
+/// side effects for the executor.
+struct Completion {
+    conn: u64,
+    reply: Vec<u8>,
+    effects: Vec<Effect>,
+}
+
+/// Executor-owned per-connection state.
+struct Conn {
+    sock: TcpStream,
+    /// Unparsed inbound bytes (frames are extracted incrementally).
+    rbuf: Vec<u8>,
+    /// Pending outbound bytes; `out[out_off..]` is unwritten.
+    out: Vec<u8>,
+    out_off: usize,
+    /// Extracted frames awaiting a worker, strict FIFO.
+    jobs: VecDeque<Vec<u8>>,
+    /// One job in flight at the pool (reply order == request order).
+    busy: bool,
+    core: Arc<Mutex<ConnCore>>,
+    /// Live pump count for this connection (idle-reap gate).
+    streams: usize,
+    last_activity: Instant,
+    /// Job queue at cap: socket reads suspended.
+    paused: bool,
+    read_closed: bool,
+    /// Finish queued work, flush, then tear down.
+    closing: bool,
+    /// NetWrite fault fired: half a frame is on the queue; enqueue
+    /// nothing more, flush, tear down (the client must detect the
+    /// desync).
+    poisoned: bool,
+    /// Tear down now, no flush (write error / overflow).
+    kill: bool,
+    cur_r: bool,
+    cur_w: bool,
+}
+
+impl Conn {
+    fn new(sock: TcpStream) -> Conn {
+        Conn {
+            sock,
+            rbuf: Vec::with_capacity(4096),
+            out: Vec::with_capacity(4096),
+            out_off: 0,
+            jobs: VecDeque::new(),
+            busy: false,
+            core: Arc::new(Mutex::new(ConnCore::default())),
+            streams: 0,
+            last_activity: Instant::now(),
+            paused: false,
+            read_closed: false,
+            closing: false,
+            poisoned: false,
+            kill: false,
+            cur_r: true,
+            cur_w: false,
         }
-        if inj.fire(FaultSite::NetRead) {
-            // injected transport fault: behave exactly like a socket
-            // read error — tear the connection down through the normal
-            // drain path (clients must recover via reconnect + resume)
+    }
+}
+
+/// A split TickReceiver the executor polls into its connection's
+/// write queue (the forwarder-thread replacement).
+struct Pump {
+    conn: u64,
+    rx: TickReceiver,
+    closed: Arc<AtomicBool>,
+    /// Encoded CLOSED reply held back until the stream's channel goes
+    /// terminal, so every queued tick reaches the wire first — the
+    /// order the old forwarder-join guaranteed. (The client never
+    /// pipelines past a CLOSE, so the reply-order deviation is
+    /// unobservable.)
+    terminal: Option<Vec<u8>>,
+}
+
+/// Context shared by the executor's helper functions.
+struct ExecShared {
+    counters: Arc<Counters>,
+    obs: ObsHandle,
+    inj: FaultInjector,
+    cfg: NetConfig,
+    shutting_down: Arc<AtomicBool>,
+    work_tx: Sender<Job>,
+}
+
+/// Incrementally maintained gauges (never recomputed O(conns)).
+#[derive(Default)]
+struct Totals {
+    jobs: u64,
+    wq: u64,
+}
+
+fn conn_finished(conn: &Conn) -> bool {
+    conn.kill
+        || (conn.closing && !conn.busy && conn.jobs.is_empty() && conn.out_off >= conn.out.len())
+}
+
+fn update_interest(poller: &mut Poller, token: u64, conn: &mut Conn) {
+    let want_r = !conn.read_closed && !conn.paused;
+    let want_w = conn.out_off < conn.out.len();
+    if (want_r != conn.cur_r || want_w != conn.cur_w)
+        && poller.modify(&conn.sock, token, want_r, want_w).is_ok()
+    {
+        conn.cur_r = want_r;
+        conn.cur_w = want_w;
+    }
+}
+
+/// Append one encoded frame to the connection's write queue, honoring
+/// the NetWrite fault (half the frame, then poison) and the write
+/// queue cap.
+fn enqueue_bytes(conn: &mut Conn, bytes: &[u8], sh: &ExecShared, tot: &mut Totals) {
+    if conn.poisoned || conn.kill {
+        return;
+    }
+    if sh.inj.fire(FaultSite::NetWrite) {
+        // injected partial write: flush half a frame then die, the
+        // worst desync a crashing peer can leave on the wire — the
+        // client's length prefix discipline must reject the tail
+        let half = bytes.len() / 2;
+        conn.out.extend_from_slice(&bytes[..half]);
+        tot.wq += half as u64;
+        conn.poisoned = true;
+        conn.closing = true;
+        conn.read_closed = true;
+        tot.jobs = tot.jobs.saturating_sub(conn.jobs.len() as u64);
+        conn.jobs.clear();
+        return;
+    }
+    let queued = (conn.out.len() - conn.out_off) as u64;
+    if queued + bytes.len() as u64 > WRITE_QUEUE_CAP {
+        // the client stopped reading; buffering forever is the old
+        // unbounded-growth bug in a new coat
+        sh.counters.write_overflows.fetch_add(1, Ordering::Relaxed);
+        sh.obs.event(EventKind::WriteOverflow, 0, -1, queued);
+        conn.kill = true;
+        return;
+    }
+    conn.out.extend_from_slice(bytes);
+    tot.wq += bytes.len() as u64;
+    sh.counters.frames_out.fetch_add(1, Ordering::Relaxed);
+}
+
+fn try_flush(conn: &mut Conn, tot: &mut Totals) {
+    while conn.out_off < conn.out.len() {
+        match (&conn.sock).write(&conn.out[conn.out_off..]) {
+            Ok(0) => {
+                conn.kill = true;
+                break;
+            }
+            Ok(n) => {
+                conn.out_off += n;
+                tot.wq = tot.wq.saturating_sub(n as u64);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.kill = true;
+                break;
+            }
+        }
+    }
+    if conn.out_off >= conn.out.len() {
+        conn.out.clear();
+        conn.out_off = 0;
+    } else if conn.out_off > 512 * 1024 {
+        conn.out.drain(..conn.out_off);
+        conn.out_off = 0;
+    }
+}
+
+fn maybe_dispatch(token: u64, conn: &mut Conn, sh: &ExecShared) {
+    if conn.busy || conn.closing {
+        return;
+    }
+    if let Some(frame) = conn.jobs.pop_front() {
+        conn.busy = true;
+        let _ = sh.work_tx.send(Job { conn: token, frame, core: Arc::clone(&conn.core) });
+    }
+}
+
+/// Slice complete frames out of the connection's read buffer into its
+/// job queue, stopping at the job cap (backpressure pause) and firing
+/// the NetRead fault per extracted frame (injected read fault ==
+/// silent teardown, exactly like a torn socket).
+fn extract_frames(token: u64, conn: &mut Conn, sh: &ExecShared, tot: &mut Totals) {
+    let mut pos = 0usize;
+    while !conn.closing && conn.jobs.len() < JOB_QUEUE_CAP {
+        let avail = conn.rbuf.len() - pos;
+        if avail < 4 {
             break;
         }
-        counters.frames_in.fetch_add(1, Ordering::Relaxed);
-        let t_decode = Instant::now();
-        let raw = match RawFrame::parse(&frame_buf) {
-            Ok(raw) => raw,
-            Err(e) => {
-                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
-                obs.event(EventKind::ProtoError, 0, -1, 0);
-                let _ = wtx.send(invalid(0, &e));
-                continue;
-            }
-        };
-        // PUSH dominates steady state: decode it zero-copy off the
-        // reused frame buffer before falling back to the owned decoder
-        let mut tokens = Vec::new();
-        if let Ok(stream) = raw.push_fields_into(&mut tokens) {
-            if spans_on {
-                counters.record_span(Stage::NetDecode, t_decode.elapsed());
-            }
-            let reply = match streams.get(&stream) {
-                None => {
-                    let id = crate::coordinator::slots::StreamId(stream);
-                    // "hibernated" and "gone" must stay distinguishable:
-                    // a hibernated stream is reattachable via OPEN with
-                    // a resume id, a closed one is not
-                    let e = if engine.is_hibernated(id) {
-                        EngineError::Hibernated(id)
-                    } else {
-                        EngineError::StreamClosed(id)
-                    };
-                    Frame::Error(WireError::from_engine(stream, &e))
-                }
-                Some(entry) => match entry.sess.push(tokens) {
-                    Ok(()) => Frame::PushOk { stream },
-                    Err(e) => Frame::Error(WireError::from_engine(stream, &e)),
-                },
-            };
-            let _ = wtx.send(Reply::Frame(reply));
-            continue;
+        let b = &conn.rbuf[pos..pos + 4];
+        let len = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+        if len == 0 || len > proto::MAX_FRAME_LEN {
+            // undecodable prefix: resynchronization is impossible
+            conn.closing = true;
+            conn.read_closed = true;
+            conn.rbuf.clear();
+            pos = 0;
+            break;
         }
-        let decoded = raw.to_frame();
+        if avail < 4 + len {
+            break;
+        }
+        let frame = conn.rbuf[pos + 4..pos + 4 + len].to_vec();
+        pos += 4 + len;
+        if sh.inj.fire(FaultSite::NetRead) {
+            // injected transport fault: behave exactly like a socket
+            // read error — silent teardown (clients must recover via
+            // reconnect + resume)
+            conn.closing = true;
+            conn.read_closed = true;
+            conn.rbuf.clear();
+            pos = 0;
+            break;
+        }
+        sh.counters.frames_in.fetch_add(1, Ordering::Relaxed);
+        conn.jobs.push_back(frame);
+        tot.jobs += 1;
+    }
+    if pos > 0 {
+        conn.rbuf.drain(..pos);
+    }
+    if conn.jobs.len() >= JOB_QUEUE_CAP {
+        conn.paused = true;
+    }
+    maybe_dispatch(token, conn, sh);
+}
+
+/// Drain a socket's readable bytes (bounded per pass; level-triggered
+/// readiness re-reports the rest) and extract frames.
+fn conn_read(token: u64, conn: &mut Conn, sh: &ExecShared, tot: &mut Totals, scratch: &mut [u8]) {
+    if conn.read_closed || conn.paused {
+        return;
+    }
+    let mut rounds = 0;
+    loop {
+        match (&conn.sock).read(scratch) {
+            Ok(0) => {
+                // clean client EOF: finish queued work, flush, close
+                conn.read_closed = true;
+                conn.closing = true;
+                break;
+            }
+            Ok(n) => {
+                conn.last_activity = Instant::now();
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+                rounds += 1;
+                if n < scratch.len() || rounds >= 8 {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                // torn socket: flush whatever replies are pending, then
+                // tear down (sessions close silently)
+                conn.read_closed = true;
+                conn.closing = true;
+                break;
+            }
+        }
+    }
+    extract_frames(token, conn, sh, tot);
+}
+
+/// Relay a terminal pump's buffered tail into its connection's write
+/// queue (deliberate closes deliver queued ticks in order before the
+/// CLOSED reply, as the forwarder threads used to).
+fn drain_pump(stream: u64, pump: &Pump, conn: &mut Conn, sh: &ExecShared, tot: &mut Totals) {
+    let mut buf = Vec::new();
+    while let Ok(Some(r)) = pump.rx.try_recv() {
+        let t = Instant::now();
+        proto::write_tick(&mut buf, stream, r.tick, &r.logits, &r.out);
+        if sh.counters.spans_on() {
+            sh.counters.record_span(Stage::NetEncode, t.elapsed());
+        }
+        enqueue_bytes(conn, &buf, sh, tot);
+    }
+}
+
+/// Close a connection now: mark its core dead (in-flight jobs become
+/// no-ops), close its sessions, drop its pumps, deregister and drop
+/// the socket (the client sees EOF).
+fn teardown_conn(
+    token: u64,
+    conns: &mut HashMap<u64, Conn>,
+    pumps: &mut HashMap<u64, Pump>,
+    poller: &mut Poller,
+    sh: &ExecShared,
+    tot: &mut Totals,
+) {
+    let Some(conn) = conns.remove(&token) else { return };
+    tot.jobs = tot.jobs.saturating_sub(conn.jobs.len() as u64);
+    tot.wq = tot.wq.saturating_sub((conn.out.len() - conn.out_off) as u64);
+    let _ = poller.deregister(&conn.sock);
+    let sessions = {
+        let mut core = conn.core.lock().unwrap_or_else(|p| p.into_inner());
+        core.dead = true;
+        std::mem::take(&mut core.sessions)
+    };
+    for (_, entry) in sessions {
+        entry.closed.store(true, Ordering::SeqCst);
+        entry.sess.close();
+    }
+    pumps.retain(|_, p| p.conn != token);
+    sh.counters.connections_active.fetch_sub(1, Ordering::Relaxed);
+    // conn (and its socket) drops here
+}
+
+/// Over the connection limit (or a required socket option failed):
+/// count it, journal it, best-effort a typed `Saturated` goodbye.
+fn reject_conn(sock: TcpStream, sh: &ExecShared) {
+    sh.counters.connections_rejected.fetch_add(1, Ordering::Relaxed);
+    sh.obs.event(EventKind::ConnRejected, 0, -1, sh.cfg.max_conns as u64);
+    let mut buf = Vec::new();
+    Frame::Error(WireError::from_engine(0, &EngineError::Saturated { capacity: sh.cfg.max_conns }))
+        .encode_into(&mut buf);
+    let _ = sock.set_nonblocking(true);
+    let _ = (&sock).write(&buf);
+}
+
+fn accept_ready(
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    poller: &mut Poller,
+    next_token: &mut u64,
+    sh: &ExecShared,
+) {
+    loop {
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                if sh.shutting_down.load(Ordering::SeqCst) {
+                    continue; // drain the backlog; drop late arrivals
+                }
+                if conns.len() >= sh.cfg.max_conns {
+                    reject_conn(sock, sh);
+                    continue;
+                }
+                if sock.set_nonblocking(true).is_err() {
+                    // a connection the poll loop can't drive would hang
+                    // forever — reject it rather than serve it broken
+                    sh.obs.event(EventKind::SockOptFailed, 0, -1, 0);
+                    sh.counters.connections_rejected.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                if sock.set_nodelay(true).is_err() {
+                    // latency hint only: journal it and keep serving
+                    sh.obs.event(EventKind::SockOptFailed, 0, -1, 1);
+                }
+                let token = *next_token;
+                *next_token += 1;
+                let conn = Conn::new(sock);
+                if poller.register(&conn.sock, token, true, false).is_err() {
+                    continue; // conn drops, client sees EOF
+                }
+                sh.counters.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                sh.counters.connections_active.fetch_add(1, Ordering::Relaxed);
+                conns.insert(token, conn);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            // WouldBlock (drained) or transient accept failure (EMFILE
+            // etc.): return to the poll loop — its timeout paces
+            // retries, no busy spin
+            Err(_) => break,
+        }
+    }
+}
+
+/// The executor: one readiness loop owning every socket, write queue,
+/// and tick pump. Exits (joining the worker pool) when the shutdown
+/// flag is raised and the drain completes.
+fn run_executor(
+    listener: TcpListener,
+    mut poller: Poller,
+    wake_rx: WakeReader,
+    comp_rx: Receiver<Completion>,
+    worker_handles: Vec<JoinHandle<()>>,
+    sh: ExecShared,
+) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut pumps: HashMap<u64, Pump> = HashMap::new();
+    let mut events: Vec<PollEvent> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut tick_buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut to_close: Vec<u64> = Vec::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut tot = Totals::default();
+    let mut announced = false;
+    let mut drain_deadline = Instant::now();
+    let idle_sweep_every = (sh.cfg.idle_timeout / 4)
+        .clamp(Duration::from_millis(10), Duration::from_secs(1));
+    let mut last_idle_sweep = Instant::now();
+
+    loop {
+        // ticks arrive from engine shards with no waker of their own:
+        // poll tightly while pumps exist, lazily when none do
+        let timeout = if pumps.is_empty() && !announced {
+            Duration::from_millis(50)
+        } else {
+            Duration::from_millis(1)
+        };
+        if poller.wait(&mut events, Some(timeout)).is_err() {
+            // a broken poller cannot serve; treat as shutdown
+            sh.shutting_down.store(true, Ordering::SeqCst);
+        }
+        sh.counters.polls.fetch_add(1, Ordering::Relaxed);
+        to_close.clear();
+
+        // 1. socket readiness
+        for &ev in &events {
+            if ev.token == TOKEN_LISTENER {
+                accept_ready(&listener, &mut conns, &mut poller, &mut next_token, &sh);
+            } else if ev.token == TOKEN_WAKER {
+                wake_rx.drain();
+            } else if let Some(conn) = conns.get_mut(&ev.token) {
+                if ev.readable || ev.hangup {
+                    conn_read(ev.token, conn, &sh, &mut tot, &mut scratch);
+                }
+                try_flush(conn, &mut tot);
+                update_interest(&mut poller, ev.token, conn);
+                if conn_finished(conn) {
+                    to_close.push(ev.token);
+                }
+            }
+        }
+
+        // 2. worker completions
+        loop {
+            let Ok(mut c) = comp_rx.try_recv() else { break };
+            tot.jobs = tot.jobs.saturating_sub(1);
+            let Some(conn) = conns.get_mut(&c.conn) else { continue };
+            conn.busy = false;
+            // a deliberate close defers its CLOSED reply onto the pump:
+            // the stream's remaining ticks reach the wire first, then
+            // the reply — the order the forwarder-join used to force
+            for eff in &c.effects {
+                if let Effect::StreamClosed { stream } = eff {
+                    if let Some(p) = pumps.get_mut(stream) {
+                        if p.conn == c.conn {
+                            p.terminal = Some(std::mem::take(&mut c.reply));
+                        }
+                    }
+                }
+            }
+            if !c.reply.is_empty() {
+                enqueue_bytes(conn, &c.reply, &sh, &mut tot);
+            }
+            for eff in c.effects {
+                match eff {
+                    Effect::StreamOpened { stream, rx, closed } => {
+                        if let Some(old) = pumps.remove(&stream) {
+                            // a resume re-homed a stream this connection
+                            // already held: relay the zombie's tail
+                            // silently (its session was forgotten, not
+                            // closed), then replace it
+                            if old.conn == c.conn {
+                                drain_pump(stream, &old, conn, &sh, &mut tot);
+                                conn.streams = conn.streams.saturating_sub(1);
+                            }
+                        }
+                        pumps.insert(stream, Pump { conn: c.conn, rx, closed, terminal: None });
+                        conn.streams += 1;
+                    }
+                    Effect::StreamClosed { .. } => {} // handled above
+                    Effect::Teardown => {
+                        conn.closing = true;
+                        conn.read_closed = true;
+                        tot.jobs = tot.jobs.saturating_sub(conn.jobs.len() as u64);
+                        conn.jobs.clear();
+                    }
+                }
+            }
+            maybe_dispatch(c.conn, conn, &sh);
+            if conn.paused && conn.jobs.len() <= JOB_QUEUE_CAP / 2 {
+                conn.paused = false;
+                // complete frames may be parked in rbuf from before the
+                // pause; a quiet socket would never re-trigger extraction
+                extract_frames(c.conn, conn, &sh, &mut tot);
+            }
+            try_flush(conn, &mut tot);
+            update_interest(&mut poller, c.conn, conn);
+            if conn_finished(conn) {
+                to_close.push(c.conn);
+            }
+        }
+
+        // 3. tick pumps (bounded per stream per pass for fairness)
+        let mut dead_pumps: Vec<u64> = Vec::new();
+        for (&stream, pump) in pumps.iter_mut() {
+            let Some(conn) = conns.get_mut(&pump.conn) else {
+                dead_pumps.push(stream);
+                continue;
+            };
+            let mut relayed = 0;
+            while relayed < PUMP_BATCH {
+                match pump.rx.try_recv() {
+                    Ok(Some(r)) => {
+                        relayed += 1;
+                        let t = Instant::now();
+                        proto::write_tick(&mut tick_buf, stream, r.tick, &r.logits, &r.out);
+                        if sh.counters.spans_on() {
+                            sh.counters.record_span(Stage::NetEncode, t.elapsed());
+                        }
+                        enqueue_bytes(conn, &tick_buf, &sh, &mut tot);
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        // stream torn down under the connection. A
+                        // deliberate close (flag set) ends silently;
+                        // anything else (eviction, engine or server
+                        // shutdown) announces a terminal typed error.
+                        if !pump.closed.load(Ordering::SeqCst) {
+                            let e = if sh.shutting_down.load(Ordering::SeqCst) {
+                                EngineError::ShuttingDown
+                            } else {
+                                e
+                            };
+                            let mut ebuf = Vec::new();
+                            Frame::Error(WireError::from_engine(stream, &e))
+                                .encode_into(&mut ebuf);
+                            enqueue_bytes(conn, &ebuf, &sh, &mut tot);
+                        }
+                        if let Some(t) = pump.terminal.take() {
+                            // the deferred CLOSED reply, after the tail
+                            enqueue_bytes(conn, &t, &sh, &mut tot);
+                        }
+                        conn.streams = conn.streams.saturating_sub(1);
+                        conn.last_activity = Instant::now();
+                        dead_pumps.push(stream);
+                        break;
+                    }
+                }
+            }
+            try_flush(conn, &mut tot);
+            update_interest(&mut poller, pump.conn, conn);
+            if conn_finished(conn) {
+                to_close.push(pump.conn);
+            }
+        }
+        for s in dead_pumps {
+            pumps.remove(&s);
+        }
+
+        // 4. graceful shutdown: announce once, then drain with grace
+        if sh.shutting_down.load(Ordering::SeqCst) && !announced {
+            announced = true;
+            drain_deadline = Instant::now() + SHUTDOWN_GRACE;
+            for (&token, conn) in conns.iter_mut() {
+                let sessions = {
+                    let mut core = conn.core.lock().unwrap_or_else(|p| p.into_inner());
+                    core.dead = true;
+                    std::mem::take(&mut core.sessions)
+                };
+                for (stream, entry) in sessions {
+                    entry.closed.store(true, Ordering::SeqCst);
+                    let mut ebuf = Vec::new();
+                    Frame::Error(WireError::from_engine(stream, &EngineError::ShuttingDown))
+                        .encode_into(&mut ebuf);
+                    enqueue_bytes(conn, &ebuf, &sh, &mut tot);
+                    entry.sess.close();
+                }
+                tot.jobs = tot.jobs.saturating_sub(conn.jobs.len() as u64);
+                conn.jobs.clear();
+                conn.closing = true;
+                conn.read_closed = true;
+                try_flush(conn, &mut tot);
+                update_interest(&mut poller, token, conn);
+                if conn_finished(conn) {
+                    to_close.push(token);
+                }
+            }
+        }
+
+        // 5. idle sweep (cheap, and only every few hundred passes)
+        if !announced && last_idle_sweep.elapsed() >= idle_sweep_every {
+            last_idle_sweep = Instant::now();
+            for (&token, conn) in conns.iter_mut() {
+                if conn.closing
+                    || conn.busy
+                    || conn.streams > 0
+                    || !conn.jobs.is_empty()
+                    || conn.out_off < conn.out.len()
+                {
+                    continue;
+                }
+                let idle = conn.last_activity.elapsed();
+                if idle < sh.cfg.idle_timeout {
+                    continue;
+                }
+                // double-check under the lock (the mirror can lag a
+                // just-opened stream): never reap a streaming client
+                let empty =
+                    conn.core.lock().unwrap_or_else(|p| p.into_inner()).sessions.is_empty();
+                if empty {
+                    sh.counters.idle_conns_reaped.fetch_add(1, Ordering::Relaxed);
+                    sh.obs.event(EventKind::ConnReaped, 0, -1, idle.as_millis() as u64);
+                    to_close.push(token);
+                }
+            }
+        }
+
+        // 6. teardowns
+        if !to_close.is_empty() {
+            to_close.sort_unstable();
+            to_close.dedup();
+            for &t in &to_close {
+                teardown_conn(t, &mut conns, &mut pumps, &mut poller, &sh, &mut tot);
+            }
+        }
+
+        // 7. gauges + exit
+        sh.counters.jobs_depth.store(tot.jobs, Ordering::Relaxed);
+        sh.counters.jobs_depth_peak.fetch_max(tot.jobs, Ordering::Relaxed);
+        sh.counters.write_queue_bytes.store(tot.wq, Ordering::Relaxed);
+        sh.counters.write_queue_peak.fetch_max(tot.wq, Ordering::Relaxed);
+        if announced && (conns.is_empty() || Instant::now() >= drain_deadline) {
+            let rest: Vec<u64> = conns.keys().copied().collect();
+            for t in rest {
+                teardown_conn(t, &mut conns, &mut pumps, &mut poller, &sh, &mut tot);
+            }
+            break;
+        }
+    }
+
+    let counters = Arc::clone(&sh.counters);
+    drop(listener);
+    drop(sh); // drops the last work sender: the pool drains and exits
+    for w in worker_handles {
+        let _ = w.join();
+    }
+    counters.jobs_depth.store(0, Ordering::Relaxed);
+    counters.write_queue_bytes.store(0, Ordering::Relaxed);
+}
+
+/// Context a worker thread serves jobs with.
+struct WorkerCtx {
+    engine: EngineHandle,
+    counters: Arc<Counters>,
+    obs: ObsHandle,
+    comp_tx: Sender<Completion>,
+    shutdown_req_tx: Sender<()>,
+    waker: Waker,
+    auth_token: Option<String>,
+    max_streams_per_conn: usize,
+}
+
+fn worker_main(rx: Arc<Mutex<Receiver<Job>>>, cx: WorkerCtx) {
+    loop {
+        let job = {
+            let g = rx.lock().unwrap_or_else(|p| p.into_inner());
+            g.recv()
+        };
+        let Ok(job) = job else { return };
+        let (comp, notify_shutdown) = handle_job(job, &cx);
+        let _ = cx.comp_tx.send(comp);
+        cx.waker.wake();
+        if notify_shutdown {
+            // after the completion: the SHUTDOWN_OK ack reaches the
+            // write queue before the owner can start the drain
+            let _ = cx.shutdown_req_tx.send(());
+        }
+    }
+}
+
+fn encode_reply(frame: &Frame, buf: &mut Vec<u8>, counters: &Counters) {
+    let t = Instant::now();
+    frame.encode_into(buf);
+    if counters.spans_on() {
+        counters.record_span(Stage::NetEncode, t.elapsed());
+    }
+}
+
+fn invalid(stream: u64, e: &proto::ProtoError) -> Frame {
+    Frame::Error(WireError::from_engine(stream, &EngineError::InvalidRequest(e.to_string())))
+}
+
+fn auth_failure(conn: u64, cx: &WorkerCtx) -> Completion {
+    cx.counters.auth_failures.fetch_add(1, Ordering::Relaxed);
+    cx.obs.event(EventKind::AuthFailure, 0, -1, 0);
+    let mut buf = Vec::new();
+    encode_reply(
+        &Frame::Error(WireError::from_engine(
+            0,
+            &EngineError::InvalidRequest(
+                "authentication failed: this server requires an OPEN carrying the shared token"
+                    .into(),
+            ),
+        )),
+        &mut buf,
+        &cx.counters,
+    );
+    Completion { conn, reply: buf, effects: vec![Effect::Teardown] }
+}
+
+/// Decode one frame, drive the engine, encode the reply. Holds the
+/// connection's core lock for the whole job so teardown serializes
+/// behind in-flight engine calls. Returns the completion and whether
+/// a SHUTDOWN was requested.
+fn handle_job(job: Job, cx: &WorkerCtx) -> (Completion, bool) {
+    let mut core = job.core.lock().unwrap_or_else(|p| p.into_inner());
+    let mut effects: Vec<Effect> = Vec::new();
+    let mut reply_buf: Vec<u8> = Vec::new();
+    let counters = &cx.counters;
+    if core.dead {
+        return (Completion { conn: job.conn, reply: reply_buf, effects }, false);
+    }
+    let spans_on = counters.spans_on();
+    let t_decode = Instant::now();
+    let raw = match RawFrame::parse(&job.frame) {
+        Ok(raw) => raw,
+        Err(e) => {
+            counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            cx.obs.event(EventKind::ProtoError, 0, -1, 0);
+            encode_reply(&invalid(0, &e), &mut reply_buf, counters);
+            return (Completion { conn: job.conn, reply: reply_buf, effects }, false);
+        }
+    };
+
+    // PUSH dominates steady state: decode it zero-copy off the frame
+    // bytes before falling back to the owned decoder
+    let mut tokens = Vec::new();
+    if let Ok(stream) = raw.push_fields_into(&mut tokens) {
         if spans_on {
             counters.record_span(Stage::NetDecode, t_decode.elapsed());
         }
-        match decoded {
-            Ok(Frame::Open { resume }) => {
+        if cx.auth_token.is_some() && !core.authed {
+            return (auth_failure(job.conn, cx), false);
+        }
+        let reply = match core.sessions.get(&stream) {
+            None => {
+                let id = crate::coordinator::slots::StreamId(stream);
+                // "hibernated" and "gone" must stay distinguishable: a
+                // hibernated stream is reattachable via OPEN with a
+                // resume id, a closed one is not
+                let e = if cx.engine.is_hibernated(id) {
+                    EngineError::Hibernated(id)
+                } else {
+                    EngineError::StreamClosed(id)
+                };
+                Frame::Error(WireError::from_engine(stream, &e))
+            }
+            Some(entry) => match entry.sess.push(tokens) {
+                Ok(()) => Frame::PushOk { stream },
+                Err(e) => Frame::Error(WireError::from_engine(stream, &e)),
+            },
+        };
+        encode_reply(&reply, &mut reply_buf, counters);
+        return (Completion { conn: job.conn, reply: reply_buf, effects }, false);
+    }
+
+    let decoded = raw.to_frame();
+    if spans_on {
+        counters.record_span(Stage::NetDecode, t_decode.elapsed());
+    }
+
+    // central auth gate: with a token configured, nothing but an OPEN
+    // carrying that token is served until the connection authenticates
+    if let Some(want) = cx.auth_token.as_deref() {
+        let open_token = match &decoded {
+            Ok(Frame::OpenAuth { token, .. }) => Some(token.as_str()),
+            _ => None,
+        };
+        let pass = match open_token {
+            Some(got) if got == want => {
+                core.authed = true;
+                true
+            }
+            Some(_) => false, // wrong token is always a failure
+            None => core.authed,
+        };
+        if !pass {
+            return (auth_failure(job.conn, cx), false);
+        }
+    }
+
+    let mut notify_shutdown = false;
+    let reply = match decoded {
+        Ok(Frame::Open { resume }) | Ok(Frame::OpenAuth { resume, .. }) => {
+            if core.sessions.len() >= cx.max_streams_per_conn {
+                counters.quota_rejected.fetch_add(1, Ordering::Relaxed);
+                Frame::Error(WireError::from_engine(
+                    resume.unwrap_or(0),
+                    &EngineError::Saturated { capacity: cx.max_streams_per_conn },
+                ))
+            } else {
                 // fresh open, or reattach to a stream recovered from
                 // the state store (same id, ticks continue where the
                 // previous run left off)
                 let opened = match resume {
-                    None => engine.open(),
-                    Some(id) => engine.resume(crate::coordinator::slots::StreamId(id)),
+                    None => cx.engine.open(),
+                    Some(id) => cx.engine.resume(crate::coordinator::slots::StreamId(id)),
                 };
-                let reply = match opened {
+                match opened {
                     Ok(mut sess) => {
                         let stream = sess.id().0;
-                        // the receiving half lives on its own forwarder
-                        // thread; the session half stays here for
-                        // push/close
+                        // the receiving half goes to the executor's
+                        // pump; the session half stays for push/close
                         let rx = sess.split_receiver().expect("fresh session has its receiver");
                         let closed = Arc::new(AtomicBool::new(false));
-                        let forwarder = spawn_forwarder(
-                            rx,
-                            stream,
-                            wtx.clone(),
-                            Arc::clone(&closed),
-                            Arc::clone(&shutting_down),
-                        );
-                        match forwarder {
-                            Ok(forwarder) => {
-                                counters.streams_opened.fetch_add(1, Ordering::Relaxed);
-                                if let Some(old) = streams.remove(&stream) {
-                                    // a resume only succeeds when the
-                                    // stream lost its owner (shard crash
-                                    // re-home), so this entry is a
-                                    // zombie — defuse its RAII close or
-                                    // it would tear down the stream we
-                                    // just resumed
-                                    old.closed.store(true, Ordering::SeqCst);
-                                    old.sess.forget();
-                                    let _ = old.forwarder.join();
-                                }
-                                streams.insert(stream, StreamEntry { sess, closed, forwarder });
-                                Frame::Opened { stream }
-                            }
-                            Err(_) => Frame::Error(WireError::from_engine(
-                                stream,
-                                &EngineError::Internal("spawning stream forwarder".into()),
-                            )),
+                        counters.streams_opened.fetch_add(1, Ordering::Relaxed);
+                        if let Some(old) = core.sessions.remove(&stream) {
+                            // a resume only succeeds when the stream
+                            // lost its owner (shard crash re-home), so
+                            // this entry is a zombie — defuse its RAII
+                            // close or it would tear down the stream we
+                            // just resumed
+                            old.closed.store(true, Ordering::SeqCst);
+                            old.sess.forget();
                         }
+                        core.sessions
+                            .insert(stream, CoreEntry { sess, closed: Arc::clone(&closed) });
+                        effects.push(Effect::StreamOpened { stream, rx, closed });
+                        Frame::Opened { stream }
                     }
                     Err(e) => Frame::Error(WireError::from_engine(resume.unwrap_or(0), &e)),
-                };
-                let _ = wtx.send(Reply::Frame(reply));
-            }
-            Ok(Frame::Close { stream }) => {
-                let reply = match streams.remove(&stream) {
-                    Some(entry) => {
-                        entry.closed.store(true, Ordering::SeqCst);
-                        entry.sess.close();
-                        let _ = entry.forwarder.join();
-                        Frame::Closed { stream }
-                    }
-                    None => Frame::Error(WireError::from_engine(
-                        stream,
-                        &EngineError::StreamClosed(crate::coordinator::slots::StreamId(stream)),
-                    )),
-                };
-                let _ = wtx.send(Reply::Frame(reply));
-            }
-            Ok(Frame::Metrics) => {
-                let reply = match engine.metrics() {
-                    Ok(m) => Frame::MetricsReport {
-                        report: format!("{}\n  {}", m.report(), counters.snapshot().report()),
-                    },
-                    Err(e) => Frame::Error(WireError::from_engine(0, &e)),
-                };
-                let _ = wtx.send(Reply::Frame(reply));
-            }
-            Ok(Frame::MetricsProm) => {
-                // the same document the HTTP /metrics endpoint serves,
-                // carried in a MetricsReport frame
-                let reply = match engine.metrics() {
-                    Ok(m) => Frame::MetricsReport {
-                        report: expo::render_prometheus(&obs, &m, Some(&counters.snapshot())),
-                    },
-                    Err(e) => Frame::Error(WireError::from_engine(0, &e)),
-                };
-                let _ = wtx.send(Reply::Frame(reply));
-            }
-            Ok(Frame::Shutdown) => {
-                counters.shutdown_requests.fetch_add(1, Ordering::Relaxed);
-                let _ = wtx.send(Reply::Frame(Frame::ShutdownOk));
-                // the owner of the NetServer decides what shutdown
-                // means (typically: drain the front door, then the
-                // engine); the reader keeps serving until severed
-                let _ = shutdown_req.send(());
-            }
-            // reply frames arriving at the server are client bugs, not
-            // transport corruption: answer typed, keep serving
-            Ok(_) => {
-                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
-                obs.event(EventKind::ProtoError, 0, -1, u64::from(raw.op));
-                let _ = wtx.send(Reply::Frame(Frame::Error(WireError::from_engine(
-                    0,
-                    &EngineError::InvalidRequest("reply opcode sent to the server".into()),
-                ))));
-            }
-            Err(e) => {
-                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
-                obs.event(EventKind::ProtoError, 0, -1, u64::from(raw.op));
-                let _ = wtx.send(invalid(0, &e));
+                }
             }
         }
-    }
-
-    // teardown: on server shutdown every still-open stream gets a
-    // terminal typed error (flushed before the writer closes); on a
-    // plain client disconnect the sessions just close (RAII) silently
-    let announce = shutting_down.load(Ordering::SeqCst);
-    for (stream, entry) in streams {
-        entry.closed.store(true, Ordering::SeqCst);
-        if announce {
-            let _ = wtx.send(Reply::Frame(Frame::Error(WireError::from_engine(
+        Ok(Frame::Close { stream }) => match core.sessions.remove(&stream) {
+            Some(entry) => {
+                entry.closed.store(true, Ordering::SeqCst);
+                entry.sess.close();
+                effects.push(Effect::StreamClosed { stream });
+                Frame::Closed { stream }
+            }
+            None => Frame::Error(WireError::from_engine(
                 stream,
-                &EngineError::ShuttingDown,
-            ))));
-        }
-        entry.sess.close();
-        let _ = entry.forwarder.join();
-    }
-    drop(wtx);
-    let _ = writer.join();
-}
-
-fn invalid(stream: u64, e: &proto::ProtoError) -> Reply {
-    Reply::Frame(Frame::Error(WireError::from_engine(
-        stream,
-        &EngineError::InvalidRequest(e.to_string()),
-    )))
-}
-
-/// Relay a stream's tick results to the connection's writer until the
-/// stream tears down; an unexpected teardown (eviction, engine or
-/// server shutdown) is announced with a terminal typed error.
-fn spawn_forwarder(
-    rx: TickReceiver,
-    stream: u64,
-    wtx: Sender<Reply>,
-    closed: Arc<AtomicBool>,
-    shutting_down: Arc<AtomicBool>,
-) -> io::Result<JoinHandle<()>> {
-    std::thread::Builder::new().name("deepcot-net-stream".into()).spawn(move || loop {
-        match rx.recv() {
-            Ok(result) => {
-                if wtx.send(Reply::Tick { stream, result }).is_err() {
-                    return; // connection gone
-                }
-            }
-            Err(e) => {
-                if !closed.load(Ordering::SeqCst) {
-                    let e = if shutting_down.load(Ordering::SeqCst) {
-                        EngineError::ShuttingDown
-                    } else {
-                        e
-                    };
-                    let _ =
-                        wtx.send(Reply::Frame(Frame::Error(WireError::from_engine(stream, &e))));
-                }
-                return;
+                &EngineError::StreamClosed(crate::coordinator::slots::StreamId(stream)),
+            )),
+        },
+        Ok(Frame::Metrics) => match cx.engine.metrics() {
+            Ok(m) => Frame::MetricsReport {
+                report: format!("{}\n  {}", m.report(), counters.snapshot().report()),
+            },
+            Err(e) => Frame::Error(WireError::from_engine(0, &e)),
+        },
+        Ok(Frame::MetricsProm) => {
+            // the same document the HTTP /metrics endpoint serves,
+            // carried in a MetricsReport frame
+            match cx.engine.metrics() {
+                Ok(m) => Frame::MetricsReport {
+                    report: expo::render_prometheus(&cx.obs, &m, Some(&counters.snapshot())),
+                },
+                Err(e) => Frame::Error(WireError::from_engine(0, &e)),
             }
         }
-    })
-}
-
-/// Drain the reply queue into the socket through one reusable encode
-/// buffer. Exits when every sender is gone or the socket dies.
-fn writer_main(
-    mut sock: TcpStream,
-    wrx: Receiver<Reply>,
-    counters: Arc<Counters>,
-    inj: FaultInjector,
-) {
-    let mut buf: Vec<u8> = Vec::with_capacity(4096);
-    let spans_on = counters.spans_on();
-    while let Ok(reply) = wrx.recv() {
-        let t_encode = Instant::now();
-        match reply {
-            Reply::Frame(f) => f.encode_into(&mut buf),
-            Reply::Tick { stream, result } => {
-                proto::write_tick(&mut buf, stream, result.tick, &result.logits, &result.out)
-            }
+        Ok(Frame::Shutdown) => {
+            counters.shutdown_requests.fetch_add(1, Ordering::Relaxed);
+            // the owner of the NetServer decides what shutdown means
+            // (typically: drain the front door, then the engine); the
+            // executor keeps serving until told
+            notify_shutdown = true;
+            Frame::ShutdownOk
         }
-        if spans_on {
-            counters.record_span(Stage::NetEncode, t_encode.elapsed());
+        // reply frames arriving at the server are client bugs, not
+        // transport corruption: answer typed, keep serving
+        Ok(_) => {
+            counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            cx.obs.event(EventKind::ProtoError, 0, -1, u64::from(raw.op));
+            Frame::Error(WireError::from_engine(
+                0,
+                &EngineError::InvalidRequest("reply opcode sent to the server".into()),
+            ))
         }
-        if inj.fire(FaultSite::NetWrite) {
-            // injected partial write: flush half a frame then die, the
-            // worst desync a crashing peer can leave on the wire — the
-            // client's length prefix discipline must reject the tail
-            let half = buf.len() / 2;
-            let _ = sock.write_all(&buf[..half]);
-            while wrx.recv().is_ok() {}
-            break;
+        Err(e) => {
+            counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            cx.obs.event(EventKind::ProtoError, 0, -1, u64::from(raw.op));
+            invalid(0, &e)
         }
-        if sock.write_all(&buf).is_err() {
-            // socket dead: drain (dropping replies) so senders never
-            // observe the channel as live-but-stuck
-            while wrx.recv().is_ok() {}
-            break;
-        }
-        counters.frames_out.fetch_add(1, Ordering::Relaxed);
-    }
-    let _ = sock.flush();
-    let _ = sock.shutdown(Shutdown::Write);
+    };
+    encode_reply(&reply, &mut reply_buf, counters);
+    (Completion { conn: job.conn, reply: reply_buf, effects }, notify_shutdown)
 }

@@ -365,6 +365,48 @@ pub fn render_prometheus(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMe
             "Idle stream-less connections reaped by the server",
             n.idle_conns_reaped,
         );
+        p.counter(
+            "deepcot_net_connections_rejected_total",
+            "Connections refused at the admission limit",
+            n.connections_rejected,
+        );
+        p.counter(
+            "deepcot_net_auth_failures_total",
+            "Requests rejected by the shared-token auth gate",
+            n.auth_failures,
+        );
+        p.counter(
+            "deepcot_net_quota_rejected_total",
+            "Opens rejected by the per-connection stream quota",
+            n.quota_rejected,
+        );
+        p.counter(
+            "deepcot_net_write_overflows_total",
+            "Connections torn down for overrunning the write queue",
+            n.write_overflows,
+        );
+        p.counter("deepcot_net_polls_total", "Readiness-loop wakeups", n.polls);
+        p.gauge("deepcot_net_workers", "Worker threads decoding frames", n.workers as f64);
+        p.gauge(
+            "deepcot_net_jobs_depth",
+            "Decoded requests queued for workers right now",
+            n.jobs_depth as f64,
+        );
+        p.gauge(
+            "deepcot_net_jobs_depth_peak",
+            "High-water mark of the worker job queue",
+            n.jobs_depth_peak as f64,
+        );
+        p.gauge(
+            "deepcot_net_write_queue_bytes",
+            "Bytes parked in per-connection write queues right now",
+            n.write_queue_bytes as f64,
+        );
+        p.gauge(
+            "deepcot_net_write_queue_peak_bytes",
+            "High-water mark of parked write-queue bytes",
+            n.write_queue_peak as f64,
+        );
         if obs.level() >= ObsLevel::Counters {
             p.gauge(
                 "deepcot_net_uptime_seconds",
@@ -483,6 +525,16 @@ pub fn render_json(obs: &ObsHandle, m: &ClusterMetrics, net: Option<&NetMetrics>
                 ("streams_opened", num(n.streams_opened as f64)),
                 ("shutdown_requests", num(n.shutdown_requests as f64)),
                 ("idle_conns_reaped", num(n.idle_conns_reaped as f64)),
+                ("connections_rejected", num(n.connections_rejected as f64)),
+                ("auth_failures", num(n.auth_failures as f64)),
+                ("quota_rejected", num(n.quota_rejected as f64)),
+                ("write_overflows", num(n.write_overflows as f64)),
+                ("workers", num(n.workers as f64)),
+                ("jobs_depth", num(n.jobs_depth as f64)),
+                ("jobs_depth_peak", num(n.jobs_depth_peak as f64)),
+                ("write_queue_bytes", num(n.write_queue_bytes as f64)),
+                ("write_queue_peak", num(n.write_queue_peak as f64)),
+                ("polls", num(n.polls as f64)),
                 ("uptime_seconds", num(n.uptime.as_secs_f64())),
                 ("boot_unix_ms", num(n.boot_unix_ms as f64)),
             ]),

@@ -71,11 +71,24 @@ pub enum EventKind {
     /// An idle, stream-less connection was reaped by the net layer's
     /// slow-loris defense (`aux` = idle time, ms).
     ConnReaped = 18,
+    /// A connection was refused at the front door's admission limit
+    /// (`aux` = the configured connection cap).
+    ConnRejected = 19,
+    /// A request was rejected by the front door's shared-token auth
+    /// gate (missing, early, or wrong token).
+    AuthFailure = 20,
+    /// A socket option could not be applied to an accepted connection
+    /// (`aux`: 0 = nonblocking — fatal, the connection is refused;
+    /// 1 = nodelay — degraded, the connection is kept).
+    SockOptFailed = 21,
+    /// A connection's write queue overran its byte cap and the
+    /// connection was torn down (`aux` = queued bytes at overflow).
+    WriteOverflow = 22,
 }
 
 impl EventKind {
     /// Every kind, in storage order.
-    pub const ALL: [EventKind; 19] = [
+    pub const ALL: [EventKind; 23] = [
         EventKind::StreamOpen,
         EventKind::StreamClose,
         EventKind::StreamEvict,
@@ -95,6 +108,10 @@ impl EventKind {
         EventKind::StreamLost,
         EventKind::StoreDegraded,
         EventKind::ConnReaped,
+        EventKind::ConnRejected,
+        EventKind::AuthFailure,
+        EventKind::SockOptFailed,
+        EventKind::WriteOverflow,
     ];
 
     /// Encode a kernel-dispatch path name as `DispatchResolved` aux.
@@ -139,6 +156,10 @@ impl EventKind {
             EventKind::StreamLost => "stream_lost",
             EventKind::StoreDegraded => "store_degraded",
             EventKind::ConnReaped => "conn_reaped",
+            EventKind::ConnRejected => "conn_rejected",
+            EventKind::AuthFailure => "auth_failure",
+            EventKind::SockOptFailed => "sockopt_failed",
+            EventKind::WriteOverflow => "write_overflow",
         }
     }
 }
@@ -178,8 +199,8 @@ struct Inner {
     next_seq: u64,
     recorded: u64,
     dropped_oldest: u64,
-    suppressed: [u64; 19],
-    gates: [RateGate; 19],
+    suppressed: [u64; 23],
+    gates: [RateGate; 23],
     max_per_sec: u32,
 }
 
@@ -225,8 +246,8 @@ impl Journal {
                 next_seq: 0,
                 recorded: 0,
                 dropped_oldest: 0,
-                suppressed: [0; 19],
-                gates: [RateGate::default(); 19],
+                suppressed: [0; 23],
+                gates: [RateGate::default(); 23],
                 max_per_sec: max_per_sec.max(1),
             }),
         }

@@ -518,3 +518,103 @@ fn wire_client_recovers_from_shard_crash_via_open_resume() {
     server.shutdown();
     engine.shutdown().unwrap();
 }
+
+/// PR 10 leg, read half: an injected `net_read` fault inside the poll
+/// loop behaves exactly like a torn socket — the frame is dropped, the
+/// connection is torn down silently (typed transport error on the
+/// client, never a hang or a panic), and the executor keeps serving
+/// fresh connections afterwards.
+#[test]
+fn injected_net_read_fault_tears_the_connection_down_silently() {
+    let cfg = EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(1)
+        .slots_per_shard(4)
+        .fault("seed=11,net_read=@4".parse().unwrap())
+        .build();
+    let engine = EngineThread::spawn(cfg).unwrap();
+    let server = NetServer::start("127.0.0.1:0", engine.handle()).unwrap();
+    let mut c = NetClient::connect(server.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut rng = Rng::new(0xFEED);
+
+    let s = c.open().expect("open (frame 1)");
+    for i in 0..2 {
+        // frames 2 and 3: served normally
+        c.push(s, &rng.normal_vec(D_IN, 1.0)).unwrap_or_else(|e| panic!("push {i}: {e}"));
+        c.recv_tick(s).unwrap_or_else(|e| panic!("tick {i}: {e}"));
+    }
+    // frame 4 fires net_read=@4: silent teardown, no reply ever comes
+    match c.push(s, &rng.normal_vec(D_IN, 1.0)) {
+        Err(ClientError::Disconnected) | Err(ClientError::Io(_)) => {}
+        other => panic!("faulted push: want a typed transport error, got {other:?}"),
+    }
+
+    // the poll loop survived: a fresh connection serves end to end
+    let mut c2 = NetClient::connect(server.local_addr()).expect("reconnect");
+    c2.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let s2 = c2.open().expect("open after fault");
+    c2.push(s2, &rng.normal_vec(D_IN, 1.0)).expect("push after fault");
+    let t = c2.recv_tick(s2).expect("tick after fault");
+    assert!(t.logits.iter().all(|v| v.is_finite()));
+    c2.close(s2).expect("close after fault");
+
+    // the faulted conn was reaped, not leaked
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = server.metrics();
+        if m.connections_active == 1 {
+            assert_eq!(m.connections_accepted, 2);
+            break;
+        }
+        assert!(Instant::now() < deadline, "faulted connection never reaped: {m:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.shutdown();
+    engine.shutdown().unwrap();
+}
+
+/// PR 10 leg, write half: an injected `net_write` fault abandons a
+/// reply halfway (half a frame on the wire, then teardown) — the
+/// client's length-prefix discipline must reject the tail as a typed
+/// transport error, and the executor keeps serving.
+#[test]
+fn injected_net_write_fault_desyncs_detectably() {
+    let cfg = EngineConfig::builder()
+        .variant(SyntheticServeSpec::variant_name(1))
+        .artifacts_dir(synth_artifacts())
+        .backend(EngineBackend::Scalar)
+        .batch_deadline(Duration::from_millis(1))
+        .shards(1)
+        .slots_per_shard(4)
+        .fault("seed=12,net_write=@2".parse().unwrap())
+        .build();
+    let engine = EngineThread::spawn(cfg).unwrap();
+    let server = NetServer::start("127.0.0.1:0", engine.handle()).unwrap();
+    let mut c = NetClient::connect(server.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut rng = Rng::new(0xBEEF);
+
+    // server write 1: the OPENED reply, delivered whole
+    let s = c.open().expect("open");
+    // server write 2 fires net_write=@2: half the PUSH-OK frame, then
+    // poison — the ack read must fail typed, not hang on the stump
+    match c.push(s, &rng.normal_vec(D_IN, 1.0)) {
+        Err(ClientError::Disconnected) | Err(ClientError::Io(_)) => {}
+        other => panic!("desynced push: want a typed transport error, got {other:?}"),
+    }
+
+    // the poll loop survived the poisoned teardown
+    let mut c2 = NetClient::connect(server.local_addr()).expect("reconnect");
+    c2.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let s2 = c2.open().expect("open after fault");
+    c2.push(s2, &rng.normal_vec(D_IN, 1.0)).expect("push after fault");
+    let t = c2.recv_tick(s2).expect("tick after fault");
+    assert!(t.logits.iter().all(|v| v.is_finite()));
+    c2.close(s2).expect("close after fault");
+    server.shutdown();
+    engine.shutdown().unwrap();
+}

@@ -204,8 +204,8 @@ fn steady_state_ticks_allocate_nothing() {
     // owned Vec<f32>, and each mpsc reply message is a heap node);
     // those are engine costs, not codec regressions, and this test
     // keeps the codec from quietly adding to them. The buffers below
-    // are exactly what the server's reader/writer threads and the
-    // client hot path hold.
+    // are exactly what the executor's per-connection read buffer /
+    // write queue and the client hot path hold.
     let tokens = Rng::new(37).normal_vec(16, 1.0);
     let logits = Rng::new(41).normal_vec(4, 1.0);
     let acts = Rng::new(43).normal_vec(32, 1.0);
